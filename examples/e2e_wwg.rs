@@ -1,0 +1,72 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer stack on
+//! the paper's real workload — 200 Gridlets of ≥10,000 MI on the simulated
+//! WWG testbed (Table 2), DBC cost-optimization with deadline 3100 and
+//! budget 22,000 G$ (the paper's §5.3 relaxed-deadline cell), with the
+//! schedule advisor running as the AOT-compiled JAX/Pallas artifact through
+//! PJRT when artifacts are present (falling back to the native advisor with
+//! a warning otherwise). Reports the paper's headline metrics: Gridlets
+//! completed, budget spent, deadline utilization, resource selection.
+//!
+//!     make artifacts && cargo run --release --example e2e_wwg
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::output::report;
+use gridsim::scenario::{run_scenario, AdvisorKind, Scenario};
+use std::path::Path;
+
+fn main() {
+    let artifacts = Path::new("artifacts/advisor.hlo.txt");
+    let advisor = if artifacts.exists() {
+        println!("advisor engine: XLA artifact ({})", artifacts.display());
+        AdvisorKind::Xla
+    } else {
+        println!("WARNING: {} missing (run `make artifacts`); using native advisor", artifacts.display());
+        AdvisorKind::Native
+    };
+
+    let deadline = 3_100.0;
+    let budget = 22_000.0;
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(200, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(Optimization::Cost),
+        )
+        .seed(27)
+        .advisor(advisor)
+        .build();
+
+    let start = std::time::Instant::now();
+    let result = run_scenario(&scenario);
+    let wall = start.elapsed();
+    let u = &result.users[0];
+
+    println!();
+    println!("== GridSim e2e: 200-Gridlet task farm on the WWG testbed ==");
+    println!("policy               : DBC cost-optimization (paper Fig 20)");
+    println!("deadline / budget    : {deadline} time units / {budget} G$");
+    println!("gridlets completed   : {}/{}", u.gridlets_completed, u.gridlets_total);
+    println!("budget spent         : {:.1} G$ ({:.1}% of budget)", u.budget_spent, 100.0 * u.budget_utilization());
+    println!("experiment time      : {:.1} ({:.1}% of deadline)", u.finish_time - u.start_time, 100.0 * u.time_utilization());
+    println!();
+    println!("resource selection (paper Fig 27 expects the cheapest, R8, to absorb everything):");
+    println!("{}", report::resource_table(u));
+    println!(
+        "engine: {} events in {:.3}s wall ({:.0} events/s)",
+        result.events,
+        wall.as_secs_f64(),
+        result.events as f64 / wall.as_secs_f64().max(1e-9)
+    );
+
+    // Exit non-zero if the headline result does not hold, so this example
+    // doubles as an end-to-end gate.
+    let r8 = u.per_resource.iter().find(|r| r.name == "R8").unwrap();
+    if u.gridlets_completed != 200 || r8.gridlets_completed < 190 {
+        eprintln!("E2E FAILURE: expected all 200 Gridlets on R8");
+        std::process::exit(1);
+    }
+    println!("E2E OK");
+}

@@ -1,0 +1,52 @@
+//! The paper's §5.4 competition study in miniature: N identical users, each
+//! with a private economic broker, compete for the WWG testbed. Mean
+//! completions per user decay with competition; termination stretches toward
+//! the deadline (Figures 33–35).
+//!
+//!     cargo run --release --example multi_user_market [-- --users 20]
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::scenario::{run_scenario, Scenario};
+use gridsim::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let max_users = args.flag("users").and_then(|s| s.parse().ok()).unwrap_or(20usize);
+    let deadline = 3_100.0;
+    let budget = 12_000.0;
+
+    println!("WWG testbed, 60 Gridlets/user, deadline {deadline}, budget {budget} G$");
+    println!();
+    println!(
+        "{:>6} {:>12} {:>14} {:>12} {:>10}",
+        "users", "done/user", "termination", "spent/user", "events"
+    );
+    let mut n = 1;
+    while n <= max_users {
+        let scenario = Scenario::builder()
+            .resources(wwg_testbed())
+            .users(
+                n,
+                ExperimentSpec::task_farm(60, 10_000.0, 0.10)
+                    .deadline(deadline)
+                    .budget(budget)
+                    .optimization(Optimization::Cost),
+            )
+            .seed(17)
+            .build();
+        let report = run_scenario(&scenario);
+        println!(
+            "{:>6} {:>12.1} {:>14.1} {:>12.1} {:>10}",
+            n,
+            report.mean_completed(),
+            report.mean_finish_time(),
+            report.mean_spent(),
+            report.events,
+        );
+        n *= 2;
+    }
+    println!();
+    println!("Shapes to look for (paper Figs 33–35): per-user completions decay");
+    println!("with competition; termination time stretches toward the deadline.");
+}

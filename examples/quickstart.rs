@@ -1,0 +1,61 @@
+//! Quickstart: build a tiny grid, run one deadline-and-budget-constrained
+//! experiment, and print the outcome.
+//!
+//!     cargo run --release --example quickstart
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::AllocPolicy;
+use gridsim::output::report;
+use gridsim::scenario::{run_scenario, ResourceSpec, Scenario};
+
+fn main() {
+    // Two resources: a cheap slow PC and a pricey fast SMP.
+    let pc = ResourceSpec {
+        name: "CheapPC".into(),
+        arch: "Intel".into(),
+        os: "Linux".into(),
+        machines: 1,
+        pes_per_machine: 2,
+        mips_per_pe: 380.0,
+        policy: AllocPolicy::TimeShared,
+        price: 1.0,
+        time_zone: 0.0,
+        calendar: None,
+    };
+    let smp = ResourceSpec {
+        name: "FastSMP".into(),
+        arch: "Alpha".into(),
+        os: "OSF1".into(),
+        machines: 1,
+        pes_per_machine: 8,
+        mips_per_pe: 515.0,
+        policy: AllocPolicy::TimeShared,
+        price: 8.0,
+        time_zone: 10.0,
+        calendar: None,
+    };
+
+    // 50 jobs of ~10,000 MI; finish within 1,500 time units and 4,000 G$,
+    // as cheaply as possible.
+    let scenario = Scenario::builder()
+        .resource(pc)
+        .resource(smp)
+        .user(
+            ExperimentSpec::task_farm(50, 10_000.0, 0.10)
+                .deadline(1_500.0)
+                .budget(4_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(42)
+        .build();
+
+    let result = run_scenario(&scenario);
+    let user = &result.users[0];
+    println!("{}", report::experiment_line("user", user));
+    println!("\nper-resource breakdown:");
+    println!("{}", report::resource_table(user));
+    println!(
+        "engine: {} events, simulated time {:.1}",
+        result.events, result.end_time
+    );
+}

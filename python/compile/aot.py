@@ -1,0 +1,58 @@
+"""AOT compile path: lower the L2 jitted functions to HLO **text** artifacts
+for the Rust PJRT runtime.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange is HLO text, not serialized ``HloModuleProto`` — jax >= 0.5
+emits protos with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids.
+Lowered with ``return_tuple=True`` so the Rust side always unwraps a tuple.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "advisor.hlo.txt": (model.advisor_step, model.advisor_example_args),
+    "forecast.hlo.txt": (model.forecast_batch, model.forecast_example_args),
+}
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, example_args) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*example_args())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = parser.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: the DBC cost-optimization schedule advisor.
+
+Vectorized form of the paper's Fig 20 greedy (see ``ref.advisor_ref``). The
+sequential "walk resources cheapest-first" is replaced by two prefix-sum
+passes, both computed as a strictly-lower-triangular ones matmul so the scan
+runs on the MXU systolic array rather than as a serial loop:
+
+1. capacity pass — how many of the ``jobs`` remain for resource *r* after
+   all cheaper resources took their deadline capacity;
+2. budget pass — truncate by what the remaining budget affords at *r*'s
+   price after cheaper resources spent theirs.
+
+Exactness: inputs are sorted by ascending cost/MI, so once the budget
+truncates resource *k*, the leftover is smaller than the per-job cost of
+every later resource — neither the spilled jobs nor the leftover budget can
+change any later allocation. The two-pass result therefore equals the
+sequential greedy (property-tested in python/tests and rust/tests).
+
+TPU notes (§Hardware-Adaptation in DESIGN.md): R=16 keeps every operand in
+VMEM; the two R×R triangular matmuls are MXU work; everything else is
+elementwise VPU math. Lowered with ``interpret=True`` — the CPU PJRT client
+cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed resource-axis padding; must match rust/src/runtime/pjrt.rs::ADVISOR_R.
+R = 16
+
+
+def _advisor_kernel(
+    rate_ref,
+    cost_ref,
+    active_ref,
+    time_ref,
+    budget_ref,
+    avg_ref,
+    jobs_ref,
+    out_ref,
+):
+    rate = rate_ref[...]
+    cost_per_mi = cost_ref[...]
+    active = active_ref[...]
+    time_left = time_ref[0]
+    budget_left = budget_ref[0]
+    avg = jnp.maximum(avg_ref[0], 1e-9)
+    jobs = jobs_ref[0]
+
+    # Strictly-lower-triangular ones matrix: exclusive prefix sums as a
+    # matmul (the MXU does the scan).
+    row = jax.lax.broadcasted_iota(jnp.float32, (R, R), 0)
+    col = jax.lax.broadcasted_iota(jnp.float32, (R, R), 1)
+    tri = (row > col).astype(jnp.float32)
+
+    # Step b (Fig 20): per-resource deadline capacity in whole jobs.
+    capacity = jnp.floor(jnp.maximum(rate, 0.0) * time_left / avg * (1.0 + 1e-6) + 1e-6) * active
+    cost_per_job = cost_per_mi * avg
+
+    # Pass 1 — capacity-limited greedy via exclusive prefix of capacities.
+    prefix_jobs = tri @ capacity
+    take = jnp.clip(jobs - prefix_jobs, 0.0, capacity)
+
+    # Pass 2 — budget truncation via exclusive prefix of planned spending.
+    spend = take * cost_per_job
+    prefix_cost = tri @ spend
+    left = jnp.maximum(budget_left, 0.0) - prefix_cost
+    # Relative epsilon mirrors the native advisor: exact-budget corners
+    # (B-factor = 1) must not floor 0.999999… down to zero jobs.
+    afford = jnp.where(
+        cost_per_job > 0.0,
+        jnp.floor(
+            jnp.maximum(left, 0.0)
+            / jnp.where(cost_per_job > 0.0, cost_per_job, 1.0)
+            * (1.0 + 1e-6)
+            + 1e-6
+        ),
+        jnp.inf,
+    )
+    out_ref[...] = jnp.minimum(take, afford) * active
+
+
+def advisor_kernel(rate, cost_per_mi, active, time_left, budget_left, avg_job_mi, jobs):
+    """Invoke the Pallas advisor kernel on ``[R]`` vectors + scalars."""
+    assert rate.shape == (R,), rate.shape
+    scalars = [
+        jnp.reshape(x, (1,)).astype(jnp.float32)
+        for x in (time_left, budget_left, avg_job_mi, jobs)
+    ]
+    return pl.pallas_call(
+        _advisor_kernel,
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.float32),
+        interpret=True,
+    )(
+        rate.astype(jnp.float32),
+        cost_per_mi.astype(jnp.float32),
+        active.astype(jnp.float32),
+        *scalars,
+    )

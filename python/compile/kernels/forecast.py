@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: batched time-shared PE-share allocation + completion
+forecast (paper Fig 8) over a ``[R, J]`` (resource × job-slot) tile.
+
+Share rule, per resource with ``n`` active Gridlets on ``p`` PEs:
+  * ``n <= p``      → every Gridlet runs at the PE's full effective MIPS;
+  * ``n >  p``      → ``min_per = n // p``, ``extra = n % p``; the first
+    ``(p - extra) * min_per`` Gridlets (arrival order) run at
+    ``eff / min_per``, the rest at ``eff / (min_per + 1)``.
+
+The arrival-order bucketing uses each active slot's rank (an exclusive
+cumulative sum of the activity mask along J) — elementwise VPU math, no
+gather/scatter. The whole [16, 256] tile (five f32 operands ≈ 80 KiB) sits
+comfortably in VMEM as a single block; lowered with ``interpret=True`` for
+the CPU PJRT client.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed shapes; must match rust/src/runtime/pjrt.rs::FORECAST_R / FORECAST_J.
+R = 16
+J = 256
+
+
+def _forecast_kernel(remaining_ref, active_ref, mips_ref, pes_ref, avail_ref, comp_ref, rate_ref):
+    remaining = remaining_ref[...]
+    active = active_ref[...]
+    eff = (mips_ref[...] * avail_ref[...])[:, None]  # [R, 1]
+    p = pes_ref[...][:, None]  # [R, 1]
+
+    n = jnp.sum(active, axis=1, keepdims=True)  # active Gridlets per resource
+    # Fig 8 bucket parameters (guard p >= 1 to avoid div-by-zero on padding).
+    p_safe = jnp.maximum(p, 1.0)
+    min_per = jnp.floor(n / p_safe)
+    extra = n - min_per * p_safe
+    max_count = (p_safe - extra) * min_per
+    # 0-based arrival rank of each active slot (exclusive cumsum of mask).
+    rank = jnp.cumsum(active, axis=1) - active
+    full_rate = eff
+    shared_rate = jnp.where(
+        rank < max_count,
+        eff / jnp.maximum(min_per, 1.0),
+        eff / jnp.maximum(min_per + 1.0, 1.0),
+    )
+    rate = jnp.where(n <= p_safe, full_rate, shared_rate) * active
+    rate_ref[...] = rate
+    comp_ref[...] = jnp.where(rate > 0.0, remaining / jnp.maximum(rate, 1e-30), 0.0)
+
+
+def forecast_kernel(remaining_mi, active, mips, num_pe, avail):
+    """Invoke the Pallas forecast kernel.
+
+    Returns ``(completion[R,J], rate[R,J])`` — times are relative to "now";
+    inactive slots are zero.
+    """
+    assert remaining_mi.shape == (R, J), remaining_mi.shape
+    return pl.pallas_call(
+        _forecast_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((R, J), jnp.float32),
+            jax.ShapeDtypeStruct((R, J), jnp.float32),
+        ),
+        interpret=True,
+    )(
+        remaining_mi.astype(jnp.float32),
+        active.astype(jnp.float32),
+        mips.astype(jnp.float32),
+        num_pe.astype(jnp.float32),
+        avail.astype(jnp.float32),
+    )

@@ -1,0 +1,94 @@
+"""Pure-jnp / plain-Python oracles for the L1 Pallas kernels.
+
+These are the *simplest obviously-correct* implementations of the paper's two
+numeric inner loops:
+
+* ``advisor_ref`` — the DBC cost-optimization schedule advisor (paper Fig 20
+  steps a-c): sequential greedy over resources sorted by ascending G$/MI.
+* ``forecast_ref`` — the time-shared PE-share allocation + completion-time
+  forecast (paper Fig 8), one resource at a time.
+
+pytest (and hypothesis) compare the Pallas kernels against these, and the
+Rust ``NativeAdvisor`` mirrors ``advisor_ref`` exactly, so all four
+implementations are pinned to the same semantics.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def advisor_ref(
+    rate: np.ndarray,
+    cost_per_mi: np.ndarray,
+    active: np.ndarray,
+    time_left: float,
+    budget_left: float,
+    avg_job_mi: float,
+    jobs: float,
+) -> np.ndarray:
+    """Sequential greedy allocation (resources must be cost-sorted).
+
+    Returns the number of jobs per resource (float array, whole numbers).
+    """
+    r = len(rate)
+    out = np.zeros(r, dtype=np.float64)
+    remaining_jobs = float(jobs)
+    remaining_budget = max(float(budget_left), 0.0)
+    avg = max(float(avg_job_mi), 1e-9)
+    t = max(float(time_left), 0.0)
+    for i in range(r):
+        if not active[i]:
+            continue
+        capacity = np.floor(max(rate[i], 0.0) * t / avg)
+        cost_per_job = cost_per_mi[i] * avg
+        if cost_per_job <= 0.0:
+            affordable = np.inf
+        else:
+            affordable = np.floor(remaining_budget / cost_per_job)
+        n = min(capacity, remaining_jobs, affordable)
+        n = max(n, 0.0)
+        out[i] = n
+        remaining_jobs -= n
+        remaining_budget -= n * cost_per_job
+        if remaining_jobs <= 0:
+            break
+    return out
+
+
+def forecast_ref(
+    remaining_mi: np.ndarray,  # [R, J]
+    active: np.ndarray,  # [R, J] in {0,1}
+    mips: np.ndarray,  # [R]
+    num_pe: np.ndarray,  # [R]
+    avail: np.ndarray,  # [R]
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fig 8 share rates and completion times, looped per resource.
+
+    Returns ``(completion[R,J], rate[R,J])`` with zeros in inactive slots.
+    """
+    R, J = remaining_mi.shape
+    rates = np.zeros((R, J), dtype=np.float64)
+    completion = np.zeros((R, J), dtype=np.float64)
+    for r in range(R):
+        p = int(num_pe[r])
+        if p <= 0:
+            continue
+        eff = mips[r] * avail[r]
+        act = active[r] > 0
+        n = int(act.sum())
+        if n == 0 or eff <= 0:
+            continue
+        if n <= p:
+            per_job = np.full(n, eff)
+        else:
+            min_per = n // p
+            extra = n % p
+            max_count = (p - extra) * min_per
+            per_job = np.where(
+                np.arange(n) < max_count, eff / min_per, eff / (min_per + 1)
+            )
+        idx = np.flatnonzero(act)
+        rates[r, idx] = per_job
+        completion[r, idx] = remaining_mi[r, idx] / per_job
+    return completion, rates

@@ -1,0 +1,70 @@
+"""L2: the JAX compute graph around the L1 Pallas kernels.
+
+Two jitted entry points, both AOT-lowered to HLO text by ``aot.py``:
+
+* ``advisor_step`` — one broker scheduling decision (Fig 20 steps a-c).
+  Wraps the Pallas advisor kernel; masks padding lanes so garbage in unused
+  slots can never produce allocations.
+* ``forecast_batch`` — batched Fig 8 completion forecast over [R, J].
+  Wraps the Pallas forecast kernel and also reduces to the per-resource
+  earliest completion (the resource simulator's next-interrupt time), so the
+  Rust side gets both the dense matrix and the reduction from one execution.
+
+The signatures here define the artifact ABI; ``rust/src/runtime/pjrt.rs``
+must feed literals in exactly this order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.advisor import R as ADVISOR_R
+from .kernels.advisor import advisor_kernel
+from .kernels.forecast import J as FORECAST_J
+from .kernels.forecast import R as FORECAST_R
+from .kernels.forecast import forecast_kernel
+
+
+def advisor_step(rate, cost_per_mi, active, time_left, budget_left, avg_job_mi, jobs):
+    """Desired whole-job allocation per resource; zeros in padding lanes.
+
+    Args (f32): rate[R], cost_per_mi[R], active[R] in {0,1}; scalars
+    time_left, budget_left, avg_job_mi, jobs.
+    Returns: (counts[R],)
+    """
+    counts = advisor_kernel(
+        rate, cost_per_mi, active, time_left, budget_left, avg_job_mi, jobs
+    )
+    # Belt-and-braces: padding lanes carry no allocation and counts are
+    # non-negative whole numbers.
+    counts = jnp.maximum(counts, 0.0) * active
+    return (jnp.round(counts),)
+
+
+def forecast_batch(remaining_mi, active, mips, num_pe, avail):
+    """Completion forecast.
+
+    Args (f32): remaining_mi[R,J], active[R,J], mips[R], num_pe[R], avail[R].
+    Returns: (completion[R,J], rate[R,J], next_event[R]) where next_event is
+    the earliest completion per resource (+inf-free: 3.4e38 sentinel for
+    idle resources, which the Rust wrapper masks out).
+    """
+    completion, rate = forecast_kernel(remaining_mi, active, mips, num_pe, avail)
+    big = jnp.float32(3.4e38)
+    masked = jnp.where(active > 0.0, completion, big)
+    next_event = jnp.min(masked, axis=1)
+    return (completion, rate, next_event)
+
+
+def advisor_example_args():
+    """Example (shape-defining) arguments for AOT lowering."""
+    vec = jax.ShapeDtypeStruct((ADVISOR_R,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return (vec, vec, vec, scalar, scalar, scalar, scalar)
+
+
+def forecast_example_args():
+    mat = jax.ShapeDtypeStruct((FORECAST_R, FORECAST_J), jnp.float32)
+    vec = jax.ShapeDtypeStruct((FORECAST_R,), jnp.float32)
+    return (mat, mat, vec, vec, vec)

@@ -1,0 +1,284 @@
+"""L1 correctness: Pallas kernels vs the pure oracles in ref.py.
+
+This is the core correctness signal for the AOT artifacts — the Rust runtime
+executes exactly these computations (same HLO), so kernel == ref here plus
+native == xla on the Rust side pins all four implementations together.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.advisor import R as AR
+from compile.kernels.advisor import advisor_kernel
+from compile.kernels.forecast import J as FJ
+from compile.kernels.forecast import R as FR
+from compile.kernels.forecast import forecast_kernel
+from compile.kernels.ref import advisor_ref, forecast_ref
+
+
+# ---------------------------------------------------------------- advisor --
+
+
+def run_advisor(rate, cost, active, t, b, avg, jobs):
+    got = np.asarray(
+        advisor_kernel(
+            np.asarray(rate, np.float32),
+            np.asarray(cost, np.float32),
+            np.asarray(active, np.float32),
+            np.float32(t),
+            np.float32(b),
+            np.float32(avg),
+            np.float32(jobs),
+        )
+    )
+    want = advisor_ref(
+        np.asarray(rate, np.float64),
+        np.asarray(cost, np.float64),
+        np.asarray(active, np.float64),
+        t,
+        b,
+        avg,
+        jobs,
+    )
+    return got, want
+
+
+def pad(xs, fill=0.0):
+    out = np.full(AR, fill, dtype=np.float64)
+    out[: len(xs)] = xs
+    return out
+
+
+def test_advisor_fills_cheapest_first():
+    rate = pad([50.0, 1000.0])
+    cost = pad([0.01, 0.05], fill=1.0)
+    active = pad([1.0, 1.0])
+    got, want = run_advisor(rate, cost, active, 10.0, 1e9, 100.0, 8)
+    np.testing.assert_allclose(got, want)
+    assert got[0] == 5 and got[1] == 3
+
+
+def test_advisor_budget_truncation():
+    rate = pad([20.0, 1000.0])
+    cost = pad([0.01, 0.10], fill=1.0)
+    active = pad([1.0, 1.0])
+    got, want = run_advisor(rate, cost, active, 10.0, 25.0, 100.0, 50)
+    np.testing.assert_allclose(got, want)
+    assert got.tolist()[:2] == [2.0, 2.0]
+
+
+def test_advisor_zero_time_or_budget():
+    rate = pad([100.0])
+    cost = pad([0.01], fill=1.0)
+    active = pad([1.0])
+    got, want = run_advisor(rate, cost, active, 0.0, 1e9, 100.0, 10)
+    np.testing.assert_allclose(got, want)
+    assert got.sum() == 0
+    got, want = run_advisor(rate, cost, active, 10.0, 0.0, 100.0, 10)
+    np.testing.assert_allclose(got, want)
+    assert got.sum() == 0
+
+
+def test_advisor_padding_lanes_stay_zero():
+    rate = np.full(AR, 1e6)
+    cost = np.zeros(AR)  # free resources — would absorb everything if active
+    active = pad([1.0])
+    got, _ = run_advisor(rate, cost, active, 100.0, 1e9, 100.0, 17)
+    assert got[1:].sum() == 0
+    assert got[0] == 17
+
+
+@st.composite
+def advisor_cases(draw):
+    n = draw(st.integers(min_value=1, max_value=AR))
+    # Costs ascending (the broker sorts); strictly separated enough that f32
+    # and f64 agree on the greedy (avoid knife-edge floor() disagreements by
+    # using "nice" grid values).
+    costs = sorted(
+        draw(
+            st.lists(
+                st.integers(min_value=1, max_value=500).map(lambda x: x / 1000.0),
+                min_size=n,
+                max_size=n,
+            )
+        )
+    )
+    rates = draw(
+        st.lists(st.integers(min_value=0, max_value=4000), min_size=n, max_size=n)
+    )
+    t = draw(st.integers(min_value=0, max_value=4000))
+    b = draw(st.integers(min_value=0, max_value=30000))
+    avg = draw(st.integers(min_value=50, max_value=20000))
+    jobs = draw(st.integers(min_value=0, max_value=300))
+    return n, costs, rates, float(t), float(b), float(avg), float(jobs)
+
+
+@settings(max_examples=150, deadline=None)
+@given(advisor_cases())
+def test_advisor_matches_ref_hypothesis(case):
+    n, costs, rates, t, b, avg, jobs = case
+    rate = pad(rates)
+    cost = pad(costs, fill=1.0)
+    active = pad([1.0] * n)
+    got, want = run_advisor(rate, cost, active, t, b, avg, jobs)
+    # f32 vs f64 can disagree by one whole job at exact floor() boundaries;
+    # allow that slack while requiring structural agreement.
+    np.testing.assert_allclose(got, want, atol=1.0)
+    assert got.sum() <= jobs + 1e-6
+    # Budget respected (with one-job f32 slack at each lane).
+    spend = float((got * cost * avg).sum())
+    assert spend <= b + float((cost * avg).max()) + 1e-3
+
+
+@settings(max_examples=60, deadline=None)
+@given(advisor_cases())
+def test_advisor_invariants(case):
+    n, costs, rates, t, b, avg, jobs = case
+    rate = pad(rates)
+    cost = pad(costs, fill=1.0)
+    active = pad([1.0] * n)
+    got, _ = run_advisor(rate, cost, active, t, b, avg, jobs)
+    # Whole, non-negative counts; nothing on padding lanes.
+    assert (got >= 0).all()
+    np.testing.assert_allclose(got, np.round(got))
+    assert got[n:].sum() == 0
+    # Per-lane deadline capacity respected.
+    capacity = np.floor(np.float32(rate) * np.float32(t) / np.float32(max(avg, 1e-9)))
+    assert (got <= capacity[: len(got)] + 1e-6).all()
+
+
+# --------------------------------------------------------------- forecast --
+
+
+def run_forecast(remaining, active, mips, pes, avail):
+    comp, rate = forecast_kernel(
+        np.asarray(remaining, np.float32),
+        np.asarray(active, np.float32),
+        np.asarray(mips, np.float32),
+        np.asarray(pes, np.float32),
+        np.asarray(avail, np.float32),
+    )
+    comp_ref, rate_ref = forecast_ref(
+        np.asarray(remaining, np.float64),
+        np.asarray(active, np.float64),
+        np.asarray(mips, np.float64),
+        np.asarray(pes, np.float64),
+        np.asarray(avail, np.float64),
+    )
+    return np.asarray(comp), np.asarray(rate), comp_ref, rate_ref
+
+
+def dense(rows):
+    remaining = np.zeros((FR, FJ))
+    active = np.zeros((FR, FJ))
+    for r, vals in enumerate(rows):
+        remaining[r, : len(vals)] = vals
+        active[r, : len(vals)] = 1.0
+    return remaining, active
+
+
+def test_forecast_paper_fig9_shares():
+    # The Table 1 moment at t=7: G1 (3 MI left) alone on PE1 at full rate;
+    # G2 (5.5) and G3 (9.5) share PE2 at half rate. 2 PEs x 1 MIPS.
+    remaining, active = dense([[3.0, 5.5, 9.5]])
+    mips = np.zeros(FR)
+    mips[0] = 1.0
+    pes = np.ones(FR)
+    pes[0] = 2.0
+    avail = np.ones(FR)
+    comp, rate, comp_ref, rate_ref = run_forecast(remaining, active, mips, pes, avail)
+    np.testing.assert_allclose(rate[0, :3], [1.0, 0.5, 0.5])
+    np.testing.assert_allclose(comp[0, :3], [3.0, 11.0, 19.0])
+    np.testing.assert_allclose(rate, rate_ref, rtol=1e-6)
+    np.testing.assert_allclose(comp, comp_ref, rtol=1e-6)
+
+
+def test_forecast_underloaded_full_rate():
+    remaining, active = dense([[100.0, 200.0]])
+    mips = np.full(FR, 10.0)
+    pes = np.full(FR, 4.0)
+    avail = np.ones(FR)
+    comp, rate, comp_ref, rate_ref = run_forecast(remaining, active, mips, pes, avail)
+    np.testing.assert_allclose(rate[0, :2], [10.0, 10.0])
+    np.testing.assert_allclose(comp[0, :2], [10.0, 20.0])
+    np.testing.assert_allclose(rate, rate_ref, rtol=1e-6)
+
+
+def test_forecast_availability_scales():
+    remaining, active = dense([[100.0]])
+    mips = np.full(FR, 10.0)
+    pes = np.ones(FR)
+    avail = np.full(FR, 0.5)
+    comp, rate, _, _ = run_forecast(remaining, active, mips, pes, avail)
+    np.testing.assert_allclose(rate[0, 0], 5.0)
+    np.testing.assert_allclose(comp[0, 0], 20.0)
+
+
+def test_forecast_inactive_slots_zero():
+    remaining, active = dense([[1.0]])
+    mips = np.ones(FR)
+    pes = np.ones(FR)
+    avail = np.ones(FR)
+    comp, rate, _, _ = run_forecast(remaining, active, mips, pes, avail)
+    assert rate[0, 1:].sum() == 0
+    assert comp[1:].sum() == 0
+
+
+@st.composite
+def forecast_cases(draw):
+    rows = []
+    n_res = draw(st.integers(min_value=1, max_value=FR))
+    for _ in range(n_res):
+        n_jobs = draw(st.integers(min_value=0, max_value=24))
+        rows.append(
+            draw(
+                st.lists(
+                    st.floats(min_value=0.5, max_value=1e5),
+                    min_size=n_jobs,
+                    max_size=n_jobs,
+                )
+            )
+        )
+    mips = draw(
+        st.lists(
+            st.floats(min_value=1.0, max_value=1000.0), min_size=FR, max_size=FR
+        )
+    )
+    pes = draw(st.lists(st.integers(min_value=1, max_value=32), min_size=FR, max_size=FR))
+    avail = draw(
+        st.lists(st.floats(min_value=0.05, max_value=1.0), min_size=FR, max_size=FR)
+    )
+    return rows, mips, pes, avail
+
+
+@settings(max_examples=80, deadline=None)
+@given(forecast_cases())
+def test_forecast_matches_ref_hypothesis(case):
+    rows, mips, pes, avail = case
+    remaining, active = dense(rows)
+    comp, rate, comp_ref, rate_ref = run_forecast(
+        remaining, active, np.array(mips), np.array(pes, float), np.array(avail)
+    )
+    np.testing.assert_allclose(rate, rate_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(comp, comp_ref, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(forecast_cases())
+def test_forecast_conservation(case):
+    """Fig 8 invariant: total allocated rate never exceeds aggregate MIPS,
+    and equals it when the resource is oversubscribed."""
+    rows, mips, pes, avail = case
+    remaining, active = dense(rows)
+    _, rate, _, _ = run_forecast(
+        remaining, active, np.array(mips), np.array(pes, float), np.array(avail)
+    )
+    for r, vals in enumerate(rows):
+        total = rate[r].sum()
+        agg = mips[r] * avail[r] * pes[r]
+        assert total <= agg * (1 + 1e-5) + 1e-6
+        if len(vals) >= pes[r]:
+            used = mips[r] * avail[r] * min(len(vals), pes[r])
+            np.testing.assert_allclose(total, used, rtol=1e-5)

@@ -1,0 +1,74 @@
+"""L2 checks: the jitted model functions and their AOT lowering.
+
+Covers the artifact ABI (shapes/ordering the Rust runtime relies on) and
+lowering to HLO text on this image's jax/xla_extension combination.
+"""
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.advisor import R as AR
+from compile.kernels.forecast import J as FJ
+from compile.kernels.forecast import R as FR
+
+
+def test_advisor_step_shapes_and_round():
+    rate = np.zeros(AR, np.float32)
+    cost = np.ones(AR, np.float32)
+    active = np.zeros(AR, np.float32)
+    rate[0], cost[0], active[0] = 100.0, 0.01, 1.0
+    (counts,) = model.advisor_step(
+        rate, cost, active,
+        np.float32(10.0), np.float32(1e9), np.float32(100.0), np.float32(5.0),
+    )
+    counts = np.asarray(counts)
+    assert counts.shape == (AR,)
+    np.testing.assert_allclose(counts, np.round(counts))
+    assert counts[0] == 5
+
+
+def test_forecast_batch_next_event_reduction():
+    remaining = np.zeros((FR, FJ), np.float32)
+    active = np.zeros((FR, FJ), np.float32)
+    remaining[0, :3] = [3.0, 5.5, 9.5]
+    active[0, :3] = 1.0
+    mips = np.zeros(FR, np.float32); mips[0] = 1.0
+    pes = np.ones(FR, np.float32); pes[0] = 2.0
+    avail = np.ones(FR, np.float32)
+    comp, rate, next_event = model.forecast_batch(remaining, active, mips, pes, avail)
+    assert np.asarray(comp).shape == (FR, FJ)
+    assert np.asarray(rate).shape == (FR, FJ)
+    next_event = np.asarray(next_event)
+    assert next_event.shape == (FR,)
+    np.testing.assert_allclose(next_event[0], 3.0)
+    # Idle resources report the sentinel (huge) value.
+    assert (next_event[1:] > 1e30).all()
+
+
+def test_example_args_match_runtime_abi():
+    adv = model.advisor_example_args()
+    assert [a.shape for a in adv] == [(AR,)] * 3 + [()] * 4
+    fc = model.forecast_example_args()
+    assert [a.shape for a in fc] == [(FR, FJ), (FR, FJ), (FR,), (FR,), (FR,)]
+
+
+@pytest.mark.parametrize("name", list(aot.ARTIFACTS))
+def test_aot_lowering_produces_hlo_text(name, tmp_path):
+    fn, example_args = aot.ARTIFACTS[name]
+    import jax
+
+    lowered = jax.jit(fn).lower(*example_args())
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Interpret-mode pallas must not leave TPU custom-calls behind.
+    assert "tpu_custom_call" not in text
+
+
+def test_build_writes_both_artifacts(tmp_path):
+    aot.build(str(tmp_path))
+    for name in aot.ARTIFACTS:
+        path = tmp_path / name
+        assert path.exists()
+        assert path.stat().st_size > 1000

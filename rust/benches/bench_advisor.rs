@@ -1,0 +1,80 @@
+//! Advisor engine comparison: the broker's per-tick allocation decision,
+//! native Rust vs the AOT JAX/Pallas artifact through PJRT
+//! (EXPERIMENTS.md §Perf L1/L2). Skips the XLA half when artifacts are
+//! missing.
+
+mod harness;
+
+use gridsim::runtime::{
+    Advisor, AdvisorInput, ForecastInput, NativeAdvisor, ResourceSnapshot, XlaAdvisor,
+    XlaForecaster,
+};
+use harness::{bench, metric};
+use std::path::Path;
+use std::time::Instant;
+
+fn wwg_input() -> AdvisorInput {
+    // The 11-resource WWG testbed, cost-sorted, paper-scale scalars.
+    let mut snaps = vec![
+        ResourceSnapshot { rate_mi: 760.0, cost_per_mi: 1.0 / 380.0 },
+        ResourceSnapshot { rate_mi: 760.0, cost_per_mi: 2.0 / 380.0 },
+        ResourceSnapshot { rate_mi: 1508.0, cost_per_mi: 3.0 / 377.0 },
+        ResourceSnapshot { rate_mi: 754.0, cost_per_mi: 3.0 / 377.0 },
+        ResourceSnapshot { rate_mi: 3016.0, cost_per_mi: 3.0 / 377.0 },
+        ResourceSnapshot { rate_mi: 6560.0, cost_per_mi: 4.0 / 410.0 },
+        ResourceSnapshot { rate_mi: 1508.0, cost_per_mi: 4.0 / 377.0 },
+        ResourceSnapshot { rate_mi: 2460.0, cost_per_mi: 5.0 / 410.0 },
+        ResourceSnapshot { rate_mi: 6560.0, cost_per_mi: 5.0 / 410.0 },
+        ResourceSnapshot { rate_mi: 1640.0, cost_per_mi: 6.0 / 410.0 },
+        ResourceSnapshot { rate_mi: 2060.0, cost_per_mi: 8.0 / 515.0 },
+    ];
+    snaps.sort_by(|a, b| a.cost_per_mi.total_cmp(&b.cost_per_mi));
+    AdvisorInput {
+        resources: snaps,
+        time_left: 3_100.0,
+        budget_left: 22_000.0,
+        avg_job_mi: 10_500.0,
+        jobs: 200,
+    }
+}
+
+fn main() {
+    println!("== bench_advisor: scheduling-decision engines ==");
+    let input = wwg_input();
+
+    let mut native = NativeAdvisor::new();
+    bench("native_advisor/11res/200jobs", 100, 10, || native.advise(&input));
+    let t0 = Instant::now();
+    let n = 100_000;
+    for _ in 0..n {
+        std::hint::black_box(native.advise(&input));
+    }
+    metric("native_advisor_decisions_per_sec", n as f64 / t0.elapsed().as_secs_f64(), "dec/s");
+
+    let dir = Path::new("artifacts");
+    if dir.join("advisor.hlo.txt").exists() {
+        let mut xla = XlaAdvisor::load_dir(dir).expect("load advisor artifact");
+        // Sanity: engines agree before we time them.
+        assert_eq!(native.advise(&input), xla.advise(&input));
+        bench("xla_advisor/11res/200jobs", 10, 10, || xla.advise(&input));
+        let t0 = Instant::now();
+        let n = 2_000;
+        for _ in 0..n {
+            std::hint::black_box(xla.advise(&input));
+        }
+        metric("xla_advisor_decisions_per_sec", n as f64 / t0.elapsed().as_secs_f64(), "dec/s");
+
+        let mut fc = XlaForecaster::load_dir(dir).expect("load forecast artifact");
+        let forecast_input = ForecastInput {
+            remaining_mi: (0..11)
+                .map(|r| (0..64).map(|j| 1_000.0 + (r * 64 + j) as f64).collect())
+                .collect(),
+            mips_per_pe: vec![400.0; 11],
+            num_pe: vec![4; 11],
+            availability: vec![1.0; 11],
+        };
+        bench("xla_forecast/11res/64jobs", 10, 10, || fc.forecast(&forecast_input).unwrap());
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the XLA half)");
+    }
+}

@@ -1,0 +1,107 @@
+//! Engine microbenchmarks: raw event throughput of the DES kernel — the
+//! foundation every experiment rests on (EXPERIMENTS.md §Perf L3).
+
+mod harness;
+
+use gridsim::des::{Ctx, Entity, EntityId, Event, Simulation};
+use harness::{bench, metric};
+use std::time::Instant;
+
+/// Ring of entities forwarding a token; stresses queue + dispatch.
+struct Forwarder {
+    name: String,
+    next: EntityId,
+    hops_left: u64,
+    start: bool,
+}
+
+impl Entity<u64> for Forwarder {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn on_start(&mut self, ctx: &mut Ctx<u64>) {
+        if self.start {
+            ctx.send_delayed(self.next, 1.0, 0, Some(self.hops_left));
+        }
+    }
+    fn on_event(&mut self, ctx: &mut Ctx<u64>, mut ev: Event<u64>) {
+        let n = ev.take_data();
+        if n > 0 {
+            ctx.send_delayed(self.next, 1.0, 0, Some(n - 1));
+        } else {
+            ctx.stop();
+        }
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+fn ring(entities: usize, hops: u64) -> u64 {
+    let mut sim: Simulation<u64> = Simulation::new();
+    for i in 0..entities {
+        sim.add(Box::new(Forwarder {
+            name: format!("f{i}"),
+            next: (i + 1) % entities,
+            hops_left: hops,
+            start: i == 0,
+        }));
+    }
+    sim.run();
+    sim.events_processed()
+}
+
+/// Self-scheduling storm: every entity keeps `k` outstanding self-events;
+/// stresses the binary heap at depth.
+struct Storm {
+    name: String,
+    remaining: u64,
+}
+
+impl Entity<u64> for Storm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn on_start(&mut self, ctx: &mut Ctx<u64>) {
+        for i in 0..8 {
+            ctx.schedule_self(1.0 + i as f64 * 0.1, 0, None);
+        }
+    }
+    fn on_event(&mut self, ctx: &mut Ctx<u64>, _ev: Event<u64>) {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            ctx.schedule_self(1.0, 0, None);
+        }
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+fn storm(entities: usize, events_each: u64) -> u64 {
+    let mut sim: Simulation<u64> = Simulation::new();
+    for i in 0..entities {
+        sim.add(Box::new(Storm { name: format!("s{i}"), remaining: events_each }));
+    }
+    sim.run();
+    sim.events_processed()
+}
+
+fn main() {
+    println!("== bench_engine: DES kernel throughput ==");
+    bench("ring/2ents/100k-hops", 1, 5, || ring(2, 100_000));
+    bench("ring/64ents/100k-hops", 1, 5, || ring(64, 100_000));
+    bench("storm/100ents/1k-events-each", 1, 5, || storm(100, 1_000));
+
+    // Headline events/s metric.
+    let t0 = Instant::now();
+    let events = ring(16, 1_000_000);
+    let dt = t0.elapsed().as_secs_f64();
+    metric("engine_events_per_sec", events as f64 / dt, "events/s");
+}

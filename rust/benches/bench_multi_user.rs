@@ -1,0 +1,60 @@
+//! Regenerates the paper's multi-user competition series (Figures 33–38)
+//! at reduced scale and times representative cells — the §5.4 bench.
+
+mod harness;
+
+use gridsim::figures::{figs33_38, SweepConfig};
+use harness::{bench, metric};
+use std::time::Instant;
+
+fn main() {
+    println!("== bench_multi_user: paper §5.4 (Figures 33–38) ==");
+
+    let cfg = SweepConfig {
+        user_counts: vec![1, 5, 10, 20],
+        budgets: vec![6_000.0, 12_000.0, 22_000.0],
+        gridlets: 60,
+        ..SweepConfig::quick()
+    };
+    for (label, deadline) in [("Figs 33-35 (deadline 3100)", 3_100.0), ("Figs 36-38 (deadline 10000)", 10_000.0)] {
+        let t0 = Instant::now();
+        let csv = figs33_38(deadline, &cfg);
+        println!("--- {label} ---");
+        print!("{}", csv.to_string());
+        println!("--- in {:.2}s ---", t0.elapsed().as_secs_f64());
+    }
+
+    // Timed: one heavy competition cell.
+    bench("competition/20users/60jobs/d3100", 1, 3, || {
+        let c = SweepConfig {
+            user_counts: vec![20],
+            budgets: vec![12_000.0],
+            gridlets: 60,
+            ..SweepConfig::quick()
+        };
+        figs33_38(3_100.0, &c).len()
+    });
+
+    // Scaling metric: events/s with 40 brokers live.
+    use gridsim::broker::{ExperimentSpec, Optimization};
+    use gridsim::config::testbed::wwg_testbed;
+    use gridsim::scenario::{run_scenario, Scenario};
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .users(
+            40,
+            ExperimentSpec::task_farm(40, 10_000.0, 0.10)
+                .deadline(3_100.0)
+                .budget(12_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(17)
+        .build();
+    let t0 = Instant::now();
+    let report = run_scenario(&scenario);
+    metric(
+        "multi_user_events_per_sec(40 users)",
+        report.events as f64 / t0.elapsed().as_secs_f64(),
+        "events/s",
+    );
+}

@@ -1,0 +1,61 @@
+//! Ablation: the four DBC optimization strategies (paper §4.2.2 — cost,
+//! time, cost-time [23], none) on identical workloads. This is the design
+//! choice the broker exists to compare: the cost/time trade-off and where
+//! cost-time lands between them.
+
+mod harness;
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::scenario::{run_scenario, Scenario};
+use harness::bench;
+
+fn run(opt: Optimization, deadline: f64, budget: f64) -> (usize, f64, f64) {
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(100, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(opt),
+        )
+        .seed(27)
+        .build();
+    let report = run_scenario(&scenario);
+    let u = &report.users[0];
+    (u.gridlets_completed, u.finish_time - u.start_time, u.budget_spent)
+}
+
+fn main() {
+    println!("== bench_policies: DBC optimization-strategy ablation (paper §4.2.2) ==");
+    let all = [
+        Optimization::Cost,
+        Optimization::Time,
+        Optimization::CostTime,
+        Optimization::NoOpt,
+    ];
+    for (label, deadline, budget) in [
+        ("tight deadline 300, budget 22000", 300.0, 22_000.0),
+        ("relaxed deadline 3100, budget 60000", 3_100.0, 60_000.0),
+        ("starved budget 4000, deadline 3100", 3_100.0, 4_000.0),
+    ] {
+        println!("--- {label} ---");
+        println!("{:>10} {:>9} {:>10} {:>11}", "policy", "done", "time", "spent(G$)");
+        for opt in all {
+            let (done, time, spent) = run(opt, deadline, budget);
+            println!("{:>10} {:>6}/100 {:>10.1} {:>11.1}", opt.label(), done, time, spent);
+        }
+    }
+    println!();
+    println!("expected ablation shapes: time-opt fastest+costliest; cost-opt cheapest;");
+    println!("cost-time between them (equal-price pools in parallel); none widest spread.");
+    println!();
+    for opt in all {
+        bench(
+            &format!("policy/{}/100jobs/d3100", opt.label()),
+            1,
+            3,
+            || run(opt, 3_100.0, 60_000.0),
+        );
+    }
+}

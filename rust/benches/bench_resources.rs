@@ -1,0 +1,71 @@
+//! Resource-model benchmarks (paper Table 1 / Figs 9 & 12 machinery at
+//! scale): time- vs space-shared scheduling throughput in Gridlets/s.
+
+mod harness;
+
+use gridsim::gridsim::{
+    gridlet::Gridlet, res_gridlet::ResGridlet, resource::LocalScheduler,
+    space_shared::SpaceShared, time_shared::TimeShared, SpacePolicy,
+};
+use harness::{bench, metric};
+use std::time::Instant;
+
+/// Push `n` gridlets through a scheduler via its public event interface.
+fn drive(sched: &mut dyn LocalScheduler, n: usize) -> usize {
+    let mut now = 0.0;
+    let mut done = 0;
+    let mut submitted = 0;
+    // Poisson-ish staggered arrivals, 4 per time unit.
+    while done < n {
+        let next_arrival =
+            if submitted < n { submitted as f64 * 0.25 } else { f64::INFINITY };
+        let next_completion = sched.next_completion(now).unwrap_or(f64::INFINITY);
+        if next_arrival <= next_completion {
+            now = next_arrival;
+            let g = Gridlet::new(submitted, 50.0 + (submitted % 17) as f64, 0, 0);
+            sched.submit(ResGridlet::new(g, now, submitted as u64), now);
+            submitted += 1;
+        } else {
+            now = next_completion;
+            done += sched.collect(now).len();
+        }
+    }
+    done
+}
+
+fn main() {
+    println!("== bench_resources: local scheduler throughput (Table 1 machinery) ==");
+    let n = 20_000;
+
+    bench("time_shared/4pe/20k-gridlets", 1, 5, || {
+        let mut ts = TimeShared::new(4, 100.0);
+        drive(&mut ts, n)
+    });
+    bench("space_shared_fcfs/4pe/20k-gridlets", 1, 5, || {
+        let mut ss = SpaceShared::new(&[4], 100.0, SpacePolicy::Fcfs);
+        drive(&mut ss, n)
+    });
+    bench("space_shared_sjf/4pe/20k-gridlets", 1, 5, || {
+        let mut ss = SpaceShared::new(&[4], 100.0, SpacePolicy::Sjf);
+        drive(&mut ss, n)
+    });
+    bench("space_shared_backfill/4pe/20k-gridlets", 1, 5, || {
+        let mut ss = SpaceShared::new(&[4], 100.0, SpacePolicy::BackfillEasy);
+        drive(&mut ss, n)
+    });
+    // Oversubscription stress: many concurrent gridlets sharing few PEs
+    // (the Fig 8 share allocator dominates).
+    bench("time_shared/2pe/oversubscribed", 1, 5, || {
+        let mut ts = TimeShared::new(2, 1000.0);
+        drive(&mut ts, 5_000)
+    });
+
+    let t0 = Instant::now();
+    let mut ts = TimeShared::new(4, 100.0);
+    let done = drive(&mut ts, 100_000);
+    metric(
+        "time_shared_gridlets_per_sec",
+        done as f64 / t0.elapsed().as_secs_f64(),
+        "gridlets/s",
+    );
+}

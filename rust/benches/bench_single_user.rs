@@ -1,0 +1,52 @@
+//! Regenerates the paper's single-user evaluation series (Figures 21–27)
+//! and times the full sweep — the "one bench per table/figure" harness for
+//! the §5.3 experiments. Prints the same rows the paper plots.
+
+mod harness;
+
+use gridsim::figures::{figs21_24, figs25_27, SweepConfig};
+use harness::bench;
+use std::time::Instant;
+
+fn main() {
+    println!("== bench_single_user: paper §5.3 (Figures 21–27) ==");
+
+    // Representative sub-grid, printed like the paper's series.
+    let cfg = SweepConfig {
+        deadlines: vec![100.0, 1_100.0, 3_100.0],
+        budgets: vec![6_000.0, 10_000.0, 14_000.0, 18_000.0, 22_000.0],
+        gridlets: 200,
+        ..SweepConfig::quick()
+    };
+    let t0 = Instant::now();
+    let csv = figs21_24(&cfg);
+    println!("--- Figs 21-24 series (deadline, budget, done, time, spent) ---");
+    print!("{}", csv.to_string());
+    println!(
+        "--- {} cells in {:.2}s ---",
+        cfg.deadlines.len() * cfg.budgets.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    println!("--- Fig 27 resource selection at deadline 3100 ---");
+    let sel_cfg = SweepConfig {
+        budgets: vec![6_000.0, 14_000.0, 22_000.0],
+        gridlets: 200,
+        ..SweepConfig::quick()
+    };
+    print!("{}", figs25_27(3_100.0, &sel_cfg).to_string());
+
+    // Timed benches: one full-size simulation per paper cell class.
+    let cell = |deadline: f64, budget: f64| {
+        let c = SweepConfig {
+            deadlines: vec![deadline],
+            budgets: vec![budget],
+            gridlets: 200,
+            ..SweepConfig::quick()
+        };
+        figs21_24(&c).len()
+    };
+    bench("cell/tight-deadline-100", 1, 3, || cell(100.0, 22_000.0));
+    bench("cell/medium-deadline-1100", 1, 3, || cell(1_100.0, 22_000.0));
+    bench("cell/relaxed-deadline-3100", 1, 3, || cell(3_100.0, 22_000.0));
+}

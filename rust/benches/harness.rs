@@ -1,0 +1,34 @@
+//! Minimal shared bench harness (no criterion in the image): warmup +
+//! timed iterations with mean/min/max reporting.
+
+use std::time::Instant;
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones;
+/// print a stable one-line summary.
+#[allow(dead_code)]
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "bench {name:<44} mean {:>10.3} ms   min {:>10.3} ms   max {:>10.3} ms   ({iters} iters)",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+}
+
+/// Print a named scalar metric (events/s, gridlets/s, …).
+#[allow(dead_code)]
+pub fn metric(name: &str, value: f64, unit: &str) {
+    println!("metric {name:<43} {value:>14.1} {unit}");
+}

@@ -1,0 +1,500 @@
+//! The broker entity — the paper's Fig 18 architecture as an event-driven
+//! state machine:
+//!
+//! 1. experiment interface (user hands over an [`Experiment`]);
+//! 2. resource discovery (GIS query) and trading (characteristics queries);
+//! 3. scheduling flow manager: per tick, the policy produces desired job
+//!    totals per resource and the broker rebalances assignments toward them
+//!    (Fig 20 steps c.i/c.ii);
+//! 4. dispatcher: stages Gridlets to resources, at most
+//!    `MaxGridletPerPE × PEs` in flight per resource;
+//! 5. receptor: accounts returned Gridlets, feeding the measured
+//!    consumption rates back into step 3 ("measure and extrapolation").
+//!
+//! The loop ends when all Gridlets are processed or deadline/budget is
+//! exceeded; like the paper's broker it then *waits* for in-flight Gridlets
+//! (which is why termination can overshoot a tight deadline — Fig 34).
+
+use super::experiment::{
+    budget_from_factor, deadline_from_factor, BudgetSpec, DeadlineSpec, Experiment,
+    ExperimentResult, ResourceOutcome,
+};
+use super::policy::{PolicyInput, SchedulingPolicy};
+use super::resource_view::BrokerResource;
+use super::trace::{TracePoint, TraceRecorder};
+use crate::gridsim::gridlet::{Gridlet, GridletStatus};
+use crate::gridsim::messages::Msg;
+use crate::gridsim::tags;
+use crate::des::{Ctx, Entity, EntityId, Event};
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Waiting for an experiment.
+    Idle,
+    /// GIS queried, waiting for the resource list.
+    Discovering,
+    /// Waiting for resource characteristics replies.
+    Trading,
+    /// Scheduling loop running.
+    Scheduling,
+    /// Deadline/budget exceeded: no new dispatches, waiting for in-flight
+    /// Gridlets to return.
+    Draining,
+    /// Experiment finished and reported.
+    Done,
+}
+
+/// Tunables for the scheduling loop.
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Fraction of remaining deadline used as the tick period (the paper's
+    /// `GridSimHold(max(deadline_left*0.01, 1.0))` heuristic).
+    pub tick_fraction: f64,
+    /// Minimum tick period.
+    pub min_tick: f64,
+    /// Trace sampling interval (0 records every tick).
+    pub trace_interval: f64,
+    /// `MaxGridletPerPE` (Fig 17 uses 2).
+    pub max_gridlets_per_pe: usize,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            tick_fraction: 0.01,
+            min_tick: 1.0,
+            trace_interval: 0.0,
+            max_gridlets_per_pe: 2,
+        }
+    }
+}
+
+/// The grid resource broker entity (one per user).
+pub struct Broker {
+    name: String,
+    gis: EntityId,
+    policy: Box<dyn SchedulingPolicy>,
+    config: BrokerConfig,
+
+    state: State,
+    user: EntityId,
+    experiment: Option<Experiment>,
+    started_at: f64,
+    deadline_abs: f64,
+    budget_abs: f64,
+
+    views: Vec<BrokerResource>,
+    pending_chars: usize,
+    unassigned: VecDeque<Gridlet>,
+    finished: Vec<Gridlet>,
+    total_jobs: usize,
+    total_mi: f64,
+    done_mi: f64,
+
+    last_tick: Option<u64>,
+    /// Time the pending tick was scheduled *for* (dedupes the re-advise
+    /// bursts caused by many Gridlets returning at one simulation instant).
+    tick_at: f64,
+    trace: TraceRecorder,
+    /// Result kept for post-run inspection (also sent to the user).
+    pub result: Option<ExperimentResult>,
+}
+
+impl Broker {
+    pub fn new(
+        name: impl Into<String>,
+        gis: EntityId,
+        policy: Box<dyn SchedulingPolicy>,
+        config: BrokerConfig,
+    ) -> Broker {
+        let trace = TraceRecorder::new(config.trace_interval);
+        Broker {
+            name: name.into(),
+            gis,
+            policy,
+            config,
+            state: State::Idle,
+            user: 0,
+            experiment: None,
+            started_at: 0.0,
+            deadline_abs: f64::INFINITY,
+            budget_abs: f64::INFINITY,
+            views: Vec::new(),
+            pending_chars: 0,
+            unassigned: VecDeque::new(),
+            finished: Vec::new(),
+            total_jobs: 0,
+            total_mi: 0.0,
+            done_mi: 0.0,
+            last_tick: None,
+            tick_at: f64::NAN,
+            trace,
+            result: None,
+        }
+    }
+
+    fn spent(&self) -> f64 {
+        self.views.iter().map(|v| v.spent).sum()
+    }
+
+    fn outstanding(&self) -> usize {
+        self.views.iter().map(|v| v.outstanding).sum()
+    }
+
+    fn assigned(&self) -> usize {
+        self.views.iter().map(|v| v.assigned.len()).sum()
+    }
+
+    /// Mean MI of unfinished jobs (the advisor's capacity quantum).
+    fn avg_job_mi(&self) -> f64 {
+        let left = self.total_jobs - self.finished.len();
+        if left == 0 {
+            return 1.0;
+        }
+        ((self.total_mi - self.done_mi) / left as f64).max(1e-9)
+    }
+
+    /// Begin the scheduling phase once trading completes (Fig 20 steps 1–4).
+    fn start_scheduling(&mut self, ctx: &mut Ctx<Msg>) {
+        let exp = self.experiment.as_ref().expect("experiment set");
+        // Step 4: sort resources by increasing cost (G$/MI).
+        self.views.sort_by(|a, b| a.cost_per_mi().total_cmp(&b.cost_per_mi()));
+        for v in &mut self.views {
+            v.max_gridlets_per_pe = self.config.max_gridlets_per_pe;
+        }
+        let infos: Vec<_> = self.views.iter().map(|v| v.info.clone()).collect();
+        // Step 3: D/B factors → absolute deadline and budget (Eqs 1–2).
+        self.deadline_abs = match exp.deadline {
+            DeadlineSpec::Absolute(d) => self.started_at + d,
+            DeadlineSpec::Factor(f) => {
+                self.started_at + deadline_from_factor(f, self.total_mi, &infos)
+            }
+        };
+        self.budget_abs = match exp.budget {
+            BudgetSpec::Absolute(b) => b,
+            BudgetSpec::Factor(f) => budget_from_factor(f, self.total_mi, &infos),
+        };
+        self.state = State::Scheduling;
+        self.schedule_tick(ctx, 0.0);
+    }
+
+    fn schedule_tick(&mut self, ctx: &mut Ctx<Msg>, delay: f64) {
+        self.tick_at = ctx.now() + delay;
+        self.last_tick = Some(ctx.schedule_self(delay, tags::BROKER_TICK, None));
+    }
+
+    /// Re-advise promptly on new information, but at most once per
+    /// simulation instant (bursts of returns share one scheduling pass).
+    fn schedule_tick_now(&mut self, ctx: &mut Ctx<Msg>) {
+        if self.last_tick.is_some() && self.tick_at == ctx.now() {
+            return;
+        }
+        self.schedule_tick(ctx, 0.0);
+    }
+
+    /// One pass of the scheduling flow manager + dispatcher.
+    fn run_scheduler(&mut self, ctx: &mut Ctx<Msg>) {
+        let now = ctx.now();
+        let over_limit = now >= self.deadline_abs || self.spent() >= self.budget_abs;
+        if over_limit {
+            self.enter_drain(ctx);
+            return;
+        }
+        // SCHEDULE ADVISOR (policy): desired totals per resource. In-flight
+        // Gridlets are pinned where they run — they are excluded from the
+        // plan pool and their estimated cost is reserved against the budget,
+        // which keeps the hard budget bound (spent ≤ budget) airtight.
+        let jobs = self.unassigned.len() + self.assigned();
+        let committed_cost: f64 = self.views.iter().map(|v| v.committed_cost).sum();
+        let input = PolicyInput {
+            views: &self.views,
+            now,
+            deadline: self.deadline_abs,
+            budget_left: self.budget_abs - self.spent() - committed_cost,
+            avg_job_mi: self.avg_job_mi(),
+            jobs,
+        };
+        let desired = self.policy.allocate(&input);
+        // Step c.ii: pull back over-assigned (not yet dispatched) jobs.
+        for (r, &want) in desired.iter().enumerate() {
+            let target = want.saturating_sub(self.views[r].outstanding);
+            while self.views[r].assigned.len() > target {
+                let g = self.views[r].assigned.pop_back().unwrap();
+                self.unassigned.push_front(g);
+            }
+        }
+        // Step c.i: feed under-assigned resources, cheapest first (views are
+        // cost-sorted).
+        for (r, &want) in desired.iter().enumerate() {
+            let target = want.saturating_sub(self.views[r].outstanding);
+            while self.views[r].assigned.len() < target {
+                match self.unassigned.pop_front() {
+                    Some(g) => self.views[r].assigned.push_back(g),
+                    None => break,
+                }
+            }
+        }
+        // DISPATCHER: stage Gridlets, bounded per resource.
+        self.dispatch(ctx);
+        self.record_trace(now);
+        // Infeasibility: nothing in flight, nothing assignable, jobs remain,
+        // and no resource is merely in failure backoff (those may recover).
+        if self.outstanding() == 0
+            && self.assigned() == 0
+            && !self.unassigned.is_empty()
+            && desired.iter().all(|&d| d == 0)
+            && self.views.iter().all(|v| v.available(now))
+        {
+            self.finish(ctx);
+            return;
+        }
+        if self.check_done(ctx) {
+            return;
+        }
+        // Paper's hold heuristic: max(deadline_left · fraction, min_tick).
+        let left = (self.deadline_abs - now).max(0.0);
+        let delay = (left * self.config.tick_fraction).max(self.config.min_tick);
+        self.schedule_tick(ctx, delay);
+    }
+
+    fn dispatch(&mut self, ctx: &mut Ctx<Msg>) {
+        let now = ctx.now();
+        if now >= self.deadline_abs {
+            return;
+        }
+        let me = ctx.me();
+        let spent = self.spent();
+        let mut committed: f64 = self.views.iter().map(|v| v.committed_cost).sum();
+        for v in &mut self.views {
+            if !v.available(now) {
+                continue; // failure backoff
+            }
+            let limit = v.dispatch_limit();
+            while v.outstanding < limit {
+                // Hard budget gate: never commit work whose estimated cost
+                // would push actual+reserved spending past the budget.
+                let next_cost = v
+                    .assigned
+                    .front()
+                    .map(|g| v.cost_per_mi() * g.length_mi)
+                    .unwrap_or(f64::INFINITY);
+                if spent + committed + next_cost > self.budget_abs + 1e-9 {
+                    break;
+                }
+                let Some(mut g) = v.assigned.pop_front() else { break };
+                g.owner = me;
+                g.status = GridletStatus::Created;
+                v.on_dispatched(&g, now);
+                committed += next_cost;
+                let dst = v.info.id;
+                let msg = Msg::Gridlet(Box::new(g));
+                let bytes = msg.wire_bytes(true);
+                ctx.send(dst, tags::GRIDLET_SUBMIT, Some(msg), bytes);
+            }
+        }
+    }
+
+    /// Receptor: account a returned Gridlet (Fig 18 step 6).
+    fn on_gridlet_return(&mut self, ctx: &mut Ctx<Msg>, mut g: Gridlet) {
+        let rid = g.resource.expect("returned gridlet has a resource");
+        let Some(r) = self.views.iter().position(|v| v.info.id == rid) else {
+            panic!("return from unknown resource {rid}");
+        };
+        // Charge: price per PE-time × consumed PE time.
+        g.cost = self.views[r].info.cost_per_pe_time * g.cpu_time;
+        match g.status {
+            GridletStatus::Success => {
+                self.done_mi += g.length_mi;
+                self.views[r].on_completed(&g, ctx.now());
+                self.finished.push(g);
+            }
+            GridletStatus::Failed | GridletStatus::Canceled => {
+                // Fault handling: the job returns to the pool for retry on
+                // another resource (partial cost of cancelled work is kept).
+                if g.status == GridletStatus::Failed {
+                    // Back off from the failed resource for a while (also
+                    // breaks the zero-delay redispatch livelock on a dead
+                    // resource under an instantaneous network).
+                    let backoff =
+                        ((self.deadline_abs - ctx.now()) * 0.05).clamp(1.0, 100.0);
+                    self.views[r].mark_down(ctx.now(), backoff);
+                }
+                self.views[r].on_returned_unfinished(&g);
+                g.status = GridletStatus::Created;
+                g.resource = None;
+                g.cost = 0.0;
+                self.unassigned.push_back(g);
+            }
+            other => panic!("unexpected returned gridlet status {other:?}"),
+        }
+        if self.check_done(ctx) {
+            return;
+        }
+        if self.state == State::Scheduling {
+            self.schedule_tick_now(ctx);
+        }
+    }
+
+    fn enter_drain(&mut self, ctx: &mut Ctx<Msg>) {
+        // Stop dispatching; recall undispatched assignments.
+        for r in 0..self.views.len() {
+            while let Some(g) = self.views[r].assigned.pop_back() {
+                self.unassigned.push_front(g);
+            }
+        }
+        self.state = State::Draining;
+        self.record_trace(ctx.now());
+        self.check_done(ctx);
+    }
+
+    fn check_done(&mut self, ctx: &mut Ctx<Msg>) -> bool {
+        let all_done = self.finished.len() == self.total_jobs;
+        let drained = self.state == State::Draining && self.outstanding() == 0;
+        if all_done || drained {
+            self.finish(ctx);
+            return true;
+        }
+        false
+    }
+
+    fn record_trace(&mut self, now: f64) {
+        for v in &self.views {
+            self.trace.record_fields(&v.info.name, now, v.completed, v.committed(), v.spent);
+        }
+    }
+
+    fn finish(&mut self, ctx: &mut Ctx<Msg>) {
+        if self.state == State::Done {
+            return;
+        }
+        self.state = State::Done;
+        let now = ctx.now();
+        for v in &self.views {
+            self.trace.record_final(TracePoint {
+                time: now,
+                resource: v.info.name.clone(),
+                completed: v.completed,
+                committed: v.committed(),
+                spent: v.spent,
+            });
+        }
+        let result = ExperimentResult {
+            gridlets_completed: self.finished.len(),
+            gridlets_total: self.total_jobs,
+            budget_spent: self.spent(),
+            finish_time: now,
+            start_time: self.started_at,
+            deadline: self.deadline_abs - self.started_at,
+            budget: self.budget_abs,
+            per_resource: self
+                .views
+                .iter()
+                .map(|v| ResourceOutcome {
+                    name: v.info.name.clone(),
+                    gridlets_completed: v.completed,
+                    budget_spent: v.spent,
+                })
+                .collect(),
+            trace: self.trace.points().to_vec(),
+        };
+        self.result = Some(result.clone());
+        ctx.send(
+            self.user,
+            tags::EXPERIMENT_DONE,
+            Some(Msg::ExperimentResult(Box::new(result))),
+            512,
+        );
+    }
+}
+
+impl Entity<Msg> for Broker {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        match ev.tag {
+            tags::EXPERIMENT => {
+                assert_eq!(self.state, State::Idle, "broker already has an experiment");
+                let Msg::Experiment(exp) = ev.take_data() else {
+                    panic!("EXPERIMENT without payload")
+                };
+                self.user = ev.src;
+                self.started_at = ctx.now();
+                self.total_jobs = exp.gridlets.len();
+                self.total_mi = exp.gridlets.iter().map(|g| g.length_mi).sum();
+                self.unassigned = exp.gridlets.iter().cloned().collect();
+                self.experiment = Some(*exp);
+                self.state = State::Discovering;
+                // RESOURCE DISCOVERY (Fig 20 step 1).
+                ctx.send(self.gis, tags::RESOURCE_LIST, None, 16);
+            }
+            tags::RESOURCE_LIST => {
+                let Msg::ResourceIds(ids) = ev.take_data() else {
+                    panic!("RESOURCE_LIST without payload")
+                };
+                assert_eq!(self.state, State::Discovering);
+                if ids.is_empty() {
+                    // No resources in the grid: report an empty run.
+                    self.deadline_abs = self.started_at;
+                    self.budget_abs = 0.0;
+                    self.finish(ctx);
+                    return;
+                }
+                self.pending_chars = ids.len();
+                self.state = State::Trading;
+                // RESOURCE TRADING (Fig 20 step 2).
+                for id in ids {
+                    ctx.send(id, tags::RESOURCE_CHARACTERISTICS, None, 16);
+                }
+            }
+            tags::RESOURCE_CHARACTERISTICS => {
+                let Msg::Characteristics(info) = ev.take_data() else {
+                    panic!("RESOURCE_CHARACTERISTICS without payload")
+                };
+                assert_eq!(self.state, State::Trading);
+                self.views.push(BrokerResource::new(info));
+                self.pending_chars -= 1;
+                if self.pending_chars == 0 {
+                    self.start_scheduling(ctx);
+                }
+            }
+            tags::BROKER_TICK => {
+                if self.last_tick != Some(ev.seq) {
+                    return; // stale tick
+                }
+                match self.state {
+                    State::Scheduling => self.run_scheduler(ctx),
+                    State::Draining => {
+                        self.check_done(ctx);
+                    }
+                    _ => {}
+                }
+            }
+            tags::GRIDLET_RETURN => {
+                let Msg::Gridlet(g) = ev.take_data() else {
+                    panic!("GRIDLET_RETURN without payload")
+                };
+                if self.state == State::Done {
+                    return; // straggler after an empty-grid finish
+                }
+                self.on_gridlet_return(ctx, *g);
+            }
+            tags::GRIDLET_CANCEL_REPLY => match ev.take_data() {
+                Msg::Gridlet(g) => self.on_gridlet_return(ctx, *g),
+                Msg::GridletId(_) => {} // already finished; return in flight
+                other => panic!("unexpected cancel reply {other:?}"),
+            },
+            tags::INSIGNIFICANT => {}
+            other => panic!("broker {} got unexpected tag {other}", self.name),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}

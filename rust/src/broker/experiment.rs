@@ -1,0 +1,311 @@
+//! `Experiment` — the user's contract with its broker (paper §4.2.1 class
+//! diagram): the application (a set of Gridlets), the optimization strategy,
+//! and deadline/budget constraints given either absolutely or as D-/B-factors
+//! (Eqs 1–2).
+
+use crate::gridsim::gridlet::Gridlet;
+use crate::gridsim::messages::ResourceInfo;
+use crate::gridsim::random::GridSimRandom;
+
+/// Scheduling optimization strategy (paper §4.2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimization {
+    /// DBC cost-optimization: as cheap as possible within deadline+budget.
+    Cost,
+    /// DBC time-optimization: as fast as possible within deadline+budget.
+    Time,
+    /// DBC cost-time optimization [23]: cost-ordered, but resources with the
+    /// same price are used in parallel like time-optimization.
+    CostTime,
+    /// No optimization: spread work across all resources.
+    NoOpt,
+}
+
+impl Optimization {
+    pub fn parse(s: &str) -> Option<Optimization> {
+        match s.to_ascii_lowercase().as_str() {
+            "cost" => Some(Optimization::Cost),
+            "time" => Some(Optimization::Time),
+            "costtime" | "cost-time" | "cost_time" => Some(Optimization::CostTime),
+            "none" | "noopt" => Some(Optimization::NoOpt),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Optimization::Cost => "cost",
+            Optimization::Time => "time",
+            Optimization::CostTime => "cost-time",
+            Optimization::NoOpt => "none",
+        }
+    }
+}
+
+/// Deadline given directly or via a D-factor (Eq 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeadlineSpec {
+    Absolute(f64),
+    Factor(f64),
+}
+
+/// Budget given directly or via a B-factor (Eq 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BudgetSpec {
+    Absolute(f64),
+    Factor(f64),
+}
+
+/// Declarative experiment description (what the scenario config carries).
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Number of Gridlets in the task farm.
+    pub num_gridlets: usize,
+    /// Base job length in MI (before random variation).
+    pub base_length_mi: f64,
+    /// Positive-side random variation factor (paper §5.2 uses 0.10).
+    pub length_variation: f64,
+    /// Input/output staging sizes per job in bytes.
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    pub deadline: DeadlineSpec,
+    pub budget: BudgetSpec,
+    pub optimization: Optimization,
+}
+
+impl ExperimentSpec {
+    /// The paper's workload: `n` Gridlets of at least `base` MI with a 0–10%
+    /// positive variation (§5.2).
+    pub fn task_farm(n: usize, base: f64, variation: f64) -> ExperimentSpec {
+        ExperimentSpec {
+            num_gridlets: n,
+            base_length_mi: base,
+            length_variation: variation,
+            input_bytes: 1000,
+            output_bytes: 500,
+            deadline: DeadlineSpec::Factor(1.0),
+            budget: BudgetSpec::Factor(1.0),
+            optimization: Optimization::Cost,
+        }
+    }
+
+    pub fn deadline(mut self, d: f64) -> ExperimentSpec {
+        self.deadline = DeadlineSpec::Absolute(d);
+        self
+    }
+
+    pub fn budget(mut self, b: f64) -> ExperimentSpec {
+        self.budget = BudgetSpec::Absolute(b);
+        self
+    }
+
+    pub fn d_factor(mut self, f: f64) -> ExperimentSpec {
+        self.deadline = DeadlineSpec::Factor(f);
+        self
+    }
+
+    pub fn b_factor(mut self, f: f64) -> ExperimentSpec {
+        self.budget = BudgetSpec::Factor(f);
+        self
+    }
+
+    pub fn optimization(mut self, o: Optimization) -> ExperimentSpec {
+        self.optimization = o;
+        self
+    }
+
+    /// Materialize the Gridlet list with seeded randomness
+    /// (`real(base, 0, variation)` per §5.2).
+    pub fn materialize(&self, rand: &mut GridSimRandom) -> Vec<Gridlet> {
+        (0..self.num_gridlets)
+            .map(|i| {
+                let len = rand.real(self.base_length_mi, 0.0, self.length_variation);
+                Gridlet::new(i, len, self.input_bytes, self.output_bytes)
+            })
+            .collect()
+    }
+}
+
+/// A materialized experiment handed from the user entity to its broker.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub gridlets: Vec<Gridlet>,
+    pub deadline: DeadlineSpec,
+    pub budget: BudgetSpec,
+    pub optimization: Optimization,
+}
+
+/// Per-resource outcome line (Figures 25–32 series).
+#[derive(Debug, Clone)]
+pub struct ResourceOutcome {
+    pub name: String,
+    pub gridlets_completed: usize,
+    pub budget_spent: f64,
+}
+
+/// What the broker returns to the user when the experiment terminates.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    /// Gridlets that finished successfully.
+    pub gridlets_completed: usize,
+    /// Total gridlets in the experiment.
+    pub gridlets_total: usize,
+    /// G$ actually spent.
+    pub budget_spent: f64,
+    /// Simulation time when the experiment terminated.
+    pub finish_time: f64,
+    /// Time the broker received the experiment.
+    pub start_time: f64,
+    /// Absolute deadline in effect (after Eq 1 if a factor was given).
+    pub deadline: f64,
+    /// Absolute budget in effect (after Eq 2 if a factor was given).
+    pub budget: f64,
+    /// Per-resource breakdown.
+    pub per_resource: Vec<ResourceOutcome>,
+    /// Time-series trace (Figures 28–32).
+    pub trace: Vec<super::trace::TracePoint>,
+}
+
+impl ExperimentResult {
+    /// Fraction of the deadline consumed (paper Fig 23 "deadline time
+    /// utilized" normalised).
+    pub fn time_utilization(&self) -> f64 {
+        (self.finish_time - self.start_time) / self.deadline.max(1e-12)
+    }
+
+    /// Fraction of budget consumed (Fig 24).
+    pub fn budget_utilization(&self) -> f64 {
+        self.budget_spent / self.budget.max(1e-12)
+    }
+
+    /// Fraction of Gridlets completed.
+    pub fn completion_factor(&self) -> f64 {
+        self.gridlets_completed as f64 / self.gridlets_total.max(1) as f64
+    }
+}
+
+/// Eq 1: `deadline = T_min + D_factor (T_max − T_min)`.
+///
+/// * `T_min` — all jobs processed in parallel across every discovered
+///   resource, fastest first: the aggregate-rate lower bound
+///   `total_MI / Σ_r MIPS_r`.
+/// * `T_max` — all jobs processed serially on the slowest resource:
+///   `total_MI / min_r(per-PE MIPS_r)`.
+pub fn deadline_from_factor(factor: f64, total_mi: f64, resources: &[ResourceInfo]) -> f64 {
+    assert!(!resources.is_empty());
+    let agg: f64 = resources.iter().map(|r| r.total_mips()).sum();
+    let slowest = resources
+        .iter()
+        .map(|r| r.mips_per_pe)
+        .min_by(|a, b| a.total_cmp(b))
+        .unwrap();
+    let t_min = total_mi / agg;
+    let t_max = total_mi / slowest;
+    t_min + factor * (t_max - t_min)
+}
+
+/// Eq 2: `budget = C_min + B_factor (C_max − C_min)`.
+///
+/// * `C_min` — everything on the cheapest resource: `total_MI · min_r(G$/MI)`.
+/// * `C_max` — everything on the costliest resource: `total_MI · max_r(G$/MI)`.
+pub fn budget_from_factor(factor: f64, total_mi: f64, resources: &[ResourceInfo]) -> f64 {
+    assert!(!resources.is_empty());
+    let cheapest = resources
+        .iter()
+        .map(|r| r.cost_per_mi())
+        .min_by(|a, b| a.total_cmp(b))
+        .unwrap();
+    let costliest = resources
+        .iter()
+        .map(|r| r.cost_per_mi())
+        .max_by(|a, b| a.total_cmp(b))
+        .unwrap();
+    let c_min = total_mi * cheapest;
+    let c_max = total_mi * costliest;
+    c_min + factor * (c_max - c_min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(id: usize, pes: usize, mips: f64, price: f64) -> ResourceInfo {
+        ResourceInfo {
+            id,
+            name: format!("R{id}"),
+            num_pe: pes,
+            mips_per_pe: mips,
+            cost_per_pe_time: price,
+            time_shared: true,
+            time_zone: 0.0,
+        }
+    }
+
+    #[test]
+    fn spec_materializes_seeded_workload() {
+        let spec = ExperimentSpec::task_farm(200, 10_000.0, 0.10);
+        let mut r1 = GridSimRandom::new(7);
+        let mut r2 = GridSimRandom::new(7);
+        let g1 = spec.materialize(&mut r1);
+        let g2 = spec.materialize(&mut r2);
+        assert_eq!(g1.len(), 200);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert_eq!(a.length_mi, b.length_mi, "same seed, same workload");
+        }
+        // §5.2: at least 10_000 MI, up to +10%.
+        assert!(g1.iter().all(|g| (10_000.0..11_000.0).contains(&g.length_mi)));
+        // And actually varied.
+        assert!(g1.iter().any(|g| g.length_mi != g1[0].length_mi));
+    }
+
+    #[test]
+    fn eq1_deadline_endpoints() {
+        let rs = vec![info(0, 2, 100.0, 1.0), info(1, 1, 50.0, 2.0)];
+        let total = 1000.0;
+        // D=0 → T_min = 1000/250 = 4 ; D=1 → T_max = 1000/50 = 20.
+        assert!((deadline_from_factor(0.0, total, &rs) - 4.0).abs() < 1e-12);
+        assert!((deadline_from_factor(1.0, total, &rs) - 20.0).abs() < 1e-12);
+        assert!((deadline_from_factor(0.5, total, &rs) - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_budget_endpoints() {
+        let rs = vec![info(0, 2, 100.0, 1.0), info(1, 1, 50.0, 2.0)];
+        // cost/MI: 0.01 and 0.04 → C_min = 10, C_max = 40.
+        let total = 1000.0;
+        assert!((budget_from_factor(0.0, total, &rs) - 10.0).abs() < 1e-12);
+        assert!((budget_from_factor(1.0, total, &rs) - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimization_parse_labels() {
+        for (s, o) in [
+            ("cost", Optimization::Cost),
+            ("TIME", Optimization::Time),
+            ("cost-time", Optimization::CostTime),
+            ("none", Optimization::NoOpt),
+        ] {
+            assert_eq!(Optimization::parse(s), Some(o));
+            assert_eq!(Optimization::parse(o.label()), Some(o));
+        }
+        assert_eq!(Optimization::parse("bogus"), None);
+    }
+
+    #[test]
+    fn result_utilizations() {
+        let r = ExperimentResult {
+            gridlets_completed: 150,
+            gridlets_total: 200,
+            budget_spent: 5_000.0,
+            finish_time: 1_100.0,
+            start_time: 100.0,
+            deadline: 2_000.0,
+            budget: 10_000.0,
+            per_resource: vec![],
+            trace: vec![],
+        };
+        assert!((r.time_utilization() - 0.5).abs() < 1e-12);
+        assert!((r.budget_utilization() - 0.5).abs() < 1e-12);
+        assert!((r.completion_factor() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,19 @@
+//! The economic grid resource broker (paper §4.2, Fig 18): a Nimrod-G-like,
+//! per-user scheduling entity implementing deadline-and-budget-constrained
+//! (DBC) scheduling with cost-, time-, cost-time- and none-optimization
+//! policies.
+
+pub mod broker;
+pub mod experiment;
+pub mod policy;
+pub mod resource_view;
+pub mod trace;
+pub mod user;
+
+pub use broker::Broker;
+pub use experiment::{
+    BudgetSpec, DeadlineSpec, Experiment, ExperimentResult, ExperimentSpec, Optimization,
+};
+pub use resource_view::BrokerResource;
+pub use trace::TracePoint;
+pub use user::UserEntity;

@@ -1,0 +1,107 @@
+//! DBC **cost-optimization** (paper Fig 20): process jobs as economically as
+//! possible within the deadline and budget — fill the cheapest resources to
+//! their deadline capacity first.
+//!
+//! The numeric allocation is delegated to an [`Advisor`]: either the
+//! pure-Rust sequential greedy or the AOT-compiled JAX/Pallas artifact
+//! running through PJRT (`--advisor xla`). Both produce identical
+//! allocations (see `rust/tests/xla_advisor.rs`).
+
+use super::{PolicyInput, SchedulingPolicy};
+use crate::runtime::{Advisor, AdvisorInput, ResourceSnapshot};
+
+pub struct CostPolicy {
+    advisor: Box<dyn Advisor>,
+}
+
+impl CostPolicy {
+    pub fn new(advisor: Box<dyn Advisor>) -> CostPolicy {
+        CostPolicy { advisor }
+    }
+}
+
+impl SchedulingPolicy for CostPolicy {
+    fn label(&self) -> &'static str {
+        "cost"
+    }
+
+    fn allocate(&mut self, input: &PolicyInput) -> Vec<usize> {
+        let snapshots: Vec<ResourceSnapshot> = input
+            .views
+            .iter()
+            .map(|v| ResourceSnapshot {
+                rate_mi: v.rate_estimate(input.now),
+                cost_per_mi: v.cost_per_mi(),
+            })
+            .collect();
+        let adv_input = AdvisorInput {
+            resources: snapshots,
+            time_left: input.time_left(),
+            budget_left: input.budget_left,
+            avg_job_mi: input.avg_job_mi,
+            jobs: input.jobs,
+        };
+        self.advisor.advise(&adv_input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::views;
+    use super::*;
+    use crate::runtime::NativeAdvisor;
+
+    #[test]
+    fn fills_cheapest_first() {
+        // R0 (sorted first): 200 MIPS aggregate at 0.01 G$/MI, capacity 20.
+        // R1: 100 MIPS at 0.02 G$/MI.
+        let vs = views(&[(100.0, 2, 1.0), (100.0, 1, 2.0)]);
+        let mut p = CostPolicy::new(Box::new(NativeAdvisor::new()));
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 100.0,
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs: 25,
+        };
+        let alloc = p.allocate(&input);
+        assert_eq!(alloc, vec![20, 5], "cheapest to capacity, spill to next");
+    }
+
+    #[test]
+    fn relaxed_deadline_uses_only_cheapest() {
+        // Paper Fig 27: with a very relaxed deadline the cheapest resource
+        // absorbs everything.
+        let vs = views(&[(100.0, 2, 1.0), (100.0, 1, 2.0)]);
+        let mut p = CostPolicy::new(Box::new(NativeAdvisor::new()));
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 1e6,
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs: 200,
+        };
+        let alloc = p.allocate(&input);
+        assert_eq!(alloc, vec![200, 0]);
+    }
+
+    #[test]
+    fn budget_limits_expensive_spill() {
+        // Cheap capacity 2 jobs at 10 G$; expensive at 20 G$/job.
+        // Budget 45 → 2 cheap (20) + 1 expensive (20) = 40; next would be 60.
+        let vs = views(&[(100.0, 2, 1.0), (100.0, 1, 2.0)]);
+        let mut p = CostPolicy::new(Box::new(NativeAdvisor::new()));
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 10.0, // capacity: 2000/1000=2 cheap, 1000/1000=1 expensive
+            budget_left: 45.0,
+            avg_job_mi: 1000.0,
+            jobs: 50,
+        };
+        let alloc = p.allocate(&input);
+        assert_eq!(alloc, vec![2, 1]);
+    }
+}

@@ -1,0 +1,143 @@
+//! DBC scheduling policies (paper §4.2.2): cost-, time-, cost-time- and
+//! none-optimization. Each policy maps broker state to *desired committed
+//! job totals per resource*; the broker's scheduling flow manager then
+//! rebalances assignments toward those totals and the dispatcher stages
+//! Gridlets out (Fig 18 / Fig 20).
+
+pub mod cost;
+pub mod cost_time;
+pub mod none;
+pub mod time;
+
+use super::experiment::Optimization;
+use super::resource_view::BrokerResource;
+use crate::runtime::Advisor;
+
+/// Inputs common to every policy decision, assembled by the broker per tick.
+#[derive(Debug)]
+pub struct PolicyInput<'a> {
+    /// Broker-side resource views, sorted by ascending G$/MI.
+    pub views: &'a [BrokerResource],
+    pub now: f64,
+    /// Absolute deadline.
+    pub deadline: f64,
+    /// Budget remaining after actual and committed spending.
+    pub budget_left: f64,
+    /// Mean MI of unfinished jobs.
+    pub avg_job_mi: f64,
+    /// Jobs to plan (unassigned + committed; full re-plan every tick).
+    pub jobs: usize,
+}
+
+impl<'a> PolicyInput<'a> {
+    pub fn time_left(&self) -> f64 {
+        (self.deadline - self.now).max(0.0)
+    }
+
+    /// Per-resource measured rates (Fig 20 step a).
+    pub fn rates(&self) -> Vec<f64> {
+        self.views.iter().map(|v| v.rate_estimate(self.now)).collect()
+    }
+
+    /// Per-resource deadline capacities in jobs (Fig 20 step b).
+    pub fn capacities(&self) -> Vec<usize> {
+        let t = self.time_left();
+        let avg = self.avg_job_mi.max(1e-9);
+        self.views
+            .iter()
+            .map(|v| ((v.rate_estimate(self.now) * t) / avg * (1.0 + 1e-12) + 1e-9).floor() as usize)
+            .collect()
+    }
+
+    /// Per-resource estimated cost of one job in G$.
+    pub fn job_costs(&self) -> Vec<f64> {
+        self.views.iter().map(|v| v.cost_per_mi() * self.avg_job_mi).collect()
+    }
+}
+
+/// A scheduling policy: desired committed totals per resource.
+pub trait SchedulingPolicy {
+    fn label(&self) -> &'static str;
+    fn allocate(&mut self, input: &PolicyInput) -> Vec<usize>;
+}
+
+/// Instantiate the policy for an optimization strategy. Cost-optimization
+/// takes the advisor engine (native or the AOT JAX/Pallas artifact).
+pub fn make_policy(
+    optimization: Optimization,
+    advisor: Box<dyn Advisor>,
+) -> Box<dyn SchedulingPolicy> {
+    match optimization {
+        Optimization::Cost => Box::new(cost::CostPolicy::new(advisor)),
+        Optimization::Time => Box::new(time::TimePolicy),
+        Optimization::CostTime => Box::new(cost_time::CostTimePolicy),
+        Optimization::NoOpt => Box::new(none::NoOptPolicy),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::gridsim::messages::ResourceInfo;
+
+    /// Build cost-sorted broker views from (mips_per_pe, pes, price) triples.
+    pub fn views(specs: &[(f64, usize, f64)]) -> Vec<BrokerResource> {
+        let mut vs: Vec<BrokerResource> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(mips, pes, price))| {
+                BrokerResource::new(ResourceInfo {
+                    id: i,
+                    name: format!("R{i}"),
+                    num_pe: pes,
+                    mips_per_pe: mips,
+                    cost_per_pe_time: price,
+                    time_shared: true,
+                    time_zone: 0.0,
+                })
+            })
+            .collect();
+        vs.sort_by(|a, b| a.cost_per_mi().total_cmp(&b.cost_per_mi()));
+        vs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::views;
+    use super::*;
+
+    #[test]
+    fn input_helpers() {
+        let vs = views(&[(100.0, 2, 1.0), (100.0, 1, 2.0)]);
+        let input = PolicyInput {
+            views: &vs,
+            now: 10.0,
+            deadline: 110.0,
+            budget_left: 1000.0,
+            avg_job_mi: 1000.0,
+            jobs: 10,
+        };
+        assert_eq!(input.time_left(), 100.0);
+        // Optimistic rates = total MIPS.
+        assert_eq!(input.rates(), vec![200.0, 100.0]);
+        // Capacities: 200*100/1000=20, 100*100/1000=10.
+        assert_eq!(input.capacities(), vec![20, 10]);
+        // Job costs: (1/100)*1000=10, (2/100)*1000=20.
+        assert_eq!(input.job_costs(), vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn factory_builds_each_policy() {
+        use crate::runtime::NativeAdvisor;
+        for (o, label) in [
+            (Optimization::Cost, "cost"),
+            (Optimization::Time, "time"),
+            (Optimization::CostTime, "cost-time"),
+            (Optimization::NoOpt, "none"),
+        ] {
+            let p = make_policy(o, Box::new(NativeAdvisor::new()));
+            assert_eq!(p.label(), label);
+        }
+    }
+}

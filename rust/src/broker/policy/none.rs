@@ -1,0 +1,75 @@
+//! **None-optimization**: no cost or time preference — jobs are spread
+//! round-robin over every discovered resource, still honouring the hard
+//! deadline capacities and the budget (the "DBC constrained" part).
+
+use super::{PolicyInput, SchedulingPolicy};
+
+pub struct NoOptPolicy;
+
+impl SchedulingPolicy for NoOptPolicy {
+    fn label(&self) -> &'static str {
+        "none"
+    }
+
+    fn allocate(&mut self, input: &PolicyInput) -> Vec<usize> {
+        let capacities = input.capacities();
+        let job_costs = input.job_costs();
+        let n = input.views.len();
+        let mut counts = vec![0usize; n];
+        let mut budget = input.budget_left.max(0.0);
+        let mut remaining = input.jobs;
+        let mut progressed = true;
+        while remaining > 0 && progressed {
+            progressed = false;
+            for r in 0..n {
+                if remaining == 0 {
+                    break;
+                }
+                if counts[r] < capacities[r] && job_costs[r] <= budget * (1.0 + 1e-12) + 1e-9 {
+                    counts[r] += 1;
+                    budget -= job_costs[r];
+                    remaining -= 1;
+                    progressed = true;
+                }
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::views;
+    use super::*;
+
+    #[test]
+    fn round_robin_even_spread() {
+        let vs = views(&[(100.0, 1, 1.0), (100.0, 1, 2.0), (100.0, 1, 3.0)]);
+        let mut p = NoOptPolicy;
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 1e6,
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs: 9,
+        };
+        assert_eq!(p.allocate(&input), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn capacity_and_budget_still_bind() {
+        let vs = views(&[(100.0, 1, 1.0), (100.0, 1, 2.0)]); // 10, 20 G$/job
+        let mut p = NoOptPolicy;
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 30.0, // capacity 3 each
+            budget_left: 40.0,
+            avg_job_mi: 1000.0,
+            jobs: 10,
+        };
+        // RR: r0 (10) → r1 (20) → r0 (10) → r1 unaffordable (0 left) → stop.
+        assert_eq!(p.allocate(&input), vec![2, 1]);
+    }
+}

@@ -1,0 +1,124 @@
+//! DBC **time-optimization**: finish as early as possible within the budget —
+//! spread jobs across all resources proportionally to their measured rates
+//! (each job goes to the resource that would finish it soonest), instead of
+//! packing the cheapest resource first.
+
+use super::{PolicyInput, SchedulingPolicy};
+
+pub struct TimePolicy;
+
+impl SchedulingPolicy for TimePolicy {
+    fn label(&self) -> &'static str {
+        "time"
+    }
+
+    fn allocate(&mut self, input: &PolicyInput) -> Vec<usize> {
+        let rates = input.rates();
+        let job_costs = input.job_costs();
+        let capacities = input.capacities();
+        let avg = input.avg_job_mi.max(1e-9);
+        let mut counts = vec![0usize; input.views.len()];
+        let mut budget = input.budget_left.max(0.0);
+        for _ in 0..input.jobs {
+            // Pick the feasible resource with the earliest predicted finish
+            // of one more job: (n_r + 1) · avg / rate_r.
+            let mut best: Option<(usize, f64)> = None;
+            for r in 0..counts.len() {
+                if counts[r] >= capacities[r] || job_costs[r] > budget * (1.0 + 1e-12) + 1e-9 || rates[r] <= 0.0 {
+                    continue;
+                }
+                let finish = (counts[r] + 1) as f64 * avg / rates[r];
+                let better = match best {
+                    None => true,
+                    Some((_, t)) => {
+                        finish < t - 1e-12
+                            || (finish < t + 1e-12 && job_costs[r] < job_costs[best.unwrap().0])
+                    }
+                };
+                if better {
+                    best = Some((r, finish));
+                }
+            }
+            match best {
+                Some((r, _)) => {
+                    counts[r] += 1;
+                    budget -= job_costs[r];
+                }
+                None => break, // nothing feasible (deadline or budget)
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::views;
+    use super::*;
+
+    #[test]
+    fn spreads_proportionally_to_rate() {
+        // Rates 200 and 100 → jobs split 2:1.
+        let vs = views(&[(100.0, 2, 1.0), (100.0, 1, 2.0)]);
+        let mut p = TimePolicy;
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 1e6,
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs: 30,
+        };
+        let alloc = p.allocate(&input);
+        assert_eq!(alloc, vec![20, 10]);
+    }
+
+    #[test]
+    fn uses_expensive_resources_unlike_cost_opt() {
+        // Even with a relaxed deadline, time-opt uses the fast expensive
+        // resource — that's the cost/time trade-off of the two policies.
+        let vs = views(&[(100.0, 1, 1.0), (500.0, 4, 10.0)]);
+        let mut p = TimePolicy;
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 1e6,
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs: 21,
+        };
+        let alloc = p.allocate(&input);
+        assert!(alloc[1] > alloc[0], "fast resource takes more: {alloc:?}");
+        assert_eq!(alloc.iter().sum::<usize>(), 21);
+    }
+
+    #[test]
+    fn budget_stops_allocation() {
+        let vs = views(&[(100.0, 1, 1.0)]); // 10 G$/job
+        let mut p = TimePolicy;
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 1e6,
+            budget_left: 35.0,
+            avg_job_mi: 1000.0,
+            jobs: 10,
+        };
+        assert_eq!(p.allocate(&input), vec![3]);
+    }
+
+    #[test]
+    fn deadline_capacity_respected() {
+        let vs = views(&[(100.0, 1, 1.0)]);
+        let mut p = TimePolicy;
+        let input = PolicyInput {
+            views: &vs,
+            now: 0.0,
+            deadline: 50.0, // capacity = 100*50/1000 = 5
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs: 10,
+        };
+        assert_eq!(p.allocate(&input), vec![5]);
+    }
+}

@@ -1,0 +1,255 @@
+//! `BrokerResource` — the broker-side record of one grid resource
+//! (paper §4.2.1): its characteristics, the Gridlets committed to it, and
+//! the measured performance ("the actual amount of MIPS available to the
+//! user") used to extrapolate consumption rates for scheduling.
+
+use crate::gridsim::gridlet::Gridlet;
+use crate::gridsim::messages::ResourceInfo;
+use std::collections::{HashMap, VecDeque};
+
+/// EWMA smoothing for the per-slot rate measurement.
+const RATE_EWMA_ALPHA: f64 = 0.3;
+
+/// Broker-side view of one resource.
+#[derive(Debug, Clone)]
+pub struct BrokerResource {
+    pub info: ResourceInfo,
+    /// Gridlets committed to this resource but not yet dispatched.
+    pub assigned: VecDeque<Gridlet>,
+    /// Gridlets dispatched and awaiting return.
+    pub outstanding: usize,
+    /// Estimated cost of in-flight Gridlets (reserved against the budget so
+    /// the hard budget bound holds even while jobs are away).
+    pub committed_cost: f64,
+    /// Successfully completed Gridlets.
+    pub completed: usize,
+    /// MI successfully processed (measurement input).
+    pub mi_done: f64,
+    /// G$ spent on this resource.
+    pub spent: f64,
+    /// Time of first dispatch (measurement window start).
+    pub first_dispatch: Option<f64>,
+    /// Time of the latest successful return.
+    pub last_return: Option<f64>,
+    /// Dispatch time per in-flight Gridlet id (turnaround measurement).
+    dispatch_times: HashMap<usize, f64>,
+    /// EWMA of the measured per-slot rate `length / turnaround` (MI per
+    /// time unit one dispatch slot delivers to this user).
+    per_slot_rate: Option<f64>,
+    /// Dispatch cap per tick: paper's `MaxGridletPerPE` (2 in Fig 17).
+    pub max_gridlets_per_pe: usize,
+    /// Failure adaptation: after a Gridlet comes back `Failed`, the broker
+    /// treats this resource as down until this time (retry backoff) — this
+    /// both models the paper's "adapting to resource failures" and breaks
+    /// the zero-delay livelock of re-dispatching to a dead resource.
+    pub down_until: f64,
+}
+
+impl BrokerResource {
+    pub fn new(info: ResourceInfo) -> BrokerResource {
+        BrokerResource {
+            info,
+            assigned: VecDeque::new(),
+            outstanding: 0,
+            committed_cost: 0.0,
+            completed: 0,
+            mi_done: 0.0,
+            spent: 0.0,
+            first_dispatch: None,
+            last_return: None,
+            dispatch_times: HashMap::new(),
+            per_slot_rate: None,
+            max_gridlets_per_pe: 2,
+            down_until: f64::NEG_INFINITY,
+        }
+    }
+
+    /// G$ per MI (ranking key; Table 2 translation).
+    pub fn cost_per_mi(&self) -> f64 {
+        self.info.cost_per_mi()
+    }
+
+    /// Jobs committed to this resource right now (assigned + in flight).
+    pub fn committed(&self) -> usize {
+        self.assigned.len() + self.outstanding
+    }
+
+    /// Measured-and-extrapolated MI consumption rate available to this user
+    /// (paper Fig 20 step a). Before any result returns, the broker is
+    /// optimistic and assumes the full resource: `Σ MIPS`. Afterwards the
+    /// estimate is `dispatch_limit × EWMA(length / turnaround)` — each
+    /// returned Gridlet's turnaround measures what one dispatch slot
+    /// delivers, so the estimate is unbiased at any instant (a cumulative
+    /// `MI done / elapsed` average would undercount in-flight work and make
+    /// the resource look slower right before each batch returns). Under
+    /// competition turnaround inflates and the broker adapts — the paper's
+    /// "recalibration". Capped at the resource's aggregate MIPS.
+    pub fn rate_estimate(&self, now: f64) -> f64 {
+        if !self.available(now) {
+            return 0.0;
+        }
+        match self.per_slot_rate {
+            Some(r) => (r * self.dispatch_limit() as f64).min(self.info.total_mips()),
+            None => self.info.total_mips(),
+        }
+    }
+
+    /// Is the resource currently considered usable (failure backoff)?
+    pub fn available(&self, now: f64) -> bool {
+        now >= self.down_until
+    }
+
+    /// Predicted turnaround of one more job of `avg_mi` on this resource
+    /// (measured per-slot rate; optimistic one-PE estimate before data).
+    /// Exposed for what-if analyses; the broker deliberately does *not*
+    /// refuse late dispatches based on this — the paper's broker keeps
+    /// in-flight jobs past the (soft) deadline rather than cancelling them
+    /// (§5.4.1), which is exactly what makes Fig 34's termination times
+    /// overshoot under competition.
+    pub fn predicted_turnaround(&self, avg_mi: f64) -> f64 {
+        let per_slot = self.per_slot_rate.unwrap_or(self.info.mips_per_pe);
+        avg_mi / per_slot.max(1e-9)
+    }
+
+    /// Enter failure backoff for `backoff` time units.
+    pub fn mark_down(&mut self, now: f64, backoff: f64) {
+        self.down_until = now + backoff.max(1e-9);
+    }
+
+    /// Max Gridlets allowed in flight at once (the dispatcher's staging
+    /// policy, Fig 18 step 4: "avoid overloading resources").
+    pub fn dispatch_limit(&self) -> usize {
+        self.max_gridlets_per_pe * self.info.num_pe
+    }
+
+    /// Reserve the estimated cost of a Gridlet being dispatched.
+    pub fn on_dispatched(&mut self, g: &Gridlet, now: f64) {
+        self.outstanding += 1;
+        self.committed_cost += self.cost_per_mi() * g.length_mi;
+        self.first_dispatch.get_or_insert(now);
+        self.dispatch_times.insert(g.id, now);
+    }
+
+    fn observe_turnaround(&mut self, g: &Gridlet, now: f64) {
+        if let Some(t0) = self.dispatch_times.remove(&g.id) {
+            let turnaround = (now - t0).max(1e-9);
+            let implied = g.length_mi / turnaround;
+            self.per_slot_rate = Some(match self.per_slot_rate {
+                Some(prev) => prev + RATE_EWMA_ALPHA * (implied - prev),
+                None => implied,
+            });
+        }
+    }
+
+    /// Account a successful completion at time `now`.
+    pub fn on_completed(&mut self, g: &Gridlet, now: f64) {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        self.committed_cost = (self.committed_cost - self.cost_per_mi() * g.length_mi).max(0.0);
+        self.completed += 1;
+        self.mi_done += g.length_mi;
+        self.spent += g.cost;
+        self.last_return = Some(now);
+        self.observe_turnaround(g, now);
+    }
+
+    /// Account a failed/cancelled return (the job goes back to the pool;
+    /// cancelled work may still carry a partial-cost charge).
+    pub fn on_returned_unfinished(&mut self, g: &Gridlet) {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        self.committed_cost = (self.committed_cost - self.cost_per_mi() * g.length_mi).max(0.0);
+        self.dispatch_times.remove(&g.id);
+        self.spent += g.cost;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(pes: usize, mips: f64, price: f64) -> BrokerResource {
+        BrokerResource::new(ResourceInfo {
+            id: 0,
+            name: "R".into(),
+            num_pe: pes,
+            mips_per_pe: mips,
+            cost_per_pe_time: price,
+            time_shared: true,
+            time_zone: 0.0,
+        })
+    }
+
+    #[test]
+    fn turnaround_rate_estimation() {
+        let mut v = view(1, 100.0, 1.0); // dispatch limit = 2, 100 MIPS
+        assert_eq!(v.rate_estimate(10.0), 100.0, "optimistic before data");
+        let mut g0 = Gridlet::new(0, 500.0, 0, 0);
+        g0.cost = 5.0;
+        let mut g1 = Gridlet::new(1, 500.0, 0, 0);
+        g1.cost = 5.0;
+        v.on_dispatched(&g0, 0.0);
+        v.on_dispatched(&g1, 0.0);
+        // Both share the PE: each returns after 10 t → per-slot 50 MI/t,
+        // rate = 2 slots × 50 = 100 = full capacity (unbiased).
+        v.on_completed(&g0, 10.0);
+        assert_eq!(v.rate_estimate(10.0), 100.0);
+        v.on_completed(&g1, 10.0);
+        assert_eq!(v.rate_estimate(11.0), 100.0);
+        assert_eq!(v.completed, 2);
+        assert_eq!(v.spent, 10.0);
+        assert_eq!(v.committed_cost, 0.0);
+    }
+
+    #[test]
+    fn competition_inflates_turnaround_and_lowers_rate() {
+        let mut v = view(1, 100.0, 1.0);
+        let g = Gridlet::new(0, 500.0, 0, 0);
+        v.on_dispatched(&g, 0.0);
+        // Another user's load makes our job take 4× longer than dedicated.
+        v.on_completed(&g, 20.0); // per-slot 25 → rate 50 < capacity 100
+        assert_eq!(v.rate_estimate(20.0), 50.0);
+        // Estimate is capped at aggregate MIPS even for lone fast jobs.
+        let g2 = Gridlet::new(2, 500.0, 0, 0);
+        v.on_dispatched(&g2, 100.0);
+        v.on_completed(&g2, 101.0); // implied 500/slot, EWMA pulls up
+        assert!(v.rate_estimate(101.0) <= 100.0);
+    }
+
+    #[test]
+    fn committed_cost_reserved_and_released() {
+        let mut v = view(4, 100.0, 1.0);
+        let g = Gridlet::new(0, 500.0, 0, 0);
+        v.on_dispatched(&g, 1.0);
+        assert!((v.committed_cost - 5.0).abs() < 1e-12); // 500 MI × 0.01 G$/MI
+        assert_eq!(v.first_dispatch, Some(1.0));
+        v.on_returned_unfinished(&g);
+        assert_eq!(v.committed_cost, 0.0);
+    }
+
+    #[test]
+    fn dispatch_limit_scales_with_pes() {
+        let v = view(4, 100.0, 1.0);
+        assert_eq!(v.dispatch_limit(), 8);
+    }
+
+    #[test]
+    fn committed_counts_both() {
+        let mut v = view(1, 100.0, 1.0);
+        v.assigned.push_back(Gridlet::new(0, 1.0, 0, 0));
+        v.outstanding = 2;
+        assert_eq!(v.committed(), 3);
+    }
+
+    #[test]
+    fn unfinished_return_keeps_completion_count() {
+        let mut v = view(1, 100.0, 1.0);
+        v.outstanding = 1;
+        let mut g = Gridlet::new(0, 100.0, 0, 0);
+        g.cost = 1.5; // partial charge for cancelled work
+        v.on_returned_unfinished(&g);
+        assert_eq!(v.completed, 0);
+        assert_eq!(v.outstanding, 0);
+        assert_eq!(v.spent, 1.5);
+    }
+}

@@ -1,0 +1,137 @@
+//! Time-series trace of broker activity — the raw series behind the paper's
+//! Figures 28–32 (Gridlets completed / budget spent / Gridlets committed per
+//! resource over time).
+
+/// One sampled point of broker state for one resource.
+#[derive(Debug, Clone)]
+pub struct TracePoint {
+    /// Simulation time of the sample.
+    pub time: f64,
+    /// Resource name (Table 2 ids: "R0".."R10").
+    pub resource: String,
+    /// Gridlets completed on this resource so far (Figs 28, 30).
+    pub completed: usize,
+    /// Gridlets currently committed (assigned + dispatched, not returned) —
+    /// the paper's "Gridlets committed" series (Figs 31–32).
+    pub committed: usize,
+    /// Budget spent on this resource so far in G$ (Fig 29).
+    pub spent: f64,
+}
+
+/// Trace recorder with change-detection and uniform down-sampling to bound
+/// memory (and hot-loop cost: the broker ticks far more often than its
+/// per-resource state changes).
+#[derive(Debug, Clone, Default)]
+pub struct TraceRecorder {
+    points: Vec<TracePoint>,
+    /// Minimum spacing between samples of the same resource (0 = every
+    /// *change*).
+    min_interval: f64,
+    /// Per-resource (last-sample-time, completed, committed, spent).
+    last_sample: std::collections::HashMap<String, (f64, usize, usize, f64)>,
+}
+
+impl TraceRecorder {
+    pub fn new(min_interval: f64) -> TraceRecorder {
+        TraceRecorder {
+            points: Vec::new(),
+            min_interval,
+            last_sample: std::collections::HashMap::new(),
+        }
+    }
+
+    pub fn record(&mut self, point: TracePoint) {
+        self.record_fields(&point.resource, point.time, point.completed, point.committed, point.spent);
+    }
+
+    /// Allocation-free fast path: the hot loop passes borrowed fields and a
+    /// `TracePoint` (with its `String`) is only built when a sample is
+    /// actually kept.
+    pub fn record_fields(
+        &mut self,
+        resource: &str,
+        time: f64,
+        completed: usize,
+        committed: usize,
+        spent: f64,
+    ) {
+        if let Some(&(last_t, c0, k0, s0)) = self.last_sample.get(resource) {
+            // Unchanged state never produces a new point; changed state is
+            // further rate-limited by `min_interval`.
+            if completed == c0 && committed == k0 && (spent - s0).abs() < 1e-12 {
+                return;
+            }
+            if time - last_t < self.min_interval {
+                return;
+            }
+        }
+        self.last_sample.insert(resource.to_string(), (time, completed, committed, spent));
+        self.points.push(TracePoint {
+            time,
+            resource: resource.to_string(),
+            completed,
+            committed,
+            spent,
+        });
+    }
+
+    /// Force-record (final state) regardless of the sampling interval.
+    pub fn record_final(&mut self, point: TracePoint) {
+        self.points.push(point);
+    }
+
+    pub fn points(&self) -> &[TracePoint] {
+        &self.points
+    }
+
+    pub fn into_points(self) -> Vec<TracePoint> {
+        self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(time: f64, res: &str, completed: usize) -> TracePoint {
+        TracePoint { time, resource: res.into(), completed, committed: 0, spent: 0.0 }
+    }
+
+    #[test]
+    fn downsamples_per_resource() {
+        let mut t = TraceRecorder::new(10.0);
+        t.record(pt(0.0, "R0", 0));
+        t.record(pt(5.0, "R0", 1)); // dropped: changed but too close
+        t.record(pt(5.0, "R1", 0)); // kept: different resource
+        t.record(pt(12.0, "R0", 2)); // kept
+        assert_eq!(t.points().len(), 3);
+    }
+
+    #[test]
+    fn unchanged_state_not_recorded() {
+        let mut t = TraceRecorder::new(0.0);
+        t.record(pt(0.0, "R0", 0));
+        for i in 1..50 {
+            t.record(pt(i as f64, "R0", 0)); // no change → dropped
+        }
+        t.record(pt(50.0, "R0", 3));
+        assert_eq!(t.points().len(), 2);
+    }
+
+    #[test]
+    fn final_always_kept() {
+        let mut t = TraceRecorder::new(100.0);
+        t.record(pt(0.0, "R0", 0));
+        t.record_final(pt(1.0, "R0", 0));
+        assert_eq!(t.points().len(), 2);
+    }
+
+    #[test]
+    fn zero_interval_keeps_every_change() {
+        let mut t = TraceRecorder::new(0.0);
+        for i in 0..50 {
+            t.record(pt(i as f64 * 0.001, "R0", i));
+        }
+        assert_eq!(t.points().len(), 50);
+    }
+}

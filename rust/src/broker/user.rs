@@ -1,0 +1,122 @@
+//! `UserEntity` (paper §4.2.1): owns an experiment, hands it to its private
+//! broker, records statistics when the results come back, and notifies the
+//! shutdown entity when it has no more processing requirements.
+
+use super::experiment::{Experiment, ExperimentResult, ExperimentSpec};
+use crate::gridsim::messages::Msg;
+use crate::gridsim::random::GridSimRandom;
+use crate::gridsim::statistics::StatRecord;
+use crate::gridsim::tags;
+use crate::des::{Ctx, Entity, EntityId, Event};
+
+/// A grid user with one experiment.
+pub struct UserEntity {
+    name: String,
+    broker: EntityId,
+    shutdown: EntityId,
+    stats: Option<EntityId>,
+    spec: ExperimentSpec,
+    seed: u64,
+    /// Activity model: delay before the experiment is submitted (paper:
+    /// users differ in activity rate / time zone).
+    submit_delay: f64,
+    /// Outcome, for post-run inspection.
+    pub result: Option<ExperimentResult>,
+}
+
+impl UserEntity {
+    pub fn new(
+        name: impl Into<String>,
+        broker: EntityId,
+        shutdown: EntityId,
+        spec: ExperimentSpec,
+        seed: u64,
+    ) -> UserEntity {
+        UserEntity {
+            name: name.into(),
+            broker,
+            shutdown,
+            stats: None,
+            spec,
+            seed,
+            submit_delay: 0.0,
+            result: None,
+        }
+    }
+
+    pub fn with_stats(mut self, stats: EntityId) -> UserEntity {
+        self.stats = Some(stats);
+        self
+    }
+
+    pub fn with_submit_delay(mut self, delay: f64) -> UserEntity {
+        assert!(delay >= 0.0);
+        self.submit_delay = delay;
+        self
+    }
+}
+
+impl Entity<Msg> for UserEntity {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+        // Materialize the application (seeded per user: "seed*997*(1+i)+1"
+        // in the paper's Fig 15 — any per-user derivation works; ours is the
+        // user seed itself, derived by the scenario builder).
+        let mut rand = GridSimRandom::new(self.seed);
+        let gridlets = self.spec.materialize(&mut rand);
+        let experiment = Experiment {
+            gridlets,
+            deadline: self.spec.deadline,
+            budget: self.spec.budget,
+            optimization: self.spec.optimization,
+        };
+        let msg = Msg::Experiment(Box::new(experiment));
+        let bytes = msg.wire_bytes(true);
+        if self.submit_delay > 0.0 {
+            ctx.send_delayed(self.broker, self.submit_delay, tags::EXPERIMENT, Some(msg));
+        } else {
+            ctx.send(self.broker, tags::EXPERIMENT, Some(msg), bytes);
+        }
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        match ev.tag {
+            tags::EXPERIMENT_DONE => {
+                let Msg::ExperimentResult(result) = ev.take_data() else {
+                    panic!("EXPERIMENT_DONE without payload")
+                };
+                // Record the paper's report-writer categories (Fig 15).
+                if let Some(stats) = self.stats {
+                    for (cat, value) in [
+                        ("USER.TimeUtilization", result.time_utilization()),
+                        ("USER.GridletCompletionFactor", result.completion_factor()),
+                        ("USER.BudgetUtilization", result.budget_utilization()),
+                    ] {
+                        let rec = StatRecord {
+                            time: ctx.now(),
+                            category: format!("{}.{cat}", self.name),
+                            label: self.name.clone(),
+                            value,
+                        };
+                        ctx.send(stats, tags::RECORD_STATISTICS, Some(Msg::Stat(rec)), 48);
+                    }
+                }
+                self.result = Some(*result);
+                // No more processing requirements → tell the shutdown entity.
+                ctx.send(self.shutdown, tags::END_OF_SIMULATION, None, 16);
+            }
+            tags::INSIGNIFICANT => {}
+            other => panic!("user {} got unexpected tag {other}", self.name),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}

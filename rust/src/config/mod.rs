@@ -1,0 +1,5 @@
+//! Scenario configuration: the built-in WWG testbed of Table 2 and a JSON
+//! scenario loader for user-defined grids.
+
+pub mod scenario_file;
+pub mod testbed;

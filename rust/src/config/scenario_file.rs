@@ -1,0 +1,208 @@
+//! JSON scenario loader: a complete grid + users description in one file.
+//!
+//! ```json
+//! {
+//!   "seed": 42,
+//!   "advisor": "native",
+//!   "network": {"type": "instantaneous"},
+//!   "resources": [
+//!     {"name": "R0", "machines": 1, "pes_per_machine": 4, "mips": 515,
+//!      "policy": "time", "price": 8.0, "time_zone": 10.0},
+//!     {"name": "R7", "machines": 16, "pes_per_machine": 1, "mips": 410,
+//!      "policy": "space-fcfs", "price": 4.0}
+//!   ],
+//!   "users": [
+//!     {"gridlets": 200, "length_mi": 10000, "variation": 0.1,
+//!      "deadline": 3100, "budget": 22000, "optimization": "cost"}
+//!   ]
+//! }
+//! ```
+//!
+//! `"testbed": "wwg"` can replace the `resources` array to pull in Table 2.
+
+use super::testbed::wwg_testbed;
+use crate::broker::{ExperimentSpec, Optimization};
+use crate::gridsim::{AllocPolicy, SpacePolicy};
+use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario};
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parse a scenario from JSON text.
+pub fn parse_scenario(text: &str) -> Result<Scenario> {
+    let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    let seed = root.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+
+    let resources = match root.get("testbed").and_then(Value::as_str) {
+        Some("wwg") => wwg_testbed(),
+        Some(other) => bail!("unknown testbed {other:?} (only \"wwg\" is built in)"),
+        None => {
+            let arr = root
+                .get("resources")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("missing \"resources\" array (or \"testbed\": \"wwg\")"))?;
+            arr.iter().map(parse_resource).collect::<Result<Vec<_>>>()?
+        }
+    };
+
+    let users = root
+        .get("users")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("missing \"users\" array"))?
+        .iter()
+        .map(parse_user)
+        .collect::<Result<Vec<_>>>()?;
+
+    let advisor = match root.get("advisor").and_then(Value::as_str).unwrap_or("native") {
+        "native" => AdvisorKind::Native,
+        "xla" => AdvisorKind::Xla,
+        other => bail!("unknown advisor {other:?} (native|xla)"),
+    };
+
+    let network = match root.get("network") {
+        None => NetworkSpec::Instantaneous,
+        Some(net) => match net.get("type").and_then(Value::as_str) {
+            Some("instantaneous") | None => NetworkSpec::Instantaneous,
+            Some("baud") => NetworkSpec::Baud {
+                default_rate: net
+                    .get("rate")
+                    .and_then(Value::as_f64)
+                    .unwrap_or(crate::gridsim::tags::DEFAULT_BAUD_RATE),
+                latency: net.get("latency").and_then(Value::as_f64).unwrap_or(0.0),
+            },
+            Some(other) => bail!("unknown network type {other:?}"),
+        },
+    };
+
+    let mut builder = Scenario::builder()
+        .resources(resources)
+        .seed(seed)
+        .advisor(advisor)
+        .network(network);
+    for u in users {
+        builder = builder.user(u);
+    }
+    if let Some(t) = root.get("max_time").and_then(Value::as_f64) {
+        builder = builder.max_time(t);
+    }
+    Ok(builder.build())
+}
+
+fn parse_resource(v: &Value) -> Result<ResourceSpec> {
+    let name = v.req_str("name").context("resource")?.to_string();
+    let policy = match v.get("policy").and_then(Value::as_str).unwrap_or("time") {
+        "time" | "time-shared" => AllocPolicy::TimeShared,
+        "space-fcfs" | "space" => AllocPolicy::SpaceShared(SpacePolicy::Fcfs),
+        "space-sjf" => AllocPolicy::SpaceShared(SpacePolicy::Sjf),
+        "space-backfill" => AllocPolicy::SpaceShared(SpacePolicy::BackfillEasy),
+        other => bail!("resource {name}: unknown policy {other:?}"),
+    };
+    Ok(ResourceSpec {
+        arch: v.get("arch").and_then(Value::as_str).unwrap_or("generic").to_string(),
+        os: v.get("os").and_then(Value::as_str).unwrap_or("linux").to_string(),
+        machines: v.get("machines").and_then(Value::as_usize).unwrap_or(1),
+        pes_per_machine: v
+            .get("pes_per_machine")
+            .and_then(Value::as_usize)
+            .or_else(|| v.get("pes").and_then(Value::as_usize))
+            .unwrap_or(1),
+        mips_per_pe: v.req_f64("mips").with_context(|| format!("resource {name}"))?,
+        policy,
+        price: v.req_f64("price").with_context(|| format!("resource {name}"))?,
+        time_zone: v.get("time_zone").and_then(Value::as_f64).unwrap_or(0.0),
+        calendar: None,
+        name,
+    })
+}
+
+fn parse_user(v: &Value) -> Result<ExperimentSpec> {
+    let mut spec = ExperimentSpec::task_farm(
+        v.get("gridlets").and_then(Value::as_usize).unwrap_or(200),
+        v.get("length_mi").and_then(Value::as_f64).unwrap_or(10_000.0),
+        v.get("variation").and_then(Value::as_f64).unwrap_or(0.10),
+    );
+    if let Some(d) = v.get("deadline").and_then(Value::as_f64) {
+        spec = spec.deadline(d);
+    } else if let Some(f) = v.get("d_factor").and_then(Value::as_f64) {
+        spec = spec.d_factor(f);
+    }
+    if let Some(b) = v.get("budget").and_then(Value::as_f64) {
+        spec = spec.budget(b);
+    } else if let Some(f) = v.get("b_factor").and_then(Value::as_f64) {
+        spec = spec.b_factor(f);
+    }
+    if let Some(o) = v.get("optimization").and_then(Value::as_str) {
+        spec = spec.optimization(
+            Optimization::parse(o).ok_or_else(|| anyhow!("unknown optimization {o:?}"))?,
+        );
+    }
+    if let Some(n) = v.get("input_bytes").and_then(Value::as_f64) {
+        spec.input_bytes = n as u64;
+    }
+    if let Some(n) = v.get("output_bytes").and_then(Value::as_f64) {
+        spec.output_bytes = n as u64;
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_scenario() {
+        let text = r#"{
+            "seed": 7,
+            "advisor": "native",
+            "network": {"type": "baud", "rate": 19200, "latency": 0.5},
+            "resources": [
+                {"name": "A", "pes": 4, "mips": 500, "policy": "time", "price": 2.0},
+                {"name": "B", "machines": 8, "pes_per_machine": 1, "mips": 400,
+                 "policy": "space-backfill", "price": 1.0}
+            ],
+            "users": [
+                {"gridlets": 50, "length_mi": 5000, "deadline": 1000,
+                 "budget": 9000, "optimization": "cost-time"}
+            ]
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.resources.len(), 2);
+        assert_eq!(s.resources[1].machines, 8);
+        assert!(!s.resources[1].policy.is_time_shared());
+        assert_eq!(s.users.len(), 1);
+        assert_eq!(s.users[0].num_gridlets, 50);
+        assert_eq!(s.users[0].optimization, Optimization::CostTime);
+        assert_eq!(
+            s.network,
+            NetworkSpec::Baud { default_rate: 19200.0, latency: 0.5 }
+        );
+    }
+
+    #[test]
+    fn wwg_testbed_shortcut() {
+        let text = r#"{"testbed": "wwg", "users": [{"gridlets": 10}]}"#;
+        let s = parse_scenario(text).unwrap();
+        assert_eq!(s.resources.len(), 11);
+    }
+
+    #[test]
+    fn d_b_factors() {
+        let text = r#"{"testbed": "wwg",
+            "users": [{"gridlets": 10, "d_factor": 0.5, "b_factor": 0.25}]}"#;
+        let s = parse_scenario(text).unwrap();
+        assert_eq!(s.users[0].deadline, crate::broker::DeadlineSpec::Factor(0.5));
+        assert_eq!(s.users[0].budget, crate::broker::BudgetSpec::Factor(0.25));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_scenario("{").is_err());
+        assert!(parse_scenario(r#"{"users": []}"#).is_err());
+        assert!(parse_scenario(r#"{"testbed": "unknown", "users": [{}]}"#).is_err());
+        assert!(parse_scenario(
+            r#"{"resources": [{"name": "A", "mips": 1, "price": 1, "policy": "bogus"}],
+                "users": [{}]}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! The simulated World-Wide Grid testbed — paper Table 2, verbatim:
+//! 11 resources modeled after real WWG hosts with SPEC CPU (INT) 2000
+//! ratings as MIPS and G$ prices per PE-time-unit.
+
+use crate::gridsim::{AllocPolicy, SpacePolicy};
+use crate::scenario::ResourceSpec;
+
+/// One Table 2 row.
+struct Row {
+    name: &'static str,
+    arch: &'static str,
+    os: &'static str,
+    pes: usize,
+    mips: f64,
+    time_shared: bool,
+    price: f64,
+    /// Time zone of the real host's location (hours from UTC; drives the
+    /// local-load calendar when enabled).
+    time_zone: f64,
+}
+
+const ROWS: &[Row] = &[
+    Row { name: "R0", arch: "Compaq AlphaServer", os: "OSF1", pes: 4, mips: 515.0, time_shared: true, price: 8.0, time_zone: 10.0 },   // VPAC Melbourne
+    Row { name: "R1", arch: "Sun Ultra", os: "Solaris", pes: 4, mips: 377.0, time_shared: true, price: 4.0, time_zone: 9.0 },          // AIST Tokyo
+    Row { name: "R2", arch: "Sun Ultra", os: "Solaris", pes: 4, mips: 377.0, time_shared: true, price: 3.0, time_zone: 9.0 },          // AIST Tokyo
+    Row { name: "R3", arch: "Sun Ultra", os: "Solaris", pes: 2, mips: 377.0, time_shared: true, price: 3.0, time_zone: 9.0 },          // AIST Tokyo
+    Row { name: "R4", arch: "Intel Pentium/VC820", os: "Linux", pes: 2, mips: 380.0, time_shared: true, price: 2.0, time_zone: 1.0 },  // CNR Pisa
+    Row { name: "R5", arch: "SGI Origin 3200", os: "IRIX", pes: 6, mips: 410.0, time_shared: true, price: 5.0, time_zone: 1.0 },       // ZIB Berlin
+    Row { name: "R6", arch: "SGI Origin 3200", os: "IRIX", pes: 16, mips: 410.0, time_shared: true, price: 5.0, time_zone: 1.0 },      // ZIB Berlin
+    Row { name: "R7", arch: "SGI Origin 3200", os: "IRIX", pes: 16, mips: 410.0, time_shared: false, price: 4.0, time_zone: 1.0 },     // Charles U. Prague
+    Row { name: "R8", arch: "Intel Pentium/VC820", os: "Linux", pes: 2, mips: 380.0, time_shared: true, price: 1.0, time_zone: 0.0 },  // Portsmouth UK
+    Row { name: "R9", arch: "SGI Origin 3200", os: "IRIX", pes: 4, mips: 410.0, time_shared: true, price: 6.0, time_zone: 0.0 },       // Manchester UK
+    Row { name: "R10", arch: "Sun Ultra", os: "Solaris", pes: 8, mips: 377.0, time_shared: true, price: 3.0, time_zone: -6.0 },        // ANL Chicago
+];
+
+/// The 11-resource WWG testbed of Table 2. The single space-shared resource
+/// (R7, the Prague Origin 3200 behind a queueing system) is modeled as a
+/// cluster of uniprocessor nodes under FCFS.
+pub fn wwg_testbed() -> Vec<ResourceSpec> {
+    ROWS.iter()
+        .map(|row| {
+            let (machines, pes_per_machine, policy) = if row.time_shared {
+                (1, row.pes, AllocPolicy::TimeShared)
+            } else {
+                (row.pes, 1, AllocPolicy::SpaceShared(SpacePolicy::Fcfs))
+            };
+            ResourceSpec {
+                name: row.name.into(),
+                arch: row.arch.into(),
+                os: row.os.into(),
+                machines,
+                pes_per_machine,
+                mips_per_pe: row.mips,
+                policy,
+                price: row.price,
+                time_zone: row.time_zone,
+                calendar: None,
+            }
+        })
+        .collect()
+}
+
+/// Table 2's "MIPS per G$" column, for the `table2` report.
+pub fn mips_per_dollar(spec: &ResourceSpec) -> f64 {
+    spec.mips_per_pe / spec.price
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_resources() {
+        let tb = wwg_testbed();
+        assert_eq!(tb.len(), 11);
+    }
+
+    #[test]
+    fn table2_mips_per_dollar_column() {
+        // Spot-check the published MIPS/G$ values.
+        let tb = wwg_testbed();
+        let by_name = |n: &str| tb.iter().find(|r| r.name == n).unwrap();
+        assert!((mips_per_dollar(by_name("R0")) - 64.375).abs() < 0.01); // paper: 64.37
+        assert!((mips_per_dollar(by_name("R1")) - 94.25).abs() < 0.01);
+        assert!((mips_per_dollar(by_name("R2")) - 125.66).abs() < 0.01);
+        assert!((mips_per_dollar(by_name("R4")) - 190.0).abs() < 0.01);
+        assert!((mips_per_dollar(by_name("R7")) - 102.5).abs() < 0.01);
+        assert!((mips_per_dollar(by_name("R8")) - 380.0).abs() < 0.01);
+        assert!((mips_per_dollar(by_name("R9")) - 68.33).abs() < 0.01);
+    }
+
+    #[test]
+    fn r8_is_cheapest_per_mi() {
+        let tb = wwg_testbed();
+        let r8 = tb.iter().find(|r| r.name == "R8").unwrap();
+        let c8 = r8.price / r8.mips_per_pe;
+        for r in &tb {
+            let c = r.price / r.mips_per_pe;
+            assert!(c >= c8, "{} beats R8", r.name);
+        }
+    }
+
+    #[test]
+    fn only_r7_space_shared() {
+        let tb = wwg_testbed();
+        for r in &tb {
+            let expect_space = r.name == "R7";
+            assert_eq!(!r.policy.is_time_shared(), expect_space, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn total_pe_count_matches_table() {
+        // 4+4+4+2+2+6+16+16+2+4+8 = 68 PEs.
+        let tb = wwg_testbed();
+        let total: usize = tb.iter().map(|r| r.num_pe()).sum();
+        assert_eq!(total, 68);
+    }
+}

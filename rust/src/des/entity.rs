@@ -1,0 +1,142 @@
+//! Entities and the context handed to them on every event.
+
+use super::event::{Event, EventKind};
+use super::queue::EventQueue;
+use std::any::Any;
+
+pub use super::event::EntityId;
+
+/// Network-delay model consulted on every [`Ctx::send`].
+///
+/// The paper routes every message through per-entity `Input`/`Output`
+/// entities that add a transfer delay of `bytes / baud_rate` (plus queueing).
+/// We preserve the observable delay semantics by asking this model for the
+/// delivery delay of each send; `gridsim::network` implements the paper's
+/// baud-rate model on top of this hook.
+pub trait LinkModel {
+    /// Delay (simulation time units) for `bytes` from `src` to `dst`.
+    fn delay(&self, src: EntityId, dst: EntityId, bytes: u64) -> f64;
+}
+
+/// Zero-delay network (direct delivery).
+pub struct NoDelay;
+
+impl LinkModel for NoDelay {
+    fn delay(&self, _src: EntityId, _dst: EntityId, _bytes: u64) -> f64 {
+        0.0
+    }
+}
+
+/// Per-event context: the only capability surface an entity has during
+/// `on_event`. It can read the clock, send events (through the network
+/// model), schedule internal events on itself, and request simulation stop.
+pub struct Ctx<'a, M> {
+    pub(crate) now: f64,
+    pub(crate) me: EntityId,
+    pub(crate) queue: &'a mut EventQueue<M>,
+    pub(crate) link: &'a dyn LinkModel,
+    pub(crate) stop_requested: &'a mut bool,
+    pub(crate) names: &'a [String],
+}
+
+impl<'a, M> Ctx<'a, M> {
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Id of the entity currently handling an event.
+    pub fn me(&self) -> EntityId {
+        self.me
+    }
+
+    /// Name of an entity (diagnostics).
+    pub fn name_of(&self, id: EntityId) -> &str {
+        &self.names[id]
+    }
+
+    /// Number of entities in the simulation.
+    pub fn entity_count(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Send an event through the simulated network: delivery is delayed by
+    /// the link model according to the payload size in bytes.
+    pub fn send(&mut self, dst: EntityId, tag: i64, data: Option<M>, bytes: u64) -> u64 {
+        let delay = self.link.delay(self.me, dst, bytes);
+        debug_assert!(delay >= 0.0);
+        self.push(dst, delay, tag, data, EventKind::External)
+    }
+
+    /// Send an event with an explicit delay, bypassing the network model
+    /// (control-plane messages; the paper's `sim_schedule` with delay).
+    pub fn send_delayed(&mut self, dst: EntityId, delay: f64, tag: i64, data: Option<M>) -> u64 {
+        self.push(dst, delay, tag, data, EventKind::External)
+    }
+
+    /// Schedule an *internal* event on the current entity after `delay`.
+    ///
+    /// Returns the event's unique sequence number. Entities implementing the
+    /// paper's stale-interrupt rule (Figs 7/10: "if the event is internal and
+    /// its tag value is the same as the recently scheduled event") remember
+    /// this id and compare it against [`Event::seq`] on receipt.
+    pub fn schedule_self(&mut self, delay: f64, tag: i64, data: Option<M>) -> u64 {
+        self.push(self.me, delay, tag, data, EventKind::Internal)
+    }
+
+    /// Request an orderly end of the simulation: the event loop stops after
+    /// the current event (the paper's `END_OF_SIMULATION` broadcast).
+    pub fn stop(&mut self) {
+        *self.stop_requested = true;
+    }
+
+    fn push(&mut self, dst: EntityId, delay: f64, tag: i64, data: Option<M>, kind: EventKind) -> u64 {
+        assert!(dst < self.names.len(), "send to unknown entity id {dst}");
+        self.queue.push(Event {
+            time: self.now + delay,
+            seq: 0, // assigned by the queue
+            src: self.me,
+            dst,
+            tag,
+            kind,
+            data,
+        })
+    }
+}
+
+/// Test support: build a [`Ctx`] outside the kernel so entity handlers can be
+/// unit-tested in isolation (zero-delay link model).
+pub fn test_ctx<'a, M>(
+    now: f64,
+    me: EntityId,
+    queue: &'a mut EventQueue<M>,
+    stop: &'a mut bool,
+    names: &'a [String],
+) -> Ctx<'a, M> {
+    static NO_DELAY: NoDelay = NoDelay;
+    Ctx { now, me, queue, link: &NO_DELAY, stop_requested: stop, names }
+}
+
+/// A simulation entity. The `on_event` handler is the event-model equivalent
+/// of SimJava's `body()` loop: it is invoked once per delivered event and may
+/// mutate entity state, send events, and schedule internal interrupts.
+pub trait Entity<M>: Any {
+    /// Unique entity name (the paper identifies entities by name).
+    fn name(&self) -> &str;
+
+    /// Called once at simulation start (time 0), in entity-id order. This is
+    /// where resources register with the information service, users kick off
+    /// experiments, etc.
+    fn on_start(&mut self, _ctx: &mut Ctx<M>) {}
+
+    /// Handle one delivered event.
+    fn on_event(&mut self, ctx: &mut Ctx<M>, ev: Event<M>);
+
+    /// Called once after the event loop terminates (reporting hooks).
+    fn on_end(&mut self, _ctx: &mut Ctx<M>) {}
+
+    /// Downcasting support so callers can retrieve concrete entity state
+    /// after a run (e.g. a user's completed-gridlet statistics).
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}

@@ -1,0 +1,29 @@
+//! Deterministic discrete-event simulation kernel.
+//!
+//! This is the substrate the paper borrows from SimJava [1]: a future-event
+//! queue ordered by timestamp, entities that exchange timestamped events, and
+//! a simulation clock that jumps from event to event. SimJava realises
+//! entities as Java threads blocked in `sim_wait()`; the observable semantics
+//! are just "deliver events in (time, insertion) order to a handler that may
+//! schedule more events". We implement exactly those semantics with an
+//! explicit event loop and an [`Entity::on_event`] trait method — fully
+//! deterministic (no thread interleavings), allocation-light, and fast.
+//!
+//! The mapping from SimJava primitives:
+//!
+//! | SimJava                   | here                                   |
+//! |---------------------------|----------------------------------------|
+//! | `sim_schedule(dst, d, t)` | [`Ctx::send_delayed`] / [`Ctx::send`]  |
+//! | `sim_hold(d)`             | [`Ctx::schedule_self`] + handler state |
+//! | `sim_wait(ev)`            | returning from `on_event`              |
+//! | `Sim_system` future queue | [`queue::EventQueue`] (binary heap)    |
+
+pub mod entity;
+pub mod event;
+pub mod queue;
+pub mod sim;
+
+pub use entity::{Ctx, Entity, EntityId};
+pub use event::{Event, EventKind};
+pub use queue::EventQueue;
+pub use sim::{SimConfig, Simulation};

@@ -1,0 +1,163 @@
+//! The future-event queue: a binary min-heap ordered by `(time, seq)`.
+//!
+//! SimJava's `Sim_system` keeps a "timestamp ordered queue of future events";
+//! ties are broken by insertion order so simultaneous events are FIFO. We get
+//! the same semantics from `(time, seq)` lexicographic ordering where `seq`
+//! is assigned at insertion.
+
+use super::event::Event;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct HeapEntry<M>(Event<M>);
+
+impl<M> PartialEq for HeapEntry<M> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.time == other.0.time && self.0.seq == other.0.seq
+    }
+}
+impl<M> Eq for HeapEntry<M> {}
+
+impl<M> PartialOrd for HeapEntry<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<M> Ord for HeapEntry<M> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want the *earliest* event on
+        // top. NaN times are rejected at insertion so total_cmp is safe.
+        other
+            .0
+            .time
+            .total_cmp(&self.0.time)
+            .then_with(|| other.0.seq.cmp(&self.0.seq))
+    }
+}
+
+/// Future-event queue.
+pub struct EventQueue<M> {
+    heap: BinaryHeap<HeapEntry<M>>,
+    next_seq: u64,
+}
+
+impl<M> Default for EventQueue<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M> EventQueue<M> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Insert an event; assigns its sequence number. Panics on NaN or
+    /// negative-time events — those are always bugs in the caller.
+    pub fn push(&mut self, mut ev: Event<M>) -> u64 {
+        assert!(ev.time.is_finite(), "event time must be finite, got {}", ev.time);
+        assert!(ev.time >= 0.0, "event time must be >= 0, got {}", ev.time);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        ev.seq = seq;
+        self.heap.push(HeapEntry(ev));
+        seq
+    }
+
+    /// Pop the earliest event (smallest `(time, seq)`).
+    pub fn pop(&mut self) -> Option<Event<M>> {
+        self.heap.pop().map(|e| e.0)
+    }
+
+    /// Peek at the earliest event's timestamp.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::event::EventKind;
+
+    fn ev(time: f64, tag: i64) -> Event<u32> {
+        Event { time, seq: 0, src: 0, dst: 0, tag, kind: EventKind::External, data: None }
+    }
+
+    #[test]
+    fn orders_by_time() {
+        let mut q = EventQueue::new();
+        q.push(ev(3.0, 1));
+        q.push(ev(1.0, 2));
+        q.push(ev(2.0, 3));
+        assert_eq!(q.pop().unwrap().tag, 2);
+        assert_eq!(q.pop().unwrap().tag, 3);
+        assert_eq!(q.pop().unwrap().tag, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        for tag in 0..100 {
+            q.push(ev(5.0, tag));
+        }
+        for tag in 0..100 {
+            assert_eq!(q.pop().unwrap().tag, tag, "simultaneous events must be FIFO");
+        }
+    }
+
+    #[test]
+    fn seq_assigned_monotonically() {
+        let mut q = EventQueue::new();
+        let a = q.push(ev(1.0, 0));
+        let b = q.push(ev(0.5, 1));
+        assert!(b > a);
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert!(q.peek_time().is_none());
+        q.push(ev(9.0, 0));
+        q.push(ev(4.0, 1));
+        assert_eq!(q.peek_time(), Some(4.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_nan() {
+        let mut q = EventQueue::new();
+        q.push(ev(f64::NAN, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = ">= 0")]
+    fn rejects_negative() {
+        let mut q = EventQueue::new();
+        q.push(ev(-1.0, 0));
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(10.0, 10));
+        q.push(ev(1.0, 1));
+        assert_eq!(q.pop().unwrap().tag, 1);
+        q.push(ev(5.0, 5));
+        q.push(ev(2.0, 2));
+        assert_eq!(q.pop().unwrap().tag, 2);
+        assert_eq!(q.pop().unwrap().tag, 5);
+        assert_eq!(q.pop().unwrap().tag, 10);
+    }
+}

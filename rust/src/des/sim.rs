@@ -1,0 +1,337 @@
+//! The simulation kernel: entity table + event loop.
+
+use super::entity::{Ctx, Entity, LinkModel, NoDelay};
+use super::event::{Event, EntityId};
+use super::queue::EventQueue;
+use std::collections::HashMap;
+
+/// Kernel limits / options.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Hard stop: no event at `time > max_time` is dispatched. `f64::INFINITY`
+    /// disables the limit.
+    pub max_time: f64,
+    /// Hard stop on number of dispatched events (runaway protection).
+    pub max_events: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { max_time: f64::INFINITY, max_events: u64::MAX }
+    }
+}
+
+/// The simulation: owns entities, the future-event queue, the clock and the
+/// network model. Equivalent of SimJava's `Sim_system` plus GridSim's
+/// `GridSim.Init()/Start()` lifecycle.
+pub struct Simulation<M> {
+    entities: Vec<Option<Box<dyn Entity<M>>>>,
+    names: Vec<String>,
+    by_name: HashMap<String, EntityId>,
+    queue: EventQueue<M>,
+    clock: f64,
+    link: Box<dyn LinkModel>,
+    config: SimConfig,
+    events_processed: u64,
+    stopped: bool,
+}
+
+impl<M: 'static> Default for Simulation<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M: 'static> Simulation<M> {
+    pub fn new() -> Self {
+        Simulation {
+            entities: Vec::new(),
+            names: Vec::new(),
+            by_name: HashMap::new(),
+            queue: EventQueue::new(),
+            clock: 0.0,
+            link: Box::new(NoDelay),
+            config: SimConfig::default(),
+            events_processed: 0,
+            stopped: false,
+        }
+    }
+
+    pub fn with_config(config: SimConfig) -> Self {
+        let mut s = Self::new();
+        s.config = config;
+        s
+    }
+
+    /// Install a network-delay model (see `gridsim::network`).
+    pub fn set_link_model(&mut self, link: Box<dyn LinkModel>) {
+        self.link = link;
+    }
+
+    /// Register an entity; returns its id. Names must be unique (the paper
+    /// derives I/O entity names from entity names and requires uniqueness).
+    pub fn add(&mut self, entity: Box<dyn Entity<M>>) -> EntityId {
+        let name = entity.name().to_string();
+        assert!(
+            !self.by_name.contains_key(&name),
+            "duplicate entity name {name:?}"
+        );
+        let id = self.entities.len();
+        self.by_name.insert(name.clone(), id);
+        self.names.push(name);
+        self.entities.push(Some(entity));
+        id
+    }
+
+    /// Look up an entity id by name.
+    pub fn lookup(&self, name: &str) -> Option<EntityId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn entity_count(&self) -> usize {
+        self.entities.len()
+    }
+
+    /// Current simulation clock.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Number of events dispatched so far.
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+
+    /// Borrow a concrete entity back out of the simulation (post-run
+    /// inspection of results).
+    pub fn get<T: 'static>(&self, id: EntityId) -> Option<&T> {
+        self.entities[id].as_ref().and_then(|e| e.as_any().downcast_ref::<T>())
+    }
+
+    pub fn get_mut<T: 'static>(&mut self, id: EntityId) -> Option<&mut T> {
+        self.entities[id].as_mut().and_then(|e| e.as_any_mut().downcast_mut::<T>())
+    }
+
+    /// Run the simulation to completion: `on_start` for every entity in id
+    /// order, then the event loop until the queue drains, an entity calls
+    /// [`Ctx::stop`], or a kernel limit is hit. Returns the final clock.
+    pub fn run(&mut self) -> f64 {
+        // Start phase.
+        for id in 0..self.entities.len() {
+            if self.stopped {
+                break;
+            }
+            self.with_entity(id, |ent, ctx| ent.on_start(ctx));
+        }
+        // Event loop.
+        while !self.stopped && self.events_processed < self.config.max_events {
+            let Some(ev) = self.queue.pop() else { break };
+            if ev.time > self.config.max_time {
+                break;
+            }
+            debug_assert!(
+                ev.time + 1e-9 >= self.clock,
+                "time went backwards: {} -> {}",
+                self.clock,
+                ev.time
+            );
+            self.clock = ev.time.max(self.clock);
+            self.events_processed += 1;
+            let dst = ev.dst;
+            self.dispatch(dst, ev);
+        }
+        // End phase.
+        for id in 0..self.entities.len() {
+            self.with_entity(id, |ent, ctx| ent.on_end(ctx));
+        }
+        self.clock
+    }
+
+    fn dispatch(&mut self, dst: EntityId, ev: Event<M>) {
+        let mut ent = self.entities[dst]
+            .take()
+            .unwrap_or_else(|| panic!("entity {dst} re-entered (event to self mid-dispatch?)"));
+        let mut ctx = Ctx {
+            now: self.clock,
+            me: dst,
+            queue: &mut self.queue,
+            link: self.link.as_ref(),
+            stop_requested: &mut self.stopped,
+            names: &self.names,
+        };
+        ent.on_event(&mut ctx, ev);
+        self.entities[dst] = Some(ent);
+    }
+
+    fn with_entity(&mut self, id: EntityId, f: impl FnOnce(&mut Box<dyn Entity<M>>, &mut Ctx<M>)) {
+        let mut ent = self.entities[id].take().expect("entity missing");
+        let mut ctx = Ctx {
+            now: self.clock,
+            me: id,
+            queue: &mut self.queue,
+            link: self.link.as_ref(),
+            stop_requested: &mut self.stopped,
+            names: &self.names,
+        };
+        f(&mut ent, &mut ctx);
+        self.entities[id] = Some(ent);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::event::EventKind;
+    use std::any::Any;
+
+    /// Ping-pong pair: A sends to B, B replies, N rounds.
+    struct Ping {
+        name: String,
+        peer: EntityId,
+        rounds_left: u32,
+        log: Vec<f64>,
+        start: bool,
+    }
+
+    impl Entity<u32> for Ping {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn on_start(&mut self, ctx: &mut Ctx<u32>) {
+            if self.start {
+                ctx.send_delayed(self.peer, 1.0, 1, Some(self.rounds_left));
+            }
+        }
+        fn on_event(&mut self, ctx: &mut Ctx<u32>, mut ev: Event<u32>) {
+            self.log.push(ctx.now());
+            let n = ev.take_data();
+            if n == 0 {
+                ctx.stop();
+            } else {
+                ctx.send_delayed(self.peer, 1.0, 1, Some(n - 1));
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    fn ping(name: &str, peer: EntityId, rounds: u32, start: bool) -> Box<Ping> {
+        Box::new(Ping { name: name.into(), peer, rounds_left: rounds, log: vec![], start })
+    }
+
+    #[test]
+    fn ping_pong_advances_clock() {
+        let mut sim = Simulation::new();
+        let a = sim.add(ping("a", 1, 6, true));
+        let b = sim.add(ping("b", 0, 0, false));
+        let end = sim.run();
+        assert_eq!(end, 7.0); // 7 hops of delay 1.0
+        let pa = sim.get::<Ping>(a).unwrap();
+        let pb = sim.get::<Ping>(b).unwrap();
+        // b receives at t=1,3,5,7 ; a receives at t=2,4,6
+        assert_eq!(pb.log, vec![1.0, 3.0, 5.0, 7.0]);
+        assert_eq!(pa.log, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let mut sim = Simulation::new();
+        let a = sim.add(ping("alpha", 0, 0, false));
+        assert_eq!(sim.lookup("alpha"), Some(a));
+        assert_eq!(sim.lookup("beta"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate entity name")]
+    fn duplicate_names_rejected() {
+        let mut sim = Simulation::new();
+        sim.add(ping("x", 0, 0, false));
+        sim.add(ping("x", 0, 0, false));
+    }
+
+    #[test]
+    fn max_events_limit() {
+        struct Loopy;
+        impl Entity<u32> for Loopy {
+            fn name(&self) -> &str {
+                "loopy"
+            }
+            fn on_start(&mut self, ctx: &mut Ctx<u32>) {
+                ctx.schedule_self(1.0, 0, None);
+            }
+            fn on_event(&mut self, ctx: &mut Ctx<u32>, _ev: Event<u32>) {
+                ctx.schedule_self(1.0, 0, None);
+            }
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn Any {
+                self
+            }
+        }
+        let mut sim = Simulation::with_config(SimConfig { max_time: f64::INFINITY, max_events: 100 });
+        sim.add(Box::new(Loopy));
+        sim.run();
+        assert_eq!(sim.events_processed(), 100);
+    }
+
+    #[test]
+    fn max_time_limit() {
+        struct Loopy;
+        impl Entity<u32> for Loopy {
+            fn name(&self) -> &str {
+                "loopy"
+            }
+            fn on_start(&mut self, ctx: &mut Ctx<u32>) {
+                ctx.schedule_self(1.0, 0, None);
+            }
+            fn on_event(&mut self, ctx: &mut Ctx<u32>, _ev: Event<u32>) {
+                ctx.schedule_self(1.0, 0, None);
+            }
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn Any {
+                self
+            }
+        }
+        let mut sim = Simulation::with_config(SimConfig { max_time: 50.0, max_events: u64::MAX });
+        sim.add(Box::new(Loopy));
+        let end = sim.run();
+        assert!(end <= 50.0);
+    }
+
+    #[test]
+    fn internal_events_flagged() {
+        struct SelfSched {
+            saw_internal: bool,
+        }
+        impl Entity<u32> for SelfSched {
+            fn name(&self) -> &str {
+                "s"
+            }
+            fn on_start(&mut self, ctx: &mut Ctx<u32>) {
+                ctx.schedule_self(2.0, 9, None);
+            }
+            fn on_event(&mut self, _ctx: &mut Ctx<u32>, ev: Event<u32>) {
+                assert_eq!(ev.kind, EventKind::Internal);
+                assert_eq!(ev.tag, 9);
+                self.saw_internal = true;
+            }
+            fn as_any(&self) -> &dyn Any {
+                self
+            }
+            fn as_any_mut(&mut self) -> &mut dyn Any {
+                self
+            }
+        }
+        let mut sim = Simulation::new();
+        let id = sim.add(Box::new(SelfSched { saw_internal: false }));
+        sim.run();
+        assert!(sim.get::<SelfSched>(id).unwrap().saw_internal);
+    }
+}

@@ -1,0 +1,284 @@
+//! Figure/table regeneration harness — one entry point per table and figure
+//! of the paper's evaluation (§3.5 Table 1; §5 Table 2, Figures 21–38).
+//!
+//! Each function returns CSV series shaped like the paper's plots; the
+//! `repro figures` CLI writes them under `results/`. Absolute values depend
+//! on this reimplementation, but the *shapes* (who wins, saturation points,
+//! crossovers) are asserted against the paper in `rust/tests/`.
+
+use crate::broker::{ExperimentSpec, Optimization};
+use crate::config::testbed::{mips_per_dollar, wwg_testbed};
+use crate::output::csv::CsvWriter;
+use crate::scenario::{run_scenario, AdvisorKind, Scenario, ScenarioReport};
+
+/// The paper's §5.3 sweep axes: deadline 100–3600 step 500, budget
+/// 5000–22000 step 1000.
+pub fn paper_deadlines() -> Vec<f64> {
+    (0..8).map(|i| 100.0 + 500.0 * i as f64).collect()
+}
+
+pub fn paper_budgets() -> Vec<f64> {
+    (0..18).map(|i| 5_000.0 + 1_000.0 * i as f64).collect()
+}
+
+/// Sweep configuration: `full` reproduces the paper's exact grid; the
+/// reduced grid keeps CI fast.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub deadlines: Vec<f64>,
+    pub budgets: Vec<f64>,
+    pub gridlets: usize,
+    pub user_counts: Vec<usize>,
+    pub seed: u64,
+    pub advisor: AdvisorKind,
+}
+
+impl SweepConfig {
+    pub fn paper() -> SweepConfig {
+        SweepConfig {
+            deadlines: paper_deadlines(),
+            budgets: paper_budgets(),
+            gridlets: 200,
+            user_counts: vec![1, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
+            seed: 27,
+            advisor: AdvisorKind::Native,
+        }
+    }
+
+    /// Reduced grid for tests/quick runs.
+    pub fn quick() -> SweepConfig {
+        SweepConfig {
+            deadlines: vec![100.0, 1_100.0, 3_100.0],
+            budgets: vec![5_000.0, 10_000.0, 22_000.0],
+            gridlets: 100,
+            user_counts: vec![1, 5, 10],
+            seed: 27,
+            advisor: AdvisorKind::Native,
+        }
+    }
+}
+
+fn run_single(deadline: f64, budget: f64, cfg: &SweepConfig) -> ScenarioReport {
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(cfg.gridlets, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(Optimization::Cost),
+        )
+        .seed(cfg.seed)
+        .advisor(cfg.advisor.clone())
+        .build();
+    run_scenario(&scenario)
+}
+
+/// Table 1: the 3-Gridlet time- vs space-shared scheduling scenario.
+pub fn table1() -> CsvWriter {
+    use crate::gridsim::{
+        gridlet::Gridlet, res_gridlet::ResGridlet, resource::LocalScheduler,
+        space_shared::SpaceShared, time_shared::TimeShared, SpacePolicy,
+    };
+    let arrivals = [(1usize, 10.0, 0.0), (2, 8.5, 4.0), (3, 9.5, 7.0)];
+    let drive = |sched: &mut dyn LocalScheduler| -> Vec<(usize, f64, f64)> {
+        let mut out = vec![];
+        let mut pending: Vec<(usize, f64, f64)> = arrivals.to_vec();
+        let mut now = 0.0;
+        while out.len() < 3 {
+            // Next event: earliest of (arrival, completion).
+            let next_arr = pending.first().map(|&(_, _, t)| t).unwrap_or(f64::INFINITY);
+            let next_done = sched.next_completion(now).unwrap_or(f64::INFINITY);
+            if next_arr <= next_done {
+                now = next_arr;
+                let (id, mi, t) = pending.remove(0);
+                sched.submit(ResGridlet::new(Gridlet::new(id, mi, 0, 0), t, id as u64), t);
+            } else {
+                now = next_done;
+                for rg in sched.collect(now) {
+                    out.push((rg.gridlet.id, rg.gridlet.finish_time, rg.gridlet.elapsed()));
+                }
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    };
+    let mut ts = TimeShared::new(2, 1.0);
+    let mut ss = SpaceShared::new(&[2], 1.0, SpacePolicy::Fcfs);
+    let t = drive(&mut ts);
+    let s = drive(&mut ss);
+    let mut csv = CsvWriter::new(&[
+        "gridlet",
+        "length_mi",
+        "arrival",
+        "ts_finish",
+        "ts_elapsed",
+        "ss_finish",
+        "ss_elapsed",
+    ]);
+    for ((id, mi, arr), ((_, tf, te), (_, sf, se))) in
+        arrivals.iter().zip(t.iter().zip(s.iter()))
+    {
+        csv.row_f64(&[*id as f64, *mi, *arr, *tf, *te, *sf, *se]);
+    }
+    csv
+}
+
+/// Table 2: the WWG testbed.
+pub fn table2() -> CsvWriter {
+    let mut csv = CsvWriter::new(&[
+        "name", "arch", "pes", "mips", "manager", "price_g$", "mips_per_g$",
+    ]);
+    for r in wwg_testbed() {
+        csv.row(&[
+            r.name.clone(),
+            r.arch.clone(),
+            r.num_pe().to_string(),
+            format!("{}", r.mips_per_pe),
+            if r.policy.is_time_shared() { "time-shared".into() } else { "space-shared".into() },
+            format!("{}", r.price),
+            format!("{:.2}", mips_per_dollar(&r)),
+        ]);
+    }
+    csv
+}
+
+/// Figures 21–24: the single-user DBC cost-optimization sweep. Returns one
+/// CSV with a row per (deadline, budget) cell carrying all three metrics.
+pub fn figs21_24(cfg: &SweepConfig) -> CsvWriter {
+    let mut csv = CsvWriter::new(&[
+        "deadline", "budget", "gridlets_done", "time_used", "budget_spent",
+    ]);
+    for &d in &cfg.deadlines {
+        for &b in &cfg.budgets {
+            let report = run_single(d, b, cfg);
+            let u = &report.users[0];
+            csv.row_f64(&[
+                d,
+                b,
+                u.gridlets_completed as f64,
+                u.finish_time - u.start_time,
+                u.budget_spent,
+            ]);
+        }
+    }
+    csv
+}
+
+/// Figures 25–27: per-resource Gridlet counts vs budget at a fixed deadline
+/// (the paper uses 100 / 1100 / 3100).
+pub fn figs25_27(deadline: f64, cfg: &SweepConfig) -> CsvWriter {
+    let names: Vec<String> = wwg_testbed().iter().map(|r| r.name.clone()).collect();
+    let mut header: Vec<&str> = vec!["budget", "all"];
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    header.extend(name_refs);
+    let mut csv = CsvWriter::new(&header);
+    for &b in &cfg.budgets {
+        let report = run_single(deadline, b, cfg);
+        let u = &report.users[0];
+        let mut row = vec![b, u.gridlets_completed as f64];
+        for n in &names {
+            let done = u
+                .per_resource
+                .iter()
+                .find(|r| &r.name == n)
+                .map(|r| r.gridlets_completed)
+                .unwrap_or(0);
+            row.push(done as f64);
+        }
+        csv.row_f64(&row);
+    }
+    csv
+}
+
+/// Figures 28–32: time-trace of Gridlets completed / committed and budget
+/// spent per resource for one (deadline, budget) cell.
+pub fn figs28_32(deadline: f64, budget: f64, cfg: &SweepConfig) -> CsvWriter {
+    let report = run_single(deadline, budget, cfg);
+    let mut csv = CsvWriter::new(&["time", "resource", "completed", "committed", "spent"]);
+    for p in &report.users[0].trace {
+        csv.row(&[
+            format!("{:.2}", p.time),
+            p.resource.clone(),
+            p.completed.to_string(),
+            p.committed.to_string(),
+            format!("{:.2}", p.spent),
+        ]);
+    }
+    csv
+}
+
+/// Figures 33–38: multi-user competition — mean Gridlets done, termination
+/// time and budget spent per user, for each (users, budget) cell at a fixed
+/// deadline (3100 for Figs 33–35, 10000 for Figs 36–38).
+pub fn figs33_38(deadline: f64, cfg: &SweepConfig) -> CsvWriter {
+    let mut csv = CsvWriter::new(&[
+        "users", "budget", "mean_gridlets_done", "mean_termination_time", "mean_budget_spent",
+    ]);
+    for &n in &cfg.user_counts {
+        for &b in &cfg.budgets {
+            let scenario = Scenario::builder()
+                .resources(wwg_testbed())
+                .users(
+                    n,
+                    ExperimentSpec::task_farm(cfg.gridlets, 10_000.0, 0.10)
+                        .deadline(deadline)
+                        .budget(b)
+                        .optimization(Optimization::Cost),
+                )
+                .seed(cfg.seed)
+                .advisor(cfg.advisor.clone())
+                .build();
+            let report = run_scenario(&scenario);
+            csv.row_f64(&[
+                n as f64,
+                b,
+                report.mean_completed(),
+                report.mean_finish_time(),
+                report.mean_spent(),
+            ]);
+        }
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_numbers() {
+        let csv = table1().to_string();
+        // G1: ts 10/10, ss 10/10 ; G2: ts 14/10, ss 12.5/8.5 ; G3: ts 18/11, ss 19.5/12.5
+        assert!(csv.contains("1,10,0,10,10,10,10"), "{csv}");
+        assert!(csv.contains("2,8.5000,4,14,10,12.5000,8.5000"), "{csv}");
+        assert!(csv.contains("3,9.5000,7,18,11,19.5000,12.5000"), "{csv}");
+    }
+
+    #[test]
+    fn table2_has_all_rows() {
+        let csv = table2().to_string();
+        assert_eq!(csv.lines().count(), 12); // header + 11 resources
+        assert!(csv.contains("R8"));
+        assert!(csv.contains("380.00")); // R8 MIPS/G$
+    }
+
+    #[test]
+    fn quick_sweep_produces_grid() {
+        let cfg = SweepConfig { gridlets: 20, ..SweepConfig::quick() };
+        let csv = figs21_24(&cfg);
+        assert_eq!(csv.len(), cfg.deadlines.len() * cfg.budgets.len());
+    }
+
+    #[test]
+    fn resource_selection_columns() {
+        let cfg = SweepConfig {
+            gridlets: 20,
+            budgets: vec![22_000.0],
+            ..SweepConfig::quick()
+        };
+        let csv = figs25_27(3_100.0, &cfg).to_string();
+        let header = csv.lines().next().unwrap();
+        assert!(header.starts_with("budget,all,R0,R1"));
+        assert!(header.ends_with("R10"));
+    }
+}

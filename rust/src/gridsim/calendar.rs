@@ -1,0 +1,169 @@
+//! `gridsim.ResourceCalendar` — local (non-grid) background load that varies
+//! with the resource's time zone, hour of day, weekends and holidays
+//! (paper §3.1/§3.6).
+//!
+//! The calendar maps a simulation time to a *load factor* in `[0, 1)`; the
+//! resource scales its effective MIPS by `1 − load`. Simulation time units
+//! are mapped to wall-clock via `units_per_hour` so that "weekend" has a
+//! meaning; the paper leaves this mapping to the modeler.
+
+/// Day-of-week, Monday = 0 … Sunday = 6.
+pub const SATURDAY: usize = 5;
+pub const SUNDAY: usize = 6;
+
+/// Background-load calendar for one resource.
+#[derive(Debug, Clone)]
+pub struct ResourceCalendar {
+    /// Time-zone offset in hours relative to simulation time zero.
+    pub time_zone: f64,
+    /// Load during local business hours (weekdays 9:00–17:00).
+    pub peak_load: f64,
+    /// Load outside business hours on weekdays.
+    pub off_peak_load: f64,
+    /// Load on weekends and holidays.
+    pub holiday_load: f64,
+    /// Days of week counted as weekend (Monday = 0).
+    pub weekends: Vec<usize>,
+    /// Holidays as day-of-year indices (0-based, 365-day year).
+    pub holidays: Vec<usize>,
+    /// Simulation time units per hour of calendar time.
+    pub units_per_hour: f64,
+}
+
+impl ResourceCalendar {
+    /// A calendar with no background load at all (the paper's single-user
+    /// scheduling experiments set load factors to 0).
+    pub fn no_load() -> ResourceCalendar {
+        ResourceCalendar {
+            time_zone: 0.0,
+            peak_load: 0.0,
+            off_peak_load: 0.0,
+            holiday_load: 0.0,
+            weekends: vec![SATURDAY, SUNDAY],
+            holidays: vec![],
+            units_per_hour: 1.0,
+        }
+    }
+
+    /// Typical business-hours profile for a resource in `time_zone`.
+    pub fn business(time_zone: f64, peak: f64, off_peak: f64, holiday: f64) -> ResourceCalendar {
+        assert!((0.0..1.0).contains(&peak));
+        assert!((0.0..1.0).contains(&off_peak));
+        assert!((0.0..1.0).contains(&holiday));
+        ResourceCalendar {
+            time_zone,
+            peak_load: peak,
+            off_peak_load: off_peak,
+            holiday_load: holiday,
+            weekends: vec![SATURDAY, SUNDAY],
+            holidays: vec![],
+            units_per_hour: 1.0,
+        }
+    }
+
+    /// Local hour-of-day (0..24) at simulation time `t`.
+    pub fn local_hour(&self, t: f64) -> f64 {
+        let hours = t / self.units_per_hour + self.time_zone;
+        hours.rem_euclid(24.0)
+    }
+
+    /// Local day-of-week (Monday = 0) at simulation time `t`.
+    pub fn local_day_of_week(&self, t: f64) -> usize {
+        let hours = t / self.units_per_hour + self.time_zone;
+        let days = (hours / 24.0).floor() as i64;
+        days.rem_euclid(7) as usize
+    }
+
+    /// Local day-of-year (0..365) at simulation time `t`.
+    pub fn local_day_of_year(&self, t: f64) -> usize {
+        let hours = t / self.units_per_hour + self.time_zone;
+        let days = (hours / 24.0).floor() as i64;
+        days.rem_euclid(365) as usize
+    }
+
+    /// Background load factor in `[0, 1)` at simulation time `t`.
+    pub fn load(&self, t: f64) -> f64 {
+        let dow = self.local_day_of_week(t);
+        let doy = self.local_day_of_year(t);
+        if self.weekends.contains(&dow) || self.holidays.contains(&doy) {
+            return self.holiday_load;
+        }
+        let hour = self.local_hour(t);
+        if (9.0..17.0).contains(&hour) {
+            self.peak_load
+        } else {
+            self.off_peak_load
+        }
+    }
+
+    /// Effective MIPS multiplier at time `t` (`1 − load`).
+    pub fn availability(&self, t: f64) -> f64 {
+        1.0 - self.load(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_load_is_always_full() {
+        let c = ResourceCalendar::no_load();
+        for t in [0.0, 13.0, 1e6] {
+            assert_eq!(c.load(t), 0.0);
+            assert_eq!(c.availability(t), 1.0);
+        }
+    }
+
+    #[test]
+    fn peak_vs_off_peak() {
+        let c = ResourceCalendar::business(0.0, 0.8, 0.2, 0.05);
+        // t=0 is Monday 00:00 → off-peak.
+        assert_eq!(c.load(0.0), 0.2);
+        // Monday 10:00 → peak.
+        assert_eq!(c.load(10.0), 0.8);
+        // Monday 18:00 → off-peak.
+        assert_eq!(c.load(18.0), 0.2);
+    }
+
+    #[test]
+    fn weekend_low_load() {
+        let c = ResourceCalendar::business(0.0, 0.8, 0.2, 0.05);
+        // Day 5 (Saturday) 12:00 = hour 5*24+12 = 132.
+        assert_eq!(c.local_day_of_week(132.0), SATURDAY);
+        assert_eq!(c.load(132.0), 0.05);
+    }
+
+    #[test]
+    fn time_zone_shifts_hours() {
+        let c = ResourceCalendar::business(9.0, 0.8, 0.2, 0.05);
+        // Sim time 1.0 → local hour 10 → peak (still Monday).
+        assert_eq!(c.local_hour(1.0), 10.0);
+        assert_eq!(c.load(1.0), 0.8);
+    }
+
+    #[test]
+    fn holidays_override() {
+        let mut c = ResourceCalendar::business(0.0, 0.8, 0.2, 0.05);
+        c.holidays.push(0); // day zero is a holiday
+        assert_eq!(c.load(10.0), 0.05);
+        // Next day is a regular Tuesday.
+        assert_eq!(c.load(24.0 + 10.0), 0.8);
+    }
+
+    #[test]
+    fn units_per_hour_scaling() {
+        let mut c = ResourceCalendar::business(0.0, 0.5, 0.1, 0.0);
+        c.units_per_hour = 3600.0; // one unit = one second
+        assert_eq!(c.local_hour(3600.0 * 10.0), 10.0);
+        assert_eq!(c.load(3600.0 * 10.0), 0.5);
+    }
+
+    #[test]
+    fn week_wraps() {
+        let c = ResourceCalendar::no_load();
+        assert_eq!(c.local_day_of_week(0.0), 0);
+        assert_eq!(c.local_day_of_week(7.0 * 24.0), 0);
+        assert_eq!(c.local_day_of_week(8.0 * 24.0), 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! `gridsim.ResourceCharacteristics` — static resource properties
+//! (paper §3.6): architecture, OS, machine list, allocation policy, cost and
+//! time zone.
+
+use super::machine::MachineList;
+
+/// Queue ordering policy for space-shared resources (paper §3.5: "FCFS,
+/// back filling, shortest-job-first served (SJFS), and so on").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpacePolicy {
+    /// First-come first-served.
+    Fcfs,
+    /// Shortest job (smallest MI) first.
+    Sjf,
+    /// FCFS with EASY backfilling: the head job reserves PEs at the earliest
+    /// time enough become free; later jobs may jump ahead if they would not
+    /// delay the reservation.
+    BackfillEasy,
+}
+
+/// Internal process scheduling policy of the resource manager.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Round-robin multitasking: all Gridlets run at once and share PEs
+    /// (single machine / SMP under a time-shared OS).
+    TimeShared,
+    /// Queueing system: each Gridlet gets dedicated PEs (clusters).
+    SpaceShared(SpacePolicy),
+}
+
+impl AllocPolicy {
+    pub fn is_time_shared(&self) -> bool {
+        matches!(self, AllocPolicy::TimeShared)
+    }
+}
+
+/// Static properties of a grid resource.
+#[derive(Debug, Clone)]
+pub struct ResourceCharacteristics {
+    /// Architecture label, e.g. "Sun Ultra" (informational).
+    pub arch: String,
+    /// OS label (informational).
+    pub os: String,
+    /// The machines making up this resource.
+    pub machines: MachineList,
+    /// Allocation policy.
+    pub policy: AllocPolicy,
+    /// Price in G$ per PE per simulation time unit (Table 2 "Price").
+    pub cost_per_pe_time: f64,
+    /// Time zone offset in hours (paper: resources can be located in any
+    /// time zone; drives the local-load calendar).
+    pub time_zone: f64,
+}
+
+impl ResourceCharacteristics {
+    pub fn new(
+        arch: impl Into<String>,
+        os: impl Into<String>,
+        machines: MachineList,
+        policy: AllocPolicy,
+        cost_per_pe_time: f64,
+        time_zone: f64,
+    ) -> ResourceCharacteristics {
+        assert!(!machines.is_empty(), "resource needs at least one machine");
+        assert!(cost_per_pe_time >= 0.0);
+        ResourceCharacteristics {
+            arch: arch.into(),
+            os: os.into(),
+            machines,
+            policy,
+            cost_per_pe_time,
+            time_zone,
+        }
+    }
+
+    /// Total number of PEs.
+    pub fn num_pe(&self) -> usize {
+        self.machines.num_pe()
+    }
+
+    /// MIPS rating of a single PE (homogeneous within a resource).
+    pub fn mips_per_pe(&self) -> f64 {
+        self.machines.mips_of_one_pe()
+    }
+
+    /// Aggregate MIPS.
+    pub fn total_mips(&self) -> f64 {
+        self.machines.total_mips()
+    }
+
+    /// Cost of processing one MI on this resource, used by brokers to rank
+    /// resources (the paper's "translate G$/PE-time into G$ per MI"):
+    /// `price / MIPS`.
+    pub fn cost_per_mi(&self) -> f64 {
+        self.cost_per_pe_time / self.mips_per_pe()
+    }
+
+    /// MIPS bought per G$ (Table 2 last column).
+    pub fn mips_per_dollar(&self) -> f64 {
+        if self.cost_per_pe_time == 0.0 {
+            f64::INFINITY
+        } else {
+            self.mips_per_pe() / self.cost_per_pe_time
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn char_for(pes: usize, mips: f64, price: f64) -> ResourceCharacteristics {
+        ResourceCharacteristics::new(
+            "test",
+            "linux",
+            MachineList::cluster(1, pes, mips),
+            AllocPolicy::TimeShared,
+            price,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn table2_row_r0() {
+        // R0: Compaq AlphaServer, 4 PEs, 515 SPEC, 8 G$/PE-time → 64.37 MIPS/G$.
+        let c = char_for(4, 515.0, 8.0);
+        assert_eq!(c.num_pe(), 4);
+        assert!((c.mips_per_dollar() - 64.375).abs() < 1e-9);
+        assert!((c.cost_per_mi() - 8.0 / 515.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_row_r8_cheapest_per_mi() {
+        // R8: Intel VC820, 380 SPEC, 1 G$ → 380 MIPS/G$, cheapest in Table 2.
+        let r8 = char_for(2, 380.0, 1.0);
+        let r0 = char_for(4, 515.0, 8.0);
+        assert!(r8.cost_per_mi() < r0.cost_per_mi());
+        assert!((r8.mips_per_dollar() - 380.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_resource_infinite_value() {
+        let c = char_for(1, 100.0, 0.0);
+        assert!(c.mips_per_dollar().is_infinite());
+        assert_eq!(c.cost_per_mi(), 0.0);
+    }
+
+    #[test]
+    fn policy_predicates() {
+        assert!(AllocPolicy::TimeShared.is_time_shared());
+        assert!(!AllocPolicy::SpaceShared(SpacePolicy::Fcfs).is_time_shared());
+    }
+}

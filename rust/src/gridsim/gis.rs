@@ -1,0 +1,134 @@
+//! `gridsim.GridInformationService` — resource registration and discovery
+//! (paper §3.2.2): resources register at simulation start; brokers query for
+//! the list of registered resources.
+
+use super::messages::{Msg, ResourceInfo};
+use super::tags;
+use crate::des::{Ctx, Entity, EntityId, Event};
+
+/// The GIS entity.
+pub struct GridInformationService {
+    name: String,
+    resources: Vec<ResourceInfo>,
+}
+
+impl GridInformationService {
+    pub fn new(name: impl Into<String>) -> GridInformationService {
+        GridInformationService { name: name.into(), resources: Vec::new() }
+    }
+
+    /// Registered resource records (post-run inspection / direct queries in
+    /// tests).
+    pub fn resources(&self) -> &[ResourceInfo] {
+        &self.resources
+    }
+}
+
+impl Entity<Msg> for GridInformationService {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        match ev.tag {
+            tags::REGISTER_RESOURCE => {
+                let Msg::Register(info) = ev.take_data() else {
+                    panic!("REGISTER_RESOURCE without payload")
+                };
+                self.resources.push(info);
+            }
+            tags::RESOURCE_LIST => {
+                let ids: Vec<EntityId> = self.resources.iter().map(|r| r.id).collect();
+                let msg = Msg::ResourceIds(ids);
+                let bytes = msg.wire_bytes(true);
+                ctx.send(ev.src, tags::RESOURCE_LIST, Some(msg), bytes);
+            }
+            tags::INSIGNIFICANT => {}
+            other => panic!("GIS got unexpected tag {other}"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::Simulation;
+
+    struct Probe {
+        gis: EntityId,
+        got: Vec<EntityId>,
+    }
+
+    impl Entity<Msg> for Probe {
+        fn name(&self) -> &str {
+            "probe"
+        }
+        fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+            // Query after registrations have been delivered.
+            ctx.send_delayed(self.gis, 1.0, tags::RESOURCE_LIST, None);
+        }
+        fn on_event(&mut self, _ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+            if let Msg::ResourceIds(ids) = ev.take_data() {
+                self.got = ids;
+            }
+        }
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    struct FakeResource {
+        name: String,
+        gis: EntityId,
+    }
+
+    impl Entity<Msg> for FakeResource {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+            let info = ResourceInfo {
+                id: ctx.me(),
+                name: self.name.clone(),
+                num_pe: 1,
+                mips_per_pe: 100.0,
+                cost_per_pe_time: 1.0,
+                time_shared: true,
+                time_zone: 0.0,
+            };
+            ctx.send(self.gis, tags::REGISTER_RESOURCE, Some(Msg::Register(info)), 128);
+        }
+        fn on_event(&mut self, _ctx: &mut Ctx<Msg>, _ev: Event<Msg>) {}
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    #[test]
+    fn register_and_discover() {
+        let mut sim: Simulation<Msg> = Simulation::new();
+        let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+        let r1 = sim.add(Box::new(FakeResource { name: "R1".into(), gis }));
+        let r2 = sim.add(Box::new(FakeResource { name: "R2".into(), gis }));
+        let probe = sim.add(Box::new(Probe { gis, got: vec![] }));
+        sim.run();
+        let p = sim.get::<Probe>(probe).unwrap();
+        assert_eq!(p.got, vec![r1, r2]);
+        let g = sim.get::<GridInformationService>(gis).unwrap();
+        assert_eq!(g.resources().len(), 2);
+        assert_eq!(g.resources()[0].name, "R1");
+    }
+}

@@ -1,0 +1,157 @@
+//! `gridsim.Gridlet` — the unit of work (paper §3.3).
+//!
+//! A Gridlet packages everything about one job: processing length in MI
+//! (million instructions, normalized to a SPEC/MIPS-rated standard PE),
+//! input/output file sizes (which determine network staging delays), the
+//! originator to return the result to, and — as it moves through the system —
+//! its execution record (arrival/start/finish times, consumed CPU time,
+//! accrued cost).
+
+use crate::des::EntityId;
+
+/// Lifecycle state of a Gridlet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridletStatus {
+    /// Created by the user, not yet dispatched.
+    Created,
+    /// Sent to a resource, waiting for a free PE (space-shared queue).
+    Queued,
+    /// Executing on a resource.
+    InExec,
+    /// Finished successfully and returned to the originator.
+    Success,
+    /// Cancelled by the broker (deadline/budget exhausted or rebalancing).
+    Canceled,
+    /// Lost due to a resource failure.
+    Failed,
+}
+
+/// The job package.
+#[derive(Debug, Clone)]
+pub struct Gridlet {
+    /// User-scoped job id.
+    pub id: usize,
+    /// Entity the processed Gridlet is returned to (broker or user).
+    pub owner: EntityId,
+    /// Processing requirement in MI, relative to the standard PE
+    /// (`GridSimStandardPE`, 100 MIPS in the paper's experiments).
+    pub length_mi: f64,
+    /// Number of PEs required simultaneously (1 for task-farming jobs;
+    /// >1 exercises space-shared backfilling).
+    pub num_pe: usize,
+    /// Input file size in bytes (staged user -> resource).
+    pub input_bytes: u64,
+    /// Output file size in bytes (staged resource -> user).
+    pub output_bytes: u64,
+    /// Lifecycle state.
+    pub status: GridletStatus,
+    /// Simulation time the Gridlet arrived at the resource.
+    pub arrival_time: f64,
+    /// Simulation time execution began.
+    pub start_time: f64,
+    /// Simulation time execution finished.
+    pub finish_time: f64,
+    /// PE time consumed (CPU time; equals `length_mi / mips` of the PE that
+    /// ran it — for time-shared resources wall-clock can be much larger).
+    pub cpu_time: f64,
+    /// Cost charged for processing (filled in by the broker:
+    /// `price/PE-time-unit × cpu_time`).
+    pub cost: f64,
+    /// Resource that processed (or is processing) the Gridlet.
+    pub resource: Option<EntityId>,
+}
+
+impl Gridlet {
+    /// Create a fresh Gridlet. `owner` is patched by the broker before
+    /// dispatch (the paper sets the owner id so resources know where to
+    /// return results).
+    pub fn new(id: usize, length_mi: f64, input_bytes: u64, output_bytes: u64) -> Gridlet {
+        assert!(length_mi > 0.0, "gridlet length must be positive");
+        Gridlet {
+            id,
+            owner: 0,
+            length_mi,
+            num_pe: 1,
+            input_bytes,
+            output_bytes,
+            status: GridletStatus::Created,
+            arrival_time: 0.0,
+            start_time: 0.0,
+            finish_time: 0.0,
+            cpu_time: 0.0,
+            cost: 0.0,
+            resource: None,
+        }
+    }
+
+    /// Builder-style PE requirement (multi-PE jobs for space-shared tests).
+    pub fn with_pes(mut self, num_pe: usize) -> Gridlet {
+        assert!(num_pe >= 1);
+        self.num_pe = num_pe;
+        self
+    }
+
+    /// Wall-clock (elapsed) time at the resource: `finish − arrival`
+    /// (Table 1's "Elapsed Time" column).
+    pub fn elapsed(&self) -> f64 {
+        self.finish_time - self.arrival_time
+    }
+
+    /// True when the Gridlet reached a terminal state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self.status,
+            GridletStatus::Success | GridletStatus::Canceled | GridletStatus::Failed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_defaults() {
+        let g = Gridlet::new(3, 10_000.0, 512, 128);
+        assert_eq!(g.id, 3);
+        assert_eq!(g.status, GridletStatus::Created);
+        assert_eq!(g.num_pe, 1);
+        assert!(!g.is_terminal());
+    }
+
+    #[test]
+    fn elapsed_is_finish_minus_arrival() {
+        let mut g = Gridlet::new(0, 10.0, 0, 0);
+        g.arrival_time = 4.0;
+        g.finish_time = 14.0;
+        assert_eq!(g.elapsed(), 10.0);
+    }
+
+    #[test]
+    fn terminal_states() {
+        let mut g = Gridlet::new(0, 1.0, 0, 0);
+        for (st, terminal) in [
+            (GridletStatus::Created, false),
+            (GridletStatus::Queued, false),
+            (GridletStatus::InExec, false),
+            (GridletStatus::Success, true),
+            (GridletStatus::Canceled, true),
+            (GridletStatus::Failed, true),
+        ] {
+            g.status = st;
+            assert_eq!(g.is_terminal(), terminal, "{st:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_length_rejected() {
+        Gridlet::new(0, 0.0, 0, 0);
+    }
+
+    #[test]
+    fn with_pes() {
+        let g = Gridlet::new(0, 1.0, 0, 0).with_pes(4);
+        assert_eq!(g.num_pe, 4);
+    }
+}

@@ -1,0 +1,120 @@
+//! `gridsim.Machine` / `gridsim.MachineList` — a machine is one or more PEs
+//! sharing memory; a resource is one or more machines (paper §3.5).
+
+use super::pe::PeList;
+
+/// A uniprocessor or shared-memory multiprocessor node.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub id: usize,
+    pub pes: PeList,
+}
+
+impl Machine {
+    pub fn new(id: usize, pes: PeList) -> Machine {
+        assert!(!pes.is_empty(), "a machine needs at least one PE");
+        Machine { id, pes }
+    }
+
+    pub fn num_pe(&self) -> usize {
+        self.pes.len()
+    }
+
+    pub fn total_mips(&self) -> f64 {
+        self.pes.total_mips()
+    }
+}
+
+/// The collection of machines forming a grid resource. A single machine
+/// models a PC/workstation/SMP; multiple machines model a cluster.
+#[derive(Debug, Clone, Default)]
+pub struct MachineList {
+    machines: Vec<Machine>,
+}
+
+impl MachineList {
+    pub fn new() -> MachineList {
+        MachineList { machines: Vec::new() }
+    }
+
+    /// `n_machines` × `pes_per_machine` PEs at `mips`.
+    pub fn cluster(n_machines: usize, pes_per_machine: usize, mips: f64) -> MachineList {
+        let mut list = MachineList::new();
+        for m in 0..n_machines {
+            list.add(Machine::new(m, PeList::uniform(pes_per_machine, mips)));
+        }
+        list
+    }
+
+    pub fn add(&mut self, machine: Machine) {
+        self.machines.push(machine);
+    }
+
+    pub fn len(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.machines.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Machine> {
+        self.machines.iter()
+    }
+
+    pub fn get(&self, i: usize) -> &Machine {
+        &self.machines[i]
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut Machine {
+        &mut self.machines[i]
+    }
+
+    /// Total PEs across all machines.
+    pub fn num_pe(&self) -> usize {
+        self.machines.iter().map(|m| m.num_pe()).sum()
+    }
+
+    pub fn total_mips(&self) -> f64 {
+        self.machines.iter().map(|m| m.total_mips()).sum()
+    }
+
+    /// MIPS of one PE (homogeneous assumption, as in the paper).
+    pub fn mips_of_one_pe(&self) -> f64 {
+        self.machines.first().map(|m| m.pes.mips_of_one()).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_construction() {
+        let ml = MachineList::cluster(3, 4, 410.0);
+        assert_eq!(ml.len(), 3);
+        assert_eq!(ml.num_pe(), 12);
+        assert_eq!(ml.total_mips(), 12.0 * 410.0);
+        assert_eq!(ml.mips_of_one_pe(), 410.0);
+    }
+
+    #[test]
+    fn single_machine_smp() {
+        let ml = MachineList::cluster(1, 8, 377.0);
+        assert_eq!(ml.len(), 1);
+        assert_eq!(ml.num_pe(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one PE")]
+    fn empty_machine_rejected() {
+        Machine::new(0, PeList::new());
+    }
+
+    #[test]
+    fn empty_list() {
+        let ml = MachineList::new();
+        assert_eq!(ml.num_pe(), 0);
+        assert_eq!(ml.mips_of_one_pe(), 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! The message payload type exchanged between GridSim entities.
+//!
+//! SimJava events carry opaque object payloads; we use one closed enum so
+//! event payloads stay allocation-cheap and the protocol surface is explicit.
+
+use super::gridlet::Gridlet;
+use super::statistics::StatRecord;
+use crate::des::EntityId;
+
+/// Static resource information returned by a `RESOURCE_CHARACTERISTICS`
+/// query (what the broker's "resource trading" step needs).
+#[derive(Debug, Clone)]
+pub struct ResourceInfo {
+    pub id: EntityId,
+    pub name: String,
+    pub num_pe: usize,
+    pub mips_per_pe: f64,
+    pub cost_per_pe_time: f64,
+    pub time_shared: bool,
+    pub time_zone: f64,
+}
+
+impl ResourceInfo {
+    /// G$ per MI — the broker's ranking key for cost optimization.
+    pub fn cost_per_mi(&self) -> f64 {
+        self.cost_per_pe_time / self.mips_per_pe
+    }
+
+    /// Aggregate MIPS.
+    pub fn total_mips(&self) -> f64 {
+        self.mips_per_pe * self.num_pe as f64
+    }
+}
+
+/// Dynamic resource state returned by a `RESOURCE_DYNAMICS` query.
+#[derive(Debug, Clone)]
+pub struct ResourceDynamics {
+    pub id: EntityId,
+    /// Gridlets currently executing.
+    pub in_exec: usize,
+    /// Gridlets waiting in the queue (space-shared).
+    pub queued: usize,
+    /// Background (non-grid) load factor currently in effect.
+    pub local_load: f64,
+    /// Whether the resource is up (failure injection).
+    pub available: bool,
+}
+
+/// Advance-reservation request (paper §3.1 feature / future work §6).
+#[derive(Debug, Clone)]
+pub struct ReservationRequest {
+    pub reservation_id: usize,
+    pub start: f64,
+    pub duration: f64,
+    pub num_pe: usize,
+}
+
+/// Advance-reservation reply.
+#[derive(Debug, Clone)]
+pub struct ReservationReply {
+    pub reservation_id: usize,
+    pub accepted: bool,
+}
+
+/// Event payloads.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// A Gridlet in flight (submit / return / cancel-reply).
+    Gridlet(Box<Gridlet>),
+    /// Gridlet id (status query / cancel request).
+    GridletId(usize),
+    /// Resource -> GIS registration.
+    Register(ResourceInfo),
+    /// GIS -> broker: ids of registered resources.
+    ResourceIds(Vec<EntityId>),
+    /// Resource -> broker: static characteristics.
+    Characteristics(ResourceInfo),
+    /// Resource -> broker: dynamic state.
+    Dynamics(ResourceDynamics),
+    /// Entity -> statistics: one measurement.
+    Stat(StatRecord),
+    /// Reservation protocol.
+    Reserve(ReservationRequest),
+    ReserveReply(ReservationReply),
+    /// User -> broker: a materialized experiment to schedule.
+    Experiment(Box<crate::broker::experiment::Experiment>),
+    /// Broker -> user: experiment outcome.
+    ExperimentResult(Box<crate::broker::experiment::ExperimentResult>),
+    /// Generic control payload (user/broker handshakes).
+    Control(u64),
+}
+
+impl Msg {
+    /// Approximate on-the-wire size in bytes, used by the network model to
+    /// derive transfer delays. Gridlets dominate: their input/output file
+    /// sizes are the paper's staging traffic.
+    pub fn wire_bytes(&self, outbound: bool) -> u64 {
+        match self {
+            // Dispatching a gridlet ships its input file; returning it ships
+            // the output file. A small fixed header covers the job metadata.
+            Msg::Gridlet(g) => 128 + if outbound { g.input_bytes } else { g.output_bytes },
+            Msg::ResourceIds(ids) => 16 + 8 * ids.len() as u64,
+            Msg::GridletId(_) | Msg::Control(_) => 16,
+            Msg::Register(_) | Msg::Characteristics(_) => 128,
+            Msg::Dynamics(_) => 64,
+            Msg::Stat(_) => 48,
+            Msg::Reserve(_) | Msg::ReserveReply(_) => 64,
+            Msg::Experiment(e) => 256 + 64 * e.gridlets.len() as u64,
+            Msg::ExperimentResult(_) => 512,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_info_cost_per_mi() {
+        let info = ResourceInfo {
+            id: 1,
+            name: "R4".into(),
+            num_pe: 2,
+            mips_per_pe: 380.0,
+            cost_per_pe_time: 2.0,
+            time_shared: true,
+            time_zone: 1.0,
+        };
+        assert!((info.cost_per_mi() - 2.0 / 380.0).abs() < 1e-15);
+        assert_eq!(info.total_mips(), 760.0);
+    }
+
+    #[test]
+    fn gridlet_wire_size_directional() {
+        let mut g = Gridlet::new(0, 100.0, 1000, 50);
+        g.owner = 1;
+        let m = Msg::Gridlet(Box::new(g));
+        assert_eq!(m.wire_bytes(true), 1128);
+        assert_eq!(m.wire_bytes(false), 178);
+    }
+
+    #[test]
+    fn id_list_scales() {
+        let m = Msg::ResourceIds(vec![1, 2, 3]);
+        assert_eq!(m.wire_bytes(true), 40);
+    }
+}

@@ -1,0 +1,35 @@
+//! The GridSim entity toolkit (paper §3): resources (time- and space-shared),
+//! Gridlets, the grid information service, network delays, statistics,
+//! calendars, randomness, and advance reservations.
+
+pub mod calendar;
+pub mod characteristics;
+pub mod gis;
+pub mod gridlet;
+pub mod machine;
+pub mod messages;
+pub mod network;
+pub mod pe;
+pub mod random;
+pub mod res_gridlet;
+pub mod reservation;
+pub mod resource;
+pub mod shutdown;
+pub mod space_shared;
+pub mod statistics;
+pub mod tags;
+pub mod time_shared;
+
+pub use calendar::ResourceCalendar;
+pub use characteristics::{AllocPolicy, ResourceCharacteristics, SpacePolicy};
+pub use gis::GridInformationService;
+pub use gridlet::{Gridlet, GridletStatus};
+pub use machine::{Machine, MachineList};
+pub use messages::{Msg, ResourceDynamics, ResourceInfo};
+pub use network::BaudLink;
+pub use pe::{Pe, PeList, PeStatus};
+pub use random::GridSimRandom;
+pub use res_gridlet::ResGridlet;
+pub use resource::GridResource;
+pub use shutdown::GridSimShutdown;
+pub use statistics::{Accumulator, GridStatistics, StatRecord};

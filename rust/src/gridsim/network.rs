@@ -1,0 +1,144 @@
+//! Network model — the paper's `gridsim.Input`/`gridsim.Output` entities
+//! (§3.2.2, Fig 4) reduced to their observable semantics: every message
+//! between networked entities is delayed by `latency + bits / baud_rate`.
+//!
+//! The paper gives each entity an I/O port pair with a baud rate
+//! (`DEFAULT_BAUD_RATE = 9600`); the effective rate of a transfer is bounded
+//! by the slower endpoint. Pairwise latency can be layered on top to model
+//! wide-area links between time zones.
+
+use super::tags;
+use crate::des::entity::LinkModel;
+use crate::des::EntityId;
+use std::collections::HashMap;
+
+/// Baud-rate + latency link model.
+#[derive(Debug, Clone)]
+pub struct BaudLink {
+    /// Per-entity baud rate (bits per simulation time unit); entities not
+    /// present use the default.
+    rates: HashMap<EntityId, f64>,
+    default_rate: f64,
+    /// Pairwise one-way latency overrides (symmetric).
+    latency: HashMap<(EntityId, EntityId), f64>,
+    default_latency: f64,
+}
+
+impl Default for BaudLink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BaudLink {
+    pub fn new() -> BaudLink {
+        BaudLink {
+            rates: HashMap::new(),
+            default_rate: tags::DEFAULT_BAUD_RATE,
+            latency: HashMap::new(),
+            default_latency: 0.0,
+        }
+    }
+
+    /// Infinite-bandwidth, zero-latency network (pure scheduling studies —
+    /// the paper's §5 experiments effectively ignore staging delays).
+    pub fn instantaneous() -> BaudLink {
+        let mut link = BaudLink::new();
+        link.default_rate = f64::INFINITY;
+        link
+    }
+
+    pub fn with_default_rate(mut self, baud: f64) -> BaudLink {
+        assert!(baud > 0.0);
+        self.default_rate = baud;
+        self
+    }
+
+    pub fn with_default_latency(mut self, latency: f64) -> BaudLink {
+        assert!(latency >= 0.0);
+        self.default_latency = latency;
+        self
+    }
+
+    /// Set an entity's port baud rate.
+    pub fn set_rate(&mut self, entity: EntityId, baud: f64) {
+        assert!(baud > 0.0);
+        self.rates.insert(entity, baud);
+    }
+
+    /// Set a symmetric one-way latency between two entities.
+    pub fn set_latency(&mut self, a: EntityId, b: EntityId, latency: f64) {
+        assert!(latency >= 0.0);
+        self.latency.insert((a.min(b), a.max(b)), latency);
+    }
+
+    fn rate_of(&self, e: EntityId) -> f64 {
+        self.rates.get(&e).copied().unwrap_or(self.default_rate)
+    }
+
+    fn latency_of(&self, a: EntityId, b: EntityId) -> f64 {
+        self.latency
+            .get(&(a.min(b), a.max(b)))
+            .copied()
+            .unwrap_or(self.default_latency)
+    }
+}
+
+impl LinkModel for BaudLink {
+    fn delay(&self, src: EntityId, dst: EntityId, bytes: u64) -> f64 {
+        if src == dst {
+            return 0.0; // self-messages don't cross the network
+        }
+        let rate = self.rate_of(src).min(self.rate_of(dst));
+        let transfer = if rate.is_infinite() { 0.0 } else { bytes as f64 * 8.0 / rate };
+        self.latency_of(src, dst) + transfer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_baud_9600() {
+        let link = BaudLink::new();
+        // 1200 bytes = 9600 bits at 9600 baud → 1.0 time unit.
+        assert!((link.delay(0, 1, 1200) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slower_endpoint_bounds() {
+        let mut link = BaudLink::new().with_default_rate(1_000_000.0);
+        link.set_rate(1, 9600.0);
+        assert!((link.delay(0, 1, 1200) - 1.0).abs() < 1e-12);
+        assert!((link.delay(1, 0, 1200) - 1.0).abs() < 1e-12);
+        assert!(link.delay(0, 2, 1200) < 0.01);
+    }
+
+    #[test]
+    fn latency_added() {
+        let mut link = BaudLink::instantaneous();
+        link.set_latency(0, 1, 0.25);
+        assert_eq!(link.delay(0, 1, 1_000_000), 0.25);
+        assert_eq!(link.delay(1, 0, 1_000_000), 0.25);
+        assert_eq!(link.delay(0, 2, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn self_messages_free() {
+        let link = BaudLink::new().with_default_latency(5.0);
+        assert_eq!(link.delay(3, 3, 10_000), 0.0);
+    }
+
+    #[test]
+    fn instantaneous_is_zero() {
+        let link = BaudLink::instantaneous();
+        assert_eq!(link.delay(0, 1, u64::MAX / 16), 0.0);
+    }
+
+    #[test]
+    fn zero_bytes_latency_only() {
+        let link = BaudLink::new().with_default_latency(0.5);
+        assert_eq!(link.delay(0, 1, 0), 0.5);
+    }
+}

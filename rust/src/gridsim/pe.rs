@@ -1,0 +1,131 @@
+//! `gridsim.PE` / `gridsim.PEList` — processing elements (paper §3.5/§3.6).
+
+/// Allocation status of a PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeStatus {
+    Free,
+    Busy,
+    /// Unavailable due to an injected failure.
+    Failed,
+}
+
+/// A processing element with a MIPS (or SPEC-equivalent) rating.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    pub id: usize,
+    pub mips: f64,
+    pub status: PeStatus,
+}
+
+impl Pe {
+    pub fn new(id: usize, mips: f64) -> Pe {
+        assert!(mips > 0.0, "PE MIPS rating must be positive");
+        Pe { id, mips, status: PeStatus::Free }
+    }
+}
+
+/// A list of PEs making up one machine.
+#[derive(Debug, Clone, Default)]
+pub struct PeList {
+    pes: Vec<Pe>,
+}
+
+impl PeList {
+    pub fn new() -> PeList {
+        PeList { pes: Vec::new() }
+    }
+
+    /// Uniform list constructor: `n` PEs at `mips` each.
+    pub fn uniform(n: usize, mips: f64) -> PeList {
+        let mut list = PeList::new();
+        for i in 0..n {
+            list.add(Pe::new(i, mips));
+        }
+        list
+    }
+
+    pub fn add(&mut self, pe: Pe) {
+        self.pes.push(pe);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pes.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Pe> {
+        self.pes.iter()
+    }
+
+    pub fn get(&self, i: usize) -> &Pe {
+        &self.pes[i]
+    }
+
+    pub fn get_mut(&mut self, i: usize) -> &mut Pe {
+        &mut self.pes[i]
+    }
+
+    /// Total MIPS across PEs.
+    pub fn total_mips(&self) -> f64 {
+        self.pes.iter().map(|p| p.mips).sum()
+    }
+
+    /// MIPS rating of the first PE (the paper assumes homogeneous PEs within
+    /// a resource; `MIPSRatingOfOnePE()` in Fig 8).
+    pub fn mips_of_one(&self) -> f64 {
+        self.pes.first().map(|p| p.mips).unwrap_or(0.0)
+    }
+
+    /// Number of currently free PEs.
+    pub fn free_count(&self) -> usize {
+        self.pes.iter().filter(|p| p.status == PeStatus::Free).count()
+    }
+
+    /// Index of a free PE, if any.
+    pub fn find_free(&self) -> Option<usize> {
+        self.pes.iter().position(|p| p.status == PeStatus::Free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_list() {
+        let list = PeList::uniform(4, 377.0);
+        assert_eq!(list.len(), 4);
+        assert_eq!(list.total_mips(), 4.0 * 377.0);
+        assert_eq!(list.mips_of_one(), 377.0);
+        assert_eq!(list.free_count(), 4);
+    }
+
+    #[test]
+    fn find_and_mark_busy() {
+        let mut list = PeList::uniform(2, 100.0);
+        let i = list.find_free().unwrap();
+        list.get_mut(i).status = PeStatus::Busy;
+        assert_eq!(list.free_count(), 1);
+        let j = list.find_free().unwrap();
+        assert_ne!(i, j);
+        list.get_mut(j).status = PeStatus::Busy;
+        assert_eq!(list.find_free(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_mips_rejected() {
+        Pe::new(0, 0.0);
+    }
+
+    #[test]
+    fn empty_list_mips() {
+        let list = PeList::new();
+        assert_eq!(list.mips_of_one(), 0.0);
+        assert_eq!(list.total_mips(), 0.0);
+        assert!(list.is_empty());
+    }
+}

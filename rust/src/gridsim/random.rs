@@ -1,0 +1,98 @@
+//! `gridsim.GridSimRandom` — mapping predicted values to "real-world" values
+//! with bounded uncertainty (paper §3.6).
+//!
+//! `real(d, f_L, f_M)` maps an estimate `d` into
+//! `[(1 − f_L)·d, (1 + f_M)·d)` via `d·(1 − f_L + (f_L + f_M)·rd)` where
+//! `rd ~ U[0, 1)` — exactly the paper's formula.
+
+use crate::util::rng::Rng;
+
+/// Stateful randomizer with per-situation factor presets.
+#[derive(Debug, Clone)]
+pub struct GridSimRandom {
+    rng: Rng,
+    /// Less/more factors for network staging estimates.
+    pub net_factors: (f64, f64),
+    /// Less/more factors for job-length estimates.
+    pub exec_factors: (f64, f64),
+}
+
+impl GridSimRandom {
+    pub fn new(seed: u64) -> GridSimRandom {
+        GridSimRandom { rng: Rng::new(seed), net_factors: (0.0, 0.0), exec_factors: (0.0, 0.0) }
+    }
+
+    /// The paper's `real(d, f_L, f_M)`.
+    pub fn real(&mut self, d: f64, f_less: f64, f_more: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&f_less), "f_L must be in [0,1]");
+        assert!((0.0..=1.0).contains(&f_more), "f_M must be in [0,1]");
+        let rd = self.rng.next_f64();
+        d * (1.0 - f_less + (f_less + f_more) * rd)
+    }
+
+    /// `real` with the execution-factor preset.
+    pub fn real_exec(&mut self, d: f64) -> f64 {
+        let (fl, fm) = self.exec_factors;
+        self.real(d, fl, fm)
+    }
+
+    /// `real` with the network-factor preset.
+    pub fn real_net(&mut self, d: f64) -> f64 {
+        let (fl, fm) = self.net_factors;
+        self.real(d, fl, fm)
+    }
+
+    /// Access the underlying uniform stream (for modelers needing raw draws).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_within_bounds() {
+        let mut r = GridSimRandom::new(1);
+        for _ in 0..10_000 {
+            let x = r.real(100.0, 0.1, 0.25);
+            assert!(x >= 90.0 - 1e-9, "{x}");
+            assert!(x < 125.0, "{x}");
+        }
+    }
+
+    #[test]
+    fn zero_factors_identity() {
+        let mut r = GridSimRandom::new(2);
+        for _ in 0..100 {
+            assert_eq!(r.real(42.0, 0.0, 0.0), 42.0);
+        }
+    }
+
+    #[test]
+    fn positive_only_variation_matches_paper_workload() {
+        // §5.2: "at least 10,000 MI with a random variation of 0 to 10% on
+        // the positive side" → real(10_000, 0, 0.10).
+        let mut r = GridSimRandom::new(3);
+        for _ in 0..10_000 {
+            let x = r.real(10_000.0, 0.0, 0.10);
+            assert!((10_000.0..11_000.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = GridSimRandom::new(7);
+        let mut b = GridSimRandom::new(7);
+        for _ in 0..50 {
+            assert_eq!(a.real(5.0, 0.2, 0.2), b.real(5.0, 0.2, 0.2));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "f_L")]
+    fn rejects_bad_factor() {
+        GridSimRandom::new(0).real(1.0, 1.5, 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! `gridsim.ResGridlet` — a Gridlet as held inside a resource (paper §3.6):
+//! the job plus its arrival time, remaining work, and PE/machine assignment.
+
+use super::gridlet::Gridlet;
+
+/// Resource-side execution record for one Gridlet.
+#[derive(Debug, Clone)]
+pub struct ResGridlet {
+    pub gridlet: Gridlet,
+    /// Arrival time at the resource.
+    pub arrival: f64,
+    /// Time execution started (first allocation of a PE share).
+    pub start: f64,
+    /// Remaining processing requirement in MI.
+    pub remaining_mi: f64,
+    /// Machine index assigned (space-shared).
+    pub machine: Option<usize>,
+    /// First PE index assigned (space-shared).
+    pub pe: Option<usize>,
+    /// Arrival rank within the resource — the time-shared PE-share allocator
+    /// (Fig 8) gives the max share to the lowest-ranked Gridlets.
+    pub rank: u64,
+}
+
+impl ResGridlet {
+    pub fn new(mut gridlet: Gridlet, now: f64, rank: u64) -> ResGridlet {
+        let remaining = gridlet.length_mi;
+        gridlet.arrival_time = now;
+        ResGridlet {
+            gridlet,
+            arrival: now,
+            start: now,
+            remaining_mi: remaining,
+            machine: None,
+            pe: None,
+            rank,
+        }
+    }
+
+    /// Deduct processed work; clamps at zero.
+    pub fn consume(&mut self, mi: f64) {
+        self.remaining_mi = (self.remaining_mi - mi).max(0.0);
+    }
+
+    /// Finished (within float tolerance scaled to job size)?
+    pub fn is_done(&self) -> bool {
+        self.remaining_mi <= 1e-9 * self.gridlet.length_mi.max(1.0)
+    }
+
+    /// Fraction of work completed.
+    pub fn progress(&self) -> f64 {
+        1.0 - self.remaining_mi / self.gridlet.length_mi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consume_and_done() {
+        let g = Gridlet::new(0, 10.0, 0, 0);
+        let mut rg = ResGridlet::new(g, 5.0, 0);
+        assert_eq!(rg.arrival, 5.0);
+        assert!(!rg.is_done());
+        rg.consume(4.0);
+        assert_eq!(rg.remaining_mi, 6.0);
+        assert!((rg.progress() - 0.4).abs() < 1e-12);
+        rg.consume(100.0);
+        assert_eq!(rg.remaining_mi, 0.0);
+        assert!(rg.is_done());
+    }
+
+    #[test]
+    fn float_tolerance_done() {
+        let g = Gridlet::new(0, 1e9, 0, 0);
+        let mut rg = ResGridlet::new(g, 0.0, 0);
+        rg.consume(1e9 - 1e-3); // within 1e-9 relative tolerance of 1e9
+        assert!(rg.is_done());
+    }
+}

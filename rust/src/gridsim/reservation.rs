@@ -1,0 +1,159 @@
+//! Advance reservations (paper §3.1: "resources can be booked for advance
+//! reservation"; §6 lists its scheduling simulation as future work).
+//!
+//! A [`ReservationBook`] tracks accepted PE bookings over time windows and
+//! admits a new reservation only if, at every instant of its window, the
+//! total reserved PEs stay within the resource's capacity. Active
+//! reservations withhold PEs from the local scheduler (grid work slows
+//! down / queues while a window is active).
+
+/// One accepted reservation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reservation {
+    pub id: usize,
+    pub start: f64,
+    pub end: f64,
+    pub num_pe: usize,
+}
+
+/// Capacity-checked reservation calendar for one resource.
+#[derive(Debug, Clone)]
+pub struct ReservationBook {
+    capacity: usize,
+    accepted: Vec<Reservation>,
+}
+
+impl ReservationBook {
+    pub fn new(capacity: usize) -> ReservationBook {
+        ReservationBook { capacity, accepted: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn accepted(&self) -> &[Reservation] {
+        &self.accepted
+    }
+
+    /// PEs reserved at instant `t`.
+    pub fn active_pes(&self, t: f64) -> usize {
+        self.accepted
+            .iter()
+            .filter(|r| r.start <= t && t < r.end)
+            .map(|r| r.num_pe)
+            .sum()
+    }
+
+    /// Peak PEs reserved over `[start, end)` if `extra` more were added.
+    fn peak_with(&self, start: f64, end: f64, extra: usize) -> usize {
+        // Check at every boundary point inside the window: reservations are
+        // piecewise constant so the max occurs at a start point.
+        let mut points = vec![start];
+        for r in &self.accepted {
+            if r.start > start && r.start < end {
+                points.push(r.start);
+            }
+        }
+        points
+            .into_iter()
+            .map(|t| self.active_pes(t) + extra)
+            .max()
+            .unwrap_or(extra)
+    }
+
+    /// Try to book `num_pe` PEs over `[start, start+duration)`. Returns
+    /// whether the reservation was accepted.
+    pub fn try_reserve(&mut self, id: usize, start: f64, duration: f64, num_pe: usize) -> bool {
+        if duration <= 0.0 || num_pe == 0 || num_pe > self.capacity || start < 0.0 {
+            return false;
+        }
+        if self.accepted.iter().any(|r| r.id == id) {
+            return false; // duplicate id
+        }
+        let end = start + duration;
+        if self.peak_with(start, end, num_pe) > self.capacity {
+            return false;
+        }
+        self.accepted.push(Reservation { id, start, end, num_pe });
+        true
+    }
+
+    /// Cancel a reservation by id.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        let before = self.accepted.len();
+        self.accepted.retain(|r| r.id != id);
+        self.accepted.len() != before
+    }
+
+    /// Drop reservations that ended before `t` (housekeeping).
+    pub fn expire(&mut self, t: f64) {
+        self.accepted.retain(|r| r.end > t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_within_capacity() {
+        let mut book = ReservationBook::new(4);
+        assert!(book.try_reserve(1, 10.0, 5.0, 2));
+        assert!(book.try_reserve(2, 10.0, 5.0, 2));
+        assert_eq!(book.active_pes(12.0), 4);
+        assert_eq!(book.active_pes(9.9), 0);
+        assert_eq!(book.active_pes(15.0), 0); // end is exclusive
+    }
+
+    #[test]
+    fn rejects_overlap_beyond_capacity() {
+        let mut book = ReservationBook::new(4);
+        assert!(book.try_reserve(1, 10.0, 10.0, 3));
+        assert!(!book.try_reserve(2, 15.0, 10.0, 2), "peak would be 5 > 4");
+        // Non-overlapping is fine.
+        assert!(book.try_reserve(3, 20.0, 10.0, 2));
+    }
+
+    #[test]
+    fn staggered_windows_checked_at_boundaries() {
+        let mut book = ReservationBook::new(4);
+        assert!(book.try_reserve(1, 0.0, 10.0, 2));
+        assert!(book.try_reserve(2, 5.0, 10.0, 2));
+        // [7,12) overlaps both at t∈[7,10) → 2+2+1 > 4.
+        assert!(!book.try_reserve(3, 7.0, 5.0, 1));
+        // But after 10, only id=2 is active → 2+2 ≤ 4 fits in [10,12).
+        assert!(book.try_reserve(4, 10.0, 2.0, 2));
+    }
+
+    #[test]
+    fn rejects_nonsense() {
+        let mut book = ReservationBook::new(2);
+        assert!(!book.try_reserve(1, 0.0, 0.0, 1), "zero duration");
+        assert!(!book.try_reserve(2, 0.0, 1.0, 0), "zero PEs");
+        assert!(!book.try_reserve(3, 0.0, 1.0, 3), "beyond capacity");
+        assert!(!book.try_reserve(4, -1.0, 1.0, 1), "negative start");
+        assert!(book.try_reserve(5, 0.0, 1.0, 1));
+        assert!(!book.try_reserve(5, 5.0, 1.0, 1), "duplicate id");
+    }
+
+    #[test]
+    fn cancel_frees_capacity() {
+        let mut book = ReservationBook::new(2);
+        assert!(book.try_reserve(1, 0.0, 10.0, 2));
+        assert!(!book.try_reserve(2, 5.0, 1.0, 1));
+        assert!(book.cancel(1));
+        assert!(!book.cancel(1));
+        assert!(book.try_reserve(2, 5.0, 1.0, 1));
+    }
+
+    #[test]
+    fn expire_drops_past() {
+        let mut book = ReservationBook::new(2);
+        book.try_reserve(1, 0.0, 5.0, 1);
+        book.try_reserve(2, 10.0, 5.0, 1);
+        book.expire(7.0);
+        assert_eq!(book.accepted().len(), 1);
+        assert_eq!(book.accepted()[0].id, 2);
+    }
+}

@@ -1,0 +1,347 @@
+//! `gridsim.GridResource` — the resource entity (paper §3.5/§3.6).
+//!
+//! Wraps a local scheduler (time- or space-shared) in the event protocol of
+//! Figs 5/6: register with the GIS at start, answer characteristics/dynamics
+//! queries, accept Gridlet submissions, run the internal completion-
+//! interrupt loop (with the stale-tag discard rule of Figs 7/10), and return
+//! processed Gridlets to their owners.
+
+use super::calendar::ResourceCalendar;
+use super::characteristics::{AllocPolicy, ResourceCharacteristics};
+use super::gridlet::GridletStatus;
+use super::messages::{Msg, ReservationReply, ResourceDynamics, ResourceInfo};
+use super::res_gridlet::ResGridlet;
+use super::reservation::ReservationBook;
+use super::space_shared::SpaceShared;
+use super::statistics::StatRecord;
+use super::tags;
+use super::time_shared::TimeShared;
+use crate::des::{Ctx, EntityId, Event};
+
+/// The policy-specific half of a resource: how Gridlets are multiplexed onto
+/// PEs. Implemented by [`TimeShared`] (Fig 7/8) and [`SpaceShared`]
+/// (Fig 10/11).
+pub trait LocalScheduler: std::fmt::Debug {
+    /// Update the background-load availability factor (1 − local load).
+    fn set_availability(&mut self, factor: f64, now: f64);
+    /// Withhold PEs from grid work (active advance reservations).
+    fn set_withheld_pes(&mut self, pes: usize, now: f64);
+    /// A Gridlet arrived for execution.
+    fn submit(&mut self, rg: ResGridlet, now: f64);
+    /// Advance to `now`; return Gridlets that completed.
+    fn collect(&mut self, now: f64) -> Vec<ResGridlet>;
+    /// Earliest forecast completion time, if any work is in flight.
+    fn next_completion(&mut self, now: f64) -> Option<f64>;
+    /// Gridlets currently executing.
+    fn in_exec(&self) -> usize;
+    /// Gridlets waiting in the submission queue.
+    fn queued(&self) -> usize;
+    /// Cancel a Gridlet by id (queued or running).
+    fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet>;
+    /// Status of a Gridlet currently held by the scheduler.
+    fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus>;
+    /// Fail everything in flight (failure injection).
+    fn drain(&mut self, now: f64) -> Vec<ResGridlet>;
+}
+
+/// The resource entity.
+pub struct GridResource {
+    name: String,
+    characteristics: ResourceCharacteristics,
+    calendar: ResourceCalendar,
+    scheduler: Box<dyn LocalScheduler>,
+    gis: EntityId,
+    /// Optional statistics sink.
+    stats: Option<EntityId>,
+    /// Sequence number of the most recently scheduled internal tick; stale
+    /// interrupts (Figs 7/10) are discarded by comparing against this.
+    last_tick: Option<u64>,
+    /// Arrival counter (rank for the time-shared share allocator).
+    arrivals: u64,
+    /// Failure-injection state.
+    failed: bool,
+    /// Advance reservations (paper §3.1 / §6).
+    reservations: ReservationBook,
+    /// Gridlets processed in total (metrics).
+    pub completed: u64,
+}
+
+impl GridResource {
+    /// Build a resource entity from its characteristics. The scheduler kind
+    /// follows `characteristics.policy`.
+    pub fn new(
+        name: impl Into<String>,
+        characteristics: ResourceCharacteristics,
+        calendar: ResourceCalendar,
+        gis: EntityId,
+    ) -> GridResource {
+        let scheduler: Box<dyn LocalScheduler> = match characteristics.policy {
+            AllocPolicy::TimeShared => Box::new(TimeShared::new(
+                characteristics.num_pe(),
+                characteristics.mips_per_pe(),
+            )),
+            AllocPolicy::SpaceShared(policy) => {
+                let machine_pes: Vec<usize> =
+                    characteristics.machines.iter().map(|m| m.num_pe()).collect();
+                Box::new(SpaceShared::new(
+                    &machine_pes,
+                    characteristics.mips_per_pe(),
+                    policy,
+                ))
+            }
+        };
+        let num_pe = characteristics.num_pe();
+        GridResource {
+            name: name.into(),
+            characteristics,
+            calendar,
+            scheduler,
+            gis,
+            stats: None,
+            last_tick: None,
+            arrivals: 0,
+            failed: false,
+            reservations: ReservationBook::new(num_pe),
+            completed: 0,
+        }
+    }
+
+    /// Send Gridlet completion records to this statistics entity.
+    pub fn with_stats(mut self, stats: EntityId) -> GridResource {
+        self.stats = Some(stats);
+        self
+    }
+
+    pub fn info(&self, id: EntityId) -> ResourceInfo {
+        ResourceInfo {
+            id,
+            name: self.name.clone(),
+            num_pe: self.characteristics.num_pe(),
+            mips_per_pe: self.characteristics.mips_per_pe(),
+            cost_per_pe_time: self.characteristics.cost_per_pe_time,
+            time_shared: self.characteristics.policy.is_time_shared(),
+            time_zone: self.characteristics.time_zone,
+        }
+    }
+
+    pub fn characteristics(&self) -> &ResourceCharacteristics {
+        &self.characteristics
+    }
+
+    /// Refresh calendar-driven availability and reservation withholding.
+    fn refresh_environment(&mut self, now: f64) {
+        self.scheduler.set_availability(self.calendar.availability(now), now);
+        let reserved = self.reservations.active_pes(now);
+        self.scheduler.set_withheld_pes(reserved, now);
+    }
+
+    /// (Re)schedule the internal completion interrupt at the earliest
+    /// forecast finish (Fig 7 step 2d / Fig 10).
+    fn reschedule_tick(&mut self, ctx: &mut Ctx<Msg>) {
+        if let Some(t) = self.scheduler.next_completion(ctx.now()) {
+            let delay = (t - ctx.now()).max(0.0);
+            self.last_tick = Some(ctx.schedule_self(delay, tags::RESOURCE_TICK, None));
+        } else {
+            self.last_tick = None;
+        }
+    }
+
+    /// Return finished Gridlets to their owners, record statistics.
+    fn return_finished(&mut self, ctx: &mut Ctx<Msg>, finished: Vec<ResGridlet>) {
+        for rg in finished {
+            self.completed += u64::from(rg.gridlet.status == GridletStatus::Success);
+            if let Some(stats) = self.stats {
+                let record = StatRecord {
+                    time: ctx.now(),
+                    category: format!("{}.GridletCompletion", self.name),
+                    label: format!("G{}", rg.gridlet.id),
+                    value: rg.gridlet.elapsed(),
+                };
+                ctx.send(stats, tags::RECORD_STATISTICS, Some(Msg::Stat(record)), 48);
+            }
+            let owner = rg.gridlet.owner;
+            let msg = Msg::Gridlet(Box::new(rg.gridlet));
+            let bytes = msg.wire_bytes(false);
+            ctx.send(owner, tags::GRIDLET_RETURN, Some(msg), bytes);
+        }
+    }
+}
+
+impl crate::des::Entity<Msg> for GridResource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+        // Register with the information service (like GRIS -> GIIS in
+        // Globus; paper §3.4).
+        let info = self.info(ctx.me());
+        ctx.send(self.gis, tags::REGISTER_RESOURCE, Some(Msg::Register(info)), 128);
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        match ev.tag {
+            tags::GRIDLET_SUBMIT => {
+                let Msg::Gridlet(mut g) = ev.take_data() else {
+                    panic!("GRIDLET_SUBMIT without a gridlet payload")
+                };
+                if self.failed {
+                    // Bounce immediately: the owner sees a failed Gridlet.
+                    g.status = GridletStatus::Failed;
+                    g.finish_time = ctx.now();
+                    g.resource = Some(ctx.me());
+                    let owner = g.owner;
+                    let msg = Msg::Gridlet(g);
+                    let bytes = msg.wire_bytes(false);
+                    ctx.send(owner, tags::GRIDLET_RETURN, Some(msg), bytes);
+                    return;
+                }
+                self.refresh_environment(ctx.now());
+                g.arrival_time = ctx.now();
+                g.resource = Some(ctx.me());
+                let rank = self.arrivals;
+                self.arrivals += 1;
+                self.scheduler.submit(ResGridlet::new(*g, ctx.now(), rank), ctx.now());
+                self.reschedule_tick(ctx);
+            }
+            tags::RESOURCE_TICK => {
+                // Stale-interrupt rule: only the most recently scheduled
+                // internal event signifies a completion.
+                if self.last_tick != Some(ev.seq) {
+                    return;
+                }
+                self.refresh_environment(ctx.now());
+                let finished = self.scheduler.collect(ctx.now());
+                self.return_finished(ctx, finished);
+                self.reschedule_tick(ctx);
+            }
+            tags::RESOURCE_CHARACTERISTICS => {
+                let info = self.info(ctx.me());
+                ctx.send(ev.src, tags::RESOURCE_CHARACTERISTICS, Some(Msg::Characteristics(info)), 128);
+            }
+            tags::RESOURCE_DYNAMICS => {
+                let dyn_info = ResourceDynamics {
+                    id: ctx.me(),
+                    in_exec: self.scheduler.in_exec(),
+                    queued: self.scheduler.queued(),
+                    local_load: self.calendar.load(ctx.now()),
+                    available: !self.failed,
+                };
+                ctx.send(ev.src, tags::RESOURCE_DYNAMICS, Some(Msg::Dynamics(dyn_info)), 64);
+            }
+            tags::GRIDLET_CANCEL => {
+                let Msg::GridletId(id) = ev.take_data() else {
+                    panic!("GRIDLET_CANCEL without a gridlet id")
+                };
+                self.refresh_environment(ctx.now());
+                match self.scheduler.cancel(id, ctx.now()) {
+                    Some(rg) => {
+                        let msg = Msg::Gridlet(Box::new(rg.gridlet));
+                        let bytes = msg.wire_bytes(false);
+                        ctx.send(ev.src, tags::GRIDLET_CANCEL_REPLY, Some(msg), bytes);
+                    }
+                    None => {
+                        // Unknown (already finished / returned in flight).
+                        ctx.send(ev.src, tags::GRIDLET_CANCEL_REPLY, Some(Msg::GridletId(id)), 16);
+                    }
+                }
+                self.reschedule_tick(ctx);
+            }
+            tags::GRIDLET_STATUS => {
+                let Msg::GridletId(id) = ev.take_data() else {
+                    panic!("GRIDLET_STATUS without a gridlet id")
+                };
+                // Encode the status as a small control code; unknown
+                // Gridlets (already returned) report u64::MAX.
+                let code = match self.scheduler.status_of(id) {
+                    Some(GridletStatus::Queued) => 1,
+                    Some(GridletStatus::InExec) => 2,
+                    Some(_) => 3,
+                    None => u64::MAX,
+                };
+                ctx.send(ev.src, tags::GRIDLET_STATUS, Some(Msg::Control(code)), 16);
+            }
+            tags::RESERVATION_REQUEST => {
+                let Msg::Reserve(req) = ev.take_data() else {
+                    panic!("RESERVATION_REQUEST without payload")
+                };
+                let accepted = self.reservations.try_reserve(
+                    req.reservation_id,
+                    req.start,
+                    req.duration,
+                    req.num_pe,
+                );
+                let reply = ReservationReply { reservation_id: req.reservation_id, accepted };
+                ctx.send(ev.src, tags::RESERVATION_REPLY, Some(Msg::ReserveReply(reply)), 64);
+            }
+            tags::RESOURCE_FAIL => {
+                self.failed = true;
+                let lost = self.scheduler.drain(ctx.now());
+                self.return_finished(ctx, lost);
+                self.last_tick = None;
+            }
+            tags::RESOURCE_RECOVER => {
+                self.failed = false;
+            }
+            tags::INSIGNIFICANT => {}
+            other => panic!("resource {} got unexpected tag {other}", self.name),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gridsim::machine::MachineList;
+
+    fn chars(pes: usize, mips: f64, policy: AllocPolicy) -> ResourceCharacteristics {
+        ResourceCharacteristics::new(
+            "test",
+            "linux",
+            MachineList::cluster(1, pes, mips),
+            policy,
+            1.0,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn info_reflects_characteristics() {
+        let r = GridResource::new(
+            "R0",
+            chars(4, 515.0, AllocPolicy::TimeShared),
+            ResourceCalendar::no_load(),
+            0,
+        );
+        let info = r.info(3);
+        assert_eq!(info.id, 3);
+        assert_eq!(info.num_pe, 4);
+        assert!(info.time_shared);
+        assert_eq!(info.mips_per_pe, 515.0);
+    }
+
+    #[test]
+    fn scheduler_kind_follows_policy() {
+        let ts = GridResource::new(
+            "a",
+            chars(2, 100.0, AllocPolicy::TimeShared),
+            ResourceCalendar::no_load(),
+            0,
+        );
+        assert_eq!(ts.scheduler.queued(), 0);
+        let ss = GridResource::new(
+            "b",
+            chars(2, 100.0, AllocPolicy::SpaceShared(super::super::characteristics::SpacePolicy::Fcfs)),
+            ResourceCalendar::no_load(),
+            0,
+        );
+        assert_eq!(ss.scheduler.in_exec(), 0);
+    }
+}

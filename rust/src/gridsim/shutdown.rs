@@ -1,0 +1,103 @@
+//! `gridsim.GridSimShutdown` — waits for every user entity to report
+//! completion, then ends the simulation (paper §3.6).
+
+use super::messages::Msg;
+use super::tags;
+use crate::des::{Ctx, Entity, Event};
+
+/// The shutdown coordinator entity.
+pub struct GridSimShutdown {
+    name: String,
+    users_expected: usize,
+    users_done: usize,
+}
+
+impl GridSimShutdown {
+    pub fn new(name: impl Into<String>, users_expected: usize) -> GridSimShutdown {
+        GridSimShutdown { name: name.into(), users_expected, users_done: 0 }
+    }
+
+    pub fn users_done(&self) -> usize {
+        self.users_done
+    }
+}
+
+impl Entity<Msg> for GridSimShutdown {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, ev: Event<Msg>) {
+        match ev.tag {
+            tags::END_OF_SIMULATION => {
+                self.users_done += 1;
+                if self.users_done >= self.users_expected {
+                    // All users finished: stop the event loop. Entities get
+                    // their `on_end` hooks for report generation.
+                    ctx.stop();
+                }
+            }
+            tags::INSIGNIFICANT => {}
+            other => panic!("shutdown entity got unexpected tag {other}"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::{EntityId, Simulation};
+
+    struct FinishingUser {
+        name: String,
+        shutdown: EntityId,
+        at: f64,
+    }
+
+    impl Entity<Msg> for FinishingUser {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+            ctx.send_delayed(self.shutdown, self.at, tags::END_OF_SIMULATION, None);
+            // Noise events that should never be delivered after stop.
+            ctx.schedule_self(1e9, tags::INSIGNIFICANT, None);
+        }
+        fn on_event(&mut self, _ctx: &mut Ctx<Msg>, _ev: Event<Msg>) {}
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    #[test]
+    fn stops_after_all_users() {
+        let mut sim: Simulation<Msg> = Simulation::new();
+        let shutdown = sim.add(Box::new(GridSimShutdown::new("shutdown", 2)));
+        sim.add(Box::new(FinishingUser { name: "u1".into(), shutdown, at: 5.0 }));
+        sim.add(Box::new(FinishingUser { name: "u2".into(), shutdown, at: 9.0 }));
+        let end = sim.run();
+        assert_eq!(end, 9.0, "simulation must stop at the second END event, not at 1e9");
+        assert_eq!(sim.get::<GridSimShutdown>(shutdown).unwrap().users_done(), 2);
+    }
+
+    #[test]
+    fn waits_for_stragglers() {
+        let mut sim: Simulation<Msg> = Simulation::new();
+        let shutdown = sim.add(Box::new(GridSimShutdown::new("shutdown", 3)));
+        sim.add(Box::new(FinishingUser { name: "u1".into(), shutdown, at: 5.0 }));
+        sim.add(Box::new(FinishingUser { name: "u2".into(), shutdown, at: 9.0 }));
+        // Third user never reports: simulation runs to the noise events.
+        let end = sim.run();
+        assert_eq!(end, 1e9);
+    }
+}

@@ -1,0 +1,496 @@
+//! Space-shared resource scheduling — the paper's Fig 10 event handler and
+//! Fig 11 PE allocation: each Gridlet runs on dedicated PE(s); arrivals that
+//! find no free PE wait in a submission queue ordered by the allocation
+//! policy (FCFS, SJF, or EASY backfilling — §3.5).
+
+use super::characteristics::SpacePolicy;
+use super::gridlet::GridletStatus;
+use super::res_gridlet::ResGridlet;
+use super::resource::LocalScheduler;
+use std::collections::VecDeque;
+
+/// A running job: which machine, how many PEs, and its completion time.
+#[derive(Debug)]
+struct Running {
+    rg: ResGridlet,
+    machine: usize,
+    pes: usize,
+    finish: f64,
+}
+
+/// Space-shared (queueing system) scheduler state.
+#[derive(Debug)]
+pub struct SpaceShared {
+    /// Free PEs per machine.
+    free: Vec<usize>,
+    /// PEs per machine (capacity).
+    capacity: Vec<usize>,
+    mips_per_pe: f64,
+    policy: SpacePolicy,
+    availability: f64,
+    withheld: usize,
+    exec: Vec<Running>,
+    queue: VecDeque<ResGridlet>,
+}
+
+impl SpaceShared {
+    pub fn new(machine_pes: &[usize], mips_per_pe: f64, policy: SpacePolicy) -> SpaceShared {
+        assert!(!machine_pes.is_empty());
+        assert!(mips_per_pe > 0.0);
+        SpaceShared {
+            free: machine_pes.to_vec(),
+            capacity: machine_pes.to_vec(),
+            mips_per_pe,
+            policy,
+            availability: 1.0,
+            withheld: 0,
+            exec: Vec::new(),
+            queue: VecDeque::new(),
+        }
+    }
+
+    /// Convenience constructor: a cluster of `n` uniprocessor machines.
+    pub fn cluster(n: usize, mips_per_pe: f64, policy: SpacePolicy) -> SpaceShared {
+        SpaceShared::new(&vec![1; n], mips_per_pe, policy)
+    }
+
+    fn total_free(&self) -> usize {
+        self.free.iter().sum::<usize>().saturating_sub(self.withheld)
+    }
+
+    /// Estimated runtime of a job on this resource.
+    fn runtime(&self, rg: &ResGridlet) -> f64 {
+        rg.remaining_mi / (self.mips_per_pe * self.availability)
+    }
+
+    /// Find a machine with `pes` free PEs (first fit — Fig 11 step 1:
+    /// "identify a suitable machine with free PE").
+    fn find_machine(&self, pes: usize) -> Option<usize> {
+        self.free.iter().position(|&f| f >= pes)
+    }
+
+    /// Start a job now (Fig 11): allocate PEs, mark busy, forecast finish.
+    fn start(&mut self, mut rg: ResGridlet, machine: usize, now: f64) {
+        let pes = rg.gridlet.num_pe;
+        debug_assert!(self.free[machine] >= pes);
+        self.free[machine] -= pes;
+        rg.start = now;
+        rg.gridlet.status = GridletStatus::InExec;
+        rg.machine = Some(machine);
+        let finish = now + self.runtime(&rg);
+        self.exec.push(Running { rg, machine, pes, finish });
+    }
+
+    /// Can a job requiring `pes` PEs start right now (respecting the
+    /// withheld-PE pool)?
+    fn can_start(&self, pes: usize) -> Option<usize> {
+        if self.total_free() < pes {
+            return None;
+        }
+        self.find_machine(pes)
+    }
+
+    /// Pull queued jobs onto free PEs according to the policy.
+    fn dispatch_queue(&mut self, now: f64) {
+        match self.policy {
+            SpacePolicy::Fcfs => {
+                // Strict FCFS: stop at the first job that does not fit.
+                while let Some(head) = self.queue.front() {
+                    match self.can_start(head.gridlet.num_pe) {
+                        Some(m) => {
+                            let rg = self.queue.pop_front().unwrap();
+                            self.start(rg, m, now);
+                        }
+                        None => break,
+                    }
+                }
+            }
+            SpacePolicy::Sjf => {
+                // Repeatedly start the shortest queued job that fits.
+                loop {
+                    let mut best: Option<(usize, usize)> = None; // (queue idx, machine)
+                    for (i, rg) in self.queue.iter().enumerate() {
+                        if let Some(m) = self.can_start(rg.gridlet.num_pe) {
+                            let better = match best {
+                                None => true,
+                                Some((bi, _)) => {
+                                    rg.remaining_mi < self.queue[bi].remaining_mi
+                                }
+                            };
+                            if better {
+                                best = Some((i, m));
+                            }
+                        }
+                    }
+                    match best {
+                        Some((i, m)) => {
+                            let rg = self.queue.remove(i).unwrap();
+                            self.start(rg, m, now);
+                        }
+                        None => break,
+                    }
+                }
+            }
+            SpacePolicy::BackfillEasy => self.dispatch_backfill(now),
+        }
+    }
+
+    /// EASY backfilling: start the head if possible; otherwise compute the
+    /// head's *shadow time* (earliest time enough PEs free up) and let later
+    /// jobs run now iff they finish by the shadow time or fit into the PEs
+    /// the head will not need.
+    fn dispatch_backfill(&mut self, now: f64) {
+        loop {
+            let Some(head) = self.queue.front() else { return };
+            if let Some(m) = self.can_start(head.gridlet.num_pe) {
+                let rg = self.queue.pop_front().unwrap();
+                self.start(rg, m, now);
+                continue;
+            }
+            break;
+        }
+        let Some(head) = self.queue.front() else { return };
+        let head_pes = head.gridlet.num_pe;
+        // Shadow time: walk running jobs by finish time until enough PEs
+        // would be free for the head.
+        let mut finishes: Vec<(f64, usize)> =
+            self.exec.iter().map(|r| (r.finish, r.pes)).collect();
+        finishes.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut free = self.total_free();
+        let mut shadow = f64::INFINITY;
+        for (t, pes) in finishes {
+            free += pes;
+            if free >= head_pes {
+                shadow = t;
+                break;
+            }
+        }
+        // PEs the head leaves over at shadow time.
+        let spare = free.saturating_sub(head_pes);
+        // Backfill candidates: everything after the head, in order.
+        let mut i = 1;
+        while i < self.queue.len() {
+            let rg = &self.queue[i];
+            let pes = rg.gridlet.num_pe;
+            let fits_now = self.can_start(pes);
+            let finishes_in_time = now + self.runtime(rg) <= shadow + 1e-12;
+            let fits_spare = pes <= spare;
+            if let (Some(m), true) = (fits_now, finishes_in_time || fits_spare) {
+                let rg = self.queue.remove(i).unwrap();
+                self.start(rg, m, now);
+                // Restart scan: free counts changed.
+                i = 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Test hook: ids currently executing.
+    pub fn exec_ids(&self) -> Vec<usize> {
+        self.exec.iter().map(|r| r.rg.gridlet.id).collect()
+    }
+
+    /// Test hook: ids currently queued, in queue order.
+    pub fn queue_ids(&self) -> Vec<usize> {
+        self.queue.iter().map(|rg| rg.gridlet.id).collect()
+    }
+}
+
+impl LocalScheduler for SpaceShared {
+    fn set_availability(&mut self, factor: f64, _now: f64) {
+        // Applies to jobs started after the change (running jobs keep their
+        // forecast completion — dedicated PEs are not re-shared).
+        self.availability = factor.clamp(0.0, 1.0).max(1e-9);
+    }
+
+    fn set_withheld_pes(&mut self, pes: usize, now: f64) {
+        self.withheld = pes;
+        // Withholding never preempts running work; it only gates dispatch.
+        let _ = now;
+    }
+
+    fn submit(&mut self, mut rg: ResGridlet, now: f64) {
+        assert!(
+            rg.gridlet.num_pe <= self.capacity.iter().copied().max().unwrap_or(0),
+            "gridlet {} needs {} PEs, larger than any machine",
+            rg.gridlet.id,
+            rg.gridlet.num_pe
+        );
+        // Fig 10 step 2: start immediately if a PE is free, else queue.
+        rg.gridlet.status = GridletStatus::Queued;
+        self.queue.push_back(rg);
+        self.dispatch_queue(now);
+    }
+
+    fn collect(&mut self, now: f64) -> Vec<ResGridlet> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.exec.len() {
+            if self.exec[i].finish <= now + 1e-9 {
+                let Running { mut rg, machine, pes, finish } = self.exec.remove(i);
+                self.free[machine] += pes;
+                rg.remaining_mi = 0.0;
+                rg.gridlet.status = GridletStatus::Success;
+                rg.gridlet.finish_time = finish;
+                rg.gridlet.cpu_time =
+                    (finish - rg.start) * pes as f64;
+                done.push(rg);
+            } else {
+                i += 1;
+            }
+        }
+        if !done.is_empty() {
+            // Fig 10 step 3: a completion frees PEs; pick waiting jobs.
+            self.dispatch_queue(now);
+        }
+        done
+    }
+
+    fn next_completion(&mut self, _now: f64) -> Option<f64> {
+        self.exec.iter().map(|r| r.finish).min_by(|a, b| a.total_cmp(b))
+    }
+
+    fn in_exec(&self) -> usize {
+        self.exec.len()
+    }
+
+    fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet> {
+        // Queued jobs cancel for free.
+        if let Some(i) = self.queue.iter().position(|rg| rg.gridlet.id == gridlet_id) {
+            let mut rg = self.queue.remove(i).unwrap();
+            rg.gridlet.status = GridletStatus::Canceled;
+            rg.gridlet.finish_time = now;
+            rg.gridlet.cpu_time = 0.0;
+            return Some(rg);
+        }
+        // Running jobs free their PEs and are charged for consumed time.
+        let i = self.exec.iter().position(|r| r.rg.gridlet.id == gridlet_id)?;
+        let Running { mut rg, machine, pes, .. } = self.exec.remove(i);
+        self.free[machine] += pes;
+        let ran = (now - rg.start).max(0.0);
+        rg.consume(ran * self.mips_per_pe * self.availability);
+        rg.gridlet.status = GridletStatus::Canceled;
+        rg.gridlet.finish_time = now;
+        rg.gridlet.cpu_time = ran * pes as f64;
+        self.dispatch_queue(now);
+        Some(rg)
+    }
+
+    fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus> {
+        if let Some(r) = self.exec.iter().find(|r| r.rg.gridlet.id == gridlet_id) {
+            return Some(r.rg.gridlet.status);
+        }
+        self.queue
+            .iter()
+            .find(|rg| rg.gridlet.id == gridlet_id)
+            .map(|rg| rg.gridlet.status)
+    }
+
+    fn drain(&mut self, now: f64) -> Vec<ResGridlet> {
+        let mut all = Vec::new();
+        for Running { mut rg, machine, pes, .. } in self.exec.drain(..) {
+            self.free[machine] += pes;
+            rg.gridlet.status = GridletStatus::Failed;
+            rg.gridlet.finish_time = now;
+            all.push(rg);
+        }
+        for mut rg in self.queue.drain(..) {
+            rg.gridlet.status = GridletStatus::Failed;
+            rg.gridlet.finish_time = now;
+            all.push(rg);
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gridsim::gridlet::Gridlet;
+
+    fn rg(id: usize, mi: f64, now: f64, rank: u64) -> ResGridlet {
+        ResGridlet::new(Gridlet::new(id, mi, 0, 0), now, rank)
+    }
+
+    fn rg_pes(id: usize, mi: f64, pes: usize) -> ResGridlet {
+        ResGridlet::new(Gridlet::new(id, mi, 0, 0).with_pes(pes), 0.0, id as u64)
+    }
+
+    /// The paper's Table 1 / Fig 12 scenario.
+    #[test]
+    fn table1_space_shared_exact() {
+        let mut ss = SpaceShared::new(&[2], 1.0, SpacePolicy::Fcfs);
+        // t=0: G1 → PE1, finish 10.
+        ss.submit(rg(1, 10.0, 0.0, 0), 0.0);
+        assert_eq!(ss.next_completion(0.0), Some(10.0));
+        // t=4: G2 → PE2, finish 12.5.
+        ss.submit(rg(2, 8.5, 4.0, 1), 4.0);
+        assert_eq!(ss.in_exec(), 2);
+        // t=7: G3 queued (no free PE).
+        ss.submit(rg(3, 9.5, 7.0, 2), 7.0);
+        assert_eq!(ss.queued(), 1);
+        // t=10: G1 completes; G3 starts → finish 19.5.
+        let done = ss.collect(10.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].gridlet.id, 1);
+        assert_eq!(done[0].gridlet.finish_time, 10.0);
+        assert_eq!(ss.queued(), 0);
+        assert_eq!(ss.in_exec(), 2);
+        // t=12.5: G2 completes (elapsed 8.5).
+        assert_eq!(ss.next_completion(10.0), Some(12.5));
+        let done = ss.collect(12.5);
+        assert_eq!(done[0].gridlet.id, 2);
+        assert_eq!(done[0].gridlet.elapsed(), 8.5);
+        // t=19.5: G3 completes (elapsed 12.5 — Table 1).
+        assert_eq!(ss.next_completion(12.5), Some(19.5));
+        let done = ss.collect(19.5);
+        assert_eq!(done[0].gridlet.id, 3);
+        assert_eq!(done[0].gridlet.elapsed(), 12.5);
+    }
+
+    #[test]
+    fn fcfs_does_not_reorder() {
+        let mut ss = SpaceShared::new(&[1], 1.0, SpacePolicy::Fcfs);
+        ss.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ss.submit(rg(1, 100.0, 0.0, 1), 0.0); // long job queued first
+        ss.submit(rg(2, 1.0, 0.0, 2), 0.0); // short job queued second
+        let done = ss.collect(10.0);
+        assert_eq!(done[0].gridlet.id, 0);
+        // FCFS starts the long job even though a shorter one waits.
+        assert_eq!(ss.exec_ids(), vec![1]);
+        assert_eq!(ss.queue_ids(), vec![2]);
+    }
+
+    #[test]
+    fn sjf_picks_shortest() {
+        let mut ss = SpaceShared::new(&[1], 1.0, SpacePolicy::Sjf);
+        ss.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ss.submit(rg(1, 100.0, 0.0, 1), 0.0);
+        ss.submit(rg(2, 1.0, 0.0, 2), 0.0);
+        ss.collect(10.0);
+        // SJF runs the 1-MI job before the 100-MI job.
+        assert_eq!(ss.exec_ids(), vec![2]);
+    }
+
+    #[test]
+    fn backfill_jumps_small_jobs() {
+        // 2 PEs. Running: J0 uses 2 PEs until t=10. Queue: J1 needs 2 PEs
+        // (head, must wait until 10), J2 needs 1 PE and runs 5 units.
+        // EASY: J2 cannot start (0 free). After J0 finishes, J1 starts.
+        let mut ss = SpaceShared::new(&[2], 1.0, SpacePolicy::BackfillEasy);
+        ss.submit(rg_pes(0, 10.0, 2), 0.0);
+        ss.submit(rg_pes(1, 10.0, 2), 0.0);
+        ss.submit(rg_pes(2, 5.0, 1), 0.0);
+        assert_eq!(ss.exec_ids(), vec![0]);
+        assert_eq!(ss.queue_ids(), vec![1, 2]);
+
+        // Now with one PE free: running J0 uses 1 PE until 10; head J1 needs
+        // 2 PEs → shadow = 10. J2 (1 PE, 5 units, finishes at 5 ≤ 10)
+        // backfills immediately.
+        let mut ss = SpaceShared::new(&[2], 1.0, SpacePolicy::BackfillEasy);
+        ss.submit(rg_pes(0, 10.0, 1), 0.0);
+        ss.submit(rg_pes(1, 10.0, 2), 0.0);
+        ss.submit(rg_pes(2, 5.0, 1), 0.0);
+        assert_eq!(ss.exec_ids(), vec![0, 2], "J2 should backfill");
+        assert_eq!(ss.queue_ids(), vec![1]);
+    }
+
+    #[test]
+    fn backfill_refuses_delaying_head() {
+        // J0 runs 1 PE until 10; head J1 needs 2 PEs (shadow 10).
+        // J2 needs 1 PE for 20 units → would finish at 20 > shadow and
+        // spare = (free at shadow 2 − head 2) = 0 → must NOT backfill.
+        let mut ss = SpaceShared::new(&[2], 1.0, SpacePolicy::BackfillEasy);
+        ss.submit(rg_pes(0, 10.0, 1), 0.0);
+        ss.submit(rg_pes(1, 10.0, 2), 0.0);
+        ss.submit(rg_pes(2, 20.0, 1), 0.0);
+        assert_eq!(ss.exec_ids(), vec![0]);
+        assert_eq!(ss.queue_ids(), vec![1, 2]);
+    }
+
+    #[test]
+    fn multi_pe_needs_one_machine() {
+        // Two machines × 2 PEs: a 2-PE job fits, even with 1 PE busy on m0.
+        let mut ss = SpaceShared::new(&[2, 2], 1.0, SpacePolicy::Fcfs);
+        ss.submit(rg_pes(0, 10.0, 1), 0.0);
+        ss.submit(rg_pes(1, 10.0, 2), 0.0);
+        assert_eq!(ss.in_exec(), 2);
+        // A 3-PE job can never fit a 2-PE machine.
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than any machine")]
+    fn oversized_job_rejected() {
+        let mut ss = SpaceShared::new(&[2, 2], 1.0, SpacePolicy::Fcfs);
+        ss.submit(rg_pes(0, 10.0, 3), 0.0);
+    }
+
+    #[test]
+    fn cpu_time_counts_pes() {
+        let mut ss = SpaceShared::new(&[2], 2.0, SpacePolicy::Fcfs);
+        ss.submit(rg_pes(0, 10.0, 2), 0.0);
+        let done = ss.collect(5.0);
+        // runtime = 10/2 = 5; cpu_time = 5 × 2 PEs = 10 PE-units.
+        assert_eq!(done[0].gridlet.finish_time, 5.0);
+        assert_eq!(done[0].gridlet.cpu_time, 10.0);
+    }
+
+    #[test]
+    fn cancel_queued_is_free() {
+        let mut ss = SpaceShared::new(&[1], 1.0, SpacePolicy::Fcfs);
+        ss.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ss.submit(rg(1, 10.0, 0.0, 1), 0.0);
+        let c = ss.cancel(1, 3.0).unwrap();
+        assert_eq!(c.gridlet.status, GridletStatus::Canceled);
+        assert_eq!(c.gridlet.cpu_time, 0.0);
+    }
+
+    #[test]
+    fn cancel_running_frees_pe_and_dispatches() {
+        let mut ss = SpaceShared::new(&[1], 1.0, SpacePolicy::Fcfs);
+        ss.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ss.submit(rg(1, 5.0, 0.0, 1), 0.0);
+        let c = ss.cancel(0, 4.0).unwrap();
+        assert_eq!(c.gridlet.cpu_time, 4.0);
+        assert_eq!(c.remaining_mi, 6.0);
+        // The queued job starts immediately.
+        assert_eq!(ss.exec_ids(), vec![1]);
+    }
+
+    #[test]
+    fn drain_flushes_exec_and_queue() {
+        let mut ss = SpaceShared::new(&[1], 1.0, SpacePolicy::Fcfs);
+        ss.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ss.submit(rg(1, 10.0, 0.0, 1), 0.0);
+        let all = ss.drain(2.0);
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|r| r.gridlet.status == GridletStatus::Failed));
+        assert_eq!(ss.total_free(), 1);
+    }
+
+    #[test]
+    fn withheld_gates_dispatch() {
+        let mut ss = SpaceShared::new(&[2], 1.0, SpacePolicy::Fcfs);
+        ss.set_withheld_pes(1, 0.0);
+        ss.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ss.submit(rg(1, 10.0, 0.0, 1), 0.0);
+        assert_eq!(ss.in_exec(), 1);
+        assert_eq!(ss.queued(), 1);
+        ss.set_withheld_pes(0, 1.0);
+        ss.dispatch_queue(1.0);
+        assert_eq!(ss.in_exec(), 2);
+    }
+
+    #[test]
+    fn availability_slows_new_jobs() {
+        let mut ss = SpaceShared::new(&[1], 10.0, SpacePolicy::Fcfs);
+        ss.set_availability(0.5, 0.0);
+        ss.submit(rg(0, 100.0, 0.0, 0), 0.0);
+        assert_eq!(ss.next_completion(0.0), Some(20.0));
+    }
+}

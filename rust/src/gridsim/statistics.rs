@@ -1,0 +1,213 @@
+//! `gridsim.GridStatistics` + `gridsim.Accumulator` (paper §3.6): an entity
+//! that records labelled, timestamped measurements from other entities, and
+//! a placeholder for summary statistics over a data series.
+
+use super::messages::Msg;
+use super::tags;
+use crate::des::{Ctx, Entity, Event};
+
+/// One recorded measurement.
+#[derive(Debug, Clone)]
+pub struct StatRecord {
+    pub time: f64,
+    /// Dotted category, e.g. `"*.USER.TimeUtilization"` in the paper's
+    /// report-writer configuration.
+    pub category: String,
+    pub label: String,
+    pub value: f64,
+}
+
+/// `gridsim.Accumulator` — running mean/sum/σ/min/max of a series.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    sum: f64,
+    sum_sq: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Accumulator {
+        Accumulator { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Population standard deviation.
+    pub fn std_dev(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        (self.sum_sq / self.n as f64 - mean * mean).max(0.0).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
+/// The statistics entity: a passive sink for `RECORD_STATISTICS` events.
+/// After the run, the report writer reads `records()` / `accumulator_for()`.
+pub struct GridStatistics {
+    name: String,
+    records: Vec<StatRecord>,
+}
+
+impl GridStatistics {
+    pub fn new(name: impl Into<String>) -> GridStatistics {
+        GridStatistics { name: name.into(), records: Vec::new() }
+    }
+
+    pub fn records(&self) -> &[StatRecord] {
+        &self.records
+    }
+
+    /// All records whose category matches `pattern`, where a leading `*.`
+    /// matches any prefix (the paper's category syntax, e.g.
+    /// `"*.USER.TimeUtilization"`).
+    pub fn matching(&self, pattern: &str) -> Vec<&StatRecord> {
+        self.records.iter().filter(|r| category_matches(pattern, &r.category)).collect()
+    }
+
+    /// Accumulator over all values in a category.
+    pub fn accumulator_for(&self, pattern: &str) -> Accumulator {
+        let mut acc = Accumulator::new();
+        for r in self.matching(pattern) {
+            acc.add(r.value);
+        }
+        acc
+    }
+}
+
+/// `*.X.Y` matches any category ending with `.X.Y` (or equal to `X.Y`);
+/// otherwise exact match.
+fn category_matches(pattern: &str, category: &str) -> bool {
+    match pattern.strip_prefix("*.") {
+        Some(suffix) => {
+            category == suffix || category.ends_with(&format!(".{suffix}"))
+        }
+        None => pattern == category,
+    }
+}
+
+impl Entity<Msg> for GridStatistics {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_event(&mut self, _ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        match ev.tag {
+            tags::RECORD_STATISTICS => {
+                let Msg::Stat(record) = ev.take_data() else {
+                    panic!("RECORD_STATISTICS without payload")
+                };
+                self.records.push(record);
+            }
+            tags::INSIGNIFICANT => {}
+            other => panic!("statistics entity got unexpected tag {other}"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_summary() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.sum(), 10.0);
+        assert_eq!(a.mean(), 2.5);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+        // Population σ of 1..4 = sqrt(1.25).
+        assert!((a.std_dev() - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_empty() {
+        let a = Accumulator::new();
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.std_dev(), 0.0);
+        assert_eq!(a.min(), 0.0);
+        assert_eq!(a.max(), 0.0);
+    }
+
+    #[test]
+    fn category_wildcards() {
+        assert!(category_matches("*.USER.Time", "U1.USER.Time"));
+        assert!(category_matches("*.USER.Time", "USER.Time"));
+        assert!(!category_matches("*.USER.Time", "U1.USER.Budget"));
+        assert!(category_matches("exact", "exact"));
+        assert!(!category_matches("exact", "not.exact2"));
+        // Suffix must align on a dot boundary.
+        assert!(!category_matches("*.SER.Time", "U1.USER.Time"));
+    }
+
+    #[test]
+    fn matching_and_accumulating() {
+        let mut s = GridStatistics::new("stats");
+        for (cat, v) in [
+            ("U1.USER.Time", 1.0),
+            ("U2.USER.Time", 3.0),
+            ("U1.USER.Budget", 100.0),
+        ] {
+            s.records.push(StatRecord {
+                time: 0.0,
+                category: cat.into(),
+                label: "x".into(),
+                value: v,
+            });
+        }
+        assert_eq!(s.matching("*.USER.Time").len(), 2);
+        let acc = s.accumulator_for("*.USER.Time");
+        assert_eq!(acc.mean(), 2.0);
+    }
+}

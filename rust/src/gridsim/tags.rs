@@ -1,0 +1,62 @@
+//! Protocol tags — the `gridsim.GridSimTags` constants (paper Fig 14).
+//!
+//! Tags select the service requested when an event is delivered; the values
+//! mirror the paper's published constants where they exist and extend them
+//! for internal bookkeeping.
+
+/// Deliver with no delay.
+pub const SCHEDULE_NOW: f64 = 0.0;
+
+/// End-of-simulation control message (user -> shutdown entity).
+pub const END_OF_SIMULATION: i64 = -1;
+
+/// Ignorable event.
+pub const INSIGNIFICANT: i64 = 0;
+/// User <-> Broker: run an experiment.
+pub const EXPERIMENT: i64 = 1;
+/// Resource -> GIS: register.
+pub const REGISTER_RESOURCE: i64 = 2;
+/// GIS <-> Broker: resource discovery.
+pub const RESOURCE_LIST: i64 = 3;
+/// Broker <-> Resource: static characteristics query/reply.
+pub const RESOURCE_CHARACTERISTICS: i64 = 4;
+/// Broker <-> Resource: dynamic state (load) query/reply.
+pub const RESOURCE_DYNAMICS: i64 = 5;
+/// Broker -> Resource: submit a Gridlet for execution.
+pub const GRIDLET_SUBMIT: i64 = 6;
+/// Resource -> Broker: return a processed Gridlet.
+pub const GRIDLET_RETURN: i64 = 7;
+/// Broker <-> Resource: query the status of a submitted Gridlet.
+pub const GRIDLET_STATUS: i64 = 8;
+/// Entity -> GridStatistics: record a measurement.
+pub const RECORD_STATISTICS: i64 = 9;
+/// Entity <- GridStatistics: recorded series reply.
+pub const RETURN_STAT_LIST: i64 = 10;
+/// Entity <- GridStatistics: accumulator reply by category.
+pub const RETURN_ACC_STATISTICS_BY_CATEGORY: i64 = 11;
+
+/// Broker -> Resource: cancel a previously submitted Gridlet (needed by the
+/// DBC schedule advisor when it moves jobs back to the unassigned queue).
+pub const GRIDLET_CANCEL: i64 = 12;
+/// Resource -> Broker: reply to a cancel request.
+pub const GRIDLET_CANCEL_REPLY: i64 = 13;
+/// Broker -> Resource: advance-reservation request (paper §3.1 / future work).
+pub const RESERVATION_REQUEST: i64 = 14;
+/// Resource -> Broker: advance-reservation reply.
+pub const RESERVATION_REPLY: i64 = 15;
+
+/// Internal: resource forecast interrupt (Gridlet completion tick).
+pub const RESOURCE_TICK: i64 = 100;
+/// Internal: broker scheduling-loop tick.
+pub const BROKER_TICK: i64 = 101;
+/// Internal: user activity tick (job creation).
+pub const USER_TICK: i64 = 102;
+/// User -> Broker / Broker -> User: experiment completion handoff.
+pub const EXPERIMENT_DONE: i64 = 103;
+/// Resource failure injection (fault-tolerance testing).
+pub const RESOURCE_FAIL: i64 = 104;
+/// Resource recovery after failure.
+pub const RESOURCE_RECOVER: i64 = 105;
+
+/// Default baud rate (bits per simulated second) — paper Fig 14.
+pub const DEFAULT_BAUD_RATE: f64 = 9600.0;

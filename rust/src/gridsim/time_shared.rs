@@ -1,0 +1,322 @@
+//! Time-shared resource scheduling — the paper's Fig 7 event handler and
+//! Fig 8 PE-share allocation, reproduced exactly.
+//!
+//! All Gridlets execute concurrently and share the PEs round-robin. Between
+//! events the simulator advances every Gridlet by its *share* of the
+//! available MIPS; on each arrival/completion the shares are recomputed and
+//! a completion interrupt is (re)scheduled at the earliest forecast finish.
+//!
+//! Share allocation with `n` Gridlets on `p` PEs (Fig 8):
+//! * `n ≤ p`: every Gridlet gets a full PE (`MIPS · Δt` MI per interval);
+//! * `n > p`: `min_per_pe = ⌊n/p⌋`, `extra = n mod p`;
+//!   `(p − extra) · min_per_pe` Gridlets (the earliest arrivals) receive
+//!   `MIPS·Δt / min_per_pe`, the remaining Gridlets receive
+//!   `MIPS·Δt / (min_per_pe + 1)`.
+
+use super::gridlet::GridletStatus;
+use super::res_gridlet::ResGridlet;
+use super::resource::LocalScheduler;
+
+/// Time-shared (round-robin multitasking) scheduler state.
+#[derive(Debug)]
+pub struct TimeShared {
+    /// PEs in the resource.
+    num_pe: usize,
+    /// MIPS rating of one PE.
+    mips_per_pe: f64,
+    /// PEs withheld (active advance reservations / failures).
+    withheld_pe: usize,
+    /// Execution set, kept in arrival-rank order.
+    exec: Vec<ResGridlet>,
+    /// Last time `advance` ran (share bookkeeping anchor).
+    last_time: f64,
+    /// Availability factor (1 − local load) in effect since `last_time`.
+    availability: f64,
+}
+
+impl TimeShared {
+    pub fn new(num_pe: usize, mips_per_pe: f64) -> TimeShared {
+        assert!(num_pe >= 1);
+        assert!(mips_per_pe > 0.0);
+        TimeShared {
+            num_pe,
+            mips_per_pe,
+            withheld_pe: 0,
+            exec: Vec::new(),
+            last_time: 0.0,
+            availability: 1.0,
+        }
+    }
+
+    /// Effective PEs currently usable by grid work.
+    fn effective_pe(&self) -> usize {
+        (self.num_pe - self.withheld_pe).max(1)
+    }
+
+    /// Per-Gridlet processing rates (MI per time unit) under Fig 8, in the
+    /// order of `self.exec`.
+    fn rates(&self) -> Vec<f64> {
+        let n = self.exec.len();
+        let p = self.effective_pe();
+        let eff = self.mips_per_pe * self.availability;
+        if n == 0 {
+            return Vec::new();
+        }
+        if n <= p {
+            return vec![eff; n];
+        }
+        let min_per_pe = n / p;
+        let extra = n % p;
+        let max_share_count = (p - extra) * min_per_pe;
+        let max_rate = eff / min_per_pe as f64;
+        let min_rate = eff / (min_per_pe + 1) as f64;
+        (0..n).map(|i| if i < max_share_count { max_rate } else { min_rate }).collect()
+    }
+
+    /// Advance all executing Gridlets from `last_time` to `now`, consuming
+    /// their PE shares ("Allocate PE Share for Gridlets Processed so far").
+    fn advance(&mut self, now: f64) {
+        let elapsed = now - self.last_time;
+        if elapsed > 0.0 && !self.exec.is_empty() {
+            let rates = self.rates();
+            for (rg, rate) in self.exec.iter_mut().zip(rates) {
+                rg.consume(rate * elapsed);
+            }
+        }
+        self.last_time = self.last_time.max(now);
+    }
+
+    /// Test/inspection hook: remaining MI per gridlet in rank order.
+    pub fn remaining(&self) -> Vec<f64> {
+        self.exec.iter().map(|rg| rg.remaining_mi).collect()
+    }
+}
+
+impl LocalScheduler for TimeShared {
+    fn set_availability(&mut self, factor: f64, now: f64) {
+        // Piecewise-constant background load: settle the old interval at the
+        // old factor, then switch.
+        self.advance(now);
+        self.availability = factor.clamp(0.0, 1.0).max(1e-9);
+    }
+
+    fn set_withheld_pes(&mut self, pes: usize, now: f64) {
+        self.advance(now);
+        self.withheld_pe = pes.min(self.num_pe.saturating_sub(1));
+    }
+
+    fn submit(&mut self, mut rg: ResGridlet, now: f64) {
+        self.advance(now);
+        rg.start = now;
+        rg.gridlet.status = GridletStatus::InExec;
+        // Time-shared systems start every job immediately (paper §3.5.1).
+        self.exec.push(rg);
+    }
+
+    fn collect(&mut self, now: f64) -> Vec<ResGridlet> {
+        self.advance(now);
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.exec.len() {
+            if self.exec[i].is_done() {
+                let mut rg = self.exec.remove(i);
+                rg.remaining_mi = 0.0;
+                rg.gridlet.status = GridletStatus::Success;
+                rg.gridlet.finish_time = now;
+                rg.gridlet.cpu_time = rg.gridlet.length_mi / self.mips_per_pe;
+                done.push(rg);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    fn next_completion(&mut self, now: f64) -> Option<f64> {
+        self.advance(now);
+        let rates = self.rates();
+        self.exec
+            .iter()
+            .zip(rates)
+            .map(|(rg, rate)| now + rg.remaining_mi / rate)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    fn in_exec(&self) -> usize {
+        self.exec.len()
+    }
+
+    fn queued(&self) -> usize {
+        0 // time-shared resources never queue (paper §3.5.1)
+    }
+
+    fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet> {
+        self.advance(now);
+        let idx = self.exec.iter().position(|rg| rg.gridlet.id == gridlet_id)?;
+        let mut rg = self.exec.remove(idx);
+        rg.gridlet.status = GridletStatus::Canceled;
+        rg.gridlet.finish_time = now;
+        // Charge for the work actually consumed.
+        rg.gridlet.cpu_time = (rg.gridlet.length_mi - rg.remaining_mi) / self.mips_per_pe;
+        Some(rg)
+    }
+
+    fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus> {
+        self.exec
+            .iter()
+            .find(|rg| rg.gridlet.id == gridlet_id)
+            .map(|rg| rg.gridlet.status)
+    }
+
+    fn drain(&mut self, now: f64) -> Vec<ResGridlet> {
+        self.advance(now);
+        let mut all: Vec<ResGridlet> = std::mem::take(&mut self.exec);
+        for rg in &mut all {
+            rg.gridlet.status = GridletStatus::Failed;
+            rg.gridlet.finish_time = now;
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gridsim::gridlet::Gridlet;
+
+    fn rg(id: usize, mi: f64, now: f64, rank: u64) -> ResGridlet {
+        ResGridlet::new(Gridlet::new(id, mi, 0, 0), now, rank)
+    }
+
+    /// The paper's Table 1 / Fig 9 scenario, step by step.
+    #[test]
+    fn table1_time_shared_exact() {
+        let mut ts = TimeShared::new(2, 1.0);
+        // t=0: G1 (10 MI) arrives.
+        ts.submit(rg(1, 10.0, 0.0, 0), 0.0);
+        assert_eq!(ts.next_completion(0.0), Some(10.0));
+        // t=4: G2 (8.5 MI) arrives; both on separate PEs.
+        ts.submit(rg(2, 8.5, 4.0, 1), 4.0);
+        assert_eq!(ts.next_completion(4.0), Some(10.0)); // G1 still first
+        // G2 predicted at 12.5 while n <= p.
+        // t=7: G3 (9.5 MI) arrives; shares: G1 full PE, G2+G3 share PE2.
+        ts.submit(rg(3, 9.5, 7.0, 2), 7.0);
+        assert_eq!(ts.next_completion(7.0), Some(10.0));
+        // t=10: G1 completes.
+        let done = ts.collect(10.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].gridlet.id, 1);
+        assert_eq!(done[0].gridlet.finish_time, 10.0);
+        // After G1 leaves: G2 has 4.0 left, G3 has 8.0; both full-PE now.
+        assert_eq!(ts.remaining(), vec![4.0, 8.0]);
+        assert_eq!(ts.next_completion(10.0), Some(14.0));
+        // t=14: G2 completes (Table 1: finish 14, elapsed 10).
+        let done = ts.collect(14.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].gridlet.id, 2);
+        assert_eq!(done[0].gridlet.finish_time, 14.0);
+        assert_eq!(done[0].gridlet.elapsed(), 10.0);
+        // t=18: G3 completes (Table 1: finish 18, elapsed 11).
+        assert_eq!(ts.next_completion(14.0), Some(18.0));
+        let done = ts.collect(18.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].gridlet.id, 3);
+        assert_eq!(done[0].gridlet.elapsed(), 11.0);
+        assert_eq!(ts.in_exec(), 0);
+    }
+
+    #[test]
+    fn fig8_share_allocation_5_jobs_2_pes() {
+        // n=5, p=2: min_per_pe=2, extra=1, max_share_count=(2-1)*2=2.
+        // First 2 gridlets at MIPS/2, remaining 3 at MIPS/3.
+        let mut ts = TimeShared::new(2, 6.0);
+        for i in 0..5 {
+            ts.submit(rg(i, 60.0, 0.0, i as u64), 0.0);
+        }
+        let rates = ts.rates();
+        assert_eq!(rates, vec![3.0, 3.0, 2.0, 2.0, 2.0]);
+        // Total rate never exceeds aggregate MIPS.
+        assert!((rates.iter().sum::<f64>() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_pe_round_robin() {
+        // Two equal jobs on one PE finish together at 2×(len/MIPS).
+        let mut ts = TimeShared::new(1, 10.0);
+        ts.submit(rg(0, 100.0, 0.0, 0), 0.0);
+        ts.submit(rg(1, 100.0, 0.0, 1), 0.0);
+        assert_eq!(ts.next_completion(0.0), Some(20.0));
+        let done = ts.collect(20.0);
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn cpu_time_is_length_over_mips() {
+        let mut ts = TimeShared::new(1, 4.0);
+        ts.submit(rg(0, 100.0, 0.0, 0), 0.0);
+        ts.submit(rg(1, 100.0, 0.0, 1), 0.0);
+        let done = ts.collect(50.0);
+        for rg in &done {
+            assert_eq!(rg.gridlet.cpu_time, 25.0); // 100 MI / 4 MIPS
+            assert_eq!(rg.gridlet.finish_time, 50.0); // wall-clock doubled
+        }
+    }
+
+    #[test]
+    fn availability_scales_rates() {
+        let mut ts = TimeShared::new(1, 10.0);
+        ts.set_availability(0.5, 0.0);
+        ts.submit(rg(0, 100.0, 0.0, 0), 0.0);
+        // Effective 5 MIPS → done at t=20.
+        assert_eq!(ts.next_completion(0.0), Some(20.0));
+    }
+
+    #[test]
+    fn availability_change_mid_run_is_piecewise() {
+        let mut ts = TimeShared::new(1, 10.0);
+        ts.submit(rg(0, 100.0, 0.0, 0), 0.0);
+        // Full speed until t=5 (50 MI done), then half speed.
+        ts.set_availability(0.5, 5.0);
+        assert_eq!(ts.remaining(), vec![50.0]);
+        assert_eq!(ts.next_completion(5.0), Some(15.0));
+    }
+
+    #[test]
+    fn cancel_charges_partial_work() {
+        let mut ts = TimeShared::new(1, 10.0);
+        ts.submit(rg(7, 100.0, 0.0, 0), 0.0);
+        let rg = ts.cancel(7, 4.0).unwrap();
+        assert_eq!(rg.gridlet.status, GridletStatus::Canceled);
+        assert_eq!(rg.gridlet.cpu_time, 4.0); // 40 MI consumed / 10 MIPS
+        assert_eq!(ts.in_exec(), 0);
+        assert!(ts.cancel(7, 5.0).is_none());
+    }
+
+    #[test]
+    fn drain_fails_everything() {
+        let mut ts = TimeShared::new(2, 1.0);
+        ts.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ts.submit(rg(1, 10.0, 0.0, 1), 0.0);
+        let all = ts.drain(3.0);
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|rg| rg.gridlet.status == GridletStatus::Failed));
+        assert_eq!(ts.in_exec(), 0);
+    }
+
+    #[test]
+    fn withheld_pes_reduce_capacity() {
+        let mut ts = TimeShared::new(2, 1.0);
+        ts.set_withheld_pes(1, 0.0);
+        ts.submit(rg(0, 10.0, 0.0, 0), 0.0);
+        ts.submit(rg(1, 10.0, 0.0, 1), 0.0);
+        // One effective PE shared by two jobs → both at rate 0.5, done at 40.
+        assert_eq!(ts.next_completion(0.0), Some(20.0));
+    }
+
+    #[test]
+    fn empty_has_no_completion() {
+        let mut ts = TimeShared::new(2, 1.0);
+        assert_eq!(ts.next_completion(0.0), None);
+        assert!(ts.collect(5.0).is_empty());
+    }
+}

@@ -1,0 +1,52 @@
+//! # GridSim — a Rust reproduction of the GridSim toolkit
+//!
+//! Reproduction of *GridSim: A Toolkit for the Modeling and Simulation of
+//! Distributed Resource Management and Scheduling for Grid Computing*
+//! (Buyya & Murshed, 2002) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map:
+//! * [`des`] — deterministic discrete-event simulation kernel (the SimJava
+//!   substrate, rebuilt as an event-handler model).
+//! * [`gridsim`] — the grid entity toolkit: PEs, machines, time-/space-shared
+//!   resources, Gridlets, the information service, network delays,
+//!   statistics, calendars and reservations.
+//! * [`broker`] — the Nimrod-G-like economic resource broker with
+//!   deadline-and-budget-constrained (DBC) scheduling policies.
+//! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   advisor kernels (`artifacts/*.hlo.txt`) and executes them from the
+//!   broker's scheduling hot path.
+//! * [`config`] / [`workload`] — scenario configuration (incl. the WWG
+//!   testbed of Table 2) and synthetic task-farming application generator.
+//! * [`figures`] — the harness that regenerates every table and figure of
+//!   the paper's evaluation section.
+//!
+//! Quick start (compile-checked; `no_run` because rustdoc test binaries do
+//! not inherit the xla_extension rpath):
+//!
+//! ```no_run
+//! use gridsim::config::testbed::wwg_testbed;
+//! use gridsim::broker::{ExperimentSpec, Optimization};
+//! use gridsim::scenario::{Scenario, run_scenario};
+//!
+//! let scenario = Scenario::builder()
+//!     .resources(wwg_testbed())
+//!     .user(ExperimentSpec::task_farm(20, 10_000.0, 0.10)
+//!         .deadline(3_100.0)
+//!         .budget(22_000.0)
+//!         .optimization(Optimization::Cost))
+//!     .seed(7)
+//!     .build();
+//! let report = run_scenario(&scenario);
+//! assert!(report.users[0].gridlets_completed > 0);
+//! ```
+
+pub mod broker;
+pub mod config;
+pub mod des;
+pub mod figures;
+pub mod gridsim;
+pub mod output;
+pub mod runtime;
+pub mod scenario;
+pub mod util;
+pub mod workload;

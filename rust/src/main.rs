@@ -1,0 +1,206 @@
+//! `repro` — the GridSim reproduction launcher.
+//!
+//! Subcommands:
+//!   table1                         print Table 1 (time- vs space-shared)
+//!   table2                         print Table 2 (the WWG testbed)
+//!   run --scenario FILE            run a JSON scenario and report
+//!   run --testbed wwg [...]        run an inline single-user experiment
+//!   figures [--set S] [--full]     regenerate paper figures into --out DIR
+//!   selftest                       quick end-to-end smoke run
+//!
+//! Common flags: --advisor native|xla, --seed N, --out DIR.
+
+use anyhow::{anyhow, bail, Result};
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::scenario_file::parse_scenario;
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::figures;
+use gridsim::output::report;
+use gridsim::scenario::{run_scenario, AdvisorKind, Scenario};
+use gridsim::util::cli::Args;
+use std::path::Path;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn advisor_kind(args: &Args) -> Result<AdvisorKind> {
+    match args.flag("advisor").unwrap_or("native") {
+        "native" => Ok(AdvisorKind::Native),
+        "xla" => Ok(AdvisorKind::Xla),
+        other => bail!("unknown advisor {other:?} (native|xla)"),
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("table1") => {
+            println!("{}", figures::table1().to_string());
+            Ok(())
+        }
+        Some("table2") => {
+            println!("{}", figures::table2().to_string());
+            Ok(())
+        }
+        Some("run") => cmd_run(args),
+        Some("figures") => cmd_figures(args),
+        Some("selftest") => cmd_selftest(args),
+        Some(other) => bail!("unknown subcommand {other:?}"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — GridSim reproduction (Buyya & Murshed 2002)\n\
+         \n\
+         usage: repro <command> [flags]\n\
+         \n\
+         commands:\n\
+           table1                      Table 1: time- vs space-shared scheduling\n\
+           table2                      Table 2: the simulated WWG testbed\n\
+           run --scenario FILE         run a JSON scenario\n\
+           run [--deadline D] [--budget B] [--gridlets N] [--policy P] [--users N]\n\
+                                       inline run on the WWG testbed\n\
+           figures [--set SET] [--full] [--out DIR]\n\
+                                       regenerate figures (SET: tables|single|\n\
+                                       resource-selection|traces|multi3100|multi10000|all)\n\
+           selftest                    quick end-to-end smoke run\n\
+         \n\
+         common flags: --advisor native|xla   --seed N   --out DIR"
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let scenario = if let Some(path) = args.flag("scenario") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+        let mut s = parse_scenario(&text)?;
+        s.advisor = advisor_kind(args)?;
+        if let Some(seed) = args.flag_usize("seed")? {
+            s.seed = seed as u64;
+        }
+        s
+    } else {
+        let deadline = args.flag_f64("deadline")?.unwrap_or(3_100.0);
+        let budget = args.flag_f64("budget")?.unwrap_or(22_000.0);
+        let gridlets = args.flag_usize("gridlets")?.unwrap_or(200);
+        let users = args.flag_usize("users")?.unwrap_or(1);
+        let policy = Optimization::parse(args.flag("policy").unwrap_or("cost"))
+            .ok_or_else(|| anyhow!("unknown policy"))?;
+        Scenario::builder()
+            .resources(wwg_testbed())
+            .users(
+                users,
+                ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
+                    .deadline(deadline)
+                    .budget(budget)
+                    .optimization(policy),
+            )
+            .seed(args.flag_usize("seed")?.unwrap_or(27) as u64)
+            .advisor(advisor_kind(args)?)
+            .build()
+    };
+    let start = std::time::Instant::now();
+    let result = run_scenario(&scenario);
+    let wall = start.elapsed();
+    println!(
+        "simulated {} users / {} resources: {} events, sim time {:.1}, wall {:.3}s ({:.0} ev/s)",
+        scenario.users.len(),
+        scenario.resources.len(),
+        result.events,
+        result.end_time,
+        wall.as_secs_f64(),
+        result.events as f64 / wall.as_secs_f64().max(1e-9),
+    );
+    for (i, u) in result.users.iter().enumerate() {
+        println!("{}", report::experiment_line(&format!("U{i}"), u));
+    }
+    if result.users.len() == 1 {
+        println!("\n{}", report::resource_table(&result.users[0]));
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out = Path::new(args.flag("out").unwrap_or("results")).to_path_buf();
+    let mut cfg = if args.has_switch("full") {
+        figures::SweepConfig::paper()
+    } else {
+        figures::SweepConfig::quick()
+    };
+    cfg.advisor = advisor_kind(args)?;
+    if let Some(seed) = args.flag_usize("seed")? {
+        cfg.seed = seed as u64;
+    }
+    let set = args.flag("set").unwrap_or("all").to_string();
+    let mut wrote = vec![];
+    let mut emit = |name: &str, csv: gridsim::output::csv::CsvWriter| -> Result<()> {
+        let path = out.join(format!("{name}.csv"));
+        csv.write_to(&path)?;
+        wrote.push(path.display().to_string());
+        Ok(())
+    };
+    if matches!(set.as_str(), "tables" | "all") {
+        emit("table1", figures::table1())?;
+        emit("table2", figures::table2())?;
+    }
+    if matches!(set.as_str(), "single" | "all") {
+        emit("figs21_24_single_user_sweep", figures::figs21_24(&cfg))?;
+    }
+    if matches!(set.as_str(), "resource-selection" | "all") {
+        emit("fig25_selection_deadline100", figures::figs25_27(100.0, &cfg))?;
+        emit("fig26_selection_deadline1100", figures::figs25_27(1_100.0, &cfg))?;
+        emit("fig27_selection_deadline3100", figures::figs25_27(3_100.0, &cfg))?;
+    }
+    if matches!(set.as_str(), "traces" | "all") {
+        emit("figs28_29_31_trace_d100_b22000", figures::figs28_32(100.0, 22_000.0, &cfg))?;
+        emit("fig30_trace_d3100_b5000", figures::figs28_32(3_100.0, 5_000.0, &cfg))?;
+        emit("fig32_trace_d1100_b22000", figures::figs28_32(1_100.0, 22_000.0, &cfg))?;
+    }
+    if matches!(set.as_str(), "multi3100" | "all") {
+        emit("figs33_35_multi_user_d3100", figures::figs33_38(3_100.0, &cfg))?;
+    }
+    if matches!(set.as_str(), "multi10000" | "all") {
+        emit("figs36_38_multi_user_d10000", figures::figs33_38(10_000.0, &cfg))?;
+    }
+    if wrote.is_empty() {
+        bail!("unknown figure set {set:?}");
+    }
+    for w in wrote {
+        println!("wrote {w}");
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(50, 10_000.0, 0.10)
+                .deadline(3_100.0)
+                .budget(22_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(7)
+        .advisor(advisor_kind(args)?)
+        .build();
+    let report = run_scenario(&scenario);
+    let u = &report.users[0];
+    println!(
+        "selftest: {}/{} gridlets, {:.1} G$ spent, {} events",
+        u.gridlets_completed, u.gridlets_total, u.budget_spent, report.events
+    );
+    if u.gridlets_completed != 50 {
+        bail!("selftest failed: expected 50 completions");
+    }
+    println!("selftest OK");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Small CSV writer for figure series.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Row-oriented CSV builder.
+#[derive(Debug, Clone)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> CsvWriter {
+        CsvWriter { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(fields.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience: numeric row.
+    pub fn row_f64(&mut self, fields: &[f64]) {
+        self.row(&fields.iter().map(|x| trim_float(*x)).collect::<Vec<_>>());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.header.join(",")).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", row.join(",")).unwrap();
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+/// Format a float compactly (integers without decimal point).
+pub fn trim_float(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_rows() {
+        let mut w = CsvWriter::new(&["deadline", "budget", "done"]);
+        w.row_f64(&[100.0, 5000.0, 42.0]);
+        w.row_f64(&[100.0, 6000.0, 57.5]);
+        let s = w.to_string();
+        assert_eq!(s, "deadline,budget,done\n100,5000,42\n100,6000,57.5000\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut w = CsvWriter::new(&["x"]);
+        w.row_f64(&[1.0]);
+        let path = std::env::temp_dir().join("gridsim_csv_test/out.csv");
+        w.write_to(&path).unwrap();
+        let read = std::fs::read_to_string(&path).unwrap();
+        assert!(read.starts_with("x\n1"));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

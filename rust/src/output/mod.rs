@@ -1,0 +1,7 @@
+//! Result output: CSV series writers and the textual report writer
+//! (the paper's user-defined `ReportWriter` entity, realized post-run).
+
+pub mod csv;
+pub mod report;
+
+pub use csv::CsvWriter;

@@ -1,0 +1,132 @@
+//! Textual report writer — the paper's optional `ReportWriter` entity: at
+//! the end of a simulation it queries `GridStatistics` and renders a
+//! summary per category.
+
+use crate::broker::ExperimentResult;
+use crate::gridsim::statistics::GridStatistics;
+use std::fmt::Write as _;
+
+/// Render the paper's three report categories (Fig 15) from recorded stats.
+pub fn user_summary(stats: &GridStatistics) -> String {
+    let mut out = String::new();
+    for cat in ["USER.TimeUtilization", "USER.GridletCompletionFactor", "USER.BudgetUtilization"] {
+        let acc = stats.accumulator_for(&format!("*.{cat}"));
+        writeln!(
+            out,
+            "{cat}: n={} mean={:.4} min={:.4} max={:.4} sd={:.4}",
+            acc.count(),
+            acc.mean(),
+            acc.min(),
+            acc.max(),
+            acc.std_dev()
+        )
+        .unwrap();
+    }
+    out
+}
+
+/// Per-experiment one-line summary.
+pub fn experiment_line(user: &str, r: &ExperimentResult) -> String {
+    format!(
+        "{user}: {}/{} gridlets, spent {:.1}/{:.1} G$, time {:.1}/{:.1} ({} resources used)",
+        r.gridlets_completed,
+        r.gridlets_total,
+        r.budget_spent,
+        r.budget,
+        r.finish_time - r.start_time,
+        r.deadline,
+        r.per_resource.iter().filter(|p| p.gridlets_completed > 0).count(),
+    )
+}
+
+/// Per-resource breakdown table.
+pub fn resource_table(r: &ExperimentResult) -> String {
+    let mut out = String::from("resource  gridlets  spent(G$)\n");
+    for p in &r.per_resource {
+        writeln!(out, "{:<9} {:>8}  {:>9.1}", p.name, p.gridlets_completed, p.budget_spent)
+            .unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::experiment::ResourceOutcome;
+
+    fn result() -> ExperimentResult {
+        ExperimentResult {
+            gridlets_completed: 10,
+            gridlets_total: 20,
+            budget_spent: 500.0,
+            finish_time: 90.0,
+            start_time: 0.0,
+            deadline: 100.0,
+            budget: 1000.0,
+            per_resource: vec![
+                ResourceOutcome { name: "R0".into(), gridlets_completed: 10, budget_spent: 500.0 },
+                ResourceOutcome { name: "R1".into(), gridlets_completed: 0, budget_spent: 0.0 },
+            ],
+            trace: vec![],
+        }
+    }
+
+    #[test]
+    fn experiment_line_contents() {
+        let line = experiment_line("U0", &result());
+        assert!(line.contains("10/20"));
+        assert!(line.contains("(1 resources used)"));
+    }
+
+    #[test]
+    fn resource_table_lists_all() {
+        let table = resource_table(&result());
+        assert!(table.contains("R0"));
+        assert!(table.contains("R1"));
+    }
+
+    #[test]
+    fn user_summary_over_stats() {
+        let mut stats = GridStatistics::new("s");
+        use crate::gridsim::statistics::StatRecord;
+        use crate::des::{Entity, Event};
+        // Feed records directly through the event interface.
+        let mut sim: crate::des::Simulation<crate::gridsim::Msg> = crate::des::Simulation::new();
+        let _ = &mut sim; // stats consumed via records below
+        for v in [0.5, 0.7] {
+            let rec = StatRecord {
+                time: 0.0,
+                category: "U0.USER.TimeUtilization".into(),
+                label: "U0".into(),
+                value: v,
+            };
+            // Call on_event directly with a synthetic context-free shim:
+            // simpler to push through the public records path.
+            let ev: Event<crate::gridsim::Msg> = Event {
+                time: 0.0,
+                seq: 0,
+                src: 0,
+                dst: 0,
+                tag: crate::gridsim::tags::RECORD_STATISTICS,
+                kind: crate::des::EventKind::External,
+                data: Some(crate::gridsim::Msg::Stat(rec)),
+            };
+            // Minimal ctx plumbing via a throwaway simulation.
+            let mut queue = crate::des::EventQueue::new();
+            let mut stop = false;
+            let names = vec!["s".to_string()];
+            let mut ctx = test_ctx(&mut queue, &mut stop, &names);
+            stats.on_event(&mut ctx, ev);
+        }
+        let summary = user_summary(&stats);
+        assert!(summary.contains("TimeUtilization: n=2 mean=0.6000"));
+    }
+
+    fn test_ctx<'a>(
+        queue: &'a mut crate::des::EventQueue<crate::gridsim::Msg>,
+        stop: &'a mut bool,
+        names: &'a [String],
+    ) -> crate::des::Ctx<'a, crate::gridsim::Msg> {
+        crate::des::entity::test_ctx(0.0, 0, queue, stop, names)
+    }
+}

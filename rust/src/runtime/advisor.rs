@@ -1,0 +1,80 @@
+//! Advisor interface: the broker's per-tick allocation decision
+//! (paper Fig 20, SCHEDULE ADVISOR steps a–c) as a pure function.
+//!
+//! Given, per resource, the measured/extrapolated MI consumption rate and
+//! the cost per MI, plus the remaining deadline/budget and the job pool,
+//! produce the desired number of jobs allocated to each resource.
+//!
+//! **Precondition**: `resources` are sorted by ascending `cost_per_mi`.
+//! (The paper's step 4 — "SORT resources by increasing order of cost" — is
+//! done once by the broker; both the native and the XLA advisor exploit it:
+//! greedy budget truncation over a cost-sorted list is exactly computable
+//! with prefix sums, because once the budget truncates resource *k*, the
+//! leftover is smaller than the per-job cost of every later resource.)
+
+/// Per-resource snapshot fed to the advisor.
+#[derive(Debug, Clone)]
+pub struct ResourceSnapshot {
+    /// Measured (or initially optimistic) MI/time available to this user.
+    pub rate_mi: f64,
+    /// G$ per MI on this resource.
+    pub cost_per_mi: f64,
+}
+
+/// Advisor input: the broker state relevant to one allocation decision.
+#[derive(Debug, Clone)]
+pub struct AdvisorInput {
+    /// Snapshots sorted by ascending `cost_per_mi`.
+    pub resources: Vec<ResourceSnapshot>,
+    /// Time remaining until the absolute deadline.
+    pub time_left: f64,
+    /// Budget remaining (absolute budget − spent − committed estimate).
+    pub budget_left: f64,
+    /// Mean job length in MI (capacity quantum).
+    pub avg_job_mi: f64,
+    /// Jobs to place (unassigned + currently assigned; the advisor re-plans
+    /// the full pool every tick).
+    pub jobs: usize,
+}
+
+impl AdvisorInput {
+    /// Sanity-check the cost-sorted precondition (debug builds / tests).
+    pub fn is_cost_sorted(&self) -> bool {
+        self.resources.windows(2).all(|w| w[0].cost_per_mi <= w[1].cost_per_mi)
+    }
+}
+
+/// An allocation engine. Implementations: [`super::NativeAdvisor`] (pure
+/// Rust) and [`super::XlaAdvisor`] (AOT JAX/Pallas artifact via PJRT).
+pub trait Advisor {
+    /// Desired job count per resource, aligned with `input.resources`.
+    /// The sum is ≤ `input.jobs`; allocations respect per-resource deadline
+    /// capacity and the global budget.
+    fn advise(&mut self, input: &AdvisorInput) -> Vec<usize>;
+
+    /// Implementation name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_precondition_check() {
+        let input = AdvisorInput {
+            resources: vec![
+                ResourceSnapshot { rate_mi: 1.0, cost_per_mi: 0.1 },
+                ResourceSnapshot { rate_mi: 1.0, cost_per_mi: 0.2 },
+            ],
+            time_left: 1.0,
+            budget_left: 1.0,
+            avg_job_mi: 1.0,
+            jobs: 1,
+        };
+        assert!(input.is_cost_sorted());
+        let mut bad = input.clone();
+        bad.resources.reverse();
+        assert!(!bad.is_cost_sorted());
+    }
+}

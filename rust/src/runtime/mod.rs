@@ -1,0 +1,17 @@
+//! Runtime for the AOT-compiled L1/L2 numeric kernels.
+//!
+//! The DBC schedule advisor (paper Fig 20 steps a–c) and the time-shared
+//! completion forecaster (Fig 8) are expressed as fixed-shape tensor programs
+//! in `python/compile/` (JAX + Pallas), lowered once to HLO text by
+//! `make artifacts`, and executed here through the PJRT CPU client of the
+//! `xla` crate. [`native`] mirrors the same math in pure Rust — it is both
+//! the no-artifacts fallback and the differential-testing oracle for the XLA
+//! path.
+
+pub mod advisor;
+pub mod native;
+pub mod pjrt;
+
+pub use advisor::{Advisor, AdvisorInput, ResourceSnapshot};
+pub use native::NativeAdvisor;
+pub use pjrt::{forecast_shapes, ForecastInput, PjrtRuntime, XlaAdvisor, XlaForecaster, ADVISOR_R};

@@ -1,0 +1,143 @@
+//! Pure-Rust reference advisor: the sequential greedy of paper Fig 20.
+//!
+//! Walk resources cheapest-first; each takes as many jobs as it can finish
+//! by the deadline (measured rate × time ÷ mean job size), capped by the
+//! jobs still unplaced and by what the remaining budget affords.
+
+use super::advisor::{Advisor, AdvisorInput};
+
+/// Sequential greedy DBC cost-optimization allocator.
+#[derive(Debug, Default, Clone)]
+pub struct NativeAdvisor;
+
+impl NativeAdvisor {
+    pub fn new() -> NativeAdvisor {
+        NativeAdvisor
+    }
+}
+
+impl Advisor for NativeAdvisor {
+    fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
+        debug_assert!(input.is_cost_sorted(), "advisor requires cost-sorted resources");
+        let mut remaining_jobs = input.jobs;
+        let mut remaining_budget = input.budget_left.max(0.0);
+        let avg = input.avg_job_mi.max(1e-9);
+        let time = input.time_left.max(0.0);
+        let mut out = Vec::with_capacity(input.resources.len());
+        for snap in &input.resources {
+            // Step b: jobs this resource can complete by the deadline.
+            let capacity = ((snap.rate_mi.max(0.0) * time) / avg * (1.0 + 1e-12) + 1e-9).floor() as usize;
+            // Budget cap: whole jobs affordable at this resource's price.
+            let cost_per_job = snap.cost_per_mi * avg;
+            let affordable = if cost_per_job <= 0.0 {
+                usize::MAX
+            } else {
+                // Relative epsilon: with B-factor = 1 budgets, the remaining
+                // budget equals the remaining cost bit-for-bit only in exact
+                // arithmetic; don't let 0.999999… floor to zero.
+                (remaining_budget / cost_per_job * (1.0 + 1e-12) + 1e-9).floor() as usize
+            };
+            let n = capacity.min(remaining_jobs).min(affordable);
+            out.push(n);
+            remaining_jobs -= n;
+            remaining_budget -= n as f64 * cost_per_job;
+            if remaining_jobs == 0 {
+                break;
+            }
+        }
+        out.resize(input.resources.len(), 0);
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::advisor::ResourceSnapshot;
+
+    fn snap(rate: f64, cost: f64) -> ResourceSnapshot {
+        ResourceSnapshot { rate_mi: rate, cost_per_mi: cost }
+    }
+
+    fn input(
+        resources: Vec<ResourceSnapshot>,
+        time: f64,
+        budget: f64,
+        avg: f64,
+        jobs: usize,
+    ) -> AdvisorInput {
+        AdvisorInput { resources, time_left: time, budget_left: budget, avg_job_mi: avg, jobs }
+    }
+
+    #[test]
+    fn cheapest_first_fills_to_capacity() {
+        // Cheap resource can do 5 jobs, expensive can do 100; 8 jobs total.
+        let inp = input(
+            vec![snap(50.0, 0.01), snap(1000.0, 0.05)],
+            10.0,
+            1e9,
+            100.0,
+            8,
+        );
+        let alloc = NativeAdvisor::new().advise(&inp);
+        assert_eq!(alloc, vec![5, 3]);
+    }
+
+    #[test]
+    fn budget_truncates_expensive_tail() {
+        // Cheap: capacity 2 (cost 1/job). Expensive: plenty capacity at
+        // 10/job. Budget 25 → 2 cheap + 2 expensive (cost 2+20=22; a third
+        // expensive job would need 32).
+        let inp = input(
+            vec![snap(20.0, 0.01), snap(1000.0, 0.10)],
+            10.0,
+            25.0,
+            100.0,
+            50,
+        );
+        let alloc = NativeAdvisor::new().advise(&inp);
+        assert_eq!(alloc, vec![2, 2]);
+    }
+
+    #[test]
+    fn no_time_no_jobs() {
+        let inp = input(vec![snap(100.0, 0.01)], 0.0, 1e9, 100.0, 10);
+        assert_eq!(NativeAdvisor::new().advise(&inp), vec![0]);
+    }
+
+    #[test]
+    fn no_budget_no_jobs() {
+        let inp = input(vec![snap(100.0, 0.01)], 10.0, 0.0, 100.0, 10);
+        assert_eq!(NativeAdvisor::new().advise(&inp), vec![0]);
+    }
+
+    #[test]
+    fn zero_cost_resource_unbounded_by_budget() {
+        let inp = input(vec![snap(100.0, 0.0)], 10.0, 0.0, 100.0, 7);
+        assert_eq!(NativeAdvisor::new().advise(&inp), vec![7]);
+    }
+
+    #[test]
+    fn sum_never_exceeds_jobs() {
+        let inp = input(
+            vec![snap(1e6, 0.01), snap(1e6, 0.02), snap(1e6, 0.03)],
+            100.0,
+            1e12,
+            100.0,
+            13,
+        );
+        let alloc = NativeAdvisor::new().advise(&inp);
+        assert_eq!(alloc.iter().sum::<usize>(), 13);
+        assert_eq!(alloc, vec![13, 0, 0], "cheapest takes all when it can");
+    }
+
+    #[test]
+    fn empty_resources() {
+        let inp = input(vec![], 10.0, 10.0, 100.0, 5);
+        assert!(NativeAdvisor::new().advise(&inp).is_empty());
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and execute them on the CPU
+//! PJRT client.
+//!
+//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized `HloModuleProto`s (64-bit instruction ids); the text
+//! parser reassigns ids. Each artifact is compiled once at load time; only
+//! `execute` runs on the broker hot path.
+
+use super::advisor::{Advisor, AdvisorInput};
+use std::path::Path;
+
+/// Fixed resource-axis padding of the advisor artifact. Must match
+/// `python/compile/model.py::R`.
+pub const ADVISOR_R: usize = 16;
+/// Fixed shapes of the forecast artifact `[R, J]`. Must match
+/// `python/compile/model.py::FORECAST_R/J`.
+pub const FORECAST_R: usize = 16;
+pub const FORECAST_J: usize = 256;
+
+/// `(rows, cols)` of the forecast artifact.
+pub fn forecast_shapes() -> (usize, usize) {
+    (FORECAST_R, FORECAST_J)
+}
+
+/// A compiled HLO artifact on the CPU PJRT client.
+pub struct PjrtRuntime {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Load HLO text from `path`, compile it on a fresh CPU client.
+    pub fn load(path: &Path) -> anyhow::Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(PjrtRuntime { exe })
+    }
+
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        out.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
+    }
+}
+
+fn f32_vec(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+fn f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::from(x)
+}
+
+/// The DBC cost-optimization schedule advisor backed by the
+/// `artifacts/advisor.hlo.txt` artifact (Pallas kernel under the hood).
+pub struct XlaAdvisor {
+    runtime: PjrtRuntime,
+}
+
+impl XlaAdvisor {
+    /// Load `advisor.hlo.txt` from an artifacts directory.
+    pub fn load_dir(dir: &Path) -> anyhow::Result<XlaAdvisor> {
+        Self::load(&dir.join("advisor.hlo.txt"))
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<XlaAdvisor> {
+        Ok(XlaAdvisor { runtime: PjrtRuntime::load(path)? })
+    }
+
+    /// Default artifacts location (repo-root `artifacts/`), if present.
+    pub fn load_default() -> anyhow::Result<XlaAdvisor> {
+        Self::load_dir(Path::new("artifacts"))
+    }
+}
+
+impl Advisor for XlaAdvisor {
+    fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
+        debug_assert!(input.is_cost_sorted(), "advisor requires cost-sorted resources");
+        let n = input.resources.len();
+        assert!(
+            n <= ADVISOR_R,
+            "XLA advisor artifact is compiled for ≤{ADVISOR_R} resources, got {n}"
+        );
+        let mut rate = [0f32; ADVISOR_R];
+        let mut cost = [0f32; ADVISOR_R];
+        let mut active = [0f32; ADVISOR_R];
+        for (i, s) in input.resources.iter().enumerate() {
+            rate[i] = s.rate_mi as f32;
+            cost[i] = s.cost_per_mi as f32;
+            active[i] = 1.0;
+        }
+        let inputs = [
+            f32_vec(&rate),
+            f32_vec(&cost),
+            f32_vec(&active),
+            f32_scalar(input.time_left.max(0.0) as f32),
+            f32_scalar(input.budget_left.max(0.0) as f32),
+            f32_scalar(input.avg_job_mi as f32),
+            f32_scalar(input.jobs as f32),
+        ];
+        let outputs = self
+            .runtime
+            .execute(&inputs)
+            .expect("advisor artifact execution failed");
+        let counts: Vec<f32> = outputs[0].to_vec().expect("advisor output not f32");
+        counts[..n].iter().map(|&c| c.round().max(0.0) as usize).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Input to the batched time-shared completion forecaster
+/// (`artifacts/forecast.hlo.txt`), padded to `[FORECAST_R, FORECAST_J]`.
+#[derive(Debug, Clone)]
+pub struct ForecastInput {
+    /// Remaining MI per (resource, job slot); 0 for inactive slots.
+    pub remaining_mi: Vec<Vec<f64>>,
+    /// Per-resource MIPS of one PE.
+    pub mips_per_pe: Vec<f64>,
+    /// Per-resource PE count.
+    pub num_pe: Vec<usize>,
+    /// Per-resource availability factor (1 − local load).
+    pub availability: Vec<f64>,
+}
+
+/// Batched forecaster backed by the forecast artifact.
+pub struct XlaForecaster {
+    runtime: PjrtRuntime,
+}
+
+impl XlaForecaster {
+    pub fn load_dir(dir: &Path) -> anyhow::Result<XlaForecaster> {
+        Ok(XlaForecaster { runtime: PjrtRuntime::load(&dir.join("forecast.hlo.txt"))? })
+    }
+
+    /// Completion-time forecast per (resource, job); `None` for empty slots.
+    /// Returns a dense `[R][J]` matrix of times (relative to now), with
+    /// `f64::INFINITY` in inactive slots.
+    pub fn forecast(&mut self, input: &ForecastInput) -> anyhow::Result<Vec<Vec<f64>>> {
+        let r_used = input.remaining_mi.len();
+        assert!(r_used <= FORECAST_R);
+        let mut remaining = vec![0f32; FORECAST_R * FORECAST_J];
+        let mut active = vec![0f32; FORECAST_R * FORECAST_J];
+        let mut mips = [0f32; FORECAST_R];
+        let mut pes = [1f32; FORECAST_R];
+        let mut avail = [1f32; FORECAST_R];
+        for (r, row) in input.remaining_mi.iter().enumerate() {
+            assert!(row.len() <= FORECAST_J);
+            for (j, &mi) in row.iter().enumerate() {
+                if mi > 0.0 {
+                    remaining[r * FORECAST_J + j] = mi as f32;
+                    active[r * FORECAST_J + j] = 1.0;
+                }
+            }
+            mips[r] = input.mips_per_pe[r] as f32;
+            pes[r] = input.num_pe[r] as f32;
+            avail[r] = input.availability[r] as f32;
+        }
+        let dims = [FORECAST_R as i64, FORECAST_J as i64];
+        let inputs = [
+            xla::Literal::vec1(&remaining)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            xla::Literal::vec1(&active)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            f32_vec(&mips),
+            f32_vec(&pes),
+            f32_vec(&avail),
+        ];
+        let outputs = self.runtime.execute(&inputs)?;
+        let completion: Vec<f32> = outputs[0].to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let mut out = Vec::with_capacity(r_used);
+        for r in 0..r_used {
+            let cols = input.remaining_mi[r].len();
+            out.push(
+                (0..cols)
+                    .map(|j| {
+                        let v = completion[r * FORECAST_J + j] as f64;
+                        if active[r * FORECAST_J + j] > 0.0 {
+                            v
+                        } else {
+                            f64::INFINITY
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The XLA-backed paths need `artifacts/*.hlo.txt`; they are exercised by
+    // `rust/tests/xla_advisor.rs` (integration) which skips gracefully when
+    // artifacts have not been built yet.
+    use super::*;
+
+    #[test]
+    fn shape_constants_consistent() {
+        assert_eq!(forecast_shapes(), (FORECAST_R, FORECAST_J));
+        assert!(ADVISOR_R >= 11, "must fit the 11-resource WWG testbed");
+    }
+}

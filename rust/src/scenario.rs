@@ -1,0 +1,403 @@
+//! Scenario assembly and execution — the equivalent of the paper's Fig 15
+//! `CreateSampleGridEnvironement`: build the entity graph (GIS, statistics,
+//! shutdown, resources, user+broker pairs), run the simulation, and collect
+//! per-user results.
+
+use crate::broker::broker::BrokerConfig;
+use crate::broker::policy::make_policy;
+use crate::broker::{Broker, ExperimentResult, ExperimentSpec, UserEntity};
+use crate::des::Simulation;
+use crate::gridsim::{
+    AllocPolicy, BaudLink, GridInformationService, GridResource, GridSimShutdown, GridStatistics,
+    MachineList, Msg, ResourceCalendar, ResourceCharacteristics,
+};
+use crate::runtime::{Advisor, AdvisorInput, NativeAdvisor, XlaAdvisor};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Declarative description of one grid resource (Table 2 row).
+#[derive(Debug, Clone)]
+pub struct ResourceSpec {
+    pub name: String,
+    pub arch: String,
+    pub os: String,
+    pub machines: usize,
+    pub pes_per_machine: usize,
+    pub mips_per_pe: f64,
+    pub policy: AllocPolicy,
+    /// G$ per PE per time unit.
+    pub price: f64,
+    pub time_zone: f64,
+    /// Background load profile; `None` = no local load (paper §5 setup).
+    pub calendar: Option<ResourceCalendar>,
+}
+
+impl ResourceSpec {
+    pub fn characteristics(&self) -> ResourceCharacteristics {
+        ResourceCharacteristics::new(
+            self.arch.clone(),
+            self.os.clone(),
+            MachineList::cluster(self.machines, self.pes_per_machine, self.mips_per_pe),
+            self.policy,
+            self.price,
+            self.time_zone,
+        )
+    }
+
+    pub fn num_pe(&self) -> usize {
+        self.machines * self.pes_per_machine
+    }
+}
+
+/// Which allocation engine backs DBC cost-optimization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdvisorKind {
+    /// Pure-Rust sequential greedy.
+    Native,
+    /// AOT JAX/Pallas artifact (`artifacts/advisor.hlo.txt`) via PJRT.
+    Xla,
+}
+
+/// Network model selection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkSpec {
+    /// Zero-delay (the paper's §5 experiments ignore staging).
+    Instantaneous,
+    /// Baud-rate delays with optional uniform latency.
+    Baud { default_rate: f64, latency: f64 },
+}
+
+/// A complete simulation scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub resources: Vec<ResourceSpec>,
+    /// One experiment spec per user (each user gets a private broker).
+    pub users: Vec<ExperimentSpec>,
+    pub seed: u64,
+    pub network: NetworkSpec,
+    pub advisor: AdvisorKind,
+    pub broker_config: BrokerConfig,
+    /// Hard simulation-time limit (safety net).
+    pub max_time: f64,
+}
+
+impl Scenario {
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+}
+
+/// Builder for [`Scenario`].
+#[derive(Default)]
+pub struct ScenarioBuilder {
+    resources: Vec<ResourceSpec>,
+    users: Vec<ExperimentSpec>,
+    seed: u64,
+    network: Option<NetworkSpec>,
+    advisor: Option<AdvisorKind>,
+    broker_config: Option<BrokerConfig>,
+    max_time: Option<f64>,
+}
+
+impl ScenarioBuilder {
+    pub fn resources(mut self, specs: Vec<ResourceSpec>) -> Self {
+        self.resources = specs;
+        self
+    }
+
+    pub fn resource(mut self, spec: ResourceSpec) -> Self {
+        self.resources.push(spec);
+        self
+    }
+
+    pub fn user(mut self, spec: ExperimentSpec) -> Self {
+        self.users.push(spec);
+        self
+    }
+
+    /// `n` identical users (the paper's §5.4 competition experiments).
+    pub fn users(mut self, n: usize, spec: ExperimentSpec) -> Self {
+        for _ in 0..n {
+            self.users.push(spec.clone());
+        }
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn network(mut self, network: NetworkSpec) -> Self {
+        self.network = Some(network);
+        self
+    }
+
+    pub fn advisor(mut self, advisor: AdvisorKind) -> Self {
+        self.advisor = Some(advisor);
+        self
+    }
+
+    pub fn broker_config(mut self, config: BrokerConfig) -> Self {
+        self.broker_config = Some(config);
+        self
+    }
+
+    pub fn max_time(mut self, t: f64) -> Self {
+        self.max_time = Some(t);
+        self
+    }
+
+    pub fn build(self) -> Scenario {
+        assert!(!self.resources.is_empty(), "scenario needs resources");
+        assert!(!self.users.is_empty(), "scenario needs at least one user");
+        Scenario {
+            resources: self.resources,
+            users: self.users,
+            seed: self.seed,
+            network: self.network.unwrap_or(NetworkSpec::Instantaneous),
+            advisor: self.advisor.unwrap_or(AdvisorKind::Native),
+            broker_config: self.broker_config.unwrap_or_default(),
+            max_time: self.max_time.unwrap_or(1e9),
+        }
+    }
+}
+
+/// Shared advisor handle: lets every broker in a multi-user scenario reuse
+/// one compiled XLA executable (compilation happens once, execution on each
+/// scheduling tick).
+struct SharedAdvisor {
+    inner: Rc<RefCell<dyn Advisor>>,
+    label: &'static str,
+}
+
+impl Advisor for SharedAdvisor {
+    fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
+        self.inner.borrow_mut().advise(input)
+    }
+    fn name(&self) -> &'static str {
+        self.label
+    }
+}
+
+/// Outcome of a scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// Per-user experiment results, in user order.
+    pub users: Vec<ExperimentResult>,
+    /// Simulation end time.
+    pub end_time: f64,
+    /// Events dispatched by the kernel (engine-level metric).
+    pub events: u64,
+}
+
+impl ScenarioReport {
+    /// Mean Gridlets completed per user (Figs 33/36 series value).
+    pub fn mean_completed(&self) -> f64 {
+        if self.users.is_empty() {
+            return 0.0;
+        }
+        self.users.iter().map(|u| u.gridlets_completed as f64).sum::<f64>()
+            / self.users.len() as f64
+    }
+
+    /// Mean budget spent per user (Figs 35/38).
+    pub fn mean_spent(&self) -> f64 {
+        if self.users.is_empty() {
+            return 0.0;
+        }
+        self.users.iter().map(|u| u.budget_spent).sum::<f64>() / self.users.len() as f64
+    }
+
+    /// Mean experiment termination time (Figs 34/37).
+    pub fn mean_finish_time(&self) -> f64 {
+        if self.users.is_empty() {
+            return 0.0;
+        }
+        self.users.iter().map(|u| u.finish_time - u.start_time).sum::<f64>()
+            / self.users.len() as f64
+    }
+}
+
+/// Build the entity graph for `scenario`, run it to completion, and collect
+/// per-user results.
+pub fn run_scenario(scenario: &Scenario) -> ScenarioReport {
+    let mut sim: Simulation<Msg> = Simulation::with_config(crate::des::SimConfig {
+        max_time: scenario.max_time,
+        max_events: u64::MAX,
+    });
+    match &scenario.network {
+        NetworkSpec::Instantaneous => {
+            sim.set_link_model(Box::new(BaudLink::instantaneous()));
+        }
+        NetworkSpec::Baud { default_rate, latency } => {
+            sim.set_link_model(Box::new(
+                BaudLink::new().with_default_rate(*default_rate).with_default_latency(*latency),
+            ));
+        }
+    }
+
+    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+    let stats = sim.add(Box::new(GridStatistics::new("GridStatistics")));
+    let shutdown = sim.add(Box::new(GridSimShutdown::new("GridSimShutdown", scenario.users.len())));
+
+    for spec in &scenario.resources {
+        let calendar = spec.calendar.clone().unwrap_or_else(ResourceCalendar::no_load);
+        let resource =
+            GridResource::new(spec.name.clone(), spec.characteristics(), calendar, gis)
+                .with_stats(stats);
+        sim.add(Box::new(resource));
+    }
+
+    // One compiled advisor shared by all brokers.
+    let shared: Rc<RefCell<dyn Advisor>> = match scenario.advisor {
+        AdvisorKind::Native => Rc::new(RefCell::new(NativeAdvisor::new())),
+        AdvisorKind::Xla => Rc::new(RefCell::new(
+            XlaAdvisor::load_default().expect("failed to load artifacts/advisor.hlo.txt — run `make artifacts`"),
+        )),
+    };
+    let label = match scenario.advisor {
+        AdvisorKind::Native => "native",
+        AdvisorKind::Xla => "xla",
+    };
+
+    let mut user_ids = Vec::new();
+    for (i, spec) in scenario.users.iter().enumerate() {
+        let advisor = Box::new(SharedAdvisor { inner: shared.clone(), label });
+        let policy = make_policy(spec.optimization, advisor);
+        let broker = Broker::new(
+            format!("Broker_{i}"),
+            gis,
+            policy,
+            scenario.broker_config.clone(),
+        );
+        let broker_id = sim.add(Box::new(broker));
+        // Paper Fig 15 per-user seed derivation: seed·997·(1+i)+1.
+        let user_seed = scenario
+            .seed
+            .wrapping_mul(997)
+            .wrapping_mul(1 + i as u64)
+            .wrapping_add(1);
+        let user = UserEntity::new(format!("U{i}"), broker_id, shutdown, spec.clone(), user_seed)
+            .with_stats(stats);
+        user_ids.push(sim.add(Box::new(user)));
+    }
+
+    let end_time = sim.run();
+    let users = user_ids
+        .iter()
+        .map(|&id| {
+            sim.get::<UserEntity>(id)
+                .expect("user entity")
+                .result
+                .clone()
+                .unwrap_or_else(|| ExperimentResult {
+                    gridlets_completed: 0,
+                    gridlets_total: 0,
+                    budget_spent: 0.0,
+                    finish_time: end_time,
+                    start_time: 0.0,
+                    deadline: 0.0,
+                    budget: 0.0,
+                    per_resource: vec![],
+                    trace: vec![],
+                })
+        })
+        .collect();
+    ScenarioReport { users, end_time, events: sim.events_processed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::Optimization;
+
+    fn small_resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+        ResourceSpec {
+            name: name.into(),
+            arch: "test".into(),
+            os: "linux".into(),
+            machines: 1,
+            pes_per_machine: pes,
+            mips_per_pe: mips,
+            policy: AllocPolicy::TimeShared,
+            price,
+            time_zone: 0.0,
+            calendar: None,
+        }
+    }
+
+    #[test]
+    fn single_user_completes_everything_with_slack() {
+        let scenario = Scenario::builder()
+            .resource(small_resource("R0", 2, 100.0, 1.0))
+            .resource(small_resource("R1", 2, 100.0, 2.0))
+            .user(
+                ExperimentSpec::task_farm(20, 1_000.0, 0.10)
+                    .deadline(1_000.0)
+                    .budget(100_000.0)
+                    .optimization(Optimization::Cost),
+            )
+            .seed(42)
+            .build();
+        let report = run_scenario(&scenario);
+        assert_eq!(report.users.len(), 1);
+        let u = &report.users[0];
+        assert_eq!(u.gridlets_completed, 20, "ample deadline+budget: all done");
+        assert!(u.budget_spent > 0.0);
+        assert!(u.finish_time <= 1_000.0);
+        // Cost optimization should favour the cheap resource.
+        let r0 = u.per_resource.iter().find(|r| r.name == "R0").unwrap();
+        let r1 = u.per_resource.iter().find(|r| r.name == "R1").unwrap();
+        assert!(r0.gridlets_completed >= r1.gridlets_completed);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let build = || {
+            Scenario::builder()
+                .resource(small_resource("R0", 2, 100.0, 1.0))
+                .user(
+                    ExperimentSpec::task_farm(10, 1_000.0, 0.10)
+                        .deadline(500.0)
+                        .budget(10_000.0),
+                )
+                .seed(7)
+                .build()
+        };
+        let a = run_scenario(&build());
+        let b = run_scenario(&build());
+        assert_eq!(a.end_time, b.end_time);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.users[0].gridlets_completed, b.users[0].gridlets_completed);
+        assert_eq!(a.users[0].budget_spent, b.users[0].budget_spent);
+    }
+
+    #[test]
+    fn zero_budget_processes_nothing() {
+        let scenario = Scenario::builder()
+            .resource(small_resource("R0", 2, 100.0, 1.0))
+            .user(ExperimentSpec::task_farm(5, 1_000.0, 0.0).deadline(100.0).budget(0.0))
+            .seed(1)
+            .build();
+        let report = run_scenario(&scenario);
+        assert_eq!(report.users[0].gridlets_completed, 0);
+        assert_eq!(report.users[0].budget_spent, 0.0);
+    }
+
+    #[test]
+    fn tight_deadline_processes_fewer() {
+        let run_with_deadline = |d: f64| {
+            let scenario = Scenario::builder()
+                .resource(small_resource("R0", 2, 100.0, 1.0))
+                .user(ExperimentSpec::task_farm(40, 1_000.0, 0.10).deadline(d).budget(1e9))
+                .seed(3)
+                .build();
+            run_scenario(&scenario).users[0].gridlets_completed
+        };
+        let tight = run_with_deadline(30.0);
+        let loose = run_with_deadline(10_000.0);
+        assert_eq!(loose, 40);
+        assert!(tight < loose, "tight {tight} < loose {loose}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (the image has no `clap`).
+//!
+//! Grammar: `repro <subcommand> [--flag value] [--switch] [positional...]`.
+//! `--flag=value` is also accepted. Unknown flags are collected and reported
+//! by the caller so each subcommand can validate its own surface.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
+    pub flags: BTreeMap<String, String>,
+    /// Bare `--switch` tokens.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument tokens (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has_switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["run", "scenario.json", "extra"]);
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["scenario.json", "extra"]);
+    }
+
+    #[test]
+    fn flags_both_syntaxes() {
+        let a = parse(&["run", "--policy", "cost", "--seed=42"]);
+        assert_eq!(a.flag("policy"), Some("cost"));
+        assert_eq!(a.flag("seed"), Some("42"));
+    }
+
+    #[test]
+    fn switches() {
+        let a = parse(&["figures", "--all", "--out", "results"]);
+        assert!(a.has_switch("all"));
+        assert_eq!(a.flag("out"), Some("results"));
+        assert!(!a.has_switch("missing"));
+    }
+
+    #[test]
+    fn trailing_switch_not_eating_next_flag() {
+        let a = parse(&["x", "--verbose", "--seed", "7"]);
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.flag("seed"), Some("7"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse(&["x", "--d", "3.5", "--n", "12", "--bad", "xyz"]);
+        assert_eq!(a.flag_f64("d").unwrap(), Some(3.5));
+        assert_eq!(a.flag_usize("n").unwrap(), Some(12));
+        assert!(a.flag_f64("bad").is_err());
+        assert_eq!(a.flag_f64("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse(&[]);
+        assert!(a.command.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Support utilities built in-tree because the image has no crates.io access
+//! beyond the vendored `xla`/`anyhow` set: a seedable RNG, a JSON
+//! parser/serializer for config and results, a CLI argument parser, a mini
+//! property-testing runner, and summary statistics.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,87 @@
+//! Mini property-based testing runner (the image has no `proptest`).
+//!
+//! Runs a property against `n` generated cases from a seeded [`Rng`] and, on
+//! failure, reports the case index and the per-case seed so the exact input
+//! can be regenerated in isolation. No shrinking — generators are kept small
+//! and structured instead.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` inputs produced by `gen`. Panics (test failure) on
+/// the first violated case with a reproduction seed.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (case_seed={case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn check(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn check_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            1,
+            200,
+            |rng| rng.uniform(0.0, 100.0),
+            |&x| check(x >= 0.0 && x < 100.0, "in range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_repro_info() {
+        forall(2, 50, |rng| rng.below(10), |&x| check(x < 5, format!("{x} < 5")));
+    }
+
+    #[test]
+    fn check_close_scales_tolerance() {
+        assert!(check_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(check_close(1.0, 1.1, 1e-6, "small").is_err());
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<f64> = vec![];
+        forall(7, 20, |rng| rng.next_f64(), |&x| {
+            first.push(x);
+            Ok(())
+        });
+        let mut second: Vec<f64> = vec![];
+        forall(7, 20, |rng| rng.next_f64(), |&x| {
+            second.push(x);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

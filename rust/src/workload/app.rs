@@ -1,0 +1,91 @@
+//! Workload generators.
+
+use crate::gridsim::gridlet::Gridlet;
+use crate::gridsim::random::GridSimRandom;
+use crate::util::rng::Rng;
+
+/// The paper's §5.2 application: `n` Gridlets of `base` MI with a 0–10%
+/// positive random variation (default n=200, base=10 000).
+pub fn paper_task_farm(n: usize, base_mi: f64, variation: f64, seed: u64) -> Vec<Gridlet> {
+    let mut rand = GridSimRandom::new(seed);
+    (0..n)
+        .map(|i| Gridlet::new(i, rand.real(base_mi, 0.0, variation), 1000, 500))
+        .collect()
+}
+
+/// A heavier-tailed mix: most jobs near `base`, a fraction `heavy_frac`
+/// stretched by up to `heavy_mult`× — exercises SJF/backfilling and the
+/// broker's re-planning under heterogeneous job lengths.
+pub fn heavy_tailed_farm(
+    n: usize,
+    base_mi: f64,
+    heavy_frac: f64,
+    heavy_mult: f64,
+    seed: u64,
+) -> Vec<Gridlet> {
+    assert!((0.0..=1.0).contains(&heavy_frac));
+    assert!(heavy_mult >= 1.0);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut len = base_mi * rng.uniform(0.9, 1.1);
+            if rng.next_f64() < heavy_frac {
+                len *= rng.uniform(1.0, heavy_mult);
+            }
+            Gridlet::new(i, len, 1000, 500)
+        })
+        .collect()
+}
+
+/// Poisson arrival offsets with the given mean inter-arrival time — for
+/// online (non-batch) user activity models.
+pub fn poisson_arrivals(n: usize, mean_interarrival: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(mean_interarrival);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_farm_matches_spec() {
+        let g = paper_task_farm(200, 10_000.0, 0.10, 1);
+        assert_eq!(g.len(), 200);
+        assert!(g.iter().all(|g| (10_000.0..11_000.0).contains(&g.length_mi)));
+        let total: f64 = g.iter().map(|g| g.length_mi).sum();
+        // Mean should sit near +5%.
+        assert!((total / 200.0 - 10_500.0).abs() < 200.0);
+    }
+
+    #[test]
+    fn heavy_tail_stretches_some() {
+        let g = heavy_tailed_farm(500, 1_000.0, 0.1, 50.0, 2);
+        let heavy = g.iter().filter(|g| g.length_mi > 2_000.0).count();
+        assert!(heavy > 10, "{heavy} heavy jobs");
+        assert!(heavy < 150, "{heavy} heavy jobs");
+    }
+
+    #[test]
+    fn poisson_monotone_and_scaled() {
+        let arr = poisson_arrivals(10_000, 5.0, 3);
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        let mean = arr.last().unwrap() / 10_000.0;
+        assert!((mean - 5.0).abs() < 0.2, "mean gap {mean}");
+    }
+
+    #[test]
+    fn deterministic_workloads() {
+        let a = paper_task_farm(10, 100.0, 0.1, 9);
+        let b = paper_task_farm(10, 100.0, 0.1, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.length_mi, y.length_mi);
+        }
+    }
+}

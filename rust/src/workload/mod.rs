@@ -1,0 +1,6 @@
+//! Synthetic application/workload generators (paper §3.3/§5.2): task-farming
+//! parameter sweeps plus heavier-tailed mixes for stress testing.
+
+pub mod app;
+
+pub use app::{heavy_tailed_farm, paper_task_farm, poisson_arrivals};

@@ -1,0 +1,193 @@
+//! End-to-end broker scenarios on the WWG testbed (Table 2): the shape
+//! checks that pin the paper's single-user evaluation (Figures 21–27).
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::scenario::{run_scenario, Scenario};
+
+fn run(deadline: f64, budget: f64, opt: Optimization, n: usize) -> gridsim::scenario::ScenarioReport {
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(n, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(opt),
+        )
+        .seed(31)
+        .build();
+    run_scenario(&scenario)
+}
+
+#[test]
+fn relaxed_deadline_all_on_cheapest_fig27() {
+    // Paper Fig 27: deadline 3100, ample budget → the broker leases just the
+    // cheapest resource (R8) and still finishes everything.
+    let report = run(3100.0, 22_000.0, Optimization::Cost, 200);
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, 200, "all Gridlets done");
+    let r8 = u.per_resource.iter().find(|r| r.name == "R8").unwrap();
+    assert!(
+        r8.gridlets_completed >= 195,
+        "R8 should take (almost) everything, got {}",
+        r8.gridlets_completed
+    );
+    // And the total spend is near the all-on-R8 floor (~200·10500/380 G$).
+    assert!(u.budget_spent < 7_000.0, "cheap completion, spent {}", u.budget_spent);
+}
+
+#[test]
+fn tight_deadline_uses_expensive_resources_fig25() {
+    // Paper Fig 25: a tight deadline with a high budget → the broker must
+    // lease many resources including expensive ones. Deadline 60 is provably
+    // infeasible for all 200 jobs (2.1e6 MI / 27.6k aggregate MIPS ≈ 76).
+    let report = run(60.0, 22_000.0, Optimization::Cost, 200);
+    let u = &report.users[0];
+    let used = u.per_resource.iter().filter(|r| r.gridlets_completed > 0).count();
+    assert!(used >= 6, "tight deadline spreads across resources, used {used}");
+    assert!(
+        u.gridlets_completed < 200,
+        "a 60-unit deadline cannot finish 200×10.5k-MI jobs on the WWG"
+    );
+    assert!(u.gridlets_completed > 20, "but a good chunk completes");
+}
+
+#[test]
+fn completions_monotone_in_budget_fig21() {
+    // Paper Fig 21: at a tight deadline, more budget → more Gridlets done.
+    let mut last = 0;
+    let mut grew = false;
+    for budget in [6_000.0, 12_000.0, 22_000.0] {
+        let done = run(100.0, budget, Optimization::Cost, 200).users[0].gridlets_completed;
+        assert!(done + 12 >= last, "roughly monotone: {done} after {last}");
+        if done > last {
+            grew = true;
+        }
+        last = done;
+    }
+    assert!(grew, "budget must buy additional completions somewhere");
+}
+
+#[test]
+fn completions_monotone_in_deadline_fig22() {
+    // Paper Fig 22: at a low budget, relaxing the deadline → more done.
+    let mut results = vec![];
+    for deadline in [100.0, 1_100.0, 3_100.0] {
+        results.push(run(deadline, 6_000.0, Optimization::Cost, 200).users[0].gridlets_completed);
+    }
+    assert!(results[0] < results[2], "relaxed deadline processes more: {results:?}");
+    assert!(results[1] <= results[2] + 10);
+}
+
+#[test]
+fn budget_spent_bounded_and_utilized_fig24() {
+    // Tight deadline: spend approaches the budget. Relaxed: spend stays at
+    // the cheap floor regardless of budget.
+    let tight = run(100.0, 10_000.0, Optimization::Cost, 200).users[0].budget_spent;
+    assert!(tight <= 10_000.0 + 1e-6, "hard budget bound");
+    assert!(tight > 5_000.0, "tight deadline spends most of the budget: {tight}");
+    let relaxed_lo = run(3_100.0, 10_000.0, Optimization::Cost, 200).users[0].budget_spent;
+    let relaxed_hi = run(3_100.0, 22_000.0, Optimization::Cost, 200).users[0].budget_spent;
+    assert!(
+        (relaxed_lo - relaxed_hi).abs() < 0.15 * relaxed_lo.max(relaxed_hi),
+        "relaxed deadline: spend ≈ cheap floor regardless of budget ({relaxed_lo} vs {relaxed_hi})"
+    );
+}
+
+#[test]
+fn time_opt_faster_but_costlier_than_cost_opt() {
+    // The classic Nimrod-G trade-off, with deadline/budget slack so both
+    // policies finish all jobs.
+    let cost = run(3_100.0, 60_000.0, Optimization::Cost, 100);
+    let time = run(3_100.0, 60_000.0, Optimization::Time, 100);
+    let (cu, tu) = (&cost.users[0], &time.users[0]);
+    assert_eq!(cu.gridlets_completed, 100);
+    assert_eq!(tu.gridlets_completed, 100);
+    let cost_elapsed = cu.finish_time - cu.start_time;
+    let time_elapsed = tu.finish_time - tu.start_time;
+    assert!(
+        time_elapsed < cost_elapsed,
+        "time-opt finishes sooner ({time_elapsed} vs {cost_elapsed})"
+    );
+    assert!(
+        tu.budget_spent > cu.budget_spent,
+        "and pays for it ({} vs {})",
+        tu.budget_spent,
+        cu.budget_spent
+    );
+}
+
+#[test]
+fn cost_time_between_cost_and_time() {
+    let cost = run(3_100.0, 60_000.0, Optimization::Cost, 100);
+    let ct = run(3_100.0, 60_000.0, Optimization::CostTime, 100);
+    let cu = &cost.users[0];
+    let ctu = &ct.users[0];
+    assert_eq!(ctu.gridlets_completed, 100);
+    // Cost-time must not be more expensive than cost-opt by more than the
+    // equal-price-group rearrangement effect (~small), and should not be
+    // slower than cost-opt.
+    let cost_elapsed = cu.finish_time - cu.start_time;
+    let ct_elapsed = ctu.finish_time - ctu.start_time;
+    assert!(
+        ct_elapsed <= cost_elapsed * 1.05,
+        "cost-time at least as fast as cost ({ct_elapsed} vs {cost_elapsed})"
+    );
+}
+
+#[test]
+fn d_and_b_factors_scale_constraints() {
+    // D=B=1 must always complete (Eqs 1-2 guarantee).
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(50, 10_000.0, 0.10)
+                .d_factor(1.0)
+                .b_factor(1.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(5)
+        .build();
+    let report = run_scenario(&scenario);
+    assert_eq!(report.users[0].gridlets_completed, 50);
+    // Tiny factors process little or nothing.
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(50, 10_000.0, 0.10)
+                .d_factor(0.0)
+                .b_factor(0.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(5)
+        .build();
+    let report = run_scenario(&scenario);
+    assert!(
+        report.users[0].gridlets_completed < 50,
+        "D=B=0 is the infeasible corner"
+    );
+}
+
+#[test]
+fn trace_is_recorded_and_monotone() {
+    let report = run(1_100.0, 22_000.0, Optimization::Cost, 100);
+    let trace = &report.users[0].trace;
+    assert!(!trace.is_empty(), "trace must be recorded");
+    // Per-resource series must be monotone in completions and spend.
+    use std::collections::HashMap;
+    let mut last: HashMap<&str, (usize, f64)> = HashMap::new();
+    for p in trace {
+        let e = last.entry(p.resource.as_str()).or_insert((0, 0.0));
+        assert!(p.completed >= e.0, "completions monotone on {}", p.resource);
+        assert!(p.spent >= e.1 - 1e-9, "spend monotone on {}", p.resource);
+        *e = (p.completed, p.spent);
+    }
+}
+
+#[test]
+fn none_opt_spreads_widely() {
+    let report = run(3_100.0, 60_000.0, Optimization::NoOpt, 100);
+    let u = &report.users[0];
+    let used = u.per_resource.iter().filter(|r| r.gridlets_completed > 0).count();
+    assert!(used >= 8, "none-opt uses (almost) all resources: {used}");
+}

@@ -1,0 +1,190 @@
+//! Edge-case coverage across the stack: degenerate grids, extreme
+//! parameters, and comparative scheduler behaviour.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::{AllocPolicy, SpacePolicy};
+use gridsim::scenario::{run_scenario, ResourceSpec, Scenario};
+
+fn spec(name: &str, pes: usize, mips: f64, price: f64, policy: AllocPolicy) -> ResourceSpec {
+    let (machines, per) = match policy {
+        AllocPolicy::TimeShared => (1, pes),
+        AllocPolicy::SpaceShared(_) => (pes, 1),
+    };
+    ResourceSpec {
+        name: name.into(),
+        arch: "t".into(),
+        os: "l".into(),
+        machines,
+        pes_per_machine: per,
+        mips_per_pe: mips,
+        policy,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+#[test]
+fn single_gridlet_single_pe() {
+    let scenario = Scenario::builder()
+        .resource(spec("R", 1, 100.0, 1.0, AllocPolicy::TimeShared))
+        .user(ExperimentSpec::task_farm(1, 1_000.0, 0.0).deadline(100.0).budget(100.0))
+        .seed(1)
+        .build();
+    let r = run_scenario(&scenario);
+    assert_eq!(r.users[0].gridlets_completed, 1);
+    // 1000 MI / 100 MIPS = 10 time units, 10 G$ at 1 G$/PE-time.
+    assert!((r.users[0].budget_spent - 10.0).abs() < 1e-9);
+    assert!((r.users[0].finish_time - 10.0).abs() < 1e-9);
+}
+
+#[test]
+fn enormous_gridlet_blows_deadline_not_the_simulator() {
+    let scenario = Scenario::builder()
+        .resource(spec("R", 1, 1.0, 1.0, AllocPolicy::TimeShared))
+        .user(ExperimentSpec::task_farm(1, 1e9, 0.0).deadline(10.0).budget(1e12))
+        .seed(1)
+        .max_time(1e8)
+        .build();
+    let r = run_scenario(&scenario);
+    // Either it was never dispatched (capacity 0 by deadline) or it came
+    // back long after the deadline; both are acceptable terminations.
+    assert!(r.users[0].gridlets_completed <= 1);
+    assert!(r.end_time < 1e8, "must terminate before the hard cap");
+}
+
+#[test]
+fn many_tiny_gridlets() {
+    let scenario = Scenario::builder()
+        .resource(spec("R", 4, 1_000.0, 1.0, AllocPolicy::TimeShared))
+        .user(ExperimentSpec::task_farm(500, 10.0, 0.0).deadline(1_000.0).budget(1e6))
+        .seed(2)
+        .build();
+    let r = run_scenario(&scenario);
+    assert_eq!(r.users[0].gridlets_completed, 500);
+}
+
+#[test]
+fn identical_resources_tie_breaking_is_deterministic() {
+    let build = || {
+        Scenario::builder()
+            .resource(spec("A", 2, 100.0, 1.0, AllocPolicy::TimeShared))
+            .resource(spec("B", 2, 100.0, 1.0, AllocPolicy::TimeShared))
+            .resource(spec("C", 2, 100.0, 1.0, AllocPolicy::TimeShared))
+            .user(ExperimentSpec::task_farm(30, 1_000.0, 0.1).deadline(1_000.0).budget(1e6))
+            .seed(3)
+            .build()
+    };
+    let a = run_scenario(&build());
+    let b = run_scenario(&build());
+    for (x, y) in a.users[0].per_resource.iter().zip(&b.users[0].per_resource) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.gridlets_completed, y.gridlets_completed);
+    }
+}
+
+#[test]
+fn space_shared_grid_completes_experiment() {
+    // A grid made only of clusters (queueing systems) works end to end.
+    let scenario = Scenario::builder()
+        .resource(spec("C1", 8, 400.0, 2.0, AllocPolicy::SpaceShared(SpacePolicy::Fcfs)))
+        .resource(spec("C2", 4, 400.0, 1.0, AllocPolicy::SpaceShared(SpacePolicy::Sjf)))
+        .resource(spec("C3", 4, 400.0, 3.0, AllocPolicy::SpaceShared(SpacePolicy::BackfillEasy)))
+        .user(
+            ExperimentSpec::task_farm(60, 5_000.0, 0.10)
+                .deadline(2_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(4)
+        .build();
+    let r = run_scenario(&scenario);
+    assert_eq!(r.users[0].gridlets_completed, 60);
+    // Cost-opt prefers the cheapest cluster (C2).
+    let c2 = r.users[0].per_resource.iter().find(|p| p.name == "C2").unwrap();
+    assert!(c2.gridlets_completed >= 30, "cheapest cluster dominates: {}", c2.gridlets_completed);
+}
+
+#[test]
+fn mixed_time_and_space_shared_grid() {
+    let scenario = Scenario::builder()
+        .resource(spec("SMP", 8, 500.0, 4.0, AllocPolicy::TimeShared))
+        .resource(spec("Cluster", 16, 400.0, 2.0, AllocPolicy::SpaceShared(SpacePolicy::Fcfs)))
+        .user(
+            ExperimentSpec::task_farm(100, 8_000.0, 0.10)
+                .deadline(500.0)
+                .budget(1e6)
+                .optimization(Optimization::Time),
+        )
+        .seed(5)
+        .build();
+    let r = run_scenario(&scenario);
+    assert_eq!(r.users[0].gridlets_completed, 100);
+    // Time-opt should use both.
+    assert!(r.users[0].per_resource.iter().all(|p| p.gridlets_completed > 0));
+}
+
+#[test]
+fn policy_ablation_orderings_hold() {
+    // The §4.2.2 trade-off, asserted (not just printed by bench_policies):
+    // with slack, time-opt is no slower than cost-opt and cost-opt is no
+    // more expensive than time-opt.
+    let run = |opt| {
+        let scenario = Scenario::builder()
+            .resources(gridsim::config::testbed::wwg_testbed())
+            .user(
+                ExperimentSpec::task_farm(80, 10_000.0, 0.10)
+                    .deadline(3_100.0)
+                    .budget(60_000.0)
+                    .optimization(opt),
+            )
+            .seed(6)
+            .build();
+        let r = run_scenario(&scenario);
+        let u = &r.users[0];
+        assert_eq!(u.gridlets_completed, 80, "{opt:?} must finish with slack");
+        (u.finish_time - u.start_time, u.budget_spent)
+    };
+    let (t_cost, s_cost) = run(Optimization::Cost);
+    let (t_time, s_time) = run(Optimization::Time);
+    let (t_ct, s_ct) = run(Optimization::CostTime);
+    assert!(t_time <= t_cost, "time-opt no slower ({t_time} vs {t_cost})");
+    assert!(s_cost <= s_time, "cost-opt no dearer ({s_cost} vs {s_time})");
+    // Cost-time: at most cost-opt's time, at most time-opt's... cost lies
+    // between (inclusive, with small numeric slack).
+    assert!(t_ct <= t_cost * 1.05, "cost-time not slower than cost ({t_ct} vs {t_cost})");
+    assert!(s_ct <= s_time * 1.05, "cost-time not dearer than time ({s_ct} vs {s_time})");
+}
+
+#[test]
+fn hundred_resources_scale() {
+    let mut builder = Scenario::builder();
+    for i in 0..100 {
+        builder = builder.resource(spec(
+            &format!("R{i}"),
+            2,
+            100.0 + i as f64,
+            1.0 + (i % 7) as f64,
+            AllocPolicy::TimeShared,
+        ));
+    }
+    let scenario = builder
+        .user(ExperimentSpec::task_farm(200, 2_000.0, 0.1).deadline(2_000.0).budget(1e6))
+        .seed(7)
+        .build();
+    let r = run_scenario(&scenario);
+    assert_eq!(r.users[0].gridlets_completed, 200);
+}
+
+#[test]
+fn zero_variation_workload_is_uniform() {
+    let scenario = Scenario::builder()
+        .resource(spec("R", 2, 100.0, 1.0, AllocPolicy::TimeShared))
+        .user(ExperimentSpec::task_farm(10, 1_000.0, 0.0).deadline(1_000.0).budget(1e6))
+        .seed(8)
+        .build();
+    let r = run_scenario(&scenario);
+    assert_eq!(r.users[0].gridlets_completed, 10);
+    // All jobs identical → total spend is exactly 10 × (1000/100) × 1 G$.
+    assert!((r.users[0].budget_spent - 100.0).abs() < 1e-9);
+}

@@ -1,0 +1,130 @@
+//! Multi-user competition experiments (paper §5.4, Figures 33–38): varying
+//! numbers of identical users, each with a private broker, competing for the
+//! same WWG testbed.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::scenario::{run_scenario, Scenario, ScenarioReport};
+
+fn run_users(n_users: usize, deadline: f64, budget: f64, gridlets: usize) -> ScenarioReport {
+    let scenario = Scenario::builder()
+        .resources(wwg_testbed())
+        .users(
+            n_users,
+            ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(Optimization::Cost),
+        )
+        .seed(17)
+        .build();
+    run_scenario(&scenario)
+}
+
+#[test]
+fn per_user_completions_decay_with_competition_fig33() {
+    // Deadline 3100: more users competing → fewer Gridlets per user.
+    let one = run_users(1, 3_100.0, 12_000.0, 60);
+    let ten = run_users(10, 3_100.0, 12_000.0, 60);
+    assert_eq!(one.users[0].gridlets_completed, 60, "single user finishes all");
+    let mean_ten = ten.mean_completed();
+    assert!(mean_ten > 10.0, "everyone gets a share: mean {mean_ten}");
+}
+
+#[test]
+fn users_do_not_starve_under_competition() {
+    let report = run_users(8, 3_100.0, 12_000.0, 40);
+    for (i, u) in report.users.iter().enumerate() {
+        assert!(
+            u.gridlets_completed > 0,
+            "user {i} starved: {} completed",
+            u.gridlets_completed
+        );
+    }
+}
+
+#[test]
+fn relaxed_deadline_restores_completions_fig36() {
+    // Deadline 10000 (cf. 3100): the same competition completes at least as
+    // much per user (paper: "improved substantially due to the relaxed
+    // deadline").
+    let tight = run_users(20, 3_100.0, 6_000.0, 60);
+    let relaxed = run_users(20, 10_000.0, 6_000.0, 60);
+    assert!(
+        relaxed.mean_completed() >= tight.mean_completed(),
+        "relaxed {} vs tight {}",
+        relaxed.mean_completed(),
+        tight.mean_completed()
+    );
+}
+
+#[test]
+fn heavy_competition_stretches_termination_fig34() {
+    // Paper Fig 34: with many users at deadline 3100, termination times
+    // stretch toward (and past) the deadline — brokers wait for jobs already
+    // deployed under optimistic share estimates.
+    let light = run_users(1, 3_100.0, 12_000.0, 60);
+    let heavy = run_users(12, 3_100.0, 12_000.0, 60);
+    assert!(
+        heavy.mean_finish_time() > light.mean_finish_time(),
+        "competition stretches termination: {} vs {}",
+        heavy.mean_finish_time(),
+        light.mean_finish_time()
+    );
+    let max_finish = heavy
+        .users
+        .iter()
+        .map(|u| u.finish_time - u.start_time)
+        .fold(0.0f64, f64::max);
+    // Bounded: in-flight gridlets are finite work.
+    assert!(max_finish < 3_100.0 * 2.0, "bounded overrun: {max_finish}");
+}
+
+#[test]
+fn relaxed_deadline_terminates_within_deadline_fig37() {
+    // Paper Fig 37: at deadline 10000 the broker can revisit past decisions
+    // and terminate in time.
+    let report = run_users(10, 10_000.0, 12_000.0, 40);
+    for u in &report.users {
+        assert!(
+            u.finish_time - u.start_time <= 10_000.0 * 1.05,
+            "termination {} beyond relaxed deadline",
+            u.finish_time - u.start_time
+        );
+    }
+}
+
+#[test]
+fn budget_spent_tracks_completions_fig35() {
+    // Figs 33 vs 35: the spend curve mirrors the completion curve.
+    let report = run_users(10, 3_100.0, 12_000.0, 60);
+    for u in &report.users {
+        assert!(u.budget_spent <= 12_000.0 + 1e-6, "hard budget bound");
+        let per_job = u.budget_spent / u.gridlets_completed.max(1) as f64;
+        // 10.5k-MI jobs cost ~27–130 G$ across Table 2 prices.
+        assert!(per_job > 20.0 && per_job < 200.0, "per-job cost {per_job}");
+    }
+}
+
+#[test]
+fn more_users_more_total_throughput_until_saturation() {
+    // System-level: total completions grow with users until the grid
+    // saturates (then flatten, never collapse).
+    let totals: Vec<f64> = [1, 5, 10]
+        .iter()
+        .map(|&n| run_users(n, 3_100.0, 12_000.0, 40).mean_completed() * n as f64)
+        .collect();
+    assert!(totals[1] > totals[0], "5 users beat 1: {totals:?}");
+    assert!(totals[2] >= totals[1] * 0.7, "no collapse at 10 users: {totals:?}");
+}
+
+#[test]
+fn deterministic_multi_user_runs() {
+    let a = run_users(6, 3_100.0, 12_000.0, 30);
+    let b = run_users(6, 3_100.0, 12_000.0, 30);
+    assert_eq!(a.events, b.events);
+    for (x, y) in a.users.iter().zip(&b.users) {
+        assert_eq!(x.gridlets_completed, y.gridlets_completed);
+        assert_eq!(x.budget_spent, y.budget_spent);
+    }
+}

@@ -1,0 +1,251 @@
+//! Network-delay semantics and failure injection through the full stack.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::des::{Ctx, Entity, EntityId, Event, Simulation};
+use gridsim::gridsim::{
+    tags, AllocPolicy, Gridlet, GridInformationService, GridResource, MachineList, Msg,
+    ResourceCalendar, ResourceCharacteristics,
+};
+use gridsim::scenario::{run_scenario, NetworkSpec, ResourceSpec, Scenario};
+
+fn spec(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+    ResourceSpec {
+        name: name.into(),
+        arch: "t".into(),
+        os: "l".into(),
+        machines: 1,
+        pes_per_machine: pes,
+        mips_per_pe: mips,
+        policy: AllocPolicy::TimeShared,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+#[test]
+fn baud_rate_network_slows_completion() {
+    let build = |network: NetworkSpec| {
+        Scenario::builder()
+            .resource(spec("R0", 2, 100.0, 1.0))
+            .user(
+                ExperimentSpec::task_farm(10, 1_000.0, 0.0)
+                    .deadline(10_000.0)
+                    .budget(1e6)
+                    .optimization(Optimization::Cost),
+            )
+            .seed(3)
+            .network(network)
+            .build()
+    };
+    let fast = run_scenario(&build(NetworkSpec::Instantaneous));
+    let slow = run_scenario(&build(NetworkSpec::Baud { default_rate: 9600.0, latency: 0.1 }));
+    assert_eq!(fast.users[0].gridlets_completed, 10);
+    assert_eq!(slow.users[0].gridlets_completed, 10);
+    let t_fast = fast.users[0].finish_time - fast.users[0].start_time;
+    let t_slow = slow.users[0].finish_time - slow.users[0].start_time;
+    assert!(
+        t_slow > t_fast,
+        "staging at 9600 baud must cost time: {t_slow} vs {t_fast}"
+    );
+}
+
+#[test]
+fn staging_delay_scales_with_file_size() {
+    let build = |input_bytes: u64| {
+        let mut e = ExperimentSpec::task_farm(5, 1_000.0, 0.0)
+            .deadline(100_000.0)
+            .budget(1e6);
+        e.input_bytes = input_bytes;
+        Scenario::builder()
+            .resource(spec("R0", 1, 100.0, 1.0))
+            .user(e)
+            .seed(3)
+            .network(NetworkSpec::Baud { default_rate: 9600.0, latency: 0.0 })
+            .build()
+    };
+    let small = run_scenario(&build(100));
+    let large = run_scenario(&build(100_000));
+    let t_small = small.users[0].finish_time;
+    let t_large = large.users[0].finish_time;
+    assert!(
+        t_large > t_small + 50.0,
+        "100 KB inputs at 9600 baud are slow: {t_large} vs {t_small}"
+    );
+}
+
+/// Failure controller: injects RESOURCE_FAIL / RESOURCE_RECOVER.
+struct FaultInjector {
+    target: EntityId,
+    fail_at: f64,
+    recover_at: Option<f64>,
+}
+
+impl Entity<Msg> for FaultInjector {
+    fn name(&self) -> &str {
+        "fault-injector"
+    }
+    fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+        ctx.send_delayed(self.target, self.fail_at, tags::RESOURCE_FAIL, None);
+        if let Some(t) = self.recover_at {
+            ctx.send_delayed(self.target, t, tags::RESOURCE_RECOVER, None);
+        }
+    }
+    fn on_event(&mut self, _ctx: &mut Ctx<Msg>, _ev: Event<Msg>) {}
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+/// Driver that submits jobs directly and counts outcomes.
+struct Submitter {
+    resource: EntityId,
+    n: usize,
+    pub success: usize,
+    pub failed: usize,
+}
+
+impl Entity<Msg> for Submitter {
+    fn name(&self) -> &str {
+        "submitter"
+    }
+    fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+        for i in 0..self.n {
+            let mut g = Gridlet::new(i, 100.0, 0, 0);
+            g.owner = ctx.me();
+            ctx.send_delayed(
+                self.resource,
+                i as f64,
+                tags::GRIDLET_SUBMIT,
+                Some(Msg::Gridlet(Box::new(g))),
+            );
+        }
+    }
+    fn on_event(&mut self, _ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        if ev.tag == tags::GRIDLET_RETURN {
+            let Msg::Gridlet(g) = ev.take_data() else { panic!() };
+            match g.status {
+                gridsim::gridsim::GridletStatus::Success => self.success += 1,
+                gridsim::gridsim::GridletStatus::Failed => self.failed += 1,
+                other => panic!("unexpected status {other:?}"),
+            }
+        }
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[test]
+fn resource_failure_bounces_jobs_and_recovery_restores() {
+    let mut sim: Simulation<Msg> = Simulation::new();
+    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+    let chars = ResourceCharacteristics::new(
+        "t",
+        "l",
+        MachineList::cluster(1, 1, 10.0),
+        AllocPolicy::TimeShared,
+        1.0,
+        0.0,
+    );
+    let resource = sim.add(Box::new(GridResource::new(
+        "R",
+        chars,
+        ResourceCalendar::no_load(),
+        gis,
+    )));
+    // 20 jobs at t=0..19; fail at t=5.5, recover at t=12.5. Jobs in flight
+    // at 5.5 fail; submissions in [5.5, 12.5) bounce; later ones succeed.
+    sim.add(Box::new(FaultInjector { target: resource, fail_at: 5.5, recover_at: Some(12.5) }));
+    let submitter = sim.add(Box::new(Submitter { resource, n: 20, success: 0, failed: 0 }));
+    sim.run();
+    let s = sim.get::<Submitter>(submitter).unwrap();
+    assert_eq!(s.success + s.failed, 20, "every job gets an answer");
+    assert!(s.failed >= 7, "in-flight + bounced during outage: {}", s.failed);
+    assert!(s.success >= 7, "jobs after recovery succeed: {}", s.success);
+}
+
+#[test]
+fn broker_retries_failed_gridlets_on_other_resources() {
+    // Two resources; one fails early. The broker must re-route bounced
+    // Gridlets to the survivor and still finish everything.
+    let scenario = Scenario::builder()
+        .resource(spec("Fragile", 2, 200.0, 1.0)) // cheap → preferred
+        .resource(spec("Stable", 2, 200.0, 2.0))
+        .user(
+            ExperimentSpec::task_farm(20, 1_000.0, 0.0)
+                .deadline(10_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(5)
+        .build();
+    // Run through the scenario machinery but inject the fault manually: we
+    // rebuild the graph here to add the injector entity.
+    use gridsim::broker::broker::BrokerConfig;
+    use gridsim::broker::policy::make_policy;
+    use gridsim::broker::{Broker, UserEntity};
+    use gridsim::gridsim::{BaudLink, GridSimShutdown};
+    use gridsim::runtime::NativeAdvisor;
+
+    let mut sim: Simulation<Msg> = Simulation::new();
+    sim.set_link_model(Box::new(BaudLink::instantaneous()));
+    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+    let shutdown = sim.add(Box::new(GridSimShutdown::new("shutdown", 1)));
+    let mut resource_ids = vec![];
+    for r in &scenario.resources {
+        let id = sim.add(Box::new(GridResource::new(
+            r.name.clone(),
+            r.characteristics(),
+            ResourceCalendar::no_load(),
+            gis,
+        )));
+        resource_ids.push(id);
+    }
+    // Fragile fails at t=3 and never recovers.
+    sim.add(Box::new(FaultInjector { target: resource_ids[0], fail_at: 3.0, recover_at: None }));
+    let policy = make_policy(Optimization::Cost, Box::new(NativeAdvisor::new()));
+    let broker = sim.add(Box::new(Broker::new("B0", gis, policy, BrokerConfig::default())));
+    let user = sim.add(Box::new(UserEntity::new(
+        "U0",
+        broker,
+        shutdown,
+        scenario.users[0].clone(),
+        99,
+    )));
+    sim.run();
+    let result = sim.get::<UserEntity>(user).unwrap().result.as_ref().unwrap();
+    assert_eq!(
+        result.gridlets_completed, 20,
+        "all Gridlets complete despite the failure"
+    );
+    let stable = result.per_resource.iter().find(|r| r.name == "Stable").unwrap();
+    assert!(stable.gridlets_completed >= 16, "survivor does the work: {}", stable.gridlets_completed);
+}
+
+#[test]
+fn local_load_calendar_slows_processing() {
+    let mut with_load = spec("R0", 1, 100.0, 1.0);
+    with_load.calendar = Some(ResourceCalendar::business(9.0, 0.8, 0.8, 0.8));
+    let build = |r: ResourceSpec| {
+        Scenario::builder()
+            .resource(r)
+            .user(ExperimentSpec::task_farm(5, 1_000.0, 0.0).deadline(1e6).budget(1e9))
+            .seed(4)
+            .build()
+    };
+    let loaded = run_scenario(&build(with_load));
+    let free = run_scenario(&build(spec("R0", 1, 100.0, 1.0)));
+    let t_loaded = loaded.users[0].finish_time;
+    let t_free = free.users[0].finish_time;
+    assert!(
+        t_loaded > t_free * 2.0,
+        "80% background load must slow things ~5x: {t_loaded} vs {t_free}"
+    );
+}

@@ -1,0 +1,224 @@
+//! Property-based tests over the whole stack: conservation laws and
+//! invariants that must hold for *any* scenario, via the in-tree
+//! property-test runner (`util::prop`).
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::{AllocPolicy, SpacePolicy};
+use gridsim::runtime::{Advisor, AdvisorInput, NativeAdvisor, ResourceSnapshot};
+use gridsim::scenario::{run_scenario, ResourceSpec, Scenario};
+use gridsim::util::prop::{check, forall};
+use gridsim::util::rng::Rng;
+
+/// Generate a random small scenario.
+fn gen_scenario(rng: &mut Rng) -> Scenario {
+    let n_resources = 1 + rng.below(4) as usize;
+    let mut builder = Scenario::builder();
+    for i in 0..n_resources {
+        let time_shared = rng.next_f64() < 0.7;
+        let pes = 1 + rng.below(4) as usize;
+        builder = builder.resource(ResourceSpec {
+            name: format!("R{i}"),
+            arch: "gen".into(),
+            os: "linux".into(),
+            machines: if time_shared { 1 } else { pes },
+            pes_per_machine: if time_shared { pes } else { 1 },
+            mips_per_pe: 50.0 + rng.below(500) as f64,
+            policy: if time_shared {
+                AllocPolicy::TimeShared
+            } else {
+                AllocPolicy::SpaceShared(match rng.below(3) {
+                    0 => SpacePolicy::Fcfs,
+                    1 => SpacePolicy::Sjf,
+                    _ => SpacePolicy::BackfillEasy,
+                })
+            },
+            price: 1.0 + rng.below(8) as f64,
+            time_zone: 0.0,
+            calendar: None,
+        });
+    }
+    let optimization = match rng.below(4) {
+        0 => Optimization::Cost,
+        1 => Optimization::Time,
+        2 => Optimization::CostTime,
+        _ => Optimization::NoOpt,
+    };
+    let n_jobs = 1 + rng.below(30) as usize;
+    builder
+        .user(
+            ExperimentSpec::task_farm(n_jobs, 500.0 + rng.below(5_000) as f64, 0.10)
+                .deadline(10.0 + rng.below(5_000) as f64)
+                .budget(rng.below(50_000) as f64)
+                .optimization(optimization),
+        )
+        .seed(rng.next_u64())
+        .max_time(1e7)
+        .build()
+}
+
+#[test]
+fn prop_budget_never_exceeded() {
+    forall(101, 40, gen_scenario, |s| {
+        let report = run_scenario(s);
+        let u = &report.users[0];
+        check(
+            u.budget_spent <= u.budget + 1e-6,
+            format!("spent {} > budget {}", u.budget_spent, u.budget),
+        )
+    });
+}
+
+#[test]
+fn prop_completions_bounded_by_total() {
+    forall(102, 40, gen_scenario, |s| {
+        let report = run_scenario(s);
+        let u = &report.users[0];
+        check(
+            u.gridlets_completed <= u.gridlets_total,
+            format!("{}/{}", u.gridlets_completed, u.gridlets_total),
+        )
+    });
+}
+
+#[test]
+fn prop_experiment_always_terminates() {
+    forall(103, 40, gen_scenario, |s| {
+        let report = run_scenario(s);
+        // The shutdown entity must have fired: end time is finite and below
+        // the kernel's hard cap.
+        check(
+            report.end_time < 1e7,
+            format!("simulation ran to the hard cap: {}", report.end_time),
+        )
+    });
+}
+
+#[test]
+fn prop_ample_budget_and_deadline_completes_all() {
+    forall(
+        104,
+        25,
+        |rng| {
+            let mut s = gen_scenario(rng);
+            s.users[0] = s.users[0].clone().d_factor(1.0).b_factor(1.0);
+            s
+        },
+        |s| {
+            let report = run_scenario(s);
+            let u = &report.users[0];
+            check(
+                u.gridlets_completed == u.gridlets_total,
+                format!(
+                    "D=B=1 must complete everything: {}/{} (deadline {}, budget {}, spent {})",
+                    u.gridlets_completed, u.gridlets_total, u.deadline, u.budget, u.budget_spent
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_trace_monotone() {
+    forall(105, 20, gen_scenario, |s| {
+        let report = run_scenario(s);
+        let mut last: std::collections::HashMap<String, (usize, f64)> = Default::default();
+        for p in &report.users[0].trace {
+            let e = last.entry(p.resource.clone()).or_insert((0, 0.0));
+            if p.completed < e.0 || p.spent < e.1 - 1e-9 {
+                return Err(format!("trace not monotone at {}", p.time));
+            }
+            *e = (p.completed, p.spent);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_advisor_respects_budget_and_jobs() {
+    forall(
+        106,
+        300,
+        |rng| {
+            let n = 1 + rng.below(16) as usize;
+            let mut costs: Vec<f64> = (0..n).map(|_| rng.uniform(0.001, 0.5)).collect();
+            costs.sort_by(|a, b| a.total_cmp(b));
+            AdvisorInput {
+                resources: costs
+                    .into_iter()
+                    .map(|c| ResourceSnapshot { rate_mi: rng.uniform(0.0, 4000.0), cost_per_mi: c })
+                    .collect(),
+                time_left: rng.uniform(0.0, 4000.0),
+                budget_left: rng.uniform(0.0, 30_000.0),
+                avg_job_mi: rng.uniform(100.0, 20_000.0),
+                jobs: rng.below(400) as usize,
+            }
+        },
+        |input| {
+            let alloc = NativeAdvisor::new().advise(input);
+            let total: usize = alloc.iter().sum();
+            check(total <= input.jobs, format!("allocated {total} > pool {}", input.jobs))?;
+            let cost: f64 = alloc
+                .iter()
+                .zip(&input.resources)
+                .map(|(&n, s)| n as f64 * s.cost_per_mi * input.avg_job_mi)
+                .sum();
+            check(
+                cost <= input.budget_left + 1e-6,
+                format!("planned cost {cost} > budget {}", input.budget_left),
+            )?;
+            // Deadline capacity per lane.
+            for (i, (&n, s)) in alloc.iter().zip(&input.resources).enumerate() {
+                let cap = (s.rate_mi * input.time_left / input.avg_job_mi).floor() as usize;
+                check(n <= cap, format!("lane {i}: {n} > capacity {cap}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_advisor_prefix_exactness() {
+    // The documented exactness property behind the XLA two-pass advisor:
+    // once a lane takes less than its capacity for *budget* reasons while
+    // jobs remain, every costlier lane takes zero.
+    forall(
+        107,
+        300,
+        |rng| {
+            let n = 2 + rng.below(15) as usize;
+            let mut costs: Vec<f64> = (0..n).map(|_| rng.uniform(0.01, 0.5)).collect();
+            costs.sort_by(|a, b| a.total_cmp(b));
+            AdvisorInput {
+                resources: costs
+                    .into_iter()
+                    .map(|c| ResourceSnapshot { rate_mi: rng.uniform(1.0, 2000.0), cost_per_mi: c })
+                    .collect(),
+                time_left: rng.uniform(1.0, 2000.0),
+                budget_left: rng.uniform(0.0, 10_000.0),
+                avg_job_mi: rng.uniform(100.0, 10_000.0),
+                jobs: 1 + rng.below(300) as usize,
+            }
+        },
+        |input| {
+            let alloc = NativeAdvisor::new().advise(input);
+            let allocated: usize = alloc.iter().sum();
+            if allocated == input.jobs {
+                return Ok(()); // pool exhausted — nothing to check
+            }
+            for (i, (&n, s)) in alloc.iter().zip(&input.resources).enumerate() {
+                let cap = (s.rate_mi * input.time_left / input.avg_job_mi).floor() as usize;
+                if n < cap {
+                    // Short of capacity with jobs left → budget bound; all
+                    // costlier lanes must be zero.
+                    let rest: usize = alloc[i + 1..].iter().sum();
+                    check(
+                        rest == 0,
+                        format!("lane {i} budget-truncated but later lanes got {rest}"),
+                    )?;
+                    return Ok(());
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,185 @@
+//! Entity-level reproduction of the paper's Table 1 (and Figs 9/12): three
+//! Gridlets (10, 8.5, 9.5 MI) arriving at t = 0, 4, 7 on a 2-PE, 1-MIPS
+//! resource, under time-shared and space-shared management — exercised
+//! through the full event protocol (submission events, internal completion
+//! interrupts, return events), not by poking the scheduler directly.
+
+use gridsim::des::{Ctx, Entity, EntityId, Event, Simulation};
+use gridsim::gridsim::{
+    tags, AllocPolicy, Gridlet, GridResource, GridInformationService, MachineList, Msg,
+    ResourceCalendar, ResourceCharacteristics, SpacePolicy,
+};
+
+/// Drives the Table 1 arrival schedule and records returned Gridlets.
+struct Driver {
+    resource: EntityId,
+    submissions: Vec<(f64, Gridlet)>,
+    pub returned: Vec<(f64, Gridlet)>,
+}
+
+impl Entity<Msg> for Driver {
+    fn name(&self) -> &str {
+        "driver"
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+        for (at, g) in self.submissions.drain(..) {
+            let mut g = g;
+            g.owner = ctx.me();
+            ctx.send_delayed(self.resource, at, tags::GRIDLET_SUBMIT, Some(Msg::Gridlet(Box::new(g))));
+        }
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        if ev.tag == tags::GRIDLET_RETURN {
+            let Msg::Gridlet(g) = ev.take_data() else { panic!("expected gridlet") };
+            self.returned.push((ctx.now(), *g));
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+fn run_table1(policy: AllocPolicy) -> Vec<(f64, Gridlet)> {
+    let mut sim: Simulation<Msg> = Simulation::new();
+    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+    let machines = match policy {
+        AllocPolicy::TimeShared => MachineList::cluster(1, 2, 1.0),
+        AllocPolicy::SpaceShared(_) => MachineList::cluster(2, 1, 1.0),
+    };
+    let chars = ResourceCharacteristics::new("test", "linux", machines, policy, 1.0, 0.0);
+    let resource = sim.add(Box::new(GridResource::new(
+        "R",
+        chars,
+        ResourceCalendar::no_load(),
+        gis,
+    )));
+    let submissions = vec![
+        (0.0, Gridlet::new(1, 10.0, 0, 0)),
+        (4.0, Gridlet::new(2, 8.5, 0, 0)),
+        (7.0, Gridlet::new(3, 9.5, 0, 0)),
+    ];
+    let driver = sim.add(Box::new(Driver { resource, submissions, returned: vec![] }));
+    sim.run();
+    sim.get::<Driver>(driver).unwrap().returned.clone()
+}
+
+#[test]
+fn table1_time_shared_column() {
+    let returned = run_table1(AllocPolicy::TimeShared);
+    assert_eq!(returned.len(), 3);
+    // Table 1: G1 f=10 (elapsed 10), G2 f=14 (10), G3 f=18 (11).
+    let by_id = |id: usize| returned.iter().find(|(_, g)| g.id == id).unwrap();
+    let (t1, g1) = by_id(1);
+    assert_eq!(*t1, 10.0);
+    assert_eq!(g1.finish_time, 10.0);
+    assert_eq!(g1.elapsed(), 10.0);
+    let (t2, g2) = by_id(2);
+    assert_eq!(*t2, 14.0);
+    assert_eq!(g2.elapsed(), 10.0);
+    let (t3, g3) = by_id(3);
+    assert_eq!(*t3, 18.0);
+    assert_eq!(g3.elapsed(), 11.0);
+}
+
+#[test]
+fn table1_space_shared_column() {
+    let returned = run_table1(AllocPolicy::SpaceShared(SpacePolicy::Fcfs));
+    assert_eq!(returned.len(), 3);
+    // Table 1: G1 f=10 (10), G2 f=12.5 (8.5), G3 s=10 f=19.5 (12.5).
+    let by_id = |id: usize| returned.iter().find(|(_, g)| g.id == id).unwrap();
+    assert_eq!(by_id(1).1.finish_time, 10.0);
+    assert_eq!(by_id(1).1.elapsed(), 10.0);
+    assert_eq!(by_id(2).1.finish_time, 12.5);
+    assert_eq!(by_id(2).1.elapsed(), 8.5);
+    let (_, g3) = by_id(3);
+    assert_eq!(g3.start_time, 0.0); // start_time is set by ResGridlet on queue entry
+    assert_eq!(g3.finish_time, 19.5);
+    assert_eq!(g3.elapsed(), 12.5);
+}
+
+#[test]
+fn return_order_is_completion_order() {
+    let returned = run_table1(AllocPolicy::TimeShared);
+    let times: Vec<f64> = returned.iter().map(|(t, _)| *t).collect();
+    assert!(times.windows(2).all(|w| w[0] <= w[1]));
+}
+
+#[test]
+fn stale_interrupt_rule_under_bursty_arrivals() {
+    // Many same-length jobs arriving in a burst: each arrival invalidates
+    // the previous forecast interrupt; every job must still come back
+    // exactly once with consistent accounting.
+    let mut sim: Simulation<Msg> = Simulation::new();
+    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+    let chars = ResourceCharacteristics::new(
+        "t",
+        "l",
+        MachineList::cluster(1, 3, 10.0),
+        AllocPolicy::TimeShared,
+        1.0,
+        0.0,
+    );
+    let resource = sim.add(Box::new(GridResource::new(
+        "R",
+        chars,
+        ResourceCalendar::no_load(),
+        gis,
+    )));
+    let submissions: Vec<(f64, Gridlet)> = (0..30)
+        .map(|i| ((i as f64) * 0.1, Gridlet::new(i, 50.0 + i as f64, 0, 0)))
+        .collect();
+    let driver = sim.add(Box::new(Driver { resource, submissions, returned: vec![] }));
+    sim.run();
+    let returned = &sim.get::<Driver>(driver).unwrap().returned;
+    assert_eq!(returned.len(), 30, "every gridlet returns exactly once");
+    let mut ids: Vec<usize> = returned.iter().map(|(_, g)| g.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 30, "no duplicates");
+    for (t, g) in returned {
+        assert_eq!(g.finish_time, *t);
+        assert!(g.elapsed() > 0.0);
+        // cpu_time for time-shared = length / mips.
+        assert!((g.cpu_time - g.length_mi / 10.0).abs() < 1e-9);
+        // Conservation: wall-clock at least the dedicated-PE runtime.
+        assert!(g.elapsed() + 1e-9 >= g.cpu_time);
+    }
+}
+
+#[test]
+fn space_shared_queue_drains_in_fcfs_order() {
+    let mut sim: Simulation<Msg> = Simulation::new();
+    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+    let chars = ResourceCharacteristics::new(
+        "t",
+        "l",
+        MachineList::cluster(1, 1, 10.0),
+        AllocPolicy::SpaceShared(SpacePolicy::Fcfs),
+        1.0,
+        0.0,
+    );
+    let resource = sim.add(Box::new(GridResource::new(
+        "R",
+        chars,
+        ResourceCalendar::no_load(),
+        gis,
+    )));
+    let submissions: Vec<(f64, Gridlet)> =
+        (0..10).map(|i| (0.0, Gridlet::new(i, 100.0, 0, 0))).collect();
+    let driver = sim.add(Box::new(Driver { resource, submissions, returned: vec![] }));
+    sim.run();
+    let returned = &sim.get::<Driver>(driver).unwrap().returned;
+    assert_eq!(returned.len(), 10);
+    let ids: Vec<usize> = returned.iter().map(|(_, g)| g.id).collect();
+    assert_eq!(ids, (0..10).collect::<Vec<_>>(), "FCFS completion order");
+    // Sequential on one PE: finishes at 10, 20, ..., 100.
+    for (i, (t, _)) in returned.iter().enumerate() {
+        assert!((t - 10.0 * (i + 1) as f64).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,194 @@
+//! Differential tests: the AOT JAX/Pallas advisor artifact (via PJRT) must
+//! produce the same allocations as the pure-Rust `NativeAdvisor`, and the
+//! forecast artifact must match the paper's Fig 8/Table 1 numbers.
+//!
+//! Requires `artifacts/*.hlo.txt` (built by `make artifacts`); tests skip
+//! with a loud message when artifacts are missing so `cargo test` stays
+//! usable before the first python build.
+
+use gridsim::runtime::{
+    Advisor, AdvisorInput, ForecastInput, NativeAdvisor, ResourceSnapshot, XlaAdvisor,
+    XlaForecaster,
+};
+use gridsim::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("advisor.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn input(
+    resources: Vec<ResourceSnapshot>,
+    time: f64,
+    budget: f64,
+    avg: f64,
+    jobs: usize,
+) -> AdvisorInput {
+    AdvisorInput { resources, time_left: time, budget_left: budget, avg_job_mi: avg, jobs }
+}
+
+#[test]
+fn xla_advisor_matches_native_on_fixed_cases() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaAdvisor::load_dir(dir).expect("load advisor artifact");
+    let mut native = NativeAdvisor::new();
+    let cases = vec![
+        // (rates, costs, time, budget, avg, jobs)
+        (vec![(50.0, 0.01), (1000.0, 0.05)], 10.0, 1e9, 100.0, 8),
+        (vec![(20.0, 0.01), (1000.0, 0.10)], 10.0, 25.0, 100.0, 50),
+        (vec![(100.0, 0.01)], 0.0, 1e9, 100.0, 10),
+        (vec![(100.0, 0.01)], 10.0, 0.0, 100.0, 10),
+        // Paper-scale: the WWG testbed's cost-sorted rates/prices.
+        (
+            vec![
+                (760.0, 1.0 / 380.0),
+                (760.0, 2.0 / 380.0),
+                (1508.0, 3.0 / 377.0),
+                (754.0, 3.0 / 377.0),
+                (3016.0, 3.0 / 377.0),
+                (6560.0, 4.0 / 410.0),
+                (1508.0, 4.0 / 377.0),
+                (2460.0, 5.0 / 410.0),
+                (6560.0, 5.0 / 410.0),
+                (1640.0, 6.0 / 410.0),
+                (2060.0, 8.0 / 515.0),
+            ],
+            3100.0,
+            22000.0,
+            10500.0,
+            200,
+        ),
+    ];
+    for (specs, time, budget, avg, jobs) in cases {
+        let snaps: Vec<ResourceSnapshot> = specs
+            .iter()
+            .map(|&(r, c)| ResourceSnapshot { rate_mi: r, cost_per_mi: c })
+            .collect();
+        let mut snaps_sorted = snaps.clone();
+        snaps_sorted.sort_by(|a, b| a.cost_per_mi.total_cmp(&b.cost_per_mi));
+        let inp = input(snaps_sorted, time, budget, avg, jobs);
+        let a = native.advise(&inp);
+        let b = xla.advise(&inp);
+        assert_eq!(a, b, "native vs xla mismatch on {inp:?}");
+    }
+}
+
+#[test]
+fn xla_advisor_matches_native_randomized() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaAdvisor::load_dir(dir).expect("load advisor artifact");
+    let mut native = NativeAdvisor::new();
+    let mut rng = Rng::new(0xDBC);
+    let mut mismatches = 0;
+    for case in 0..300 {
+        let n = 1 + (rng.below(16) as usize);
+        let mut costs: Vec<f64> =
+            (0..n).map(|_| (1 + rng.below(500)) as f64 / 1000.0).collect();
+        costs.sort_by(|a, b| a.total_cmp(b));
+        let snaps: Vec<ResourceSnapshot> = costs
+            .into_iter()
+            .map(|c| ResourceSnapshot { rate_mi: rng.below(4000) as f64, cost_per_mi: c })
+            .collect();
+        let inp = input(
+            snaps,
+            rng.below(4000) as f64,
+            rng.below(30000) as f64,
+            (50 + rng.below(20000)) as f64,
+            rng.below(300) as usize,
+        );
+        let a = native.advise(&inp);
+        let b = xla.advise(&inp);
+        // f32 vs f64 may differ by one job at exact floor() boundaries;
+        // tolerate per-lane |Δ| ≤ 1 but require near-total agreement.
+        for (x, y) in a.iter().zip(&b) {
+            let d = (*x as i64 - *y as i64).abs();
+            assert!(d <= 1, "case {case}: native={a:?} xla={b:?} for {inp:?}");
+            if d > 0 {
+                mismatches += 1;
+            }
+        }
+    }
+    assert!(mismatches <= 6, "too many off-by-one boundary cases: {mismatches}");
+}
+
+#[test]
+fn xla_forecaster_reproduces_fig9_moment() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut fc = XlaForecaster::load_dir(dir).expect("load forecast artifact");
+    // Table 1 at t=7: G1 has 3 MI left (full PE), G2 5.5 and G3 9.5 share.
+    let input = ForecastInput {
+        remaining_mi: vec![vec![3.0, 5.5, 9.5]],
+        mips_per_pe: vec![1.0],
+        num_pe: vec![2],
+        availability: vec![1.0],
+    };
+    let out = fc.forecast(&input).expect("forecast");
+    let row = &out[0];
+    assert!((row[0] - 3.0).abs() < 1e-4, "G1 completes 3 units later, got {}", row[0]);
+    assert!((row[1] - 11.0).abs() < 1e-3, "G2 at half share: {}", row[1]);
+    assert!((row[2] - 19.0).abs() < 1e-3, "G3 at half share: {}", row[2]);
+}
+
+#[test]
+fn xla_forecaster_masks_inactive() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut fc = XlaForecaster::load_dir(dir).expect("load forecast artifact");
+    let input = ForecastInput {
+        remaining_mi: vec![vec![10.0, 0.0, 5.0]],
+        mips_per_pe: vec![10.0],
+        num_pe: vec![4],
+        availability: vec![1.0],
+    };
+    let out = fc.forecast(&input).expect("forecast");
+    assert!((out[0][0] - 1.0).abs() < 1e-5);
+    assert!(out[0][1].is_infinite(), "zero-MI slot is inactive");
+    assert!((out[0][2] - 0.5).abs() < 1e-5);
+}
+
+#[test]
+fn scenario_runs_with_xla_advisor_end_to_end() {
+    let Some(_) = artifacts_dir() else { return };
+    use gridsim::broker::{ExperimentSpec, Optimization};
+    use gridsim::gridsim::AllocPolicy;
+    use gridsim::scenario::{AdvisorKind, ResourceSpec, Scenario, run_scenario};
+    let resource = ResourceSpec {
+        name: "R0".into(),
+        arch: "test".into(),
+        os: "linux".into(),
+        machines: 1,
+        pes_per_machine: 2,
+        mips_per_pe: 100.0,
+        policy: AllocPolicy::TimeShared,
+        price: 1.0,
+        time_zone: 0.0,
+        calendar: None,
+    };
+    let build = |advisor: AdvisorKind| {
+        Scenario::builder()
+            .resource(resource.clone())
+            .user(
+                ExperimentSpec::task_farm(12, 1_000.0, 0.10)
+                    .deadline(500.0)
+                    .budget(10_000.0)
+                    .optimization(Optimization::Cost),
+            )
+            .seed(11)
+            .advisor(advisor)
+            .build()
+    };
+    let native = run_scenario(&build(AdvisorKind::Native));
+    let xla = run_scenario(&build(AdvisorKind::Xla));
+    assert_eq!(native.users[0].gridlets_completed, 12);
+    assert_eq!(
+        native.users[0].gridlets_completed,
+        xla.users[0].gridlets_completed,
+        "same outcome under either advisor engine"
+    );
+    assert!((native.users[0].budget_spent - xla.users[0].budget_spent).abs() < 1e-6);
+}
