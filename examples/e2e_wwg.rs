@@ -4,20 +4,25 @@
 //! budget 22,000 G$ (the paper's §5.3 relaxed-deadline cell), with the
 //! schedule advisor running as the AOT-compiled JAX/Pallas artifact through
 //! PJRT when artifacts are present (falling back to the native advisor with
-//! a warning otherwise). Reports the paper's headline metrics: Gridlets
-//! completed, budget spent, deadline utilization, resource selection.
+//! a warning otherwise). Runs through `GridSession` and reports the paper's
+//! headline metrics: Gridlets completed, budget spent, deadline utilization,
+//! resource selection.
 //!
 //!     make artifacts && cargo run --release --example e2e_wwg
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::config::testbed::wwg_testbed;
 use gridsim::output::report;
-use gridsim::scenario::{run_scenario, AdvisorKind, Scenario};
+use gridsim::scenario::{AdvisorKind, Scenario};
+use gridsim::session::GridSession;
 use std::path::Path;
 
 fn main() {
     let artifacts = Path::new("artifacts/advisor.hlo.txt");
-    let advisor = if artifacts.exists() {
+    let advisor = if !cfg!(feature = "xla") {
+        println!("NOTE: built without the `xla` cargo feature; using native advisor");
+        AdvisorKind::Native
+    } else if artifacts.exists() {
         println!("advisor engine: XLA artifact ({})", artifacts.display());
         AdvisorKind::Xla
     } else {
@@ -40,7 +45,7 @@ fn main() {
         .build();
 
     let start = std::time::Instant::now();
-    let result = run_scenario(&scenario);
+    let result = GridSession::new(&scenario).run_to_completion();
     let wall = start.elapsed();
     let u = &result.users[0];
 
@@ -64,7 +69,7 @@ fn main() {
     // Exit non-zero if the headline result does not hold, so this example
     // doubles as an end-to-end gate.
     let r8 = u.per_resource.iter().find(|r| r.name == "R8").unwrap();
-    if u.gridlets_completed != 200 || r8.gridlets_completed < 190 {
+    if !result.all_finished() || u.gridlets_completed != 200 || r8.gridlets_completed < 190 {
         eprintln!("E2E FAILURE: expected all 200 Gridlets on R8");
         std::process::exit(1);
     }

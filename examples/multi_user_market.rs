@@ -3,12 +3,31 @@
 //! completions per user decay with competition; termination stretches toward
 //! the deadline (Figures 33–35).
 //!
+//! The largest market is driven through the stepped `GridSession` API with
+//! a mid-run snapshot — watching brokers adapt *during* the run instead of
+//! only reading post-hoc results.
+//!
 //!     cargo run --release --example multi_user_market [-- --users 20]
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::config::testbed::wwg_testbed;
-use gridsim::scenario::{run_scenario, Scenario};
+use gridsim::scenario::Scenario;
+use gridsim::session::GridSession;
 use gridsim::util::cli::Args;
+
+fn market(n: usize, deadline: f64, budget: f64) -> Scenario {
+    Scenario::builder()
+        .resources(wwg_testbed())
+        .users(
+            n,
+            ExperimentSpec::task_farm(60, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(Optimization::Cost),
+        )
+        .seed(17)
+        .build()
+}
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -24,18 +43,7 @@ fn main() {
     );
     let mut n = 1;
     while n <= max_users {
-        let scenario = Scenario::builder()
-            .resources(wwg_testbed())
-            .users(
-                n,
-                ExperimentSpec::task_farm(60, 10_000.0, 0.10)
-                    .deadline(deadline)
-                    .budget(budget)
-                    .optimization(Optimization::Cost),
-            )
-            .seed(17)
-            .build();
-        let report = run_scenario(&scenario);
+        let report = GridSession::new(&market(n, deadline, budget)).run_to_completion();
         println!(
             "{:>6} {:>12.1} {:>14.1} {:>12.1} {:>10}",
             n,
@@ -46,6 +54,30 @@ fn main() {
         );
         n *= 2;
     }
+
+    // The same competition, observed mid-flight: pause the largest market
+    // halfway to the deadline and probe every broker.
+    let n = max_users.max(2);
+    let mut session = GridSession::new(&market(n, deadline, budget));
+    session.init();
+    session.run_until(deadline / 2.0);
+    let snap = session.snapshot();
+    let done: usize = snap.users.iter().map(|u| u.gridlets_completed).sum();
+    let in_flight: usize = snap.users.iter().map(|u| u.outstanding).sum();
+    let spent: f64 = snap.users.iter().map(|u| u.budget_spent).sum();
+    println!();
+    println!(
+        "snapshot of the {n}-user market at t={:.0} ({} events): \
+         {done} Gridlets done, {in_flight} in flight, {spent:.0} G$ spent",
+        snap.time, snap.events
+    );
+    let report = session.run_to_completion();
+    println!(
+        "resumed to completion: t={:.1}, mean {:.1} done/user",
+        report.end_time,
+        report.mean_completed()
+    );
+
     println!();
     println!("Shapes to look for (paper Figs 33–35): per-user completions decay");
     println!("with competition; termination time stretches toward the deadline.");

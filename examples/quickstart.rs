@@ -1,12 +1,26 @@
-//! Quickstart: build a tiny grid, run one deadline-and-budget-constrained
-//! experiment, and print the outcome.
+//! Quickstart: the `GridSession` lifecycle on a tiny grid —
+//! **build → step/observe → report**.
+//!
+//! 1. *Build*: describe resources and users declaratively in a
+//!    [`Scenario`]; `GridSession::new` assembles the entity graph (GIS,
+//!    statistics, shutdown coordinator, resources, one broker per user).
+//! 2. *Step/observe*: drive the simulation in increments with
+//!    `run_until(t)` (or one event at a time with `step()`), pulling a
+//!    per-broker progress `snapshot()` whenever you want — state, Gridlets
+//!    completed, budget spent, per-resource load.
+//! 3. *Report*: `report()` harvests per-user outcomes, distinguishing
+//!    finished experiments from truncated ones.
+//!
+//! For fire-and-forget runs, `run_scenario(&scenario)` (or
+//! `session.run_to_completion()`) does all three stages in one call.
 //!
 //!     cargo run --release --example quickstart
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::gridsim::AllocPolicy;
 use gridsim::output::report;
-use gridsim::scenario::{run_scenario, ResourceSpec, Scenario};
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::session::GridSession;
 
 fn main() {
     // Two resources: a cheap slow PC and a pricey fast SMP.
@@ -35,8 +49,8 @@ fn main() {
         calendar: None,
     };
 
-    // 50 jobs of ~10,000 MI; finish within 1,500 time units and 4,000 G$,
-    // as cheaply as possible.
+    // 1. BUILD — 50 jobs of ~10,000 MI; finish within 1,500 time units and
+    // 4,000 G$, as cheaply as possible.
     let scenario = Scenario::builder()
         .resource(pc)
         .resource(smp)
@@ -48,9 +62,31 @@ fn main() {
         )
         .seed(42)
         .build();
+    let mut session = GridSession::new(&scenario);
+    session.init();
 
-    let result = run_scenario(&scenario);
+    // 2. STEP / OBSERVE — advance the horizon 250 time units at a time,
+    // watching the broker work (discovery → trading → scheduling → done).
+    // The horizon must grow monotonically: `run_until` leaves the clock on
+    // the last dispatched event, so a `clock() + 250` horizon would stall
+    // whenever the next event lies further ahead than that.
+    println!("{:>8} {:>12} {:>10} {:>12}", "time", "state", "done", "spent(G$)");
+    let mut horizon = 0.0;
+    while !session.is_idle() {
+        horizon += 250.0;
+        session.run_until(horizon);
+        let snap = session.snapshot();
+        let u = &snap.users[0];
+        println!(
+            "{:>8.1} {:>12} {:>7}/{:<2} {:>12.1}",
+            snap.time, u.state, u.gridlets_completed, u.gridlets_total, u.budget_spent
+        );
+    }
+
+    // 3. REPORT — harvest the outcome.
+    let result = session.report().into_scenario_report();
     let user = &result.users[0];
+    println!();
     println!("{}", report::experiment_line("user", user));
     println!("\nper-resource breakdown:");
     println!("{}", report::resource_table(user));

@@ -52,7 +52,9 @@ fn main() {
     metric("native_advisor_decisions_per_sec", n as f64 / t0.elapsed().as_secs_f64(), "dec/s");
 
     let dir = Path::new("artifacts");
-    if dir.join("advisor.hlo.txt").exists() {
+    if !cfg!(feature = "xla") {
+        println!("SKIP xla half: built without the `xla` cargo feature");
+    } else if dir.join("advisor.hlo.txt").exists() {
         let mut xla = XlaAdvisor::load_dir(dir).expect("load advisor artifact");
         // Sanity: engines agree before we time them.
         assert_eq!(native.advise(&input), xla.advise(&input));

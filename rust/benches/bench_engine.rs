@@ -95,6 +95,8 @@ fn storm(entities: usize, events_each: u64) -> u64 {
 
 fn main() {
     println!("== bench_engine: DES kernel throughput ==");
+    // `run()` is implemented on the stepped init/step/finalize API, so this
+    // headline number *is* the stepped-execution throughput.
     bench("ring/2ents/100k-hops", 1, 5, || ring(2, 100_000));
     bench("ring/64ents/100k-hops", 1, 5, || ring(64, 100_000));
     bench("storm/100ents/1k-events-each", 1, 5, || storm(100, 1_000));

@@ -35,10 +35,11 @@ fn main() {
         figs33_38(3_100.0, &c).len()
     });
 
-    // Scaling metric: events/s with 40 brokers live.
+    // Scaling metric: events/s with 40 brokers live, via GridSession.
     use gridsim::broker::{ExperimentSpec, Optimization};
     use gridsim::config::testbed::wwg_testbed;
-    use gridsim::scenario::{run_scenario, Scenario};
+    use gridsim::scenario::Scenario;
+    use gridsim::session::GridSession;
     let scenario = Scenario::builder()
         .resources(wwg_testbed())
         .users(
@@ -51,9 +52,31 @@ fn main() {
         .seed(17)
         .build();
     let t0 = Instant::now();
-    let report = run_scenario(&scenario);
+    let report = GridSession::new(&scenario).run_to_completion();
     metric(
         "multi_user_events_per_sec(40 users)",
+        report.events as f64 / t0.elapsed().as_secs_f64(),
+        "events/s",
+    );
+
+    // Heterogeneous competition cell: the 40 users split across all four
+    // DBC policies (per-user overrides), same market.
+    let policies =
+        [Optimization::Cost, Optimization::Time, Optimization::CostTime, Optimization::NoOpt];
+    let mut builder = Scenario::builder().resources(wwg_testbed()).seed(17);
+    for i in 0..40 {
+        builder = builder.user(
+            ExperimentSpec::task_farm(40, 10_000.0, 0.10)
+                .deadline(3_100.0)
+                .budget(12_000.0)
+                .optimization(policies[i % policies.len()]),
+        );
+    }
+    let scenario = builder.build();
+    let t0 = Instant::now();
+    let report = GridSession::new(&scenario).run_to_completion();
+    metric(
+        "heterogeneous_events_per_sec(40 users, 4 policies)",
         report.events as f64 / t0.elapsed().as_secs_f64(),
         "events/s",
     );

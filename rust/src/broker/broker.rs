@@ -70,6 +70,42 @@ impl Default for BrokerConfig {
     }
 }
 
+/// Mid-run, pull-based view of one broker — what `GridSession::snapshot`
+/// exposes to observers without downcasting or waiting for termination.
+#[derive(Debug, Clone)]
+pub struct BrokerProgress {
+    /// Lifecycle phase label: `idle|discovering|trading|scheduling|draining|done`.
+    pub state: &'static str,
+    /// Gridlets finished successfully so far.
+    pub gridlets_completed: usize,
+    /// Total gridlets in the experiment (0 before the experiment arrives).
+    pub gridlets_total: usize,
+    /// G$ spent so far.
+    pub budget_spent: f64,
+    /// Absolute budget in effect (`f64::INFINITY` until trading completes).
+    pub budget: f64,
+    /// Absolute deadline in effect (`f64::INFINITY` until trading completes).
+    pub deadline: f64,
+    /// Gridlets dispatched and awaiting return.
+    pub outstanding: usize,
+    /// Gridlets not yet assigned to any resource.
+    pub unassigned: usize,
+    /// Per-resource load as this broker sees it.
+    pub per_resource: Vec<ResourceLoad>,
+}
+
+/// Per-resource slice of a [`BrokerProgress`].
+#[derive(Debug, Clone)]
+pub struct ResourceLoad {
+    pub name: String,
+    /// Gridlets committed (assigned + in flight) to the resource right now.
+    pub committed: usize,
+    /// Gridlets completed on the resource.
+    pub completed: usize,
+    /// G$ spent on the resource.
+    pub spent: f64,
+}
+
 /// The grid resource broker entity (one per user).
 pub struct Broker {
     name: String,
@@ -364,6 +400,88 @@ impl Broker {
         }
     }
 
+    fn resource_outcomes(&self) -> Vec<ResourceOutcome> {
+        self.views
+            .iter()
+            .map(|v| ResourceOutcome {
+                name: v.info.name.clone(),
+                gridlets_completed: v.completed,
+                budget_spent: v.spent,
+            })
+            .collect()
+    }
+
+    fn build_result(&self, finish_time: f64) -> ExperimentResult {
+        ExperimentResult {
+            gridlets_completed: self.finished.len(),
+            gridlets_total: self.total_jobs,
+            budget_spent: self.spent(),
+            finish_time,
+            start_time: self.started_at,
+            deadline: self.deadline_abs - self.started_at,
+            budget: self.budget_abs,
+            per_resource: self.resource_outcomes(),
+            trace: self.trace.points().to_vec(),
+        }
+    }
+
+    /// Lifecycle phase label (see [`BrokerProgress::state`]).
+    pub fn state_label(&self) -> &'static str {
+        match self.state {
+            State::Idle => "idle",
+            State::Discovering => "discovering",
+            State::Trading => "trading",
+            State::Scheduling => "scheduling",
+            State::Draining => "draining",
+            State::Done => "done",
+        }
+    }
+
+    /// Has the experiment terminated (result computed and reported)?
+    pub fn is_done(&self) -> bool {
+        self.state == State::Done
+    }
+
+    /// Mid-run progress snapshot — safe to call at any point of the
+    /// lifecycle; all numbers are the broker's real current accounting.
+    pub fn progress(&self) -> BrokerProgress {
+        BrokerProgress {
+            state: self.state_label(),
+            gridlets_completed: self.finished.len(),
+            gridlets_total: self.total_jobs,
+            budget_spent: self.spent(),
+            budget: self.budget_abs,
+            deadline: self.deadline_abs,
+            outstanding: self.outstanding(),
+            unassigned: self.unassigned.len(),
+            per_resource: self
+                .views
+                .iter()
+                .map(|v| ResourceLoad {
+                    name: v.info.name.clone(),
+                    committed: v.committed(),
+                    completed: v.completed,
+                    spent: v.spent,
+                })
+                .collect(),
+        }
+    }
+
+    /// Honest partial outcome for a run that ended (kernel limit hit) before
+    /// this broker finished: real completed/spent accounting, not fabricated
+    /// zeros. `finish_time` is the simulation end time; deadline/budget are
+    /// 0 when trading never completed (no absolute values were derived).
+    pub fn partial_result(&self, end_time: f64) -> ExperimentResult {
+        let mut r = self.build_result(end_time);
+        if !self.deadline_abs.is_finite() {
+            r.deadline = 0.0;
+        }
+        if !self.budget_abs.is_finite() {
+            r.budget = 0.0;
+        }
+        r
+    }
+
     fn finish(&mut self, ctx: &mut Ctx<Msg>) {
         if self.state == State::Done {
             return;
@@ -379,25 +497,7 @@ impl Broker {
                 spent: v.spent,
             });
         }
-        let result = ExperimentResult {
-            gridlets_completed: self.finished.len(),
-            gridlets_total: self.total_jobs,
-            budget_spent: self.spent(),
-            finish_time: now,
-            start_time: self.started_at,
-            deadline: self.deadline_abs - self.started_at,
-            budget: self.budget_abs,
-            per_resource: self
-                .views
-                .iter()
-                .map(|v| ResourceOutcome {
-                    name: v.info.name.clone(),
-                    gridlets_completed: v.completed,
-                    budget_spent: v.spent,
-                })
-                .collect(),
-            trace: self.trace.points().to_vec(),
-        };
+        let result = self.build_result(now);
         self.result = Some(result.clone());
         ctx.send(
             self.user,

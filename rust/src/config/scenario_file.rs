@@ -5,6 +5,7 @@
 //!   "seed": 42,
 //!   "advisor": "native",
 //!   "network": {"type": "instantaneous"},
+//!   "broker": {"max_gridlets_per_pe": 2},
 //!   "resources": [
 //!     {"name": "R0", "machines": 1, "pes_per_machine": 4, "mips": 515,
 //!      "policy": "time", "price": 8.0, "time_zone": 10.0},
@@ -13,27 +14,181 @@
 //!   ],
 //!   "users": [
 //!     {"gridlets": 200, "length_mi": 10000, "variation": 0.1,
-//!      "deadline": 3100, "budget": 22000, "optimization": "cost"}
+//!      "deadline": 3100, "budget": 22000, "optimization": "cost"},
+//!     {"gridlets": 100, "deadline": 3100, "budget": 9000,
+//!      "policy": "time", "advisor": "native",
+//!      "broker": {"max_gridlets_per_pe": 1}, "submit_delay": 50}
 //!   ]
 //! }
 //! ```
 //!
 //! `"testbed": "wwg"` can replace the `resources` array to pull in Table 2.
+//!
+//! The loader is strict: unknown keys at any level are rejected with the
+//! allowed-key list (and a did-you-mean hint), so a typo like `"dedline"`
+//! fails loudly instead of silently falling back to a default. Per-user
+//! `policy` (alias of `optimization`), `advisor` and `broker` override the
+//! scenario-level defaults (see [`crate::scenario::UserSpec`]).
 
 use super::testbed::wwg_testbed;
+use crate::broker::broker::BrokerConfig;
 use crate::broker::{ExperimentSpec, Optimization};
 use crate::gridsim::{AllocPolicy, SpacePolicy};
-use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario};
+use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec};
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
+
+const SCENARIO_KEYS: &[&str] =
+    &["seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time"];
+const NETWORK_KEYS: &[&str] = &["type", "rate", "latency"];
+const BROKER_KEYS: &[&str] =
+    &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe"];
+const RESOURCE_KEYS: &[&str] = &[
+    "name", "arch", "os", "machines", "pes_per_machine", "pes", "mips", "policy", "price",
+    "time_zone",
+];
+const USER_KEYS: &[&str] = &[
+    "gridlets",
+    "length_mi",
+    "variation",
+    "deadline",
+    "d_factor",
+    "budget",
+    "b_factor",
+    "optimization",
+    "policy",
+    "advisor",
+    "broker",
+    "input_bytes",
+    "output_bytes",
+    "submit_delay",
+];
+
+/// Levenshtein distance (for did-you-mean hints on unknown keys).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for i in 1..=a.len() {
+        let mut cur = vec![i; b.len() + 1];
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+fn nearest<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    allowed
+        .iter()
+        .copied()
+        .map(|a| (edit_distance(key, a), a))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, a)| a)
+}
+
+/// Reject any object key outside `allowed` (with a helpful message) and any
+/// duplicated key (the hand-rolled parser keeps both; lookups would silently
+/// take the first).
+fn reject_unknown_keys(v: &Value, what: &str, allowed: &[&str]) -> Result<()> {
+    let Value::Obj(fields) = v else {
+        bail!("{what} must be a JSON object");
+    };
+    let mut seen = std::collections::BTreeSet::new();
+    for (key, _) in fields {
+        if !allowed.contains(&key.as_str()) {
+            let hint = nearest(key, allowed)
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            bail!(
+                "unknown key {key:?} in {what}{hint}; allowed keys: {}",
+                allowed.join(", ")
+            );
+        }
+        if !seen.insert(key.as_str()) {
+            bail!("duplicate key {key:?} in {what}");
+        }
+    }
+    Ok(())
+}
+
+/// Typed optional getters: a known key holding a wrong-typed value is a
+/// hard error, not a silent fallback to the default (same promise as the
+/// unknown-key rejection).
+fn opt_f64(v: &Value, what: &str, key: &str) -> Result<Option<f64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_f64() {
+            Some(n) => Ok(Some(n)),
+            None => bail!("{what}: {key:?} must be a number"),
+        },
+    }
+}
+
+fn opt_usize(v: &Value, what: &str, key: &str) -> Result<Option<usize>> {
+    // 2^53: past this an f64 cannot represent every integer, and an `as`
+    // cast would silently saturate.
+    const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+    match opt_f64(v, what, key)? {
+        None => Ok(None),
+        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < MAX_EXACT => Ok(Some(n as usize)),
+        Some(n) => bail!("{what}: {key:?} must be a non-negative integer (< 2^53), got {n}"),
+    }
+}
+
+fn opt_str<'a>(v: &'a Value, what: &str, key: &str) -> Result<Option<&'a str>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(x) => match x.as_str() {
+            Some(s) => Ok(Some(s)),
+            None => bail!("{what}: {key:?} must be a string"),
+        },
+    }
+}
+
+fn parse_advisor(s: &str) -> Result<AdvisorKind> {
+    match s {
+        "native" => Ok(AdvisorKind::Native),
+        "xla" => Ok(AdvisorKind::Xla),
+        other => bail!("unknown advisor {other:?} (native|xla)"),
+    }
+}
+
+/// Parse a broker tuning object on top of `base` (partial overrides).
+fn parse_broker_config(v: &Value, base: &BrokerConfig) -> Result<BrokerConfig> {
+    reject_unknown_keys(v, "broker config", BROKER_KEYS)?;
+    let mut config = base.clone();
+    if let Some(x) = opt_f64(v, "broker config", "tick_fraction")? {
+        config.tick_fraction = x;
+    }
+    if let Some(x) = opt_f64(v, "broker config", "min_tick")? {
+        config.min_tick = x;
+    }
+    if let Some(x) = opt_f64(v, "broker config", "trace_interval")? {
+        config.trace_interval = x;
+    }
+    if let Some(x) = opt_usize(v, "broker config", "max_gridlets_per_pe")? {
+        config.max_gridlets_per_pe = x;
+    }
+    Ok(config)
+}
 
 /// Parse a scenario from JSON text.
 pub fn parse_scenario(text: &str) -> Result<Scenario> {
     let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
-    let seed = root.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+    reject_unknown_keys(&root, "scenario", SCENARIO_KEYS)?;
+    let seed = opt_usize(&root, "scenario", "seed")?.unwrap_or(0) as u64;
 
-    let resources = match root.get("testbed").and_then(Value::as_str) {
-        Some("wwg") => wwg_testbed(),
+    let resources = match opt_str(&root, "scenario", "testbed")? {
+        Some("wwg") => {
+            if root.get("resources").is_some() {
+                bail!("give either \"testbed\" or \"resources\", not both");
+            }
+            wwg_testbed()
+        }
         Some(other) => bail!("unknown testbed {other:?} (only \"wwg\" is built in)"),
         None => {
             let arr = root
@@ -43,105 +198,161 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
             arr.iter().map(parse_resource).collect::<Result<Vec<_>>>()?
         }
     };
+    if resources.is_empty() {
+        bail!("\"resources\" array is empty");
+    }
+
+    let advisor = parse_advisor(opt_str(&root, "scenario", "advisor")?.unwrap_or("native"))?;
+
+    // Scenario-level broker tuning is the default every user starts from.
+    let broker_default = match root.get("broker") {
+        Some(v) => parse_broker_config(v, &BrokerConfig::default())?,
+        None => BrokerConfig::default(),
+    };
 
     let users = root
         .get("users")
         .and_then(Value::as_arr)
         .ok_or_else(|| anyhow!("missing \"users\" array"))?
         .iter()
-        .map(parse_user)
+        .enumerate()
+        .map(|(i, u)| parse_user(u, &broker_default).with_context(|| format!("user #{i}")))
         .collect::<Result<Vec<_>>>()?;
-
-    let advisor = match root.get("advisor").and_then(Value::as_str).unwrap_or("native") {
-        "native" => AdvisorKind::Native,
-        "xla" => AdvisorKind::Xla,
-        other => bail!("unknown advisor {other:?} (native|xla)"),
-    };
+    if users.is_empty() {
+        bail!("\"users\" array is empty");
+    }
 
     let network = match root.get("network") {
         None => NetworkSpec::Instantaneous,
-        Some(net) => match net.get("type").and_then(Value::as_str) {
-            Some("instantaneous") | None => NetworkSpec::Instantaneous,
-            Some("baud") => NetworkSpec::Baud {
-                default_rate: net
-                    .get("rate")
-                    .and_then(Value::as_f64)
-                    .unwrap_or(crate::gridsim::tags::DEFAULT_BAUD_RATE),
-                latency: net.get("latency").and_then(Value::as_f64).unwrap_or(0.0),
-            },
-            Some(other) => bail!("unknown network type {other:?}"),
-        },
+        Some(net) => {
+            reject_unknown_keys(net, "network", NETWORK_KEYS)?;
+            match opt_str(net, "network", "type")? {
+                Some("instantaneous") | None => {
+                    // rate/latency are baud-model knobs; accepting them here
+                    // would silently ignore them.
+                    for key in ["rate", "latency"] {
+                        if net.get(key).is_some() {
+                            bail!(
+                                "network: {key:?} only applies to {{\"type\": \"baud\"}}, \
+                                 not an instantaneous network"
+                            );
+                        }
+                    }
+                    NetworkSpec::Instantaneous
+                }
+                Some("baud") => NetworkSpec::Baud {
+                    default_rate: opt_f64(net, "network", "rate")?
+                        .unwrap_or(crate::gridsim::tags::DEFAULT_BAUD_RATE),
+                    latency: opt_f64(net, "network", "latency")?.unwrap_or(0.0),
+                },
+                Some(other) => bail!("unknown network type {other:?}"),
+            }
+        }
     };
 
     let mut builder = Scenario::builder()
         .resources(resources)
         .seed(seed)
         .advisor(advisor)
+        .broker_config(broker_default)
         .network(network);
     for u in users {
         builder = builder.user(u);
     }
-    if let Some(t) = root.get("max_time").and_then(Value::as_f64) {
+    if let Some(t) = opt_f64(&root, "scenario", "max_time")? {
         builder = builder.max_time(t);
     }
     Ok(builder.build())
 }
 
 fn parse_resource(v: &Value) -> Result<ResourceSpec> {
+    reject_unknown_keys(v, "resource", RESOURCE_KEYS)?;
     let name = v.req_str("name").context("resource")?.to_string();
-    let policy = match v.get("policy").and_then(Value::as_str).unwrap_or("time") {
+    let policy = match opt_str(v, "resource", "policy")?.unwrap_or("time") {
         "time" | "time-shared" => AllocPolicy::TimeShared,
         "space-fcfs" | "space" => AllocPolicy::SpaceShared(SpacePolicy::Fcfs),
         "space-sjf" => AllocPolicy::SpaceShared(SpacePolicy::Sjf),
         "space-backfill" => AllocPolicy::SpaceShared(SpacePolicy::BackfillEasy),
         other => bail!("resource {name}: unknown policy {other:?}"),
     };
+    if v.get("pes_per_machine").is_some() && v.get("pes").is_some() {
+        bail!("resource {name}: give either \"pes_per_machine\" or \"pes\", not both");
+    }
+    let pes_per_machine = match opt_usize(v, "resource", "pes_per_machine")? {
+        Some(n) => n,
+        None => opt_usize(v, "resource", "pes")?.unwrap_or(1),
+    };
     Ok(ResourceSpec {
-        arch: v.get("arch").and_then(Value::as_str).unwrap_or("generic").to_string(),
-        os: v.get("os").and_then(Value::as_str).unwrap_or("linux").to_string(),
-        machines: v.get("machines").and_then(Value::as_usize).unwrap_or(1),
-        pes_per_machine: v
-            .get("pes_per_machine")
-            .and_then(Value::as_usize)
-            .or_else(|| v.get("pes").and_then(Value::as_usize))
-            .unwrap_or(1),
+        arch: opt_str(v, "resource", "arch")?.unwrap_or("generic").to_string(),
+        os: opt_str(v, "resource", "os")?.unwrap_or("linux").to_string(),
+        machines: opt_usize(v, "resource", "machines")?.unwrap_or(1),
+        pes_per_machine,
         mips_per_pe: v.req_f64("mips").with_context(|| format!("resource {name}"))?,
         policy,
         price: v.req_f64("price").with_context(|| format!("resource {name}"))?,
-        time_zone: v.get("time_zone").and_then(Value::as_f64).unwrap_or(0.0),
+        time_zone: opt_f64(v, "resource", "time_zone")?.unwrap_or(0.0),
         calendar: None,
         name,
     })
 }
 
-fn parse_user(v: &Value) -> Result<ExperimentSpec> {
+fn parse_user(v: &Value, broker_default: &BrokerConfig) -> Result<UserSpec> {
+    reject_unknown_keys(v, "user", USER_KEYS)?;
     let mut spec = ExperimentSpec::task_farm(
-        v.get("gridlets").and_then(Value::as_usize).unwrap_or(200),
-        v.get("length_mi").and_then(Value::as_f64).unwrap_or(10_000.0),
-        v.get("variation").and_then(Value::as_f64).unwrap_or(0.10),
+        opt_usize(v, "user", "gridlets")?.unwrap_or(200),
+        opt_f64(v, "user", "length_mi")?.unwrap_or(10_000.0),
+        opt_f64(v, "user", "variation")?.unwrap_or(0.10),
     );
-    if let Some(d) = v.get("deadline").and_then(Value::as_f64) {
+    if v.get("deadline").is_some() && v.get("d_factor").is_some() {
+        bail!("give either \"deadline\" or \"d_factor\", not both");
+    }
+    if v.get("budget").is_some() && v.get("b_factor").is_some() {
+        bail!("give either \"budget\" or \"b_factor\", not both");
+    }
+    if let Some(d) = opt_f64(v, "user", "deadline")? {
         spec = spec.deadline(d);
-    } else if let Some(f) = v.get("d_factor").and_then(Value::as_f64) {
+    } else if let Some(f) = opt_f64(v, "user", "d_factor")? {
         spec = spec.d_factor(f);
     }
-    if let Some(b) = v.get("budget").and_then(Value::as_f64) {
+    if let Some(b) = opt_f64(v, "user", "budget")? {
         spec = spec.budget(b);
-    } else if let Some(f) = v.get("b_factor").and_then(Value::as_f64) {
+    } else if let Some(f) = opt_f64(v, "user", "b_factor")? {
         spec = spec.b_factor(f);
     }
-    if let Some(o) = v.get("optimization").and_then(Value::as_str) {
+    // "policy" is the per-user alias of "optimization" (the scheduling
+    // policy this user's broker runs); giving both is ambiguous.
+    let opt = match (v.get("optimization").is_some(), v.get("policy").is_some()) {
+        (true, true) => bail!("give either \"optimization\" or \"policy\", not both"),
+        (true, false) => opt_str(v, "user", "optimization")?,
+        (false, true) => opt_str(v, "user", "policy")?,
+        (false, false) => None,
+    };
+    if let Some(s) = opt {
         spec = spec.optimization(
-            Optimization::parse(o).ok_or_else(|| anyhow!("unknown optimization {o:?}"))?,
+            Optimization::parse(s).ok_or_else(|| anyhow!("unknown optimization {s:?}"))?,
         );
     }
-    if let Some(n) = v.get("input_bytes").and_then(Value::as_f64) {
+    if let Some(n) = opt_f64(v, "user", "input_bytes")? {
         spec.input_bytes = n as u64;
     }
-    if let Some(n) = v.get("output_bytes").and_then(Value::as_f64) {
+    if let Some(n) = opt_f64(v, "user", "output_bytes")? {
         spec.output_bytes = n as u64;
     }
-    Ok(spec)
+
+    let mut user = UserSpec::new(spec);
+    if let Some(s) = opt_str(v, "user", "advisor")? {
+        user = user.advisor(parse_advisor(s)?);
+    }
+    if let Some(b) = v.get("broker") {
+        user = user.broker(parse_broker_config(b, broker_default)?);
+    }
+    if let Some(d) = opt_f64(v, "user", "submit_delay")? {
+        if d < 0.0 {
+            bail!("submit_delay must be >= 0, got {d}");
+        }
+        user = user.submit_delay(d);
+    }
+    Ok(user)
 }
 
 #[cfg(test)]
@@ -170,8 +381,10 @@ mod tests {
         assert_eq!(s.resources[1].machines, 8);
         assert!(!s.resources[1].policy.is_time_shared());
         assert_eq!(s.users.len(), 1);
-        assert_eq!(s.users[0].num_gridlets, 50);
-        assert_eq!(s.users[0].optimization, Optimization::CostTime);
+        assert_eq!(s.users[0].experiment.num_gridlets, 50);
+        assert_eq!(s.users[0].experiment.optimization, Optimization::CostTime);
+        assert!(s.users[0].advisor.is_none());
+        assert!(s.users[0].broker.is_none());
         assert_eq!(
             s.network,
             NetworkSpec::Baud { default_rate: 19200.0, latency: 0.5 }
@@ -190,19 +403,215 @@ mod tests {
         let text = r#"{"testbed": "wwg",
             "users": [{"gridlets": 10, "d_factor": 0.5, "b_factor": 0.25}]}"#;
         let s = parse_scenario(text).unwrap();
-        assert_eq!(s.users[0].deadline, crate::broker::DeadlineSpec::Factor(0.5));
-        assert_eq!(s.users[0].budget, crate::broker::BudgetSpec::Factor(0.25));
+        assert_eq!(s.users[0].experiment.deadline, crate::broker::DeadlineSpec::Factor(0.5));
+        assert_eq!(s.users[0].experiment.budget, crate::broker::BudgetSpec::Factor(0.25));
     }
 
     #[test]
     fn rejects_bad_input() {
         assert!(parse_scenario("{").is_err());
         assert!(parse_scenario(r#"{"users": []}"#).is_err());
+        assert!(parse_scenario(r#"{"testbed": "wwg", "users": []}"#).is_err());
+        assert!(parse_scenario(r#"{"resources": [], "users": [{}]}"#).is_err());
         assert!(parse_scenario(r#"{"testbed": "unknown", "users": [{}]}"#).is_err());
         assert!(parse_scenario(
             r#"{"resources": [{"name": "A", "mips": 1, "price": 1, "policy": "bogus"}],
                 "users": [{}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn rejects_ambiguous_key_pairs() {
+        for (text, needle) in [
+            (
+                r#"{"testbed": "wwg", "users": [{"deadline": 3100, "d_factor": 0.5}]}"#,
+                "d_factor",
+            ),
+            (
+                r#"{"testbed": "wwg", "users": [{"budget": 9000, "b_factor": 0.5}]}"#,
+                "b_factor",
+            ),
+            (
+                r#"{"users": [{}], "resources":
+                    [{"name": "A", "mips": 1, "price": 1, "pes": 2, "pes_per_machine": 2}]}"#,
+                "pes_per_machine",
+            ),
+        ] {
+            let err = parse_scenario(text).unwrap_err().to_string();
+            assert!(err.contains("either") && err.contains(needle), "{err}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_keys_with_hint() {
+        // Typo'd user key: the old loader silently fell back to the default
+        // deadline; now it is a hard error with a did-you-mean hint.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 10, "dedline": 100}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("dedline"), "{err}");
+        assert!(err.contains("deadline"), "hint expected: {err}");
+        assert!(err.contains("user #0"), "context expected: {err}");
+
+        let err = parse_scenario(r#"{"testbed": "wwg", "sede": 1, "users": [{}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sede") && err.contains("seed"), "{err}");
+
+        let err = parse_scenario(
+            r#"{"users": [{}],
+                "resources": [{"name": "A", "mips": 1, "price": 1, "prize": 2}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("prize") && err.contains("price"), "{err}");
+
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "network": {"type": "baud", "ratee": 1},
+                "users": [{}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("ratee") && err.contains("rate"), "{err}");
+    }
+
+    #[test]
+    fn per_user_overrides() {
+        let text = r#"{
+            "testbed": "wwg",
+            "broker": {"max_gridlets_per_pe": 4},
+            "users": [
+                {"gridlets": 10, "policy": "time"},
+                {"gridlets": 20, "optimization": "cost", "advisor": "native",
+                 "broker": {"min_tick": 2.5}, "submit_delay": 10}
+            ]
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        // Scenario-level broker default applies to everyone...
+        assert_eq!(s.broker_config.max_gridlets_per_pe, 4);
+        assert_eq!(s.users[0].experiment.optimization, Optimization::Time);
+        assert!(s.users[0].broker.is_none());
+        // ...and the per-user override layers on top of it.
+        let b1 = s.users[1].broker.as_ref().unwrap();
+        assert_eq!(b1.max_gridlets_per_pe, 4, "inherits scenario default");
+        assert_eq!(b1.min_tick, 2.5, "overrides min_tick");
+        assert_eq!(s.users[1].advisor, Some(AdvisorKind::Native));
+        assert_eq!(s.users[1].submit_delay, 10.0);
+    }
+
+    #[test]
+    fn rejects_wrong_typed_values_for_known_keys() {
+        // Known key + wrong type is as loud as an unknown key.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"broker": {"min_tick": "2.5"}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("min_tick") && err.contains("number"), "{err}");
+
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{"submit_delay": "50"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("submit_delay"), "{err}");
+
+        let err = parse_scenario(r#"{"testbed": "wwg", "seed": "x", "users": [{}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("seed"), "{err}");
+
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 10.5}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("gridlets") && err.contains("integer"), "{err}");
+
+        // Out-of-f64-precision integers would saturate under an `as` cast.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 1e30}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("gridlets"), "{err}");
+
+        // Duplicate keys: first-wins lookup would silently drop the second.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"deadline": 100, "budget": 1, "deadline": 3100}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("duplicate") && err.contains("deadline"), "{err}");
+
+        let err = parse_scenario(r#"{"testbed": 3, "users": [{}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("testbed"), "{err}");
+
+        // Fractional / negative seeds would silently change the RNG stream
+        // under an `as u64` cast; they are hard errors instead.
+        for bad in [r#"{"testbed": "wwg", "seed": 1.7, "users": [{}]}"#,
+                    r#"{"testbed": "wwg", "seed": -3, "users": [{}]}"#] {
+            let err = parse_scenario(bad).unwrap_err().to_string();
+            assert!(err.contains("seed") && err.contains("integer"), "{err}");
+        }
+    }
+
+    #[test]
+    fn rejects_baud_knobs_on_instantaneous_network() {
+        // Forgetting "type": "baud" must not silently drop rate/latency.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "network": {"rate": 9600},
+                "users": [{}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("rate") && err.contains("baud"), "{err}");
+
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "network": {"type": "instantaneous", "latency": 0.5},
+                "users": [{}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("latency"), "{err}");
+    }
+
+    #[test]
+    fn rejects_ambiguous_policy_plus_optimization() {
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"policy": "time", "optimization": "cost"}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("either"), "{err}");
+    }
+
+    #[test]
+    fn rejects_testbed_plus_resources() {
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "resources": [{"name": "A", "mips": 1, "price": 1}],
+                "users": [{}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not both"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_hints() {
+        assert_eq!(edit_distance("dedline", "deadline"), 1);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(nearest("dedline", USER_KEYS), Some("deadline"));
+        assert_eq!(nearest("zzzzzz", USER_KEYS), None);
     }
 }

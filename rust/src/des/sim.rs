@@ -34,6 +34,13 @@ pub struct Simulation<M> {
     config: SimConfig,
     events_processed: u64,
     stopped: bool,
+    /// `on_start` hooks have run (the start phase is idempotent).
+    started: bool,
+    /// `on_end` hooks have run (the end phase is idempotent).
+    ended: bool,
+    /// Observer invoked on every dispatched event (after the clock advances,
+    /// before the destination entity handles it).
+    observer: Option<Box<dyn FnMut(&Event<M>)>>,
 }
 
 impl<M: 'static> Default for Simulation<M> {
@@ -54,6 +61,9 @@ impl<M: 'static> Simulation<M> {
             config: SimConfig::default(),
             events_processed: 0,
             stopped: false,
+            started: false,
+            ended: false,
+            observer: None,
         }
     }
 
@@ -88,6 +98,23 @@ impl<M: 'static> Simulation<M> {
         self.by_name.get(name).copied()
     }
 
+    /// Name of an entity (observer/diagnostics support).
+    pub fn name_of(&self, id: EntityId) -> &str {
+        &self.names[id]
+    }
+
+    /// Install an observer called for every dispatched event, after the
+    /// clock advances to the event's timestamp and before the destination
+    /// entity handles it. One observer at a time (last install wins).
+    pub fn set_observer(&mut self, observer: Box<dyn FnMut(&Event<M>)>) {
+        self.observer = Some(observer);
+    }
+
+    /// Remove the installed observer, returning it.
+    pub fn take_observer(&mut self) -> Option<Box<dyn FnMut(&Event<M>)>> {
+        self.observer.take()
+    }
+
     pub fn entity_count(&self) -> usize {
         self.entities.len()
     }
@@ -102,6 +129,12 @@ impl<M: 'static> Simulation<M> {
         self.events_processed
     }
 
+    /// Timestamp of the next pending event, if any (lets pacing loops skip
+    /// over gaps in a sparse queue instead of polling through them).
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.queue.peek_time()
+    }
+
     /// Borrow a concrete entity back out of the simulation (post-run
     /// inspection of results).
     pub fn get<T: 'static>(&self, id: EntityId) -> Option<&T> {
@@ -112,39 +145,108 @@ impl<M: 'static> Simulation<M> {
         self.entities[id].as_mut().and_then(|e| e.as_any_mut().downcast_mut::<T>())
     }
 
-    /// Run the simulation to completion: `on_start` for every entity in id
-    /// order, then the event loop until the queue drains, an entity calls
-    /// [`Ctx::stop`], or a kernel limit is hit. Returns the final clock.
-    pub fn run(&mut self) -> f64 {
-        // Start phase.
+    /// Start phase: `on_start` for every entity in id order. Idempotent —
+    /// [`step`](Self::step)/[`run_until`](Self::run_until)/[`run`](Self::run)
+    /// call it implicitly; explicit calls are allowed for observation before
+    /// the first event.
+    pub fn init(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
         for id in 0..self.entities.len() {
             if self.stopped {
                 break;
             }
             self.with_entity(id, |ent, ctx| ent.on_start(ctx));
         }
-        // Event loop.
-        while !self.stopped && self.events_processed < self.config.max_events {
-            let Some(ev) = self.queue.pop() else { break };
-            if ev.time > self.config.max_time {
-                break;
-            }
-            debug_assert!(
-                ev.time + 1e-9 >= self.clock,
-                "time went backwards: {} -> {}",
-                self.clock,
-                ev.time
-            );
-            self.clock = ev.time.max(self.clock);
-            self.events_processed += 1;
-            let dst = ev.dst;
-            self.dispatch(dst, ev);
+    }
+
+    /// True when the event loop cannot dispatch any further event: an entity
+    /// requested stop, a kernel limit was hit, or the queue is drained (or
+    /// holds only events beyond `max_time`). A simulation whose start phase
+    /// has not run yet is *not* idle — entities schedule their first events
+    /// in `init()`, so `while !is_idle() { step()/run_until() }` works
+    /// without an explicit `init()` call.
+    pub fn is_idle(&self) -> bool {
+        if !self.started {
+            return false;
         }
-        // End phase.
+        self.stopped
+            || self.events_processed >= self.config.max_events
+            || match self.queue.peek_time() {
+                None => true,
+                Some(t) => t > self.config.max_time,
+            }
+    }
+
+    /// Dispatch exactly one event. Runs the start phase first if needed.
+    /// Returns the dispatched event's timestamp, or `None` when the
+    /// simulation is idle (see [`is_idle`](Self::is_idle)).
+    pub fn step(&mut self) -> Option<f64> {
+        self.init();
+        if self.is_idle() {
+            return None;
+        }
+        let ev = self.queue.pop().expect("is_idle() checked a head event exists");
+        debug_assert!(
+            ev.time + 1e-9 >= self.clock,
+            "time went backwards: {} -> {}",
+            self.clock,
+            ev.time
+        );
+        self.clock = ev.time.max(self.clock);
+        self.events_processed += 1;
+        if let Some(obs) = self.observer.as_mut() {
+            obs(&ev);
+        }
+        let t = self.clock;
+        let dst = ev.dst;
+        self.dispatch(dst, ev);
+        Some(t)
+    }
+
+    /// Dispatch every event with timestamp ≤ `t`, then return the clock.
+    /// The clock does *not* jump to `t` — it tracks the last dispatched
+    /// event, so an incremental `run_until` sweep reaches exactly the same
+    /// final clock as one [`run`](Self::run).
+    pub fn run_until(&mut self, t: f64) -> f64 {
+        self.init();
+        while !self.is_idle() {
+            match self.queue.peek_time() {
+                Some(next) if next <= t => {
+                    self.step();
+                }
+                _ => break,
+            }
+        }
+        self.clock
+    }
+
+    /// End phase: `on_end` for every entity (reporting hooks). Idempotent.
+    /// Returns the final clock.
+    pub fn finalize(&mut self) -> f64 {
+        self.init();
+        if self.ended {
+            return self.clock;
+        }
+        self.ended = true;
         for id in 0..self.entities.len() {
             self.with_entity(id, |ent, ctx| ent.on_end(ctx));
         }
         self.clock
+    }
+
+    /// Run the simulation to completion: `on_start` for every entity in id
+    /// order, then the event loop until the queue drains, an entity calls
+    /// [`Ctx::stop`], or a kernel limit is hit. Returns the final clock.
+    ///
+    /// Equivalent to `init()` + `step()` until idle + `finalize()` — the
+    /// stepped API produces bit-identical results.
+    pub fn run(&mut self) -> f64 {
+        self.init();
+        while self.step().is_some() {}
+        self.finalize()
     }
 
     fn dispatch(&mut self, dst: EntityId, ev: Event<M>) {
@@ -333,5 +435,101 @@ mod tests {
         let id = sim.add(Box::new(SelfSched { saw_internal: false }));
         sim.run();
         assert!(sim.get::<SelfSched>(id).unwrap().saw_internal);
+    }
+
+    #[test]
+    fn stepped_run_matches_run() {
+        let build = || {
+            let mut sim = Simulation::new();
+            let a = sim.add(ping("a", 1, 6, true));
+            let b = sim.add(ping("b", 0, 0, false));
+            (sim, a, b)
+        };
+        let (mut whole, wa, _) = build();
+        let end_whole = whole.run();
+
+        let (mut stepped, sa, _) = build();
+        stepped.init();
+        let mut steps = 0;
+        while stepped.step().is_some() {
+            steps += 1;
+        }
+        let end_stepped = stepped.finalize();
+
+        assert_eq!(end_whole.to_bits(), end_stepped.to_bits());
+        assert_eq!(whole.events_processed(), stepped.events_processed());
+        assert_eq!(steps, stepped.events_processed());
+        assert_eq!(
+            whole.get::<Ping>(wa).unwrap().log,
+            stepped.get::<Ping>(sa).unwrap().log
+        );
+    }
+
+    #[test]
+    fn run_until_dispatches_only_due_events() {
+        let mut sim = Simulation::new();
+        let a = sim.add(ping("a", 1, 6, true));
+        let b = sim.add(ping("b", 0, 0, false));
+        // b receives at t=1,3,5,7 ; a receives at t=2,4,6.
+        let clock = sim.run_until(3.5);
+        assert_eq!(clock, 3.0, "clock tracks the last dispatched event");
+        assert_eq!(sim.get::<Ping>(b).unwrap().log, vec![1.0, 3.0]);
+        assert_eq!(sim.get::<Ping>(a).unwrap().log, vec![2.0]);
+        assert!(!sim.is_idle());
+        // Resume in increments; the tail matches a whole run.
+        sim.run_until(5.0);
+        sim.run_until(1e9);
+        assert!(sim.is_idle());
+        assert_eq!(sim.finalize(), 7.0);
+        assert_eq!(sim.get::<Ping>(b).unwrap().log, vec![1.0, 3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn fresh_simulation_is_not_idle() {
+        // Before init() the start phase is pending, so an is_idle-driven
+        // loop must enter its body (step/run_until init implicitly).
+        let mut sim = Simulation::new();
+        sim.add(ping("a", 1, 2, true));
+        sim.add(ping("b", 0, 0, false));
+        assert!(!sim.is_idle());
+        let mut horizon = 0.0;
+        while !sim.is_idle() {
+            horizon += 1.0;
+            sim.run_until(horizon);
+        }
+        assert_eq!(sim.finalize(), 3.0); // 3 hops of delay 1.0
+    }
+
+    #[test]
+    fn init_and_finalize_are_idempotent() {
+        let mut sim = Simulation::new();
+        sim.add(ping("a", 1, 2, true));
+        sim.add(ping("b", 0, 0, false));
+        sim.init();
+        sim.init();
+        let events_after_init = sim.events_processed();
+        assert_eq!(events_after_init, 0, "init dispatches nothing");
+        sim.run_until(1e9);
+        let end = sim.finalize();
+        assert_eq!(sim.finalize(), end, "finalize is stable");
+    }
+
+    #[test]
+    fn observer_sees_every_event() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let seen: Rc<RefCell<Vec<(f64, EntityId)>>> = Rc::new(RefCell::new(vec![]));
+        let sink = seen.clone();
+        let mut sim = Simulation::new();
+        sim.add(ping("a", 1, 2, true));
+        sim.add(ping("b", 0, 0, false));
+        sim.set_observer(Box::new(move |ev: &Event<u32>| {
+            sink.borrow_mut().push((ev.time, ev.dst));
+        }));
+        sim.run();
+        let seen = seen.borrow();
+        assert_eq!(seen.len() as u64, sim.events_processed());
+        assert_eq!(seen[0], (1.0, 1));
+        assert!(seen.windows(2).all(|w| w[0].0 <= w[1].0), "observer sees time order");
     }
 }

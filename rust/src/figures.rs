@@ -9,7 +9,8 @@
 use crate::broker::{ExperimentSpec, Optimization};
 use crate::config::testbed::{mips_per_dollar, wwg_testbed};
 use crate::output::csv::CsvWriter;
-use crate::scenario::{run_scenario, AdvisorKind, Scenario, ScenarioReport};
+use crate::scenario::{AdvisorKind, Scenario, ScenarioReport};
+use crate::session::GridSession;
 
 /// The paper's §5.3 sweep axes: deadline 100–3600 step 500, budget
 /// 5000–22000 step 1000.
@@ -70,7 +71,7 @@ fn run_single(deadline: f64, budget: f64, cfg: &SweepConfig) -> ScenarioReport {
         .seed(cfg.seed)
         .advisor(cfg.advisor.clone())
         .build();
-    run_scenario(&scenario)
+    GridSession::new(&scenario).run_to_completion()
 }
 
 /// Table 1: the 3-Gridlet time- vs space-shared scheduling scenario.
@@ -228,7 +229,7 @@ pub fn figs33_38(deadline: f64, cfg: &SweepConfig) -> CsvWriter {
                 .seed(cfg.seed)
                 .advisor(cfg.advisor.clone())
                 .build();
-            let report = run_scenario(&scenario);
+            let report = GridSession::new(&scenario).run_to_completion();
             csv.row_f64(&[
                 n as f64,
                 b,

@@ -6,7 +6,8 @@
 //!
 //! Layer map:
 //! * [`des`] — deterministic discrete-event simulation kernel (the SimJava
-//!   substrate, rebuilt as an event-handler model).
+//!   substrate, rebuilt as an event-handler model) with a stepped execution
+//!   API: `init()` / `step()` / `run_until(t)` / `finalize()`.
 //! * [`gridsim`] — the grid entity toolkit: PEs, machines, time-/space-shared
 //!   resources, Gridlets, the information service, network delays,
 //!   statistics, calendars and reservations.
@@ -14,31 +15,71 @@
 //!   deadline-and-budget-constrained (DBC) scheduling policies.
 //! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   advisor kernels (`artifacts/*.hlo.txt`) and executes them from the
-//!   broker's scheduling hot path.
+//!   broker's scheduling hot path (behind the `xla` cargo feature).
+//! * [`scenario`] / [`session`] — declarative scenario description (with
+//!   per-user heterogeneity) and the composable `GridSession` execution
+//!   handle.
 //! * [`config`] / [`workload`] — scenario configuration (incl. the WWG
-//!   testbed of Table 2) and synthetic task-farming application generator.
+//!   testbed of Table 2, and a strict JSON loader) and synthetic
+//!   task-farming application generator.
 //! * [`figures`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //!
-//! Quick start (compile-checked; `no_run` because rustdoc test binaries do
-//! not inherit the xla_extension rpath):
+//! ## The `GridSession` lifecycle
+//!
+//! Execution is organised around [`session::GridSession`]:
+//! **build → step/observe → report**. Build a [`scenario::Scenario`]
+//! (heterogeneous users override policy, advisor and broker tuning per
+//! user via [`scenario::UserSpec`]), then drive it as far as you like,
+//! probing broker state along the way (compile-checked; `no_run` because
+//! rustdoc test binaries do not inherit the xla_extension rpath):
 //!
 //! ```no_run
+//! use gridsim::broker::{BrokerConfig, ExperimentSpec, Optimization};
 //! use gridsim::config::testbed::wwg_testbed;
-//! use gridsim::broker::{ExperimentSpec, Optimization};
-//! use gridsim::scenario::{Scenario, run_scenario};
+//! use gridsim::scenario::{Scenario, UserSpec};
+//! use gridsim::session::GridSession;
 //!
 //! let scenario = Scenario::builder()
 //!     .resources(wwg_testbed())
-//!     .user(ExperimentSpec::task_farm(20, 10_000.0, 0.10)
+//!     // Two users with *different* requirements: one cost-optimizes with
+//!     // default broker tuning, one time-optimizes with a conservative
+//!     // dispatcher — the scenario-level values stay the defaults.
+//!     .user(ExperimentSpec::task_farm(100, 10_000.0, 0.10)
 //!         .deadline(3_100.0)
 //!         .budget(22_000.0)
 //!         .optimization(Optimization::Cost))
+//!     .user(UserSpec::new(ExperimentSpec::task_farm(100, 10_000.0, 0.10)
+//!             .deadline(3_100.0)
+//!             .budget(22_000.0)
+//!             .optimization(Optimization::Time))
+//!         .broker(BrokerConfig { max_gridlets_per_pe: 1, ..BrokerConfig::default() }))
 //!     .seed(7)
 //!     .build();
-//! let report = run_scenario(&scenario);
-//! assert!(report.users[0].gridlets_completed > 0);
+//!
+//! // Build → step/observe → report. The horizon grows monotonically —
+//! // `run_until` leaves the clock on the last dispatched event, so a
+//! // clock-relative horizon could stall ahead of a sparse event queue.
+//! let mut session = GridSession::new(&scenario);
+//! session.init();
+//! let mut horizon = 0.0;
+//! while !session.is_idle() {
+//!     horizon += 500.0;
+//!     session.run_until(horizon);
+//!     for user in &session.snapshot().users {
+//!         println!("{}: {}/{} gridlets, {:.0} G$ spent",
+//!             user.state, user.gridlets_completed, user.gridlets_total,
+//!             user.budget_spent);
+//!     }
+//! }
+//! let report = session.report();
+//! assert!(report.outcomes.iter().all(|o| o.is_finished()));
 //! ```
+//!
+//! Stepped execution is exact: a `run_until` sweep in any increments yields
+//! results bit-identical to one `run_to_completion()`.
+//! [`scenario::run_scenario`] remains as a one-call compatibility shim over
+//! `GridSession` for fire-and-forget runs.
 
 pub mod broker;
 pub mod config;
@@ -48,5 +89,6 @@ pub mod gridsim;
 pub mod output;
 pub mod runtime;
 pub mod scenario;
+pub mod session;
 pub mod util;
 pub mod workload;

@@ -9,6 +9,10 @@
 //!   selftest                       quick end-to-end smoke run
 //!
 //! Common flags: --advisor native|xla, --seed N, --out DIR.
+//! `run` extras: --policies cost,time,... assigns policies per user
+//! round-robin (heterogeneous competition); --watch T runs the simulation
+//! through `GridSession` in T-sized increments, printing a per-broker
+//! progress snapshot after each.
 
 use anyhow::{anyhow, bail, Result};
 use gridsim::broker::{ExperimentSpec, Optimization};
@@ -16,7 +20,8 @@ use gridsim::config::scenario_file::parse_scenario;
 use gridsim::config::testbed::wwg_testbed;
 use gridsim::figures;
 use gridsim::output::report;
-use gridsim::scenario::{run_scenario, AdvisorKind, Scenario};
+use gridsim::scenario::{AdvisorKind, Scenario, ScenarioReport, UserSpec};
+use gridsim::session::GridSession;
 use gridsim::util::cli::Args;
 use std::path::Path;
 
@@ -68,7 +73,10 @@ fn print_usage() {
            table2                      Table 2: the simulated WWG testbed\n\
            run --scenario FILE         run a JSON scenario\n\
            run [--deadline D] [--budget B] [--gridlets N] [--policy P] [--users N]\n\
-                                       inline run on the WWG testbed\n\
+               [--policies P1,P2,...]  inline run on the WWG testbed (policies\n\
+                                       are assigned per user, round-robin)\n\
+           run ... --watch T           step the run in T-sized time increments,\n\
+                                       printing per-broker progress after each\n\
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|all)\n\
@@ -78,38 +86,95 @@ fn print_usage() {
     );
 }
 
+fn build_inline_scenario(args: &Args) -> Result<Scenario> {
+    let deadline = args.flag_f64("deadline")?.unwrap_or(3_100.0);
+    let budget = args.flag_f64("budget")?.unwrap_or(22_000.0);
+    let gridlets = args.flag_usize("gridlets")?.unwrap_or(200);
+    let users = args.flag_usize("users")?.unwrap_or(1);
+    let default_policy = Optimization::parse(args.flag("policy").unwrap_or("cost"))
+        .ok_or_else(|| anyhow!("unknown policy"))?;
+    // --policies cost,time,... assigns per-user policies round-robin, the
+    // simplest heterogeneous competition setup.
+    let policies: Vec<Optimization> = match args.flag("policies") {
+        None => vec![default_policy],
+        Some(list) => list
+            .split(',')
+            .map(|p| {
+                Optimization::parse(p.trim())
+                    .ok_or_else(|| anyhow!("unknown policy {p:?} in --policies"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let mut builder = Scenario::builder()
+        .resources(wwg_testbed())
+        .seed(args.flag_usize("seed")?.unwrap_or(27) as u64)
+        .advisor(advisor_kind(args)?);
+    for i in 0..users {
+        builder = builder.user(UserSpec::new(
+            ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
+                .deadline(deadline)
+                .budget(budget)
+                .optimization(policies[i % policies.len()]),
+        ));
+    }
+    Ok(builder.build())
+}
+
+/// Drive a session in `interval`-sized increments, printing a per-broker
+/// progress line after each (the CLI consuming the same observer API as
+/// figures and tests).
+fn run_watched(session: &mut GridSession, interval: f64) -> ScenarioReport {
+    session.init();
+    let mut horizon = interval;
+    while !session.is_idle() {
+        let before = session.events_processed();
+        session.run_until(horizon);
+        horizon += interval;
+        // Fast-forward across gaps in a sparse queue (e.g. a large
+        // submit_delay): one iteration instead of millions of empty ones.
+        if let Some(next) = session.next_event_time() {
+            if next > horizon {
+                horizon = next;
+            }
+        }
+        if session.events_processed() == before {
+            continue; // nothing due this interval — no spam
+        }
+        let snap = session.snapshot();
+        let line = snap
+            .users
+            .iter()
+            .map(|u| format!("{}:{}/{}", u.state, u.gridlets_completed, u.gridlets_total))
+            .collect::<Vec<_>>()
+            .join("  ");
+        eprintln!("[t={:>10.1}  {:>9} ev] {line}", snap.time, snap.events);
+    }
+    session.report().into_scenario_report()
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let scenario = if let Some(path) = args.flag("scenario") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
         let mut s = parse_scenario(&text)?;
-        s.advisor = advisor_kind(args)?;
+        // CLI flags override the file only when explicitly given.
+        if args.flag("advisor").is_some() {
+            s.advisor = advisor_kind(args)?;
+        }
         if let Some(seed) = args.flag_usize("seed")? {
             s.seed = seed as u64;
         }
         s
     } else {
-        let deadline = args.flag_f64("deadline")?.unwrap_or(3_100.0);
-        let budget = args.flag_f64("budget")?.unwrap_or(22_000.0);
-        let gridlets = args.flag_usize("gridlets")?.unwrap_or(200);
-        let users = args.flag_usize("users")?.unwrap_or(1);
-        let policy = Optimization::parse(args.flag("policy").unwrap_or("cost"))
-            .ok_or_else(|| anyhow!("unknown policy"))?;
-        Scenario::builder()
-            .resources(wwg_testbed())
-            .users(
-                users,
-                ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
-                    .deadline(deadline)
-                    .budget(budget)
-                    .optimization(policy),
-            )
-            .seed(args.flag_usize("seed")?.unwrap_or(27) as u64)
-            .advisor(advisor_kind(args)?)
-            .build()
+        build_inline_scenario(args)?
     };
     let start = std::time::Instant::now();
-    let result = run_scenario(&scenario);
+    let mut session = GridSession::try_new(&scenario)?;
+    let result = match args.flag_f64("watch")? {
+        Some(interval) if interval > 0.0 => run_watched(&mut session, interval),
+        Some(interval) => bail!("--watch expects a positive interval, got {interval}"),
+        None => session.run_to_completion(),
+    };
     let wall = start.elapsed();
     println!(
         "simulated {} users / {} resources: {} events, sim time {:.1}, wall {:.3}s ({:.0} ev/s)",
@@ -121,10 +186,18 @@ fn cmd_run(args: &Args) -> Result<()> {
         result.events as f64 / wall.as_secs_f64().max(1e-9),
     );
     for (i, u) in result.users.iter().enumerate() {
-        println!("{}", report::experiment_line(&format!("U{i}"), u));
+        let marker = if result.unfinished.contains(&i) { "  [DID NOT FINISH]" } else { "" };
+        println!("{}{marker}", report::experiment_line(&format!("U{i}"), u));
     }
     if result.users.len() == 1 {
         println!("\n{}", report::resource_table(&result.users[0]));
+    }
+    if !result.all_finished() {
+        bail!(
+            "{} of {} experiments did not finish before the kernel limit",
+            result.unfinished.len(),
+            result.users.len()
+        );
     }
     Ok(())
 }
@@ -192,7 +265,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
         .seed(7)
         .advisor(advisor_kind(args)?)
         .build();
-    let report = run_scenario(&scenario);
+    let report = GridSession::try_new(&scenario)?.run_to_completion();
     let u = &report.users[0];
     println!(
         "selftest: {}/{} gridlets, {:.1} G$ spent, {} events",

@@ -6,6 +6,12 @@
 //! jax ≥ 0.5 serialized `HloModuleProto`s (64-bit instruction ids); the text
 //! parser reassigns ids. Each artifact is compiled once at load time; only
 //! `execute` runs on the broker hot path.
+//!
+//! The whole PJRT path is gated behind the `xla` cargo feature because the
+//! `xla` bindings crate is not vendored in this tree. Without the feature,
+//! the same public types exist but their loaders return a descriptive error,
+//! so callers (CLI `--advisor xla`, differential tests, benches) degrade
+//! gracefully instead of failing to compile.
 
 use super::advisor::{Advisor, AdvisorInput};
 use std::path::Path;
@@ -23,11 +29,38 @@ pub fn forecast_shapes() -> (usize, usize) {
     (FORECAST_R, FORECAST_J)
 }
 
+/// Input to the batched time-shared completion forecaster
+/// (`artifacts/forecast.hlo.txt`), padded to `[FORECAST_R, FORECAST_J]`.
+#[derive(Debug, Clone)]
+pub struct ForecastInput {
+    /// Remaining MI per (resource, job slot); 0 for inactive slots.
+    pub remaining_mi: Vec<Vec<f64>>,
+    /// Per-resource MIPS of one PE.
+    pub mips_per_pe: Vec<f64>,
+    /// Per-resource PE count.
+    pub num_pe: Vec<usize>,
+    /// Per-resource availability factor (1 − local load).
+    pub availability: Vec<f64>,
+}
+
+#[cfg(not(feature = "xla"))]
+const NO_XLA: &str = "gridsim was built without the `xla` cargo feature; the PJRT \
+     advisor/forecaster path is unavailable (rebuild with `--features xla` and the \
+     xla bindings crate, or use the native advisor)";
+
 /// A compiled HLO artifact on the CPU PJRT client.
+#[cfg(feature = "xla")]
 pub struct PjrtRuntime {
     exe: xla::PjRtLoadedExecutable,
 }
 
+/// Stub: the crate was built without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+#[cfg(feature = "xla")]
 impl PjrtRuntime {
     /// Load HLO text from `path`, compile it on a fresh CPU client.
     pub fn load(path: &Path) -> anyhow::Result<PjrtRuntime> {
@@ -55,10 +88,19 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+impl PjrtRuntime {
+    pub fn load(_path: &Path) -> anyhow::Result<PjrtRuntime> {
+        Err(anyhow::anyhow!(NO_XLA))
+    }
+}
+
+#[cfg(feature = "xla")]
 fn f32_vec(xs: &[f32]) -> xla::Literal {
     xla::Literal::vec1(xs)
 }
 
+#[cfg(feature = "xla")]
 fn f32_scalar(x: f32) -> xla::Literal {
     xla::Literal::from(x)
 }
@@ -66,6 +108,7 @@ fn f32_scalar(x: f32) -> xla::Literal {
 /// The DBC cost-optimization schedule advisor backed by the
 /// `artifacts/advisor.hlo.txt` artifact (Pallas kernel under the hood).
 pub struct XlaAdvisor {
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     runtime: PjrtRuntime,
 }
 
@@ -85,6 +128,7 @@ impl XlaAdvisor {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Advisor for XlaAdvisor {
     fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
         debug_assert!(input.is_cost_sorted(), "advisor requires cost-sorted resources");
@@ -123,22 +167,21 @@ impl Advisor for XlaAdvisor {
     }
 }
 
-/// Input to the batched time-shared completion forecaster
-/// (`artifacts/forecast.hlo.txt`), padded to `[FORECAST_R, FORECAST_J]`.
-#[derive(Debug, Clone)]
-pub struct ForecastInput {
-    /// Remaining MI per (resource, job slot); 0 for inactive slots.
-    pub remaining_mi: Vec<Vec<f64>>,
-    /// Per-resource MIPS of one PE.
-    pub mips_per_pe: Vec<f64>,
-    /// Per-resource PE count.
-    pub num_pe: Vec<usize>,
-    /// Per-resource availability factor (1 − local load).
-    pub availability: Vec<f64>,
+#[cfg(not(feature = "xla"))]
+impl Advisor for XlaAdvisor {
+    fn advise(&mut self, _input: &AdvisorInput) -> Vec<usize> {
+        // `load` always errs without the feature, so no instance can exist.
+        unreachable!("{NO_XLA}")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
 }
 
 /// Batched forecaster backed by the forecast artifact.
 pub struct XlaForecaster {
+    #[cfg_attr(not(feature = "xla"), allow(dead_code))]
     runtime: PjrtRuntime,
 }
 
@@ -146,7 +189,10 @@ impl XlaForecaster {
     pub fn load_dir(dir: &Path) -> anyhow::Result<XlaForecaster> {
         Ok(XlaForecaster { runtime: PjrtRuntime::load(&dir.join("forecast.hlo.txt"))? })
     }
+}
 
+#[cfg(feature = "xla")]
+impl XlaForecaster {
     /// Completion-time forecast per (resource, job); `None` for empty slots.
     /// Returns a dense `[R][J]` matrix of times (relative to now), with
     /// `f64::INFINITY` in inactive slots.
@@ -204,6 +250,13 @@ impl XlaForecaster {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+impl XlaForecaster {
+    pub fn forecast(&mut self, _input: &ForecastInput) -> anyhow::Result<Vec<Vec<f64>>> {
+        unreachable!("{NO_XLA}")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     // The XLA-backed paths need `artifacts/*.hlo.txt`; they are exercised by
@@ -215,5 +268,12 @@ mod tests {
     fn shape_constants_consistent() {
         assert_eq!(forecast_shapes(), (FORECAST_R, FORECAST_J));
         assert!(ADVISOR_R >= 11, "must fit the 11-resource WWG testbed");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = XlaAdvisor::load_default().unwrap_err().to_string();
+        assert!(err.contains("xla"), "{err}");
     }
 }

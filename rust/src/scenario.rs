@@ -1,19 +1,13 @@
-//! Scenario assembly and execution — the equivalent of the paper's Fig 15
-//! `CreateSampleGridEnvironement`: build the entity graph (GIS, statistics,
-//! shutdown, resources, user+broker pairs), run the simulation, and collect
-//! per-user results.
+//! Scenario description — the declarative half of the paper's Fig 15
+//! `CreateSampleGridEnvironement`: resources (Table 2 rows), users with
+//! per-user policy/advisor/broker heterogeneity, network model, advisor
+//! engine and kernel limits. Execution lives in [`crate::session`]
+//! ([`crate::session::GridSession`]); [`run_scenario`] remains as a thin
+//! build-and-run-to-completion compatibility shim over it.
 
 use crate::broker::broker::BrokerConfig;
-use crate::broker::policy::make_policy;
-use crate::broker::{Broker, ExperimentResult, ExperimentSpec, UserEntity};
-use crate::des::Simulation;
-use crate::gridsim::{
-    AllocPolicy, BaudLink, GridInformationService, GridResource, GridSimShutdown, GridStatistics,
-    MachineList, Msg, ResourceCalendar, ResourceCharacteristics,
-};
-use crate::runtime::{Advisor, AdvisorInput, NativeAdvisor, XlaAdvisor};
-use std::cell::RefCell;
-use std::rc::Rc;
+use crate::broker::{ExperimentResult, ExperimentSpec, Optimization};
+use crate::gridsim::{AllocPolicy, MachineList, ResourceCalendar, ResourceCharacteristics};
 
 /// Declarative description of one grid resource (Table 2 row).
 #[derive(Debug, Clone)]
@@ -67,15 +61,93 @@ pub enum NetworkSpec {
     Baud { default_rate: f64, latency: f64 },
 }
 
+/// One user of the grid: the experiment plus optional overrides of the
+/// scenario-wide execution knobs. `None` fields fall back to the scenario
+/// defaults, so homogeneous scenarios (paper §5.4's identical competing
+/// users) stay one-liners while heterogeneous ones — "users with different
+/// requirements" — override per user.
+#[derive(Debug, Clone)]
+pub struct UserSpec {
+    /// The experiment this user runs (workload, deadline/budget, policy).
+    pub experiment: ExperimentSpec,
+    /// Advisor engine override for this user's broker.
+    pub advisor: Option<AdvisorKind>,
+    /// Broker tuning override for this user's broker.
+    pub broker: Option<BrokerConfig>,
+    /// Delay before the experiment is submitted (activity model).
+    pub submit_delay: f64,
+}
+
+impl UserSpec {
+    pub fn new(experiment: ExperimentSpec) -> UserSpec {
+        UserSpec { experiment, advisor: None, broker: None, submit_delay: 0.0 }
+    }
+
+    /// Override the advisor engine for this user's broker.
+    pub fn advisor(mut self, kind: AdvisorKind) -> UserSpec {
+        self.advisor = Some(kind);
+        self
+    }
+
+    /// Override the broker tuning for this user's broker.
+    pub fn broker(mut self, config: BrokerConfig) -> UserSpec {
+        self.broker = Some(config);
+        self
+    }
+
+    /// Delay the experiment submission by `delay` time units.
+    pub fn submit_delay(mut self, delay: f64) -> UserSpec {
+        assert!(delay >= 0.0, "submit delay must be >= 0");
+        self.submit_delay = delay;
+        self
+    }
+
+    // ExperimentSpec builder forwarding, so a `UserSpec` chains exactly like
+    // the `ExperimentSpec` it wraps.
+
+    pub fn deadline(mut self, d: f64) -> UserSpec {
+        self.experiment = self.experiment.deadline(d);
+        self
+    }
+
+    pub fn budget(mut self, b: f64) -> UserSpec {
+        self.experiment = self.experiment.budget(b);
+        self
+    }
+
+    pub fn d_factor(mut self, f: f64) -> UserSpec {
+        self.experiment = self.experiment.d_factor(f);
+        self
+    }
+
+    pub fn b_factor(mut self, f: f64) -> UserSpec {
+        self.experiment = self.experiment.b_factor(f);
+        self
+    }
+
+    pub fn optimization(mut self, o: Optimization) -> UserSpec {
+        self.experiment = self.experiment.optimization(o);
+        self
+    }
+}
+
+impl From<ExperimentSpec> for UserSpec {
+    fn from(experiment: ExperimentSpec) -> UserSpec {
+        UserSpec::new(experiment)
+    }
+}
+
 /// A complete simulation scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub resources: Vec<ResourceSpec>,
-    /// One experiment spec per user (each user gets a private broker).
-    pub users: Vec<ExperimentSpec>,
+    /// One user spec per user (each user gets a private broker).
+    pub users: Vec<UserSpec>,
     pub seed: u64,
     pub network: NetworkSpec,
+    /// Default advisor engine (per-user [`UserSpec::advisor`] overrides).
     pub advisor: AdvisorKind,
+    /// Default broker tuning (per-user [`UserSpec::broker`] overrides).
     pub broker_config: BrokerConfig,
     /// Hard simulation-time limit (safety net).
     pub max_time: f64,
@@ -91,7 +163,7 @@ impl Scenario {
 #[derive(Default)]
 pub struct ScenarioBuilder {
     resources: Vec<ResourceSpec>,
-    users: Vec<ExperimentSpec>,
+    users: Vec<UserSpec>,
     seed: u64,
     network: Option<NetworkSpec>,
     advisor: Option<AdvisorKind>,
@@ -110,13 +182,16 @@ impl ScenarioBuilder {
         self
     }
 
-    pub fn user(mut self, spec: ExperimentSpec) -> Self {
-        self.users.push(spec);
+    /// Add one user — an [`ExperimentSpec`] (scenario defaults apply) or a
+    /// full [`UserSpec`] with per-user overrides.
+    pub fn user(mut self, spec: impl Into<UserSpec>) -> Self {
+        self.users.push(spec.into());
         self
     }
 
     /// `n` identical users (the paper's §5.4 competition experiments).
-    pub fn users(mut self, n: usize, spec: ExperimentSpec) -> Self {
+    pub fn users(mut self, n: usize, spec: impl Into<UserSpec>) -> Self {
+        let spec = spec.into();
         for _ in 0..n {
             self.users.push(spec.clone());
         }
@@ -163,28 +238,16 @@ impl ScenarioBuilder {
     }
 }
 
-/// Shared advisor handle: lets every broker in a multi-user scenario reuse
-/// one compiled XLA executable (compilation happens once, execution on each
-/// scheduling tick).
-struct SharedAdvisor {
-    inner: Rc<RefCell<dyn Advisor>>,
-    label: &'static str,
-}
-
-impl Advisor for SharedAdvisor {
-    fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
-        self.inner.borrow_mut().advise(input)
-    }
-    fn name(&self) -> &'static str {
-        self.label
-    }
-}
-
 /// Outcome of a scenario run.
 #[derive(Debug, Clone)]
 pub struct ScenarioReport {
-    /// Per-user experiment results, in user order.
+    /// Per-user experiment results, in user order. For a user whose
+    /// experiment did not terminate before the run ended (kernel limit),
+    /// the entry carries the broker's real partial accounting and the
+    /// user's index appears in [`unfinished`](Self::unfinished).
     pub users: Vec<ExperimentResult>,
+    /// Indices of users whose experiments did not finish.
+    pub unfinished: Vec<usize>,
     /// Simulation end time.
     pub end_time: f64,
     /// Events dispatched by the kernel (engine-level metric).
@@ -192,6 +255,11 @@ pub struct ScenarioReport {
 }
 
 impl ScenarioReport {
+    /// Did every user's experiment terminate?
+    pub fn all_finished(&self) -> bool {
+        self.unfinished.is_empty()
+    }
+
     /// Mean Gridlets completed per user (Figs 33/36 series value).
     pub fn mean_completed(&self) -> f64 {
         if self.users.is_empty() {
@@ -221,90 +289,18 @@ impl ScenarioReport {
 
 /// Build the entity graph for `scenario`, run it to completion, and collect
 /// per-user results.
+///
+/// Compatibility shim over [`crate::session::GridSession`] — new code should
+/// build a session directly to step, observe, or steer the run:
+///
+/// ```ignore
+/// let mut session = GridSession::new(&scenario);
+/// session.run_until(t);          // pause anywhere...
+/// let snap = session.snapshot(); // ...probe per-broker progress...
+/// let report = session.run_to_completion(); // ...and resume.
+/// ```
 pub fn run_scenario(scenario: &Scenario) -> ScenarioReport {
-    let mut sim: Simulation<Msg> = Simulation::with_config(crate::des::SimConfig {
-        max_time: scenario.max_time,
-        max_events: u64::MAX,
-    });
-    match &scenario.network {
-        NetworkSpec::Instantaneous => {
-            sim.set_link_model(Box::new(BaudLink::instantaneous()));
-        }
-        NetworkSpec::Baud { default_rate, latency } => {
-            sim.set_link_model(Box::new(
-                BaudLink::new().with_default_rate(*default_rate).with_default_latency(*latency),
-            ));
-        }
-    }
-
-    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
-    let stats = sim.add(Box::new(GridStatistics::new("GridStatistics")));
-    let shutdown = sim.add(Box::new(GridSimShutdown::new("GridSimShutdown", scenario.users.len())));
-
-    for spec in &scenario.resources {
-        let calendar = spec.calendar.clone().unwrap_or_else(ResourceCalendar::no_load);
-        let resource =
-            GridResource::new(spec.name.clone(), spec.characteristics(), calendar, gis)
-                .with_stats(stats);
-        sim.add(Box::new(resource));
-    }
-
-    // One compiled advisor shared by all brokers.
-    let shared: Rc<RefCell<dyn Advisor>> = match scenario.advisor {
-        AdvisorKind::Native => Rc::new(RefCell::new(NativeAdvisor::new())),
-        AdvisorKind::Xla => Rc::new(RefCell::new(
-            XlaAdvisor::load_default().expect("failed to load artifacts/advisor.hlo.txt — run `make artifacts`"),
-        )),
-    };
-    let label = match scenario.advisor {
-        AdvisorKind::Native => "native",
-        AdvisorKind::Xla => "xla",
-    };
-
-    let mut user_ids = Vec::new();
-    for (i, spec) in scenario.users.iter().enumerate() {
-        let advisor = Box::new(SharedAdvisor { inner: shared.clone(), label });
-        let policy = make_policy(spec.optimization, advisor);
-        let broker = Broker::new(
-            format!("Broker_{i}"),
-            gis,
-            policy,
-            scenario.broker_config.clone(),
-        );
-        let broker_id = sim.add(Box::new(broker));
-        // Paper Fig 15 per-user seed derivation: seed·997·(1+i)+1.
-        let user_seed = scenario
-            .seed
-            .wrapping_mul(997)
-            .wrapping_mul(1 + i as u64)
-            .wrapping_add(1);
-        let user = UserEntity::new(format!("U{i}"), broker_id, shutdown, spec.clone(), user_seed)
-            .with_stats(stats);
-        user_ids.push(sim.add(Box::new(user)));
-    }
-
-    let end_time = sim.run();
-    let users = user_ids
-        .iter()
-        .map(|&id| {
-            sim.get::<UserEntity>(id)
-                .expect("user entity")
-                .result
-                .clone()
-                .unwrap_or_else(|| ExperimentResult {
-                    gridlets_completed: 0,
-                    gridlets_total: 0,
-                    budget_spent: 0.0,
-                    finish_time: end_time,
-                    start_time: 0.0,
-                    deadline: 0.0,
-                    budget: 0.0,
-                    per_resource: vec![],
-                    trace: vec![],
-                })
-        })
-        .collect();
-    ScenarioReport { users, end_time, events: sim.events_processed() }
+    crate::session::GridSession::new(scenario).run_to_completion()
 }
 
 #[cfg(test)]
@@ -342,6 +338,7 @@ mod tests {
             .build();
         let report = run_scenario(&scenario);
         assert_eq!(report.users.len(), 1);
+        assert!(report.all_finished());
         let u = &report.users[0];
         assert_eq!(u.gridlets_completed, 20, "ample deadline+budget: all done");
         assert!(u.budget_spent > 0.0);
@@ -399,5 +396,41 @@ mod tests {
         let loose = run_with_deadline(10_000.0);
         assert_eq!(loose, 40);
         assert!(tight < loose, "tight {tight} < loose {loose}");
+    }
+
+    #[test]
+    fn user_spec_wraps_and_forwards() {
+        let spec: UserSpec = ExperimentSpec::task_farm(5, 100.0, 0.0).into();
+        assert!(spec.advisor.is_none());
+        assert!(spec.broker.is_none());
+        let spec = spec
+            .deadline(50.0)
+            .budget(500.0)
+            .optimization(Optimization::Time)
+            .advisor(AdvisorKind::Native)
+            .broker(BrokerConfig { min_tick: 2.0, ..BrokerConfig::default() })
+            .submit_delay(3.0);
+        assert_eq!(spec.experiment.optimization, Optimization::Time);
+        assert_eq!(spec.advisor, Some(AdvisorKind::Native));
+        assert_eq!(spec.broker.as_ref().unwrap().min_tick, 2.0);
+        assert_eq!(spec.submit_delay, 3.0);
+    }
+
+    #[test]
+    fn heterogeneous_users_build() {
+        let scenario = Scenario::builder()
+            .resource(small_resource("R0", 2, 100.0, 1.0))
+            .user(ExperimentSpec::task_farm(5, 100.0, 0.0).optimization(Optimization::Cost))
+            .user(
+                UserSpec::new(
+                    ExperimentSpec::task_farm(5, 100.0, 0.0).optimization(Optimization::Time),
+                )
+                .broker(BrokerConfig { max_gridlets_per_pe: 1, ..BrokerConfig::default() }),
+            )
+            .seed(1)
+            .build();
+        assert_eq!(scenario.users.len(), 2);
+        assert!(scenario.users[0].broker.is_none(), "defaults untouched");
+        assert_eq!(scenario.users[1].broker.as_ref().unwrap().max_gridlets_per_pe, 1);
     }
 }

@@ -1,0 +1,514 @@
+//! `GridSession` — the composable execution API around a scenario.
+//!
+//! [`crate::scenario::run_scenario`] is a fire-and-forget monolith: build,
+//! run, harvest. Evaluating brokers "under different scenarios" the way
+//! Nimrod/G-style adaptive experimentation does requires pausing a run,
+//! probing broker state, and resuming — so the session splits the lifecycle
+//! into explicit stages:
+//!
+//! 1. **build** — [`GridSession::new`] assembles the entity graph (GIS,
+//!    statistics, shutdown, resources, user+broker pairs) with per-user
+//!    heterogeneity: each [`UserSpec`](crate::scenario::UserSpec) may
+//!    override the scheduling policy (via its experiment), advisor kind and
+//!    [`crate::broker::BrokerConfig`] while scenario-level values remain the
+//!    defaults;
+//! 2. **step/observe** — [`step`](GridSession::step) dispatches one event,
+//!    [`run_until`](GridSession::run_until) dispatches everything due by a
+//!    time; [`snapshot`](GridSession::snapshot) pulls per-broker progress,
+//!    budget spent and per-resource load at any point, and
+//!    [`set_observer`](GridSession::set_observer) streams every dispatched
+//!    event to a callback;
+//! 3. **report** — [`report`](GridSession::report) runs the end phase and
+//!    harvests per-user [`UserOutcome`]s, distinguishing finished
+//!    experiments from did-not-finish partial accounting (no fabricated
+//!    all-zero results).
+//!
+//! Stepping is free: an incremental `run_until` sweep produces results
+//! bit-identical to one [`run_to_completion`](GridSession::run_to_completion)
+//! (proven by `rust/tests/session_stepping.rs`).
+
+use crate::broker::policy::make_policy;
+use crate::broker::{Broker, BrokerProgress, ExperimentResult, UserEntity};
+use crate::des::{EntityId, Event, SimConfig, Simulation};
+use crate::gridsim::{
+    BaudLink, GridInformationService, GridResource, GridSimShutdown, GridStatistics, Msg,
+    ResourceCalendar,
+};
+use crate::runtime::{Advisor, AdvisorInput, NativeAdvisor, XlaAdvisor};
+use crate::scenario::{AdvisorKind, NetworkSpec, Scenario, ScenarioReport};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Shared advisor handle: brokers with the same advisor kind reuse one
+/// engine instance (one compiled XLA executable compiles once, executes on
+/// each scheduling tick).
+struct SharedAdvisor {
+    inner: Rc<RefCell<dyn Advisor>>,
+    label: &'static str,
+}
+
+impl Advisor for SharedAdvisor {
+    fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
+        self.inner.borrow_mut().advise(input)
+    }
+    fn name(&self) -> &'static str {
+        self.label
+    }
+}
+
+fn make_shared_advisor(kind: &AdvisorKind) -> anyhow::Result<Rc<RefCell<dyn Advisor>>> {
+    Ok(match kind {
+        AdvisorKind::Native => Rc::new(RefCell::new(NativeAdvisor::new())),
+        AdvisorKind::Xla => Rc::new(RefCell::new(XlaAdvisor::load_default().map_err(|e| {
+            e.context(
+                "cannot initialize the XLA advisor (run `make artifacts` and build with \
+                 `--features xla`)",
+            )
+        })?)),
+    })
+}
+
+/// How one user's experiment ended.
+#[derive(Debug, Clone)]
+pub enum UserOutcome {
+    /// The broker terminated the experiment and reported a result.
+    Finished(ExperimentResult),
+    /// The run ended (kernel time/event limit) before the experiment
+    /// terminated; the payload is the broker's real partial accounting.
+    DidNotFinish(ExperimentResult),
+}
+
+impl UserOutcome {
+    pub fn is_finished(&self) -> bool {
+        matches!(self, UserOutcome::Finished(_))
+    }
+
+    /// The result either way — complete or partial.
+    pub fn result(&self) -> &ExperimentResult {
+        match self {
+            UserOutcome::Finished(r) | UserOutcome::DidNotFinish(r) => r,
+        }
+    }
+
+    pub fn into_result(self) -> ExperimentResult {
+        match self {
+            UserOutcome::Finished(r) | UserOutcome::DidNotFinish(r) => r,
+        }
+    }
+}
+
+/// Per-user outcomes plus engine-level metrics.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// One outcome per user, in user order.
+    pub outcomes: Vec<UserOutcome>,
+    /// Simulation end time.
+    pub end_time: f64,
+    /// Events dispatched by the kernel.
+    pub events: u64,
+}
+
+impl SessionReport {
+    /// Flatten into the legacy [`ScenarioReport`] shape (did-not-finish
+    /// users keep their partial results and are listed in `unfinished`).
+    pub fn into_scenario_report(self) -> ScenarioReport {
+        let mut unfinished = Vec::new();
+        let users = self
+            .outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, outcome)| {
+                if !outcome.is_finished() {
+                    unfinished.push(i);
+                }
+                outcome.into_result()
+            })
+            .collect();
+        ScenarioReport { users, unfinished, end_time: self.end_time, events: self.events }
+    }
+}
+
+/// Pull-based view of the whole session at one instant.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// Simulation clock at snapshot time.
+    pub time: f64,
+    /// Events dispatched so far.
+    pub events: u64,
+    /// Per-user broker progress, in user order.
+    pub users: Vec<BrokerProgress>,
+}
+
+/// A live simulation of one [`Scenario`]: build once, then step, observe
+/// and finally report. See the module docs for the lifecycle.
+pub struct GridSession {
+    sim: Simulation<Msg>,
+    user_ids: Vec<EntityId>,
+    broker_ids: Vec<EntityId>,
+}
+
+impl GridSession {
+    /// Assemble the entity graph for `scenario`. Entity ids, names and
+    /// per-user seeds match the historical `run_scenario` layout, so
+    /// sessions reproduce pre-session runs bit-for-bit.
+    ///
+    /// Panics when an advisor engine cannot be initialized (e.g. the XLA
+    /// artifact is missing); use [`try_new`](Self::try_new) to surface that
+    /// as an error instead.
+    pub fn new(scenario: &Scenario) -> GridSession {
+        Self::try_new(scenario).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible variant of [`new`](Self::new): advisor initialization
+    /// failures become an `Err` rather than a panic.
+    pub fn try_new(scenario: &Scenario) -> anyhow::Result<GridSession> {
+        let mut sim: Simulation<Msg> = Simulation::with_config(SimConfig {
+            max_time: scenario.max_time,
+            max_events: u64::MAX,
+        });
+        match &scenario.network {
+            NetworkSpec::Instantaneous => {
+                sim.set_link_model(Box::new(BaudLink::instantaneous()));
+            }
+            NetworkSpec::Baud { default_rate, latency } => {
+                sim.set_link_model(Box::new(
+                    BaudLink::new()
+                        .with_default_rate(*default_rate)
+                        .with_default_latency(*latency),
+                ));
+            }
+        }
+
+        let gis = sim.add(Box::new(GridInformationService::new("GIS")));
+        let stats = sim.add(Box::new(GridStatistics::new("GridStatistics")));
+        let shutdown =
+            sim.add(Box::new(GridSimShutdown::new("GridSimShutdown", scenario.users.len())));
+
+        for spec in &scenario.resources {
+            let calendar = spec.calendar.clone().unwrap_or_else(ResourceCalendar::no_load);
+            let resource =
+                GridResource::new(spec.name.clone(), spec.characteristics(), calendar, gis)
+                    .with_stats(stats);
+            sim.add(Box::new(resource));
+        }
+
+        // One shared engine instance per advisor kind actually in use.
+        let mut native: Option<Rc<RefCell<dyn Advisor>>> = None;
+        let mut xla: Option<Rc<RefCell<dyn Advisor>>> = None;
+
+        let mut user_ids = Vec::with_capacity(scenario.users.len());
+        let mut broker_ids = Vec::with_capacity(scenario.users.len());
+        for (i, user) in scenario.users.iter().enumerate() {
+            let kind = user.advisor.as_ref().unwrap_or(&scenario.advisor);
+            let (slot, label) = match kind {
+                AdvisorKind::Native => (&mut native, "native"),
+                AdvisorKind::Xla => (&mut xla, "xla"),
+            };
+            if slot.is_none() {
+                *slot = Some(make_shared_advisor(kind)?);
+            }
+            let advisor =
+                Box::new(SharedAdvisor { inner: slot.as_ref().unwrap().clone(), label });
+            let policy = make_policy(user.experiment.optimization, advisor);
+            let config = user.broker.clone().unwrap_or_else(|| scenario.broker_config.clone());
+            let broker = Broker::new(format!("Broker_{i}"), gis, policy, config);
+            let broker_id = sim.add(Box::new(broker));
+            broker_ids.push(broker_id);
+            // Paper Fig 15 per-user seed derivation: seed·997·(1+i)+1.
+            let user_seed = scenario
+                .seed
+                .wrapping_mul(997)
+                .wrapping_mul(1 + i as u64)
+                .wrapping_add(1);
+            let mut entity = UserEntity::new(
+                format!("U{i}"),
+                broker_id,
+                shutdown,
+                user.experiment.clone(),
+                user_seed,
+            )
+            .with_stats(stats);
+            if user.submit_delay > 0.0 {
+                entity = entity.with_submit_delay(user.submit_delay);
+            }
+            user_ids.push(sim.add(Box::new(entity)));
+        }
+
+        Ok(GridSession { sim, user_ids, broker_ids })
+    }
+
+    /// Run the start phase (idempotent; stepping calls it implicitly).
+    pub fn init(&mut self) {
+        self.sim.init();
+    }
+
+    /// Dispatch exactly one event; `None` when the session is idle.
+    pub fn step(&mut self) -> Option<f64> {
+        self.sim.step()
+    }
+
+    /// Dispatch every event due at or before `t`; returns the clock.
+    pub fn run_until(&mut self, t: f64) -> f64 {
+        self.sim.run_until(t)
+    }
+
+    /// True when no further event can be dispatched. A session whose start
+    /// phase has not run yet is not idle, so `while !is_idle()` loops work
+    /// without an explicit [`init`](Self::init).
+    pub fn is_idle(&self) -> bool {
+        self.sim.is_idle()
+    }
+
+    /// Current simulation clock.
+    pub fn clock(&self) -> f64 {
+        self.sim.clock()
+    }
+
+    /// Events dispatched so far.
+    pub fn events_processed(&self) -> u64 {
+        self.sim.events_processed()
+    }
+
+    /// Timestamp of the next pending event, if any.
+    pub fn next_event_time(&self) -> Option<f64> {
+        self.sim.next_event_time()
+    }
+
+    /// Entity name lookup (for interpreting observer events).
+    pub fn entity_name(&self, id: EntityId) -> &str {
+        self.sim.name_of(id)
+    }
+
+    /// Stream every dispatched event to `observer` (called after the clock
+    /// advances, before the destination entity handles the event).
+    pub fn set_observer(&mut self, observer: Box<dyn FnMut(&Event<Msg>)>) {
+        self.sim.set_observer(observer);
+    }
+
+    /// Remove the installed observer.
+    pub fn clear_observer(&mut self) {
+        self.sim.take_observer();
+    }
+
+    /// Pull-based progress snapshot: per-broker state, completion counts,
+    /// budget spent and per-resource load — valid at any point of the run.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            time: self.sim.clock(),
+            events: self.sim.events_processed(),
+            users: self
+                .broker_ids
+                .iter()
+                .map(|&id| self.sim.get::<Broker>(id).expect("broker entity").progress())
+                .collect(),
+        }
+    }
+
+    /// Run the end phase (idempotent) and harvest per-user outcomes.
+    ///
+    /// A user whose experiment terminated yields
+    /// [`UserOutcome::Finished`] — taken from the user entity, or from the
+    /// broker when the final report message was still in flight. Otherwise
+    /// the outcome is [`UserOutcome::DidNotFinish`] carrying the broker's
+    /// real partial accounting.
+    pub fn report(&mut self) -> SessionReport {
+        let end_time = self.sim.finalize();
+        let outcomes = self
+            .user_ids
+            .iter()
+            .zip(&self.broker_ids)
+            .map(|(&uid, &bid)| {
+                if let Some(r) =
+                    self.sim.get::<UserEntity>(uid).and_then(|u| u.result.clone())
+                {
+                    return UserOutcome::Finished(r);
+                }
+                let broker = self.sim.get::<Broker>(bid).expect("broker entity");
+                match &broker.result {
+                    Some(r) => UserOutcome::Finished(r.clone()),
+                    None => UserOutcome::DidNotFinish(broker.partial_result(end_time)),
+                }
+            })
+            .collect();
+        SessionReport { outcomes, end_time, events: self.sim.events_processed() }
+    }
+
+    /// Drive the session until idle and return the legacy-shaped report.
+    pub fn run_to_completion(&mut self) -> ScenarioReport {
+        self.sim.run();
+        self.report().into_scenario_report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{BrokerConfig, ExperimentSpec, Optimization};
+    use crate::gridsim::AllocPolicy;
+    use crate::scenario::{run_scenario, ResourceSpec, UserSpec};
+
+    fn small_resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+        ResourceSpec {
+            name: name.into(),
+            arch: "test".into(),
+            os: "linux".into(),
+            machines: 1,
+            pes_per_machine: pes,
+            mips_per_pe: mips,
+            policy: AllocPolicy::TimeShared,
+            price,
+            time_zone: 0.0,
+            calendar: None,
+        }
+    }
+
+    fn two_user_scenario() -> Scenario {
+        Scenario::builder()
+            .resource(small_resource("R0", 2, 100.0, 1.0))
+            .resource(small_resource("R1", 2, 100.0, 2.0))
+            .user(
+                ExperimentSpec::task_farm(12, 1_000.0, 0.10)
+                    .deadline(2_000.0)
+                    .budget(1e6)
+                    .optimization(Optimization::Cost),
+            )
+            .user(
+                UserSpec::new(
+                    ExperimentSpec::task_farm(8, 1_000.0, 0.10)
+                        .deadline(2_000.0)
+                        .budget(1e6)
+                        .optimization(Optimization::Time),
+                )
+                .broker(BrokerConfig { max_gridlets_per_pe: 1, ..BrokerConfig::default() }),
+            )
+            .seed(11)
+            .build()
+    }
+
+    #[test]
+    fn session_matches_run_scenario_shim() {
+        let scenario = two_user_scenario();
+        let via_shim = run_scenario(&scenario);
+        let via_session = GridSession::new(&scenario).run_to_completion();
+        assert_eq!(via_shim.end_time.to_bits(), via_session.end_time.to_bits());
+        assert_eq!(via_shim.events, via_session.events);
+        for (a, b) in via_shim.users.iter().zip(&via_session.users) {
+            assert_eq!(a.gridlets_completed, b.gridlets_completed);
+            assert_eq!(a.budget_spent.to_bits(), b.budget_spent.to_bits());
+        }
+    }
+
+    #[test]
+    fn stepped_run_until_is_bit_identical() {
+        let baseline = GridSession::new(&two_user_scenario()).run_to_completion();
+
+        let mut session = GridSession::new(&two_user_scenario());
+        session.init();
+        let mut t = 0.0;
+        while !session.is_idle() {
+            t += 13.7;
+            session.run_until(t);
+        }
+        let stepped = session.report().into_scenario_report();
+
+        assert_eq!(baseline.end_time.to_bits(), stepped.end_time.to_bits());
+        assert_eq!(baseline.events, stepped.events);
+        assert_eq!(baseline.users.len(), stepped.users.len());
+        for (a, b) in baseline.users.iter().zip(&stepped.users) {
+            assert_eq!(a.gridlets_completed, b.gridlets_completed);
+            assert_eq!(a.budget_spent.to_bits(), b.budget_spent.to_bits());
+            assert_eq!(a.finish_time.to_bits(), b.finish_time.to_bits());
+        }
+    }
+
+    #[test]
+    fn snapshot_observes_progress_mid_run() {
+        let mut session = GridSession::new(&two_user_scenario());
+        session.init();
+        let before = session.snapshot();
+        assert_eq!(before.users.len(), 2);
+
+        // Drive halfway and probe.
+        let mut saw_active = false;
+        while !session.is_idle() && session.clock() < 100.0 {
+            session.step();
+            let snap = session.snapshot();
+            if snap.users.iter().any(|u| u.state == "scheduling") {
+                saw_active = true;
+            }
+        }
+        assert!(saw_active, "brokers visible mid-lifecycle");
+
+        let report = session.run_to_completion();
+        assert!(report.all_finished());
+        let final_snap = session.snapshot();
+        assert!(final_snap.users.iter().all(|u| u.state == "done"));
+        assert_eq!(final_snap.users[0].gridlets_completed, 12);
+        assert_eq!(final_snap.users[1].gridlets_completed, 8);
+    }
+
+    #[test]
+    fn observer_counts_every_event() {
+        use std::cell::Cell;
+        let count = Rc::new(Cell::new(0u64));
+        let sink = count.clone();
+        let mut session = GridSession::new(&two_user_scenario());
+        session.set_observer(Box::new(move |_ev| sink.set(sink.get() + 1)));
+        let report = session.run_to_completion();
+        assert_eq!(count.get(), report.events);
+    }
+
+    #[test]
+    fn truncated_run_reports_did_not_finish_with_real_accounting() {
+        let mut scenario = two_user_scenario();
+        scenario.max_time = 15.0; // far too short to finish
+        let mut session = GridSession::new(&scenario);
+        while session.step().is_some() {}
+        let report = session.report();
+        assert!(report.outcomes.iter().any(|o| !o.is_finished()), "run was truncated");
+        for outcome in &report.outcomes {
+            let r = outcome.result();
+            // The partial result carries the real experiment size, not the
+            // old fabricated all-zero placeholder.
+            assert!(r.gridlets_total > 0, "partial keeps real totals");
+            assert!(r.gridlets_completed <= r.gridlets_total);
+        }
+        let legacy = report.clone().into_scenario_report();
+        assert!(!legacy.all_finished());
+        assert!(!legacy.unfinished.is_empty());
+    }
+
+    #[test]
+    fn fresh_session_is_not_idle() {
+        // Without an explicit init(), an is_idle-driven loop still runs:
+        // the pending start phase means the session is not idle yet.
+        let mut session = GridSession::new(&two_user_scenario());
+        assert!(!session.is_idle());
+        let mut horizon = 0.0;
+        while !session.is_idle() {
+            horizon += 50.0;
+            session.run_until(horizon);
+        }
+        let report = session.report().into_scenario_report();
+        assert!(report.all_finished());
+    }
+
+    #[test]
+    fn per_user_advisor_override_builds() {
+        // Both users explicitly request the native advisor; the scenario
+        // default is also native — exercise the override plumbing.
+        let scenario = Scenario::builder()
+            .resource(small_resource("R0", 2, 100.0, 1.0))
+            .user(
+                UserSpec::new(ExperimentSpec::task_farm(4, 500.0, 0.0).deadline(1e4).budget(1e6))
+                    .advisor(AdvisorKind::Native),
+            )
+            .user(ExperimentSpec::task_farm(4, 500.0, 0.0).deadline(1e4).budget(1e6))
+            .seed(3)
+            .build();
+        let report = GridSession::new(&scenario).run_to_completion();
+        assert!(report.all_finished());
+        assert_eq!(report.users[0].gridlets_completed, 4);
+        assert_eq!(report.users[1].gridlets_completed, 4);
+    }
+}

@@ -216,7 +216,7 @@ fn broker_retries_failed_gridlets_on_other_resources() {
         "U0",
         broker,
         shutdown,
-        scenario.users[0].clone(),
+        scenario.users[0].experiment.clone(),
         99,
     )));
     sim.run();

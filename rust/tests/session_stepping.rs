@@ -1,0 +1,203 @@
+//! Stepped-execution contract: driving a `GridSession` through
+//! `run_until`/`step` in arbitrary increments must be *bit-identical* to one
+//! `run_to_completion()` — same end time, same event count, same per-user
+//! results. Plus end-to-end coverage of per-user heterogeneity (different
+//! policies, broker configs, advisors in one scenario) through both the
+//! builder API and the JSON loader.
+
+use gridsim::broker::{BrokerConfig, ExperimentSpec, Optimization};
+use gridsim::config::scenario_file::parse_scenario;
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::scenario::{Scenario, ScenarioReport, UserSpec};
+use gridsim::session::GridSession;
+use gridsim::util::prop::{check, forall};
+use gridsim::util::rng::Rng;
+
+/// A two-user WWG scenario with heterogeneous policies and broker tunings.
+fn wwg_two_user(seed: u64, gridlets: usize) -> Scenario {
+    Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
+                .deadline(3_100.0)
+                .budget(22_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .user(
+            UserSpec::new(
+                ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
+                    .deadline(3_100.0)
+                    .budget(22_000.0)
+                    .optimization(Optimization::Time),
+            )
+            .broker(BrokerConfig { max_gridlets_per_pe: 1, ..BrokerConfig::default() }),
+        )
+        .seed(seed)
+        .build()
+}
+
+fn assert_bit_identical(a: &ScenarioReport, b: &ScenarioReport) -> Result<(), String> {
+    check(a.end_time.to_bits() == b.end_time.to_bits(), "end_time differs")?;
+    check(a.events == b.events, format!("events {} != {}", a.events, b.events))?;
+    check(a.users.len() == b.users.len(), "user count differs")?;
+    check(a.unfinished == b.unfinished, "unfinished set differs")?;
+    for (i, (ua, ub)) in a.users.iter().zip(&b.users).enumerate() {
+        check(
+            ua.gridlets_completed == ub.gridlets_completed,
+            format!("user {i} completed {} != {}", ua.gridlets_completed, ub.gridlets_completed),
+        )?;
+        check(
+            ua.budget_spent.to_bits() == ub.budget_spent.to_bits(),
+            format!("user {i} spent {} != {}", ua.budget_spent, ub.budget_spent),
+        )?;
+        check(
+            ua.finish_time.to_bits() == ub.finish_time.to_bits(),
+            format!("user {i} finish {} != {}", ua.finish_time, ub.finish_time),
+        )?;
+        check(ua.start_time.to_bits() == ub.start_time.to_bits(), "start_time differs")?;
+        check(ua.trace.len() == ub.trace.len(), "trace length differs")?;
+    }
+    Ok(())
+}
+
+#[test]
+fn wwg_stepped_increments_bit_identical_to_single_run() {
+    // The acceptance case: the WWG testbed scenario, run whole vs in
+    // increments of several fixed sizes.
+    let baseline = GridSession::new(&wwg_two_user(27, 25)).run_to_completion();
+    assert!(baseline.all_finished());
+    assert_eq!(baseline.users[0].gridlets_completed, 25);
+    assert_eq!(baseline.users[1].gridlets_completed, 25);
+
+    for increment in [1.0, 17.3, 250.0, 5_000.0] {
+        let mut session = GridSession::new(&wwg_two_user(27, 25));
+        session.init();
+        let mut horizon = 0.0;
+        while !session.is_idle() {
+            horizon += increment;
+            session.run_until(horizon);
+        }
+        let stepped = session.report().into_scenario_report();
+        assert_bit_identical(&baseline, &stepped)
+            .unwrap_or_else(|msg| panic!("increment {increment}: {msg}"));
+    }
+}
+
+#[test]
+fn wwg_single_stepping_bit_identical() {
+    // One event at a time — the finest possible interleaving.
+    let baseline = GridSession::new(&wwg_two_user(7, 12)).run_to_completion();
+    let mut session = GridSession::new(&wwg_two_user(7, 12));
+    session.init();
+    let mut steps = 0u64;
+    while session.step().is_some() {
+        steps += 1;
+    }
+    let stepped = session.report().into_scenario_report();
+    assert_eq!(steps, stepped.events);
+    assert_bit_identical(&baseline, &stepped).unwrap();
+}
+
+#[test]
+fn prop_random_increments_bit_identical() {
+    // Property: for random seeds and random (coarse or fine) increment
+    // schedules, stepped == whole, bitwise.
+    forall(
+        2027,
+        12,
+        |rng: &mut Rng| {
+            let seed = rng.below(1_000);
+            let gridlets = 5 + rng.below(15) as usize;
+            // Increment schedule: mean size varies over three orders of
+            // magnitude across cases.
+            let scale = 10f64.powi(rng.below(3) as i32 + 1);
+            let jitter = rng.next_f64();
+            (seed, gridlets, scale, jitter)
+        },
+        |&(seed, gridlets, scale, jitter)| {
+            let baseline = GridSession::new(&wwg_two_user(seed, gridlets)).run_to_completion();
+            let mut session = GridSession::new(&wwg_two_user(seed, gridlets));
+            session.init();
+            let mut horizon = 0.0;
+            let mut k = 0u64;
+            while !session.is_idle() {
+                k += 1;
+                // Deterministic, irregular increments.
+                horizon += scale * (0.25 + ((jitter * k as f64).sin().abs()));
+                session.run_until(horizon);
+            }
+            let stepped = session.report().into_scenario_report();
+            assert_bit_identical(&baseline, &stepped)
+        },
+    );
+}
+
+#[test]
+fn heterogeneous_users_via_builder_api() {
+    // Two users on *different* policies and broker configs in one scenario.
+    let report = GridSession::new(&wwg_two_user(5, 20)).run_to_completion();
+    assert!(report.all_finished());
+    let (cost, time) = (&report.users[0], &report.users[1]);
+    assert_eq!(cost.gridlets_completed, 20);
+    assert_eq!(time.gridlets_completed, 20);
+    // Time-optimization fans out to fast expensive resources: it should
+    // never pay less than the cost-optimizer on the same workload.
+    assert!(
+        time.budget_spent >= cost.budget_spent,
+        "time {} < cost {}",
+        time.budget_spent,
+        cost.budget_spent
+    );
+}
+
+#[test]
+fn heterogeneous_users_via_json_loader() {
+    let text = r#"{
+        "seed": 27,
+        "testbed": "wwg",
+        "broker": {"max_gridlets_per_pe": 2},
+        "users": [
+            {"gridlets": 15, "deadline": 3100, "budget": 22000, "policy": "cost"},
+            {"gridlets": 15, "deadline": 3100, "budget": 22000, "policy": "time",
+             "advisor": "native", "broker": {"max_gridlets_per_pe": 1},
+             "submit_delay": 25}
+        ]
+    }"#;
+    let scenario = parse_scenario(text).unwrap();
+    assert_eq!(scenario.users[0].experiment.optimization, Optimization::Cost);
+    assert_eq!(scenario.users[1].experiment.optimization, Optimization::Time);
+    assert_eq!(scenario.users[1].broker.as_ref().unwrap().max_gridlets_per_pe, 1);
+    assert_eq!(scenario.users[1].submit_delay, 25.0);
+
+    let mut session = GridSession::new(&scenario);
+    let report = session.run_to_completion();
+    assert!(report.all_finished());
+    assert_eq!(report.users[0].gridlets_completed, 15);
+    assert_eq!(report.users[1].gridlets_completed, 15);
+    // The delayed user starts later.
+    assert!(report.users[1].start_time >= 25.0);
+    let final_snap = session.snapshot();
+    assert!(final_snap.users.iter().all(|u| u.state == "done"));
+}
+
+#[test]
+fn observer_and_snapshot_consistent_with_report() {
+    use std::cell::Cell;
+    use std::rc::Rc;
+    let count = Rc::new(Cell::new(0u64));
+    let sink = count.clone();
+    let mut session = GridSession::new(&wwg_two_user(3, 10));
+    session.set_observer(Box::new(move |_| sink.set(sink.get() + 1)));
+    session.init();
+    // Interleave stepping styles; the observer must see every event once.
+    session.run_until(100.0);
+    while session.step().is_some() {}
+    let report = session.report().into_scenario_report();
+    assert_eq!(count.get(), report.events);
+    let snap = session.snapshot();
+    assert_eq!(snap.events, report.events);
+    for (progress, result) in snap.users.iter().zip(&report.users) {
+        assert_eq!(progress.gridlets_completed, result.gridlets_completed);
+        assert_eq!(progress.budget_spent.to_bits(), result.budget_spent.to_bits());
+    }
+}

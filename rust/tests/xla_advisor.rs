@@ -14,6 +14,10 @@ use gridsim::util::rng::Rng;
 use std::path::Path;
 
 fn artifacts_dir() -> Option<&'static Path> {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` cargo feature");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if dir.join("advisor.hlo.txt").exists() {
         Some(dir)
