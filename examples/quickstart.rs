@@ -11,8 +11,8 @@
 //! 3. *Report*: `report()` harvests per-user outcomes, distinguishing
 //!    finished experiments from truncated ones.
 //!
-//! For fire-and-forget runs, `run_scenario(&scenario)` (or
-//! `session.run_to_completion()`) does all three stages in one call.
+//! For fire-and-forget runs, `session.run_to_completion()` does all three
+//! stages in one call (`run_scenario` is a deprecated shim over it).
 //!
 //!     cargo run --release --example quickstart
 

@@ -1,22 +1,25 @@
 //! Regenerates the paper's multi-user competition series (Figures 33–38)
-//! at reduced scale and times representative cells — the §5.4 bench.
+//! at reduced scale, times representative cells, and measures the sweep
+//! engine's parallel speedup over the serial baseline — the §5.4 bench.
 
 mod harness;
 
-use gridsim::figures::{figs33_38, SweepConfig};
+use gridsim::figures::{figs33_38, FigureConfig};
 use harness::{bench, metric};
 use std::time::Instant;
 
 fn main() {
     println!("== bench_multi_user: paper §5.4 (Figures 33–38) ==");
 
-    let cfg = SweepConfig {
+    let cfg = FigureConfig {
         user_counts: vec![1, 5, 10, 20],
         budgets: vec![6_000.0, 12_000.0, 22_000.0],
         gridlets: 60,
-        ..SweepConfig::quick()
+        ..FigureConfig::quick()
     };
-    for (label, deadline) in [("Figs 33-35 (deadline 3100)", 3_100.0), ("Figs 36-38 (deadline 10000)", 10_000.0)] {
+    for (label, deadline) in
+        [("Figs 33-35 (deadline 3100)", 3_100.0), ("Figs 36-38 (deadline 10000)", 10_000.0)]
+    {
         let t0 = Instant::now();
         let csv = figs33_38(deadline, &cfg);
         println!("--- {label} ---");
@@ -26,11 +29,11 @@ fn main() {
 
     // Timed: one heavy competition cell.
     bench("competition/20users/60jobs/d3100", 1, 3, || {
-        let c = SweepConfig {
+        let c = FigureConfig {
             user_counts: vec![20],
             budgets: vec![12_000.0],
             gridlets: 60,
-            ..SweepConfig::quick()
+            ..FigureConfig::quick()
         };
         figs33_38(3_100.0, &c).len()
     });
@@ -80,4 +83,44 @@ fn main() {
         report.events as f64 / t0.elapsed().as_secs_f64(),
         "events/s",
     );
+
+    // Sweep engine: serial vs parallel over the same grid. The grid is the
+    // Figs 33–35 competition block (users × budgets at deadline 3100);
+    // near-linear speedup is expected while cells outnumber cores.
+    use gridsim::output::sweep::long_csv;
+    use gridsim::sweep::{default_jobs, run_sweep, SweepSpec};
+    let base = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(40, 10_000.0, 0.10)
+                .deadline(3_100.0)
+                .budget(12_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(17)
+        .build();
+    let spec = SweepSpec::over(base)
+        .user_counts(vec![1, 5, 10, 20])
+        .budgets(vec![6_000.0, 12_000.0, 22_000.0])
+        .replications(2);
+    println!(
+        "-- sweep speedup: {} cells, 1 vs {} worker(s) --",
+        spec.cell_count(),
+        default_jobs()
+    );
+    let serial = run_sweep(&spec, 1).expect("serial sweep");
+    let parallel = run_sweep(&spec, default_jobs()).expect("parallel sweep");
+    metric("sweep_serial_wall", serial.wall_secs, "s");
+    metric("sweep_parallel_wall", parallel.wall_secs, "s");
+    metric(
+        "sweep_speedup",
+        serial.wall_secs / parallel.wall_secs.max(1e-9),
+        &format!("x ({} workers)", parallel.jobs),
+    );
+    assert_eq!(
+        long_csv(&spec, &serial).to_string(),
+        long_csv(&spec, &parallel).to_string(),
+        "sweep output must be byte-identical across worker counts"
+    );
+    println!("sweep determinism: serial and parallel CSV byte-identical");
 }

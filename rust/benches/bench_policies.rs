@@ -7,7 +7,8 @@ mod harness;
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::config::testbed::wwg_testbed;
-use gridsim::scenario::{run_scenario, Scenario};
+use gridsim::scenario::Scenario;
+use gridsim::session::GridSession;
 use harness::bench;
 
 fn run(opt: Optimization, deadline: f64, budget: f64) -> (usize, f64, f64) {
@@ -21,7 +22,7 @@ fn run(opt: Optimization, deadline: f64, budget: f64) -> (usize, f64, f64) {
         )
         .seed(27)
         .build();
-    let report = run_scenario(&scenario);
+    let report = GridSession::new(&scenario).run_to_completion();
     let u = &report.users[0];
     (u.gridlets_completed, u.finish_time - u.start_time, u.budget_spent)
 }

@@ -4,7 +4,7 @@
 
 mod harness;
 
-use gridsim::figures::{figs21_24, figs25_27, SweepConfig};
+use gridsim::figures::{figs21_24, figs25_27, FigureConfig};
 use harness::bench;
 use std::time::Instant;
 
@@ -12,11 +12,11 @@ fn main() {
     println!("== bench_single_user: paper §5.3 (Figures 21–27) ==");
 
     // Representative sub-grid, printed like the paper's series.
-    let cfg = SweepConfig {
+    let cfg = FigureConfig {
         deadlines: vec![100.0, 1_100.0, 3_100.0],
         budgets: vec![6_000.0, 10_000.0, 14_000.0, 18_000.0, 22_000.0],
         gridlets: 200,
-        ..SweepConfig::quick()
+        ..FigureConfig::quick()
     };
     let t0 = Instant::now();
     let csv = figs21_24(&cfg);
@@ -29,20 +29,20 @@ fn main() {
     );
 
     println!("--- Fig 27 resource selection at deadline 3100 ---");
-    let sel_cfg = SweepConfig {
+    let sel_cfg = FigureConfig {
         budgets: vec![6_000.0, 14_000.0, 22_000.0],
         gridlets: 200,
-        ..SweepConfig::quick()
+        ..FigureConfig::quick()
     };
     print!("{}", figs25_27(3_100.0, &sel_cfg).to_string());
 
     // Timed benches: one full-size simulation per paper cell class.
     let cell = |deadline: f64, budget: f64| {
-        let c = SweepConfig {
+        let c = FigureConfig {
             deadlines: vec![deadline],
             budgets: vec![budget],
             gridlets: 200,
-            ..SweepConfig::quick()
+            ..FigureConfig::quick()
         };
         figs21_24(&c).len()
     };

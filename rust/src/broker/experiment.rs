@@ -42,6 +42,15 @@ impl Optimization {
     }
 }
 
+impl std::str::FromStr for Optimization {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Optimization::parse(s)
+            .ok_or_else(|| format!("unknown policy {s:?} (cost|time|cost-time|none)"))
+    }
+}
+
 /// Deadline given directly or via a D-factor (Eq 1).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum DeadlineSpec {

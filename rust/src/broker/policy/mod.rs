@@ -55,8 +55,9 @@ impl<'a> PolicyInput<'a> {
     }
 }
 
-/// A scheduling policy: desired committed totals per resource.
-pub trait SchedulingPolicy {
+/// A scheduling policy: desired committed totals per resource. `Send` so a
+/// broker can migrate between the sweep engine's worker threads.
+pub trait SchedulingPolicy: Send {
     fn label(&self) -> &'static str;
     fn allocate(&mut self, input: &PolicyInput) -> Vec<usize>;
 }

@@ -23,6 +23,8 @@
 //! ```
 //!
 //! `"testbed": "wwg"` can replace the `resources` array to pull in Table 2.
+//! A top-level `"sweep"` section (see [`parse_sweep`]) turns the file into a
+//! declarative parameter sweep over the base scenario for `repro sweep`.
 //!
 //! The loader is strict: unknown keys at any level are rejected with the
 //! allowed-key list (and a did-you-mean hint), so a typo like `"dedline"`
@@ -35,12 +37,17 @@ use crate::broker::broker::BrokerConfig;
 use crate::broker::{ExperimentSpec, Optimization};
 use crate::gridsim::{AllocPolicy, SpacePolicy};
 use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec};
+use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
 
-const SCENARIO_KEYS: &[&str] =
-    &["seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time"];
+const SCENARIO_KEYS: &[&str] = &[
+    "seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time",
+    "sweep",
+];
 const NETWORK_KEYS: &[&str] = &["type", "rate", "latency"];
+const SWEEP_KEYS: &[&str] =
+    &["deadlines", "budgets", "users", "policies", "resources", "replications"];
 const BROKER_KEYS: &[&str] =
     &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe"];
 const RESOURCE_KEYS: &[&str] = &[
@@ -128,14 +135,22 @@ fn opt_f64(v: &Value, what: &str, key: &str) -> Result<Option<f64>> {
     }
 }
 
-fn opt_usize(v: &Value, what: &str, key: &str) -> Result<Option<usize>> {
-    // 2^53: past this an f64 cannot represent every integer, and an `as`
-    // cast would silently saturate.
+/// The shared strictness rule for integer-valued JSON numbers: 2^53 is the
+/// last f64 that can represent every integer exactly; past it (or for
+/// negative/fractional values) an `as` cast would silently mangle input.
+fn f64_to_usize(n: f64, what: &str, key: &str) -> Result<usize> {
     const MAX_EXACT: f64 = 9_007_199_254_740_992.0;
+    if n >= 0.0 && n.fract() == 0.0 && n < MAX_EXACT {
+        Ok(n as usize)
+    } else {
+        bail!("{what}: {key:?} must be a non-negative integer (< 2^53), got {n}")
+    }
+}
+
+fn opt_usize(v: &Value, what: &str, key: &str) -> Result<Option<usize>> {
     match opt_f64(v, what, key)? {
         None => Ok(None),
-        Some(n) if n >= 0.0 && n.fract() == 0.0 && n < MAX_EXACT => Ok(Some(n as usize)),
-        Some(n) => bail!("{what}: {key:?} must be a non-negative integer (< 2^53), got {n}"),
+        Some(n) => f64_to_usize(n, what, key).map(Some),
     }
 }
 
@@ -176,13 +191,41 @@ fn parse_broker_config(v: &Value, base: &BrokerConfig) -> Result<BrokerConfig> {
     Ok(config)
 }
 
-/// Parse a scenario from JSON text.
+/// Parse a scenario from JSON text. A file carrying a `"sweep"` section is
+/// rejected — a sweep is not one scenario; run it with `repro sweep`.
 pub fn parse_scenario(text: &str) -> Result<Scenario> {
     let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
     reject_unknown_keys(&root, "scenario", SCENARIO_KEYS)?;
-    let seed = opt_usize(&root, "scenario", "seed")?.unwrap_or(0) as u64;
+    if root.get("sweep").is_some() {
+        bail!(
+            "this file declares a \"sweep\" section; run it with \
+             `repro sweep --scenario FILE` (or delete the section for a single run)"
+        );
+    }
+    scenario_from(&root)
+}
 
-    let resources = match opt_str(&root, "scenario", "testbed")? {
+/// Parse a sweep file: a base scenario plus a `"sweep"` section declaring
+/// the axes. A file *without* the section is accepted as a zero-axis sweep
+/// over the scenario (one cell) — the CLI layers `--deadlines`-style axis
+/// flags on top, so any plain scenario file can be swept.
+pub fn parse_sweep(text: &str) -> Result<SweepSpec> {
+    let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
+    reject_unknown_keys(&root, "scenario", SCENARIO_KEYS)?;
+    let base = scenario_from(&root)?;
+    let spec = match root.get("sweep") {
+        Some(section) => parse_sweep_section(section, base)?,
+        None => SweepSpec::over(base),
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// The shared scenario-object parser (everything except the `sweep` key).
+fn scenario_from(root: &Value) -> Result<Scenario> {
+    let seed = opt_usize(root, "scenario", "seed")?.unwrap_or(0) as u64;
+
+    let resources = match opt_str(root, "scenario", "testbed")? {
         Some("wwg") => {
             if root.get("resources").is_some() {
                 bail!("give either \"testbed\" or \"resources\", not both");
@@ -202,7 +245,7 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
         bail!("\"resources\" array is empty");
     }
 
-    let advisor = parse_advisor(opt_str(&root, "scenario", "advisor")?.unwrap_or("native"))?;
+    let advisor = parse_advisor(opt_str(root, "scenario", "advisor")?.unwrap_or("native"))?;
 
     // Scenario-level broker tuning is the default every user starts from.
     let broker_default = match root.get("broker") {
@@ -259,7 +302,7 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
     for u in users {
         builder = builder.user(u);
     }
-    if let Some(t) = opt_f64(&root, "scenario", "max_time")? {
+    if let Some(t) = opt_f64(root, "scenario", "max_time")? {
         builder = builder.max_time(t);
     }
     Ok(builder.build())
@@ -353,6 +396,103 @@ fn parse_user(v: &Value, broker_default: &BrokerConfig) -> Result<UserSpec> {
         user = user.submit_delay(d);
     }
     Ok(user)
+}
+
+/// Typed optional array getters, same strictness discipline as the scalar
+/// getters: a known key holding a non-array (or wrong-element-typed array)
+/// is a hard error.
+fn opt_f64_array(v: &Value, what: &str, key: &str) -> Result<Option<Vec<f64>>> {
+    let Some(x) = v.get(key) else { return Ok(None) };
+    let arr = x
+        .as_arr()
+        .ok_or_else(|| anyhow!("{what}: {key:?} must be an array of numbers"))?;
+    arr.iter()
+        .map(|e| e.as_f64().ok_or_else(|| anyhow!("{what}: {key:?} must hold only numbers")))
+        .collect::<Result<Vec<_>>>()
+        .map(Some)
+}
+
+fn opt_usize_array(v: &Value, what: &str, key: &str) -> Result<Option<Vec<usize>>> {
+    match opt_f64_array(v, what, key)? {
+        None => Ok(None),
+        Some(ns) => ns
+            .into_iter()
+            .map(|n| f64_to_usize(n, what, key))
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
+}
+
+/// Parse the `"sweep"` section into a [`SweepSpec`] over `base`.
+///
+/// ```json
+/// "sweep": {
+///   "deadlines": [100, 600, 1100],
+///   "budgets": [5000, 10000, 22000],
+///   "users": [1, 10, 20],
+///   "policies": ["cost", "time"],
+///   "resources": [["R0", "R1"], ["R8"]],
+///   "replications": 3
+/// }
+/// ```
+///
+/// Every key is optional (an absent axis keeps the base scenario's value);
+/// unknown keys are rejected with the same did-you-mean hints as the rest of
+/// the file.
+fn parse_sweep_section(v: &Value, base: Scenario) -> Result<SweepSpec> {
+    reject_unknown_keys(v, "sweep", SWEEP_KEYS)?;
+    let mut spec = SweepSpec::over(base);
+    if let Some(ds) = opt_f64_array(v, "sweep", "deadlines")? {
+        spec = spec.deadlines(ds);
+    }
+    if let Some(bs) = opt_f64_array(v, "sweep", "budgets")? {
+        spec = spec.budgets(bs);
+    }
+    if let Some(us) = opt_usize_array(v, "sweep", "users")? {
+        spec = spec.user_counts(us);
+    }
+    if let Some(ps) = v.get("policies") {
+        let arr = ps
+            .as_arr()
+            .ok_or_else(|| anyhow!("sweep: \"policies\" must be an array of strings"))?;
+        let policies = arr
+            .iter()
+            .map(|p| {
+                let s = p
+                    .as_str()
+                    .ok_or_else(|| anyhow!("sweep: \"policies\" must hold only strings"))?;
+                s.parse::<Optimization>().map_err(|e| anyhow!("sweep: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        spec = spec.policies(policies);
+    }
+    if let Some(rs) = v.get("resources") {
+        let arr = rs.as_arr().ok_or_else(|| {
+            anyhow!("sweep: \"resources\" must be an array of resource-name arrays")
+        })?;
+        let subsets = arr
+            .iter()
+            .enumerate()
+            .map(|(i, subset)| {
+                let names = subset.as_arr().ok_or_else(|| {
+                    anyhow!("sweep: resource subset #{i} must be an array of names")
+                })?;
+                names
+                    .iter()
+                    .map(|n| {
+                        n.as_str().map(str::to_string).ok_or_else(|| {
+                            anyhow!("sweep: resource subset #{i} must hold only strings")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        spec = spec.resource_subsets(subsets);
+    }
+    if let Some(n) = opt_usize(v, "sweep", "replications")? {
+        spec = spec.replications(n);
+    }
+    Ok(spec)
 }
 
 #[cfg(test)]
@@ -613,5 +753,97 @@ mod tests {
         assert_eq!(edit_distance("abc", "abc"), 0);
         assert_eq!(nearest("dedline", USER_KEYS), Some("deadline"));
         assert_eq!(nearest("zzzzzz", USER_KEYS), None);
+    }
+
+    #[test]
+    fn parses_sweep_section() {
+        let text = r#"{
+            "testbed": "wwg",
+            "seed": 27,
+            "users": [{"gridlets": 50, "deadline": 3100, "budget": 22000}],
+            "sweep": {
+                "deadlines": [100, 1100],
+                "budgets": [5000, 10000, 22000],
+                "users": [1, 10],
+                "policies": ["cost", "time"],
+                "resources": [["R8"], ["R8", "R4"]],
+                "replications": 2
+            }
+        }"#;
+        let spec = parse_sweep(text).unwrap();
+        assert_eq!(spec.base.seed, 27);
+        assert_eq!(spec.deadlines, vec![100.0, 1_100.0]);
+        assert_eq!(spec.budgets.len(), 3);
+        assert_eq!(spec.user_counts, vec![1, 10]);
+        assert_eq!(spec.policies, vec![Optimization::Cost, Optimization::Time]);
+        assert_eq!(spec.resource_subsets.len(), 2);
+        assert_eq!(spec.replications, 2);
+        // 2 subsets × 2 policies × 2 user counts × 2 deadlines × 3 budgets
+        // × 2 replications.
+        assert_eq!(spec.cell_count(), 96);
+    }
+
+    #[test]
+    fn sweep_axes_are_all_optional() {
+        let text = r#"{"testbed": "wwg", "users": [{"gridlets": 5}], "sweep": {}}"#;
+        let spec = parse_sweep(text).unwrap();
+        assert_eq!(spec.cell_count(), 1);
+        assert_eq!(spec.replications, 1);
+    }
+
+    #[test]
+    fn sweep_section_rejects_unknown_and_wrong_typed_keys() {
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"replciations": 3}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("replciations") && err.contains("replications"), "{err}");
+
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"deadlines": 100}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("deadlines") && err.contains("array"), "{err}");
+
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"policies": ["warp"]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("warp"), "{err}");
+
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"users": [1.5]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("integer"), "{err}");
+
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"resources": [["NoSuch"]]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("NoSuch"), "{err}");
+    }
+
+    #[test]
+    fn plain_run_rejects_sweep_files_but_sweep_accepts_plain_files() {
+        let sweep_file = r#"{"testbed": "wwg", "users": [{}], "sweep": {}}"#;
+        let err = parse_scenario(sweep_file).unwrap_err().to_string();
+        assert!(err.contains("repro sweep"), "{err}");
+
+        // The reverse direction is allowed: a plain scenario file is a
+        // zero-axis sweep (the CLI supplies the axes).
+        let plain_file = r#"{"testbed": "wwg", "users": [{}]}"#;
+        let spec = parse_sweep(plain_file).unwrap();
+        assert_eq!(spec.cell_count(), 1);
     }
 }

@@ -13,7 +13,10 @@ pub use super::event::EntityId;
 /// We preserve the observable delay semantics by asking this model for the
 /// delivery delay of each send; `gridsim::network` implements the paper's
 /// baud-rate model on top of this hook.
-pub trait LinkModel {
+///
+/// `Send` so a whole [`crate::des::Simulation`] can move between threads
+/// (the sweep engine runs one simulation per worker).
+pub trait LinkModel: Send {
     /// Delay (simulation time units) for `bytes` from `src` to `dst`.
     fn delay(&self, src: EntityId, dst: EntityId, bytes: u64) -> f64;
 }
@@ -120,7 +123,11 @@ pub fn test_ctx<'a, M>(
 /// A simulation entity. The `on_event` handler is the event-model equivalent
 /// of SimJava's `body()` loop: it is invoked once per delivered event and may
 /// mutate entity state, send events, and schedule internal interrupts.
-pub trait Entity<M>: Any {
+///
+/// Entities are `Send`: the whole simulation stack is migratable between
+/// threads, which is what lets the sweep engine run independent scenario
+/// cells on a worker pool.
+pub trait Entity<M>: Any + Send {
     /// Unique entity name (the paper identifies entities by name).
     fn name(&self) -> &str;
 

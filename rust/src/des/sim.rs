@@ -40,7 +40,15 @@ pub struct Simulation<M> {
     ended: bool,
     /// Observer invoked on every dispatched event (after the clock advances,
     /// before the destination entity handles it).
-    observer: Option<Box<dyn FnMut(&Event<M>)>>,
+    observer: Option<Box<dyn FnMut(&Event<M>) + Send>>,
+}
+
+// The whole simulation stack is `Send` (entities, link model and observer
+// all carry `Send` bounds), so simulations can migrate across the sweep
+// engine's worker threads. Compile-time proof:
+#[allow(dead_code)]
+fn _assert_simulation_send<M: Send + 'static>(sim: Simulation<M>) -> impl Send {
+    sim
 }
 
 impl<M: 'static> Default for Simulation<M> {
@@ -106,12 +114,12 @@ impl<M: 'static> Simulation<M> {
     /// Install an observer called for every dispatched event, after the
     /// clock advances to the event's timestamp and before the destination
     /// entity handles it. One observer at a time (last install wins).
-    pub fn set_observer(&mut self, observer: Box<dyn FnMut(&Event<M>)>) {
+    pub fn set_observer(&mut self, observer: Box<dyn FnMut(&Event<M>) + Send>) {
         self.observer = Some(observer);
     }
 
     /// Remove the installed observer, returning it.
-    pub fn take_observer(&mut self) -> Option<Box<dyn FnMut(&Event<M>)>> {
+    pub fn take_observer(&mut self) -> Option<Box<dyn FnMut(&Event<M>) + Send>> {
         self.observer.take()
     }
 
@@ -516,18 +524,17 @@ mod tests {
 
     #[test]
     fn observer_sees_every_event() {
-        use std::cell::RefCell;
-        use std::rc::Rc;
-        let seen: Rc<RefCell<Vec<(f64, EntityId)>>> = Rc::new(RefCell::new(vec![]));
+        use std::sync::{Arc, Mutex};
+        let seen: Arc<Mutex<Vec<(f64, EntityId)>>> = Arc::new(Mutex::new(vec![]));
         let sink = seen.clone();
         let mut sim = Simulation::new();
         sim.add(ping("a", 1, 2, true));
         sim.add(ping("b", 0, 0, false));
         sim.set_observer(Box::new(move |ev: &Event<u32>| {
-            sink.borrow_mut().push((ev.time, ev.dst));
+            sink.lock().unwrap().push((ev.time, ev.dst));
         }));
         sim.run();
-        let seen = seen.borrow();
+        let seen = seen.lock().unwrap();
         assert_eq!(seen.len() as u64, sim.events_processed());
         assert_eq!(seen[0], (1.0, 1));
         assert!(seen.windows(2).all(|w| w[0].0 <= w[1].0), "observer sees time order");

@@ -5,12 +5,18 @@
 //! `repro figures` CLI writes them under `results/`. Absolute values depend
 //! on this reimplementation, but the *shapes* (who wins, saturation points,
 //! crossovers) are asserted against the paper in `rust/tests/`.
+//!
+//! Every multi-cell grid is a [`SweepSpec`] executed by the parallel sweep
+//! engine ([`crate::sweep::run_sweep`]) — there are no hand-rolled scenario
+//! loops here. [`FigureConfig::jobs`] sets the worker count; per-cell
+//! deterministic seeding makes the output identical at any value.
 
 use crate::broker::{ExperimentSpec, Optimization};
 use crate::config::testbed::{mips_per_dollar, wwg_testbed};
 use crate::output::csv::CsvWriter;
-use crate::scenario::{AdvisorKind, Scenario, ScenarioReport};
+use crate::scenario::{AdvisorKind, Scenario};
 use crate::session::GridSession;
+use crate::sweep::{run_sweep, SweepResults, SweepSpec};
 
 /// The paper's §5.3 sweep axes: deadline 100–3600 step 500, budget
 /// 5000–22000 step 1000.
@@ -22,56 +28,84 @@ pub fn paper_budgets() -> Vec<f64> {
     (0..18).map(|i| 5_000.0 + 1_000.0 * i as f64).collect()
 }
 
-/// Sweep configuration: `full` reproduces the paper's exact grid; the
-/// reduced grid keeps CI fast.
+/// Figure-grid configuration: `paper` reproduces the exact §5 grids; the
+/// reduced `quick` grid keeps CI fast.
 #[derive(Debug, Clone)]
-pub struct SweepConfig {
+pub struct FigureConfig {
     pub deadlines: Vec<f64>,
     pub budgets: Vec<f64>,
     pub gridlets: usize,
     pub user_counts: Vec<usize>,
     pub seed: u64,
     pub advisor: AdvisorKind,
+    /// Sweep-engine worker threads (results are identical at any value).
+    pub jobs: usize,
 }
 
-impl SweepConfig {
-    pub fn paper() -> SweepConfig {
-        SweepConfig {
+impl FigureConfig {
+    pub fn paper() -> FigureConfig {
+        FigureConfig {
             deadlines: paper_deadlines(),
             budgets: paper_budgets(),
             gridlets: 200,
             user_counts: vec![1, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
             seed: 27,
             advisor: AdvisorKind::Native,
+            jobs: 1,
         }
     }
 
     /// Reduced grid for tests/quick runs.
-    pub fn quick() -> SweepConfig {
-        SweepConfig {
+    pub fn quick() -> FigureConfig {
+        FigureConfig {
             deadlines: vec![100.0, 1_100.0, 3_100.0],
             budgets: vec![5_000.0, 10_000.0, 22_000.0],
             gridlets: 100,
             user_counts: vec![1, 5, 10],
             seed: 27,
             advisor: AdvisorKind::Native,
+            jobs: 1,
         }
+    }
+
+    /// Worker-thread builder (`1` = serial).
+    pub fn jobs(mut self, jobs: usize) -> FigureConfig {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// The single-user WWG base scenario all single-user figure grids sweep
+    /// over (deadline/budget placeholders — every cell overrides them).
+    fn single_user_base(&self) -> Scenario {
+        Scenario::builder()
+            .resources(wwg_testbed())
+            .user(
+                ExperimentSpec::task_farm(self.gridlets, 10_000.0, 0.10)
+                    .deadline(3_100.0)
+                    .budget(22_000.0)
+                    .optimization(Optimization::Cost),
+            )
+            .seed(self.seed)
+            .advisor(self.advisor.clone())
+            .build()
     }
 }
 
-fn run_single(deadline: f64, budget: f64, cfg: &SweepConfig) -> ScenarioReport {
-    let scenario = Scenario::builder()
-        .resources(wwg_testbed())
-        .user(
-            ExperimentSpec::task_farm(cfg.gridlets, 10_000.0, 0.10)
-                .deadline(deadline)
-                .budget(budget)
-                .optimization(Optimization::Cost),
-        )
-        .seed(cfg.seed)
-        .advisor(cfg.advisor.clone())
-        .build();
-    GridSession::new(&scenario).run_to_completion()
+/// Run a figure grid, panicking with the engine's error on failure (figure
+/// functions return plain CSV; an advisor that cannot initialize is fatal
+/// here exactly as it was for the serial loops).
+fn sweep(spec: &SweepSpec, jobs: usize) -> SweepResults {
+    run_sweep(spec, jobs).unwrap_or_else(|e| panic!("figure sweep failed: {e}"))
+}
+
+/// One (deadline, budget) cell as a plain session run — no worker pool for
+/// a single deterministic cell.
+fn run_single(deadline: f64, budget: f64, cfg: &FigureConfig) -> crate::scenario::ScenarioReport {
+    let mut scenario = cfg.single_user_base();
+    scenario.users[0] = scenario.users[0].clone().deadline(deadline).budget(budget);
+    GridSession::try_new(&scenario)
+        .unwrap_or_else(|e| panic!("figure run failed: {e}"))
+        .run_to_completion()
 }
 
 /// Table 1: the 3-Gridlet time- vs space-shared scheduling scenario.
@@ -145,38 +179,50 @@ pub fn table2() -> CsvWriter {
 
 /// Figures 21–24: the single-user DBC cost-optimization sweep. Returns one
 /// CSV with a row per (deadline, budget) cell carrying all three metrics.
-pub fn figs21_24(cfg: &SweepConfig) -> CsvWriter {
+pub fn figs21_24(cfg: &FigureConfig) -> CsvWriter {
     let mut csv = CsvWriter::new(&[
         "deadline", "budget", "gridlets_done", "time_used", "budget_spent",
     ]);
-    for &d in &cfg.deadlines {
-        for &b in &cfg.budgets {
-            let report = run_single(d, b, cfg);
-            let u = &report.users[0];
-            csv.row_f64(&[
-                d,
-                b,
-                u.gridlets_completed as f64,
-                u.finish_time - u.start_time,
-                u.budget_spent,
-            ]);
-        }
+    // An empty axis is an empty grid (header-only CSV), not a sweep over
+    // the base value.
+    if cfg.deadlines.is_empty() || cfg.budgets.is_empty() {
+        return csv;
+    }
+    let spec = SweepSpec::over(cfg.single_user_base())
+        .deadlines(cfg.deadlines.clone())
+        .budgets(cfg.budgets.clone());
+    let results = sweep(&spec, cfg.jobs);
+    for outcome in &results.outcomes {
+        let u = &outcome.report.users[0];
+        csv.row_f64(&[
+            outcome.cell.deadline.expect("deadline axis"),
+            outcome.cell.budget.expect("budget axis"),
+            u.gridlets_completed as f64,
+            u.finish_time - u.start_time,
+            u.budget_spent,
+        ]);
     }
     csv
 }
 
 /// Figures 25–27: per-resource Gridlet counts vs budget at a fixed deadline
 /// (the paper uses 100 / 1100 / 3100).
-pub fn figs25_27(deadline: f64, cfg: &SweepConfig) -> CsvWriter {
+pub fn figs25_27(deadline: f64, cfg: &FigureConfig) -> CsvWriter {
     let names: Vec<String> = wwg_testbed().iter().map(|r| r.name.clone()).collect();
     let mut header: Vec<&str> = vec!["budget", "all"];
     let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     header.extend(name_refs);
     let mut csv = CsvWriter::new(&header);
-    for &b in &cfg.budgets {
-        let report = run_single(deadline, b, cfg);
-        let u = &report.users[0];
-        let mut row = vec![b, u.gridlets_completed as f64];
+    if cfg.budgets.is_empty() {
+        return csv;
+    }
+    let spec = SweepSpec::over(cfg.single_user_base())
+        .deadlines(vec![deadline])
+        .budgets(cfg.budgets.clone());
+    let results = sweep(&spec, cfg.jobs);
+    for outcome in &results.outcomes {
+        let u = &outcome.report.users[0];
+        let mut row = vec![outcome.cell.budget.expect("budget axis"), u.gridlets_completed as f64];
         for n in &names {
             let done = u
                 .per_resource
@@ -193,7 +239,7 @@ pub fn figs25_27(deadline: f64, cfg: &SweepConfig) -> CsvWriter {
 
 /// Figures 28–32: time-trace of Gridlets completed / committed and budget
 /// spent per resource for one (deadline, budget) cell.
-pub fn figs28_32(deadline: f64, budget: f64, cfg: &SweepConfig) -> CsvWriter {
+pub fn figs28_32(deadline: f64, budget: f64, cfg: &FigureConfig) -> CsvWriter {
     let report = run_single(deadline, budget, cfg);
     let mut csv = CsvWriter::new(&["time", "resource", "completed", "committed", "spent"]);
     for p in &report.users[0].trace {
@@ -211,33 +257,26 @@ pub fn figs28_32(deadline: f64, budget: f64, cfg: &SweepConfig) -> CsvWriter {
 /// Figures 33–38: multi-user competition — mean Gridlets done, termination
 /// time and budget spent per user, for each (users, budget) cell at a fixed
 /// deadline (3100 for Figs 33–35, 10000 for Figs 36–38).
-pub fn figs33_38(deadline: f64, cfg: &SweepConfig) -> CsvWriter {
+pub fn figs33_38(deadline: f64, cfg: &FigureConfig) -> CsvWriter {
     let mut csv = CsvWriter::new(&[
         "users", "budget", "mean_gridlets_done", "mean_termination_time", "mean_budget_spent",
     ]);
-    for &n in &cfg.user_counts {
-        for &b in &cfg.budgets {
-            let scenario = Scenario::builder()
-                .resources(wwg_testbed())
-                .users(
-                    n,
-                    ExperimentSpec::task_farm(cfg.gridlets, 10_000.0, 0.10)
-                        .deadline(deadline)
-                        .budget(b)
-                        .optimization(Optimization::Cost),
-                )
-                .seed(cfg.seed)
-                .advisor(cfg.advisor.clone())
-                .build();
-            let report = GridSession::new(&scenario).run_to_completion();
-            csv.row_f64(&[
-                n as f64,
-                b,
-                report.mean_completed(),
-                report.mean_finish_time(),
-                report.mean_spent(),
-            ]);
-        }
+    if cfg.user_counts.is_empty() || cfg.budgets.is_empty() {
+        return csv;
+    }
+    let spec = SweepSpec::over(cfg.single_user_base())
+        .deadlines(vec![deadline])
+        .budgets(cfg.budgets.clone())
+        .user_counts(cfg.user_counts.clone());
+    let results = sweep(&spec, cfg.jobs);
+    for outcome in &results.outcomes {
+        csv.row_f64(&[
+            outcome.cell.users.expect("users axis") as f64,
+            outcome.cell.budget.expect("budget axis"),
+            outcome.report.mean_completed(),
+            outcome.report.mean_finish_time(),
+            outcome.report.mean_spent(),
+        ]);
     }
     csv
 }
@@ -265,17 +304,30 @@ mod tests {
 
     #[test]
     fn quick_sweep_produces_grid() {
-        let cfg = SweepConfig { gridlets: 20, ..SweepConfig::quick() };
+        let cfg = FigureConfig { gridlets: 20, ..FigureConfig::quick() };
         let csv = figs21_24(&cfg);
         assert_eq!(csv.len(), cfg.deadlines.len() * cfg.budgets.len());
     }
 
     #[test]
+    fn parallel_figures_match_serial() {
+        let cfg = FigureConfig {
+            gridlets: 20,
+            deadlines: vec![100.0, 3_100.0],
+            budgets: vec![5_000.0, 22_000.0],
+            ..FigureConfig::quick()
+        };
+        let serial = figs21_24(&cfg).to_string();
+        let parallel = figs21_24(&cfg.clone().jobs(4)).to_string();
+        assert_eq!(serial, parallel, "figure grids are jobs-invariant");
+    }
+
+    #[test]
     fn resource_selection_columns() {
-        let cfg = SweepConfig {
+        let cfg = FigureConfig {
             gridlets: 20,
             budgets: vec![22_000.0],
-            ..SweepConfig::quick()
+            ..FigureConfig::quick()
         };
         let csv = figs25_27(3_100.0, &cfg).to_string();
         let header = csv.lines().next().unwrap();

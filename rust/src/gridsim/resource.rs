@@ -21,7 +21,7 @@ use crate::des::{Ctx, EntityId, Event};
 /// The policy-specific half of a resource: how Gridlets are multiplexed onto
 /// PEs. Implemented by [`TimeShared`] (Fig 7/8) and [`SpaceShared`]
 /// (Fig 10/11).
-pub trait LocalScheduler: std::fmt::Debug {
+pub trait LocalScheduler: std::fmt::Debug + Send {
     /// Update the background-load availability factor (1 − local load).
     fn set_availability(&mut self, factor: f64, now: f64);
     /// Withhold PEs from grid work (active advance reservations).

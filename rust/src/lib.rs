@@ -19,6 +19,10 @@
 //! * [`scenario`] / [`session`] — declarative scenario description (with
 //!   per-user heterogeneity) and the composable `GridSession` execution
 //!   handle.
+//! * [`sweep`] — declarative parameter grids over a base scenario
+//!   (deadline × budget × users × policy × resource subset × replications)
+//!   executed on a multi-threaded worker pool with deterministic per-cell
+//!   seeding: results are bit-identical at any `--jobs` value.
 //! * [`config`] / [`workload`] — scenario configuration (incl. the WWG
 //!   testbed of Table 2, and a strict JSON loader) and synthetic
 //!   task-farming application generator.
@@ -78,8 +82,9 @@
 //!
 //! Stepped execution is exact: a `run_until` sweep in any increments yields
 //! results bit-identical to one `run_to_completion()`.
-//! [`scenario::run_scenario`] remains as a one-call compatibility shim over
-//! `GridSession` for fire-and-forget runs.
+//! `scenario::run_scenario` remains as a one-call compatibility shim over
+//! `GridSession` for fire-and-forget runs, but is deprecated — build a
+//! session (one call longer) or, for parameter grids, a [`sweep::SweepSpec`].
 
 pub mod broker;
 pub mod config;
@@ -90,5 +95,6 @@ pub mod output;
 pub mod runtime;
 pub mod scenario;
 pub mod session;
+pub mod sweep;
 pub mod util;
 pub mod workload;

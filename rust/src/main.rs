@@ -5,23 +5,29 @@
 //!   table2                         print Table 2 (the WWG testbed)
 //!   run --scenario FILE            run a JSON scenario and report
 //!   run --testbed wwg [...]        run an inline single-user experiment
+//!   sweep --scenario FILE          run a declarative parameter sweep
+//!   sweep --deadlines ... [...]    inline sweep on the WWG testbed
 //!   figures [--set S] [--full]     regenerate paper figures into --out DIR
 //!   selftest                       quick end-to-end smoke run
 //!
-//! Common flags: --advisor native|xla, --seed N, --out DIR.
+//! Common flags: --advisor native|xla, --seed N, --out DIR, --jobs N.
 //! `run` extras: --policies cost,time,... assigns policies per user
 //! round-robin (heterogeneous competition); --watch T runs the simulation
 //! through `GridSession` in T-sized increments, printing a per-broker
-//! progress snapshot after each.
+//! progress snapshot after each. `sweep` executes on a --jobs-sized worker
+//! pool; per-cell deterministic seeding makes its CSV output byte-identical
+//! at any --jobs value.
 
 use anyhow::{anyhow, bail, Result};
 use gridsim::broker::{ExperimentSpec, Optimization};
-use gridsim::config::scenario_file::parse_scenario;
+use gridsim::config::scenario_file::{parse_scenario, parse_sweep};
 use gridsim::config::testbed::wwg_testbed;
 use gridsim::figures;
 use gridsim::output::report;
+use gridsim::output::sweep::{aggregate_csv, long_csv};
 use gridsim::scenario::{AdvisorKind, Scenario, ScenarioReport, UserSpec};
 use gridsim::session::GridSession;
+use gridsim::sweep::{default_jobs, run_sweep, SweepSpec};
 use gridsim::util::cli::Args;
 use std::path::Path;
 
@@ -52,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
         Some("run") => cmd_run(args),
+        Some("sweep") => cmd_sweep(args),
         Some("figures") => cmd_figures(args),
         Some("selftest") => cmd_selftest(args),
         Some(other) => bail!("unknown subcommand {other:?}"),
@@ -77,45 +84,62 @@ fn print_usage() {
                                        are assigned per user, round-robin)\n\
            run ... --watch T           step the run in T-sized time increments,\n\
                                        printing per-broker progress after each\n\
+           sweep --scenario FILE       run the file's declarative \"sweep\" grid\n\
+                                       (plain scenario files work too; axis flags\n\
+                                       below override the file's axes)\n\
+           sweep [--deadlines D1,D2,...] [--budgets B1,...] [--users N1,...]\n\
+                 [--policies P1,...] [--resources R1+R2,R3,...]\n\
+                 [--replications R] [--gridlets N]\n\
+                                       inline sweep on the WWG testbed; writes\n\
+                                       sweep_long.csv + sweep_agg.csv to --out\n\
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|all)\n\
            selftest                    quick end-to-end smoke run\n\
          \n\
-         common flags: --advisor native|xla   --seed N   --out DIR"
+         common flags: --advisor native|xla   --seed N   --out DIR   --jobs N\n\
+         (sweep/figures run on a --jobs worker pool, default = CPU count;\n\
+         output is byte-identical at any --jobs value)"
     );
 }
 
+/// The shared inline-run defaults (gridlets 200, deadline 3100, budget
+/// 22000, the paper's §5 workload shape) — one source for both `repro run`
+/// and the `repro sweep` inline base, so the two cannot drift.
+fn inline_experiment(args: &Args, policy: Optimization) -> Result<ExperimentSpec> {
+    Ok(
+        ExperimentSpec::task_farm(args.flag_usize("gridlets")?.unwrap_or(200), 10_000.0, 0.10)
+            .deadline(args.flag_f64("deadline")?.unwrap_or(3_100.0))
+            .budget(args.flag_f64("budget")?.unwrap_or(22_000.0))
+            .optimization(policy),
+    )
+}
+
+fn inline_seed(args: &Args) -> Result<u64> {
+    Ok(args.flag_usize("seed")?.unwrap_or(27) as u64)
+}
+
+/// The single `--policy` flag (default cost).
+fn policy_flag(args: &Args) -> Result<Optimization> {
+    args.flag("policy").unwrap_or("cost").parse::<Optimization>().map_err(|e| anyhow!(e))
+}
+
 fn build_inline_scenario(args: &Args) -> Result<Scenario> {
-    let deadline = args.flag_f64("deadline")?.unwrap_or(3_100.0);
-    let budget = args.flag_f64("budget")?.unwrap_or(22_000.0);
-    let gridlets = args.flag_usize("gridlets")?.unwrap_or(200);
     let users = args.flag_usize("users")?.unwrap_or(1);
-    let default_policy = Optimization::parse(args.flag("policy").unwrap_or("cost"))
-        .ok_or_else(|| anyhow!("unknown policy"))?;
     // --policies cost,time,... assigns per-user policies round-robin, the
     // simplest heterogeneous competition setup.
-    let policies: Vec<Optimization> = match args.flag("policies") {
-        None => vec![default_policy],
-        Some(list) => list
-            .split(',')
-            .map(|p| {
-                Optimization::parse(p.trim())
-                    .ok_or_else(|| anyhow!("unknown policy {p:?} in --policies"))
-            })
-            .collect::<Result<Vec<_>>>()?,
-    };
+    let default_policy = policy_flag(args)?;
+    let policies: Vec<Optimization> =
+        policies_flag(args)?.unwrap_or_else(|| vec![default_policy]);
     let mut builder = Scenario::builder()
         .resources(wwg_testbed())
-        .seed(args.flag_usize("seed")?.unwrap_or(27) as u64)
+        .seed(inline_seed(args)?)
         .advisor(advisor_kind(args)?);
     for i in 0..users {
-        builder = builder.user(UserSpec::new(
-            ExperimentSpec::task_farm(gridlets, 10_000.0, 0.10)
-                .deadline(deadline)
-                .budget(budget)
-                .optimization(policies[i % policies.len()]),
-        ));
+        builder = builder.user(UserSpec::new(inline_experiment(
+            args,
+            policies[i % policies.len()],
+        )?));
     }
     Ok(builder.build())
 }
@@ -202,14 +226,135 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Comma-separated `--policies` list, with the accepted values in the error.
+fn policies_flag(args: &Args) -> Result<Option<Vec<Optimization>>> {
+    args.flag_list("policies", "policies (cost|time|cost-time|none)")
+}
+
+/// Worker-pool size: `--jobs N`, defaulting to the CPU count.
+fn jobs_flag(args: &Args) -> Result<usize> {
+    match args.flag_usize("jobs")? {
+        Some(0) => bail!("--jobs expects a positive worker count"),
+        Some(n) => Ok(n),
+        None => Ok(default_jobs()),
+    }
+}
+
+/// Build the sweep spec for `repro sweep`: a scenario file (its `"sweep"`
+/// section is optional — a plain file is a zero-axis sweep), or inline axes
+/// over the WWG testbed. Axis flags given on the command line override the
+/// file's axes (same rule as --seed and --advisor: CLI wins only when
+/// explicitly given).
+fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
+    let mut spec = if let Some(path) = args.flag("scenario") {
+        // These flags configure the inline base's single user; silently
+        // dropping them against a file (which defines its own users) would
+        // betray the loader's no-ignored-input discipline.
+        for flag in ["gridlets", "deadline", "budget", "policy"] {
+            if args.flag(flag).is_some() {
+                bail!(
+                    "--{flag} only applies to the inline base; with --scenario, \
+                     set it in the file's \"users\" section instead"
+                );
+            }
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
+        let mut spec = parse_sweep(&text)?;
+        if args.flag("advisor").is_some() {
+            spec.base.advisor = advisor_kind(args)?;
+        }
+        if let Some(seed) = args.flag_usize("seed")? {
+            spec.base.seed = seed as u64;
+        }
+        spec
+    } else {
+        // Inline base: one user on the WWG testbed, sharing `repro run`'s
+        // inline defaults. Unlike `run`, the sweep's --users/--policies
+        // flags are *axes* (lists), so the base is always single-user;
+        // cells override per-axis.
+        let base = Scenario::builder()
+            .resources(wwg_testbed())
+            .user(inline_experiment(args, policy_flag(args)?)?)
+            .seed(inline_seed(args)?)
+            .advisor(advisor_kind(args)?)
+            .build();
+        SweepSpec::over(base)
+    };
+    if let Some(ds) = args.flag_f64_list("deadlines")? {
+        spec = spec.deadlines(ds);
+    }
+    if let Some(bs) = args.flag_f64_list("budgets")? {
+        spec = spec.budgets(bs);
+    }
+    if let Some(us) = args.flag_usize_list("users")? {
+        spec = spec.user_counts(us);
+    }
+    if let Some(policies) = policies_flag(args)? {
+        spec = spec.policies(policies);
+    }
+    // Subsets separate resources with `+` inside one subset, `,` between
+    // subsets: `--resources R8,R8+R4,R0+R1+R2`.
+    if let Some(list) = args.flag("resources") {
+        let subsets: Vec<Vec<String>> = list
+            .split(',')
+            .map(|subset| subset.split('+').map(|n| n.trim().to_string()).collect())
+            .collect();
+        spec = spec.resource_subsets(subsets);
+    }
+    if let Some(r) = args.flag_usize("replications")? {
+        spec = spec.replications(r);
+    }
+    Ok(spec)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let spec = build_sweep_spec(args)?;
+    let jobs = jobs_flag(args)?;
+    let out = Path::new(args.flag("out").unwrap_or("results")).to_path_buf();
+    eprintln!(
+        "sweep: {} cells ({} users base, {} resources) on {} worker(s)",
+        spec.cell_count(),
+        spec.base.users.len(),
+        spec.base.resources.len(),
+        jobs.min(spec.cell_count().max(1)),
+    );
+    let results = run_sweep(&spec, jobs)?;
+    let long = long_csv(&spec, &results);
+    let agg = aggregate_csv(&spec, &results);
+    let long_path = out.join("sweep_long.csv");
+    let agg_path = out.join("sweep_agg.csv");
+    long.write_to(&long_path)?;
+    agg.write_to(&agg_path)?;
+    println!(
+        "swept {} cells in {:.3}s on {} worker(s): {} events total ({:.0} ev/s)",
+        results.outcomes.len(),
+        results.wall_secs,
+        results.jobs,
+        results.total_events(),
+        results.total_events() as f64 / results.wall_secs.max(1e-9),
+    );
+    let unfinished = results.cells_with_unfinished();
+    if unfinished > 0 {
+        println!(
+            "note: {unfinished} cell(s) had users that did not finish \
+             (marked finished=0 in the long CSV)"
+        );
+    }
+    println!("wrote {}", long_path.display());
+    println!("wrote {}", agg_path.display());
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
     let out = Path::new(args.flag("out").unwrap_or("results")).to_path_buf();
     let mut cfg = if args.has_switch("full") {
-        figures::SweepConfig::paper()
+        figures::FigureConfig::paper()
     } else {
-        figures::SweepConfig::quick()
+        figures::FigureConfig::quick()
     };
     cfg.advisor = advisor_kind(args)?;
+    cfg = cfg.jobs(jobs_flag(args)?);
     if let Some(seed) = args.flag_usize("seed")? {
         cfg.seed = seed as u64;
     }

@@ -1,7 +1,9 @@
-//! Result output: CSV series writers and the textual report writer
-//! (the paper's user-defined `ReportWriter` entity, realized post-run).
+//! Result output: CSV series writers, the textual report writer (the
+//! paper's user-defined `ReportWriter` entity, realized post-run), and the
+//! long-format/aggregate sweep writers.
 
 pub mod csv;
 pub mod report;
+pub mod sweep;
 
 pub use csv::CsvWriter;

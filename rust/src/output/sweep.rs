@@ -1,0 +1,173 @@
+//! Long-format and aggregate CSV writers for sweep results.
+//!
+//! Two shapes, both in cell-index order and free of wall-clock data, so the
+//! bytes depend only on the spec (the determinism contract of
+//! [`crate::sweep::engine::run_sweep`]):
+//!
+//! * **long** — one row per (cell, user): the tidy-data shape plotting
+//!   tools ingest directly. Effective per-user deadline/budget come from the
+//!   broker's [`crate::broker::ExperimentResult`] (absolute, after Eq 1–2),
+//!   so factor-specified constraints show their resolved values.
+//! * **aggregate** — one row per cell with per-user means: the shape of the
+//!   paper's multi-user figures (33–38).
+
+use crate::broker::Optimization;
+use crate::output::csv::{trim_float, CsvWriter};
+use crate::sweep::{SweepResults, SweepSpec};
+
+/// Axis-coordinate columns shared by both writers.
+const AXIS_COLS: [&str; 7] =
+    ["cell", "resources", "policy", "users", "deadline", "budget", "replication"];
+
+fn axis_fields(spec: &SweepSpec, results: &SweepResults, i: usize) -> Vec<String> {
+    let outcome = &results.outcomes[i];
+    let cell = &outcome.cell;
+    vec![
+        cell.index.to_string(),
+        spec.subset_label(cell),
+        match cell.policy {
+            Some(p) => p.label().to_string(),
+            None => base_policy_label(spec),
+        },
+        outcome.report.users.len().to_string(),
+        cell.deadline.map(trim_float).unwrap_or_else(|| "base".into()),
+        cell.budget.map(trim_float).unwrap_or_else(|| "base".into()),
+        cell.replication.to_string(),
+    ]
+}
+
+/// Label for the policy axis when unswept: the base users' shared policy,
+/// or `"mixed"` for heterogeneous bases.
+fn base_policy_label(spec: &SweepSpec) -> String {
+    let mut labels = spec.base.users.iter().map(|u| u.experiment.optimization);
+    let first: Optimization = match labels.next() {
+        Some(p) => p,
+        None => return "mixed".into(),
+    };
+    if labels.all(|p| p == first) {
+        first.label().to_string()
+    } else {
+        "mixed".into()
+    }
+}
+
+/// One row per (cell, user).
+pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
+    let mut header: Vec<&str> = AXIS_COLS.to_vec();
+    header.extend([
+        "seed",
+        "user",
+        "gridlets_completed",
+        "gridlets_total",
+        "user_deadline",
+        "user_budget",
+        "time_used",
+        "budget_spent",
+        "finished",
+    ]);
+    let mut csv = CsvWriter::new(&header);
+    for (i, outcome) in results.outcomes.iter().enumerate() {
+        let axes = axis_fields(spec, results, i);
+        for (u, result) in outcome.report.users.iter().enumerate() {
+            let mut row = axes.clone();
+            let finished = !outcome.report.unfinished.contains(&u);
+            row.extend([
+                outcome.cell.seed.to_string(),
+                u.to_string(),
+                result.gridlets_completed.to_string(),
+                result.gridlets_total.to_string(),
+                trim_float(result.deadline),
+                trim_float(result.budget),
+                trim_float(result.finish_time - result.start_time),
+                trim_float(result.budget_spent),
+                if finished { "1".into() } else { "0".into() },
+            ]);
+            csv.row(&row);
+        }
+    }
+    csv
+}
+
+/// One row per cell with per-user means (the paper's Figures 33–38 shape).
+pub fn aggregate_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
+    let mut header: Vec<&str> = AXIS_COLS.to_vec();
+    header.extend([
+        "seed",
+        "mean_gridlets_completed",
+        "mean_time_used",
+        "mean_budget_spent",
+        "unfinished_users",
+        "events",
+        "end_time",
+    ]);
+    let mut csv = CsvWriter::new(&header);
+    for (i, outcome) in results.outcomes.iter().enumerate() {
+        let mut row = axis_fields(spec, results, i);
+        let report = &outcome.report;
+        row.extend([
+            outcome.cell.seed.to_string(),
+            trim_float(report.mean_completed()),
+            trim_float(report.mean_finish_time()),
+            trim_float(report.mean_spent()),
+            report.unfinished.len().to_string(),
+            report.events.to_string(),
+            trim_float(report.end_time),
+        ]);
+        csv.row(&row);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::ExperimentSpec;
+    use crate::gridsim::AllocPolicy;
+    use crate::scenario::{ResourceSpec, Scenario};
+    use crate::sweep::run_sweep;
+
+    fn spec() -> SweepSpec {
+        let base = Scenario::builder()
+            .resource(ResourceSpec {
+                name: "R0".into(),
+                arch: "test".into(),
+                os: "linux".into(),
+                machines: 1,
+                pes_per_machine: 2,
+                mips_per_pe: 100.0,
+                policy: AllocPolicy::TimeShared,
+                price: 1.0,
+                time_zone: 0.0,
+                calendar: None,
+            })
+            .user(ExperimentSpec::task_farm(4, 500.0, 0.0).deadline(1e4).budget(1e6))
+            .seed(3)
+            .build();
+        SweepSpec::over(base).budgets(vec![1e6, 5.0]).user_counts(vec![1, 2])
+    }
+
+    #[test]
+    fn long_rows_are_cell_times_users() {
+        let s = spec();
+        let results = run_sweep(&s, 2).unwrap();
+        let csv = long_csv(&s, &results);
+        // Cells: users {1,2} × budgets {1e6, 5}; rows = 1+1+2+2.
+        assert_eq!(csv.len(), 6);
+        let text = csv.to_string();
+        assert!(text.starts_with("cell,resources,policy,users,deadline,budget,replication,"));
+        assert!(text.contains(",all,cost,"), "unswept axes echo base values: {text}");
+    }
+
+    #[test]
+    fn aggregate_rows_are_one_per_cell() {
+        let s = spec();
+        let results = run_sweep(&s, 1).unwrap();
+        let csv = aggregate_csv(&s, &results);
+        assert_eq!(csv.len(), 4);
+        let text = csv.to_string();
+        assert!(text.contains("mean_gridlets_completed"));
+        // The starved-budget cells complete fewer gridlets than the funded
+        // ones; both appear.
+        assert!(text.lines().count() == 5);
+    }
+}

@@ -46,7 +46,10 @@ impl AdvisorInput {
 
 /// An allocation engine. Implementations: [`super::NativeAdvisor`] (pure
 /// Rust) and [`super::XlaAdvisor`] (AOT JAX/Pallas artifact via PJRT).
-pub trait Advisor {
+///
+/// `Send` so brokers (and the sessions holding them) can move between the
+/// sweep engine's worker threads.
+pub trait Advisor: Send {
     /// Desired job count per resource, aligned with `input.resources`.
     /// The sum is ≤ `input.jobs`; allocations respect per-resource deadline
     /// capacity and the global budget.

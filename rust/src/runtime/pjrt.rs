@@ -49,6 +49,14 @@ const NO_XLA: &str = "gridsim was built without the `xla` cargo feature; the PJR
      xla bindings crate, or use the native advisor)";
 
 /// A compiled HLO artifact on the CPU PJRT client.
+///
+/// `Advisor: Send` (the sweep engine moves advisors across worker threads),
+/// so a feature-on build requires `PjrtRuntime: Send`. We deliberately do
+/// NOT assert that with an `unsafe impl` here: the bindings are not
+/// vendored, so their thread-safety cannot be audited in-tree. If the
+/// `xla::PjRtLoadedExecutable` wrapper is not `Send`, the build fails at
+/// `impl Advisor for XlaAdvisor` — audit the bindings and add the impl
+/// there, rather than discovering a data race under `sweep --jobs N`.
 #[cfg(feature = "xla")]
 pub struct PjrtRuntime {
     exe: xla::PjRtLoadedExecutable,

@@ -299,6 +299,11 @@ impl ScenarioReport {
 /// let snap = session.snapshot(); // ...probe per-broker progress...
 /// let report = session.run_to_completion(); // ...and resume.
 /// ```
+#[deprecated(
+    since = "0.2.0",
+    note = "build a `session::GridSession` and call `run_to_completion()` \
+            (or step/observe it) instead"
+)]
 pub fn run_scenario(scenario: &Scenario) -> ScenarioReport {
     crate::session::GridSession::new(scenario).run_to_completion()
 }
@@ -307,6 +312,11 @@ pub fn run_scenario(scenario: &Scenario) -> ScenarioReport {
 mod tests {
     use super::*;
     use crate::broker::Optimization;
+    use crate::session::GridSession;
+
+    fn run(scenario: &Scenario) -> ScenarioReport {
+        GridSession::new(scenario).run_to_completion()
+    }
 
     fn small_resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
         ResourceSpec {
@@ -336,7 +346,7 @@ mod tests {
             )
             .seed(42)
             .build();
-        let report = run_scenario(&scenario);
+        let report = run(&scenario);
         assert_eq!(report.users.len(), 1);
         assert!(report.all_finished());
         let u = &report.users[0];
@@ -362,8 +372,8 @@ mod tests {
                 .seed(7)
                 .build()
         };
-        let a = run_scenario(&build());
-        let b = run_scenario(&build());
+        let a = run(&build());
+        let b = run(&build());
         assert_eq!(a.end_time, b.end_time);
         assert_eq!(a.events, b.events);
         assert_eq!(a.users[0].gridlets_completed, b.users[0].gridlets_completed);
@@ -377,7 +387,7 @@ mod tests {
             .user(ExperimentSpec::task_farm(5, 1_000.0, 0.0).deadline(100.0).budget(0.0))
             .seed(1)
             .build();
-        let report = run_scenario(&scenario);
+        let report = run(&scenario);
         assert_eq!(report.users[0].gridlets_completed, 0);
         assert_eq!(report.users[0].budget_spent, 0.0);
     }
@@ -390,7 +400,7 @@ mod tests {
                 .user(ExperimentSpec::task_farm(40, 1_000.0, 0.10).deadline(d).budget(1e9))
                 .seed(3)
                 .build();
-            run_scenario(&scenario).users[0].gridlets_completed
+            run(&scenario).users[0].gridlets_completed
         };
         let tight = run_with_deadline(30.0);
         let loose = run_with_deadline(10_000.0);

@@ -36,30 +36,31 @@ use crate::gridsim::{
 };
 use crate::runtime::{Advisor, AdvisorInput, NativeAdvisor, XlaAdvisor};
 use crate::scenario::{AdvisorKind, NetworkSpec, Scenario, ScenarioReport};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// Shared advisor handle: brokers with the same advisor kind reuse one
 /// engine instance (one compiled XLA executable compiles once, executes on
-/// each scheduling tick).
+/// each scheduling tick). `Arc<Mutex<_>>` rather than `Rc<RefCell<_>>` so a
+/// whole session stays `Send` — the sharing is *within* one session, so the
+/// lock is never contended.
 struct SharedAdvisor {
-    inner: Rc<RefCell<dyn Advisor>>,
+    inner: Arc<Mutex<dyn Advisor>>,
     label: &'static str,
 }
 
 impl Advisor for SharedAdvisor {
     fn advise(&mut self, input: &AdvisorInput) -> Vec<usize> {
-        self.inner.borrow_mut().advise(input)
+        self.inner.lock().expect("advisor lock").advise(input)
     }
     fn name(&self) -> &'static str {
         self.label
     }
 }
 
-fn make_shared_advisor(kind: &AdvisorKind) -> anyhow::Result<Rc<RefCell<dyn Advisor>>> {
+fn make_shared_advisor(kind: &AdvisorKind) -> anyhow::Result<Arc<Mutex<dyn Advisor>>> {
     Ok(match kind {
-        AdvisorKind::Native => Rc::new(RefCell::new(NativeAdvisor::new())),
-        AdvisorKind::Xla => Rc::new(RefCell::new(XlaAdvisor::load_default().map_err(|e| {
+        AdvisorKind::Native => Arc::new(Mutex::new(NativeAdvisor::new())),
+        AdvisorKind::Xla => Arc::new(Mutex::new(XlaAdvisor::load_default().map_err(|e| {
             e.context(
                 "cannot initialize the XLA advisor (run `make artifacts` and build with \
                  `--features xla`)",
@@ -141,10 +142,21 @@ pub struct SessionSnapshot {
 
 /// A live simulation of one [`Scenario`]: build once, then step, observe
 /// and finally report. See the module docs for the lifecycle.
+///
+/// Sessions are `Send` (asserted below): the sweep engine hands whole
+/// sessions to worker threads, and embedders can run sessions on background
+/// threads.
 pub struct GridSession {
     sim: Simulation<Msg>,
     user_ids: Vec<EntityId>,
     broker_ids: Vec<EntityId>,
+}
+
+// Compile-time proof that the full session stack (kernel, entities, broker
+// policies, advisors, link model) is `Send`.
+#[allow(dead_code)]
+fn _assert_session_send(session: GridSession) -> impl Send {
+    session
 }
 
 impl GridSession {
@@ -193,8 +205,8 @@ impl GridSession {
         }
 
         // One shared engine instance per advisor kind actually in use.
-        let mut native: Option<Rc<RefCell<dyn Advisor>>> = None;
-        let mut xla: Option<Rc<RefCell<dyn Advisor>>> = None;
+        let mut native: Option<Arc<Mutex<dyn Advisor>>> = None;
+        let mut xla: Option<Arc<Mutex<dyn Advisor>>> = None;
 
         let mut user_ids = Vec::with_capacity(scenario.users.len());
         let mut broker_ids = Vec::with_capacity(scenario.users.len());
@@ -280,8 +292,10 @@ impl GridSession {
     }
 
     /// Stream every dispatched event to `observer` (called after the clock
-    /// advances, before the destination entity handles the event).
-    pub fn set_observer(&mut self, observer: Box<dyn FnMut(&Event<Msg>)>) {
+    /// advances, before the destination entity handles the event). The
+    /// observer is `Send` so an observing session remains movable across
+    /// threads.
+    pub fn set_observer(&mut self, observer: Box<dyn FnMut(&Event<Msg>) + Send>) {
         self.sim.set_observer(observer);
     }
 
@@ -345,7 +359,7 @@ mod tests {
     use super::*;
     use crate::broker::{BrokerConfig, ExperimentSpec, Optimization};
     use crate::gridsim::AllocPolicy;
-    use crate::scenario::{run_scenario, ResourceSpec, UserSpec};
+    use crate::scenario::{ResourceSpec, UserSpec};
 
     fn small_resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
         ResourceSpec {
@@ -385,10 +399,13 @@ mod tests {
             .build()
     }
 
+    // The one caller allowed to keep exercising the deprecated shim: this
+    // test IS the shim's compatibility contract.
     #[test]
+    #[allow(deprecated)]
     fn session_matches_run_scenario_shim() {
         let scenario = two_user_scenario();
-        let via_shim = run_scenario(&scenario);
+        let via_shim = crate::scenario::run_scenario(&scenario);
         let via_session = GridSession::new(&scenario).run_to_completion();
         assert_eq!(via_shim.end_time.to_bits(), via_session.end_time.to_bits());
         assert_eq!(via_shim.events, via_session.events);
@@ -449,13 +466,15 @@ mod tests {
 
     #[test]
     fn observer_counts_every_event() {
-        use std::cell::Cell;
-        let count = Rc::new(Cell::new(0u64));
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let count = Arc::new(AtomicU64::new(0));
         let sink = count.clone();
         let mut session = GridSession::new(&two_user_scenario());
-        session.set_observer(Box::new(move |_ev| sink.set(sink.get() + 1)));
+        session.set_observer(Box::new(move |_ev| {
+            sink.fetch_add(1, Ordering::Relaxed);
+        }));
         let report = session.run_to_completion();
-        assert_eq!(count.get(), report.events);
+        assert_eq!(count.load(Ordering::Relaxed), report.events);
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! The sweep execution engine: a fixed-size worker pool over independent
+//! cells.
+//!
+//! Workers pull the next unclaimed cell index from an atomic counter, build
+//! the cell's [`crate::session::GridSession`] locally, run it to completion
+//! and write the outcome into the cell's own slot. Collection is by cell
+//! index, so the result vector — and any CSV derived from it — is identical
+//! for any worker count and any completion order. There is no inter-cell
+//! communication: the only shared state is the claim counter and the
+//! per-cell result slots.
+
+use super::{SweepCell, SweepSpec};
+use crate::scenario::ScenarioReport;
+use crate::session::GridSession;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One executed cell: the grid point plus its simulation report.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    pub cell: SweepCell,
+    pub report: ScenarioReport,
+}
+
+/// All outcomes of one sweep, in cell-index order.
+#[derive(Debug, Clone)]
+pub struct SweepResults {
+    /// One outcome per cell, ordered by [`SweepCell::index`].
+    pub outcomes: Vec<CellOutcome>,
+    /// Worker threads actually used.
+    pub jobs: usize,
+    /// Wall-clock seconds for the whole sweep. Diagnostic only — never part
+    /// of the CSV output (which must be byte-identical across runs).
+    pub wall_secs: f64,
+}
+
+impl SweepResults {
+    /// Total events dispatched across all cells (scale metric).
+    pub fn total_events(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.report.events).sum()
+    }
+
+    /// Cells in which at least one user did not finish.
+    pub fn cells_with_unfinished(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.report.all_finished()).count()
+    }
+}
+
+/// Default worker count: one per available core.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Execute every cell of `spec` on `jobs` worker threads (clamped to
+/// `1..=cell_count`). Results come back in cell-index order regardless of
+/// scheduling; with deterministic per-cell seeds the outcome is therefore
+/// bit-identical for any `jobs` value.
+pub fn run_sweep(spec: &SweepSpec, jobs: usize) -> Result<SweepResults> {
+    spec.validate()?;
+    let cells = spec.cells();
+    let jobs = jobs.clamp(1, cells.len().max(1));
+    let next = AtomicUsize::new(0);
+    // One failed cell fails the whole sweep, so workers stop claiming new
+    // cells as soon as any cell errors (in-flight cells finish) instead of
+    // burning CPU on results that would be discarded.
+    let abort = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<Result<CellOutcome>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+
+    let start = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let outcome = run_cell(spec, &cells[i]);
+                if outcome.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                *slots[i].lock().expect("cell slot lock") = Some(outcome);
+            });
+        }
+    });
+    let wall_secs = start.elapsed().as_secs_f64();
+
+    let mut collected: Vec<Option<Result<CellOutcome>>> = Vec::with_capacity(cells.len());
+    for slot in slots {
+        collected.push(slot.into_inner().expect("cell slot lock"));
+    }
+    // Surface the real cell error, not a hole left by the abort.
+    if let Some((i, result)) = collected
+        .iter_mut()
+        .enumerate()
+        .find(|(_, r)| matches!(r, Some(Err(_))))
+    {
+        let err = result.take().expect("matched Some").expect_err("matched Err");
+        return Err(err.context(format!("sweep cell {i}")));
+    }
+    let mut outcomes = Vec::with_capacity(cells.len());
+    for (i, slot) in collected.into_iter().enumerate() {
+        match slot {
+            Some(Ok(outcome)) => outcomes.push(outcome),
+            Some(Err(_)) => unreachable!("error cells returned above"),
+            None => panic!("sweep cell {i} was never executed"),
+        }
+    }
+    Ok(SweepResults { outcomes, jobs, wall_secs })
+}
+
+fn run_cell(spec: &SweepSpec, cell: &SweepCell) -> Result<CellOutcome> {
+    let scenario = spec.scenario_for(cell);
+    let report = GridSession::try_new(&scenario)?.run_to_completion();
+    Ok(CellOutcome { cell: cell.clone(), report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::{ExperimentSpec, Optimization};
+    use crate::gridsim::AllocPolicy;
+    use crate::scenario::{ResourceSpec, Scenario};
+
+    fn base() -> Scenario {
+        Scenario::builder()
+            .resource(ResourceSpec {
+                name: "R0".into(),
+                arch: "test".into(),
+                os: "linux".into(),
+                machines: 1,
+                pes_per_machine: 2,
+                mips_per_pe: 100.0,
+                policy: AllocPolicy::TimeShared,
+                price: 1.0,
+                time_zone: 0.0,
+                calendar: None,
+            })
+            .user(
+                ExperimentSpec::task_farm(6, 500.0, 0.10)
+                    .deadline(5_000.0)
+                    .budget(1e6)
+                    .optimization(Optimization::Cost),
+            )
+            .seed(5)
+            .build()
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_cell_for_cell() {
+        let spec = SweepSpec::over(base())
+            .deadlines(vec![50.0, 5_000.0])
+            .budgets(vec![10.0, 1e6])
+            .replications(2);
+        let serial = run_sweep(&spec, 1).unwrap();
+        let parallel = run_sweep(&spec, 4).unwrap();
+        assert_eq!(serial.outcomes.len(), 8);
+        assert_eq!(parallel.outcomes.len(), 8);
+        for (a, b) in serial.outcomes.iter().zip(&parallel.outcomes) {
+            assert_eq!(a.cell.index, b.cell.index);
+            assert_eq!(a.cell.seed, b.cell.seed);
+            assert_eq!(a.report.events, b.report.events);
+            assert_eq!(a.report.end_time.to_bits(), b.report.end_time.to_bits());
+            for (u, v) in a.report.users.iter().zip(&b.report.users) {
+                assert_eq!(u.gridlets_completed, v.gridlets_completed);
+                assert_eq!(u.budget_spent.to_bits(), v.budget_spent.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_jobs_clamp_to_cell_count() {
+        let spec = SweepSpec::over(base());
+        let results = run_sweep(&spec, 64).unwrap();
+        assert_eq!(results.jobs, 1, "1 cell → 1 worker");
+        assert_eq!(results.outcomes.len(), 1);
+        assert!(results.outcomes[0].report.all_finished());
+    }
+
+    #[test]
+    fn invalid_spec_errors_before_running() {
+        let spec = SweepSpec::over(base()).resource_subsets(vec![vec!["nope".into()]]);
+        let err = run_sweep(&spec, 2).unwrap_err();
+        assert!(err.to_string().contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn replications_produce_distinct_but_reproducible_workloads() {
+        let spec = SweepSpec::over(base()).replications(3);
+        let a = run_sweep(&spec, 2).unwrap();
+        let b = run_sweep(&spec, 3).unwrap();
+        // Replications differ from each other (different seeds)...
+        assert_eq!(a.outcomes.len(), 3);
+        let t0 = a.outcomes[0].report.end_time.to_bits();
+        let t1 = a.outcomes[1].report.end_time.to_bits();
+        assert_ne!(a.outcomes[0].cell.seed, a.outcomes[1].cell.seed);
+        // (end times may coincide by chance, so only assert seed difference
+        // and cross-run stability)
+        let _ = (t0, t1);
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.report.events, y.report.events);
+            assert_eq!(x.report.end_time.to_bits(), y.report.end_time.to_bits());
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! Parameter sweeps as data — the paper's "different scenarios such as
+//! varying number of resources and users" (§5, Figures 21–38) expressed as a
+//! declarative grid instead of hand-rolled nested loops.
+//!
+//! A [`SweepSpec`] names a base [`Scenario`] plus cartesian axes (deadline,
+//! budget, user count, scheduling policy, resource subset, replications).
+//! [`SweepSpec::cells`] expands the grid into independent [`SweepCell`]s in
+//! a fixed row-major order, and [`engine::run_sweep`] executes them on a
+//! fixed-size `std::thread` worker pool. Three properties make sweeps
+//! reproducible:
+//!
+//! 1. **Pure cell expansion** — a cell is a value; materializing its
+//!    [`Scenario`] ([`SweepSpec::scenario_for`]) touches no global state.
+//! 2. **Deterministic seeding** — a cell's RNG seed depends only on the base
+//!    seed and the replication index ([`replication_seed`]); cells that vary
+//!    only in parameter axes share the base seed (common random numbers, the
+//!    standard variance-reduction discipline for simulation experiments).
+//! 3. **Index-ordered collection** — workers write results into the cell's
+//!    own slot, so output order never depends on thread count or completion
+//!    order. The same spec produces byte-identical CSV at any `--jobs`
+//!    (proven by `rust/tests/sweep_determinism.rs`).
+
+pub mod engine;
+
+pub use engine::{default_jobs, run_sweep, CellOutcome, SweepResults};
+
+use crate::broker::Optimization;
+use crate::scenario::{Scenario, UserSpec};
+use anyhow::{bail, Result};
+
+/// A declarative parameter sweep over a base scenario.
+///
+/// Every axis left empty keeps the base scenario's value; a non-empty axis
+/// overrides it for each listed value. The grid is the cartesian product of
+/// all non-empty axes times `replications`.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// The scenario every cell starts from (cloned, then overridden).
+    pub base: Scenario,
+    /// Absolute deadline override, applied to every user in the cell.
+    pub deadlines: Vec<f64>,
+    /// Absolute budget override, applied to every user in the cell.
+    pub budgets: Vec<f64>,
+    /// User-count override: the cell gets `n` users cloned round-robin from
+    /// the base scenario's user list (for a single-user base this is the
+    /// paper's §5.4 "n identical competing users").
+    pub user_counts: Vec<usize>,
+    /// Scheduling-policy override, applied to every user in the cell.
+    pub policies: Vec<Optimization>,
+    /// Resource subsets by name; each entry restricts the cell to the named
+    /// subset of the base resources (base order preserved).
+    pub resource_subsets: Vec<Vec<String>>,
+    /// Independent replications per grid point (≥ 1). Replication `r` runs
+    /// with [`replication_seed`]`(base.seed, r)`.
+    pub replications: usize,
+}
+
+impl SweepSpec {
+    /// A sweep with no axes: exactly one cell, the base scenario itself.
+    pub fn over(base: Scenario) -> SweepSpec {
+        SweepSpec {
+            base,
+            deadlines: Vec::new(),
+            budgets: Vec::new(),
+            user_counts: Vec::new(),
+            policies: Vec::new(),
+            resource_subsets: Vec::new(),
+            replications: 1,
+        }
+    }
+
+    /// Axis builder: deadline values.
+    pub fn deadlines(mut self, values: Vec<f64>) -> SweepSpec {
+        self.deadlines = values;
+        self
+    }
+
+    /// Axis builder: budget values.
+    pub fn budgets(mut self, values: Vec<f64>) -> SweepSpec {
+        self.budgets = values;
+        self
+    }
+
+    /// Axis builder: user counts.
+    pub fn user_counts(mut self, values: Vec<usize>) -> SweepSpec {
+        self.user_counts = values;
+        self
+    }
+
+    /// Axis builder: scheduling policies.
+    pub fn policies(mut self, values: Vec<Optimization>) -> SweepSpec {
+        self.policies = values;
+        self
+    }
+
+    /// Axis builder: resource subsets (by resource name).
+    pub fn resource_subsets(mut self, subsets: Vec<Vec<String>>) -> SweepSpec {
+        self.resource_subsets = subsets;
+        self
+    }
+
+    /// Axis builder: replications per grid point.
+    pub fn replications(mut self, n: usize) -> SweepSpec {
+        self.replications = n;
+        self
+    }
+
+    /// Number of cells the spec expands to.
+    pub fn cell_count(&self) -> usize {
+        fn axis_len<T>(v: &[T]) -> usize {
+            v.len().max(1)
+        }
+        axis_len(&self.resource_subsets)
+            * axis_len(&self.policies)
+            * axis_len(&self.user_counts)
+            * axis_len(&self.deadlines)
+            * axis_len(&self.budgets)
+            * self.replications.max(1)
+    }
+
+    /// Reject impossible specs with a did-I-mean-that error instead of a
+    /// mid-sweep panic: unknown resource names, empty subsets, zero user
+    /// counts, zero replications.
+    pub fn validate(&self) -> Result<()> {
+        // The scenario builder already asserts these, but `Scenario` fields
+        // are public — a hand-built base must not panic mid-sweep instead
+        // (`scenario_for` indexes `base.users` cyclically).
+        if self.base.users.is_empty() {
+            bail!("sweep: base scenario has no users");
+        }
+        if self.base.resources.is_empty() {
+            bail!("sweep: base scenario has no resources");
+        }
+        if self.replications == 0 {
+            bail!("sweep: \"replications\" must be >= 1");
+        }
+        if let Some(n) = self.user_counts.iter().find(|&&n| n == 0) {
+            bail!("sweep: user count must be >= 1, got {n}");
+        }
+        for (i, subset) in self.resource_subsets.iter().enumerate() {
+            if subset.is_empty() {
+                bail!("sweep: resource subset #{i} is empty");
+            }
+            for name in subset {
+                if !self.base.resources.iter().any(|r| &r.name == name) {
+                    let known: Vec<&str> =
+                        self.base.resources.iter().map(|r| r.name.as_str()).collect();
+                    bail!(
+                        "sweep: resource subset #{i} names unknown resource {name:?} \
+                         (scenario has: {})",
+                        known.join(", ")
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the grid into cells, row-major over the axes in the fixed
+    /// order *subset → policy → users → deadline → budget → replication*
+    /// (replication varies fastest). The order is part of the output
+    /// contract: cell index == CSV row block, independent of execution.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
+            if values.is_empty() {
+                vec![None]
+            } else {
+                values.iter().copied().map(Some).collect()
+            }
+        }
+        let subsets: Vec<Option<usize>> = if self.resource_subsets.is_empty() {
+            vec![None]
+        } else {
+            (0..self.resource_subsets.len()).map(Some).collect()
+        };
+        let mut cells = Vec::with_capacity(self.cell_count());
+        for &subset in &subsets {
+            for &policy in &axis(&self.policies) {
+                for &users in &axis(&self.user_counts) {
+                    for &deadline in &axis(&self.deadlines) {
+                        for &budget in &axis(&self.budgets) {
+                            for replication in 0..self.replications.max(1) {
+                                cells.push(SweepCell {
+                                    index: cells.len(),
+                                    subset,
+                                    policy,
+                                    users,
+                                    deadline,
+                                    budget,
+                                    replication,
+                                    seed: replication_seed(self.base.seed, replication),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Materialize the scenario for one cell: clone the base, then apply the
+    /// cell's overrides. Pure — no global state, so cells can materialize on
+    /// any worker thread in any order.
+    ///
+    /// Panics on a cell that names an out-of-range subset; run
+    /// [`validate`](Self::validate) first (the engine does).
+    pub fn scenario_for(&self, cell: &SweepCell) -> Scenario {
+        let mut scenario = self.base.clone();
+        scenario.seed = cell.seed;
+        if let Some(i) = cell.subset {
+            let subset = &self.resource_subsets[i];
+            scenario.resources = self
+                .base
+                .resources
+                .iter()
+                .filter(|r| subset.iter().any(|n| n == &r.name))
+                .cloned()
+                .collect();
+        }
+        if let Some(n) = cell.users {
+            scenario.users = (0..n)
+                .map(|i| self.base.users[i % self.base.users.len()].clone())
+                .collect();
+        }
+        for user in &mut scenario.users {
+            apply_user_overrides(user, cell);
+        }
+        scenario
+    }
+
+    /// Label for a cell's resource-subset axis (`"all"` when unswept).
+    pub fn subset_label(&self, cell: &SweepCell) -> String {
+        match cell.subset {
+            None => "all".to_string(),
+            Some(i) => self.resource_subsets[i].join("+"),
+        }
+    }
+}
+
+fn apply_user_overrides(user: &mut UserSpec, cell: &SweepCell) {
+    if let Some(d) = cell.deadline {
+        user.experiment = user.experiment.clone().deadline(d);
+    }
+    if let Some(b) = cell.budget {
+        user.experiment = user.experiment.clone().budget(b);
+    }
+    if let Some(p) = cell.policy {
+        user.experiment = user.experiment.clone().optimization(p);
+    }
+}
+
+/// One point of the expanded grid. `None` axis values mean "keep the base
+/// scenario's value". Cells are plain values: `Send + Clone`, safe to hand
+/// to any worker.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Position in the fixed expansion order (CSV row block).
+    pub index: usize,
+    /// Index into [`SweepSpec::resource_subsets`].
+    pub subset: Option<usize>,
+    pub policy: Option<Optimization>,
+    pub users: Option<usize>,
+    pub deadline: Option<f64>,
+    pub budget: Option<f64>,
+    /// Replication number, `0..replications`.
+    pub replication: usize,
+    /// The RNG seed this cell runs with (a pure function of the base seed
+    /// and `replication` — never of execution order).
+    pub seed: u64,
+}
+
+/// Seed for replication `r` of a grid point: the `r`-th output of the
+/// SplitMix64 stream seeded at `base` (`r = 0` is the base seed itself).
+///
+/// Replication 0 keeping the base seed means a 1-replication sweep
+/// reproduces the corresponding single runs bit-for-bit. Within one base
+/// seed, replications can never collide (SplitMix64 is a bijection over
+/// distinct states). Distinct base seeds yield distinct whole streams
+/// except for the standard SplitMix64 caveat (bases differing by an exact
+/// multiple of the golden-ratio increment share a shifted stream) — in
+/// particular there is no cheap cross-base collision for adjacent seeds.
+/// Cells that differ only in parameter axes share a seed on purpose:
+/// common random numbers make cross-cell comparisons lower-variance.
+pub fn replication_seed(base: u64, replication: usize) -> u64 {
+    let mut state = base;
+    let mut seed = base;
+    for _ in 0..replication {
+        seed = crate::util::rng::splitmix64(&mut state);
+    }
+    seed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::broker::ExperimentSpec;
+    use crate::gridsim::AllocPolicy;
+    use crate::scenario::ResourceSpec;
+
+    fn small_resource(name: &str) -> ResourceSpec {
+        ResourceSpec {
+            name: name.into(),
+            arch: "test".into(),
+            os: "linux".into(),
+            machines: 1,
+            pes_per_machine: 2,
+            mips_per_pe: 100.0,
+            policy: AllocPolicy::TimeShared,
+            price: 1.0,
+            time_zone: 0.0,
+            calendar: None,
+        }
+    }
+
+    fn base() -> Scenario {
+        Scenario::builder()
+            .resource(small_resource("R0"))
+            .resource(small_resource("R1"))
+            .user(ExperimentSpec::task_farm(4, 500.0, 0.0).deadline(1e4).budget(1e6))
+            .seed(9)
+            .build()
+    }
+
+    #[test]
+    fn empty_axes_is_one_cell() {
+        let spec = SweepSpec::over(base());
+        assert_eq!(spec.cell_count(), 1);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].seed, 9, "replication 0 keeps the base seed");
+        let scenario = spec.scenario_for(&cells[0]);
+        assert_eq!(scenario.users.len(), 1);
+        assert_eq!(scenario.resources.len(), 2);
+    }
+
+    #[test]
+    fn expansion_is_row_major_and_indexed() {
+        let spec = SweepSpec::over(base())
+            .deadlines(vec![100.0, 200.0])
+            .budgets(vec![10.0, 20.0, 30.0])
+            .replications(2);
+        assert_eq!(spec.cell_count(), 12);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 12);
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // Replication varies fastest, then budget, then deadline.
+        assert_eq!(cells[0].deadline, Some(100.0));
+        assert_eq!(cells[0].budget, Some(10.0));
+        assert_eq!(cells[0].replication, 0);
+        assert_eq!(cells[1].replication, 1);
+        assert_eq!(cells[2].budget, Some(20.0));
+        assert_eq!(cells[6].deadline, Some(200.0));
+        assert_eq!(cells[6].budget, Some(10.0));
+    }
+
+    #[test]
+    fn replication_seeds_differ_but_are_stable() {
+        assert_eq!(replication_seed(9, 0), 9);
+        let s1 = replication_seed(9, 1);
+        let s2 = replication_seed(9, 2);
+        assert_ne!(s1, 9);
+        assert_ne!(s1, s2);
+        assert_eq!(s1, replication_seed(9, 1), "pure function of (base, r)");
+    }
+
+    #[test]
+    fn overrides_apply_to_every_user() {
+        let spec = SweepSpec::over(base())
+            .deadlines(vec![123.0])
+            .budgets(vec![456.0])
+            .user_counts(vec![3])
+            .policies(vec![Optimization::Time]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 1);
+        let scenario = spec.scenario_for(&cells[0]);
+        assert_eq!(scenario.users.len(), 3);
+        for u in &scenario.users {
+            assert_eq!(u.experiment.deadline, crate::broker::DeadlineSpec::Absolute(123.0));
+            assert_eq!(u.experiment.budget, crate::broker::BudgetSpec::Absolute(456.0));
+            assert_eq!(u.experiment.optimization, Optimization::Time);
+        }
+    }
+
+    #[test]
+    fn resource_subsets_filter_in_base_order() {
+        let spec = SweepSpec::over(base())
+            .resource_subsets(vec![vec!["R1".into(), "R0".into()], vec!["R1".into()]]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2);
+        let full = spec.scenario_for(&cells[0]);
+        // Subset listed R1 before R0, but base order wins.
+        assert_eq!(full.resources[0].name, "R0");
+        assert_eq!(full.resources[1].name, "R1");
+        let only_r1 = spec.scenario_for(&cells[1]);
+        assert_eq!(only_r1.resources.len(), 1);
+        assert_eq!(only_r1.resources[0].name, "R1");
+        assert_eq!(spec.subset_label(&cells[1]), "R1");
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let err = SweepSpec::over(base()).replications(0).validate().unwrap_err();
+        assert!(err.to_string().contains("replications"), "{err}");
+
+        let err = SweepSpec::over(base()).user_counts(vec![0]).validate().unwrap_err();
+        assert!(err.to_string().contains("user count"), "{err}");
+
+        let err = SweepSpec::over(base())
+            .resource_subsets(vec![vec!["R9".into()]])
+            .validate()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("R9") && msg.contains("R0"), "{msg}");
+
+        let err =
+            SweepSpec::over(base()).resource_subsets(vec![vec![]]).validate().unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+    }
+}

@@ -72,6 +72,37 @@ impl Args {
         }
     }
 
+    /// Comma-separated typed list; `what` names the element kind in errors
+    /// (and is the place to spell out the accepted values).
+    pub fn flag_list<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        what: &str,
+    ) -> anyhow::Result<Option<Vec<T>>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|tok| {
+                    tok.trim().parse::<T>().map_err(|_| {
+                        anyhow::anyhow!("--{key} expects comma-separated {what}, got {tok:?}")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+
+    /// Comma-separated numeric list: `--deadlines 100,600,1100`.
+    pub fn flag_f64_list(&self, key: &str) -> anyhow::Result<Option<Vec<f64>>> {
+        self.flag_list(key, "numbers")
+    }
+
+    /// Comma-separated integer list: `--users 1,10,20`.
+    pub fn flag_usize_list(&self, key: &str) -> anyhow::Result<Option<Vec<usize>>> {
+        self.flag_list(key, "integers")
+    }
+
     pub fn has_switch(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
@@ -121,6 +152,15 @@ mod tests {
         assert_eq!(a.flag_usize("n").unwrap(), Some(12));
         assert!(a.flag_f64("bad").is_err());
         assert_eq!(a.flag_f64("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = parse(&["x", "--deadlines", "100, 600,1100", "--users", "1,10", "--bad", "1,x"]);
+        assert_eq!(a.flag_f64_list("deadlines").unwrap(), Some(vec![100.0, 600.0, 1_100.0]));
+        assert_eq!(a.flag_usize_list("users").unwrap(), Some(vec![1, 10]));
+        assert!(a.flag_usize_list("bad").is_err());
+        assert_eq!(a.flag_f64_list("absent").unwrap(), None);
     }
 
     #[test]

@@ -12,7 +12,10 @@ pub struct Rng {
     s: [u64; 4],
 }
 
-fn splitmix64(state: &mut u64) -> u64 {
+/// One SplitMix64 step: advance `state` by the golden-ratio increment and
+/// return the finalized output. `pub(crate)` so seed-derivation helpers
+/// (e.g. `sweep::replication_seed`) share one copy of the constants.
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);

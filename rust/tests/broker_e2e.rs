@@ -3,7 +3,8 @@
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::config::testbed::wwg_testbed;
-use gridsim::scenario::{run_scenario, Scenario};
+use gridsim::scenario::Scenario;
+use gridsim::session::GridSession;
 
 fn run(deadline: f64, budget: f64, opt: Optimization, n: usize) -> gridsim::scenario::ScenarioReport {
     let scenario = Scenario::builder()
@@ -16,7 +17,7 @@ fn run(deadline: f64, budget: f64, opt: Optimization, n: usize) -> gridsim::scen
         )
         .seed(31)
         .build();
-    run_scenario(&scenario)
+    GridSession::new(&scenario).run_to_completion()
 }
 
 #[test]
@@ -148,7 +149,7 @@ fn d_and_b_factors_scale_constraints() {
         )
         .seed(5)
         .build();
-    let report = run_scenario(&scenario);
+    let report = GridSession::new(&scenario).run_to_completion();
     assert_eq!(report.users[0].gridlets_completed, 50);
     // Tiny factors process little or nothing.
     let scenario = Scenario::builder()
@@ -161,7 +162,7 @@ fn d_and_b_factors_scale_constraints() {
         )
         .seed(5)
         .build();
-    let report = run_scenario(&scenario);
+    let report = GridSession::new(&scenario).run_to_completion();
     assert!(
         report.users[0].gridlets_completed < 50,
         "D=B=0 is the infeasible corner"

@@ -3,7 +3,8 @@
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::gridsim::{AllocPolicy, SpacePolicy};
-use gridsim::scenario::{run_scenario, ResourceSpec, Scenario};
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::session::GridSession;
 
 fn spec(name: &str, pes: usize, mips: f64, price: f64, policy: AllocPolicy) -> ResourceSpec {
     let (machines, per) = match policy {
@@ -31,7 +32,7 @@ fn single_gridlet_single_pe() {
         .user(ExperimentSpec::task_farm(1, 1_000.0, 0.0).deadline(100.0).budget(100.0))
         .seed(1)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     assert_eq!(r.users[0].gridlets_completed, 1);
     // 1000 MI / 100 MIPS = 10 time units, 10 G$ at 1 G$/PE-time.
     assert!((r.users[0].budget_spent - 10.0).abs() < 1e-9);
@@ -46,7 +47,7 @@ fn enormous_gridlet_blows_deadline_not_the_simulator() {
         .seed(1)
         .max_time(1e8)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     // Either it was never dispatched (capacity 0 by deadline) or it came
     // back long after the deadline; both are acceptable terminations.
     assert!(r.users[0].gridlets_completed <= 1);
@@ -60,7 +61,7 @@ fn many_tiny_gridlets() {
         .user(ExperimentSpec::task_farm(500, 10.0, 0.0).deadline(1_000.0).budget(1e6))
         .seed(2)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     assert_eq!(r.users[0].gridlets_completed, 500);
 }
 
@@ -75,8 +76,8 @@ fn identical_resources_tie_breaking_is_deterministic() {
             .seed(3)
             .build()
     };
-    let a = run_scenario(&build());
-    let b = run_scenario(&build());
+    let a = GridSession::new(&build()).run_to_completion();
+    let b = GridSession::new(&build()).run_to_completion();
     for (x, y) in a.users[0].per_resource.iter().zip(&b.users[0].per_resource) {
         assert_eq!(x.name, y.name);
         assert_eq!(x.gridlets_completed, y.gridlets_completed);
@@ -98,7 +99,7 @@ fn space_shared_grid_completes_experiment() {
         )
         .seed(4)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     assert_eq!(r.users[0].gridlets_completed, 60);
     // Cost-opt prefers the cheapest cluster (C2).
     let c2 = r.users[0].per_resource.iter().find(|p| p.name == "C2").unwrap();
@@ -118,7 +119,7 @@ fn mixed_time_and_space_shared_grid() {
         )
         .seed(5)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     assert_eq!(r.users[0].gridlets_completed, 100);
     // Time-opt should use both.
     assert!(r.users[0].per_resource.iter().all(|p| p.gridlets_completed > 0));
@@ -140,7 +141,7 @@ fn policy_ablation_orderings_hold() {
             )
             .seed(6)
             .build();
-        let r = run_scenario(&scenario);
+        let r = GridSession::new(&scenario).run_to_completion();
         let u = &r.users[0];
         assert_eq!(u.gridlets_completed, 80, "{opt:?} must finish with slack");
         (u.finish_time - u.start_time, u.budget_spent)
@@ -172,7 +173,7 @@ fn hundred_resources_scale() {
         .user(ExperimentSpec::task_farm(200, 2_000.0, 0.1).deadline(2_000.0).budget(1e6))
         .seed(7)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     assert_eq!(r.users[0].gridlets_completed, 200);
 }
 
@@ -183,7 +184,7 @@ fn zero_variation_workload_is_uniform() {
         .user(ExperimentSpec::task_farm(10, 1_000.0, 0.0).deadline(1_000.0).budget(1e6))
         .seed(8)
         .build();
-    let r = run_scenario(&scenario);
+    let r = GridSession::new(&scenario).run_to_completion();
     assert_eq!(r.users[0].gridlets_completed, 10);
     // All jobs identical → total spend is exactly 10 × (1000/100) × 1 G$.
     assert!((r.users[0].budget_spent - 100.0).abs() < 1e-9);

@@ -4,7 +4,8 @@
 
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::config::testbed::wwg_testbed;
-use gridsim::scenario::{run_scenario, Scenario, ScenarioReport};
+use gridsim::scenario::{Scenario, ScenarioReport};
+use gridsim::session::GridSession;
 
 fn run_users(n_users: usize, deadline: f64, budget: f64, gridlets: usize) -> ScenarioReport {
     let scenario = Scenario::builder()
@@ -18,7 +19,7 @@ fn run_users(n_users: usize, deadline: f64, budget: f64, gridlets: usize) -> Sce
         )
         .seed(17)
         .build();
-    run_scenario(&scenario)
+    GridSession::new(&scenario).run_to_completion()
 }
 
 #[test]

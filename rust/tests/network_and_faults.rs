@@ -6,7 +6,8 @@ use gridsim::gridsim::{
     tags, AllocPolicy, Gridlet, GridInformationService, GridResource, MachineList, Msg,
     ResourceCalendar, ResourceCharacteristics,
 };
-use gridsim::scenario::{run_scenario, NetworkSpec, ResourceSpec, Scenario};
+use gridsim::scenario::{NetworkSpec, ResourceSpec, Scenario};
+use gridsim::session::GridSession;
 
 fn spec(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
     ResourceSpec {
@@ -38,8 +39,9 @@ fn baud_rate_network_slows_completion() {
             .network(network)
             .build()
     };
-    let fast = run_scenario(&build(NetworkSpec::Instantaneous));
-    let slow = run_scenario(&build(NetworkSpec::Baud { default_rate: 9600.0, latency: 0.1 }));
+    let fast = GridSession::new(&build(NetworkSpec::Instantaneous)).run_to_completion();
+    let slow = GridSession::new(&build(NetworkSpec::Baud { default_rate: 9600.0, latency: 0.1 }))
+        .run_to_completion();
     assert_eq!(fast.users[0].gridlets_completed, 10);
     assert_eq!(slow.users[0].gridlets_completed, 10);
     let t_fast = fast.users[0].finish_time - fast.users[0].start_time;
@@ -64,8 +66,8 @@ fn staging_delay_scales_with_file_size() {
             .network(NetworkSpec::Baud { default_rate: 9600.0, latency: 0.0 })
             .build()
     };
-    let small = run_scenario(&build(100));
-    let large = run_scenario(&build(100_000));
+    let small = GridSession::new(&build(100)).run_to_completion();
+    let large = GridSession::new(&build(100_000)).run_to_completion();
     let t_small = small.users[0].finish_time;
     let t_large = large.users[0].finish_time;
     assert!(
@@ -240,8 +242,8 @@ fn local_load_calendar_slows_processing() {
             .seed(4)
             .build()
     };
-    let loaded = run_scenario(&build(with_load));
-    let free = run_scenario(&build(spec("R0", 1, 100.0, 1.0)));
+    let loaded = GridSession::new(&build(with_load)).run_to_completion();
+    let free = GridSession::new(&build(spec("R0", 1, 100.0, 1.0))).run_to_completion();
     let t_loaded = loaded.users[0].finish_time;
     let t_free = free.users[0].finish_time;
     assert!(

@@ -5,7 +5,8 @@
 use gridsim::broker::{ExperimentSpec, Optimization};
 use gridsim::gridsim::{AllocPolicy, SpacePolicy};
 use gridsim::runtime::{Advisor, AdvisorInput, NativeAdvisor, ResourceSnapshot};
-use gridsim::scenario::{run_scenario, ResourceSpec, Scenario};
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::session::GridSession;
 use gridsim::util::prop::{check, forall};
 use gridsim::util::rng::Rng;
 
@@ -59,7 +60,7 @@ fn gen_scenario(rng: &mut Rng) -> Scenario {
 #[test]
 fn prop_budget_never_exceeded() {
     forall(101, 40, gen_scenario, |s| {
-        let report = run_scenario(s);
+        let report = GridSession::new(s).run_to_completion();
         let u = &report.users[0];
         check(
             u.budget_spent <= u.budget + 1e-6,
@@ -71,7 +72,7 @@ fn prop_budget_never_exceeded() {
 #[test]
 fn prop_completions_bounded_by_total() {
     forall(102, 40, gen_scenario, |s| {
-        let report = run_scenario(s);
+        let report = GridSession::new(s).run_to_completion();
         let u = &report.users[0];
         check(
             u.gridlets_completed <= u.gridlets_total,
@@ -83,7 +84,7 @@ fn prop_completions_bounded_by_total() {
 #[test]
 fn prop_experiment_always_terminates() {
     forall(103, 40, gen_scenario, |s| {
-        let report = run_scenario(s);
+        let report = GridSession::new(s).run_to_completion();
         // The shutdown entity must have fired: end time is finite and below
         // the kernel's hard cap.
         check(
@@ -104,7 +105,7 @@ fn prop_ample_budget_and_deadline_completes_all() {
             s
         },
         |s| {
-            let report = run_scenario(s);
+            let report = GridSession::new(s).run_to_completion();
             let u = &report.users[0];
             check(
                 u.gridlets_completed == u.gridlets_total,
@@ -120,7 +121,7 @@ fn prop_ample_budget_and_deadline_completes_all() {
 #[test]
 fn prop_trace_monotone() {
     forall(105, 20, gen_scenario, |s| {
-        let report = run_scenario(s);
+        let report = GridSession::new(s).run_to_completion();
         let mut last: std::collections::HashMap<String, (usize, f64)> = Default::default();
         for p in &report.users[0].trace {
             let e = last.entry(p.resource.clone()).or_insert((0, 0.0));

@@ -182,18 +182,20 @@ fn heterogeneous_users_via_json_loader() {
 
 #[test]
 fn observer_and_snapshot_consistent_with_report() {
-    use std::cell::Cell;
-    use std::rc::Rc;
-    let count = Rc::new(Cell::new(0u64));
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    let count = Arc::new(AtomicU64::new(0));
     let sink = count.clone();
     let mut session = GridSession::new(&wwg_two_user(3, 10));
-    session.set_observer(Box::new(move |_| sink.set(sink.get() + 1)));
+    session.set_observer(Box::new(move |_| {
+        sink.fetch_add(1, Ordering::Relaxed);
+    }));
     session.init();
     // Interleave stepping styles; the observer must see every event once.
     session.run_until(100.0);
     while session.step().is_some() {}
     let report = session.report().into_scenario_report();
-    assert_eq!(count.get(), report.events);
+    assert_eq!(count.load(Ordering::Relaxed), report.events);
     let snap = session.snapshot();
     assert_eq!(snap.events, report.events);
     for (progress, result) in snap.users.iter().zip(&report.users) {

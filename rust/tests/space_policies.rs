@@ -1,0 +1,140 @@
+//! Space-shared `SpacePolicy` queue-ordering coverage at the `SpaceShared`
+//! unit level (paper §3.5): the same arrival sequence driven through FCFS,
+//! SJF and EASY backfilling, asserting the *order* in which jobs start and
+//! complete — not just e2e totals.
+
+use gridsim::gridsim::gridlet::Gridlet;
+use gridsim::gridsim::res_gridlet::ResGridlet;
+use gridsim::gridsim::resource::LocalScheduler;
+use gridsim::gridsim::space_shared::SpaceShared;
+use gridsim::gridsim::SpacePolicy;
+
+fn rg(id: usize, mi: f64, pes: usize) -> ResGridlet {
+    ResGridlet::new(Gridlet::new(id, mi, 0, 0).with_pes(pes), 0.0, id as u64)
+}
+
+/// Drive a scheduler until idle, returning gridlet ids in completion order
+/// (ties broken by collection order — deterministic for a deterministic
+/// scheduler).
+fn completion_order(ss: &mut SpaceShared, mut submissions: Vec<(f64, ResGridlet)>) -> Vec<usize> {
+    submissions.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut done = Vec::new();
+    let mut now = 0.0;
+    let mut pending = submissions.into_iter().peekable();
+    loop {
+        let next_arrival = pending.peek().map(|(t, _)| *t).unwrap_or(f64::INFINITY);
+        let next_completion = ss.next_completion(now).unwrap_or(f64::INFINITY);
+        if next_arrival.is_infinite() && next_completion.is_infinite() {
+            break;
+        }
+        if next_arrival <= next_completion {
+            now = next_arrival;
+            let (t, job) = pending.next().unwrap();
+            ss.submit(job, t);
+        } else {
+            now = next_completion;
+            for finished in ss.collect(now) {
+                done.push(finished.gridlet.id);
+            }
+        }
+    }
+    done
+}
+
+/// One uniprocessor, four queued jobs of decreasing length. FCFS keeps
+/// submission order; SJF sorts by remaining work.
+#[test]
+fn fcfs_and_sjf_order_the_same_queue_differently() {
+    let jobs = || {
+        vec![
+            (0.0, rg(0, 10.0, 1)), // running first either way
+            (0.0, rg(1, 40.0, 1)),
+            (0.0, rg(2, 20.0, 1)),
+            (0.0, rg(3, 5.0, 1)),
+        ]
+    };
+    let mut fcfs = SpaceShared::new(&[1], 1.0, SpacePolicy::Fcfs);
+    assert_eq!(completion_order(&mut fcfs, jobs()), vec![0, 1, 2, 3]);
+
+    let mut sjf = SpaceShared::new(&[1], 1.0, SpacePolicy::Sjf);
+    // Job 0 occupies the PE at t=0; the queue {1,2,3} then drains
+    // shortest-first: 3 (5 MI), 2 (20 MI), 1 (40 MI).
+    assert_eq!(completion_order(&mut sjf, jobs()), vec![0, 3, 2, 1]);
+}
+
+/// SJF ties (equal remaining MI) fall back to queue order — determinism at
+/// the ordering boundary.
+#[test]
+fn sjf_breaks_ties_by_queue_order() {
+    let mut sjf = SpaceShared::new(&[1], 1.0, SpacePolicy::Sjf);
+    let jobs = vec![
+        (0.0, rg(0, 10.0, 1)),
+        (0.0, rg(1, 7.0, 1)),
+        (0.0, rg(2, 7.0, 1)),
+        (0.0, rg(3, 7.0, 1)),
+    ];
+    assert_eq!(completion_order(&mut sjf, jobs), vec![0, 1, 2, 3]);
+}
+
+/// EASY backfilling lets a short narrow job jump a wide queue head iff it
+/// cannot delay the head's reserved start (the shadow time).
+#[test]
+fn easy_backfill_respects_the_shadow_time() {
+    // 2 PEs. J0 (1 PE) runs until t=10. Head J1 needs both PEs → shadow 10.
+    // J2 (1 PE, 5 MI) finishes by t=5 ≤ 10 → backfills ahead of J1.
+    let mut easy = SpaceShared::new(&[2], 1.0, SpacePolicy::BackfillEasy);
+    let jobs = vec![(0.0, rg(0, 10.0, 1)), (0.0, rg(1, 10.0, 2)), (0.0, rg(2, 5.0, 1))];
+    assert_eq!(completion_order(&mut easy, jobs), vec![2, 0, 1]);
+
+    // Same shape, but J2 is long (20 MI): starting it would push the head's
+    // start past the shadow time, so it must wait its turn behind J1.
+    let mut easy = SpaceShared::new(&[2], 1.0, SpacePolicy::BackfillEasy);
+    let jobs = vec![(0.0, rg(0, 10.0, 1)), (0.0, rg(1, 10.0, 2)), (0.0, rg(2, 20.0, 1))];
+    assert_eq!(completion_order(&mut easy, jobs), vec![0, 1, 2]);
+
+    // FCFS on the first workload never reorders: the wide head blocks the
+    // short job even though a PE sits idle until t=10.
+    let mut fcfs = SpaceShared::new(&[2], 1.0, SpacePolicy::Fcfs);
+    let jobs = vec![(0.0, rg(0, 10.0, 1)), (0.0, rg(1, 10.0, 2)), (0.0, rg(2, 5.0, 1))];
+    assert_eq!(completion_order(&mut fcfs, jobs), vec![0, 1, 2]);
+}
+
+/// Backfilled work must not starve the head: after the head finally starts,
+/// later arrivals queue behind it again.
+#[test]
+fn backfill_does_not_starve_the_head() {
+    let mut easy = SpaceShared::new(&[2], 1.0, SpacePolicy::BackfillEasy);
+    // J0 holds 1 PE to t=10; head J1 (2 PEs) waits; J2..J4 are 1-PE jobs of
+    // 5 MI arriving over time — the first backfills (finishes at shadow),
+    // later ones would keep the second PE busy past the shadow and must not
+    // start before the head.
+    let jobs = vec![
+        (0.0, rg(0, 10.0, 1)),
+        (0.0, rg(1, 10.0, 2)),
+        (0.0, rg(2, 5.0, 1)),
+        (6.0, rg(3, 5.0, 1)),
+        (7.0, rg(4, 5.0, 1)),
+    ];
+    let order = completion_order(&mut easy, jobs);
+    // J2 backfills (done t=5); J0 done t=10; head J1 runs 10→20; J3/J4 only
+    // after the head, in queue order.
+    assert_eq!(order, vec![2, 0, 1, 3, 4]);
+    assert_eq!(easy.queue_ids(), Vec::<usize>::new());
+    assert_eq!(easy.exec_ids(), Vec::<usize>::new());
+}
+
+/// The three policies agree on totals for a queue they all can drain — the
+/// ordering differs, conservation does not.
+#[test]
+fn policies_conserve_work() {
+    for policy in [SpacePolicy::Fcfs, SpacePolicy::Sjf, SpacePolicy::BackfillEasy] {
+        let mut ss = SpaceShared::new(&[2], 2.0, policy);
+        let jobs: Vec<(f64, ResGridlet)> =
+            (0..6).map(|i| (i as f64, rg(i, 10.0 + i as f64, 1))).collect();
+        let order = completion_order(&mut ss, jobs);
+        assert_eq!(order.len(), 6, "{policy:?} completed everything");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4, 5], "{policy:?} completed each job once");
+    }
+}

@@ -1,0 +1,116 @@
+//! Determinism regression: the same `SweepSpec` run with `--jobs 1` and
+//! `--jobs 8` (and twice at the same jobs count) produces byte-identical
+//! CSV output — the sweep engine's core contract. Thread count and
+//! completion order must leak into nothing: not cell order, not seeds, not
+//! a single formatted float.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::{AllocPolicy, SpacePolicy};
+use gridsim::output::sweep::{aggregate_csv, long_csv};
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::sweep::{run_sweep, SweepSpec};
+
+fn resource(name: &str, policy: AllocPolicy, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+    let (machines, per) = match policy {
+        AllocPolicy::TimeShared => (1, pes),
+        AllocPolicy::SpaceShared(_) => (pes, 1),
+    };
+    ResourceSpec {
+        name: name.into(),
+        arch: "test".into(),
+        os: "linux".into(),
+        machines,
+        pes_per_machine: per,
+        mips_per_pe: mips,
+        policy,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+/// A grid that exercises every axis: mixed resource kinds, a policy axis,
+/// a user-count axis, replications — 2·2·2·2·2·2 = 64 cells of small runs.
+fn spec() -> SweepSpec {
+    let base = Scenario::builder()
+        .resource(resource("T0", AllocPolicy::TimeShared, 2, 100.0, 1.0))
+        .resource(resource("T1", AllocPolicy::TimeShared, 2, 120.0, 3.0))
+        .resource(resource("S0", AllocPolicy::SpaceShared(SpacePolicy::Fcfs), 3, 80.0, 2.0))
+        .user(
+            ExperimentSpec::task_farm(8, 600.0, 0.10)
+                .deadline(5_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(41)
+        .build();
+    SweepSpec::over(base)
+        .deadlines(vec![40.0, 5_000.0])
+        .budgets(vec![2.0, 1e6])
+        .user_counts(vec![1, 3])
+        .policies(vec![Optimization::Cost, Optimization::Time])
+        .resource_subsets(vec![
+            vec!["T0".into(), "T1".into(), "S0".into()],
+            vec!["T0".into(), "S0".into()],
+        ])
+        .replications(2)
+}
+
+#[test]
+fn csv_output_is_byte_identical_across_jobs_counts() {
+    let spec = spec();
+    assert_eq!(spec.cell_count(), 64);
+
+    let jobs1 = run_sweep(&spec, 1).expect("jobs=1");
+    let jobs8 = run_sweep(&spec, 8).expect("jobs=8");
+    let jobs8_again = run_sweep(&spec, 8).expect("jobs=8 rerun");
+
+    let long1 = long_csv(&spec, &jobs1).to_string();
+    let long8 = long_csv(&spec, &jobs8).to_string();
+    let long8b = long_csv(&spec, &jobs8_again).to_string();
+    assert_eq!(long1, long8, "long CSV differs between --jobs 1 and --jobs 8");
+    assert_eq!(long8, long8b, "long CSV differs between identical --jobs 8 runs");
+
+    let agg1 = aggregate_csv(&spec, &jobs1).to_string();
+    let agg8 = aggregate_csv(&spec, &jobs8).to_string();
+    let agg8b = aggregate_csv(&spec, &jobs8_again).to_string();
+    assert_eq!(agg1, agg8, "aggregate CSV differs between --jobs 1 and --jobs 8");
+    assert_eq!(agg8, agg8b, "aggregate CSV differs between identical --jobs 8 runs");
+
+    // Sanity on the content itself: starved cells complete less than funded
+    // ones, so the grid is not trivially constant.
+    assert!(long1.lines().count() > 64, "one row per (cell, user) plus header");
+    let funded = jobs1
+        .outcomes
+        .iter()
+        .filter(|o| o.cell.budget == Some(1e6) && o.cell.deadline == Some(5_000.0))
+        .map(|o| o.report.mean_completed())
+        .sum::<f64>();
+    let starved = jobs1
+        .outcomes
+        .iter()
+        .filter(|o| o.cell.budget == Some(2.0))
+        .map(|o| o.report.mean_completed())
+        .sum::<f64>();
+    assert!(funded > starved, "funded {funded} vs starved {starved}");
+}
+
+#[test]
+fn engine_reports_match_direct_session_runs() {
+    // A sweep cell must equal the same scenario run directly — the engine
+    // adds orchestration, never simulation semantics.
+    use gridsim::session::GridSession;
+    let spec = spec();
+    let results = run_sweep(&spec, 4).expect("sweep");
+    for outcome in results.outcomes.iter().step_by(13) {
+        let scenario = spec.scenario_for(&outcome.cell);
+        let direct = GridSession::new(&scenario).run_to_completion();
+        assert_eq!(direct.events, outcome.report.events);
+        assert_eq!(direct.end_time.to_bits(), outcome.report.end_time.to_bits());
+        for (a, b) in direct.users.iter().zip(&outcome.report.users) {
+            assert_eq!(a.gridlets_completed, b.gridlets_completed);
+            assert_eq!(a.budget_spent.to_bits(), b.budget_spent.to_bits());
+            assert_eq!(a.finish_time.to_bits(), b.finish_time.to_bits());
+        }
+    }
+}

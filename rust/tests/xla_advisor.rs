@@ -160,7 +160,8 @@ fn scenario_runs_with_xla_advisor_end_to_end() {
     let Some(_) = artifacts_dir() else { return };
     use gridsim::broker::{ExperimentSpec, Optimization};
     use gridsim::gridsim::AllocPolicy;
-    use gridsim::scenario::{AdvisorKind, ResourceSpec, Scenario, run_scenario};
+    use gridsim::scenario::{AdvisorKind, ResourceSpec, Scenario};
+    use gridsim::session::GridSession;
     let resource = ResourceSpec {
         name: "R0".into(),
         arch: "test".into(),
@@ -186,8 +187,8 @@ fn scenario_runs_with_xla_advisor_end_to_end() {
             .advisor(advisor)
             .build()
     };
-    let native = run_scenario(&build(AdvisorKind::Native));
-    let xla = run_scenario(&build(AdvisorKind::Xla));
+    let native = GridSession::new(&build(AdvisorKind::Native)).run_to_completion();
+    let xla = GridSession::new(&build(AdvisorKind::Xla)).run_to_completion();
     assert_eq!(native.users[0].gridlets_completed, 12);
     assert_eq!(
         native.users[0].gridlets_completed,
