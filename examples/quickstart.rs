@@ -12,7 +12,7 @@
 //!    finished experiments from truncated ones.
 //!
 //! For fire-and-forget runs, `session.run_to_completion()` does all three
-//! stages in one call (`run_scenario` is a deprecated shim over it).
+//! stages in one call.
 //!
 //!     cargo run --release --example quickstart
 

@@ -1,7 +1,10 @@
 //! The broker entity — the paper's Fig 18 architecture as an event-driven
 //! state machine:
 //!
-//! 1. experiment interface (user hands over an [`Experiment`]);
+//! 1. experiment interface (user hands over an [`Experiment`]; online
+//!    workloads extend it mid-run with `GRIDLET_ARRIVAL` events — the
+//!    declared totals let Eqs 1–2 and termination account for jobs that
+//!    have not arrived yet);
 //! 2. resource discovery (GIS query) and trading (characteristics queries);
 //! 3. scheduling flow manager: per tick, the policy produces desired job
 //!    totals per resource and the broker rebalances assignments toward them
@@ -522,13 +525,42 @@ impl Entity<Msg> for Broker {
                 };
                 self.user = ev.src;
                 self.started_at = ctx.now();
-                self.total_jobs = exp.gridlets.len();
-                self.total_mi = exp.gridlets.iter().map(|g| g.length_mi).sum();
-                self.unassigned = exp.gridlets.iter().cloned().collect();
+                // Terminate and plan (Eqs 1–2) against the *declared* totals
+                // — for an online workload these cover jobs that have not
+                // arrived yet.
+                self.total_jobs = exp.total_jobs;
+                self.total_mi = exp.total_mi;
+                let mut pool: VecDeque<Gridlet> = exp.gridlets.iter().cloned().collect();
+                // Online arrivals that overtook the (larger, slower on the
+                // wire) experiment message were parked in `unassigned`.
+                pool.extend(self.unassigned.drain(..));
+                self.unassigned = pool;
                 self.experiment = Some(*exp);
                 self.state = State::Discovering;
                 // RESOURCE DISCOVERY (Fig 20 step 1).
                 ctx.send(self.gis, tags::RESOURCE_LIST, None, 16);
+            }
+            tags::GRIDLET_ARRIVAL => {
+                let Msg::Gridlet(g) = ev.take_data() else {
+                    panic!("GRIDLET_ARRIVAL without payload")
+                };
+                match self.state {
+                    // Experiment already terminated (deadline/budget hit and
+                    // drained): the job can no longer be scheduled.
+                    State::Done => {}
+                    // Arrival raced the experiment message on the network:
+                    // park it; the EXPERIMENT handler merges the pool.
+                    State::Idle => self.unassigned.push_back(*g),
+                    _ => {
+                        self.unassigned.push_back(*g);
+                        // Extend the plan mid-flight: re-advise promptly
+                        // with the new work (Draining brokers no longer
+                        // dispatch — the job just counts as unfinished).
+                        if self.state == State::Scheduling {
+                            self.schedule_tick_now(ctx);
+                        }
+                    }
+                }
             }
             tags::RESOURCE_LIST => {
                 let Msg::ResourceIds(ids) = ev.take_data() else {

@@ -1,11 +1,11 @@
 //! `Experiment` — the user's contract with its broker (paper §4.2.1 class
-//! diagram): the application (a set of Gridlets), the optimization strategy,
-//! and deadline/budget constraints given either absolutely or as D-/B-factors
-//! (Eqs 1–2).
+//! diagram): the application (a [`WorkloadSpec`]), the optimization
+//! strategy, and deadline/budget constraints given either absolutely or as
+//! D-/B-factors (Eqs 1–2).
 
 use crate::gridsim::gridlet::Gridlet;
 use crate::gridsim::messages::ResourceInfo;
-use crate::gridsim::random::GridSimRandom;
+use crate::workload::WorkloadSpec;
 
 /// Scheduling optimization strategy (paper §4.2.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -65,37 +65,45 @@ pub enum BudgetSpec {
     Factor(f64),
 }
 
-/// Declarative experiment description (what the scenario config carries).
+/// Declarative experiment description (what the scenario config carries):
+/// the application model plus the user's constraints.
 #[derive(Debug, Clone)]
 pub struct ExperimentSpec {
-    /// Number of Gridlets in the task farm.
-    pub num_gridlets: usize,
-    /// Base job length in MI (before random variation).
-    pub base_length_mi: f64,
-    /// Positive-side random variation factor (paper §5.2 uses 0.10).
-    pub length_variation: f64,
-    /// Input/output staging sizes per job in bytes.
-    pub input_bytes: u64,
-    pub output_bytes: u64,
+    /// The application this user runs (what jobs, when they are released).
+    pub workload: WorkloadSpec,
     pub deadline: DeadlineSpec,
     pub budget: BudgetSpec,
     pub optimization: Optimization,
 }
 
 impl ExperimentSpec {
-    /// The paper's workload: `n` Gridlets of at least `base` MI with a 0–10%
-    /// positive variation (§5.2).
-    pub fn task_farm(n: usize, base: f64, variation: f64) -> ExperimentSpec {
+    /// An experiment over an arbitrary workload, with D=1/B=1 factor
+    /// constraints and cost optimization as the defaults.
+    pub fn new(workload: WorkloadSpec) -> ExperimentSpec {
         ExperimentSpec {
-            num_gridlets: n,
-            base_length_mi: base,
-            length_variation: variation,
-            input_bytes: 1000,
-            output_bytes: 500,
+            workload,
             deadline: DeadlineSpec::Factor(1.0),
             budget: BudgetSpec::Factor(1.0),
             optimization: Optimization::Cost,
         }
+    }
+
+    /// The paper's workload: `n` Gridlets of at least `base` MI with a 0–10%
+    /// positive variation (§5.2).
+    pub fn task_farm(n: usize, base: f64, variation: f64) -> ExperimentSpec {
+        ExperimentSpec::new(WorkloadSpec::task_farm(n, base, variation))
+    }
+
+    /// Replace the workload, keeping the constraints.
+    pub fn workload(mut self, workload: WorkloadSpec) -> ExperimentSpec {
+        self.workload = workload;
+        self
+    }
+
+    /// Override the per-job staging sizes across the whole workload.
+    pub fn staging(mut self, input_bytes: u64, output_bytes: u64) -> ExperimentSpec {
+        self.workload = self.workload.with_staging(input_bytes, output_bytes);
+        self
     }
 
     pub fn deadline(mut self, d: f64) -> ExperimentSpec {
@@ -123,22 +131,26 @@ impl ExperimentSpec {
         self
     }
 
-    /// Materialize the Gridlet list with seeded randomness
-    /// (`real(base, 0, variation)` per §5.2).
-    pub fn materialize(&self, rand: &mut GridSimRandom) -> Vec<Gridlet> {
-        (0..self.num_gridlets)
-            .map(|i| {
-                let len = rand.real(self.base_length_mi, 0.0, self.length_variation);
-                Gridlet::new(i, len, self.input_bytes, self.output_bytes)
-            })
-            .collect()
+    /// Number of jobs the workload declares.
+    pub fn num_gridlets(&self) -> usize {
+        self.workload.declared_jobs()
     }
 }
 
 /// A materialized experiment handed from the user entity to its broker.
+///
+/// `gridlets` holds the jobs available at submission time; under an online
+/// workload more jobs follow as `GRIDLET_ARRIVAL` events. The declared
+/// totals cover the *full* workload — the broker resolves D-/B-factors
+/// (Eqs 1–2) and termination against them, not against the initial batch.
 #[derive(Debug, Clone)]
 pub struct Experiment {
+    /// Jobs released at submission time (the initial batch).
     pub gridlets: Vec<Gridlet>,
+    /// Total jobs across the declared workload (batch + future arrivals).
+    pub total_jobs: usize,
+    /// Total MI across the declared workload (the Eq 1–2 input).
+    pub total_mi: f64,
     pub deadline: DeadlineSpec,
     pub budget: BudgetSpec,
     pub optimization: Optimization,
@@ -252,19 +264,34 @@ mod tests {
 
     #[test]
     fn spec_materializes_seeded_workload() {
+        use crate::gridsim::random::GridSimRandom;
         let spec = ExperimentSpec::task_farm(200, 10_000.0, 0.10);
+        assert_eq!(spec.num_gridlets(), 200);
         let mut r1 = GridSimRandom::new(7);
         let mut r2 = GridSimRandom::new(7);
-        let g1 = spec.materialize(&mut r1);
-        let g2 = spec.materialize(&mut r2);
+        let g1 = spec.workload.materialize(&mut r1);
+        let g2 = spec.workload.materialize(&mut r2);
         assert_eq!(g1.len(), 200);
         for (a, b) in g1.iter().zip(&g2) {
-            assert_eq!(a.length_mi, b.length_mi, "same seed, same workload");
+            assert_eq!(a.gridlet.length_mi, b.gridlet.length_mi, "same seed, same workload");
         }
         // §5.2: at least 10_000 MI, up to +10%.
-        assert!(g1.iter().all(|g| (10_000.0..11_000.0).contains(&g.length_mi)));
+        assert!(g1.iter().all(|r| (10_000.0..11_000.0).contains(&r.gridlet.length_mi)));
         // And actually varied.
-        assert!(g1.iter().any(|g| g.length_mi != g1[0].length_mi));
+        assert!(g1.iter().any(|r| r.gridlet.length_mi != g1[0].gridlet.length_mi));
+    }
+
+    #[test]
+    fn spec_staging_and_workload_builders() {
+        let spec = ExperimentSpec::task_farm(5, 100.0, 0.0).staging(7, 8);
+        let WorkloadSpec::TaskFarm { input_bytes, output_bytes, .. } = spec.workload else {
+            panic!("task farm expected")
+        };
+        assert_eq!((input_bytes, output_bytes), (7, 8));
+        let spec = ExperimentSpec::task_farm(5, 100.0, 0.0)
+            .workload(WorkloadSpec::heavy_tailed(9, 100.0, 0.1, 10.0));
+        assert_eq!(spec.num_gridlets(), 9);
+        assert_eq!(spec.workload.label(), "heavy_tailed");
     }
 
     #[test]

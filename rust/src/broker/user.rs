@@ -1,13 +1,27 @@
 //! `UserEntity` (paper §4.2.1): owns an experiment, hands it to its private
 //! broker, records statistics when the results come back, and notifies the
 //! shutdown entity when it has no more processing requirements.
+//!
+//! The user is also the *release point* of online application models: a
+//! workload whose jobs carry positive release offsets (trace replay, Poisson
+//! or fixed-interval arrivals) is materialized up front, but only the
+//! offset-0 batch ships with the experiment. The rest are held by the user
+//! and streamed to the broker as `GRIDLET_ARRIVAL` events when their release
+//! time comes (internal `USER_TICK` wake-ups), so the broker re-plans
+//! mid-flight instead of assuming a closed batch.
 
 use super::experiment::{Experiment, ExperimentResult, ExperimentSpec};
+use crate::gridsim::gridlet::Gridlet;
 use crate::gridsim::messages::Msg;
 use crate::gridsim::random::GridSimRandom;
 use crate::gridsim::statistics::StatRecord;
 use crate::gridsim::tags;
 use crate::des::{Ctx, Entity, EntityId, Event};
+use std::collections::VecDeque;
+
+/// Wire size of one online job-arrival message (job metadata; input staging
+/// is charged on broker→resource dispatch, as for batch jobs).
+const ARRIVAL_BYTES: u64 = 128;
 
 /// A grid user with one experiment.
 pub struct UserEntity {
@@ -20,6 +34,11 @@ pub struct UserEntity {
     /// Activity model: delay before the experiment is submitted (paper:
     /// users differ in activity rate / time zone).
     submit_delay: f64,
+    /// Jobs not yet released, as (absolute release time, gridlet) in
+    /// release order. A single outstanding `USER_TICK` is armed for the
+    /// front entry and re-armed after each pop — O(1) queued ticks no
+    /// matter how large the online workload is.
+    pending: VecDeque<(f64, Gridlet)>,
     /// Outcome, for post-run inspection.
     pub result: Option<ExperimentResult>,
 }
@@ -40,6 +59,7 @@ impl UserEntity {
             spec,
             seed,
             submit_delay: 0.0,
+            pending: VecDeque::new(),
             result: None,
         }
     }
@@ -54,6 +74,11 @@ impl UserEntity {
         self.submit_delay = delay;
         self
     }
+
+    /// Jobs materialized but not yet released to the broker.
+    pub fn pending_releases(&self) -> usize {
+        self.pending.len()
+    }
 }
 
 impl Entity<Msg> for UserEntity {
@@ -66,9 +91,27 @@ impl Entity<Msg> for UserEntity {
         // in the paper's Fig 15 — any per-user derivation works; ours is the
         // user seed itself, derived by the scenario builder).
         let mut rand = GridSimRandom::new(self.seed);
-        let gridlets = self.spec.materialize(&mut rand);
+        let releases = self.spec.workload.materialize(&mut rand);
+        let total_jobs = releases.len();
+        let total_mi: f64 = releases.iter().map(|r| r.gridlet.length_mi).sum();
+        let mut batch = Vec::new();
+        for r in releases {
+            if r.offset <= 0.0 {
+                batch.push(r.gridlet);
+            } else {
+                // Releases are offset-sorted, so pending stays front-first
+                // in release order (on_start runs at t=0, so the stored
+                // time is absolute).
+                self.pending.push_back((self.submit_delay + r.offset, r.gridlet));
+            }
+        }
+        if let Some(&(t, _)) = self.pending.front() {
+            ctx.schedule_self(t, tags::USER_TICK, None);
+        }
         let experiment = Experiment {
-            gridlets,
+            gridlets: batch,
+            total_jobs,
+            total_mi,
             deadline: self.spec.deadline,
             budget: self.spec.budget,
             optimization: self.spec.optimization,
@@ -105,8 +148,23 @@ impl Entity<Msg> for UserEntity {
                     }
                 }
                 self.result = Some(*result);
+                // The broker reported (deadline/budget hit); unreleased jobs
+                // have nowhere to go.
+                self.pending.clear();
                 // No more processing requirements → tell the shutdown entity.
                 ctx.send(self.shutdown, tags::END_OF_SIMULATION, None, 16);
+            }
+            tags::USER_TICK => {
+                // Release the next online job, then re-arm the timer for the
+                // one after it. The experiment may already be over (pending
+                // cleared) — the at-most-one stale tick is a no-op.
+                if let Some((_, g)) = self.pending.pop_front() {
+                    let msg = Msg::Gridlet(Box::new(g));
+                    ctx.send(self.broker, tags::GRIDLET_ARRIVAL, Some(msg), ARRIVAL_BYTES);
+                    if let Some(&(t, _)) = self.pending.front() {
+                        ctx.schedule_self((t - ctx.now()).max(0.0), tags::USER_TICK, None);
+                    }
+                }
             }
             tags::INSIGNIFICANT => {}
             other => panic!("user {} got unexpected tag {other}", self.name),

@@ -17,7 +17,13 @@
 //!      "deadline": 3100, "budget": 22000, "optimization": "cost"},
 //!     {"gridlets": 100, "deadline": 3100, "budget": 9000,
 //!      "policy": "time", "advisor": "native",
-//!      "broker": {"max_gridlets_per_pe": 1}, "submit_delay": 50}
+//!      "broker": {"max_gridlets_per_pe": 1}, "submit_delay": 50},
+//!     {"workload": {"type": "online_arrivals", "process": "poisson",
+//!                   "mean_interarrival": 5.0,
+//!                   "workload": {"type": "heavy_tailed", "gridlets": 100,
+//!                                "length_mi": 8000, "heavy_fraction": 0.1,
+//!                                "heavy_multiplier": 20}},
+//!      "deadline": 3100, "budget": 22000}
 //!   ]
 //! }
 //! ```
@@ -25,6 +31,13 @@
 //! `"testbed": "wwg"` can replace the `resources` array to pull in Table 2.
 //! A top-level `"sweep"` section (see [`parse_sweep`]) turns the file into a
 //! declarative parameter sweep over the base scenario for `repro sweep`.
+//!
+//! A user's application is either the flat task-farm keys
+//! (`gridlets`/`length_mi`/`variation`/`input_bytes`/`output_bytes` — the
+//! historical shape, still the default) or a `"workload"` object selecting
+//! any [`crate::workload::WorkloadSpec`] variant (`task_farm`,
+//! `heavy_tailed`, `explicit`, `trace`, `online_arrivals`); giving both is
+//! rejected as ambiguous.
 //!
 //! The loader is strict: unknown keys at any level are rejected with the
 //! allowed-key list (and a did-you-mean hint), so a typo like `"dedline"`
@@ -39,15 +52,25 @@ use crate::gridsim::{AllocPolicy, SpacePolicy};
 use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec};
 use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
+use crate::workload::{load_trace_file, ArrivalProcess, JobSpec, WorkloadSpec};
 use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
 
 const SCENARIO_KEYS: &[&str] = &[
     "seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time",
     "sweep",
 ];
 const NETWORK_KEYS: &[&str] = &["type", "rate", "latency"];
-const SWEEP_KEYS: &[&str] =
-    &["deadlines", "budgets", "users", "policies", "resources", "replications"];
+const SWEEP_KEYS: &[&str] = &[
+    "deadlines",
+    "budgets",
+    "users",
+    "policies",
+    "resources",
+    "replications",
+    "mean_interarrivals",
+    "heavy_fractions",
+];
 const BROKER_KEYS: &[&str] =
     &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe"];
 const RESOURCE_KEYS: &[&str] = &[
@@ -55,6 +78,7 @@ const RESOURCE_KEYS: &[&str] = &[
     "time_zone",
 ];
 const USER_KEYS: &[&str] = &[
+    "workload",
     "gridlets",
     "length_mi",
     "variation",
@@ -70,6 +94,27 @@ const USER_KEYS: &[&str] = &[
     "output_bytes",
     "submit_delay",
 ];
+/// The historical flat task-farm keys; mutually exclusive with `"workload"`.
+const FLAT_WORKLOAD_KEYS: &[&str] =
+    &["gridlets", "length_mi", "variation", "input_bytes", "output_bytes"];
+const WORKLOAD_TYPES: &[&str] =
+    &["task_farm", "heavy_tailed", "explicit", "trace", "online_arrivals"];
+const WORKLOAD_TASK_FARM_KEYS: &[&str] =
+    &["type", "gridlets", "length_mi", "variation", "input_bytes", "output_bytes"];
+const WORKLOAD_HEAVY_KEYS: &[&str] = &[
+    "type",
+    "gridlets",
+    "length_mi",
+    "heavy_fraction",
+    "heavy_multiplier",
+    "input_bytes",
+    "output_bytes",
+];
+const WORKLOAD_EXPLICIT_KEYS: &[&str] = &["type", "jobs"];
+const WORKLOAD_TRACE_KEYS: &[&str] = &["type", "path"];
+const WORKLOAD_ONLINE_KEYS: &[&str] =
+    &["type", "process", "mean_interarrival", "interval", "workload"];
+const JOB_KEYS: &[&str] = &["length_mi", "input_bytes", "output_bytes"];
 
 /// Levenshtein distance (for did-you-mean hints on unknown keys).
 fn edit_distance(a: &str, b: &str) -> usize {
@@ -193,7 +238,17 @@ fn parse_broker_config(v: &Value, base: &BrokerConfig) -> Result<BrokerConfig> {
 
 /// Parse a scenario from JSON text. A file carrying a `"sweep"` section is
 /// rejected — a sweep is not one scenario; run it with `repro sweep`.
+/// Relative trace-workload paths resolve against the process CWD; use
+/// [`parse_scenario_at`] to resolve them against the scenario file's
+/// directory instead.
 pub fn parse_scenario(text: &str) -> Result<Scenario> {
+    parse_scenario_at(text, None)
+}
+
+/// [`parse_scenario`] with an explicit base directory for relative
+/// trace-workload paths (pass the scenario file's parent directory, so a
+/// trace next to its scenario file loads regardless of the CWD).
+pub fn parse_scenario_at(text: &str, base_dir: Option<&Path>) -> Result<Scenario> {
     let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
     reject_unknown_keys(&root, "scenario", SCENARIO_KEYS)?;
     if root.get("sweep").is_some() {
@@ -202,7 +257,7 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
              `repro sweep --scenario FILE` (or delete the section for a single run)"
         );
     }
-    scenario_from(&root)
+    scenario_from(&root, base_dir)
 }
 
 /// Parse a sweep file: a base scenario plus a `"sweep"` section declaring
@@ -210,9 +265,15 @@ pub fn parse_scenario(text: &str) -> Result<Scenario> {
 /// over the scenario (one cell) — the CLI layers `--deadlines`-style axis
 /// flags on top, so any plain scenario file can be swept.
 pub fn parse_sweep(text: &str) -> Result<SweepSpec> {
+    parse_sweep_at(text, None)
+}
+
+/// [`parse_sweep`] with an explicit base directory for relative
+/// trace-workload paths (see [`parse_scenario_at`]).
+pub fn parse_sweep_at(text: &str, base_dir: Option<&Path>) -> Result<SweepSpec> {
     let root = json::parse(text).map_err(|e| anyhow!("{e}"))?;
     reject_unknown_keys(&root, "scenario", SCENARIO_KEYS)?;
-    let base = scenario_from(&root)?;
+    let base = scenario_from(&root, base_dir)?;
     let spec = match root.get("sweep") {
         Some(section) => parse_sweep_section(section, base)?,
         None => SweepSpec::over(base),
@@ -222,7 +283,7 @@ pub fn parse_sweep(text: &str) -> Result<SweepSpec> {
 }
 
 /// The shared scenario-object parser (everything except the `sweep` key).
-fn scenario_from(root: &Value) -> Result<Scenario> {
+fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
     let seed = opt_usize(root, "scenario", "seed")?.unwrap_or(0) as u64;
 
     let resources = match opt_str(root, "scenario", "testbed")? {
@@ -259,7 +320,9 @@ fn scenario_from(root: &Value) -> Result<Scenario> {
         .ok_or_else(|| anyhow!("missing \"users\" array"))?
         .iter()
         .enumerate()
-        .map(|(i, u)| parse_user(u, &broker_default).with_context(|| format!("user #{i}")))
+        .map(|(i, u)| {
+            parse_user(u, &broker_default, base_dir).with_context(|| format!("user #{i}"))
+        })
         .collect::<Result<Vec<_>>>()?;
     if users.is_empty() {
         bail!("\"users\" array is empty");
@@ -339,13 +402,159 @@ fn parse_resource(v: &Value) -> Result<ResourceSpec> {
     })
 }
 
-fn parse_user(v: &Value, broker_default: &BrokerConfig) -> Result<UserSpec> {
+/// Typed byte-size getter (non-negative integer, strict like `opt_usize`).
+fn opt_bytes(v: &Value, what: &str, key: &str) -> Result<Option<u64>> {
+    Ok(opt_usize(v, what, key)?.map(|n| n as u64))
+}
+
+/// Parse a `"workload"` object into a [`WorkloadSpec`]. Each variant has its
+/// own allowed-key list; the spec is validated before it is returned, so
+/// out-of-range parameters fail at load time with a readable message.
+/// Relative trace paths resolve against `base_dir` when given.
+fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
+    if !matches!(v, Value::Obj(_)) {
+        bail!("\"workload\" must be a JSON object");
+    }
+    let ty = opt_str(v, "workload", "type")?.ok_or_else(|| {
+        anyhow!("workload: missing \"type\" (one of: {})", WORKLOAD_TYPES.join(", "))
+    })?;
+    let spec = match ty {
+        "task_farm" => {
+            reject_unknown_keys(v, "task_farm workload", WORKLOAD_TASK_FARM_KEYS)?;
+            WorkloadSpec::TaskFarm {
+                num_gridlets: opt_usize(v, "workload", "gridlets")?.unwrap_or(200),
+                base_length_mi: opt_f64(v, "workload", "length_mi")?.unwrap_or(10_000.0),
+                length_variation: opt_f64(v, "workload", "variation")?.unwrap_or(0.10),
+                input_bytes: opt_bytes(v, "workload", "input_bytes")?.unwrap_or(1000),
+                output_bytes: opt_bytes(v, "workload", "output_bytes")?.unwrap_or(500),
+            }
+        }
+        "heavy_tailed" => {
+            reject_unknown_keys(v, "heavy_tailed workload", WORKLOAD_HEAVY_KEYS)?;
+            WorkloadSpec::HeavyTailed {
+                num_gridlets: opt_usize(v, "workload", "gridlets")?.unwrap_or(200),
+                base_length_mi: opt_f64(v, "workload", "length_mi")?.unwrap_or(10_000.0),
+                heavy_fraction: opt_f64(v, "workload", "heavy_fraction")?.unwrap_or(0.1),
+                heavy_multiplier: opt_f64(v, "workload", "heavy_multiplier")?.unwrap_or(10.0),
+                input_bytes: opt_bytes(v, "workload", "input_bytes")?.unwrap_or(1000),
+                output_bytes: opt_bytes(v, "workload", "output_bytes")?.unwrap_or(500),
+            }
+        }
+        "explicit" => {
+            reject_unknown_keys(v, "explicit workload", WORKLOAD_EXPLICIT_KEYS)?;
+            let arr = v
+                .get("jobs")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("explicit workload: missing \"jobs\" array"))?;
+            let jobs = arr
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    (|| -> Result<JobSpec> {
+                        reject_unknown_keys(j, "job", JOB_KEYS)?;
+                        Ok(JobSpec {
+                            length_mi: j.req_f64("length_mi")?,
+                            input_bytes: opt_bytes(j, "job", "input_bytes")?.unwrap_or(1000),
+                            output_bytes: opt_bytes(j, "job", "output_bytes")?.unwrap_or(500),
+                        })
+                    })()
+                    .with_context(|| format!("explicit workload job #{i}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            if jobs.is_empty() {
+                bail!("explicit workload: \"jobs\" array is empty");
+            }
+            WorkloadSpec::Explicit { jobs }
+        }
+        "trace" => {
+            reject_unknown_keys(v, "trace workload", WORKLOAD_TRACE_KEYS)?;
+            let path = v.req_str("path").context("trace workload")?;
+            let resolved = match base_dir {
+                Some(dir) if Path::new(path).is_relative() => dir.join(path),
+                _ => PathBuf::from(path),
+            };
+            WorkloadSpec::Trace { jobs: load_trace_file(&resolved)? }
+        }
+        "online_arrivals" => {
+            reject_unknown_keys(v, "online_arrivals workload", WORKLOAD_ONLINE_KEYS)?;
+            let inner_v = v.get("workload").ok_or_else(|| {
+                anyhow!("online_arrivals workload: missing inner \"workload\" object")
+            })?;
+            let inner = parse_workload(inner_v, base_dir).context("online_arrivals")?;
+            if matches!(inner, WorkloadSpec::OnlineArrivals { .. }) {
+                bail!("online_arrivals cannot wrap another online_arrivals");
+            }
+            let arrivals = match opt_str(v, "workload", "process")?.unwrap_or("poisson") {
+                "poisson" => {
+                    if v.get("interval").is_some() {
+                        bail!(
+                            "online_arrivals: \"interval\" only applies to \
+                             {{\"process\": \"fixed\"}}"
+                        );
+                    }
+                    ArrivalProcess::Poisson {
+                        mean_interarrival: v
+                            .req_f64("mean_interarrival")
+                            .context("online_arrivals workload")?,
+                    }
+                }
+                "fixed" => {
+                    if v.get("mean_interarrival").is_some() {
+                        bail!(
+                            "online_arrivals: \"mean_interarrival\" only applies to \
+                             {{\"process\": \"poisson\"}}"
+                        );
+                    }
+                    ArrivalProcess::Fixed {
+                        interval: v.req_f64("interval").context("online_arrivals workload")?,
+                    }
+                }
+                other => bail!("unknown arrival process {other:?} (poisson|fixed)"),
+            };
+            WorkloadSpec::OnlineArrivals { workload: Box::new(inner), arrivals }
+        }
+        other => {
+            let hint = nearest(other, WORKLOAD_TYPES)
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            bail!(
+                "unknown workload type {other:?}{hint}; allowed types: {}",
+                WORKLOAD_TYPES.join(", ")
+            );
+        }
+    };
+    spec.validate().with_context(|| format!("{} workload", spec.label()))?;
+    Ok(spec)
+}
+
+fn parse_user(
+    v: &Value,
+    broker_default: &BrokerConfig,
+    base_dir: Option<&Path>,
+) -> Result<UserSpec> {
     reject_unknown_keys(v, "user", USER_KEYS)?;
-    let mut spec = ExperimentSpec::task_farm(
-        opt_usize(v, "user", "gridlets")?.unwrap_or(200),
-        opt_f64(v, "user", "length_mi")?.unwrap_or(10_000.0),
-        opt_f64(v, "user", "variation")?.unwrap_or(0.10),
-    );
+    let mut spec = if let Some(w) = v.get("workload") {
+        if let Some(flat) = FLAT_WORKLOAD_KEYS.iter().find(|k| v.get(k).is_some()) {
+            bail!(
+                "give either \"workload\" or the flat task-farm key {flat:?}, not both \
+                 (put the job shape inside the \"workload\" object)"
+            );
+        }
+        ExperimentSpec::new(parse_workload(w, base_dir)?)
+    } else {
+        let mut spec = ExperimentSpec::task_farm(
+            opt_usize(v, "user", "gridlets")?.unwrap_or(200),
+            opt_f64(v, "user", "length_mi")?.unwrap_or(10_000.0),
+            opt_f64(v, "user", "variation")?.unwrap_or(0.10),
+        );
+        let input = opt_bytes(v, "user", "input_bytes")?;
+        let output = opt_bytes(v, "user", "output_bytes")?;
+        if input.is_some() || output.is_some() {
+            spec = spec.staging(input.unwrap_or(1000), output.unwrap_or(500));
+        }
+        spec.workload.validate().context("user workload")?;
+        spec
+    };
     if v.get("deadline").is_some() && v.get("d_factor").is_some() {
         bail!("give either \"deadline\" or \"d_factor\", not both");
     }
@@ -375,13 +584,6 @@ fn parse_user(v: &Value, broker_default: &BrokerConfig) -> Result<UserSpec> {
             Optimization::parse(s).ok_or_else(|| anyhow!("unknown optimization {s:?}"))?,
         );
     }
-    if let Some(n) = opt_f64(v, "user", "input_bytes")? {
-        spec.input_bytes = n as u64;
-    }
-    if let Some(n) = opt_f64(v, "user", "output_bytes")? {
-        spec.output_bytes = n as u64;
-    }
-
     let mut user = UserSpec::new(spec);
     if let Some(s) = opt_str(v, "user", "advisor")? {
         user = user.advisor(parse_advisor(s)?);
@@ -489,6 +691,12 @@ fn parse_sweep_section(v: &Value, base: Scenario) -> Result<SweepSpec> {
             .collect::<Result<Vec<_>>>()?;
         spec = spec.resource_subsets(subsets);
     }
+    if let Some(ms) = opt_f64_array(v, "sweep", "mean_interarrivals")? {
+        spec = spec.mean_interarrivals(ms);
+    }
+    if let Some(fs) = opt_f64_array(v, "sweep", "heavy_fractions")? {
+        spec = spec.heavy_fractions(fs);
+    }
     if let Some(n) = opt_usize(v, "sweep", "replications")? {
         spec = spec.replications(n);
     }
@@ -521,7 +729,7 @@ mod tests {
         assert_eq!(s.resources[1].machines, 8);
         assert!(!s.resources[1].policy.is_time_shared());
         assert_eq!(s.users.len(), 1);
-        assert_eq!(s.users[0].experiment.num_gridlets, 50);
+        assert_eq!(s.users[0].experiment.num_gridlets(), 50);
         assert_eq!(s.users[0].experiment.optimization, Optimization::CostTime);
         assert!(s.users[0].advisor.is_none());
         assert!(s.users[0].broker.is_none());
@@ -832,6 +1040,192 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("NoSuch"), "{err}");
+    }
+
+    #[test]
+    fn parses_workload_objects() {
+        use crate::workload::{ArrivalProcess, WorkloadSpec};
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [
+                {"workload": {"type": "task_farm", "gridlets": 30,
+                              "length_mi": 5000, "input_bytes": 10},
+                 "deadline": 3100, "budget": 22000},
+                {"workload": {"type": "heavy_tailed", "gridlets": 40,
+                              "heavy_fraction": 0.2, "heavy_multiplier": 30}},
+                {"workload": {"type": "explicit",
+                              "jobs": [{"length_mi": 100},
+                                       {"length_mi": 200, "input_bytes": 5}]}},
+                {"workload": {"type": "online_arrivals", "process": "poisson",
+                              "mean_interarrival": 4.5,
+                              "workload": {"type": "task_farm", "gridlets": 10}}},
+                {"workload": {"type": "online_arrivals", "process": "fixed",
+                              "interval": 2,
+                              "workload": {"type": "heavy_tailed"}}}
+            ]
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        assert_eq!(s.users.len(), 5);
+        let WorkloadSpec::TaskFarm { num_gridlets, base_length_mi, input_bytes, .. } =
+            s.users[0].experiment.workload
+        else {
+            panic!("task farm expected")
+        };
+        assert_eq!((num_gridlets, base_length_mi, input_bytes), (30, 5_000.0, 10));
+        let WorkloadSpec::HeavyTailed { heavy_fraction, heavy_multiplier, .. } =
+            s.users[1].experiment.workload
+        else {
+            panic!("heavy tailed expected")
+        };
+        assert_eq!((heavy_fraction, heavy_multiplier), (0.2, 30.0));
+        let WorkloadSpec::Explicit { jobs } = &s.users[2].experiment.workload else {
+            panic!("explicit expected")
+        };
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].input_bytes, 1000, "job staging defaults apply");
+        assert_eq!(jobs[1].input_bytes, 5);
+        let WorkloadSpec::OnlineArrivals { workload, arrivals } =
+            &s.users[3].experiment.workload
+        else {
+            panic!("online expected")
+        };
+        assert_eq!(*arrivals, ArrivalProcess::Poisson { mean_interarrival: 4.5 });
+        assert_eq!(workload.declared_jobs(), 10);
+        assert!(s.users[4].experiment.workload.has_arrival_process());
+    }
+
+    #[test]
+    fn parses_trace_workload_from_file() {
+        let dir = std::env::temp_dir().join("gridsim_loader_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.swf");
+        std::fs::write(&path, "; header\n0 10000 1000 500\n50 9000 1000 500\n").unwrap();
+        let text = format!(
+            r#"{{"testbed": "wwg",
+                "users": [{{"workload": {{"type": "trace", "path": {path:?}}},
+                            "deadline": 3100, "budget": 22000}}]}}"#,
+            path = path.display().to_string()
+        );
+        let s = parse_scenario(&text).unwrap();
+        assert_eq!(s.users[0].experiment.num_gridlets(), 2);
+        assert!(s.users[0].experiment.workload.is_online());
+
+        // A *relative* trace path resolves against the given base dir (what
+        // the CLI passes: the scenario file's parent), not the CWD.
+        let relative = r#"{"testbed": "wwg",
+            "users": [{"workload": {"type": "trace", "path": "w.swf"}}]}"#;
+        assert!(parse_scenario(relative).is_err(), "no base dir: CWD lookup fails");
+        let s = parse_scenario_at(relative, Some(dir.as_path())).unwrap();
+        assert_eq!(s.users[0].experiment.num_gridlets(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "trace", "path": "/no/such.swf"}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("/no/such.swf"), "{err}");
+    }
+
+    #[test]
+    fn workload_object_rejects_bad_input() {
+        // Unknown type with a did-you-mean hint.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{"workload": {"type": "task_frm"}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("task_frm") && err.contains("task_farm"), "{err}");
+
+        // Unknown key inside a typed workload object.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "task_farm", "gridletz": 5}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("gridletz") && err.contains("gridlets"), "{err}");
+
+        // Mixing the flat keys with a workload object is ambiguous.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"gridlets": 5, "workload": {"type": "task_farm"}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not both"), "{err}");
+
+        // Wrong process knob for the arrival process.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "online_arrivals",
+                                        "process": "fixed", "mean_interarrival": 3,
+                                        "workload": {"type": "task_farm"}}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mean_interarrival"), "{err}");
+
+        // Nested online arrivals.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "online_arrivals", "mean_interarrival": 3,
+                    "workload": {"type": "online_arrivals", "mean_interarrival": 2,
+                                 "workload": {"type": "task_farm"}}}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("nest") || err.contains("wrap"), "{err}");
+
+        // Out-of-range parameters fail at load time via validate().
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "heavy_tailed", "heavy_fraction": 1.5}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("heavy_fraction"), "{err}");
+
+        // Empty explicit job list.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "explicit", "jobs": []}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn sweep_workload_axes_parse_and_validate() {
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"workload": {"type": "online_arrivals", "mean_interarrival": 5,
+                                    "workload": {"type": "heavy_tailed", "gridlets": 20}},
+                       "deadline": 3100, "budget": 22000}],
+            "sweep": {"mean_interarrivals": [1, 5, 25], "heavy_fractions": [0, 0.1, 0.5]}
+        }"#;
+        let spec = parse_sweep(text).unwrap();
+        assert_eq!(spec.mean_interarrivals, vec![1.0, 5.0, 25.0]);
+        assert_eq!(spec.heavy_fractions, vec![0.0, 0.1, 0.5]);
+        assert_eq!(spec.cell_count(), 9);
+
+        // The axes demand a compatible workload somewhere in the base.
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 5}],
+                "sweep": {"mean_interarrivals": [1]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("online_arrivals"), "{err}");
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 5}],
+                "sweep": {"heavy_fractions": [0.5]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("heavy_tailed"), "{err}");
     }
 
     #[test]

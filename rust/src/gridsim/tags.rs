@@ -44,6 +44,10 @@ pub const GRIDLET_CANCEL_REPLY: i64 = 13;
 pub const RESERVATION_REQUEST: i64 = 14;
 /// Resource -> Broker: advance-reservation reply.
 pub const RESERVATION_REPLY: i64 = 15;
+/// User -> Broker: one more Gridlet of an already-submitted experiment
+/// (online application models — the job arrives *during* the run and the
+/// broker extends its plan mid-flight).
+pub const GRIDLET_ARRIVAL: i64 = 16;
 
 /// Internal: resource forecast interrupt (Gridlet completion tick).
 pub const RESOURCE_TICK: i64 = 100;

@@ -24,8 +24,10 @@
 //!   executed on a multi-threaded worker pool with deterministic per-cell
 //!   seeding: results are bit-identical at any `--jobs` value.
 //! * [`config`] / [`workload`] — scenario configuration (incl. the WWG
-//!   testbed of Table 2, and a strict JSON loader) and synthetic
-//!   task-farming application generator.
+//!   testbed of Table 2, and a strict JSON loader) and the first-class
+//!   [`workload::WorkloadSpec`] application models: generative task farms
+//!   and heavy-tailed mixes, explicit job lists, SWF-style trace replay,
+//!   and online Poisson/fixed-interval arrivals released mid-run.
 //! * [`figures`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //!
@@ -81,10 +83,9 @@
 //! ```
 //!
 //! Stepped execution is exact: a `run_until` sweep in any increments yields
-//! results bit-identical to one `run_to_completion()`.
-//! `scenario::run_scenario` remains as a one-call compatibility shim over
-//! `GridSession` for fire-and-forget runs, but is deprecated — build a
-//! session (one call longer) or, for parameter grids, a [`sweep::SweepSpec`].
+//! results bit-identical to one `run_to_completion()`. For fire-and-forget
+//! runs, `run_to_completion()` is the whole lifecycle in one call; for
+//! parameter grids, build a [`sweep::SweepSpec`].
 
 pub mod broker;
 pub mod config;

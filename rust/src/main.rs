@@ -20,7 +20,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use gridsim::broker::{ExperimentSpec, Optimization};
-use gridsim::config::scenario_file::{parse_scenario, parse_sweep};
+use gridsim::config::scenario_file::{parse_scenario_at, parse_sweep_at};
 use gridsim::config::testbed::wwg_testbed;
 use gridsim::figures;
 use gridsim::output::report;
@@ -89,9 +89,12 @@ fn print_usage() {
                                        below override the file's axes)\n\
            sweep [--deadlines D1,D2,...] [--budgets B1,...] [--users N1,...]\n\
                  [--policies P1,...] [--resources R1+R2,R3,...]\n\
+                 [--mean-interarrivals M1,...] [--heavy-fractions F1,...]\n\
                  [--replications R] [--gridlets N]\n\
                                        inline sweep on the WWG testbed; writes\n\
                                        sweep_long.csv + sweep_agg.csv to --out\n\
+                                       (workload-shape axes need a scenario file\n\
+                                       whose users declare matching workloads)\n\
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|all)\n\
@@ -180,7 +183,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let scenario = if let Some(path) = args.flag("scenario") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
-        let mut s = parse_scenario(&text)?;
+        // Relative trace-workload paths resolve against the scenario file's
+        // directory, not the invocation directory.
+        let mut s = parse_scenario_at(&text, Path::new(path).parent())?;
         // CLI flags override the file only when explicitly given.
         if args.flag("advisor").is_some() {
             s.advisor = advisor_kind(args)?;
@@ -260,7 +265,7 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
         }
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("cannot read {path}: {e}"))?;
-        let mut spec = parse_sweep(&text)?;
+        let mut spec = parse_sweep_at(&text, Path::new(path).parent())?;
         if args.flag("advisor").is_some() {
             spec.base.advisor = advisor_kind(args)?;
         }
@@ -301,6 +306,12 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
             .map(|subset| subset.split('+').map(|n| n.trim().to_string()).collect())
             .collect();
         spec = spec.resource_subsets(subsets);
+    }
+    if let Some(ms) = args.flag_f64_list("mean-interarrivals")? {
+        spec = spec.mean_interarrivals(ms);
+    }
+    if let Some(fs) = args.flag_f64_list("heavy-fractions")? {
+        spec = spec.heavy_fractions(fs);
     }
     if let Some(r) = args.flag_usize("replications")? {
         spec = spec.replications(r);

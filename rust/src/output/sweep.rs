@@ -8,20 +8,30 @@
 //!   tools ingest directly. Effective per-user deadline/budget come from the
 //!   broker's [`crate::broker::ExperimentResult`] (absolute, after Eq 1–2),
 //!   so factor-specified constraints show their resolved values.
-//! * **aggregate** — one row per cell with per-user means: the shape of the
-//!   paper's multi-user figures (33–38).
+//! * **aggregate** — one row per *grid point* (replications collapsed) with
+//!   cross-replication statistics: per-user means plus the standard error
+//!   of the mean over replications (`mean ± 1.96·stderr` is the usual 95%
+//!   confidence interval; stderr is 0 for a single replication).
 
 use crate::broker::Optimization;
 use crate::output::csv::{trim_float, CsvWriter};
-use crate::sweep::{SweepResults, SweepSpec};
+use crate::sweep::{SweepCell, SweepResults, SweepSpec};
+use crate::util::stats::Summary;
 
-/// Axis-coordinate columns shared by both writers.
-const AXIS_COLS: [&str; 7] =
-    ["cell", "resources", "policy", "users", "deadline", "budget", "replication"];
+/// Axis-coordinate columns shared by both writers (minus the replication
+/// column, which the writers append in their own shape).
+const AXIS_COLS: [&str; 8] = [
+    "cell",
+    "resources",
+    "policy",
+    "users",
+    "deadline",
+    "budget",
+    "arrival_mean",
+    "heavy_fraction",
+];
 
-fn axis_fields(spec: &SweepSpec, results: &SweepResults, i: usize) -> Vec<String> {
-    let outcome = &results.outcomes[i];
-    let cell = &outcome.cell;
+fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> {
     vec![
         cell.index.to_string(),
         spec.subset_label(cell),
@@ -29,10 +39,11 @@ fn axis_fields(spec: &SweepSpec, results: &SweepResults, i: usize) -> Vec<String
             Some(p) => p.label().to_string(),
             None => base_policy_label(spec),
         },
-        outcome.report.users.len().to_string(),
+        users.to_string(),
         cell.deadline.map(trim_float).unwrap_or_else(|| "base".into()),
         cell.budget.map(trim_float).unwrap_or_else(|| "base".into()),
-        cell.replication.to_string(),
+        cell.mean_interarrival.map(trim_float).unwrap_or_else(|| "base".into()),
+        cell.heavy_fraction.map(trim_float).unwrap_or_else(|| "base".into()),
     ]
 }
 
@@ -55,6 +66,7 @@ fn base_policy_label(spec: &SweepSpec) -> String {
 pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
     let mut header: Vec<&str> = AXIS_COLS.to_vec();
     header.extend([
+        "replication",
         "seed",
         "user",
         "gridlets_completed",
@@ -66,12 +78,13 @@ pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
         "finished",
     ]);
     let mut csv = CsvWriter::new(&header);
-    for (i, outcome) in results.outcomes.iter().enumerate() {
-        let axes = axis_fields(spec, results, i);
+    for outcome in &results.outcomes {
+        let axes = axis_fields(spec, &outcome.cell, outcome.report.users.len());
         for (u, result) in outcome.report.users.iter().enumerate() {
             let mut row = axes.clone();
             let finished = !outcome.report.unfinished.contains(&u);
             row.extend([
+                outcome.cell.replication.to_string(),
                 outcome.cell.seed.to_string(),
                 u.to_string(),
                 result.gridlets_completed.to_string(),
@@ -88,30 +101,54 @@ pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
     csv
 }
 
-/// One row per cell with per-user means (the paper's Figures 33–38 shape).
+/// One row per grid point (the paper's Figures 33–38 shape), aggregating
+/// the point's replications: per-user means of completions / time used /
+/// budget spent, each with the standard error over replications, plus
+/// summed engine counters. The `cell` column carries the grid point's first
+/// cell index (its replication-0 cell).
 pub fn aggregate_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
     let mut header: Vec<&str> = AXIS_COLS.to_vec();
     header.extend([
-        "seed",
+        "replications",
         "mean_gridlets_completed",
+        "stderr_gridlets_completed",
         "mean_time_used",
+        "stderr_time_used",
         "mean_budget_spent",
+        "stderr_budget_spent",
         "unfinished_users",
         "events",
-        "end_time",
     ]);
     let mut csv = CsvWriter::new(&header);
-    for (i, outcome) in results.outcomes.iter().enumerate() {
-        let mut row = axis_fields(spec, results, i);
-        let report = &outcome.report;
+    // Replication varies fastest in the expansion order, so one grid point
+    // is one contiguous chunk of `replications` cells.
+    let reps = spec.replications.max(1);
+    assert_eq!(results.outcomes.len() % reps, 0, "outcomes not a whole grid");
+    for group in results.outcomes.chunks(reps) {
+        let first = &group[0];
+        let mut completed = Summary::new();
+        let mut time_used = Summary::new();
+        let mut spent = Summary::new();
+        let mut unfinished = 0usize;
+        let mut events = 0u64;
+        for outcome in group {
+            completed.add(outcome.report.mean_completed());
+            time_used.add(outcome.report.mean_finish_time());
+            spent.add(outcome.report.mean_spent());
+            unfinished += outcome.report.unfinished.len();
+            events += outcome.report.events;
+        }
+        let mut row = axis_fields(spec, &first.cell, first.report.users.len());
         row.extend([
-            outcome.cell.seed.to_string(),
-            trim_float(report.mean_completed()),
-            trim_float(report.mean_finish_time()),
-            trim_float(report.mean_spent()),
-            report.unfinished.len().to_string(),
-            report.events.to_string(),
-            trim_float(report.end_time),
+            reps.to_string(),
+            trim_float(completed.mean()),
+            trim_float(completed.std_err()),
+            trim_float(time_used.mean()),
+            trim_float(time_used.std_err()),
+            trim_float(spent.mean()),
+            trim_float(spent.std_err()),
+            unfinished.to_string(),
+            events.to_string(),
         ]);
         csv.row(&row);
     }
@@ -154,20 +191,58 @@ mod tests {
         // Cells: users {1,2} × budgets {1e6, 5}; rows = 1+1+2+2.
         assert_eq!(csv.len(), 6);
         let text = csv.to_string();
-        assert!(text.starts_with("cell,resources,policy,users,deadline,budget,replication,"));
+        assert!(text.starts_with(
+            "cell,resources,policy,users,deadline,budget,arrival_mean,heavy_fraction,"
+        ));
         assert!(text.contains(",all,cost,"), "unswept axes echo base values: {text}");
+        assert!(text.contains(",base,base,"), "unswept workload axes print base: {text}");
     }
 
     #[test]
-    fn aggregate_rows_are_one_per_cell() {
+    fn aggregate_rows_are_one_per_grid_point() {
         let s = spec();
         let results = run_sweep(&s, 1).unwrap();
         let csv = aggregate_csv(&s, &results);
+        // No replications axis: every grid point is one cell.
         assert_eq!(csv.len(), 4);
         let text = csv.to_string();
         assert!(text.contains("mean_gridlets_completed"));
-        // The starved-budget cells complete fewer gridlets than the funded
-        // ones; both appear.
+        assert!(text.contains("stderr_gridlets_completed"));
         assert!(text.lines().count() == 5);
+        // With one replication every stderr is exactly 0.
+        for line in text.lines().skip(1) {
+            let fields: Vec<&str> = line.split(',').collect();
+            assert_eq!(fields[8], "1", "replications column");
+            assert_eq!(fields[10], "0", "stderr with 1 rep");
+            assert_eq!(fields[12], "0", "stderr with 1 rep");
+            assert_eq!(fields[14], "0", "stderr with 1 rep");
+        }
+    }
+
+    #[test]
+    fn aggregate_collapses_replications_with_stderr() {
+        // Variation > 0 makes replications draw different workloads, so the
+        // cross-replication spread is real.
+        let mut s = spec();
+        s.base.users[0].experiment =
+            ExperimentSpec::task_farm(4, 500.0, 0.10).deadline(1e4).budget(1e6);
+        let s = SweepSpec::over(s.base).replications(3);
+        let results = run_sweep(&s, 2).unwrap();
+        assert_eq!(results.outcomes.len(), 3);
+        let csv = aggregate_csv(&s, &results);
+        assert_eq!(csv.len(), 1, "3 replications collapse into one row");
+        let text = csv.to_string();
+        let fields: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(fields[8], "3", "replications column");
+        // Mean time used must match the hand-computed mean of the cells.
+        let mut expect = Summary::new();
+        for o in &results.outcomes {
+            expect.add(o.report.mean_finish_time());
+        }
+        assert_eq!(fields[11], trim_float(expect.mean()), "mean_time_used");
+        assert_eq!(fields[12], trim_float(expect.std_err()), "stderr_time_used");
+        // Engine events are summed across replications.
+        let events: u64 = results.outcomes.iter().map(|o| o.report.events).sum();
+        assert_eq!(fields[16], events.to_string());
     }
 }

@@ -1,13 +1,13 @@
 //! Scenario description — the declarative half of the paper's Fig 15
 //! `CreateSampleGridEnvironement`: resources (Table 2 rows), users with
-//! per-user policy/advisor/broker heterogeneity, network model, advisor
-//! engine and kernel limits. Execution lives in [`crate::session`]
-//! ([`crate::session::GridSession`]); [`run_scenario`] remains as a thin
-//! build-and-run-to-completion compatibility shim over it.
+//! per-user workload/policy/advisor/broker heterogeneity, network model,
+//! advisor engine and kernel limits. Execution lives in [`crate::session`]:
+//! build a [`crate::session::GridSession`] and run/step it.
 
 use crate::broker::broker::BrokerConfig;
 use crate::broker::{ExperimentResult, ExperimentSpec, Optimization};
 use crate::gridsim::{AllocPolicy, MachineList, ResourceCalendar, ResourceCharacteristics};
+use crate::workload::WorkloadSpec;
 
 /// Declarative description of one grid resource (Table 2 row).
 #[derive(Debug, Clone)]
@@ -104,6 +104,11 @@ impl UserSpec {
 
     // ExperimentSpec builder forwarding, so a `UserSpec` chains exactly like
     // the `ExperimentSpec` it wraps.
+
+    pub fn workload(mut self, w: WorkloadSpec) -> UserSpec {
+        self.experiment = self.experiment.workload(w);
+        self
+    }
 
     pub fn deadline(mut self, d: f64) -> UserSpec {
         self.experiment = self.experiment.deadline(d);
@@ -285,27 +290,6 @@ impl ScenarioReport {
         self.users.iter().map(|u| u.finish_time - u.start_time).sum::<f64>()
             / self.users.len() as f64
     }
-}
-
-/// Build the entity graph for `scenario`, run it to completion, and collect
-/// per-user results.
-///
-/// Compatibility shim over [`crate::session::GridSession`] — new code should
-/// build a session directly to step, observe, or steer the run:
-///
-/// ```ignore
-/// let mut session = GridSession::new(&scenario);
-/// session.run_until(t);          // pause anywhere...
-/// let snap = session.snapshot(); // ...probe per-broker progress...
-/// let report = session.run_to_completion(); // ...and resume.
-/// ```
-#[deprecated(
-    since = "0.2.0",
-    note = "build a `session::GridSession` and call `run_to_completion()` \
-            (or step/observe it) instead"
-)]
-pub fn run_scenario(scenario: &Scenario) -> ScenarioReport {
-    crate::session::GridSession::new(scenario).run_to_completion()
 }
 
 #[cfg(test)]

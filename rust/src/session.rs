@@ -1,10 +1,9 @@
 //! `GridSession` — the composable execution API around a scenario.
 //!
-//! [`crate::scenario::run_scenario`] is a fire-and-forget monolith: build,
-//! run, harvest. Evaluating brokers "under different scenarios" the way
-//! Nimrod/G-style adaptive experimentation does requires pausing a run,
-//! probing broker state, and resuming — so the session splits the lifecycle
-//! into explicit stages:
+//! Evaluating brokers "under different scenarios" the way Nimrod/G-style
+//! adaptive experimentation does requires pausing a run, probing broker
+//! state, and resuming — so the session splits the lifecycle into explicit
+//! stages (instead of a fire-and-forget build/run/harvest monolith):
 //!
 //! 1. **build** — [`GridSession::new`] assembles the entity graph (GIS,
 //!    statistics, shutdown, resources, user+broker pairs) with per-user
@@ -161,8 +160,8 @@ fn _assert_session_send(session: GridSession) -> impl Send {
 
 impl GridSession {
     /// Assemble the entity graph for `scenario`. Entity ids, names and
-    /// per-user seeds match the historical `run_scenario` layout, so
-    /// sessions reproduce pre-session runs bit-for-bit.
+    /// per-user seeds match the historical layout, so sessions reproduce
+    /// pre-session runs bit-for-bit.
     ///
     /// Panics when an advisor engine cannot be initialized (e.g. the XLA
     /// artifact is missing); use [`try_new`](Self::try_new) to surface that
@@ -397,22 +396,6 @@ mod tests {
             )
             .seed(11)
             .build()
-    }
-
-    // The one caller allowed to keep exercising the deprecated shim: this
-    // test IS the shim's compatibility contract.
-    #[test]
-    #[allow(deprecated)]
-    fn session_matches_run_scenario_shim() {
-        let scenario = two_user_scenario();
-        let via_shim = crate::scenario::run_scenario(&scenario);
-        let via_session = GridSession::new(&scenario).run_to_completion();
-        assert_eq!(via_shim.end_time.to_bits(), via_session.end_time.to_bits());
-        assert_eq!(via_shim.events, via_session.events);
-        for (a, b) in via_shim.users.iter().zip(&via_session.users) {
-            assert_eq!(a.gridlets_completed, b.gridlets_completed);
-            assert_eq!(a.budget_spent.to_bits(), b.budget_spent.to_bits());
-        }
     }
 
     #[test]

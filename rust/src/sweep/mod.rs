@@ -3,7 +3,8 @@
 //! declarative grid instead of hand-rolled nested loops.
 //!
 //! A [`SweepSpec`] names a base [`Scenario`] plus cartesian axes (deadline,
-//! budget, user count, scheduling policy, resource subset, replications).
+//! budget, user count, scheduling policy, resource subset, workload shape —
+//! arrival mean and heavy-tail fraction — and replications).
 //! [`SweepSpec::cells`] expands the grid into independent [`SweepCell`]s in
 //! a fixed row-major order, and [`engine::run_sweep`] executes them on a
 //! fixed-size `std::thread` worker pool. Three properties make sweeps
@@ -50,6 +51,14 @@ pub struct SweepSpec {
     /// Resource subsets by name; each entry restricts the cell to the named
     /// subset of the base resources (base order preserved).
     pub resource_subsets: Vec<Vec<String>>,
+    /// Mean inter-arrival override (Poisson mean / fixed interval), applied
+    /// to every user with an online-arrivals workload. Requires at least one
+    /// such user in the base.
+    pub mean_interarrivals: Vec<f64>,
+    /// Heavy-tail fraction override, applied to every user with a
+    /// heavy-tailed workload (possibly inside online arrivals). Requires at
+    /// least one such user in the base.
+    pub heavy_fractions: Vec<f64>,
     /// Independent replications per grid point (≥ 1). Replication `r` runs
     /// with [`replication_seed`]`(base.seed, r)`.
     pub replications: usize,
@@ -65,6 +74,8 @@ impl SweepSpec {
             user_counts: Vec::new(),
             policies: Vec::new(),
             resource_subsets: Vec::new(),
+            mean_interarrivals: Vec::new(),
+            heavy_fractions: Vec::new(),
             replications: 1,
         }
     }
@@ -99,6 +110,18 @@ impl SweepSpec {
         self
     }
 
+    /// Axis builder: mean inter-arrival values (online-arrivals workloads).
+    pub fn mean_interarrivals(mut self, values: Vec<f64>) -> SweepSpec {
+        self.mean_interarrivals = values;
+        self
+    }
+
+    /// Axis builder: heavy-tail fractions (heavy-tailed workloads).
+    pub fn heavy_fractions(mut self, values: Vec<f64>) -> SweepSpec {
+        self.heavy_fractions = values;
+        self
+    }
+
     /// Axis builder: replications per grid point.
     pub fn replications(mut self, n: usize) -> SweepSpec {
         self.replications = n;
@@ -115,6 +138,8 @@ impl SweepSpec {
             * axis_len(&self.user_counts)
             * axis_len(&self.deadlines)
             * axis_len(&self.budgets)
+            * axis_len(&self.mean_interarrivals)
+            * axis_len(&self.heavy_fractions)
             * self.replications.max(1)
     }
 
@@ -153,13 +178,41 @@ impl SweepSpec {
                 }
             }
         }
+        if !self.mean_interarrivals.is_empty() {
+            if let Some(m) = self.mean_interarrivals.iter().find(|&&m| m <= 0.0 || m.is_nan()) {
+                bail!("sweep: mean inter-arrival must be > 0, got {m}");
+            }
+            if !self
+                .base
+                .users
+                .iter()
+                .any(|u| u.experiment.workload.has_arrival_process())
+            {
+                bail!(
+                    "sweep: \"mean_interarrivals\" needs at least one user with an \
+                     online_arrivals workload in the base scenario"
+                );
+            }
+        }
+        if !self.heavy_fractions.is_empty() {
+            if let Some(f) = self.heavy_fractions.iter().find(|&&f| !(0.0..=1.0).contains(&f)) {
+                bail!("sweep: heavy-tail fraction must be in [0, 1], got {f}");
+            }
+            if !self.base.users.iter().any(|u| u.experiment.workload.has_heavy_tail()) {
+                bail!(
+                    "sweep: \"heavy_fractions\" needs at least one user with a \
+                     heavy_tailed workload in the base scenario"
+                );
+            }
+        }
         Ok(())
     }
 
     /// Expand the grid into cells, row-major over the axes in the fixed
-    /// order *subset → policy → users → deadline → budget → replication*
-    /// (replication varies fastest). The order is part of the output
-    /// contract: cell index == CSV row block, independent of execution.
+    /// order *subset → policy → users → deadline → budget → arrival mean →
+    /// heavy fraction → replication* (replication varies fastest). The order
+    /// is part of the output contract: cell index == CSV row block,
+    /// independent of execution.
     pub fn cells(&self) -> Vec<SweepCell> {
         fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
             if values.is_empty() {
@@ -179,17 +232,26 @@ impl SweepSpec {
                 for &users in &axis(&self.user_counts) {
                     for &deadline in &axis(&self.deadlines) {
                         for &budget in &axis(&self.budgets) {
-                            for replication in 0..self.replications.max(1) {
-                                cells.push(SweepCell {
-                                    index: cells.len(),
-                                    subset,
-                                    policy,
-                                    users,
-                                    deadline,
-                                    budget,
-                                    replication,
-                                    seed: replication_seed(self.base.seed, replication),
-                                });
+                            for &mean_interarrival in &axis(&self.mean_interarrivals) {
+                                for &heavy_fraction in &axis(&self.heavy_fractions) {
+                                    for replication in 0..self.replications.max(1) {
+                                        cells.push(SweepCell {
+                                            index: cells.len(),
+                                            subset,
+                                            policy,
+                                            users,
+                                            deadline,
+                                            budget,
+                                            mean_interarrival,
+                                            heavy_fraction,
+                                            replication,
+                                            seed: replication_seed(
+                                                self.base.seed,
+                                                replication,
+                                            ),
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -248,6 +310,14 @@ fn apply_user_overrides(user: &mut UserSpec, cell: &SweepCell) {
     if let Some(p) = cell.policy {
         user.experiment = user.experiment.clone().optimization(p);
     }
+    // Workload-shape axes only touch users whose workload has the knob
+    // (validate() guarantees at least one does).
+    if let Some(m) = cell.mean_interarrival {
+        user.experiment.workload.set_arrival_mean(m);
+    }
+    if let Some(f) = cell.heavy_fraction {
+        user.experiment.workload.set_heavy_fraction(f);
+    }
 }
 
 /// One point of the expanded grid. `None` axis values mean "keep the base
@@ -263,6 +333,10 @@ pub struct SweepCell {
     pub users: Option<usize>,
     pub deadline: Option<f64>,
     pub budget: Option<f64>,
+    /// Mean inter-arrival override (online-arrivals workloads).
+    pub mean_interarrival: Option<f64>,
+    /// Heavy-tail fraction override (heavy-tailed workloads).
+    pub heavy_fraction: Option<f64>,
     /// Replication number, `0..replications`.
     pub replication: usize,
     /// The RNG seed this cell runs with (a pure function of the base seed
@@ -398,6 +472,48 @@ mod tests {
         assert_eq!(only_r1.resources.len(), 1);
         assert_eq!(only_r1.resources[0].name, "R1");
         assert_eq!(spec.subset_label(&cells[1]), "R1");
+    }
+
+    #[test]
+    fn workload_axes_override_and_validate() {
+        use crate::workload::{ArrivalProcess, WorkloadSpec};
+        let mut base = base();
+        base.users[0].experiment = base.users[0].experiment.clone().workload(
+            WorkloadSpec::online(
+                WorkloadSpec::heavy_tailed(6, 500.0, 0.1, 10.0),
+                ArrivalProcess::Poisson { mean_interarrival: 9.0 },
+            ),
+        );
+        let spec = SweepSpec::over(base)
+            .mean_interarrivals(vec![2.0, 4.0])
+            .heavy_fractions(vec![0.0, 0.5, 1.0]);
+        spec.validate().unwrap();
+        assert_eq!(spec.cell_count(), 6);
+        let cells = spec.cells();
+        // Heavy fraction varies fastest (before replication).
+        assert_eq!(cells[0].mean_interarrival, Some(2.0));
+        assert_eq!(cells[0].heavy_fraction, Some(0.0));
+        assert_eq!(cells[1].heavy_fraction, Some(0.5));
+        assert_eq!(cells[3].mean_interarrival, Some(4.0));
+        let scenario = spec.scenario_for(&cells[4]);
+        let WorkloadSpec::OnlineArrivals { workload, arrivals } =
+            &scenario.users[0].experiment.workload
+        else {
+            panic!("online workload expected")
+        };
+        assert_eq!(*arrivals, ArrivalProcess::Poisson { mean_interarrival: 4.0 });
+        let WorkloadSpec::HeavyTailed { heavy_fraction, .. } = **workload else {
+            panic!("heavy tail expected")
+        };
+        assert_eq!(heavy_fraction, 0.5);
+
+        // A base without the knobs rejects the axes.
+        let err = SweepSpec::over(base()).mean_interarrivals(vec![1.0]).validate().unwrap_err();
+        assert!(err.to_string().contains("online_arrivals"), "{err}");
+        let err = SweepSpec::over(base()).heavy_fractions(vec![0.5]).validate().unwrap_err();
+        assert!(err.to_string().contains("heavy_tailed"), "{err}");
+        let err = SweepSpec::over(base()).mean_interarrivals(vec![0.0]).validate().unwrap_err();
+        assert!(err.to_string().contains("> 0"), "{err}");
     }
 
     #[test]

@@ -51,6 +51,15 @@ impl Summary {
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
+    /// Standard error of the mean (`s / √n`; 0 for fewer than two samples).
+    /// `mean ± 1.96·std_err` is the usual 95% confidence interval.
+    pub fn std_err(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.std_dev() / (self.n as f64).sqrt()
+        }
+    }
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -101,6 +110,17 @@ mod tests {
         assert_eq!(s.sum(), 40.0);
         // Sample variance of that classic series is 32/7.
         assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert!((s.std_err() - (32.0f64 / 7.0).sqrt() / 8.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_err_needs_two_samples() {
+        let mut s = Summary::new();
+        assert_eq!(s.std_err(), 0.0);
+        s.add(5.0);
+        assert_eq!(s.std_err(), 0.0);
+        s.add(7.0);
+        assert!(s.std_err() > 0.0);
     }
 
     #[test]

@@ -1,15 +1,21 @@
-//! Workload generators.
+//! Free-function workload generators — convenience wrappers over
+//! [`WorkloadSpec`](super::WorkloadSpec) for callers that want a plain
+//! `Vec<Gridlet>` (or arrival offsets) without building a spec. The draw
+//! streams are identical to the corresponding spec variants materialized
+//! with a `GridSimRandom::new(seed)`.
 
+use super::spec::{ArrivalProcess, WorkloadSpec};
 use crate::gridsim::gridlet::Gridlet;
 use crate::gridsim::random::GridSimRandom;
-use crate::util::rng::Rng;
 
 /// The paper's §5.2 application: `n` Gridlets of `base` MI with a 0–10%
 /// positive random variation (default n=200, base=10 000).
 pub fn paper_task_farm(n: usize, base_mi: f64, variation: f64, seed: u64) -> Vec<Gridlet> {
     let mut rand = GridSimRandom::new(seed);
-    (0..n)
-        .map(|i| Gridlet::new(i, rand.real(base_mi, 0.0, variation), 1000, 500))
+    WorkloadSpec::task_farm(n, base_mi, variation)
+        .materialize(&mut rand)
+        .into_iter()
+        .map(|r| r.gridlet)
         .collect()
 }
 
@@ -23,31 +29,20 @@ pub fn heavy_tailed_farm(
     heavy_mult: f64,
     seed: u64,
 ) -> Vec<Gridlet> {
-    assert!((0.0..=1.0).contains(&heavy_frac));
-    assert!(heavy_mult >= 1.0);
-    let mut rng = Rng::new(seed);
-    (0..n)
-        .map(|i| {
-            let mut len = base_mi * rng.uniform(0.9, 1.1);
-            if rng.next_f64() < heavy_frac {
-                len *= rng.uniform(1.0, heavy_mult);
-            }
-            Gridlet::new(i, len, 1000, 500)
-        })
+    let mut rand = GridSimRandom::new(seed);
+    WorkloadSpec::heavy_tailed(n, base_mi, heavy_frac, heavy_mult)
+        .materialize(&mut rand)
+        .into_iter()
+        .map(|r| r.gridlet)
         .collect()
 }
 
 /// Poisson arrival offsets with the given mean inter-arrival time — for
-/// online (non-batch) user activity models.
+/// online (non-batch) user activity models
+/// ([`WorkloadSpec::OnlineArrivals`] wires this into a full scenario).
 pub fn poisson_arrivals(n: usize, mean_interarrival: f64, seed: u64) -> Vec<f64> {
-    let mut rng = Rng::new(seed);
-    let mut t = 0.0;
-    (0..n)
-        .map(|_| {
-            t += rng.exponential(mean_interarrival);
-            t
-        })
-        .collect()
+    let mut rand = GridSimRandom::new(seed);
+    ArrivalProcess::Poisson { mean_interarrival }.offsets(n, rand.rng())
 }
 
 #[cfg(test)]

@@ -1,6 +1,13 @@
-//! Synthetic application/workload generators (paper §3.3/§5.2): task-farming
-//! parameter sweeps plus heavier-tailed mixes for stress testing.
+//! Application/workload models (paper §3.3/§4.2.1/§5.2): the first-class
+//! [`WorkloadSpec`] API (generative task farms, heavy-tailed mixes, explicit
+//! job lists, SWF-style trace replay, and online Poisson/fixed-interval
+//! arrivals) plus the original free-function generators, now thin wrappers
+//! over the spec.
 
 pub mod app;
+pub mod spec;
+pub mod trace;
 
 pub use app::{heavy_tailed_farm, paper_task_farm, poisson_arrivals};
+pub use spec::{ArrivalProcess, JobSpec, Release, TraceJob, WorkloadSpec};
+pub use trace::{format_trace, load_trace_file, parse_trace};

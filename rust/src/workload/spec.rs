@@ -1,0 +1,633 @@
+//! `WorkloadSpec` — the first-class application model (paper §4.2.1: "users
+//! and application models", with "primitives for creation of application
+//! tasks").
+//!
+//! A workload is a *value* describing how a user's Gridlets come into
+//! existence and when they are released to the broker:
+//!
+//! * [`WorkloadSpec::TaskFarm`] — the paper's §5.2 uniform task farm
+//!   (`n` jobs of at least `base` MI with a 0–`variation` positive random
+//!   spread). The default, and byte-identical to the historical
+//!   `ExperimentSpec` task-farm fields.
+//! * [`WorkloadSpec::HeavyTailed`] — mostly-uniform jobs with a fraction
+//!   stretched by up to a multiplier (exercises SJF/backfilling and broker
+//!   re-planning under heterogeneous job lengths).
+//! * [`WorkloadSpec::Explicit`] — a literal job list.
+//! * [`WorkloadSpec::Trace`] — jobs replayed from an SWF-style trace file
+//!   (`submit_time length_mi input_bytes output_bytes` per line, see
+//!   [`crate::workload::trace`]); jobs with `submit_time > 0` arrive online.
+//! * [`WorkloadSpec::OnlineArrivals`] — any of the above with release times
+//!   reassigned by a Poisson or fixed-interval [`ArrivalProcess`]
+//!   (Nimrod/G-style parameter-sweep jobs streaming in over time).
+//!
+//! [`WorkloadSpec::materialize`] turns the spec into a deterministic list of
+//! [`Release`]s (offset from submission + Gridlet) using the caller's seeded
+//! [`GridSimRandom`]; releases at offset 0 form the experiment's initial
+//! batch and later ones are streamed to the broker as `GRIDLET_ARRIVAL`
+//! events by the user entity.
+
+use crate::gridsim::gridlet::Gridlet;
+use crate::gridsim::random::GridSimRandom;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+
+/// One job of an [`WorkloadSpec::Explicit`] workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub length_mi: f64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+}
+
+/// One job of an [`WorkloadSpec::Trace`] workload: an [`JobSpec`] plus the
+/// submission offset (simulation time units after the experiment starts).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceJob {
+    pub submit_time: f64,
+    pub length_mi: f64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+}
+
+/// When online jobs are released to the broker, relative to experiment
+/// submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Poisson process: exponential inter-arrival gaps with the given mean
+    /// (the promoted `poisson_arrivals` helper). The first job arrives after
+    /// the first gap.
+    Poisson { mean_interarrival: f64 },
+    /// Fixed-interval release: job `i` arrives at `i × interval` (the first
+    /// job is part of the initial batch).
+    Fixed { interval: f64 },
+}
+
+impl ArrivalProcess {
+    /// Release offsets for `n` jobs, drawn from `rng` (Poisson) or computed
+    /// (fixed). Monotonically non-decreasing.
+    pub fn offsets(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson { mean_interarrival } => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exponential(*mean_interarrival);
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Fixed { interval } => (0..n).map(|i| i as f64 * interval).collect(),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self {
+            ArrivalProcess::Poisson { mean_interarrival } => {
+                if *mean_interarrival <= 0.0 || mean_interarrival.is_nan() {
+                    bail!("poisson arrivals need mean_interarrival > 0, got {mean_interarrival}");
+                }
+            }
+            ArrivalProcess::Fixed { interval } => {
+                if *interval < 0.0 || interval.is_nan() {
+                    bail!("fixed arrivals need interval >= 0, got {interval}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One materialized job release: the Gridlet plus its release offset from
+/// experiment submission (0 = part of the initial batch).
+#[derive(Debug, Clone)]
+pub struct Release {
+    pub offset: f64,
+    pub gridlet: Gridlet,
+}
+
+/// Declarative application model — how a user's Gridlets are generated and
+/// when they are released. See the module docs for the variants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// Paper §5.2: `num_gridlets` jobs of `base_length_mi` MI with a
+    /// 0–`length_variation` positive random variation.
+    TaskFarm {
+        num_gridlets: usize,
+        base_length_mi: f64,
+        length_variation: f64,
+        input_bytes: u64,
+        output_bytes: u64,
+    },
+    /// Most jobs within ±10% of `base_length_mi`; a `heavy_fraction` of them
+    /// stretched by up to `heavy_multiplier`×.
+    HeavyTailed {
+        num_gridlets: usize,
+        base_length_mi: f64,
+        heavy_fraction: f64,
+        heavy_multiplier: f64,
+        input_bytes: u64,
+        output_bytes: u64,
+    },
+    /// A literal job list, released as one batch.
+    Explicit { jobs: Vec<JobSpec> },
+    /// SWF-style trace replay: each job carries its own submission offset.
+    Trace { jobs: Vec<TraceJob> },
+    /// A generative wrapper: `workload`'s jobs with release times reassigned
+    /// by `arrivals` (nesting another `OnlineArrivals` is rejected).
+    OnlineArrivals { workload: Box<WorkloadSpec>, arrivals: ArrivalProcess },
+}
+
+impl WorkloadSpec {
+    /// The paper's §5.2 task farm with its staging sizes (1000 B in, 500 B
+    /// out).
+    pub fn task_farm(n: usize, base_mi: f64, variation: f64) -> WorkloadSpec {
+        WorkloadSpec::TaskFarm {
+            num_gridlets: n,
+            base_length_mi: base_mi,
+            length_variation: variation,
+            input_bytes: 1000,
+            output_bytes: 500,
+        }
+    }
+
+    /// A heavy-tailed farm with the paper's staging sizes.
+    pub fn heavy_tailed(n: usize, base_mi: f64, fraction: f64, multiplier: f64) -> WorkloadSpec {
+        WorkloadSpec::HeavyTailed {
+            num_gridlets: n,
+            base_length_mi: base_mi,
+            heavy_fraction: fraction,
+            heavy_multiplier: multiplier,
+            input_bytes: 1000,
+            output_bytes: 500,
+        }
+    }
+
+    /// A literal job list.
+    pub fn explicit(jobs: Vec<JobSpec>) -> WorkloadSpec {
+        WorkloadSpec::Explicit { jobs }
+    }
+
+    /// A trace replay.
+    pub fn trace(jobs: Vec<TraceJob>) -> WorkloadSpec {
+        WorkloadSpec::Trace { jobs }
+    }
+
+    /// Wrap `workload` with an online arrival process.
+    ///
+    /// Panics when `workload` is itself `OnlineArrivals` (one arrival
+    /// process per workload; the JSON loader rejects this too).
+    pub fn online(workload: WorkloadSpec, arrivals: ArrivalProcess) -> WorkloadSpec {
+        assert!(
+            !matches!(workload, WorkloadSpec::OnlineArrivals { .. }),
+            "online_arrivals cannot wrap another online_arrivals"
+        );
+        WorkloadSpec::OnlineArrivals { workload: Box::new(workload), arrivals }
+    }
+
+    /// Override the staging sizes on every job of the workload.
+    pub fn with_staging(mut self, input: u64, output: u64) -> WorkloadSpec {
+        self.set_staging(input, output);
+        self
+    }
+
+    fn set_staging(&mut self, input: u64, output: u64) {
+        match self {
+            WorkloadSpec::TaskFarm { input_bytes, output_bytes, .. }
+            | WorkloadSpec::HeavyTailed { input_bytes, output_bytes, .. } => {
+                *input_bytes = input;
+                *output_bytes = output;
+            }
+            WorkloadSpec::Explicit { jobs } => {
+                for j in jobs {
+                    j.input_bytes = input;
+                    j.output_bytes = output;
+                }
+            }
+            WorkloadSpec::Trace { jobs } => {
+                for j in jobs {
+                    j.input_bytes = input;
+                    j.output_bytes = output;
+                }
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.set_staging(input, output),
+        }
+    }
+
+    /// Number of jobs the workload declares (independent of release times).
+    pub fn declared_jobs(&self) -> usize {
+        match self {
+            WorkloadSpec::TaskFarm { num_gridlets, .. }
+            | WorkloadSpec::HeavyTailed { num_gridlets, .. } => *num_gridlets,
+            WorkloadSpec::Explicit { jobs } => jobs.len(),
+            WorkloadSpec::Trace { jobs } => jobs.len(),
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.declared_jobs(),
+        }
+    }
+
+    /// Does any job arrive after submission (trace offsets or an arrival
+    /// process)?
+    pub fn is_online(&self) -> bool {
+        match self {
+            WorkloadSpec::Trace { jobs } => jobs.iter().any(|j| j.submit_time > 0.0),
+            WorkloadSpec::OnlineArrivals { .. } => true,
+            _ => false,
+        }
+    }
+
+    /// Is there an [`ArrivalProcess`] anywhere in the spec (sweepable via
+    /// the `mean_interarrivals` axis)?
+    pub fn has_arrival_process(&self) -> bool {
+        matches!(self, WorkloadSpec::OnlineArrivals { .. })
+    }
+
+    /// Is there a heavy-tailed generator anywhere in the spec (sweepable via
+    /// the `heavy_fractions` axis)?
+    pub fn has_heavy_tail(&self) -> bool {
+        match self {
+            WorkloadSpec::HeavyTailed { .. } => true,
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.has_heavy_tail(),
+            _ => false,
+        }
+    }
+
+    /// Override the arrival process's mean inter-arrival (Poisson mean or
+    /// fixed interval). Returns whether anything was changed.
+    pub fn set_arrival_mean(&mut self, mean: f64) -> bool {
+        match self {
+            WorkloadSpec::OnlineArrivals { arrivals, .. } => {
+                match arrivals {
+                    ArrivalProcess::Poisson { mean_interarrival } => *mean_interarrival = mean,
+                    ArrivalProcess::Fixed { interval } => *interval = mean,
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Override the heavy-tail fraction. Returns whether anything was
+    /// changed.
+    pub fn set_heavy_fraction(&mut self, fraction: f64) -> bool {
+        match self {
+            WorkloadSpec::HeavyTailed { heavy_fraction, .. } => {
+                *heavy_fraction = fraction;
+                true
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => {
+                workload.set_heavy_fraction(fraction)
+            }
+            _ => false,
+        }
+    }
+
+    /// Short label for reports and error messages.
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkloadSpec::TaskFarm { .. } => "task_farm",
+            WorkloadSpec::HeavyTailed { .. } => "heavy_tailed",
+            WorkloadSpec::Explicit { .. } => "explicit",
+            WorkloadSpec::Trace { .. } => "trace",
+            WorkloadSpec::OnlineArrivals { .. } => "online_arrivals",
+        }
+    }
+
+    /// Reject impossible parameters with a readable error (the JSON loader
+    /// and sweep validation call this; `materialize` asserts as a backstop).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            WorkloadSpec::TaskFarm { base_length_mi, length_variation, .. } => {
+                if *base_length_mi <= 0.0 || base_length_mi.is_nan() {
+                    bail!("task_farm: length_mi must be > 0, got {base_length_mi}");
+                }
+                if !(0.0..=1.0).contains(length_variation) {
+                    bail!("task_farm: variation must be in [0, 1], got {length_variation}");
+                }
+            }
+            WorkloadSpec::HeavyTailed {
+                base_length_mi, heavy_fraction, heavy_multiplier, ..
+            } => {
+                if *base_length_mi <= 0.0 || base_length_mi.is_nan() {
+                    bail!("heavy_tailed: length_mi must be > 0, got {base_length_mi}");
+                }
+                if !(0.0..=1.0).contains(heavy_fraction) {
+                    bail!("heavy_tailed: heavy_fraction must be in [0, 1], got {heavy_fraction}");
+                }
+                if *heavy_multiplier < 1.0 || heavy_multiplier.is_nan() {
+                    bail!("heavy_tailed: heavy_multiplier must be >= 1, got {heavy_multiplier}");
+                }
+            }
+            WorkloadSpec::Explicit { jobs } => {
+                for (i, j) in jobs.iter().enumerate() {
+                    if j.length_mi <= 0.0 || j.length_mi.is_nan() {
+                        bail!("explicit job #{i}: length_mi must be > 0, got {}", j.length_mi);
+                    }
+                }
+            }
+            WorkloadSpec::Trace { jobs } => {
+                for (i, j) in jobs.iter().enumerate() {
+                    if j.length_mi <= 0.0 || j.length_mi.is_nan() {
+                        bail!("trace job #{i}: length_mi must be > 0, got {}", j.length_mi);
+                    }
+                    if j.submit_time < 0.0 || j.submit_time.is_nan() {
+                        bail!("trace job #{i}: submit_time must be >= 0, got {}", j.submit_time);
+                    }
+                }
+            }
+            WorkloadSpec::OnlineArrivals { workload, arrivals } => {
+                if matches!(**workload, WorkloadSpec::OnlineArrivals { .. }) {
+                    bail!("online_arrivals cannot wrap another online_arrivals");
+                }
+                arrivals.validate()?;
+                workload.validate()?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize the workload into release order, drawing every random
+    /// quantity from `rand`: two materializations with equally-seeded
+    /// generators are bit-identical. Gridlet ids are assigned in generation
+    /// order (0..n); the returned list is stably sorted by release offset.
+    ///
+    /// The `TaskFarm` draw sequence (`real(base, 0, variation)` per job) is
+    /// the historical `ExperimentSpec::materialize` stream, so pre-existing
+    /// scenarios reproduce bit-for-bit.
+    pub fn materialize(&self, rand: &mut GridSimRandom) -> Vec<Release> {
+        let mut releases: Vec<Release> = match self {
+            WorkloadSpec::TaskFarm {
+                num_gridlets,
+                base_length_mi,
+                length_variation,
+                input_bytes,
+                output_bytes,
+            } => (0..*num_gridlets)
+                .map(|i| {
+                    let len = rand.real(*base_length_mi, 0.0, *length_variation);
+                    Release {
+                        offset: 0.0,
+                        gridlet: Gridlet::new(i, len, *input_bytes, *output_bytes),
+                    }
+                })
+                .collect(),
+            WorkloadSpec::HeavyTailed {
+                num_gridlets,
+                base_length_mi,
+                heavy_fraction,
+                heavy_multiplier,
+                input_bytes,
+                output_bytes,
+            } => {
+                assert!((0.0..=1.0).contains(heavy_fraction));
+                assert!(*heavy_multiplier >= 1.0);
+                let rng = rand.rng();
+                (0..*num_gridlets)
+                    .map(|i| {
+                        let mut len = base_length_mi * rng.uniform(0.9, 1.1);
+                        if rng.next_f64() < *heavy_fraction {
+                            len *= rng.uniform(1.0, *heavy_multiplier);
+                        }
+                        Release {
+                            offset: 0.0,
+                            gridlet: Gridlet::new(i, len, *input_bytes, *output_bytes),
+                        }
+                    })
+                    .collect()
+            }
+            WorkloadSpec::Explicit { jobs } => jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| Release {
+                    offset: 0.0,
+                    gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
+                })
+                .collect(),
+            WorkloadSpec::Trace { jobs } => jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| Release {
+                    offset: j.submit_time,
+                    gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
+                })
+                .collect(),
+            WorkloadSpec::OnlineArrivals { workload, arrivals } => {
+                // Generate jobs first, then release times, so the inner
+                // draw stream matches the unwrapped workload's.
+                let mut releases = workload.materialize(rand);
+                releases.sort_by_key(|r| r.gridlet.id);
+                let offsets = arrivals.offsets(releases.len(), rand.rng());
+                for (r, off) in releases.iter_mut().zip(offsets) {
+                    r.offset = off;
+                }
+                releases
+            }
+        };
+        // Stable: equal offsets keep generation (id) order.
+        releases.sort_by(|a, b| a.offset.total_cmp(&b.offset));
+        releases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn materialize(spec: &WorkloadSpec, seed: u64) -> Vec<Release> {
+        spec.materialize(&mut GridSimRandom::new(seed))
+    }
+
+    #[test]
+    fn task_farm_matches_legacy_stream() {
+        // The pre-WorkloadSpec materialization: real(base, 0, var) per job.
+        let mut legacy = GridSimRandom::new(41);
+        let expected: Vec<f64> =
+            (0..50).map(|_| legacy.real(10_000.0, 0.0, 0.10)).collect();
+        let releases = materialize(&WorkloadSpec::task_farm(50, 10_000.0, 0.10), 41);
+        assert_eq!(releases.len(), 50);
+        for (i, r) in releases.iter().enumerate() {
+            assert_eq!(r.gridlet.id, i);
+            assert_eq!(r.offset, 0.0);
+            assert_eq!(r.gridlet.length_mi.to_bits(), expected[i].to_bits());
+            assert_eq!(r.gridlet.input_bytes, 1000);
+            assert_eq!(r.gridlet.output_bytes, 500);
+        }
+    }
+
+    #[test]
+    fn heavy_tailed_matches_promoted_generator() {
+        let releases = materialize(&WorkloadSpec::heavy_tailed(500, 1_000.0, 0.1, 50.0), 2);
+        let legacy = crate::workload::heavy_tailed_farm(500, 1_000.0, 0.1, 50.0, 2);
+        assert_eq!(releases.len(), legacy.len());
+        for (r, g) in releases.iter().zip(&legacy) {
+            assert_eq!(r.gridlet.length_mi.to_bits(), g.length_mi.to_bits());
+        }
+        let heavy = releases.iter().filter(|r| r.gridlet.length_mi > 2_000.0).count();
+        assert!(heavy > 10 && heavy < 150, "{heavy} heavy jobs");
+    }
+
+    #[test]
+    fn explicit_and_trace_materialize_literally() {
+        let explicit = WorkloadSpec::explicit(vec![
+            JobSpec { length_mi: 10.0, input_bytes: 1, output_bytes: 2 },
+            JobSpec { length_mi: 20.0, input_bytes: 3, output_bytes: 4 },
+        ]);
+        let r = materialize(&explicit, 1);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].gridlet.length_mi, 10.0);
+        assert_eq!(r[1].gridlet.input_bytes, 3);
+        assert!(r.iter().all(|r| r.offset == 0.0));
+
+        // Trace jobs keep their submit offsets and are sorted by them.
+        let trace = WorkloadSpec::trace(vec![
+            TraceJob { submit_time: 5.0, length_mi: 10.0, input_bytes: 1, output_bytes: 1 },
+            TraceJob { submit_time: 0.0, length_mi: 20.0, input_bytes: 1, output_bytes: 1 },
+        ]);
+        let r = materialize(&trace, 1);
+        assert_eq!(r[0].offset, 0.0);
+        assert_eq!(r[0].gridlet.id, 1, "sorted by submit time, ids kept");
+        assert_eq!(r[1].offset, 5.0);
+        assert_eq!(r[1].gridlet.id, 0);
+        assert!(trace.is_online());
+    }
+
+    #[test]
+    fn online_poisson_offsets_are_monotone_and_reassign_times() {
+        let spec = WorkloadSpec::online(
+            WorkloadSpec::task_farm(100, 1_000.0, 0.10),
+            ArrivalProcess::Poisson { mean_interarrival: 5.0 },
+        );
+        let r = materialize(&spec, 9);
+        assert_eq!(r.len(), 100);
+        assert!(r.windows(2).all(|w| w[0].offset <= w[1].offset));
+        assert!(r[0].offset > 0.0, "poisson: first job arrives after a gap");
+        // The job lengths are the inner farm's, untouched by the wrapper.
+        let inner = materialize(&WorkloadSpec::task_farm(100, 1_000.0, 0.10), 9);
+        for (a, b) in r.iter().zip(&inner) {
+            assert_eq!(a.gridlet.length_mi.to_bits(), b.gridlet.length_mi.to_bits());
+        }
+    }
+
+    #[test]
+    fn fixed_interval_starts_at_zero() {
+        let spec = WorkloadSpec::online(
+            WorkloadSpec::task_farm(4, 100.0, 0.0),
+            ArrivalProcess::Fixed { interval: 7.0 },
+        );
+        let r = materialize(&spec, 1);
+        let offsets: Vec<f64> = r.iter().map(|r| r.offset).collect();
+        assert_eq!(offsets, vec![0.0, 7.0, 14.0, 21.0]);
+    }
+
+    #[test]
+    fn staging_override_reaches_every_variant() {
+        let specs = [
+            WorkloadSpec::task_farm(3, 100.0, 0.0),
+            WorkloadSpec::heavy_tailed(3, 100.0, 0.5, 2.0),
+            WorkloadSpec::explicit(vec![JobSpec {
+                length_mi: 1.0,
+                input_bytes: 9,
+                output_bytes: 9,
+            }]),
+            WorkloadSpec::trace(vec![TraceJob {
+                submit_time: 0.0,
+                length_mi: 1.0,
+                input_bytes: 9,
+                output_bytes: 9,
+            }]),
+            WorkloadSpec::online(
+                WorkloadSpec::task_farm(3, 100.0, 0.0),
+                ArrivalProcess::Fixed { interval: 1.0 },
+            ),
+        ];
+        for spec in specs {
+            let spec = spec.with_staging(42, 24);
+            for r in materialize(&spec, 1) {
+                assert_eq!(r.gridlet.input_bytes, 42, "{}", spec.label());
+                assert_eq!(r.gridlet.output_bytes, 24, "{}", spec.label());
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        for (spec, needle) in [
+            (WorkloadSpec::task_farm(1, 0.0, 0.1), "length_mi"),
+            (WorkloadSpec::task_farm(1, 1.0, 1.5), "variation"),
+            (WorkloadSpec::heavy_tailed(1, 1.0, 1.5, 2.0), "heavy_fraction"),
+            (WorkloadSpec::heavy_tailed(1, 1.0, 0.5, 0.5), "heavy_multiplier"),
+            (
+                WorkloadSpec::explicit(vec![JobSpec {
+                    length_mi: 0.0,
+                    input_bytes: 0,
+                    output_bytes: 0,
+                }]),
+                "length_mi",
+            ),
+            (
+                WorkloadSpec::trace(vec![TraceJob {
+                    submit_time: -1.0,
+                    length_mi: 1.0,
+                    input_bytes: 0,
+                    output_bytes: 0,
+                }]),
+                "submit_time",
+            ),
+            (
+                WorkloadSpec::online(
+                    WorkloadSpec::task_farm(1, 1.0, 0.0),
+                    ArrivalProcess::Poisson { mean_interarrival: 0.0 },
+                ),
+                "mean_interarrival",
+            ),
+        ] {
+            let err = spec.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "{err}");
+        }
+        assert!(WorkloadSpec::task_farm(0, 1.0, 0.0).validate().is_ok(), "empty farm is legal");
+    }
+
+    #[test]
+    fn sweep_override_hooks() {
+        let mut spec = WorkloadSpec::online(
+            WorkloadSpec::heavy_tailed(10, 100.0, 0.1, 10.0),
+            ArrivalProcess::Poisson { mean_interarrival: 5.0 },
+        );
+        assert!(spec.has_arrival_process());
+        assert!(spec.has_heavy_tail());
+        assert!(spec.set_arrival_mean(2.0));
+        assert!(spec.set_heavy_fraction(0.9));
+        let WorkloadSpec::OnlineArrivals { workload, arrivals } = &spec else { panic!() };
+        assert_eq!(*arrivals, ArrivalProcess::Poisson { mean_interarrival: 2.0 });
+        let WorkloadSpec::HeavyTailed { heavy_fraction, .. } = **workload else { panic!() };
+        assert_eq!(heavy_fraction, 0.9);
+
+        let mut farm = WorkloadSpec::task_farm(1, 1.0, 0.0);
+        assert!(!farm.set_arrival_mean(1.0));
+        assert!(!farm.set_heavy_fraction(0.5));
+        assert!(!farm.has_arrival_process());
+        assert!(!farm.is_online());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot wrap")]
+    fn nested_online_rejected() {
+        let inner = WorkloadSpec::online(
+            WorkloadSpec::task_farm(1, 1.0, 0.0),
+            ArrivalProcess::Fixed { interval: 1.0 },
+        );
+        WorkloadSpec::online(inner, ArrivalProcess::Fixed { interval: 1.0 });
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let spec = WorkloadSpec::online(
+            WorkloadSpec::heavy_tailed(64, 1_000.0, 0.2, 20.0),
+            ArrivalProcess::Poisson { mean_interarrival: 3.0 },
+        );
+        let a = materialize(&spec, 123);
+        let b = materialize(&spec, 123);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.offset.to_bits(), y.offset.to_bits());
+            assert_eq!(x.gridlet.length_mi.to_bits(), y.gridlet.length_mi.to_bits());
+        }
+    }
+}

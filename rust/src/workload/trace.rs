@@ -1,0 +1,168 @@
+//! SWF-style workload trace I/O.
+//!
+//! The format is a whitespace-separated text table, one job per line, in the
+//! spirit of the Standard Workload Format (SWF) used by dslab-style
+//! trace-driven simulators, reduced to the four columns this toolkit
+//! simulates:
+//!
+//! ```text
+//! ; comment (SWF convention) — '#' comments are accepted too
+//! ; submit_time  length_mi  input_bytes  output_bytes
+//!   0            10000      1000         500
+//!   42.5         12000      1000         500
+//! ```
+//!
+//! `submit_time` is the release offset from experiment submission (jobs with
+//! offset 0 form the initial batch; later ones arrive online).
+//! [`format_trace`] and [`parse_trace`] round-trip exactly: floats are
+//! written in Rust's shortest-roundtrip form.
+
+use super::spec::TraceJob;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Parse a trace from text. Empty lines and lines starting with `;` or `#`
+/// are skipped; every other line must hold exactly four numeric fields.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>> {
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        if fields.len() != 4 {
+            bail!(
+                "trace line {}: expected 4 fields (submit_time length_mi input_bytes \
+                 output_bytes), got {}",
+                lineno + 1,
+                fields.len()
+            );
+        }
+        let num = |i: usize, what: &str| -> Result<f64> {
+            let n = fields[i].parse::<f64>().map_err(|_| {
+                anyhow!("trace line {}: {what} {:?} is not a number", lineno + 1, fields[i])
+            })?;
+            if !n.is_finite() {
+                bail!("trace line {}: {what} must be finite, got {n}", lineno + 1);
+            }
+            Ok(n)
+        };
+        let bytes = |i: usize, what: &str| -> Result<u64> {
+            let n = num(i, what)?;
+            if n >= 0.0 && n.fract() == 0.0 && n < 9_007_199_254_740_992.0 {
+                Ok(n as u64)
+            } else {
+                bail!("trace line {}: {what} must be a non-negative integer, got {n}", lineno + 1)
+            }
+        };
+        let job = TraceJob {
+            submit_time: num(0, "submit_time")?,
+            length_mi: num(1, "length_mi")?,
+            input_bytes: bytes(2, "input_bytes")?,
+            output_bytes: bytes(3, "output_bytes")?,
+        };
+        if job.submit_time < 0.0 {
+            bail!("trace line {}: submit_time must be >= 0, got {}", lineno + 1, job.submit_time);
+        }
+        if job.length_mi <= 0.0 {
+            bail!("trace line {}: length_mi must be > 0, got {}", lineno + 1, job.length_mi);
+        }
+        jobs.push(job);
+    }
+    if jobs.is_empty() {
+        bail!("trace holds no jobs");
+    }
+    Ok(jobs)
+}
+
+/// Serialize jobs into the trace format (header comment + one line per job).
+/// Floats use Rust's shortest-roundtrip formatting, so
+/// `parse_trace(&format_trace(jobs))` reproduces `jobs` exactly.
+pub fn format_trace(jobs: &[TraceJob]) -> String {
+    let mut out = String::from("; submit_time length_mi input_bytes output_bytes\n");
+    for j in jobs {
+        out.push_str(&format!(
+            "{} {} {} {}\n",
+            j.submit_time, j.length_mi, j.input_bytes, j.output_bytes
+        ));
+    }
+    out
+}
+
+/// Load a trace file from disk.
+pub fn load_trace_file(path: impl AsRef<Path>) -> Result<Vec<TraceJob>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("cannot read trace file {}: {e}", path.display()))?;
+    parse_trace(&text).with_context(|| format!("trace file {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_and_blank_lines() {
+        let text = "; SWF-ish header\n# hash comment\n\n0 10000 1000 500\n42.5 12000 0 0\n";
+        let jobs = parse_trace(text).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].submit_time, 0.0);
+        assert_eq!(jobs[1].submit_time, 42.5);
+        assert_eq!(jobs[1].length_mi, 12_000.0);
+        assert_eq!(jobs[1].input_bytes, 0);
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let jobs = vec![
+            TraceJob { submit_time: 0.0, length_mi: 10_000.3, input_bytes: 1000, output_bytes: 500 },
+            TraceJob {
+                submit_time: 17.25,
+                length_mi: 1.0 / 3.0 + 100.0,
+                input_bytes: 7,
+                output_bytes: 0,
+            },
+        ];
+        let text = format_trace(&jobs);
+        let back = parse_trace(&text).unwrap();
+        assert_eq!(jobs, back);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for (text, needle) in [
+            ("1 2 3", "4 fields"),
+            ("a 2 3 4", "not a number"),
+            ("1 2 3.5 4", "integer"),
+            ("-1 2 3 4", "submit_time"),
+            ("1 0 3 4", "length_mi"),
+            ("; only comments\n", "no jobs"),
+        ] {
+            let err = parse_trace(text).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let jobs = vec![TraceJob {
+            submit_time: 3.5,
+            length_mi: 500.0,
+            input_bytes: 10,
+            output_bytes: 20,
+        }];
+        let dir = std::env::temp_dir().join("gridsim_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.swf");
+        std::fs::write(&path, format_trace(&jobs)).unwrap();
+        assert_eq!(load_trace_file(&path).unwrap(), jobs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_error_names_path() {
+        let err = load_trace_file("/no/such/trace.swf").unwrap_err();
+        assert!(format!("{err:#}").contains("/no/such/trace.swf"));
+    }
+}

@@ -55,10 +55,10 @@ fn baud_rate_network_slows_completion() {
 #[test]
 fn staging_delay_scales_with_file_size() {
     let build = |input_bytes: u64| {
-        let mut e = ExperimentSpec::task_farm(5, 1_000.0, 0.0)
+        let e = ExperimentSpec::task_farm(5, 1_000.0, 0.0)
             .deadline(100_000.0)
-            .budget(1e6);
-        e.input_bytes = input_bytes;
+            .budget(1e6)
+            .staging(input_bytes, 500);
         Scenario::builder()
             .resource(spec("R0", 1, 100.0, 1.0))
             .user(e)

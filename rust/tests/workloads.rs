@@ -1,0 +1,317 @@
+//! The `WorkloadSpec` application-model API, end to end: deterministic
+//! materialization across every variant (property test), trace-file
+//! round-trips, online arrivals completing through a live broker with real
+//! per-resource accounting, and the backward-compatibility regression — a
+//! scenario omitting `"workload"` (or spelling out `task_farm`) is
+//! byte-identical to the historical flat task-farm shape.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::scenario_file::parse_scenario;
+use gridsim::gridsim::random::GridSimRandom;
+use gridsim::gridsim::AllocPolicy;
+use gridsim::scenario::{ResourceSpec, Scenario, ScenarioReport};
+use gridsim::session::GridSession;
+use gridsim::util::prop::{check, forall};
+use gridsim::workload::{
+    format_trace, parse_trace, ArrivalProcess, JobSpec, TraceJob, WorkloadSpec,
+};
+
+fn resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+    ResourceSpec {
+        name: name.into(),
+        arch: "test".into(),
+        os: "linux".into(),
+        machines: 1,
+        pes_per_machine: pes,
+        mips_per_pe: mips,
+        policy: AllocPolicy::TimeShared,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+/// Every variant, driven by a generated seed: two materializations under
+/// the same seed must agree bit-for-bit, offsets must be sorted, and ids
+/// must be a permutation of 0..n.
+#[test]
+fn every_variant_materializes_deterministically() {
+    let variants: Vec<WorkloadSpec> = vec![
+        WorkloadSpec::task_farm(40, 10_000.0, 0.10),
+        WorkloadSpec::heavy_tailed(40, 1_000.0, 0.2, 25.0),
+        WorkloadSpec::explicit(
+            (1..=10)
+                .map(|i| JobSpec {
+                    length_mi: 100.0 * i as f64,
+                    input_bytes: i,
+                    output_bytes: i,
+                })
+                .collect(),
+        ),
+        WorkloadSpec::trace(
+            (0..10)
+                .map(|i| TraceJob {
+                    submit_time: (10 - i) as f64,
+                    length_mi: 50.0 + i as f64,
+                    input_bytes: 1,
+                    output_bytes: 1,
+                })
+                .collect(),
+        ),
+        WorkloadSpec::online(
+            WorkloadSpec::task_farm(40, 1_000.0, 0.10),
+            ArrivalProcess::Poisson { mean_interarrival: 3.0 },
+        ),
+        WorkloadSpec::online(
+            WorkloadSpec::heavy_tailed(40, 1_000.0, 0.3, 10.0),
+            ArrivalProcess::Fixed { interval: 2.5 },
+        ),
+    ];
+    for spec in &variants {
+        forall(
+            7,
+            25,
+            |rng| rng.next_u64(),
+            |&seed| {
+                let a = spec.materialize(&mut GridSimRandom::new(seed));
+                let b = spec.materialize(&mut GridSimRandom::new(seed));
+                check(a.len() == b.len(), "same length")?;
+                check(a.len() == spec.declared_jobs(), "declared_jobs matches")?;
+                for (x, y) in a.iter().zip(&b) {
+                    check(
+                        x.offset.to_bits() == y.offset.to_bits()
+                            && x.gridlet.length_mi.to_bits() == y.gridlet.length_mi.to_bits()
+                            && x.gridlet.id == y.gridlet.id,
+                        format!("{}: bit-identical releases", spec.label()),
+                    )?;
+                }
+                check(
+                    a.windows(2).all(|w| w[0].offset <= w[1].offset),
+                    "offsets sorted",
+                )?;
+                let mut ids: Vec<usize> = a.iter().map(|r| r.gridlet.id).collect();
+                ids.sort_unstable();
+                check(
+                    ids == (0..a.len()).collect::<Vec<_>>(),
+                    "ids are a permutation of 0..n",
+                )
+            },
+        );
+    }
+}
+
+#[test]
+fn trace_round_trips_through_file_and_scenario() {
+    // Generated jobs with awkward floats round-trip exactly.
+    let jobs: Vec<TraceJob> = (0..25)
+        .map(|i| TraceJob {
+            submit_time: i as f64 * 1.1,
+            length_mi: 10_000.0 / 3.0 + i as f64,
+            input_bytes: 100 + i,
+            output_bytes: 50,
+        })
+        .collect();
+    let text = format_trace(&jobs);
+    assert_eq!(parse_trace(&text).unwrap(), jobs, "write -> load -> identical jobs");
+
+    // And the workload built from the re-loaded jobs materializes identical
+    // gridlets.
+    let a = WorkloadSpec::trace(jobs.clone()).materialize(&mut GridSimRandom::new(1));
+    let b = WorkloadSpec::trace(parse_trace(&text).unwrap())
+        .materialize(&mut GridSimRandom::new(1));
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.offset.to_bits(), y.offset.to_bits());
+        assert_eq!(x.gridlet.length_mi.to_bits(), y.gridlet.length_mi.to_bits());
+        assert_eq!(x.gridlet.input_bytes, y.gridlet.input_bytes);
+    }
+}
+
+/// Online arrivals complete through a live broker: jobs submitted after the
+/// experiment started are scheduled, executed and accounted per resource.
+#[test]
+fn online_arrivals_complete_late_jobs_with_real_accounting() {
+    let n = 30;
+    let mean_gap = 4.0;
+    let scenario = Scenario::builder()
+        .resource(resource("Cheap", 2, 100.0, 1.0))
+        .resource(resource("Fast", 4, 200.0, 3.0))
+        .user(
+            ExperimentSpec::new(WorkloadSpec::online(
+                WorkloadSpec::task_farm(n, 500.0, 0.10),
+                ArrivalProcess::Poisson { mean_interarrival: mean_gap },
+            ))
+            .deadline(100_000.0)
+            .budget(1e9)
+            .optimization(Optimization::Cost),
+        )
+        .seed(11)
+        .build();
+
+    // The arrival schedule the user will follow (same seed derivation as
+    // the session: seed·997·(1+0)+1).
+    let user_seed = 11u64.wrapping_mul(997).wrapping_add(1);
+    let releases = scenario.users[0]
+        .experiment
+        .workload
+        .materialize(&mut GridSimRandom::new(user_seed));
+    let last_arrival = releases.last().unwrap().offset;
+    assert!(last_arrival > 0.0, "workload is genuinely online");
+
+    let mut session = GridSession::new(&scenario);
+    // Pause mid-stream: the broker already knows the declared totals but
+    // has only seen the jobs released so far.
+    session.init();
+    session.run_until(last_arrival / 2.0);
+    let mid = session.snapshot();
+    assert_eq!(mid.users[0].gridlets_total, n, "declared total known up front");
+    assert!(
+        mid.users[0].gridlets_completed < n,
+        "jobs are still arriving at t={}",
+        mid.time
+    );
+
+    let report = session.run_to_completion();
+    assert!(report.all_finished());
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, n, "late-arriving gridlets completed");
+    assert!(
+        u.finish_time - u.start_time >= last_arrival,
+        "experiment cannot end before its last arrival ({} < {last_arrival})",
+        u.finish_time - u.start_time
+    );
+    // Real per-resource accounting: completions and spend add up.
+    let per_res_done: usize = u.per_resource.iter().map(|r| r.gridlets_completed).sum();
+    let per_res_spent: f64 = u.per_resource.iter().map(|r| r.budget_spent).sum();
+    assert_eq!(per_res_done, n);
+    assert!(u.budget_spent > 0.0);
+    assert!((per_res_spent - u.budget_spent).abs() < 1e-9);
+}
+
+/// A tight deadline under online arrivals: the broker drains at the
+/// deadline and late jobs count as unfinished — not as phantom completions.
+#[test]
+fn online_arrivals_respect_deadline_for_unarrived_jobs() {
+    let scenario = Scenario::builder()
+        .resource(resource("R0", 2, 100.0, 1.0))
+        .user(
+            ExperimentSpec::new(WorkloadSpec::online(
+                WorkloadSpec::task_farm(50, 500.0, 0.0),
+                ArrivalProcess::Fixed { interval: 10.0 },
+            ))
+            .deadline(100.0)
+            .budget(1e9),
+        )
+        .seed(5)
+        .build();
+    let report = GridSession::new(&scenario).run_to_completion();
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_total, 50);
+    assert!(
+        u.gridlets_completed < 50,
+        "jobs arriving past the deadline cannot complete ({}/50)",
+        u.gridlets_completed
+    );
+    assert!(u.gridlets_completed > 0, "early arrivals do complete");
+}
+
+fn run_report(scenario: &Scenario) -> ScenarioReport {
+    GridSession::new(scenario).run_to_completion()
+}
+
+/// Digest of everything the report/CSV layer prints for a run.
+fn digest(report: &ScenarioReport) -> String {
+    let mut out = format!("end={} events={}\n", report.end_time.to_bits(), report.events);
+    for u in &report.users {
+        out.push_str(&format!(
+            "done={}/{} spent={} finish={} deadline={} budget={}\n",
+            u.gridlets_completed,
+            u.gridlets_total,
+            u.budget_spent.to_bits(),
+            u.finish_time.to_bits(),
+            u.deadline.to_bits(),
+            u.budget.to_bits(),
+        ));
+        for r in &u.per_resource {
+            out.push_str(&format!(
+                "  {} {} {}\n",
+                r.name,
+                r.gridlets_completed,
+                r.budget_spent.to_bits()
+            ));
+        }
+    }
+    out
+}
+
+/// The acceptance regression: a scenario JSON omitting `"workload"`, one
+/// spelling it as a `task_farm` object, and the builder API all produce
+/// byte-identical results for the same seed — and the flat-JSON run matches
+/// the pre-refactor materialization formula exactly.
+#[test]
+fn flat_json_workload_json_and_builder_are_byte_identical() {
+    let flat = r#"{
+        "seed": 27,
+        "resources": [
+            {"name": "R0", "pes": 2, "mips": 100, "price": 1.0},
+            {"name": "R1", "pes": 2, "mips": 200, "price": 4.0}
+        ],
+        "users": [{"gridlets": 40, "length_mi": 1000, "variation": 0.1,
+                   "deadline": 2000, "budget": 100000, "optimization": "cost"}]
+    }"#;
+    let spelled = r#"{
+        "seed": 27,
+        "resources": [
+            {"name": "R0", "pes": 2, "mips": 100, "price": 1.0},
+            {"name": "R1", "pes": 2, "mips": 200, "price": 4.0}
+        ],
+        "users": [{"workload": {"type": "task_farm", "gridlets": 40,
+                                "length_mi": 1000, "variation": 0.1},
+                   "deadline": 2000, "budget": 100000, "optimization": "cost"}]
+    }"#;
+    let built = Scenario::builder()
+        .resource(resource("R0", 2, 100.0, 1.0))
+        .resource(resource("R1", 2, 200.0, 4.0))
+        .user(
+            ExperimentSpec::task_farm(40, 1_000.0, 0.10)
+                .deadline(2_000.0)
+                .budget(100_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(27)
+        .build();
+
+    let d_flat = digest(&run_report(&parse_scenario(flat).unwrap()));
+    let d_spelled = digest(&run_report(&parse_scenario(spelled).unwrap()));
+    let d_built = digest(&run_report(&built));
+    assert_eq!(d_flat, d_spelled, "flat keys == explicit task_farm object");
+    assert_eq!(d_flat, d_built, "JSON == builder API");
+
+    // And the workload the user materializes is the pre-refactor stream:
+    // GridSimRandom::new(user_seed).real(base, 0, variation) per job.
+    let user_seed = 27u64.wrapping_mul(997).wrapping_add(1);
+    let mut legacy = GridSimRandom::new(user_seed);
+    let expected: Vec<f64> = (0..40).map(|_| legacy.real(1_000.0, 0.0, 0.10)).collect();
+    let releases = parse_scenario(flat).unwrap().users[0]
+        .experiment
+        .workload
+        .materialize(&mut GridSimRandom::new(user_seed));
+    for (r, e) in releases.iter().zip(&expected) {
+        assert_eq!(r.gridlet.length_mi.to_bits(), e.to_bits(), "legacy §5.2 stream");
+    }
+}
+
+/// Closed-batch runs carry no arrival machinery: the broker still receives
+/// one experiment whose declared totals equal the batch.
+#[test]
+fn closed_batch_declares_batch_totals() {
+    let scenario = Scenario::builder()
+        .resource(resource("R0", 2, 100.0, 1.0))
+        .user(ExperimentSpec::task_farm(12, 1_000.0, 0.10).deadline(1e4).budget(1e6))
+        .seed(3)
+        .build();
+    let report = GridSession::new(&scenario).run_to_completion();
+    assert!(report.all_finished());
+    assert_eq!(report.users[0].gridlets_total, 12);
+    assert_eq!(report.users[0].gridlets_completed, 12);
+}
