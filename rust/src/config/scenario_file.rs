@@ -36,8 +36,14 @@
 //! (`gridlets`/`length_mi`/`variation`/`input_bytes`/`output_bytes` — the
 //! historical shape, still the default) or a `"workload"` object selecting
 //! any [`crate::workload::WorkloadSpec`] variant (`task_farm`,
-//! `heavy_tailed`, `explicit`, `trace`, `online_arrivals`); giving both is
-//! rejected as ambiguous.
+//! `heavy_tailed`, `explicit`, `trace`, `concat`, `mix`,
+//! `online_arrivals`); giving both is rejected as ambiguous. Trace
+//! workloads load legacy 4-column files and full 18-column SWF logs
+//! (auto-detected), take SWF conversion knobs (`mips`, `statuses`,
+//! `input_bytes`/`output_bytes`) and a `"select"` object
+//! (`users`/`partitions`/`max_jobs`) slicing the log per simulated user;
+//! relative `path`s — including inside `concat`/`mix` parts — resolve
+//! against the scenario file's directory.
 //!
 //! The loader is strict: unknown keys at any level are rejected with the
 //! allowed-key list (and a did-you-mean hint), so a typo like `"dedline"`
@@ -52,7 +58,10 @@ use crate::gridsim::{AllocPolicy, SpacePolicy};
 use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec};
 use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
-use crate::workload::{load_trace_file, ArrivalProcess, JobSpec, WorkloadSpec};
+use crate::workload::{
+    load_trace_file_with, ArrivalProcess, JobSpec, RateEnvelope, SwfLoadOptions, TraceSelector,
+    WorkloadSpec,
+};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -70,6 +79,8 @@ const SWEEP_KEYS: &[&str] = &[
     "replications",
     "mean_interarrivals",
     "heavy_fractions",
+    "trace_selectors",
+    "mix_weights",
 ];
 const BROKER_KEYS: &[&str] =
     &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe"];
@@ -97,8 +108,15 @@ const USER_KEYS: &[&str] = &[
 /// The historical flat task-farm keys; mutually exclusive with `"workload"`.
 const FLAT_WORKLOAD_KEYS: &[&str] =
     &["gridlets", "length_mi", "variation", "input_bytes", "output_bytes"];
-const WORKLOAD_TYPES: &[&str] =
-    &["task_farm", "heavy_tailed", "explicit", "trace", "online_arrivals"];
+const WORKLOAD_TYPES: &[&str] = &[
+    "task_farm",
+    "heavy_tailed",
+    "explicit",
+    "trace",
+    "concat",
+    "mix",
+    "online_arrivals",
+];
 const WORKLOAD_TASK_FARM_KEYS: &[&str] =
     &["type", "gridlets", "length_mi", "variation", "input_bytes", "output_bytes"];
 const WORKLOAD_HEAVY_KEYS: &[&str] = &[
@@ -111,10 +129,22 @@ const WORKLOAD_HEAVY_KEYS: &[&str] = &[
     "output_bytes",
 ];
 const WORKLOAD_EXPLICIT_KEYS: &[&str] = &["type", "jobs"];
-const WORKLOAD_TRACE_KEYS: &[&str] = &["type", "path"];
-const WORKLOAD_ONLINE_KEYS: &[&str] =
-    &["type", "process", "mean_interarrival", "interval", "workload"];
+const WORKLOAD_TRACE_KEYS: &[&str] =
+    &["type", "path", "select", "mips", "statuses", "input_bytes", "output_bytes"];
+const WORKLOAD_CONCAT_KEYS: &[&str] = &["type", "parts"];
+const WORKLOAD_MIX_KEYS: &[&str] = &["type", "parts", "weights"];
+const WORKLOAD_ONLINE_KEYS: &[&str] = &[
+    "type",
+    "process",
+    "mean_interarrival",
+    "interval",
+    "period",
+    "envelope",
+    "amplitude",
+    "workload",
+];
 const JOB_KEYS: &[&str] = &["length_mi", "input_bytes", "output_bytes"];
+const SELECT_KEYS: &[&str] = &["users", "partitions", "max_jobs"];
 
 /// Levenshtein distance (for did-you-mean hints on unknown keys).
 fn edit_distance(a: &str, b: &str) -> usize {
@@ -473,7 +503,53 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
                 Some(dir) if Path::new(path).is_relative() => dir.join(path),
                 _ => PathBuf::from(path),
             };
-            WorkloadSpec::Trace { jobs: load_trace_file(&resolved)? }
+            // `Some` only when a conversion knob was actually written in
+            // the JSON — an explicitly stated knob against a legacy
+            // 4-column file must be rejected even if its value matches the
+            // default, never silently ignored.
+            let knobs_stated =
+                ["mips", "statuses", "input_bytes", "output_bytes"]
+                    .iter()
+                    .any(|k| v.get(k).is_some());
+            let options = if knobs_stated {
+                let mut options = SwfLoadOptions::default();
+                if let Some(m) = opt_f64(v, "trace workload", "mips")? {
+                    options.mips = m;
+                }
+                if let Some(ss) = opt_i64_array(v, "trace workload", "statuses")? {
+                    options.statuses = Some(ss);
+                }
+                if let Some(b) = opt_bytes(v, "trace workload", "input_bytes")? {
+                    options.input_bytes = b;
+                }
+                if let Some(b) = opt_bytes(v, "trace workload", "output_bytes")? {
+                    options.output_bytes = b;
+                }
+                Some(options)
+            } else {
+                None
+            };
+            let selector = match v.get("select") {
+                Some(sel) => parse_trace_selector(sel)?,
+                None => TraceSelector::all(),
+            };
+            WorkloadSpec::Trace {
+                jobs: load_trace_file_with(&resolved, options.as_ref())?,
+                selector,
+            }
+        }
+        "concat" => {
+            reject_unknown_keys(v, "concat workload", WORKLOAD_CONCAT_KEYS)?;
+            WorkloadSpec::Concat { parts: parse_workload_parts(v, "concat", base_dir)? }
+        }
+        "mix" => {
+            reject_unknown_keys(v, "mix workload", WORKLOAD_MIX_KEYS)?;
+            let parts = parse_workload_parts(v, "mix", base_dir)?;
+            let weights = match opt_f64_array(v, "mix workload", "weights")? {
+                Some(ws) => ws,
+                None => vec![1.0; parts.len()],
+            };
+            WorkloadSpec::Mix { parts, weights }
         }
         "online_arrivals" => {
             reject_unknown_keys(v, "online_arrivals workload", WORKLOAD_ONLINE_KEYS)?;
@@ -484,14 +560,23 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
             if matches!(inner, WorkloadSpec::OnlineArrivals { .. }) {
                 bail!("online_arrivals cannot wrap another online_arrivals");
             }
-            let arrivals = match opt_str(v, "workload", "process")?.unwrap_or("poisson") {
-                "poisson" => {
-                    if v.get("interval").is_some() {
+            // Each process rejects the other processes' knobs — a stray
+            // "interval" on a poisson process must not be silently ignored.
+            let only_for = |keys: &[&str], process: &str| -> Result<()> {
+                for key in keys {
+                    if v.get(key).is_some() {
                         bail!(
-                            "online_arrivals: \"interval\" only applies to \
-                             {{\"process\": \"fixed\"}}"
+                            "online_arrivals: {key:?} only applies to \
+                             {{\"process\": {process:?}}}"
                         );
                     }
+                }
+                Ok(())
+            };
+            let arrivals = match opt_str(v, "workload", "process")?.unwrap_or("poisson") {
+                "poisson" => {
+                    only_for(&["interval"], "fixed")?;
+                    only_for(&["period", "envelope", "amplitude"], "modulated")?;
                     ArrivalProcess::Poisson {
                         mean_interarrival: v
                             .req_f64("mean_interarrival")
@@ -499,17 +584,39 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
                     }
                 }
                 "fixed" => {
-                    if v.get("mean_interarrival").is_some() {
-                        bail!(
-                            "online_arrivals: \"mean_interarrival\" only applies to \
-                             {{\"process\": \"poisson\"}}"
-                        );
-                    }
+                    only_for(&["mean_interarrival"], "poisson")?;
+                    only_for(&["period", "envelope", "amplitude"], "modulated")?;
                     ArrivalProcess::Fixed {
                         interval: v.req_f64("interval").context("online_arrivals workload")?,
                     }
                 }
-                other => bail!("unknown arrival process {other:?} (poisson|fixed)"),
+                "modulated" => {
+                    only_for(&["interval"], "fixed")?;
+                    let mean_interarrival = v
+                        .req_f64("mean_interarrival")
+                        .context("online_arrivals workload")?;
+                    let period =
+                        v.req_f64("period").context("modulated arrivals")?;
+                    let envelope = match (
+                        opt_f64_array(v, "modulated arrivals", "envelope")?,
+                        opt_f64(v, "modulated arrivals", "amplitude")?,
+                    ) {
+                        (Some(rates), None) => RateEnvelope::Piecewise { period, rates },
+                        (None, Some(amplitude)) => {
+                            RateEnvelope::Sinusoid { period, amplitude }
+                        }
+                        (Some(_), Some(_)) => bail!(
+                            "modulated arrivals: give either \"envelope\" \
+                             (piecewise rates) or \"amplitude\" (sinusoid), not both"
+                        ),
+                        (None, None) => bail!(
+                            "modulated arrivals: missing \"envelope\" (piecewise \
+                             rates array) or \"amplitude\" (sinusoid depth)"
+                        ),
+                    };
+                    ArrivalProcess::Modulated { mean_interarrival, envelope }
+                }
+                other => bail!("unknown arrival process {other:?} (poisson|fixed|modulated)"),
             };
             WorkloadSpec::OnlineArrivals { workload: Box::new(inner), arrivals }
         }
@@ -525,6 +632,62 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
     };
     spec.validate().with_context(|| format!("{} workload", spec.label()))?;
     Ok(spec)
+}
+
+/// Parse the `"parts"` array of a `concat`/`mix` workload, recursing into
+/// [`parse_workload`] — `base_dir` is threaded through, so a relative trace
+/// path inside a composition resolves against the scenario file's directory
+/// exactly like a top-level trace.
+fn parse_workload_parts(
+    v: &Value,
+    what: &str,
+    base_dir: Option<&Path>,
+) -> Result<Vec<WorkloadSpec>> {
+    let arr = v
+        .get("parts")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("{what} workload: missing \"parts\" array"))?;
+    if arr.is_empty() {
+        bail!("{what} workload: \"parts\" array is empty");
+    }
+    arr.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            parse_workload(p, base_dir).with_context(|| format!("{what} part #{i}"))
+        })
+        .collect()
+}
+
+/// Parse a trace `"select"` object into a [`TraceSelector`]:
+/// `{"users": [3, 7], "partitions": [1], "max_jobs": 100}` — every key
+/// optional, an absent key filters nothing.
+fn parse_trace_selector(v: &Value) -> Result<TraceSelector> {
+    reject_unknown_keys(v, "trace select", SELECT_KEYS)?;
+    Ok(TraceSelector {
+        users: opt_i64_array(v, "trace select", "users")?.unwrap_or_default(),
+        partitions: opt_i64_array(v, "trace select", "partitions")?.unwrap_or_default(),
+        max_jobs: opt_usize(v, "trace select", "max_jobs")?,
+    })
+}
+
+/// Typed optional array of SWF integers. `-1` is legal — it is the SWF
+/// missing-value sentinel, and `"statuses": [1, -1]` legitimately keeps
+/// jobs with an unrecorded status.
+fn opt_i64_array(v: &Value, what: &str, key: &str) -> Result<Option<Vec<i64>>> {
+    match opt_f64_array(v, what, key)? {
+        None => Ok(None),
+        Some(ns) => ns
+            .into_iter()
+            .map(|n| {
+                if n.fract() == 0.0 && (-1.0..9_007_199_254_740_992.0).contains(&n) {
+                    Ok(n as i64)
+                } else {
+                    bail!("{what}: {key:?} must hold integers >= -1, got {n}")
+                }
+            })
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
 }
 
 fn parse_user(
@@ -696,6 +859,42 @@ fn parse_sweep_section(v: &Value, base: Scenario) -> Result<SweepSpec> {
     }
     if let Some(fs) = opt_f64_array(v, "sweep", "heavy_fractions")? {
         spec = spec.heavy_fractions(fs);
+    }
+    if let Some(sels) = v.get("trace_selectors") {
+        let arr = sels.as_arr().ok_or_else(|| {
+            anyhow!("sweep: \"trace_selectors\" must be an array of select objects")
+        })?;
+        let selectors = arr
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                parse_trace_selector(s).with_context(|| format!("sweep trace selector #{i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        spec = spec.trace_selectors(selectors);
+    }
+    if let Some(ws) = v.get("mix_weights") {
+        let arr = ws.as_arr().ok_or_else(|| {
+            anyhow!("sweep: \"mix_weights\" must be an array of weight arrays")
+        })?;
+        let weight_sets = arr
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                row.as_arr()
+                    .ok_or_else(|| {
+                        anyhow!("sweep: mix_weights entry #{i} must be an array of numbers")
+                    })?
+                    .iter()
+                    .map(|w| {
+                        w.as_f64().ok_or_else(|| {
+                            anyhow!("sweep: mix_weights entry #{i} must hold only numbers")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        spec = spec.mix_weights(weight_sets);
     }
     if let Some(n) = opt_usize(v, "sweep", "replications")? {
         spec = spec.replications(n);
@@ -1226,6 +1425,252 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("heavy_tailed"), "{err}");
+    }
+
+    /// A tiny 18-column SWF file with two users (3, 7) for loader tests.
+    fn write_swf(dir: &std::path::Path, name: &str) -> std::path::PathBuf {
+        let text = "\
+; Version: 2\n\
+; UnixStartTime: 845923442\n\
+1 100 5 60 4 -1 -1 4 120 -1 1 3 1 -1 1 0 -1 -1\n\
+2 160 -1 30 2 -1 -1 2 40 -1 1 7 1 -1 1 1 -1 -1\n\
+3 200 1 45 2 -1 -1 2 -1 -1 1 3 1 -1 1 0 -1 -1\n";
+        let path = dir.join(name);
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    #[test]
+    fn parses_swf_trace_with_select_and_conversion_knobs() {
+        use crate::workload::WorkloadSpec;
+        let dir = std::env::temp_dir().join("gridsim_loader_swf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_swf(&dir, "log.swf");
+
+        // Per-user split of one log (the selector), plus SWF conversion
+        // knobs (mips scale, uniform staging).
+        let text = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "trace", "path": "log.swf", "mips": 10,
+                          "input_bytes": 256, "select": {"users": [3]}},
+             "deadline": 1e6, "budget": 1e9},
+            {"workload": {"type": "trace", "path": "log.swf",
+                          "select": {"users": [7]}}}
+        ]}"#;
+        let s = parse_scenario_at(text, Some(dir.as_path())).unwrap();
+        assert_eq!(s.users[0].experiment.num_gridlets(), 2, "user 3's jobs");
+        assert_eq!(s.users[1].experiment.num_gridlets(), 1, "user 7's jobs");
+        let WorkloadSpec::Trace { jobs, selector } = &s.users[0].experiment.workload else {
+            panic!("trace expected")
+        };
+        assert_eq!(jobs.len(), 3, "the full log is retained for re-selection");
+        assert_eq!(selector.users, vec![3]);
+        assert_eq!(jobs[0].length_mi, 60.0 * 4.0 * 10.0, "mips scales MI");
+        assert_eq!(jobs[0].input_bytes, 256);
+
+        // A selector that keeps nothing fails at load time.
+        let empty = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "trace", "path": "log.swf",
+                          "select": {"users": [99]}}}]}"#;
+        let err = format!("{:#}", parse_scenario_at(empty, Some(dir.as_path())).unwrap_err());
+        assert!(err.contains("keeps none"), "{err}");
+
+        // Unknown select key gets the usual did-you-mean treatment.
+        let typo = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "trace", "path": "log.swf",
+                          "select": {"userz": [3]}}}]}"#;
+        let err = format!("{:#}", parse_scenario_at(typo, Some(dir.as_path())).unwrap_err());
+        assert!(err.contains("userz") && err.contains("users"), "{err}");
+
+        // SWF knobs against a legacy 4-column file are rejected loudly.
+        std::fs::write(dir.join("legacy.swf"), "0 1000 1 1\n").unwrap();
+        let legacy = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "trace", "path": "legacy.swf", "mips": 2}}]}"#;
+        let err = format!("{:#}", parse_scenario_at(legacy, Some(dir.as_path())).unwrap_err());
+        assert!(err.contains("legacy"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parses_concat_and_mix_workloads_resolving_nested_paths() {
+        use crate::workload::WorkloadSpec;
+        let dir = std::env::temp_dir().join("gridsim_loader_mix_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_swf(&dir, "log.swf");
+
+        // The regression this pins: a *relative* trace path nested inside a
+        // mix/concat part resolves against the scenario file's directory,
+        // exactly like a top-level trace workload.
+        let text = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "mix",
+                          "weights": [3, 1],
+                          "parts": [
+                              {"type": "heavy_tailed", "gridlets": 10},
+                              {"type": "trace", "path": "log.swf"}]},
+             "deadline": 1e6, "budget": 1e9},
+            {"workload": {"type": "concat",
+                          "parts": [
+                              {"type": "task_farm", "gridlets": 5},
+                              {"type": "trace", "path": "log.swf",
+                               "select": {"users": [3]}}]}}
+        ]}"#;
+        assert!(parse_scenario(text).is_err(), "no base dir: CWD lookup fails");
+        let s = parse_scenario_at(text, Some(dir.as_path())).unwrap();
+        let WorkloadSpec::Mix { parts, weights } = &s.users[0].experiment.workload else {
+            panic!("mix expected")
+        };
+        assert_eq!(parts.len(), 2);
+        assert_eq!(weights, &vec![3.0, 1.0]);
+        assert_eq!(s.users[0].experiment.num_gridlets(), 13);
+        assert_eq!(s.users[1].experiment.num_gridlets(), 7, "concat: 5 farm + 2 trace");
+
+        // Default weights are all-1; weight/part arity mismatch is loud.
+        let unweighted = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "mix", "parts": [
+                {"type": "task_farm", "gridlets": 2},
+                {"type": "task_farm", "gridlets": 3}]}}]}"#;
+        let s = parse_scenario(unweighted).unwrap();
+        let WorkloadSpec::Mix { weights, .. } = &s.users[0].experiment.workload else {
+            panic!("mix expected")
+        };
+        assert_eq!(weights, &vec![1.0, 1.0]);
+        let mismatched = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "mix", "weights": [1],
+                          "parts": [{"type": "task_farm"},
+                                    {"type": "task_farm"}]}}]}"#;
+        let err = format!("{:#}", parse_scenario(mismatched).unwrap_err());
+        assert!(err.contains("weight"), "{err}");
+
+        // Empty parts are rejected with the array named.
+        let empty = r#"{"testbed": "wwg",
+            "users": [{"workload": {"type": "concat", "parts": []}}]}"#;
+        let err = parse_scenario(empty).unwrap_err().to_string();
+        assert!(err.contains("parts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parses_modulated_arrivals() {
+        use crate::workload::{ArrivalProcess, RateEnvelope};
+        let text = r#"{"testbed": "wwg", "users": [
+            {"workload": {"type": "online_arrivals", "process": "modulated",
+                          "mean_interarrival": 10, "period": 1000,
+                          "envelope": [1.0, 0.2],
+                          "workload": {"type": "task_farm", "gridlets": 20}}},
+            {"workload": {"type": "online_arrivals", "process": "modulated",
+                          "mean_interarrival": 5, "period": 500, "amplitude": 0.8,
+                          "workload": {"type": "task_farm", "gridlets": 20}}}
+        ]}"#;
+        let s = parse_scenario(text).unwrap();
+        let crate::workload::WorkloadSpec::OnlineArrivals { arrivals, .. } =
+            &s.users[0].experiment.workload
+        else {
+            panic!("online expected")
+        };
+        assert_eq!(
+            *arrivals,
+            ArrivalProcess::Modulated {
+                mean_interarrival: 10.0,
+                envelope: RateEnvelope::Piecewise { period: 1_000.0, rates: vec![1.0, 0.2] },
+            }
+        );
+        let crate::workload::WorkloadSpec::OnlineArrivals { arrivals, .. } =
+            &s.users[1].experiment.workload
+        else {
+            panic!("online expected")
+        };
+        assert_eq!(
+            *arrivals,
+            ArrivalProcess::Modulated {
+                mean_interarrival: 5.0,
+                envelope: RateEnvelope::Sinusoid { period: 500.0, amplitude: 0.8 },
+            }
+        );
+
+        // Envelope xor amplitude; period required; knobs rejected on the
+        // wrong process; out-of-range values fail via validate().
+        for (bad, needle) in [
+            (
+                r#"{"type": "online_arrivals", "process": "modulated",
+                    "mean_interarrival": 10, "period": 100,
+                    "envelope": [1], "amplitude": 0.5,
+                    "workload": {"type": "task_farm"}}"#,
+                "not both",
+            ),
+            (
+                r#"{"type": "online_arrivals", "process": "modulated",
+                    "mean_interarrival": 10, "period": 100,
+                    "workload": {"type": "task_farm"}}"#,
+                "envelope",
+            ),
+            (
+                r#"{"type": "online_arrivals", "process": "modulated",
+                    "mean_interarrival": 10, "envelope": [1],
+                    "workload": {"type": "task_farm"}}"#,
+                "period",
+            ),
+            (
+                r#"{"type": "online_arrivals", "process": "poisson",
+                    "mean_interarrival": 10, "amplitude": 0.5,
+                    "workload": {"type": "task_farm"}}"#,
+                "modulated",
+            ),
+            (
+                r#"{"type": "online_arrivals", "process": "modulated",
+                    "mean_interarrival": 10, "period": 100, "amplitude": 2,
+                    "workload": {"type": "task_farm"}}"#,
+                "amplitude",
+            ),
+            (
+                r#"{"type": "online_arrivals", "process": "modulated",
+                    "mean_interarrival": 10, "period": 100, "envelope": [0, 0],
+                    "workload": {"type": "task_farm"}}"#,
+                "all 0",
+            ),
+        ] {
+            let text = format!(
+                r#"{{"testbed": "wwg", "users": [{{"workload": {bad}}}]}}"#
+            );
+            let err = format!("{:#}", parse_scenario(&text).unwrap_err());
+            assert!(err.contains(needle), "{needle}: {err}");
+        }
+    }
+
+    #[test]
+    fn sweep_trace_selector_and_mix_weight_axes_parse() {
+        let dir = std::env::temp_dir().join("gridsim_loader_sweep_axes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_swf(&dir, "log.swf");
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"workload": {"type": "mix", "parts": [
+                           {"type": "heavy_tailed", "gridlets": 10},
+                           {"type": "trace", "path": "log.swf"}]},
+                       "deadline": 1e6, "budget": 1e9}],
+            "sweep": {"trace_selectors": [{"users": [3]}, {"users": [7]}],
+                      "mix_weights": [[1, 1], [5, 1]]}
+        }"#;
+        let spec = parse_sweep_at(text, Some(dir.as_path())).unwrap();
+        assert_eq!(spec.trace_selectors.len(), 2);
+        assert_eq!(spec.trace_selectors[0].users, vec![3]);
+        assert_eq!(spec.mix_weights, vec![vec![1.0, 1.0], vec![5.0, 1.0]]);
+        assert_eq!(spec.cell_count(), 4);
+
+        // The axes demand a compatible workload in the base.
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 5}],
+                "sweep": {"trace_selectors": [{"users": [3]}]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("trace"), "{err}");
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{"gridlets": 5}],
+                "sweep": {"mix_weights": [[1, 2]]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mix"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -26,8 +26,12 @@
 //! * [`config`] / [`workload`] — scenario configuration (incl. the WWG
 //!   testbed of Table 2, and a strict JSON loader) and the first-class
 //!   [`workload::WorkloadSpec`] application models: generative task farms
-//!   and heavy-tailed mixes, explicit job lists, SWF-style trace replay,
-//!   and online Poisson/fixed-interval arrivals released mid-run.
+//!   and heavy-tailed mixes, explicit job lists, real-trace replay (legacy
+//!   4-column and full 18-column SWF logs, split per user by
+//!   [`workload::TraceSelector`]), declarative composition (`concat`/`mix`),
+//!   and online arrivals released mid-run (Poisson, fixed-interval, or
+//!   day/night rate-modulated). See `docs/ARCHITECTURE.md` for the
+//!   paper-section ↔ module map and the online-arrival event flow.
 //! * [`figures`] — the harness that regenerates every table and figure of
 //!   the paper's evaluation section.
 //!
@@ -87,15 +91,31 @@
 //! runs, `run_to_completion()` is the whole lifecycle in one call; for
 //! parameter grids, build a [`sweep::SweepSpec`].
 
+// Every public item must carry rustdoc (CI runs `cargo doc` with
+// `-D warnings`). Modules that predate the policy carry a module-level
+// `allow` below; remove an `allow` once its module is fully documented —
+// never add a new one. `workload`, `sweep` and `session` are fully
+// documented and enforced.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)] // TODO(docs): documented module headers, item gaps remain
 pub mod broker;
+#[allow(missing_docs)] // TODO(docs)
 pub mod config;
+#[allow(missing_docs)] // TODO(docs)
 pub mod des;
+#[allow(missing_docs)] // TODO(docs)
 pub mod figures;
+#[allow(missing_docs)] // TODO(docs)
 pub mod gridsim;
+#[allow(missing_docs)] // TODO(docs)
 pub mod output;
+#[allow(missing_docs)] // TODO(docs)
 pub mod runtime;
+#[allow(missing_docs)] // TODO(docs)
 pub mod scenario;
 pub mod session;
 pub mod sweep;
+#[allow(missing_docs)] // TODO(docs)
 pub mod util;
 pub mod workload;

@@ -94,10 +94,13 @@ fn print_usage() {
                                        inline sweep on the WWG testbed; writes\n\
                                        sweep_long.csv + sweep_agg.csv to --out\n\
                                        (workload-shape axes need a scenario file\n\
-                                       whose users declare matching workloads)\n\
+                                       whose users declare matching workloads;\n\
+                                       the structured trace_selectors/mix_weights\n\
+                                       axes are file-only — see README)\n\
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
-                                       resource-selection|traces|multi3100|multi10000|all)\n\
+                                       resource-selection|traces|multi3100|multi10000|\n\
+                                       day-night|all)\n\
            selftest                    quick end-to-end smoke run\n\
          \n\
          common flags: --advisor native|xla   --seed N   --out DIR   --jobs N\n\
@@ -399,6 +402,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(set.as_str(), "multi10000" | "all") {
         emit("figs36_38_multi_user_d10000", figures::figs33_38(10_000.0, &cfg))?;
+    }
+    if matches!(set.as_str(), "day-night" | "all") {
+        emit("fig_day_night_modulated_arrivals", figures::fig_day_night(&cfg))?;
     }
     if wrote.is_empty() {
         bail!("unknown figure set {set:?}");

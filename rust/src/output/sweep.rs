@@ -20,7 +20,7 @@ use crate::util::stats::Summary;
 
 /// Axis-coordinate columns shared by both writers (minus the replication
 /// column, which the writers append in their own shape).
-const AXIS_COLS: [&str; 8] = [
+const AXIS_COLS: [&str; 10] = [
     "cell",
     "resources",
     "policy",
@@ -29,6 +29,8 @@ const AXIS_COLS: [&str; 8] = [
     "budget",
     "arrival_mean",
     "heavy_fraction",
+    "trace_select",
+    "mix_weights",
 ];
 
 fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> {
@@ -44,6 +46,8 @@ fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> 
         cell.budget.map(trim_float).unwrap_or_else(|| "base".into()),
         cell.mean_interarrival.map(trim_float).unwrap_or_else(|| "base".into()),
         cell.heavy_fraction.map(trim_float).unwrap_or_else(|| "base".into()),
+        spec.selector_label(cell),
+        spec.mix_weights_label(cell),
     ]
 }
 
@@ -192,10 +196,14 @@ mod tests {
         assert_eq!(csv.len(), 6);
         let text = csv.to_string();
         assert!(text.starts_with(
-            "cell,resources,policy,users,deadline,budget,arrival_mean,heavy_fraction,"
+            "cell,resources,policy,users,deadline,budget,arrival_mean,heavy_fraction,\
+             trace_select,mix_weights,"
         ));
         assert!(text.contains(",all,cost,"), "unswept axes echo base values: {text}");
-        assert!(text.contains(",base,base,"), "unswept workload axes print base: {text}");
+        assert!(
+            text.contains(",base,base,base,base,"),
+            "unswept workload axes print base: {text}"
+        );
     }
 
     #[test]
@@ -212,10 +220,10 @@ mod tests {
         // With one replication every stderr is exactly 0.
         for line in text.lines().skip(1) {
             let fields: Vec<&str> = line.split(',').collect();
-            assert_eq!(fields[8], "1", "replications column");
-            assert_eq!(fields[10], "0", "stderr with 1 rep");
+            assert_eq!(fields[10], "1", "replications column");
             assert_eq!(fields[12], "0", "stderr with 1 rep");
             assert_eq!(fields[14], "0", "stderr with 1 rep");
+            assert_eq!(fields[16], "0", "stderr with 1 rep");
         }
     }
 
@@ -233,16 +241,16 @@ mod tests {
         assert_eq!(csv.len(), 1, "3 replications collapse into one row");
         let text = csv.to_string();
         let fields: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
-        assert_eq!(fields[8], "3", "replications column");
+        assert_eq!(fields[10], "3", "replications column");
         // Mean time used must match the hand-computed mean of the cells.
         let mut expect = Summary::new();
         for o in &results.outcomes {
             expect.add(o.report.mean_finish_time());
         }
-        assert_eq!(fields[11], trim_float(expect.mean()), "mean_time_used");
-        assert_eq!(fields[12], trim_float(expect.std_err()), "stderr_time_used");
+        assert_eq!(fields[13], trim_float(expect.mean()), "mean_time_used");
+        assert_eq!(fields[14], trim_float(expect.std_err()), "stderr_time_used");
         // Engine events are summed across replications.
         let events: u64 = results.outcomes.iter().map(|o| o.report.events).sum();
-        assert_eq!(fields[16], events.to_string());
+        assert_eq!(fields[18], events.to_string());
     }
 }

@@ -79,6 +79,8 @@ pub enum UserOutcome {
 }
 
 impl UserOutcome {
+    /// Did the broker terminate the experiment itself (as opposed to the
+    /// kernel's time/event limit cutting the run short)?
     pub fn is_finished(&self) -> bool {
         matches!(self, UserOutcome::Finished(_))
     }
@@ -90,6 +92,7 @@ impl UserOutcome {
         }
     }
 
+    /// Consume the outcome into its result — complete or partial.
     pub fn into_result(self) -> ExperimentResult {
         match self {
             UserOutcome::Finished(r) | UserOutcome::DidNotFinish(r) => r,

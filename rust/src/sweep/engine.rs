@@ -19,7 +19,9 @@ use std::sync::Mutex;
 /// One executed cell: the grid point plus its simulation report.
 #[derive(Debug, Clone)]
 pub struct CellOutcome {
+    /// The grid point this outcome belongs to.
     pub cell: SweepCell,
+    /// The cell's full simulation report.
     pub report: ScenarioReport,
 }
 

@@ -4,7 +4,8 @@
 //!
 //! A [`SweepSpec`] names a base [`Scenario`] plus cartesian axes (deadline,
 //! budget, user count, scheduling policy, resource subset, workload shape —
-//! arrival mean and heavy-tail fraction — and replications).
+//! arrival mean, heavy-tail fraction, trace selector, mix weights — and
+//! replications).
 //! [`SweepSpec::cells`] expands the grid into independent [`SweepCell`]s in
 //! a fixed row-major order, and [`engine::run_sweep`] executes them on a
 //! fixed-size `std::thread` worker pool. Three properties make sweeps
@@ -27,6 +28,7 @@ pub use engine::{default_jobs, run_sweep, CellOutcome, SweepResults};
 
 use crate::broker::Optimization;
 use crate::scenario::{Scenario, UserSpec};
+use crate::workload::TraceSelector;
 use anyhow::{bail, Result};
 
 /// A declarative parameter sweep over a base scenario.
@@ -59,6 +61,16 @@ pub struct SweepSpec {
     /// heavy-tailed workload (possibly inside online arrivals). Requires at
     /// least one such user in the base.
     pub heavy_fractions: Vec<f64>,
+    /// Trace-selector override, applied to every trace workload in the cell
+    /// (e.g. replaying one SWF log as different per-user slices across
+    /// cells). Requires at least one trace user in the base, and every
+    /// selector must keep at least one job of every trace it retargets.
+    pub trace_selectors: Vec<TraceSelector>,
+    /// Mix-interleave weight override: each entry is one weight vector,
+    /// applied to every [`crate::workload::WorkloadSpec::Mix`] whose part
+    /// count matches the vector's length. Requires at least one matching
+    /// mix in the base.
+    pub mix_weights: Vec<Vec<f64>>,
     /// Independent replications per grid point (≥ 1). Replication `r` runs
     /// with [`replication_seed`]`(base.seed, r)`.
     pub replications: usize,
@@ -76,6 +88,8 @@ impl SweepSpec {
             resource_subsets: Vec::new(),
             mean_interarrivals: Vec::new(),
             heavy_fractions: Vec::new(),
+            trace_selectors: Vec::new(),
+            mix_weights: Vec::new(),
             replications: 1,
         }
     }
@@ -122,6 +136,18 @@ impl SweepSpec {
         self
     }
 
+    /// Axis builder: trace selectors (trace workloads).
+    pub fn trace_selectors(mut self, selectors: Vec<TraceSelector>) -> SweepSpec {
+        self.trace_selectors = selectors;
+        self
+    }
+
+    /// Axis builder: mix interleave weight vectors (mix workloads).
+    pub fn mix_weights(mut self, weight_sets: Vec<Vec<f64>>) -> SweepSpec {
+        self.mix_weights = weight_sets;
+        self
+    }
+
     /// Axis builder: replications per grid point.
     pub fn replications(mut self, n: usize) -> SweepSpec {
         self.replications = n;
@@ -140,6 +166,8 @@ impl SweepSpec {
             * axis_len(&self.budgets)
             * axis_len(&self.mean_interarrivals)
             * axis_len(&self.heavy_fractions)
+            * axis_len(&self.trace_selectors)
+            * axis_len(&self.mix_weights)
             * self.replications.max(1)
     }
 
@@ -205,14 +233,57 @@ impl SweepSpec {
                 );
             }
         }
+        if !self.trace_selectors.is_empty() {
+            if !self.base.users.iter().any(|u| u.experiment.workload.has_trace()) {
+                bail!(
+                    "sweep: \"trace_selectors\" needs at least one user with a trace \
+                     workload in the base scenario"
+                );
+            }
+            // Every cell must still declare >= 1 job per retargeted trace:
+            // check each selector against the base users' (borrowed) traces.
+            for (i, selector) in self.trace_selectors.iter().enumerate() {
+                for (u, user) in self.base.users.iter().enumerate() {
+                    user.experiment.workload.check_trace_selector(selector).map_err(|e| {
+                        e.context(format!(
+                            "sweep: trace selector #{i} ({:?}) against user #{u}",
+                            selector.label()
+                        ))
+                    })?;
+                }
+            }
+        }
+        if !self.mix_weights.is_empty() {
+            for (i, weights) in self.mix_weights.iter().enumerate() {
+                if weights.is_empty() {
+                    bail!("sweep: mix_weights entry #{i} is empty");
+                }
+                if let Some(w) = weights.iter().find(|w| !w.is_finite() || **w <= 0.0) {
+                    bail!("sweep: mix weights must be finite and > 0, got {w}");
+                }
+                if !self
+                    .base
+                    .users
+                    .iter()
+                    .any(|u| u.experiment.workload.has_mix_of(weights.len()))
+                {
+                    bail!(
+                        "sweep: mix_weights entry #{i} has {} weights, but no user in \
+                         the base scenario has a mix workload with {} parts",
+                        weights.len(),
+                        weights.len()
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
     /// Expand the grid into cells, row-major over the axes in the fixed
     /// order *subset → policy → users → deadline → budget → arrival mean →
-    /// heavy fraction → replication* (replication varies fastest). The order
-    /// is part of the output contract: cell index == CSV row block,
-    /// independent of execution.
+    /// heavy fraction → trace selector → mix weights → replication*
+    /// (replication varies fastest). The order is part of the output
+    /// contract: cell index == CSV row block, independent of execution.
     pub fn cells(&self) -> Vec<SweepCell> {
         fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
             if values.is_empty() {
@@ -221,35 +292,45 @@ impl SweepSpec {
                 values.iter().copied().map(Some).collect()
             }
         }
-        let subsets: Vec<Option<usize>> = if self.resource_subsets.is_empty() {
-            vec![None]
-        } else {
-            (0..self.resource_subsets.len()).map(Some).collect()
-        };
+        /// Index-valued axis for non-`Copy` axis payloads (subsets,
+        /// selectors, weight vectors live on the spec; cells carry indices).
+        fn index_axis<T>(values: &[T]) -> Vec<Option<usize>> {
+            if values.is_empty() {
+                vec![None]
+            } else {
+                (0..values.len()).map(Some).collect()
+            }
+        }
         let mut cells = Vec::with_capacity(self.cell_count());
-        for &subset in &subsets {
+        for &subset in &index_axis(&self.resource_subsets) {
             for &policy in &axis(&self.policies) {
                 for &users in &axis(&self.user_counts) {
                     for &deadline in &axis(&self.deadlines) {
                         for &budget in &axis(&self.budgets) {
                             for &mean_interarrival in &axis(&self.mean_interarrivals) {
                                 for &heavy_fraction in &axis(&self.heavy_fractions) {
-                                    for replication in 0..self.replications.max(1) {
-                                        cells.push(SweepCell {
-                                            index: cells.len(),
-                                            subset,
-                                            policy,
-                                            users,
-                                            deadline,
-                                            budget,
-                                            mean_interarrival,
-                                            heavy_fraction,
-                                            replication,
-                                            seed: replication_seed(
-                                                self.base.seed,
-                                                replication,
-                                            ),
-                                        });
+                                    for &trace_selector in &index_axis(&self.trace_selectors) {
+                                        for &mix_weights in &index_axis(&self.mix_weights) {
+                                            for replication in 0..self.replications.max(1) {
+                                                cells.push(SweepCell {
+                                                    index: cells.len(),
+                                                    subset,
+                                                    policy,
+                                                    users,
+                                                    deadline,
+                                                    budget,
+                                                    mean_interarrival,
+                                                    heavy_fraction,
+                                                    trace_selector,
+                                                    mix_weights,
+                                                    replication,
+                                                    seed: replication_seed(
+                                                        self.base.seed,
+                                                        replication,
+                                                    ),
+                                                });
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -286,7 +367,7 @@ impl SweepSpec {
                 .collect();
         }
         for user in &mut scenario.users {
-            apply_user_overrides(user, cell);
+            self.apply_user_overrides(user, cell);
         }
         scenario
     }
@@ -298,25 +379,52 @@ impl SweepSpec {
             Some(i) => self.resource_subsets[i].join("+"),
         }
     }
-}
 
-fn apply_user_overrides(user: &mut UserSpec, cell: &SweepCell) {
-    if let Some(d) = cell.deadline {
-        user.experiment = user.experiment.clone().deadline(d);
+    /// Label for a cell's trace-selector axis (`"base"` when unswept).
+    pub fn selector_label(&self, cell: &SweepCell) -> String {
+        match cell.trace_selector {
+            None => "base".to_string(),
+            Some(i) => self.trace_selectors[i].label(),
+        }
     }
-    if let Some(b) = cell.budget {
-        user.experiment = user.experiment.clone().budget(b);
+
+    /// Label for a cell's mix-weights axis (`"base"` when unswept,
+    /// `+`-joined weights otherwise).
+    pub fn mix_weights_label(&self, cell: &SweepCell) -> String {
+        match cell.mix_weights {
+            None => "base".to_string(),
+            Some(i) => self.mix_weights[i]
+                .iter()
+                .map(|w| crate::output::csv::trim_float(*w))
+                .collect::<Vec<_>>()
+                .join("+"),
+        }
     }
-    if let Some(p) = cell.policy {
-        user.experiment = user.experiment.clone().optimization(p);
-    }
-    // Workload-shape axes only touch users whose workload has the knob
-    // (validate() guarantees at least one does).
-    if let Some(m) = cell.mean_interarrival {
-        user.experiment.workload.set_arrival_mean(m);
-    }
-    if let Some(f) = cell.heavy_fraction {
-        user.experiment.workload.set_heavy_fraction(f);
+
+    fn apply_user_overrides(&self, user: &mut UserSpec, cell: &SweepCell) {
+        if let Some(d) = cell.deadline {
+            user.experiment = user.experiment.clone().deadline(d);
+        }
+        if let Some(b) = cell.budget {
+            user.experiment = user.experiment.clone().budget(b);
+        }
+        if let Some(p) = cell.policy {
+            user.experiment = user.experiment.clone().optimization(p);
+        }
+        // Workload-shape axes only touch users whose workload has the knob
+        // (validate() guarantees at least one does).
+        if let Some(m) = cell.mean_interarrival {
+            user.experiment.workload.set_arrival_mean(m);
+        }
+        if let Some(f) = cell.heavy_fraction {
+            user.experiment.workload.set_heavy_fraction(f);
+        }
+        if let Some(i) = cell.trace_selector {
+            user.experiment.workload.set_trace_selector(&self.trace_selectors[i]);
+        }
+        if let Some(i) = cell.mix_weights {
+            user.experiment.workload.set_mix_weights(&self.mix_weights[i]);
+        }
     }
 }
 
@@ -329,14 +437,22 @@ pub struct SweepCell {
     pub index: usize,
     /// Index into [`SweepSpec::resource_subsets`].
     pub subset: Option<usize>,
+    /// Scheduling-policy override.
     pub policy: Option<Optimization>,
+    /// User-count override.
     pub users: Option<usize>,
+    /// Absolute deadline override.
     pub deadline: Option<f64>,
+    /// Absolute budget override.
     pub budget: Option<f64>,
     /// Mean inter-arrival override (online-arrivals workloads).
     pub mean_interarrival: Option<f64>,
     /// Heavy-tail fraction override (heavy-tailed workloads).
     pub heavy_fraction: Option<f64>,
+    /// Index into [`SweepSpec::trace_selectors`] (trace workloads).
+    pub trace_selector: Option<usize>,
+    /// Index into [`SweepSpec::mix_weights`] (mix workloads).
+    pub mix_weights: Option<usize>,
     /// Replication number, `0..replications`.
     pub replication: usize,
     /// The RNG seed this cell runs with (a pure function of the base seed
@@ -514,6 +630,67 @@ mod tests {
         assert!(err.to_string().contains("heavy_tailed"), "{err}");
         let err = SweepSpec::over(base()).mean_interarrivals(vec![0.0]).validate().unwrap_err();
         assert!(err.to_string().contains("> 0"), "{err}");
+    }
+
+    #[test]
+    fn trace_selector_and_mix_weight_axes() {
+        use crate::workload::{TraceJob, TraceSelector, WorkloadSpec};
+        let mut jobs = vec![
+            TraceJob::new(0.0, 500.0, 0, 0),
+            TraceJob::new(1.0, 600.0, 0, 0),
+            TraceJob::new(2.0, 700.0, 0, 0),
+        ];
+        jobs[0].user = Some(3);
+        jobs[1].user = Some(7);
+        jobs[2].user = Some(3);
+        let mut traced = base();
+        traced.users[0].experiment = traced.users[0].experiment.clone().workload(
+            WorkloadSpec::mix(vec![
+                WorkloadSpec::trace(jobs),
+                WorkloadSpec::task_farm(4, 500.0, 0.0),
+            ]),
+        );
+        let spec = SweepSpec::over(traced.clone())
+            .trace_selectors(vec![TraceSelector::user(3), TraceSelector::user(7)])
+            .mix_weights(vec![vec![1.0, 1.0], vec![9.0, 1.0]]);
+        spec.validate().unwrap();
+        assert_eq!(spec.cell_count(), 4);
+        let cells = spec.cells();
+        // Mix weights vary faster than trace selectors.
+        assert_eq!(cells[0].trace_selector, Some(0));
+        assert_eq!(cells[0].mix_weights, Some(0));
+        assert_eq!(cells[1].mix_weights, Some(1));
+        assert_eq!(cells[2].trace_selector, Some(1));
+        let scenario = spec.scenario_for(&cells[3]);
+        let workload = &scenario.users[0].experiment.workload;
+        assert_eq!(workload.declared_jobs(), 1 + 4, "user 7 has one trace job");
+        let WorkloadSpec::Mix { weights, .. } = workload else { panic!("mix expected") };
+        assert_eq!(weights, &vec![9.0, 1.0]);
+        assert_eq!(spec.selector_label(&cells[3]), "u7");
+        assert_eq!(spec.mix_weights_label(&cells[3]), "9+1");
+        // Unswept axes label as "base".
+        let unswept = SweepSpec::over(traced.clone());
+        let plain = unswept.cells();
+        assert_eq!(unswept.selector_label(&plain[0]), "base");
+        assert_eq!(unswept.mix_weights_label(&plain[0]), "base");
+
+        // A selector that would empty a cell's trace fails validation.
+        let err = SweepSpec::over(traced.clone())
+            .trace_selectors(vec![TraceSelector::user(99)])
+            .validate()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("keeps none"), "{err:#}");
+        // Axes against a base without the matching workload fail.
+        let err = SweepSpec::over(base())
+            .trace_selectors(vec![TraceSelector::all()])
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("trace"), "{err}");
+        let err =
+            SweepSpec::over(traced.clone()).mix_weights(vec![vec![1.0; 3]]).validate();
+        assert!(err.unwrap_err().to_string().contains("3 parts"), "arity mismatch");
+        let err = SweepSpec::over(traced).mix_weights(vec![vec![]]).validate().unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
     }
 
     #[test]

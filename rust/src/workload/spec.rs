@@ -13,12 +13,20 @@
 //!   stretched by up to a multiplier (exercises SJF/backfilling and broker
 //!   re-planning under heterogeneous job lengths).
 //! * [`WorkloadSpec::Explicit`] — a literal job list.
-//! * [`WorkloadSpec::Trace`] — jobs replayed from an SWF-style trace file
-//!   (`submit_time length_mi input_bytes output_bytes` per line, see
-//!   [`crate::workload::trace`]); jobs with `submit_time > 0` arrive online.
+//! * [`WorkloadSpec::Trace`] — jobs replayed from a trace file (legacy
+//!   4-column or full 18-column SWF, see [`crate::workload::trace`]),
+//!   optionally sliced by a [`TraceSelector`] (e.g. one SWF `user_id`'s jobs
+//!   per simulated user); jobs with `submit_time > 0` arrive online.
+//! * [`WorkloadSpec::Concat`] — parts replayed side by side as one
+//!   workload: job lists are appended (ids in part order), release offsets
+//!   kept.
+//! * [`WorkloadSpec::Mix`] — like `Concat`, but the combined dispatch order
+//!   is a weight-biased, seed-stable random interleave — the declarative way
+//!   to blend e.g. a heavy-tailed batch with a trace replay.
 //! * [`WorkloadSpec::OnlineArrivals`] — any of the above with release times
-//!   reassigned by a Poisson or fixed-interval [`ArrivalProcess`]
-//!   (Nimrod/G-style parameter-sweep jobs streaming in over time).
+//!   reassigned by a Poisson, fixed-interval, or rate-modulated
+//!   [`ArrivalProcess`] (Nimrod/G-style parameter-sweep jobs streaming in
+//!   over time; [`ArrivalProcess::Modulated`] models day/night cycles).
 //!
 //! [`WorkloadSpec::materialize`] turns the spec into a deterministic list of
 //! [`Release`]s (offset from submission + Gridlet) using the caller's seeded
@@ -31,22 +39,124 @@ use crate::gridsim::random::GridSimRandom;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 
+pub use super::trace::TraceSelector;
+
 /// One job of an [`WorkloadSpec::Explicit`] workload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
+    /// Processing requirement in MI.
     pub length_mi: f64,
+    /// Input staging size in bytes.
     pub input_bytes: u64,
+    /// Output staging size in bytes.
     pub output_bytes: u64,
 }
 
-/// One job of an [`WorkloadSpec::Trace`] workload: an [`JobSpec`] plus the
-/// submission offset (simulation time units after the experiment starts).
+/// One job of an [`WorkloadSpec::Trace`] workload: a job shape plus the
+/// submission offset (simulation time units after the experiment starts)
+/// and, for jobs derived from an 18-column SWF log, the originating
+/// `user_id`/`partition` (what a [`TraceSelector`] filters on).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceJob {
+    /// Release offset from experiment submission (0 = initial batch).
     pub submit_time: f64,
+    /// Processing requirement in MI.
     pub length_mi: f64,
+    /// Input staging size in bytes.
     pub input_bytes: u64,
+    /// Output staging size in bytes.
     pub output_bytes: u64,
+    /// SWF `user_id` the job came from (`None` for legacy 4-column jobs).
+    pub user: Option<i64>,
+    /// SWF `partition` the job ran in (`None` for legacy 4-column jobs).
+    pub partition: Option<i64>,
+}
+
+impl TraceJob {
+    /// A metadata-free trace job (the legacy 4-column shape).
+    pub fn new(submit_time: f64, length_mi: f64, input_bytes: u64, output_bytes: u64) -> TraceJob {
+        TraceJob { submit_time, length_mi, input_bytes, output_bytes, user: None, partition: None }
+    }
+}
+
+/// Rate envelope for [`ArrivalProcess::Modulated`]: a periodic multiplier
+/// `e(t) ≥ 0` applied to the base Poisson rate `1/mean_interarrival`, so
+/// the instantaneous rate is `λ(t) = e(t)/mean_interarrival`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RateEnvelope {
+    /// Piecewise-constant multipliers over equal segments of one `period`,
+    /// cycled forever: `rates[i]` applies on
+    /// `t mod period ∈ [i·period/n, (i+1)·period/n)`. A two-segment
+    /// `rates: [1.0, 0.1]` is a day/night cycle; a zero segment shuts
+    /// arrivals off entirely during it.
+    Piecewise {
+        /// Cycle length in simulation time units.
+        period: f64,
+        /// Per-segment rate multipliers (`≥ 0`, at least one `> 0`).
+        rates: Vec<f64>,
+    },
+    /// Smooth diurnal modulation `e(t) = 1 + amplitude·sin(2πt/period)`
+    /// with `amplitude ∈ [0, 1]`.
+    Sinusoid {
+        /// Cycle length in simulation time units.
+        period: f64,
+        /// Modulation depth in `[0, 1]` (0 = plain Poisson).
+        amplitude: f64,
+    },
+}
+
+impl RateEnvelope {
+    /// The multiplier at time `t` (periodic).
+    pub fn multiplier(&self, t: f64) -> f64 {
+        match self {
+            RateEnvelope::Piecewise { period, rates } => {
+                let phase = t.rem_euclid(*period) / period;
+                let idx = ((phase * rates.len() as f64) as usize).min(rates.len() - 1);
+                rates[idx]
+            }
+            RateEnvelope::Sinusoid { period, amplitude } => {
+                1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period).sin()
+            }
+        }
+    }
+
+    /// The envelope's maximum multiplier (the thinning majorant).
+    pub fn max_multiplier(&self) -> f64 {
+        match self {
+            RateEnvelope::Piecewise { rates, .. } => {
+                rates.iter().copied().fold(0.0, f64::max)
+            }
+            RateEnvelope::Sinusoid { amplitude, .. } => 1.0 + amplitude,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self {
+            RateEnvelope::Piecewise { period, rates } => {
+                if *period <= 0.0 || !period.is_finite() {
+                    bail!("modulated arrivals need period > 0, got {period}");
+                }
+                if rates.is_empty() {
+                    bail!("modulated arrivals need at least one envelope rate");
+                }
+                if let Some(r) = rates.iter().find(|r| !r.is_finite() || **r < 0.0) {
+                    bail!("envelope rates must be finite and >= 0, got {r}");
+                }
+                if rates.iter().all(|&r| r == 0.0) {
+                    bail!("envelope rates are all 0 — no job could ever arrive");
+                }
+            }
+            RateEnvelope::Sinusoid { period, amplitude } => {
+                if *period <= 0.0 || !period.is_finite() {
+                    bail!("modulated arrivals need period > 0, got {period}");
+                }
+                if !(0.0..=1.0).contains(amplitude) {
+                    bail!("sinusoid amplitude must be in [0, 1], got {amplitude}");
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 /// When online jobs are released to the broker, relative to experiment
@@ -56,15 +166,33 @@ pub enum ArrivalProcess {
     /// Poisson process: exponential inter-arrival gaps with the given mean
     /// (the promoted `poisson_arrivals` helper). The first job arrives after
     /// the first gap.
-    Poisson { mean_interarrival: f64 },
+    Poisson {
+        /// Mean inter-arrival gap.
+        mean_interarrival: f64,
+    },
     /// Fixed-interval release: job `i` arrives at `i × interval` (the first
     /// job is part of the initial batch).
-    Fixed { interval: f64 },
+    Fixed {
+        /// Gap between consecutive releases.
+        interval: f64,
+    },
+    /// Non-homogeneous Poisson process: a base rate `1/mean_interarrival`
+    /// shaped by a periodic [`RateEnvelope`] (day/night cycles). Sampled by
+    /// Lewis–Shedler thinning of the constant-rate majorant
+    /// `max_multiplier/mean_interarrival`, so offsets are a pure function of
+    /// the RNG stream — the determinism and common-random-numbers sweep
+    /// guarantees hold exactly as for [`ArrivalProcess::Poisson`].
+    Modulated {
+        /// Mean inter-arrival gap while the envelope multiplier is 1.
+        mean_interarrival: f64,
+        /// The periodic rate modulation.
+        envelope: RateEnvelope,
+    },
 }
 
 impl ArrivalProcess {
-    /// Release offsets for `n` jobs, drawn from `rng` (Poisson) or computed
-    /// (fixed). Monotonically non-decreasing.
+    /// Release offsets for `n` jobs, drawn from `rng` (Poisson/modulated) or
+    /// computed (fixed). Monotonically non-decreasing.
     pub fn offsets(&self, n: usize, rng: &mut Rng) -> Vec<f64> {
         match self {
             ArrivalProcess::Poisson { mean_interarrival } => {
@@ -77,6 +205,27 @@ impl ArrivalProcess {
                     .collect()
             }
             ArrivalProcess::Fixed { interval } => (0..n).map(|i| i as f64 * interval).collect(),
+            ArrivalProcess::Modulated { mean_interarrival, envelope } => {
+                // Thinning: candidates from the constant majorant rate
+                // e_max/mean, each accepted with probability e(t)/e_max.
+                // Every candidate consumes exactly one exponential draw and
+                // one uniform draw, so the offsets depend only on the RNG
+                // stream, never on wall-clock or evaluation order.
+                let e_max = envelope.max_multiplier();
+                // Hard assert (not debug): with e_max = 0 no candidate can
+                // ever be accepted and this loop would hang a release build.
+                // validate() reports the same condition as a readable error.
+                assert!(e_max > 0.0, "modulated arrivals: envelope rates are all 0");
+                let mut t = 0.0;
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    t += rng.exponential(*mean_interarrival / e_max);
+                    if rng.next_f64() * e_max < envelope.multiplier(t) {
+                        out.push(t);
+                    }
+                }
+                out
+            }
         }
     }
 
@@ -92,6 +241,14 @@ impl ArrivalProcess {
                     bail!("fixed arrivals need interval >= 0, got {interval}");
                 }
             }
+            ArrivalProcess::Modulated { mean_interarrival, envelope } => {
+                if *mean_interarrival <= 0.0 || mean_interarrival.is_nan() {
+                    bail!(
+                        "modulated arrivals need mean_interarrival > 0, got {mean_interarrival}"
+                    );
+                }
+                envelope.validate()?;
+            }
         }
         Ok(())
     }
@@ -101,7 +258,9 @@ impl ArrivalProcess {
 /// experiment submission (0 = part of the initial batch).
 #[derive(Debug, Clone)]
 pub struct Release {
+    /// Release offset from experiment submission.
     pub offset: f64,
+    /// The job released at that offset.
     pub gridlet: Gridlet,
 }
 
@@ -112,29 +271,77 @@ pub enum WorkloadSpec {
     /// Paper §5.2: `num_gridlets` jobs of `base_length_mi` MI with a
     /// 0–`length_variation` positive random variation.
     TaskFarm {
+        /// Number of jobs.
         num_gridlets: usize,
+        /// Minimum job length in MI.
         base_length_mi: f64,
+        /// Upper bound of the positive random spread, as a fraction of
+        /// `base_length_mi` (in `[0, 1]`).
         length_variation: f64,
+        /// Input staging size per job, bytes.
         input_bytes: u64,
+        /// Output staging size per job, bytes.
         output_bytes: u64,
     },
     /// Most jobs within ±10% of `base_length_mi`; a `heavy_fraction` of them
     /// stretched by up to `heavy_multiplier`×.
     HeavyTailed {
+        /// Number of jobs.
         num_gridlets: usize,
+        /// Central job length in MI.
         base_length_mi: f64,
+        /// Fraction of jobs stretched (in `[0, 1]`).
         heavy_fraction: f64,
+        /// Maximum stretch factor (`>= 1`).
         heavy_multiplier: f64,
+        /// Input staging size per job, bytes.
         input_bytes: u64,
+        /// Output staging size per job, bytes.
         output_bytes: u64,
     },
     /// A literal job list, released as one batch.
-    Explicit { jobs: Vec<JobSpec> },
-    /// SWF-style trace replay: each job carries its own submission offset.
-    Trace { jobs: Vec<TraceJob> },
+    Explicit {
+        /// The jobs, in dispatch order.
+        jobs: Vec<JobSpec>,
+    },
+    /// Trace replay (legacy 4-column or SWF-derived): each job carries its
+    /// own submission offset, and `selector` picks the replayed slice
+    /// (e.g. one SWF user's jobs). `declared_jobs` and `materialize` both
+    /// see the *selected* jobs only.
+    Trace {
+        /// The full job list as loaded from the trace file.
+        jobs: Vec<TraceJob>,
+        /// The slice of `jobs` this workload replays
+        /// ([`TraceSelector::all`] = everything).
+        selector: TraceSelector,
+    },
+    /// Composition: the parts' job lists appended into one workload — ids in
+    /// part order, each job keeping its own release offset. Two batch parts
+    /// become one larger batch; two traces become a merged replay.
+    Concat {
+        /// The composed workloads, in order.
+        parts: Vec<WorkloadSpec>,
+    },
+    /// Composition with a weight-biased, seed-stable random interleave:
+    /// every part contributes all of its jobs, but the combined generation
+    /// order (which sets Gridlet ids, i.e. dispatch order among
+    /// equal-offset jobs) is drawn by repeatedly picking a non-exhausted
+    /// part with probability proportional to its weight. Offsets are kept,
+    /// exactly as in [`WorkloadSpec::Concat`].
+    Mix {
+        /// The composed workloads.
+        parts: Vec<WorkloadSpec>,
+        /// Relative interleave weights, one per part (`> 0`).
+        weights: Vec<f64>,
+    },
     /// A generative wrapper: `workload`'s jobs with release times reassigned
     /// by `arrivals` (nesting another `OnlineArrivals` is rejected).
-    OnlineArrivals { workload: Box<WorkloadSpec>, arrivals: ArrivalProcess },
+    OnlineArrivals {
+        /// The workload whose jobs are re-timed.
+        workload: Box<WorkloadSpec>,
+        /// The arrival process assigning release offsets.
+        arrivals: ArrivalProcess,
+    },
 }
 
 impl WorkloadSpec {
@@ -167,18 +374,41 @@ impl WorkloadSpec {
         WorkloadSpec::Explicit { jobs }
     }
 
-    /// A trace replay.
+    /// A trace replay of every job in `jobs`.
     pub fn trace(jobs: Vec<TraceJob>) -> WorkloadSpec {
-        WorkloadSpec::Trace { jobs }
+        WorkloadSpec::Trace { jobs, selector: TraceSelector::all() }
+    }
+
+    /// A trace replay of the slice `selector` keeps of `jobs`.
+    pub fn trace_selected(jobs: Vec<TraceJob>, selector: TraceSelector) -> WorkloadSpec {
+        WorkloadSpec::Trace { jobs, selector }
+    }
+
+    /// Append `parts` into one workload (see [`WorkloadSpec::Concat`]).
+    pub fn concat(parts: Vec<WorkloadSpec>) -> WorkloadSpec {
+        WorkloadSpec::Concat { parts }
+    }
+
+    /// Interleave `parts` with equal weights (see [`WorkloadSpec::Mix`]).
+    pub fn mix(parts: Vec<WorkloadSpec>) -> WorkloadSpec {
+        let weights = vec![1.0; parts.len()];
+        WorkloadSpec::Mix { parts, weights }
+    }
+
+    /// Interleave `parts` with explicit weights (one per part, `> 0`).
+    pub fn mix_weighted(parts: Vec<WorkloadSpec>, weights: Vec<f64>) -> WorkloadSpec {
+        WorkloadSpec::Mix { parts, weights }
     }
 
     /// Wrap `workload` with an online arrival process.
     ///
-    /// Panics when `workload` is itself `OnlineArrivals` (one arrival
-    /// process per workload; the JSON loader rejects this too).
+    /// Panics when `workload` already carries an arrival process — directly
+    /// or inside a `concat`/`mix` part (one arrival process per workload:
+    /// the wrapper reassigns *every* offset, so an inner process would be
+    /// silently discarded; the JSON loader rejects this too).
     pub fn online(workload: WorkloadSpec, arrivals: ArrivalProcess) -> WorkloadSpec {
         assert!(
-            !matches!(workload, WorkloadSpec::OnlineArrivals { .. }),
+            !workload.has_arrival_process(),
             "online_arrivals cannot wrap another online_arrivals"
         );
         WorkloadSpec::OnlineArrivals { workload: Box::new(workload), arrivals }
@@ -203,23 +433,32 @@ impl WorkloadSpec {
                     j.output_bytes = output;
                 }
             }
-            WorkloadSpec::Trace { jobs } => {
+            WorkloadSpec::Trace { jobs, .. } => {
                 for j in jobs {
                     j.input_bytes = input;
                     j.output_bytes = output;
+                }
+            }
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                for p in parts {
+                    p.set_staging(input, output);
                 }
             }
             WorkloadSpec::OnlineArrivals { workload, .. } => workload.set_staging(input, output),
         }
     }
 
-    /// Number of jobs the workload declares (independent of release times).
+    /// Number of jobs the workload declares (independent of release times;
+    /// for traces, the *selected* slice).
     pub fn declared_jobs(&self) -> usize {
         match self {
             WorkloadSpec::TaskFarm { num_gridlets, .. }
             | WorkloadSpec::HeavyTailed { num_gridlets, .. } => *num_gridlets,
             WorkloadSpec::Explicit { jobs } => jobs.len(),
-            WorkloadSpec::Trace { jobs } => jobs.len(),
+            WorkloadSpec::Trace { jobs, selector } => selector.count(jobs),
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                parts.iter().map(WorkloadSpec::declared_jobs).sum()
+            }
             WorkloadSpec::OnlineArrivals { workload, .. } => workload.declared_jobs(),
         }
     }
@@ -228,7 +467,12 @@ impl WorkloadSpec {
     /// process)?
     pub fn is_online(&self) -> bool {
         match self {
-            WorkloadSpec::Trace { jobs } => jobs.iter().any(|j| j.submit_time > 0.0),
+            WorkloadSpec::Trace { jobs, selector } => {
+                selector.selected(jobs).any(|j| j.submit_time > 0.0)
+            }
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                parts.iter().any(WorkloadSpec::is_online)
+            }
             WorkloadSpec::OnlineArrivals { .. } => true,
             _ => false,
         }
@@ -237,7 +481,13 @@ impl WorkloadSpec {
     /// Is there an [`ArrivalProcess`] anywhere in the spec (sweepable via
     /// the `mean_interarrivals` axis)?
     pub fn has_arrival_process(&self) -> bool {
-        matches!(self, WorkloadSpec::OnlineArrivals { .. })
+        match self {
+            WorkloadSpec::OnlineArrivals { .. } => true,
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                parts.iter().any(WorkloadSpec::has_arrival_process)
+            }
+            _ => false,
+        }
     }
 
     /// Is there a heavy-tailed generator anywhere in the spec (sweepable via
@@ -245,37 +495,155 @@ impl WorkloadSpec {
     pub fn has_heavy_tail(&self) -> bool {
         match self {
             WorkloadSpec::HeavyTailed { .. } => true,
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                parts.iter().any(WorkloadSpec::has_heavy_tail)
+            }
             WorkloadSpec::OnlineArrivals { workload, .. } => workload.has_heavy_tail(),
             _ => false,
         }
     }
 
-    /// Override the arrival process's mean inter-arrival (Poisson mean or
-    /// fixed interval). Returns whether anything was changed.
+    /// Is there a trace replay anywhere in the spec (sweepable via the
+    /// `trace_selectors` axis)?
+    pub fn has_trace(&self) -> bool {
+        match self {
+            WorkloadSpec::Trace { .. } => true,
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                parts.iter().any(WorkloadSpec::has_trace)
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.has_trace(),
+            _ => false,
+        }
+    }
+
+    /// Is there a [`WorkloadSpec::Mix`] with exactly `arity` parts anywhere
+    /// in the spec (what a `mix_weights` sweep entry of that length can
+    /// retarget)?
+    pub fn has_mix_of(&self, arity: usize) -> bool {
+        match self {
+            WorkloadSpec::Mix { parts, .. } => {
+                parts.len() == arity || parts.iter().any(|p| p.has_mix_of(arity))
+            }
+            WorkloadSpec::Concat { parts } => parts.iter().any(|p| p.has_mix_of(arity)),
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.has_mix_of(arity),
+            _ => false,
+        }
+    }
+
+    /// Override the arrival process's mean inter-arrival (Poisson/modulated
+    /// mean or fixed interval), everywhere one exists. Returns whether
+    /// anything was changed.
     pub fn set_arrival_mean(&mut self, mean: f64) -> bool {
         match self {
             WorkloadSpec::OnlineArrivals { arrivals, .. } => {
                 match arrivals {
-                    ArrivalProcess::Poisson { mean_interarrival } => *mean_interarrival = mean,
+                    ArrivalProcess::Poisson { mean_interarrival }
+                    | ArrivalProcess::Modulated { mean_interarrival, .. } => {
+                        *mean_interarrival = mean
+                    }
                     ArrivalProcess::Fixed { interval } => *interval = mean,
                 }
                 true
+            }
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                let mut changed = false;
+                for p in parts {
+                    changed |= p.set_arrival_mean(mean);
+                }
+                changed
             }
             _ => false,
         }
     }
 
-    /// Override the heavy-tail fraction. Returns whether anything was
-    /// changed.
+    /// Override the heavy-tail fraction, everywhere a heavy-tailed generator
+    /// exists. Returns whether anything was changed.
     pub fn set_heavy_fraction(&mut self, fraction: f64) -> bool {
         match self {
             WorkloadSpec::HeavyTailed { heavy_fraction, .. } => {
                 *heavy_fraction = fraction;
                 true
             }
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                let mut changed = false;
+                for p in parts {
+                    changed |= p.set_heavy_fraction(fraction);
+                }
+                changed
+            }
             WorkloadSpec::OnlineArrivals { workload, .. } => {
                 workload.set_heavy_fraction(fraction)
             }
+            _ => false,
+        }
+    }
+
+    /// Validate `selector` against every trace replay in the spec without
+    /// mutating or cloning anything — what the `trace_selectors` sweep axis
+    /// checks up front. Returns whether the spec holds any trace at all.
+    pub fn check_trace_selector(&self, selector: &TraceSelector) -> Result<bool> {
+        match self {
+            WorkloadSpec::Trace { jobs, .. } => selector.validate(jobs).map(|()| true),
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                let mut any = false;
+                for p in parts {
+                    any |= p.check_trace_selector(selector)?;
+                }
+                Ok(any)
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => {
+                workload.check_trace_selector(selector)
+            }
+            _ => Ok(false),
+        }
+    }
+
+    /// Override the [`TraceSelector`] of every trace replay in the spec.
+    /// Returns whether anything was changed.
+    pub fn set_trace_selector(&mut self, selector: &TraceSelector) -> bool {
+        match self {
+            WorkloadSpec::Trace { selector: s, .. } => {
+                *s = selector.clone();
+                true
+            }
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                let mut changed = false;
+                for p in parts {
+                    changed |= p.set_trace_selector(selector);
+                }
+                changed
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => {
+                workload.set_trace_selector(selector)
+            }
+            _ => false,
+        }
+    }
+
+    /// Override the interleave weights of every [`WorkloadSpec::Mix`] whose
+    /// part count matches `weights.len()`. Returns whether anything was
+    /// changed.
+    pub fn set_mix_weights(&mut self, weights: &[f64]) -> bool {
+        match self {
+            WorkloadSpec::Mix { parts, weights: w } => {
+                let mut changed = false;
+                if parts.len() == weights.len() {
+                    *w = weights.to_vec();
+                    changed = true;
+                }
+                for p in parts {
+                    changed |= p.set_mix_weights(weights);
+                }
+                changed
+            }
+            WorkloadSpec::Concat { parts } => {
+                let mut changed = false;
+                for p in parts {
+                    changed |= p.set_mix_weights(weights);
+                }
+                changed
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.set_mix_weights(weights),
             _ => false,
         }
     }
@@ -287,6 +655,8 @@ impl WorkloadSpec {
             WorkloadSpec::HeavyTailed { .. } => "heavy_tailed",
             WorkloadSpec::Explicit { .. } => "explicit",
             WorkloadSpec::Trace { .. } => "trace",
+            WorkloadSpec::Concat { .. } => "concat",
+            WorkloadSpec::Mix { .. } => "mix",
             WorkloadSpec::OnlineArrivals { .. } => "online_arrivals",
         }
     }
@@ -323,7 +693,7 @@ impl WorkloadSpec {
                     }
                 }
             }
-            WorkloadSpec::Trace { jobs } => {
+            WorkloadSpec::Trace { jobs, selector } => {
                 for (i, j) in jobs.iter().enumerate() {
                     if j.length_mi <= 0.0 || j.length_mi.is_nan() {
                         bail!("trace job #{i}: length_mi must be > 0, got {}", j.length_mi);
@@ -332,10 +702,43 @@ impl WorkloadSpec {
                         bail!("trace job #{i}: submit_time must be >= 0, got {}", j.submit_time);
                     }
                 }
+                selector.validate(jobs)?;
+            }
+            WorkloadSpec::Concat { parts } => {
+                if parts.is_empty() {
+                    bail!("concat: needs at least one part");
+                }
+                for (i, p) in parts.iter().enumerate() {
+                    p.validate().map_err(|e| e.context(format!("concat part #{i}")))?;
+                }
+            }
+            WorkloadSpec::Mix { parts, weights } => {
+                if parts.is_empty() {
+                    bail!("mix: needs at least one part");
+                }
+                if weights.len() != parts.len() {
+                    bail!(
+                        "mix: {} weights for {} parts (one weight per part)",
+                        weights.len(),
+                        parts.len()
+                    );
+                }
+                if let Some(w) = weights.iter().find(|w| !w.is_finite() || **w <= 0.0) {
+                    bail!("mix: weights must be finite and > 0, got {w}");
+                }
+                for (i, p) in parts.iter().enumerate() {
+                    p.validate().map_err(|e| e.context(format!("mix part #{i}")))?;
+                }
             }
             WorkloadSpec::OnlineArrivals { workload, arrivals } => {
-                if matches!(**workload, WorkloadSpec::OnlineArrivals { .. }) {
-                    bail!("online_arrivals cannot wrap another online_arrivals");
+                // Recursive on purpose: an inner process hidden in a
+                // concat/mix part would be consumed from the RNG stream and
+                // then thrown away when this wrapper reassigns offsets.
+                if workload.has_arrival_process() {
+                    bail!(
+                        "online_arrivals cannot wrap another online_arrivals \
+                         (found one inside the wrapped workload)"
+                    );
                 }
                 arrivals.validate()?;
                 workload.validate()?;
@@ -351,7 +754,10 @@ impl WorkloadSpec {
     ///
     /// The `TaskFarm` draw sequence (`real(base, 0, variation)` per job) is
     /// the historical `ExperimentSpec::materialize` stream, so pre-existing
-    /// scenarios reproduce bit-for-bit.
+    /// scenarios reproduce bit-for-bit. Composite variants materialize their
+    /// parts in order on the shared stream, then renumber ids 0..n across
+    /// the combination (`Concat`: parts appended; `Mix`: one weighted draw
+    /// per job decides which part contributes next).
     pub fn materialize(&self, rand: &mut GridSimRandom) -> Vec<Release> {
         let mut releases: Vec<Release> = match self {
             WorkloadSpec::TaskFarm {
@@ -401,19 +807,66 @@ impl WorkloadSpec {
                     gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
                 })
                 .collect(),
-            WorkloadSpec::Trace { jobs } => jobs
-                .iter()
+            WorkloadSpec::Trace { jobs, selector } => selector
+                .selected(jobs)
                 .enumerate()
                 .map(|(i, j)| Release {
                     offset: j.submit_time,
                     gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
                 })
                 .collect(),
+            WorkloadSpec::Concat { parts } => {
+                let mut all: Vec<Release> = Vec::with_capacity(self.declared_jobs());
+                for part in parts {
+                    for mut r in part.materialize_generation_order(rand) {
+                        r.gridlet.id = all.len();
+                        all.push(r);
+                    }
+                }
+                all
+            }
+            WorkloadSpec::Mix { parts, weights } => {
+                // Parts materialize in order on the shared stream; the
+                // interleave then takes one uniform draw per job, always
+                // over the *full* weight mass of the non-exhausted parts —
+                // seed-stable and independent of float summation order.
+                let mut queues: Vec<std::collections::VecDeque<Release>> = parts
+                    .iter()
+                    .map(|p| p.materialize_generation_order(rand).into())
+                    .collect();
+                let total: usize = queues.iter().map(|q| q.len()).sum();
+                let mut all: Vec<Release> = Vec::with_capacity(total);
+                let rng = rand.rng();
+                while all.len() < total {
+                    let mass: f64 = queues
+                        .iter()
+                        .zip(weights)
+                        .filter(|(q, _)| !q.is_empty())
+                        .map(|(_, w)| *w)
+                        .sum();
+                    let mut pick = rng.next_f64() * mass;
+                    let mut chosen = None;
+                    for (i, (q, w)) in queues.iter().zip(weights).enumerate() {
+                        if q.is_empty() {
+                            continue;
+                        }
+                        chosen = Some(i);
+                        pick -= w;
+                        if pick < 0.0 {
+                            break;
+                        }
+                    }
+                    let i = chosen.expect("some queue is non-empty while all.len() < total");
+                    let mut r = queues[i].pop_front().expect("chosen queue is non-empty");
+                    r.gridlet.id = all.len();
+                    all.push(r);
+                }
+                all
+            }
             WorkloadSpec::OnlineArrivals { workload, arrivals } => {
                 // Generate jobs first, then release times, so the inner
                 // draw stream matches the unwrapped workload's.
-                let mut releases = workload.materialize(rand);
-                releases.sort_by_key(|r| r.gridlet.id);
+                let mut releases = workload.materialize_generation_order(rand);
                 let offsets = arrivals.offsets(releases.len(), rand.rng());
                 for (r, off) in releases.iter_mut().zip(offsets) {
                     r.offset = off;
@@ -423,6 +876,15 @@ impl WorkloadSpec {
         };
         // Stable: equal offsets keep generation (id) order.
         releases.sort_by(|a, b| a.offset.total_cmp(&b.offset));
+        releases
+    }
+
+    /// [`materialize`](Self::materialize) with the releases returned in
+    /// generation (id) order instead of release order — what wrappers that
+    /// renumber or re-time jobs consume.
+    fn materialize_generation_order(&self, rand: &mut GridSimRandom) -> Vec<Release> {
+        let mut releases = self.materialize(rand);
+        releases.sort_by_key(|r| r.gridlet.id);
         releases
     }
 }
@@ -478,8 +940,8 @@ mod tests {
 
         // Trace jobs keep their submit offsets and are sorted by them.
         let trace = WorkloadSpec::trace(vec![
-            TraceJob { submit_time: 5.0, length_mi: 10.0, input_bytes: 1, output_bytes: 1 },
-            TraceJob { submit_time: 0.0, length_mi: 20.0, input_bytes: 1, output_bytes: 1 },
+            TraceJob::new(5.0, 10.0, 1, 1),
+            TraceJob::new(0.0, 20.0, 1, 1),
         ]);
         let r = materialize(&trace, 1);
         assert_eq!(r[0].offset, 0.0);
@@ -487,6 +949,36 @@ mod tests {
         assert_eq!(r[1].offset, 5.0);
         assert_eq!(r[1].gridlet.id, 0);
         assert!(trace.is_online());
+    }
+
+    #[test]
+    fn trace_selector_limits_jobs_and_totals() {
+        let mut jobs = vec![
+            TraceJob::new(0.0, 10.0, 1, 1),
+            TraceJob::new(1.0, 20.0, 1, 1),
+            TraceJob::new(2.0, 30.0, 1, 1),
+        ];
+        jobs[0].user = Some(3);
+        jobs[1].user = Some(7);
+        jobs[2].user = Some(3);
+        let spec = WorkloadSpec::trace_selected(jobs.clone(), TraceSelector::user(3));
+        assert_eq!(spec.declared_jobs(), 2);
+        let r = materialize(&spec, 1);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].gridlet.length_mi, 10.0);
+        assert_eq!(r[1].gridlet.length_mi, 30.0);
+        assert_eq!((r[0].gridlet.id, r[1].gridlet.id), (0, 1), "ids renumber the slice");
+        assert!(spec.has_trace());
+        assert!(spec.validate().is_ok());
+
+        // An empty selection is a validation error, not an empty run.
+        let spec = WorkloadSpec::trace_selected(jobs, TraceSelector::user(99));
+        assert!(spec.validate().is_err());
+
+        // set_trace_selector retargets the slice.
+        let mut spec = WorkloadSpec::trace(vec![TraceJob::new(0.0, 10.0, 1, 1)]);
+        assert!(spec.set_trace_selector(&TraceSelector::all().with_max_jobs(1)));
+        assert_eq!(spec.declared_jobs(), 1);
     }
 
     #[test]
@@ -518,6 +1010,116 @@ mod tests {
     }
 
     #[test]
+    fn modulated_arrivals_respect_the_envelope() {
+        // A hard day/night cycle: rate 1 in [0, 50), 0 in [50, 100) — every
+        // arrival must land in a "day" half-period.
+        let envelope =
+            RateEnvelope::Piecewise { period: 100.0, rates: vec![1.0, 0.0] };
+        let spec = WorkloadSpec::online(
+            WorkloadSpec::task_farm(200, 100.0, 0.0),
+            ArrivalProcess::Modulated { mean_interarrival: 2.0, envelope },
+        );
+        spec.validate().unwrap();
+        let r = materialize(&spec, 5);
+        assert_eq!(r.len(), 200);
+        assert!(r.windows(2).all(|w| w[0].offset <= w[1].offset));
+        for rel in &r {
+            let phase = rel.offset.rem_euclid(100.0);
+            assert!(phase < 50.0, "arrival at {} fell in the zero-rate window", rel.offset);
+        }
+        // Deterministic under a fixed seed.
+        let again = materialize(&spec, 5);
+        for (a, b) in r.iter().zip(&again) {
+            assert_eq!(a.offset.to_bits(), b.offset.to_bits());
+        }
+
+        // Sinusoid: amplitude 0 degenerates to a plain Poisson *rate* —
+        // offsets still monotone, and roughly `n × mean` long.
+        let spec = WorkloadSpec::online(
+            WorkloadSpec::task_farm(2_000, 100.0, 0.0),
+            ArrivalProcess::Modulated {
+                mean_interarrival: 3.0,
+                envelope: RateEnvelope::Sinusoid { period: 500.0, amplitude: 0.5 },
+            },
+        );
+        let r = materialize(&spec, 8);
+        let span = r.last().unwrap().offset;
+        assert!((span / 2_000.0 - 3.0).abs() < 0.5, "mean gap ≈ 3, got {}", span / 2_000.0);
+    }
+
+    #[test]
+    fn envelope_multipliers() {
+        let p = RateEnvelope::Piecewise { period: 10.0, rates: vec![2.0, 0.5] };
+        assert_eq!(p.multiplier(0.0), 2.0);
+        assert_eq!(p.multiplier(4.999), 2.0);
+        assert_eq!(p.multiplier(5.0), 0.5);
+        assert_eq!(p.multiplier(12.0), 2.0, "periodic");
+        assert_eq!(p.max_multiplier(), 2.0);
+        let s = RateEnvelope::Sinusoid { period: 4.0, amplitude: 1.0 };
+        assert!((s.multiplier(1.0) - 2.0).abs() < 1e-12);
+        assert!(s.multiplier(3.0).abs() < 1e-12);
+        assert_eq!(s.max_multiplier(), 2.0);
+    }
+
+    #[test]
+    fn concat_appends_parts_in_order() {
+        let spec = WorkloadSpec::concat(vec![
+            WorkloadSpec::explicit(vec![JobSpec { length_mi: 1.0, input_bytes: 0, output_bytes: 0 }]),
+            WorkloadSpec::trace(vec![
+                TraceJob::new(3.0, 2.0, 0, 0),
+                TraceJob::new(0.0, 3.0, 0, 0),
+            ]),
+        ]);
+        assert_eq!(spec.declared_jobs(), 3);
+        assert!(spec.is_online(), "the trace part has online jobs");
+        let r = materialize(&spec, 1);
+        assert_eq!(r.len(), 3);
+        // Ids are assigned part-by-part in generation order: explicit job
+        // (id 0), then the trace's two jobs in file order (ids 1, 2).
+        assert_eq!(r[0].gridlet.id, 0);
+        assert_eq!(r[0].gridlet.length_mi, 1.0);
+        assert_eq!(r[1].gridlet.id, 2, "trace file order, not release order");
+        assert_eq!(r[1].gridlet.length_mi, 3.0);
+        assert_eq!((r[1].offset, r[2].offset), (0.0, 3.0));
+    }
+
+    #[test]
+    fn mix_interleaves_with_weights_seed_stably() {
+        let farm = |mi: f64| WorkloadSpec::task_farm(20, mi, 0.0);
+        let spec = WorkloadSpec::mix_weighted(vec![farm(100.0), farm(900.0)], vec![3.0, 1.0]);
+        assert_eq!(spec.declared_jobs(), 40);
+        let r = materialize(&spec, 7);
+        assert_eq!(r.len(), 40);
+        let mut ids: Vec<usize> = r.iter().map(|x| x.gridlet.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+        // Both parts fully drain…
+        assert_eq!(r.iter().filter(|x| x.gridlet.length_mi == 100.0).count(), 20);
+        assert_eq!(r.iter().filter(|x| x.gridlet.length_mi == 900.0).count(), 20);
+        // …and the weighted part front-loads: among the first 20 generated
+        // ids, the weight-3 part is expected to contribute ~15; even a very
+        // unlucky stream stays above 8.
+        let early_light = r
+            .iter()
+            .filter(|x| x.gridlet.id < 20 && x.gridlet.length_mi == 100.0)
+            .count();
+        assert!(early_light >= 8, "{early_light} of the first 20 from the weight-3 part");
+        // Seed-stable.
+        let again = materialize(&spec, 7);
+        for (a, b) in r.iter().zip(&again) {
+            assert_eq!(a.gridlet.id, b.gridlet.id);
+            assert_eq!(a.gridlet.length_mi.to_bits(), b.gridlet.length_mi.to_bits());
+        }
+
+        // set_mix_weights retargets matching-arity mixes only.
+        let mut spec = spec;
+        assert!(spec.set_mix_weights(&[1.0, 5.0]));
+        assert!(!spec.set_mix_weights(&[1.0, 1.0, 1.0]), "arity mismatch leaves it alone");
+        assert!(spec.has_mix_of(2));
+        assert!(!spec.has_mix_of(3));
+    }
+
+    #[test]
     fn staging_override_reaches_every_variant() {
         let specs = [
             WorkloadSpec::task_farm(3, 100.0, 0.0),
@@ -527,12 +1129,15 @@ mod tests {
                 input_bytes: 9,
                 output_bytes: 9,
             }]),
-            WorkloadSpec::trace(vec![TraceJob {
-                submit_time: 0.0,
-                length_mi: 1.0,
-                input_bytes: 9,
-                output_bytes: 9,
-            }]),
+            WorkloadSpec::trace(vec![TraceJob::new(0.0, 1.0, 9, 9)]),
+            WorkloadSpec::concat(vec![
+                WorkloadSpec::task_farm(2, 100.0, 0.0),
+                WorkloadSpec::trace(vec![TraceJob::new(0.0, 1.0, 9, 9)]),
+            ]),
+            WorkloadSpec::mix(vec![
+                WorkloadSpec::task_farm(2, 100.0, 0.0),
+                WorkloadSpec::heavy_tailed(2, 100.0, 0.5, 2.0),
+            ]),
             WorkloadSpec::online(
                 WorkloadSpec::task_farm(3, 100.0, 0.0),
                 ArrivalProcess::Fixed { interval: 1.0 },
@@ -563,13 +1168,28 @@ mod tests {
                 "length_mi",
             ),
             (
-                WorkloadSpec::trace(vec![TraceJob {
-                    submit_time: -1.0,
-                    length_mi: 1.0,
-                    input_bytes: 0,
-                    output_bytes: 0,
-                }]),
+                WorkloadSpec::trace(vec![TraceJob::new(-1.0, 1.0, 0, 0)]),
                 "submit_time",
+            ),
+            (WorkloadSpec::concat(vec![]), "at least one part"),
+            (WorkloadSpec::mix(vec![]), "at least one part"),
+            (
+                WorkloadSpec::mix_weighted(
+                    vec![WorkloadSpec::task_farm(1, 1.0, 0.0)],
+                    vec![1.0, 2.0],
+                ),
+                "weights",
+            ),
+            (
+                WorkloadSpec::mix_weighted(
+                    vec![WorkloadSpec::task_farm(1, 1.0, 0.0)],
+                    vec![0.0],
+                ),
+                "> 0",
+            ),
+            (
+                WorkloadSpec::concat(vec![WorkloadSpec::task_farm(1, 0.0, 0.0)]),
+                "part #0",
             ),
             (
                 WorkloadSpec::online(
@@ -578,8 +1198,28 @@ mod tests {
                 ),
                 "mean_interarrival",
             ),
+            (
+                WorkloadSpec::online(
+                    WorkloadSpec::task_farm(1, 1.0, 0.0),
+                    ArrivalProcess::Modulated {
+                        mean_interarrival: 1.0,
+                        envelope: RateEnvelope::Piecewise { period: 10.0, rates: vec![0.0] },
+                    },
+                ),
+                "all 0",
+            ),
+            (
+                WorkloadSpec::online(
+                    WorkloadSpec::task_farm(1, 1.0, 0.0),
+                    ArrivalProcess::Modulated {
+                        mean_interarrival: 1.0,
+                        envelope: RateEnvelope::Sinusoid { period: 10.0, amplitude: 1.5 },
+                    },
+                ),
+                "amplitude",
+            ),
         ] {
-            let err = spec.validate().unwrap_err().to_string();
+            let err = format!("{:#}", spec.validate().unwrap_err());
             assert!(err.contains(needle), "{err}");
         }
         assert!(WorkloadSpec::task_farm(0, 1.0, 0.0).validate().is_ok(), "empty farm is legal");
@@ -600,11 +1240,36 @@ mod tests {
         let WorkloadSpec::HeavyTailed { heavy_fraction, .. } = **workload else { panic!() };
         assert_eq!(heavy_fraction, 0.9);
 
+        // The hooks recurse into compositions.
+        let mut mixed = WorkloadSpec::mix(vec![
+            WorkloadSpec::heavy_tailed(5, 100.0, 0.1, 10.0),
+            WorkloadSpec::online(
+                WorkloadSpec::task_farm(5, 100.0, 0.0),
+                ArrivalProcess::Modulated {
+                    mean_interarrival: 4.0,
+                    envelope: RateEnvelope::Sinusoid { period: 100.0, amplitude: 0.5 },
+                },
+            ),
+        ]);
+        assert!(mixed.has_arrival_process());
+        assert!(mixed.has_heavy_tail());
+        assert!(mixed.set_arrival_mean(9.0));
+        assert!(mixed.set_heavy_fraction(0.4));
+        let WorkloadSpec::Mix { parts, .. } = &mixed else { panic!() };
+        let WorkloadSpec::HeavyTailed { heavy_fraction, .. } = parts[0] else { panic!() };
+        assert_eq!(heavy_fraction, 0.4);
+        let WorkloadSpec::OnlineArrivals { arrivals, .. } = &parts[1] else { panic!() };
+        let ArrivalProcess::Modulated { mean_interarrival, .. } = arrivals else { panic!() };
+        assert_eq!(*mean_interarrival, 9.0);
+
         let mut farm = WorkloadSpec::task_farm(1, 1.0, 0.0);
         assert!(!farm.set_arrival_mean(1.0));
         assert!(!farm.set_heavy_fraction(0.5));
+        assert!(!farm.set_trace_selector(&TraceSelector::all()));
+        assert!(!farm.set_mix_weights(&[1.0]));
         assert!(!farm.has_arrival_process());
         assert!(!farm.is_online());
+        assert!(!farm.has_trace());
     }
 
     #[test]
@@ -615,6 +1280,37 @@ mod tests {
             ArrivalProcess::Fixed { interval: 1.0 },
         );
         WorkloadSpec::online(inner, ArrivalProcess::Fixed { interval: 1.0 });
+    }
+
+    #[test]
+    fn online_hidden_inside_composition_rejected() {
+        // The nesting rule is recursive: an inner arrival process buried in
+        // a concat/mix part must not be silently discarded by the wrapper.
+        let hidden = WorkloadSpec::Concat {
+            parts: vec![WorkloadSpec::online(
+                WorkloadSpec::task_farm(2, 1.0, 0.0),
+                ArrivalProcess::Poisson { mean_interarrival: 1.0 },
+            )],
+        };
+        let spec = WorkloadSpec::OnlineArrivals {
+            workload: Box::new(hidden),
+            arrivals: ArrivalProcess::Fixed { interval: 1.0 },
+        };
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("cannot wrap"), "{err}");
+
+        // check_trace_selector walks compositions without mutating them.
+        let mut jobs = vec![TraceJob::new(0.0, 1.0, 0, 0)];
+        jobs[0].user = Some(4);
+        let mixed = WorkloadSpec::mix(vec![
+            WorkloadSpec::task_farm(2, 1.0, 0.0),
+            WorkloadSpec::trace(jobs),
+        ]);
+        assert!(mixed.check_trace_selector(&TraceSelector::user(4)).unwrap());
+        assert!(mixed.check_trace_selector(&TraceSelector::user(9)).is_err());
+        assert!(!WorkloadSpec::task_farm(1, 1.0, 0.0)
+            .check_trace_selector(&TraceSelector::all())
+            .unwrap());
     }
 
     #[test]

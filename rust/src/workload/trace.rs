@@ -1,9 +1,11 @@
-//! SWF-style workload trace I/O.
+//! Workload trace I/O: the legacy 4-column format and the full 18-column
+//! Standard Workload Format (SWF).
 //!
-//! The format is a whitespace-separated text table, one job per line, in the
-//! spirit of the Standard Workload Format (SWF) used by dslab-style
-//! trace-driven simulators, reduced to the four columns this toolkit
-//! simulates:
+//! Two on-disk formats share one loading entry point
+//! ([`load_trace_file`] auto-detects by column count):
+//!
+//! **Legacy 4-column** — the toolkit's original reduced format, one job per
+//! line:
 //!
 //! ```text
 //! ; comment (SWF convention) — '#' comments are accepted too
@@ -12,17 +14,40 @@
 //!   42.5         12000      1000         500
 //! ```
 //!
-//! `submit_time` is the release offset from experiment submission (jobs with
-//! offset 0 form the initial batch; later ones arrive online).
-//! [`format_trace`] and [`parse_trace`] round-trip exactly: floats are
-//! written in Rust's shortest-roundtrip form.
+//! **18-column SWF** — the format published supercomputer logs use (and
+//! trace-driven simulators like dslab replay): `;`-comment header
+//! *directives* (`; MaxNodes: 128`, `; UnixStartTime: 845923442`, …)
+//! followed by one 18-field record per job. `-1` marks a missing field.
+//! [`parse_swf`] keeps the raw records ([`SwfJob`]) and directives
+//! ([`SwfHeader`]); [`SwfTrace::to_trace_jobs`] converts them into
+//! simulator jobs by
+//!
+//! 1. keeping only jobs whose status passes the filter (default: completed
+//!    `1` and unknown `-1`),
+//! 2. turning runtimes into MI: `length_mi = seconds × processors × mips`
+//!    (`run_time`, falling back to `requested_time`; `allocated_procs`,
+//!    falling back to `requested_procs`, falling back to 1) — jobs with no
+//!    usable positive runtime are skipped,
+//! 3. rebasing submit times so the earliest kept job is at offset 0 (logs
+//!    count seconds from `UnixStartTime`, which would otherwise stall the
+//!    experiment for the whole lead-in), and
+//! 4. carrying `user_id`/`partition` through, so a [`TraceSelector`] can
+//!    later split one log into per-user workloads *without* re-reading the
+//!    file. Selection happens after the shared rebase, so per-user slices
+//!    of one log stay mutually time-aligned.
+//!
+//! `submit_time` in a [`TraceJob`] is the release offset from experiment
+//! submission (jobs with offset 0 form the initial batch; later ones arrive
+//! online). [`format_trace`] and [`parse_trace`] round-trip the legacy
+//! format exactly: floats are written in Rust's shortest-roundtrip form.
 
 use super::spec::TraceJob;
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
-/// Parse a trace from text. Empty lines and lines starting with `;` or `#`
-/// are skipped; every other line must hold exactly four numeric fields.
+/// Parse a legacy 4-column trace from text. Empty lines and lines starting
+/// with `;` or `#` are skipped; every other line must hold exactly four
+/// numeric fields (`submit_time length_mi input_bytes output_bytes`).
 pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>> {
     let mut jobs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -56,12 +81,12 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>> {
                 bail!("trace line {}: {what} must be a non-negative integer, got {n}", lineno + 1)
             }
         };
-        let job = TraceJob {
-            submit_time: num(0, "submit_time")?,
-            length_mi: num(1, "length_mi")?,
-            input_bytes: bytes(2, "input_bytes")?,
-            output_bytes: bytes(3, "output_bytes")?,
-        };
+        let job = TraceJob::new(
+            num(0, "submit_time")?,
+            num(1, "length_mi")?,
+            bytes(2, "input_bytes")?,
+            bytes(3, "output_bytes")?,
+        );
         if job.submit_time < 0.0 {
             bail!("trace line {}: submit_time must be >= 0, got {}", lineno + 1, job.submit_time);
         }
@@ -76,9 +101,11 @@ pub fn parse_trace(text: &str) -> Result<Vec<TraceJob>> {
     Ok(jobs)
 }
 
-/// Serialize jobs into the trace format (header comment + one line per job).
-/// Floats use Rust's shortest-roundtrip formatting, so
-/// `parse_trace(&format_trace(jobs))` reproduces `jobs` exactly.
+/// Serialize jobs into the legacy 4-column format (header comment + one
+/// line per job). Floats use Rust's shortest-roundtrip formatting, so
+/// `parse_trace(&format_trace(jobs))` reproduces `jobs` exactly — except
+/// SWF-derived `user`/`partition` metadata, which the 4-column format
+/// cannot carry.
 pub fn format_trace(jobs: &[TraceJob]) -> String {
     let mut out = String::from("; submit_time length_mi input_bytes output_bytes\n");
     for j in jobs {
@@ -90,12 +117,529 @@ pub fn format_trace(jobs: &[TraceJob]) -> String {
     out
 }
 
-/// Load a trace file from disk.
+// ---------------------------------------------------------------------------
+// Standard Workload Format (18 columns)
+// ---------------------------------------------------------------------------
+
+/// The field count of a Standard Workload Format record.
+pub const SWF_FIELDS: usize = 18;
+
+/// Default job-status filter for SWF conversion: completed (`1`) plus
+/// unknown (`-1`, for logs that do not record a status).
+pub const SWF_DEFAULT_STATUSES: &[i64] = &[1, -1];
+
+/// Header directives of an SWF file: every `; Key: value` comment line, in
+/// file order, plus typed accessors for the directives the simulator cares
+/// about. Unknown directives are kept verbatim (the SWF convention allows
+/// site-specific keys), never rejected.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SwfHeader {
+    /// All `(key, value)` directive pairs, in file order. Repeated keys
+    /// (e.g. multiple `Note:` lines) are all kept.
+    pub directives: Vec<(String, String)>,
+}
+
+impl SwfHeader {
+    /// First value recorded for `key` (case-sensitive, the SWF convention).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.directives.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(|v| v.trim().parse::<i64>().ok())
+    }
+
+    /// `UnixStartTime` — epoch seconds of the log start (submit times count
+    /// from it).
+    pub fn unix_start_time(&self) -> Option<i64> {
+        self.get_i64("UnixStartTime")
+    }
+
+    /// `MaxNodes` — number of nodes in the logged machine.
+    pub fn max_nodes(&self) -> Option<i64> {
+        self.get_i64("MaxNodes")
+    }
+
+    /// `MaxProcs` — number of processors in the logged machine.
+    pub fn max_procs(&self) -> Option<i64> {
+        self.get_i64("MaxProcs")
+    }
+
+    /// `MaxJobs` — number of jobs the log declares.
+    pub fn max_jobs(&self) -> Option<i64> {
+        self.get_i64("MaxJobs")
+    }
+
+    /// `Computer` — the logged machine's name.
+    pub fn computer(&self) -> Option<&str> {
+        self.get("Computer")
+    }
+
+    /// `Version` — SWF version of the file.
+    pub fn version(&self) -> Option<&str> {
+        self.get("Version")
+    }
+}
+
+/// One raw 18-field SWF record, exactly as parsed. Integer fields keep the
+/// SWF `-1` = "missing" sentinel; use the `*_opt` accessors for
+/// `Option`-shaped reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwfJob {
+    /// 1: job number (counting from 1 in the standard, but not enforced).
+    pub job_id: i64,
+    /// 2: submit time, seconds from the log start (`UnixStartTime`).
+    pub submit_time: f64,
+    /// 3: seconds the job waited in the queue (`-1` = missing).
+    pub wait_time: f64,
+    /// 4: wall-clock runtime in seconds (`-1` = missing).
+    pub run_time: f64,
+    /// 5: number of processors actually allocated (`-1` = missing).
+    pub allocated_procs: i64,
+    /// 6: average CPU time used per processor, seconds (`-1` = missing).
+    pub avg_cpu_time: f64,
+    /// 7: average used memory per processor, KB (`-1` = missing).
+    pub used_memory_kb: f64,
+    /// 8: number of processors requested (`-1` = missing).
+    pub requested_procs: i64,
+    /// 9: requested wall-clock runtime, seconds (`-1` = missing).
+    pub requested_time: f64,
+    /// 10: requested memory per processor, KB (`-1` = missing).
+    pub requested_memory_kb: f64,
+    /// 11: completion status — `1` completed, `0` failed, `5` cancelled,
+    /// `2`–`4` partial-execution codes, `-1` unknown.
+    pub status: i64,
+    /// 12: user id (`-1` = missing).
+    pub user_id: i64,
+    /// 13: group id (`-1` = missing).
+    pub group_id: i64,
+    /// 14: executable (application) number (`-1` = missing).
+    pub executable: i64,
+    /// 15: queue number (`-1` = missing).
+    pub queue: i64,
+    /// 16: partition number (`-1` = missing).
+    pub partition: i64,
+    /// 17: preceding job number (`-1` = none).
+    pub preceding_job: i64,
+    /// 18: think time from the preceding job, seconds (`-1` = none).
+    pub think_time: f64,
+}
+
+impl SwfJob {
+    /// `user_id` without the `-1` sentinel.
+    pub fn user_opt(&self) -> Option<i64> {
+        (self.user_id >= 0).then_some(self.user_id)
+    }
+
+    /// `partition` without the `-1` sentinel.
+    pub fn partition_opt(&self) -> Option<i64> {
+        (self.partition >= 0).then_some(self.partition)
+    }
+
+    /// The runtime the simulator should bill, seconds: `run_time` when
+    /// recorded, else the `requested_time` estimate; `None` when neither is
+    /// a positive number (such a job cannot be replayed).
+    pub fn usable_runtime(&self) -> Option<f64> {
+        if self.run_time > 0.0 {
+            Some(self.run_time)
+        } else if self.requested_time > 0.0 {
+            Some(self.requested_time)
+        } else {
+            None
+        }
+    }
+
+    /// The processor count the MI conversion multiplies by:
+    /// `allocated_procs`, else `requested_procs`, else 1.
+    pub fn effective_procs(&self) -> i64 {
+        if self.allocated_procs > 0 {
+            self.allocated_procs
+        } else if self.requested_procs > 0 {
+            self.requested_procs
+        } else {
+            1
+        }
+    }
+}
+
+/// A parsed 18-column SWF file: header directives plus raw job records.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwfTrace {
+    /// The `; Key: value` directive lines.
+    pub header: SwfHeader,
+    /// Every record, in file order (submit times may be out of order —
+    /// published logs contain such glitches; materialization sorts by
+    /// release offset).
+    pub jobs: Vec<SwfJob>,
+}
+
+/// Conversion knobs for [`SwfTrace::to_trace_jobs`] / SWF-format
+/// [`load_trace_file_with`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwfLoadOptions {
+    /// MIPS rating used to turn runtime seconds into MI
+    /// (`length_mi = seconds × processors × mips`). 1.0 means "MI units are
+    /// processor-seconds of the logged machine".
+    pub mips: f64,
+    /// Job statuses to keep; `None` = [`SWF_DEFAULT_STATUSES`] (completed +
+    /// unknown).
+    pub statuses: Option<Vec<i64>>,
+    /// Uniform staging sizes applied to every job (SWF carries no file
+    /// sizes).
+    pub input_bytes: u64,
+    /// See `input_bytes`.
+    pub output_bytes: u64,
+}
+
+impl Default for SwfLoadOptions {
+    fn default() -> SwfLoadOptions {
+        SwfLoadOptions { mips: 1.0, statuses: None, input_bytes: 0, output_bytes: 0 }
+    }
+}
+
+impl SwfTrace {
+    /// Convert the raw records into simulator jobs: status-filter, map
+    /// runtimes to MI, rebase submit offsets, and carry `user`/`partition`
+    /// metadata (see the module docs for the exact rules). Errors when the
+    /// filter leaves no replayable job.
+    pub fn to_trace_jobs(&self, options: &SwfLoadOptions) -> Result<Vec<TraceJob>> {
+        if options.mips <= 0.0 || !options.mips.is_finite() {
+            bail!("swf: mips must be > 0, got {}", options.mips);
+        }
+        let statuses: &[i64] =
+            options.statuses.as_deref().unwrap_or(SWF_DEFAULT_STATUSES);
+        let kept: Vec<&SwfJob> = self
+            .jobs
+            .iter()
+            .filter(|j| statuses.contains(&j.status))
+            .filter(|j| j.usable_runtime().is_some())
+            .collect();
+        if kept.is_empty() {
+            bail!(
+                "swf trace: no replayable jobs remain of {} records (status filter {:?}, \
+                 jobs without a positive run_time/requested_time are skipped)",
+                self.jobs.len(),
+                statuses
+            );
+        }
+        let t0 = kept
+            .iter()
+            .map(|j| j.submit_time)
+            .min_by(|a, b| a.total_cmp(b))
+            .expect("kept is non-empty");
+        Ok(kept
+            .into_iter()
+            .map(|j| {
+                let seconds = j.usable_runtime().expect("filtered above");
+                TraceJob {
+                    submit_time: j.submit_time - t0,
+                    length_mi: seconds * j.effective_procs() as f64 * options.mips,
+                    input_bytes: options.input_bytes,
+                    output_bytes: options.output_bytes,
+                    user: j.user_opt(),
+                    partition: j.partition_opt(),
+                }
+            })
+            .collect())
+    }
+}
+
+/// Parse an 18-column SWF file: `; Key: value` header directives, `;`/`#`
+/// comments, and one 18-field record per remaining line.
+pub fn parse_swf(text: &str) -> Result<SwfTrace> {
+    let mut header = SwfHeader::default();
+    let mut jobs = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix(';') {
+            if let Some((key, value)) = comment.split_once(':') {
+                let key = key.trim();
+                if !key.is_empty() && key.chars().all(|c| c.is_ascii_alphanumeric()) {
+                    header.directives.push((key.to_string(), value.trim().to_string()));
+                }
+            }
+            continue;
+        }
+        jobs.push(
+            parse_swf_record(line)
+                .with_context(|| format!("swf line {}", lineno + 1))?,
+        );
+    }
+    if jobs.is_empty() {
+        bail!("swf trace holds no job records");
+    }
+    Ok(SwfTrace { header, jobs })
+}
+
+fn parse_swf_record(line: &str) -> Result<SwfJob> {
+    let fields: Vec<&str> = line.split_whitespace().collect();
+    if fields.len() != SWF_FIELDS {
+        bail!("expected {SWF_FIELDS} fields, got {}", fields.len());
+    }
+    let num = |i: usize, what: &str| -> Result<f64> {
+        let n = fields[i]
+            .parse::<f64>()
+            .map_err(|_| anyhow!("{what} {:?} is not a number", fields[i]))?;
+        if !n.is_finite() {
+            bail!("{what} must be finite, got {n}");
+        }
+        Ok(n)
+    };
+    // Integer fields: `-1` is the SWF missing-value sentinel; any other
+    // negative or fractional value is a malformed record.
+    let int = |i: usize, what: &str| -> Result<i64> {
+        let n = num(i, what)?;
+        if n.fract() != 0.0 || n < -1.0 || n >= 9_007_199_254_740_992.0 {
+            bail!("{what} must be an integer >= -1, got {n}");
+        }
+        Ok(n as i64)
+    };
+    // Float duration/size fields: non-negative, or `-1` for missing.
+    let dur = |i: usize, what: &str| -> Result<f64> {
+        let n = num(i, what)?;
+        if n < 0.0 && n != -1.0 {
+            bail!("{what} must be >= 0 or the missing marker -1, got {n}");
+        }
+        Ok(n)
+    };
+    let job = SwfJob {
+        job_id: int(0, "job_id")?,
+        submit_time: dur(1, "submit_time")?,
+        wait_time: dur(2, "wait_time")?,
+        run_time: dur(3, "run_time")?,
+        allocated_procs: int(4, "allocated_procs")?,
+        avg_cpu_time: dur(5, "avg_cpu_time")?,
+        used_memory_kb: dur(6, "used_memory_kb")?,
+        requested_procs: int(7, "requested_procs")?,
+        requested_time: dur(8, "requested_time")?,
+        requested_memory_kb: dur(9, "requested_memory_kb")?,
+        status: int(10, "status")?,
+        user_id: int(11, "user_id")?,
+        group_id: int(12, "group_id")?,
+        executable: int(13, "executable")?,
+        queue: int(14, "queue")?,
+        partition: int(15, "partition")?,
+        preceding_job: int(16, "preceding_job")?,
+        think_time: {
+            // Think time may legitimately be negative in some published
+            // logs (clock skew); clamp the check to the parse level only.
+            num(17, "think_time")?
+        },
+    };
+    if job.submit_time < 0.0 {
+        bail!("submit_time must be >= 0, got {}", job.submit_time);
+    }
+    Ok(job)
+}
+
+/// On-disk trace flavor, detected from the first data line's field count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// The toolkit's 4-column format.
+    Legacy,
+    /// The 18-column Standard Workload Format.
+    Swf,
+}
+
+/// Detect the trace format from the first non-comment, non-empty line:
+/// 4 fields → [`TraceFormat::Legacy`], 18 → [`TraceFormat::Swf`].
+pub fn detect_format(text: &str) -> Result<TraceFormat> {
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') || line.starts_with('#') {
+            continue;
+        }
+        return match line.split_whitespace().count() {
+            4 => Ok(TraceFormat::Legacy),
+            SWF_FIELDS => Ok(TraceFormat::Swf),
+            n => bail!(
+                "trace data lines must have 4 fields (legacy: submit_time length_mi \
+                 input_bytes output_bytes) or {SWF_FIELDS} (Standard Workload Format), \
+                 got {n}"
+            ),
+        };
+    }
+    bail!("trace holds no jobs")
+}
+
+/// Load a trace file from disk, auto-detecting the format. Legacy 4-column
+/// files load exactly as they always did; 18-column SWF files are converted
+/// with default [`SwfLoadOptions`] (completed jobs, `mips = 1`, no
+/// staging). Use [`load_trace_file_with`] to control the SWF conversion.
 pub fn load_trace_file(path: impl AsRef<Path>) -> Result<Vec<TraceJob>> {
+    load_trace_file_with(path, None)
+}
+
+/// [`load_trace_file`] with explicit SWF conversion options. `Some` means
+/// the caller *stated* conversion knobs (even if their values match the
+/// defaults): knobs only apply to 18-column files — a legacy file carries
+/// per-job values for everything they control — so stated options against
+/// a legacy file are rejected rather than silently ignored.
+pub fn load_trace_file_with(
+    path: impl AsRef<Path>,
+    options: Option<&SwfLoadOptions>,
+) -> Result<Vec<TraceJob>> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("cannot read trace file {}: {e}", path.display()))?;
-    parse_trace(&text).with_context(|| format!("trace file {}", path.display()))
+    let in_file = || format!("trace file {}", path.display());
+    match detect_format(&text).with_context(in_file)? {
+        TraceFormat::Legacy => {
+            if options.is_some() {
+                bail!(
+                    "{}: mips/statuses/staging options only apply to 18-column SWF \
+                     files; this legacy 4-column file carries per-job values",
+                    in_file()
+                );
+            }
+            parse_trace(&text).with_context(in_file)
+        }
+        TraceFormat::Swf => {
+            let default = SwfLoadOptions::default();
+            parse_swf(&text)
+                .and_then(|swf| swf.to_trace_jobs(options.unwrap_or(&default)))
+                .with_context(in_file)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TraceSelector
+// ---------------------------------------------------------------------------
+
+/// A declarative slice of a trace: which jobs of a (typically SWF-derived)
+/// job list one [`crate::workload::WorkloadSpec::Trace`] workload replays.
+///
+/// An empty selector keeps everything. `users`/`partitions` keep only jobs
+/// whose SWF `user_id`/`partition` is listed (legacy 4-column jobs carry no
+/// such metadata and never match a non-empty list — validation rejects that
+/// combination loudly). `max_jobs` truncates after filtering, keeping file
+/// order. Selection is pure filtering — deterministic, no RNG draws — so it
+/// is sweepable (the `trace_selectors` sweep axis re-selects per cell).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceSelector {
+    /// Keep only these SWF user ids (empty = all users).
+    pub users: Vec<i64>,
+    /// Keep only these SWF partition numbers (empty = all partitions).
+    pub partitions: Vec<i64>,
+    /// Keep at most this many jobs, in file order, after filtering.
+    pub max_jobs: Option<usize>,
+}
+
+impl TraceSelector {
+    /// The everything-selector.
+    pub fn all() -> TraceSelector {
+        TraceSelector::default()
+    }
+
+    /// Convenience: select a single SWF user's jobs.
+    pub fn user(id: i64) -> TraceSelector {
+        TraceSelector { users: vec![id], ..TraceSelector::default() }
+    }
+
+    /// Convenience: select a single SWF partition's jobs.
+    pub fn partition(id: i64) -> TraceSelector {
+        TraceSelector { partitions: vec![id], ..TraceSelector::default() }
+    }
+
+    /// Builder: truncate to at most `n` jobs.
+    pub fn with_max_jobs(mut self, n: usize) -> TraceSelector {
+        self.max_jobs = Some(n);
+        self
+    }
+
+    /// Does the selector keep every job unchanged?
+    pub fn is_all(&self) -> bool {
+        self.users.is_empty() && self.partitions.is_empty() && self.max_jobs.is_none()
+    }
+
+    /// Does `job` pass the user/partition filters?
+    pub fn matches(&self, job: &TraceJob) -> bool {
+        let user_ok = self.users.is_empty()
+            || job.user.is_some_and(|u| self.users.contains(&u));
+        let part_ok = self.partitions.is_empty()
+            || job.partition.is_some_and(|p| self.partitions.contains(&p));
+        user_ok && part_ok
+    }
+
+    /// The kept jobs, lazily: filter by user/partition, then truncate to
+    /// `max_jobs`, preserving input order. The single source of the
+    /// selection rule — [`apply`](Self::apply), [`count`](Self::count) and
+    /// `WorkloadSpec::is_online` all consume this iterator, so they cannot
+    /// drift apart.
+    pub fn selected<'a>(
+        &'a self,
+        jobs: &'a [TraceJob],
+    ) -> impl Iterator<Item = &'a TraceJob> + 'a {
+        jobs.iter()
+            .filter(move |j| self.matches(j))
+            .take(self.max_jobs.unwrap_or(usize::MAX))
+    }
+
+    /// Apply the selector, cloning the kept jobs.
+    pub fn apply(&self, jobs: &[TraceJob]) -> Vec<TraceJob> {
+        self.selected(jobs).cloned().collect()
+    }
+
+    /// Number of jobs [`apply`](Self::apply) would keep.
+    pub fn count(&self, jobs: &[TraceJob]) -> usize {
+        self.selected(jobs).count()
+    }
+
+    /// Compact label for sweep CSV axis columns: `"all"`, or `·`-joined
+    /// parts like `"u3"`, `"p1"`, `"max100"`.
+    pub fn label(&self) -> String {
+        if self.is_all() {
+            return "all".to_string();
+        }
+        let mut parts = Vec::new();
+        for u in &self.users {
+            parts.push(format!("u{u}"));
+        }
+        for p in &self.partitions {
+            parts.push(format!("p{p}"));
+        }
+        if let Some(n) = self.max_jobs {
+            parts.push(format!("max{n}"));
+        }
+        parts.join("·")
+    }
+
+    /// Reject selectors that can never keep a job of `jobs` — a filter on
+    /// metadata the trace does not carry, a zero truncation, or a
+    /// combination that keeps nothing (the strict-loader discipline: fail
+    /// at load time, not with a silently empty experiment).
+    pub fn validate(&self, jobs: &[TraceJob]) -> Result<()> {
+        if self.max_jobs == Some(0) {
+            bail!("trace selector: max_jobs must be >= 1");
+        }
+        if !self.users.is_empty() && jobs.iter().all(|j| j.user.is_none()) {
+            bail!(
+                "trace selector names user ids {:?}, but the trace carries no user \
+                 metadata (legacy 4-column traces cannot be split per user — use an \
+                 18-column SWF file)",
+                self.users
+            );
+        }
+        if !self.partitions.is_empty() && jobs.iter().all(|j| j.partition.is_none()) {
+            bail!(
+                "trace selector names partitions {:?}, but the trace carries no \
+                 partition metadata",
+                self.partitions
+            );
+        }
+        if self.count(jobs) == 0 {
+            bail!(
+                "trace selector {:?} keeps none of the trace's {} jobs",
+                self.label(),
+                jobs.len()
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -111,18 +655,14 @@ mod tests {
         assert_eq!(jobs[1].submit_time, 42.5);
         assert_eq!(jobs[1].length_mi, 12_000.0);
         assert_eq!(jobs[1].input_bytes, 0);
+        assert_eq!(jobs[0].user, None, "legacy jobs carry no SWF metadata");
     }
 
     #[test]
     fn round_trips_exactly() {
         let jobs = vec![
-            TraceJob { submit_time: 0.0, length_mi: 10_000.3, input_bytes: 1000, output_bytes: 500 },
-            TraceJob {
-                submit_time: 17.25,
-                length_mi: 1.0 / 3.0 + 100.0,
-                input_bytes: 7,
-                output_bytes: 0,
-            },
+            TraceJob::new(0.0, 10_000.3, 1000, 500),
+            TraceJob::new(17.25, 1.0 / 3.0 + 100.0, 7, 0),
         ];
         let text = format_trace(&jobs);
         let back = parse_trace(&text).unwrap();
@@ -146,12 +686,7 @@ mod tests {
 
     #[test]
     fn file_round_trip() {
-        let jobs = vec![TraceJob {
-            submit_time: 3.5,
-            length_mi: 500.0,
-            input_bytes: 10,
-            output_bytes: 20,
-        }];
+        let jobs = vec![TraceJob::new(3.5, 500.0, 10, 20)];
         let dir = std::env::temp_dir().join("gridsim_trace_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.swf");
@@ -164,5 +699,148 @@ mod tests {
     fn missing_file_error_names_path() {
         let err = load_trace_file("/no/such/trace.swf").unwrap_err();
         assert!(format!("{err:#}").contains("/no/such/trace.swf"));
+    }
+
+    // One hand-checked SWF snippet shared by the parser tests: 4 records,
+    // two users, two partitions, one failed job, one with missing fields.
+    const SWF: &str = "\
+; Version: 2\n\
+; Computer: Test Cluster\n\
+; MaxNodes: 128\n\
+; UnixStartTime: 845923442\n\
+; Note: synthetic excerpt\n\
+; free-text comment without a colon-key shape !!\n\
+1 100 5 60 4 -1 -1 4 120 -1 1 3 1 -1 1 0 -1 -1\n\
+2 160 -1 30 -1 -1 -1 8 40 -1 1 7 1 -1 1 1 -1 -1\n\
+3 200 0 45 2 -1 -1 2 -1 -1 0 3 1 -1 1 0 -1 -1\n\
+4 250 1 -1 1 -1 -1 1 90 -1 -1 7 2 -1 2 1 -1 -1\n";
+
+    #[test]
+    fn swf_parses_directives_and_records() {
+        let swf = parse_swf(SWF).unwrap();
+        assert_eq!(swf.header.version(), Some("2"));
+        assert_eq!(swf.header.computer(), Some("Test Cluster"));
+        assert_eq!(swf.header.max_nodes(), Some(128));
+        assert_eq!(swf.header.unix_start_time(), Some(845_923_442));
+        assert_eq!(swf.header.max_procs(), None);
+        assert_eq!(swf.jobs.len(), 4);
+        let j = &swf.jobs[0];
+        assert_eq!(j.job_id, 1);
+        assert_eq!(j.submit_time, 100.0);
+        assert_eq!(j.allocated_procs, 4);
+        assert_eq!(j.user_opt(), Some(3));
+        assert_eq!(j.partition_opt(), Some(0));
+        // -1 sentinels survive parsing.
+        assert_eq!(swf.jobs[1].wait_time, -1.0);
+        assert_eq!(swf.jobs[1].allocated_procs, -1);
+        assert_eq!(swf.jobs[3].status, -1);
+    }
+
+    #[test]
+    fn swf_conversion_filters_scales_and_rebases() {
+        let swf = parse_swf(SWF).unwrap();
+        let jobs = swf.to_trace_jobs(&SwfLoadOptions::default()).unwrap();
+        // Job 3 (status 0) is filtered; job 4 (status -1) falls back to
+        // requested_time; earliest kept submit (100) rebases to 0.
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].submit_time, 0.0);
+        assert_eq!(jobs[0].length_mi, 60.0 * 4.0, "run_time × allocated_procs");
+        assert_eq!(jobs[1].submit_time, 60.0);
+        assert_eq!(jobs[1].length_mi, 30.0 * 8.0, "missing alloc → requested_procs");
+        assert_eq!(jobs[2].submit_time, 150.0);
+        assert_eq!(jobs[2].length_mi, 90.0, "missing run_time → requested_time");
+        assert_eq!(jobs[0].user, Some(3));
+        assert_eq!(jobs[1].user, Some(7));
+        assert_eq!(jobs[2].partition, Some(1));
+
+        // mips scales MI; statuses override the default filter.
+        let opts = SwfLoadOptions {
+            mips: 10.0,
+            statuses: Some(vec![0]),
+            ..SwfLoadOptions::default()
+        };
+        let failed_only = swf.to_trace_jobs(&opts).unwrap();
+        assert_eq!(failed_only.len(), 1);
+        assert_eq!(failed_only[0].length_mi, 45.0 * 2.0 * 10.0);
+        assert_eq!(failed_only[0].submit_time, 0.0, "rebased to its own earliest job");
+
+        // Filtering everything out is a readable error, not an empty run.
+        let opts = SwfLoadOptions { statuses: Some(vec![5]), ..SwfLoadOptions::default() };
+        let err = swf.to_trace_jobs(&opts).unwrap_err().to_string();
+        assert!(err.contains("no replayable jobs"), "{err}");
+    }
+
+    #[test]
+    fn swf_rejects_malformed_records() {
+        for (line, needle) in [
+            ("1 2 3", "fields"),
+            ("x 100 5 60 4 -1 -1 4 120 -1 1 3 1 -1 1 0 -1 -1", "not a number"),
+            ("1 -5 5 60 4 -1 -1 4 120 -1 1 3 1 -1 1 0 -1 -1", "submit_time"),
+            ("1 100 5 60 4.5 -1 -1 4 120 -1 1 3 1 -1 1 0 -1 -1", "allocated_procs"),
+            ("1 100 5 -2 4 -1 -1 4 120 -1 1 3 1 -1 1 0 -1 -1", "run_time"),
+        ] {
+            let err = parse_swf(line).unwrap_err();
+            assert!(format!("{err:#}").contains(needle), "{line:?}: {err:#}");
+        }
+        assert!(parse_swf("; only directives\n").unwrap_err().to_string().contains("no job"));
+    }
+
+    #[test]
+    fn format_detection_and_dispatch() {
+        assert_eq!(detect_format("; c\n0 1 2 3\n").unwrap(), TraceFormat::Legacy);
+        assert_eq!(detect_format(SWF).unwrap(), TraceFormat::Swf);
+        let err = detect_format("1 2 3 4 5\n").unwrap_err().to_string();
+        assert!(err.contains("4 fields") && err.contains("18"), "{err}");
+
+        let dir = std::env::temp_dir().join("gridsim_swf_detect_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.swf");
+        std::fs::write(&path, SWF).unwrap();
+        let jobs = load_trace_file(&path).unwrap();
+        assert_eq!(jobs.len(), 3, "auto-detected SWF conversion");
+        // Stated options against a legacy file are rejected loudly — even
+        // when their values happen to match the defaults (a caller who
+        // wrote the knob asked for SWF conversion semantics).
+        let legacy = dir.join("legacy.swf");
+        std::fs::write(&legacy, "0 100 1 1\n").unwrap();
+        let opts = SwfLoadOptions { mips: 2.0, ..SwfLoadOptions::default() };
+        let err = load_trace_file_with(&legacy, Some(&opts)).unwrap_err().to_string();
+        assert!(err.contains("legacy"), "{err}");
+        let defaults = SwfLoadOptions::default();
+        let err =
+            load_trace_file_with(&legacy, Some(&defaults)).unwrap_err().to_string();
+        assert!(err.contains("legacy"), "{err}");
+        assert!(load_trace_file_with(&legacy, None).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn selector_filters_truncates_and_labels() {
+        let swf = parse_swf(SWF).unwrap();
+        let jobs = swf.to_trace_jobs(&SwfLoadOptions::default()).unwrap();
+        assert_eq!(TraceSelector::all().apply(&jobs).len(), 3);
+        assert_eq!(TraceSelector::user(3).apply(&jobs).len(), 1);
+        let u7 = TraceSelector::user(7).apply(&jobs);
+        assert_eq!(u7.len(), 2);
+        assert_eq!(
+            u7[0].submit_time, 60.0,
+            "selection after the shared rebase keeps global alignment"
+        );
+        assert_eq!(TraceSelector::partition(1).apply(&jobs).len(), 2);
+        assert_eq!(TraceSelector::user(7).with_max_jobs(1).apply(&jobs).len(), 1);
+        assert_eq!(TraceSelector::user(7).count(&jobs), 2);
+        assert_eq!(TraceSelector::all().label(), "all");
+        assert_eq!(TraceSelector::user(7).with_max_jobs(1).label(), "u7·max1");
+
+        // Validation: empty selections and metadata-free traces fail.
+        assert!(TraceSelector::user(7).validate(&jobs).is_ok());
+        let err = TraceSelector::user(99).validate(&jobs).unwrap_err().to_string();
+        assert!(err.contains("keeps none"), "{err}");
+        let legacy = vec![TraceJob::new(0.0, 10.0, 0, 0)];
+        let err = TraceSelector::user(1).validate(&legacy).unwrap_err().to_string();
+        assert!(err.contains("no user metadata"), "{err}");
+        let err =
+            TraceSelector::all().with_max_jobs(0).validate(&jobs).unwrap_err().to_string();
+        assert!(err.contains("max_jobs"), "{err}");
     }
 }

@@ -1,0 +1,279 @@
+//! Real-trace workloads end to end: the committed 18-column SWF excerpt
+//! through the parser, the strict JSON loader, per-user `TraceSelector`
+//! splits, composition (`concat`/`mix`), modulated arrivals, the sweep
+//! axes — and the regression pinning that the legacy 4-column format still
+//! loads byte-identically.
+
+use gridsim::broker::ExperimentSpec;
+use gridsim::config::scenario_file::{parse_scenario_at, parse_sweep_at};
+use gridsim::gridsim::random::GridSimRandom;
+use gridsim::output::sweep::long_csv;
+use gridsim::scenario::Scenario;
+use gridsim::session::GridSession;
+use gridsim::sweep::run_sweep;
+use gridsim::util::prop::{check, forall};
+use gridsim::workload::{
+    load_trace_file, parse_swf, parse_trace, ArrivalProcess, RateEnvelope, SwfLoadOptions,
+    TraceSelector, WorkloadSpec,
+};
+use std::path::{Path, PathBuf};
+
+/// The committed example directory, independent of the test CWD.
+fn examples_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples")
+}
+
+fn excerpt() -> String {
+    std::fs::read_to_string(examples_dir().join("lanl_cm5_excerpt.swf")).unwrap()
+}
+
+#[test]
+fn excerpt_header_and_filtering_are_as_documented() {
+    let swf = parse_swf(&excerpt()).unwrap();
+    // Header directives parse, including repeated Note: lines.
+    assert_eq!(swf.header.computer(), Some("Thinking Machines CM-5"));
+    assert_eq!(swf.header.max_nodes(), Some(1024));
+    assert_eq!(swf.header.max_jobs(), Some(24));
+    assert_eq!(swf.header.unix_start_time(), Some(760_917_602));
+    assert!(swf.header.directives.iter().filter(|(k, _)| k == "Note").count() >= 3);
+    assert_eq!(swf.jobs.len(), 24);
+
+    // Default conversion: statuses {1, -1} kept, failed (0) and cancelled
+    // (5) dropped, the job with no usable runtime skipped → 20 jobs.
+    let jobs = swf.to_trace_jobs(&SwfLoadOptions::default()).unwrap();
+    assert_eq!(jobs.len(), 20);
+    // Earliest kept job submits at 0, so the rebase is the identity here.
+    assert_eq!(jobs[0].submit_time, 0.0);
+    // -1 semantics: job 4 falls back to requested_time (600 s × 32 procs),
+    // job 5 to requested_procs (90 s × 64).
+    let job4 = jobs.iter().find(|j| j.submit_time == 190.0).unwrap();
+    assert_eq!(job4.length_mi, 600.0 * 32.0);
+    let job5 = jobs.iter().find(|j| j.submit_time == 260.0).unwrap();
+    assert_eq!(job5.length_mi, 90.0 * 64.0);
+    // The per-user split the docs promise: 7 + 8 + 5.
+    assert_eq!(TraceSelector::user(3).count(&jobs), 7);
+    assert_eq!(TraceSelector::user(7).count(&jobs), 8);
+    assert_eq!(TraceSelector::user(12).count(&jobs), 5);
+    // Status-filter override: keeping failed jobs only finds the two 0s.
+    let failed = SwfLoadOptions { statuses: Some(vec![0]), ..SwfLoadOptions::default() };
+    assert_eq!(swf.to_trace_jobs(&failed).unwrap().len(), 2);
+}
+
+#[test]
+fn out_of_order_submits_sort_in_materialization() {
+    // Records 8 (submit 950) and 9 (submit 900) are out of order in the
+    // file — as in real logs. File order sets ids; release order sorts.
+    let jobs = parse_swf(&excerpt()).unwrap().to_trace_jobs(&SwfLoadOptions::default()).unwrap();
+    let spec = WorkloadSpec::trace(jobs);
+    let releases = spec.materialize(&mut GridSimRandom::new(1));
+    assert!(releases.windows(2).all(|w| w[0].offset <= w[1].offset), "sorted by offset");
+    let i900 = releases.iter().position(|r| r.offset == 900.0).unwrap();
+    let i950 = releases.iter().position(|r| r.offset == 950.0).unwrap();
+    assert!(i900 < i950);
+    assert!(
+        releases[i900].gridlet.id > releases[i950].gridlet.id,
+        "ids keep file order, so the out-of-order pair has inverted ids"
+    );
+}
+
+#[test]
+fn legacy_four_column_format_loads_byte_identically() {
+    // The pre-SWF behavior, pinned: auto-detection must route 4-column
+    // files through the original parser with identical results.
+    let path = examples_dir().join("trace_wwg.swf");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let via_file = load_trace_file(&path).unwrap();
+    let via_parse = parse_trace(&text).unwrap();
+    assert_eq!(via_file, via_parse);
+    assert_eq!(via_file.len(), 20);
+    // First and last rows exactly as committed.
+    assert_eq!(via_file[0].submit_time.to_bits(), 0f64.to_bits());
+    assert_eq!(via_file[0].length_mi.to_bits(), 10_000f64.to_bits());
+    assert_eq!((via_file[0].input_bytes, via_file[0].output_bytes), (1000, 500));
+    assert_eq!(via_file[19].submit_time.to_bits(), 1_500f64.to_bits());
+    assert_eq!(via_file[19].length_mi.to_bits(), 10_000f64.to_bits());
+    // No SWF metadata is fabricated for legacy jobs.
+    assert!(via_file.iter().all(|j| j.user.is_none() && j.partition.is_none()));
+}
+
+/// The acceptance property: an SWF excerpt loaded through the JSON loader,
+/// split per user, mixed with a heavy-tailed farm — byte-identical releases
+/// under equal seeds, for many seeds.
+#[test]
+fn mix_of_trace_and_heavy_tail_materializes_deterministically() {
+    let jobs = parse_swf(&excerpt()).unwrap().to_trace_jobs(&SwfLoadOptions::default()).unwrap();
+    let spec = WorkloadSpec::mix_weighted(
+        vec![
+            WorkloadSpec::heavy_tailed(30, 5_000.0, 0.2, 15.0),
+            WorkloadSpec::trace_selected(jobs, TraceSelector::user(7)),
+        ],
+        vec![2.0, 1.0],
+    );
+    spec.validate().unwrap();
+    assert_eq!(spec.declared_jobs(), 38);
+    forall(
+        11,
+        25,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let a = spec.materialize(&mut GridSimRandom::new(seed));
+            let b = spec.materialize(&mut GridSimRandom::new(seed));
+            check(a.len() == 38, "all parts drain")?;
+            for (x, y) in a.iter().zip(&b) {
+                check(
+                    x.offset.to_bits() == y.offset.to_bits()
+                        && x.gridlet.length_mi.to_bits() == y.gridlet.length_mi.to_bits()
+                        && x.gridlet.id == y.gridlet.id,
+                    "same seed ⇒ byte-identical releases",
+                )?;
+            }
+            let mut ids: Vec<usize> = a.iter().map(|r| r.gridlet.id).collect();
+            ids.sort_unstable();
+            check(ids == (0..38).collect::<Vec<_>>(), "ids are a permutation")
+        },
+    );
+}
+
+#[test]
+fn swf_scenario_splits_users_and_completes_through_the_broker() {
+    // The full acceptance path: {"workload": {"type": "trace", ...}} with a
+    // per-user "select", run to completion on a live economic broker.
+    let text = r#"{
+        "seed": 7,
+        "resources": [
+            {"name": "Cheap", "pes": 8, "mips": 500, "price": 1.0},
+            {"name": "Fast", "pes": 8, "mips": 900, "price": 3.0}
+        ],
+        "users": [
+            {"workload": {"type": "trace", "path": "lanl_cm5_excerpt.swf",
+                          "select": {"users": [3]}},
+             "deadline": 1e7, "budget": 1e9},
+            {"workload": {"type": "trace", "path": "lanl_cm5_excerpt.swf",
+                          "select": {"users": [12], "max_jobs": 4}},
+             "deadline": 1e7, "budget": 1e9}
+        ]
+    }"#;
+    let scenario = parse_scenario_at(text, Some(examples_dir().as_path())).unwrap();
+    assert_eq!(scenario.users[0].experiment.num_gridlets(), 7);
+    assert_eq!(scenario.users[1].experiment.num_gridlets(), 4, "max_jobs truncates");
+    assert!(scenario.users[0].experiment.workload.is_online());
+
+    let report = GridSession::new(&scenario).run_to_completion();
+    assert!(report.all_finished(), "unfinished: {:?}", report.unfinished);
+    for (i, expect) in [(0usize, 7usize), (1, 4)] {
+        let u = &report.users[i];
+        assert_eq!(u.gridlets_completed, expect);
+        let per_res: usize = u.per_resource.iter().map(|r| r.gridlets_completed).sum();
+        assert_eq!(per_res, expect, "real per-resource accounting");
+        assert!(u.budget_spent > 0.0);
+    }
+}
+
+#[test]
+fn modulated_arrivals_run_and_respect_the_envelope_end_to_end() {
+    let scenario = Scenario::builder()
+        .resource(gridsim::scenario::ResourceSpec {
+            name: "R0".into(),
+            arch: "test".into(),
+            os: "linux".into(),
+            machines: 1,
+            pes_per_machine: 4,
+            mips_per_pe: 200.0,
+            policy: gridsim::gridsim::AllocPolicy::TimeShared,
+            price: 1.0,
+            time_zone: 0.0,
+            calendar: None,
+        })
+        .user(
+            ExperimentSpec::new(WorkloadSpec::online(
+                WorkloadSpec::task_farm(40, 500.0, 0.0),
+                ArrivalProcess::Modulated {
+                    mean_interarrival: 3.0,
+                    envelope: RateEnvelope::Piecewise {
+                        period: 200.0,
+                        rates: vec![1.0, 0.0],
+                    },
+                },
+            ))
+            .deadline(1e6)
+            .budget(1e9),
+        )
+        .seed(13)
+        .build();
+    // The user's own arrival schedule (session seed derivation) stays in
+    // the day windows.
+    let user_seed = 13u64.wrapping_mul(997).wrapping_add(1);
+    let releases = scenario.users[0]
+        .experiment
+        .workload
+        .materialize(&mut GridSimRandom::new(user_seed));
+    for r in &releases {
+        assert!(
+            r.offset.rem_euclid(200.0) < 100.0,
+            "arrival at {} fell in the zero-rate night window",
+            r.offset
+        );
+    }
+    let report = GridSession::new(&scenario).run_to_completion();
+    assert!(report.all_finished());
+    assert_eq!(report.users[0].gridlets_completed, 40);
+    let span = report.users[0].finish_time - report.users[0].start_time;
+    assert!(span >= releases.last().unwrap().offset, "run covers the last arrival");
+}
+
+#[test]
+fn composite_sweep_file_is_jobs_invariant() {
+    // The committed sweep file: trace_selectors × mix_weights over a mix of
+    // heavy-tailed + SWF trace. Byte-identical CSV at any worker count.
+    let path = examples_dir().join("composite_sweep.json");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let spec = parse_sweep_at(&text, Some(examples_dir().as_path())).unwrap();
+    assert_eq!(spec.cell_count(), 4);
+    let serial = run_sweep(&spec, 1).unwrap();
+    let parallel = run_sweep(&spec, 3).unwrap();
+    let a = long_csv(&spec, &serial).to_string();
+    let b = long_csv(&spec, &parallel).to_string();
+    assert_eq!(a, b, "sweep output depends only on the spec");
+    // The axis columns carry the selector and weight labels.
+    assert!(a.contains(",u3,"), "{a}");
+    assert!(a.contains(",u7,"), "{a}");
+    assert!(a.contains(",3+1,"), "{a}");
+    // Different selectors genuinely change the workload: cells for user 3
+    // and user 7 declare different job totals (40 farm + 7 vs 8 trace).
+    let totals: Vec<&str> = a
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').nth(14).unwrap())
+        .collect();
+    assert!(totals.contains(&"47") && totals.contains(&"48"), "{totals:?}");
+}
+
+#[test]
+fn concat_of_farm_and_trace_runs_to_completion() {
+    let jobs = parse_swf(&excerpt()).unwrap().to_trace_jobs(&SwfLoadOptions::default()).unwrap();
+    let spec = WorkloadSpec::concat(vec![
+        WorkloadSpec::task_farm(10, 2_000.0, 0.10),
+        WorkloadSpec::trace_selected(jobs, TraceSelector::user(12).with_max_jobs(3)),
+    ]);
+    assert_eq!(spec.declared_jobs(), 13);
+    let scenario = Scenario::builder()
+        .resource(gridsim::scenario::ResourceSpec {
+            name: "R0".into(),
+            arch: "test".into(),
+            os: "linux".into(),
+            machines: 1,
+            pes_per_machine: 8,
+            mips_per_pe: 400.0,
+            policy: gridsim::gridsim::AllocPolicy::TimeShared,
+            price: 2.0,
+            time_zone: 0.0,
+            calendar: None,
+        })
+        .user(ExperimentSpec::new(spec).deadline(1e7).budget(1e9))
+        .seed(3)
+        .build();
+    let report = GridSession::new(&scenario).run_to_completion();
+    assert!(report.all_finished());
+    assert_eq!(report.users[0].gridlets_total, 13);
+    assert_eq!(report.users[0].gridlets_completed, 13);
+}

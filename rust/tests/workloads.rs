@@ -13,7 +13,7 @@ use gridsim::scenario::{ResourceSpec, Scenario, ScenarioReport};
 use gridsim::session::GridSession;
 use gridsim::util::prop::{check, forall};
 use gridsim::workload::{
-    format_trace, parse_trace, ArrivalProcess, JobSpec, TraceJob, WorkloadSpec,
+    format_trace, parse_trace, ArrivalProcess, JobSpec, RateEnvelope, TraceJob, WorkloadSpec,
 };
 
 fn resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
@@ -50,12 +50,7 @@ fn every_variant_materializes_deterministically() {
         ),
         WorkloadSpec::trace(
             (0..10)
-                .map(|i| TraceJob {
-                    submit_time: (10 - i) as f64,
-                    length_mi: 50.0 + i as f64,
-                    input_bytes: 1,
-                    output_bytes: 1,
-                })
+                .map(|i| TraceJob::new((10 - i) as f64, 50.0 + i as f64, 1, 1))
                 .collect(),
         ),
         WorkloadSpec::online(
@@ -65,6 +60,36 @@ fn every_variant_materializes_deterministically() {
         WorkloadSpec::online(
             WorkloadSpec::heavy_tailed(40, 1_000.0, 0.3, 10.0),
             ArrivalProcess::Fixed { interval: 2.5 },
+        ),
+        WorkloadSpec::online(
+            WorkloadSpec::task_farm(40, 1_000.0, 0.10),
+            ArrivalProcess::Modulated {
+                mean_interarrival: 3.0,
+                envelope: RateEnvelope::Piecewise { period: 50.0, rates: vec![1.0, 0.2] },
+            },
+        ),
+        WorkloadSpec::online(
+            WorkloadSpec::task_farm(40, 1_000.0, 0.10),
+            ArrivalProcess::Modulated {
+                mean_interarrival: 3.0,
+                envelope: RateEnvelope::Sinusoid { period: 80.0, amplitude: 0.9 },
+            },
+        ),
+        WorkloadSpec::concat(vec![
+            WorkloadSpec::task_farm(15, 1_000.0, 0.10),
+            WorkloadSpec::trace(
+                (0..5).map(|i| TraceJob::new(i as f64 * 4.0, 100.0, 1, 1)).collect(),
+            ),
+        ]),
+        WorkloadSpec::mix_weighted(
+            vec![
+                WorkloadSpec::heavy_tailed(20, 1_000.0, 0.2, 10.0),
+                WorkloadSpec::online(
+                    WorkloadSpec::task_farm(10, 500.0, 0.0),
+                    ArrivalProcess::Poisson { mean_interarrival: 2.0 },
+                ),
+            ],
+            vec![3.0, 1.0],
         ),
     ];
     for spec in &variants {
@@ -104,12 +129,7 @@ fn every_variant_materializes_deterministically() {
 fn trace_round_trips_through_file_and_scenario() {
     // Generated jobs with awkward floats round-trip exactly.
     let jobs: Vec<TraceJob> = (0..25)
-        .map(|i| TraceJob {
-            submit_time: i as f64 * 1.1,
-            length_mi: 10_000.0 / 3.0 + i as f64,
-            input_bytes: 100 + i,
-            output_bytes: 50,
-        })
+        .map(|i| TraceJob::new(i as f64 * 1.1, 10_000.0 / 3.0 + i as f64, 100 + i, 50))
         .collect();
     let text = format_trace(&jobs);
     assert_eq!(parse_trace(&text).unwrap(), jobs, "write -> load -> identical jobs");
