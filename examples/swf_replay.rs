@@ -16,8 +16,9 @@ use gridsim::config::testbed::wwg_testbed;
 use gridsim::scenario::Scenario;
 use gridsim::session::GridSession;
 use gridsim::util::cli::Args;
-use gridsim::workload::{parse_swf, SwfLoadOptions, TraceSelector, WorkloadSpec};
+use gridsim::workload::{parse_swf, SwfLoadOptions, TraceJob, TraceSelector, WorkloadSpec};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -40,15 +41,20 @@ fn main() {
     );
 
     // Convert: completed jobs only, runtime seconds × procs × 100 MIPS.
+    // Into an Arc up front: both simulated users (and any sweep built on
+    // top) share this one allocation instead of copying the log.
     let options = SwfLoadOptions { mips: 100.0, ..SwfLoadOptions::default() };
-    let jobs = swf.to_trace_jobs(&options).unwrap_or_else(|e| {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
-    });
+    let jobs: Arc<[TraceJob]> = swf
+        .to_trace_jobs(&options)
+        .unwrap_or_else(|e| {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        })
+        .into();
 
     // Rank the log's users by job count and take the two busiest.
     let mut per_user: BTreeMap<i64, usize> = BTreeMap::new();
-    for j in &jobs {
+    for j in jobs.iter() {
         if let Some(u) = j.user {
             *per_user.entry(u).or_default() += 1;
         }
@@ -64,12 +70,13 @@ fn main() {
         println!("  swf user {u:>3}: {n} completed jobs");
     }
 
-    // One simulated user per selected SWF user. The slices share the log's
-    // rebased clock, so their arrivals stay mutually aligned.
+    // One simulated user per selected SWF user, each holding an Arc clone
+    // of the one loaded log. The slices share the log's rebased clock, so
+    // their arrivals stay mutually aligned.
     let mut builder = Scenario::builder().resources(wwg_testbed()).seed(27);
     for &(u, _) in &ranked[..2] {
         builder = builder.user(
-            ExperimentSpec::new(WorkloadSpec::trace_selected(
+            ExperimentSpec::new(WorkloadSpec::trace_selected_shared(
                 jobs.clone(),
                 TraceSelector::user(u),
             ))

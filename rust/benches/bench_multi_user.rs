@@ -123,4 +123,63 @@ fn main() {
         "sweep output must be byte-identical across worker counts"
     );
     println!("sweep determinism: serial and parallel CSV byte-identical");
+
+    // Shared-trace memory/throughput: one synthetic 100k-record log split
+    // across 20 users, every sweep cell sharing the single Arc allocation.
+    // The clone bench is what each cell pays to materialize its scenario —
+    // before Arc sharing it deep-copied 20 × 100k TraceJobs per cell.
+    use gridsim::workload::{TraceJob, TraceSelector, WorkloadSpec};
+    use std::sync::Arc;
+    let jobs: Vec<TraceJob> = (0..100_000)
+        .map(|i| {
+            let mut j = TraceJob::new(
+                (i % 977) as f64 * 0.5,
+                8_000.0 + (i % 13) as f64 * 250.0,
+                1_000,
+                500,
+            );
+            j.user = Some((i % 20) as i64);
+            j
+        })
+        .collect();
+    let shared: Arc<[TraceJob]> = jobs.into();
+    metric(
+        "shared_trace_log_bytes(100k jobs, 1 allocation)",
+        (shared.len() * std::mem::size_of::<TraceJob>()) as f64,
+        "B",
+    );
+    let mut builder = Scenario::builder().resources(wwg_testbed()).seed(23);
+    for u in 0..20i64 {
+        builder = builder.user(
+            gridsim::broker::ExperimentSpec::new(WorkloadSpec::trace_selected_shared(
+                shared.clone(),
+                TraceSelector::user(u).with_max_jobs(40),
+            ))
+            .deadline(3_100.0)
+            .budget(22_000.0)
+            .optimization(Optimization::Cost),
+        );
+    }
+    let base = builder.build();
+    bench("shared_trace_scenario_clone(20 users x 100k-job log)", 2, 5, || {
+        std::hint::black_box(base.clone()).users.len()
+    });
+    let spec = SweepSpec::over(base)
+        .budgets(vec![6_000.0, 12_000.0, 22_000.0])
+        .replications(2);
+    let t0 = Instant::now();
+    let shared_run = run_sweep(&spec, default_jobs()).expect("shared-trace sweep");
+    metric("shared_trace_sweep_wall(6 cells, 20 users)", t0.elapsed().as_secs_f64(), "s");
+    metric(
+        "shared_trace_sweep_events_per_sec",
+        shared_run.total_events() as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+        "events/s",
+    );
+    let serial_trace = run_sweep(&spec, 1).expect("serial shared-trace sweep");
+    assert_eq!(
+        long_csv(&spec, &shared_run).to_string(),
+        long_csv(&spec, &serial_trace).to_string(),
+        "shared-trace sweep output must be byte-identical across worker counts"
+    );
+    println!("shared-trace determinism: serial and parallel CSV byte-identical");
 }

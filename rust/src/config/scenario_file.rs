@@ -59,11 +59,12 @@ use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec
 use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
 use crate::workload::{
-    load_trace_file_with, ArrivalProcess, JobSpec, RateEnvelope, SwfLoadOptions, TraceSelector,
-    WorkloadSpec,
+    load_trace_file_with, ArrivalProcess, JobSpec, RateEnvelope, SwfLoadOptions, TraceJob,
+    TraceSelector, WorkloadSpec,
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const SCENARIO_KEYS: &[&str] = &[
     "seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time",
@@ -344,6 +345,10 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
         None => BrokerConfig::default(),
     };
 
+    // One cache per parse: every "trace" workload naming the same file (and
+    // SWF options) — across users and inside concat/mix parts — shares one
+    // Arc-allocated job list.
+    let mut traces = TraceCache::default();
     let users = root
         .get("users")
         .and_then(Value::as_arr)
@@ -351,7 +356,8 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
         .iter()
         .enumerate()
         .map(|(i, u)| {
-            parse_user(u, &broker_default, base_dir).with_context(|| format!("user #{i}"))
+            parse_user(u, &broker_default, base_dir, &mut traces)
+                .with_context(|| format!("user #{i}"))
         })
         .collect::<Result<Vec<_>>>()?;
     if users.is_empty() {
@@ -437,11 +443,45 @@ fn opt_bytes(v: &Value, what: &str, key: &str) -> Result<Option<u64>> {
     Ok(opt_usize(v, what, key)?.map(|n| n as u64))
 }
 
+/// One scenario parse shares every loaded trace: the cache maps a resolved
+/// path plus the *stated* SWF conversion options to the `Arc`-shared job
+/// list, so ten users replaying slices of one 10^5-record log hold ten
+/// `Arc` clones of a single allocation — and a sweep over the file shares
+/// that same allocation across every cell. Lookup is a linear scan because
+/// a scenario file names at most a handful of distinct traces (and
+/// [`SwfLoadOptions`] holds floats, so it is `PartialEq` but not `Hash`).
+#[derive(Default)]
+struct TraceCache {
+    entries: Vec<((PathBuf, Option<SwfLoadOptions>), Arc<[TraceJob]>)>,
+}
+
+impl TraceCache {
+    fn load(
+        &mut self,
+        path: &Path,
+        options: Option<&SwfLoadOptions>,
+    ) -> Result<Arc<[TraceJob]>> {
+        let key = (path.to_path_buf(), options.cloned());
+        if let Some((_, jobs)) = self.entries.iter().find(|(k, _)| *k == key) {
+            return Ok(jobs.clone());
+        }
+        let jobs: Arc<[TraceJob]> = load_trace_file_with(path, options)?.into();
+        self.entries.push((key, jobs.clone()));
+        Ok(jobs)
+    }
+}
+
 /// Parse a `"workload"` object into a [`WorkloadSpec`]. Each variant has its
 /// own allowed-key list; the spec is validated before it is returned, so
 /// out-of-range parameters fail at load time with a readable message.
-/// Relative trace paths resolve against `base_dir` when given.
-fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
+/// Relative trace paths resolve against `base_dir` when given; trace loads
+/// go through `traces`, so repeated references to one log share a single
+/// `Arc` allocation.
+fn parse_workload(
+    v: &Value,
+    base_dir: Option<&Path>,
+    traces: &mut TraceCache,
+) -> Result<WorkloadSpec> {
     if !matches!(v, Value::Obj(_)) {
         bail!("\"workload\" must be a JSON object");
     }
@@ -533,18 +573,18 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
                 Some(sel) => parse_trace_selector(sel)?,
                 None => TraceSelector::all(),
             };
-            WorkloadSpec::Trace {
-                jobs: load_trace_file_with(&resolved, options.as_ref())?,
+            WorkloadSpec::trace_selected_shared(
+                traces.load(&resolved, options.as_ref())?,
                 selector,
-            }
+            )
         }
         "concat" => {
             reject_unknown_keys(v, "concat workload", WORKLOAD_CONCAT_KEYS)?;
-            WorkloadSpec::Concat { parts: parse_workload_parts(v, "concat", base_dir)? }
+            WorkloadSpec::Concat { parts: parse_workload_parts(v, "concat", base_dir, traces)? }
         }
         "mix" => {
             reject_unknown_keys(v, "mix workload", WORKLOAD_MIX_KEYS)?;
-            let parts = parse_workload_parts(v, "mix", base_dir)?;
+            let parts = parse_workload_parts(v, "mix", base_dir, traces)?;
             let weights = match opt_f64_array(v, "mix workload", "weights")? {
                 Some(ws) => ws,
                 None => vec![1.0; parts.len()],
@@ -556,7 +596,7 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
             let inner_v = v.get("workload").ok_or_else(|| {
                 anyhow!("online_arrivals workload: missing inner \"workload\" object")
             })?;
-            let inner = parse_workload(inner_v, base_dir).context("online_arrivals")?;
+            let inner = parse_workload(inner_v, base_dir, traces).context("online_arrivals")?;
             if matches!(inner, WorkloadSpec::OnlineArrivals { .. }) {
                 bail!("online_arrivals cannot wrap another online_arrivals");
             }
@@ -635,13 +675,15 @@ fn parse_workload(v: &Value, base_dir: Option<&Path>) -> Result<WorkloadSpec> {
 }
 
 /// Parse the `"parts"` array of a `concat`/`mix` workload, recursing into
-/// [`parse_workload`] — `base_dir` is threaded through, so a relative trace
-/// path inside a composition resolves against the scenario file's directory
-/// exactly like a top-level trace.
+/// [`parse_workload`] — `base_dir` and the trace cache are threaded
+/// through, so a relative trace path inside a composition resolves against
+/// the scenario file's directory (and shares the loaded log) exactly like a
+/// top-level trace.
 fn parse_workload_parts(
     v: &Value,
     what: &str,
     base_dir: Option<&Path>,
+    traces: &mut TraceCache,
 ) -> Result<Vec<WorkloadSpec>> {
     let arr = v
         .get("parts")
@@ -653,7 +695,7 @@ fn parse_workload_parts(
     arr.iter()
         .enumerate()
         .map(|(i, p)| {
-            parse_workload(p, base_dir).with_context(|| format!("{what} part #{i}"))
+            parse_workload(p, base_dir, traces).with_context(|| format!("{what} part #{i}"))
         })
         .collect()
 }
@@ -694,6 +736,7 @@ fn parse_user(
     v: &Value,
     broker_default: &BrokerConfig,
     base_dir: Option<&Path>,
+    traces: &mut TraceCache,
 ) -> Result<UserSpec> {
     reject_unknown_keys(v, "user", USER_KEYS)?;
     let mut spec = if let Some(w) = v.get("workload") {
@@ -703,7 +746,7 @@ fn parse_user(
                  (put the job shape inside the \"workload\" object)"
             );
         }
-        ExperimentSpec::new(parse_workload(w, base_dir)?)
+        ExperimentSpec::new(parse_workload(w, base_dir, traces)?)
     } else {
         let mut spec = ExperimentSpec::task_farm(
             opt_usize(v, "user", "gridlets")?.unwrap_or(200),
@@ -1454,18 +1497,35 @@ mod tests {
                           "input_bytes": 256, "select": {"users": [3]}},
              "deadline": 1e6, "budget": 1e9},
             {"workload": {"type": "trace", "path": "log.swf",
-                          "select": {"users": [7]}}}
+                          "select": {"users": [7]}}},
+            {"workload": {"type": "trace", "path": "log.swf",
+                          "select": {"users": [3]}}}
         ]}"#;
         let s = parse_scenario_at(text, Some(dir.as_path())).unwrap();
         assert_eq!(s.users[0].experiment.num_gridlets(), 2, "user 3's jobs");
         assert_eq!(s.users[1].experiment.num_gridlets(), 1, "user 7's jobs");
-        let WorkloadSpec::Trace { jobs, selector } = &s.users[0].experiment.workload else {
+        let WorkloadSpec::Trace { jobs, selector, .. } = &s.users[0].experiment.workload
+        else {
             panic!("trace expected")
         };
         assert_eq!(jobs.len(), 3, "the full log is retained for re-selection");
         assert_eq!(selector.users, vec![3]);
         assert_eq!(jobs[0].length_mi, 60.0 * 4.0 * 10.0, "mips scales MI");
         assert_eq!(jobs[0].input_bytes, 256);
+
+        // Same path + same options ⇒ one shared allocation (users 1 and 2);
+        // different conversion knobs (user 0) ⇒ a distinct load.
+        fn trace_arc(s: &crate::scenario::Scenario, u: usize) -> &Arc<[TraceJob]> {
+            let WorkloadSpec::Trace { jobs, .. } = &s.users[u].experiment.workload else {
+                panic!("trace expected")
+            };
+            jobs
+        }
+        assert!(Arc::ptr_eq(trace_arc(&s, 1), trace_arc(&s, 2)), "one log, one allocation");
+        assert!(
+            !Arc::ptr_eq(trace_arc(&s, 0), trace_arc(&s, 1)),
+            "stated knobs load separately"
+        );
 
         // A selector that keeps nothing fails at load time.
         let empty = r#"{"testbed": "wwg", "users": [

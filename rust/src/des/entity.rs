@@ -145,5 +145,8 @@ pub trait Entity<M>: Any + Send {
     /// Downcasting support so callers can retrieve concrete entity state
     /// after a run (e.g. a user's completed-gridlet statistics).
     fn as_any(&self) -> &dyn Any;
+
+    /// Mutable counterpart of [`as_any`](Self::as_any) (post-run mutation,
+    /// test fixtures).
     fn as_any_mut(&mut self) -> &mut dyn Any;
 }

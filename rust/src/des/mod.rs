@@ -17,6 +17,32 @@
 //! | `sim_hold(d)`             | [`Ctx::schedule_self`] + handler state |
 //! | `sim_wait(ev)`            | returning from `on_event`              |
 //! | `Sim_system` future queue | [`queue::EventQueue`] (binary heap)    |
+//!
+//! # The event loop and the stepped execution contract
+//!
+//! A [`Simulation`] moves through four idempotent phases:
+//!
+//! 1. [`Simulation::init`] — run every entity's
+//!    [`Entity::on_start`] hook in entity-id order at time 0. This is where
+//!    resources register with the information service and users kick off
+//!    experiments; it dispatches no events itself. Implicit before the
+//!    first step, so explicit calls are only needed to observe pre-event
+//!    state.
+//! 2. [`Simulation::step`] / [`Simulation::run_until`] — dispatch the
+//!    earliest pending event (or every event due by a horizon). The clock
+//!    jumps from event to event; ties break FIFO by insertion sequence, so
+//!    dispatch order is fully deterministic.
+//! 3. [`Simulation::run`] — `init`, then `step` until idle (queue drained,
+//!    an entity called [`Ctx::stop`], or a [`SimConfig`] limit hit), then
+//!    `finalize`.
+//! 4. [`Simulation::finalize`] — run every entity's [`Entity::on_end`]
+//!    reporting hook and return the final clock.
+//!
+//! The contract tying them together: **any interleaving of `step` and
+//! `run_until` calls produces results bit-identical to one `run`** — the
+//! stepped API adds observation points, never different semantics (pinned
+//! by the kernel's `stepped_run_matches_run` test and, end to end, by
+//! `rust/tests/session_stepping.rs`).
 
 pub mod entity;
 pub mod event;

@@ -49,6 +49,7 @@ impl<M> Default for EventQueue<M> {
 }
 
 impl<M> EventQueue<M> {
+    /// An empty queue; sequence numbers start at 0.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
     }
@@ -58,6 +59,7 @@ impl<M> EventQueue<M> {
         self.heap.len()
     }
 
+    /// True when no event is pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

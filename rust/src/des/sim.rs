@@ -58,6 +58,8 @@ impl<M: 'static> Default for Simulation<M> {
 }
 
 impl<M: 'static> Simulation<M> {
+    /// An empty simulation with default [`SimConfig`] (no time or event
+    /// limits): no entities, empty queue, clock at 0.
     pub fn new() -> Self {
         Simulation {
             entities: Vec::new(),
@@ -75,6 +77,7 @@ impl<M: 'static> Simulation<M> {
         }
     }
 
+    /// [`new`](Self::new) with explicit kernel limits.
     pub fn with_config(config: SimConfig) -> Self {
         let mut s = Self::new();
         s.config = config;
@@ -123,6 +126,7 @@ impl<M: 'static> Simulation<M> {
         self.observer.take()
     }
 
+    /// Number of registered entities.
     pub fn entity_count(&self) -> usize {
         self.entities.len()
     }
@@ -149,6 +153,8 @@ impl<M: 'static> Simulation<M> {
         self.entities[id].as_ref().and_then(|e| e.as_any().downcast_ref::<T>())
     }
 
+    /// Mutable variant of [`get`](Self::get) (test fixtures, fault
+    /// injection).
     pub fn get_mut<T: 'static>(&mut self, id: EntityId) -> Option<&mut T> {
         self.entities[id].as_mut().and_then(|e| e.as_any_mut().downcast_mut::<T>())
     }

@@ -16,7 +16,10 @@
 //! through `GridSession` in T-sized increments, printing a per-broker
 //! progress snapshot after each. `sweep` executes on a --jobs-sized worker
 //! pool; per-cell deterministic seeding makes its CSV output byte-identical
-//! at any --jobs value.
+//! at any --jobs value. Every sweep appends one fsync'd checkpoint line per
+//! completed cell to OUT/sweep_cells.jsonl; `sweep ... --resume DIR` skips
+//! the cells recorded there and reruns only the missing ones, with final
+//! CSVs byte-identical to an uninterrupted run.
 
 use anyhow::{anyhow, bail, Result};
 use gridsim::broker::{ExperimentSpec, Optimization};
@@ -27,7 +30,7 @@ use gridsim::output::report;
 use gridsim::output::sweep::{aggregate_csv, long_csv};
 use gridsim::scenario::{AdvisorKind, Scenario, ScenarioReport, UserSpec};
 use gridsim::session::GridSession;
-use gridsim::sweep::{default_jobs, run_sweep, SweepSpec};
+use gridsim::sweep::{default_jobs, run_sweep_checkpointed, SweepSpec};
 use gridsim::util::cli::Args;
 use std::path::Path;
 
@@ -97,6 +100,11 @@ fn print_usage() {
                                        whose users declare matching workloads;\n\
                                        the structured trace_selectors/mix_weights\n\
                                        axes are file-only — see README)\n\
+           sweep ... --resume DIR      resume a killed sweep from the per-cell\n\
+                                       checkpoint DIR/sweep_cells.jsonl (same\n\
+                                       scenario/axes; completed cells are\n\
+                                       skipped, CSVs land in DIR and are\n\
+                                       byte-identical to an uninterrupted run)\n\
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|\n\
@@ -325,7 +333,19 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let spec = build_sweep_spec(args)?;
     let jobs = jobs_flag(args)?;
-    let out = Path::new(args.flag("out").unwrap_or("results")).to_path_buf();
+    // --resume DIR resumes *and* writes in place: completed cells are read
+    // from DIR/sweep_cells.jsonl and the CSVs land next to it.
+    let resume = args.flag("resume");
+    let out = match (args.flag("out"), resume) {
+        // Path-wise comparison, so equivalent spellings ("results" vs
+        // "results/") of the same directory are accepted.
+        (Some(o), Some(r)) if Path::new(o) != Path::new(r) => bail!(
+            "--out {o:?} and --resume {r:?} point at different directories; \
+             --resume resumes and writes in place (drop --out)"
+        ),
+        (_, Some(r)) => Path::new(r).to_path_buf(),
+        (o, None) => Path::new(o.unwrap_or("results")).to_path_buf(),
+    };
     eprintln!(
         "sweep: {} cells ({} users base, {} resources) on {} worker(s)",
         spec.cell_count(),
@@ -333,20 +353,30 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         spec.base.resources.len(),
         jobs.min(spec.cell_count().max(1)),
     );
-    let results = run_sweep(&spec, jobs)?;
+    let results = run_sweep_checkpointed(&spec, jobs, &out, resume.is_some())?;
     let long = long_csv(&spec, &results);
     let agg = aggregate_csv(&spec, &results);
     let long_path = out.join("sweep_long.csv");
     let agg_path = out.join("sweep_agg.csv");
     long.write_to(&long_path)?;
     agg.write_to(&agg_path)?;
+    if results.cells_reused > 0 {
+        println!(
+            "resumed {} completed cell(s) from {}",
+            results.cells_reused,
+            out.join("sweep_cells.jsonl").display()
+        );
+    }
+    // The rate covers only what this run dispatched: reused cells carry
+    // their events into the total but cost this run no wall time.
+    let executed_events = results.total_events() - results.events_reused;
     println!(
         "swept {} cells in {:.3}s on {} worker(s): {} events total ({:.0} ev/s)",
-        results.outcomes.len(),
+        results.outcomes.len() - results.cells_reused,
         results.wall_secs,
         results.jobs,
         results.total_events(),
-        results.total_events() as f64 / results.wall_secs.max(1e-9),
+        executed_events as f64 / results.wall_secs.max(1e-9),
     );
     let unfinished = results.cells_with_unfinished();
     if unfinished > 0 {

@@ -1,9 +1,17 @@
-//! Small CSV writer for figure series.
+//! Small CSV writer for figure and sweep series.
+//!
+//! Deliberately minimal: fields are written verbatim with `,` separators
+//! and no quoting (every producer in this crate emits numbers and
+//! identifier-shaped labels), and floats go through [`trim_float`] so the
+//! bytes are a pure function of the values — the substrate of the sweep
+//! engine's byte-identical-output contract.
 
 use std::fmt::Write as _;
 use std::path::Path;
 
-/// Row-oriented CSV builder.
+/// Row-oriented CSV builder: fixed header, then one arity-checked row at a
+/// time; render with [`to_string`](CsvWriter::to_string) or persist with
+/// [`write_to`](CsvWriter::write_to).
 #[derive(Debug, Clone)]
 pub struct CsvWriter {
     header: Vec<String>,
@@ -11,28 +19,35 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// A writer with the given column names and no rows.
     pub fn new(header: &[&str]) -> CsvWriter {
         CsvWriter { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row. Panics when the field count does not match the
+    /// header — a mis-shaped row is always a bug in the producer.
     pub fn row(&mut self, fields: &[String]) {
         assert_eq!(fields.len(), self.header.len(), "row arity mismatch");
         self.rows.push(fields.to_vec());
     }
 
-    /// Convenience: numeric row.
+    /// Convenience: numeric row (each field through [`trim_float`]).
     pub fn row_f64(&mut self, fields: &[f64]) {
         self.row(&fields.iter().map(|x| trim_float(*x)).collect::<Vec<_>>());
     }
 
+    /// Number of data rows (header excluded).
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// True when no data row has been appended yet.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render the full CSV: header line, then rows, `\n`-terminated.
+    #[allow(clippy::inherent_to_string)] // established API; not a Display
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         writeln!(out, "{}", self.header.join(",")).unwrap();
@@ -42,6 +57,7 @@ impl CsvWriter {
         out
     }
 
+    /// Write the rendered CSV to `path`, creating parent directories.
     pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -50,7 +66,8 @@ impl CsvWriter {
     }
 }
 
-/// Format a float compactly (integers without decimal point).
+/// Format a float compactly and deterministically: integral values (below
+/// 10^15) without a decimal point, everything else with four decimals.
 pub fn trim_float(x: f64) -> String {
     if x.fract() == 0.0 && x.abs() < 1e15 {
         format!("{}", x as i64)

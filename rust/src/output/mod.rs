@@ -1,6 +1,8 @@
-//! Result output: CSV series writers, the textual report writer (the
-//! paper's user-defined `ReportWriter` entity, realized post-run), and the
-//! long-format/aggregate sweep writers.
+//! Result output: CSV series writers ([`csv`]), the textual report writer
+//! ([`report`] — the paper's user-defined `ReportWriter` entity, realized
+//! post-run), and the sweep writers ([`sweep`]: long-format + aggregate
+//! CSVs and the `sweep_cells.jsonl` checkpoint format behind
+//! `repro sweep --resume`).
 
 pub mod csv;
 pub mod report;

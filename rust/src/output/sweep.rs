@@ -1,7 +1,8 @@
-//! Long-format and aggregate CSV writers for sweep results.
+//! Long-format and aggregate CSV writers for sweep results, plus the
+//! per-cell checkpoint format that makes long sweeps resumable.
 //!
-//! Two shapes, both in cell-index order and free of wall-clock data, so the
-//! bytes depend only on the spec (the determinism contract of
+//! Two CSV shapes, both in cell-index order and free of wall-clock data, so
+//! the bytes depend only on the spec (the determinism contract of
 //! [`crate::sweep::engine::run_sweep`]):
 //!
 //! * **long** — one row per (cell, user): the tidy-data shape plotting
@@ -12,11 +13,48 @@
 //!   cross-replication statistics: per-user means plus the standard error
 //!   of the mean over replications (`mean ± 1.96·stderr` is the usual 95%
 //!   confidence interval; stderr is 0 for a single replication).
+//!
+//! # The checkpoint file (`sweep_cells.jsonl`)
+//!
+//! A checkpointed sweep ([`crate::sweep::run_sweep_checkpointed`]) appends
+//! one fsync'd JSON line per *completed* cell to
+//! [`CHECKPOINT_FILE`] in the output directory:
+//!
+//! ```text
+//! {"digest":"9f2a…16 hex…","cell":17,"end_time":2143.5,"events":80211,
+//!  "unfinished":[],"users":[{"completed":50,"total":50,"spent":8123.25,
+//!  "finish":2143.5,"start":0,"deadline":3100,"budget":22000,
+//!  "resources":[{"name":"R0","completed":50,"spent":8123.25}]}]}
+//! ```
+//!
+//! * `digest` — [`cell_digest`] of the whole sweep ([`sweep_digest`] covers
+//!   the base scenario and every axis) plus the cell's index and seed, as 16
+//!   lower-case hex digits. Resume refuses a line whose digest does not
+//!   match the spec being resumed, so a checkpoint can never leak results
+//!   into a different sweep.
+//! * `cell` — the cell's index in the fixed expansion order.
+//! * the remaining fields — the cell's [`ScenarioReport`]: engine counters,
+//!   indices of unfinished users, and per-user results (every float in
+//!   Rust's shortest-roundtrip form, so a resumed report is
+//!   **bit-identical** to the original and the final CSVs are byte-identical
+//!   to an uninterrupted run). The per-user time-series `trace` is *not*
+//!   checkpointed (no CSV consumes it); resumed reports carry it empty.
+//!
+//! The file is append-only and each line is fsync'd before the cell counts
+//! as done, so a killed sweep loses at most the in-flight cells. A torn
+//! final line (the kill landed mid-write) is detected and ignored on
+//! resume; corruption anywhere else is a hard error.
 
-use crate::broker::Optimization;
+use crate::broker::experiment::ResourceOutcome;
+use crate::broker::{ExperimentResult, Optimization};
 use crate::output::csv::{trim_float, CsvWriter};
+use crate::scenario::ScenarioReport;
 use crate::sweep::{SweepCell, SweepResults, SweepSpec};
+use crate::util::json::{self, Value};
 use crate::util::stats::Summary;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
 
 /// Axis-coordinate columns shared by both writers (minus the replication
 /// column, which the writers append in their own shape).
@@ -159,6 +197,243 @@ pub fn aggregate_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
     csv
 }
 
+// ---------------------------------------------------------------------------
+// Checkpoint format (sweep_cells.jsonl)
+// ---------------------------------------------------------------------------
+
+/// File name of the per-cell checkpoint a checkpointed sweep writes into its
+/// output directory (see the module docs for the line format).
+pub const CHECKPOINT_FILE: &str = "sweep_cells.jsonl";
+
+/// FNV-1a 64-bit accumulator usable as a `fmt::Write` sink, so digests of
+/// large values (a sweep spec holding a 10^5-record shared trace) stream
+/// through `Debug` formatting without materializing the string.
+struct FnvWriter {
+    hash: u64,
+}
+
+impl FnvWriter {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> FnvWriter {
+        FnvWriter { hash: Self::OFFSET }
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.hash = (self.hash ^ u64::from(b)).wrapping_mul(Self::PRIME);
+        }
+    }
+}
+
+impl std::fmt::Write for FnvWriter {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        self.update(s.as_bytes());
+        Ok(())
+    }
+}
+
+/// Digest of a whole [`SweepSpec`] — the base scenario (resources, users,
+/// workloads including shared trace contents, seed, network, advisor,
+/// broker tuning, kernel limits) and every axis. Two specs that could
+/// produce different cells digest differently; the digest is a pure
+/// function of the spec value, never of execution.
+///
+/// Computed by streaming the spec's `Debug` representation through FNV-1a
+/// (Rust formats floats in shortest-roundtrip form, so the text — and hence
+/// the digest — is deterministic). The representation can change across
+/// crate versions; that only *invalidates* old checkpoints (resume refuses
+/// them), it can never mis-match a foreign cell to this spec's.
+pub fn sweep_digest(spec: &SweepSpec) -> u64 {
+    let mut w = FnvWriter::new();
+    let _ = write!(w, "{spec:?}");
+    w.hash
+}
+
+/// Digest keying one checkpoint line: the sweep digest plus the cell's
+/// index and seed. A line only resumes into the cell it was written for.
+pub fn cell_digest(sweep_digest: u64, index: usize, seed: u64) -> u64 {
+    let mut w = FnvWriter::new();
+    w.update(&sweep_digest.to_le_bytes());
+    w.update(&(index as u64).to_le_bytes());
+    w.update(&seed.to_le_bytes());
+    w.hash
+}
+
+/// Serialize one completed cell into its checkpoint line (no trailing
+/// newline). Floats are written in shortest-roundtrip form, so
+/// [`parse_checkpoint`] reconstructs a bit-identical [`ScenarioReport`].
+pub fn checkpoint_line(cell_digest: u64, cell_index: usize, report: &ScenarioReport) -> String {
+    let users: Vec<Value> = report
+        .users
+        .iter()
+        .map(|u| {
+            Value::obj(vec![
+                ("completed", u.gridlets_completed.into()),
+                ("total", u.gridlets_total.into()),
+                ("spent", u.budget_spent.into()),
+                ("finish", u.finish_time.into()),
+                ("start", u.start_time.into()),
+                ("deadline", u.deadline.into()),
+                ("budget", u.budget.into()),
+                (
+                    "resources",
+                    Value::Arr(
+                        u.per_resource
+                            .iter()
+                            .map(|r| {
+                                Value::obj(vec![
+                                    ("name", Value::str(r.name.clone())),
+                                    ("completed", r.gridlets_completed.into()),
+                                    ("spent", r.budget_spent.into()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let record = Value::obj(vec![
+        ("digest", Value::str(format!("{cell_digest:016x}"))),
+        ("cell", cell_index.into()),
+        ("end_time", report.end_time.into()),
+        ("events", (report.events as usize).into()),
+        (
+            "unfinished",
+            Value::Arr(report.unfinished.iter().map(|&i| i.into()).collect()),
+        ),
+        ("users", Value::Arr(users)),
+    ]);
+    json::to_string(&record)
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    let n = v.req_f64(key)?;
+    if n >= 0.0 && n.fract() == 0.0 && n < 9_007_199_254_740_992.0 {
+        Ok(n as usize)
+    } else {
+        bail!("field {key:?} must be a non-negative integer, got {n}")
+    }
+}
+
+/// Parse one checkpoint line back into its cell index and report.
+fn parse_checkpoint_line(line: &str) -> Result<(u64, usize, ScenarioReport)> {
+    let v = json::parse(line).map_err(|e| anyhow!("{e}"))?;
+    let digest = u64::from_str_radix(v.req_str("digest")?, 16)
+        .map_err(|e| anyhow!("bad digest: {e}"))?;
+    let cell = req_usize(&v, "cell")?;
+    let unfinished = v
+        .get("unfinished")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("missing \"unfinished\" array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as usize)
+                .ok_or_else(|| anyhow!("\"unfinished\" must hold non-negative integers"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let users = v
+        .get("users")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("missing \"users\" array"))?
+        .iter()
+        .map(|u| -> Result<ExperimentResult> {
+            let per_resource = u
+                .get("resources")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("missing \"resources\" array"))?
+                .iter()
+                .map(|r| -> Result<ResourceOutcome> {
+                    Ok(ResourceOutcome {
+                        name: r.req_str("name")?.to_string(),
+                        gridlets_completed: req_usize(r, "completed")?,
+                        budget_spent: r.req_f64("spent")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ExperimentResult {
+                gridlets_completed: req_usize(u, "completed")?,
+                gridlets_total: req_usize(u, "total")?,
+                budget_spent: u.req_f64("spent")?,
+                finish_time: u.req_f64("finish")?,
+                start_time: u.req_f64("start")?,
+                deadline: u.req_f64("deadline")?,
+                budget: u.req_f64("budget")?,
+                per_resource,
+                // The time-series trace is not checkpointed (no CSV
+                // consumes it); resumed reports carry it empty.
+                trace: vec![],
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let report = ScenarioReport {
+        users,
+        unfinished,
+        end_time: v.req_f64("end_time")?,
+        events: req_usize(&v, "events")? as u64,
+    };
+    Ok((digest, cell, report))
+}
+
+/// Parse a `sweep_cells.jsonl` file written for the sweep whose
+/// [`sweep_digest`] is `digest`, returning the completed cells by index.
+/// (Taking the digest rather than the spec lets callers that already
+/// computed it — the engine does — skip a second full Debug-format pass
+/// over a spec that may hold a 10^5-record shared trace.)
+///
+/// Strictness rules:
+/// * a line whose digest does not match [`cell_digest`] for its cell (or
+///   whose cell index is out of range) is a hard error — the checkpoint
+///   belongs to a different sweep (changed base, axes, seed, or crate
+///   version) — even when it is the final line, since such a line parsed
+///   cleanly and therefore is not torn damage;
+/// * an *unparseable* final line is ignored (the writing process was
+///   killed mid-append — exactly the scenario checkpoints exist for);
+/// * an unparseable earlier line — including a blank one; the writer never
+///   emits those, so one is always foreign damage — is a hard error, and
+///   errors report the raw 1-based line number in the file.
+pub fn parse_checkpoint(
+    text: &str,
+    digest: u64,
+    cells: &[SweepCell],
+) -> Result<HashMap<usize, ScenarioReport>> {
+    // Raw lines, nothing filtered: blank lines never come from the writer,
+    // so they fall through parse_checkpoint_line as corruption (tolerated
+    // only in final position, like any torn tail), and reported line
+    // numbers match the file.
+    let lines: Vec<&str> = text.lines().collect();
+    let mut completed = HashMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        let (d, cell, report) = match parse_checkpoint_line(line) {
+            Ok(parsed) => parsed,
+            // A torn final line means the writer was killed mid-append;
+            // that cell simply reruns. (A line from a different sweep is
+            // not torn damage — it parses, and fails the digest check
+            // below, which is fatal even on the last line.)
+            Err(_) if i + 1 == lines.len() => break,
+            Err(e) => {
+                return Err(e.context(format!("{CHECKPOINT_FILE} line {}", i + 1)));
+            }
+        };
+        if cell >= cells.len()
+            || d != cell_digest(digest, cell, cells.get(cell).map_or(0, |c| c.seed))
+        {
+            bail!(
+                "{CHECKPOINT_FILE} line {}: digest mismatch at cell {cell}: this \
+                 checkpoint was written by a different sweep (changed scenario, axes, \
+                 seed, or version); delete it or rerun without --resume",
+                i + 1
+            );
+        }
+        completed.insert(cell, report);
+    }
+    Ok(completed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +500,89 @@ mod tests {
             assert_eq!(fields[14], "0", "stderr with 1 rep");
             assert_eq!(fields[16], "0", "stderr with 1 rep");
         }
+    }
+
+    #[test]
+    fn checkpoint_lines_round_trip_bit_exact() {
+        let s = spec();
+        let results = run_sweep(&s, 2).unwrap();
+        let digest = sweep_digest(&s);
+        let cells = s.cells();
+        let mut text = String::new();
+        for o in &results.outcomes {
+            text.push_str(&checkpoint_line(
+                cell_digest(digest, o.cell.index, o.cell.seed),
+                o.cell.index,
+                &o.report,
+            ));
+            text.push('\n');
+        }
+        let completed = parse_checkpoint(&text, digest, &cells).unwrap();
+        assert_eq!(completed.len(), results.outcomes.len());
+        for o in &results.outcomes {
+            let r = &completed[&o.cell.index];
+            assert_eq!(r.events, o.report.events);
+            assert_eq!(r.end_time.to_bits(), o.report.end_time.to_bits());
+            assert_eq!(r.unfinished, o.report.unfinished);
+            assert_eq!(r.users.len(), o.report.users.len());
+            for (a, b) in r.users.iter().zip(&o.report.users) {
+                assert_eq!(a.gridlets_completed, b.gridlets_completed);
+                assert_eq!(a.gridlets_total, b.gridlets_total);
+                assert_eq!(a.budget_spent.to_bits(), b.budget_spent.to_bits());
+                assert_eq!(a.finish_time.to_bits(), b.finish_time.to_bits());
+                assert_eq!(a.start_time.to_bits(), b.start_time.to_bits());
+                assert_eq!(a.deadline.to_bits(), b.deadline.to_bits());
+                assert_eq!(a.budget.to_bits(), b.budget.to_bits());
+                assert_eq!(a.per_resource.len(), b.per_resource.len());
+                for (x, y) in a.per_resource.iter().zip(&b.per_resource) {
+                    assert_eq!(x.name, y.name);
+                    assert_eq!(x.gridlets_completed, y.gridlets_completed);
+                    assert_eq!(x.budget_spent.to_bits(), y.budget_spent.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn checkpoint_tolerates_torn_tail_but_not_corruption_or_foreign_specs() {
+        let s = spec();
+        let results = run_sweep(&s, 1).unwrap();
+        let digest = sweep_digest(&s);
+        let cells = s.cells();
+        let lines: Vec<String> = results
+            .outcomes
+            .iter()
+            .map(|o| {
+                checkpoint_line(
+                    cell_digest(digest, o.cell.index, o.cell.seed),
+                    o.cell.index,
+                    &o.report,
+                )
+            })
+            .collect();
+        let text = lines.join("\n") + "\n";
+
+        // A torn final line (killed mid-append) is ignored.
+        let torn = format!("{text}{{\"digest\":\"00ab");
+        let completed = parse_checkpoint(&torn, digest, &cells).unwrap();
+        assert_eq!(completed.len(), lines.len());
+
+        // The same garbage anywhere else is a hard error.
+        let corrupt = format!("{{\"digest\":\"00ab\n{text}");
+        let err = format!("{:#}", parse_checkpoint(&corrupt, digest, &cells).unwrap_err());
+        assert!(err.contains("line 1"), "{err}");
+
+        // A checkpoint from a different sweep (changed axis) is refused —
+        // even when the mismatching line is the last one.
+        let other = spec().deadlines(vec![77.0]);
+        assert_ne!(digest, sweep_digest(&other), "axis change changes digest");
+        let one_line = format!("{}\n", lines[0]);
+        let err =
+            parse_checkpoint(&one_line, sweep_digest(&other), &other.cells()).unwrap_err();
+        assert!(err.to_string().contains("different sweep"), "{err}");
+
+        // The digest itself is a pure function of the spec value.
+        assert_eq!(sweep_digest(&s), sweep_digest(&spec()));
     }
 
     #[test]

@@ -68,6 +68,53 @@ fn make_shared_advisor(kind: &AdvisorKind) -> anyhow::Result<Arc<Mutex<dyn Advis
     })
 }
 
+/// A reusable pool of advisor engines, one per [`AdvisorKind`], for callers
+/// that build many sessions in a row (the sweep engine keeps one cache per
+/// worker thread). Initializing an engine can be expensive — the XLA advisor
+/// loads and compiles a PJRT artifact — so rebuilding it per session turns
+/// an `advisor: xla` sweep into one compilation *per cell* instead of one
+/// per worker.
+///
+/// Sharing an engine across sessions is sound because [`Advisor::advise`]
+/// is a pure function of its input: engines carry no per-experiment state
+/// (the native advisor is a unit struct; the XLA advisor holds only the
+/// compiled executable), so cached and fresh engines produce bit-identical
+/// schedules — the sweep determinism contract is unaffected.
+#[derive(Default)]
+pub struct AdvisorCache {
+    native: Option<Arc<Mutex<dyn Advisor>>>,
+    xla: Option<Arc<Mutex<dyn Advisor>>>,
+}
+
+impl AdvisorCache {
+    /// An empty cache; engines are created on first use.
+    pub fn new() -> AdvisorCache {
+        AdvisorCache::default()
+    }
+
+    /// Number of engine instances currently cached (observability/tests).
+    pub fn len(&self) -> usize {
+        usize::from(self.native.is_some()) + usize::from(self.xla.is_some())
+    }
+
+    /// True when no engine has been initialized yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The cached engine for `kind`, initializing it on first request.
+    fn get_or_init(&mut self, kind: &AdvisorKind) -> anyhow::Result<Arc<Mutex<dyn Advisor>>> {
+        let slot = match kind {
+            AdvisorKind::Native => &mut self.native,
+            AdvisorKind::Xla => &mut self.xla,
+        };
+        if slot.is_none() {
+            *slot = Some(make_shared_advisor(kind)?);
+        }
+        Ok(slot.as_ref().expect("just initialized").clone())
+    }
+}
+
 /// How one user's experiment ended.
 #[derive(Debug, Clone)]
 pub enum UserOutcome {
@@ -176,6 +223,19 @@ impl GridSession {
     /// Fallible variant of [`new`](Self::new): advisor initialization
     /// failures become an `Err` rather than a panic.
     pub fn try_new(scenario: &Scenario) -> anyhow::Result<GridSession> {
+        Self::try_new_cached(scenario, &mut AdvisorCache::new())
+    }
+
+    /// [`try_new`](Self::try_new) drawing advisor engines from `advisors`
+    /// instead of building fresh ones: engines already in the cache are
+    /// reused, missing ones are initialized and left in the cache for the
+    /// next session. The sweep engine holds one cache per worker thread, so
+    /// cells sharing an advisor config share one engine instance per worker
+    /// (see [`AdvisorCache`] for why this cannot change results).
+    pub fn try_new_cached(
+        scenario: &Scenario,
+        advisors: &mut AdvisorCache,
+    ) -> anyhow::Result<GridSession> {
         let mut sim: Simulation<Msg> = Simulation::with_config(SimConfig {
             max_time: scenario.max_time,
             max_events: u64::MAX,
@@ -206,23 +266,17 @@ impl GridSession {
             sim.add(Box::new(resource));
         }
 
-        // One shared engine instance per advisor kind actually in use.
-        let mut native: Option<Arc<Mutex<dyn Advisor>>> = None;
-        let mut xla: Option<Arc<Mutex<dyn Advisor>>> = None;
-
+        // One shared engine instance per advisor kind actually in use,
+        // drawn from (and left in) the caller's cache.
         let mut user_ids = Vec::with_capacity(scenario.users.len());
         let mut broker_ids = Vec::with_capacity(scenario.users.len());
         for (i, user) in scenario.users.iter().enumerate() {
             let kind = user.advisor.as_ref().unwrap_or(&scenario.advisor);
-            let (slot, label) = match kind {
-                AdvisorKind::Native => (&mut native, "native"),
-                AdvisorKind::Xla => (&mut xla, "xla"),
+            let label = match kind {
+                AdvisorKind::Native => "native",
+                AdvisorKind::Xla => "xla",
             };
-            if slot.is_none() {
-                *slot = Some(make_shared_advisor(kind)?);
-            }
-            let advisor =
-                Box::new(SharedAdvisor { inner: slot.as_ref().unwrap().clone(), label });
+            let advisor = Box::new(SharedAdvisor { inner: advisors.get_or_init(kind)?, label });
             let policy = make_policy(user.experiment.optimization, advisor);
             let config = user.broker.clone().unwrap_or_else(|| scenario.broker_config.clone());
             let broker = Broker::new(format!("Broker_{i}"), gis, policy, config);
@@ -496,6 +550,28 @@ mod tests {
         }
         let report = session.report().into_scenario_report();
         assert!(report.all_finished());
+    }
+
+    #[test]
+    fn advisor_cache_reuses_engines_without_changing_results() {
+        let scenario = two_user_scenario();
+        let baseline = GridSession::new(&scenario).run_to_completion();
+        let mut cache = AdvisorCache::new();
+        assert!(cache.is_empty());
+        let first =
+            GridSession::try_new_cached(&scenario, &mut cache).unwrap().run_to_completion();
+        assert_eq!(cache.len(), 1, "one native engine initialized on first use");
+        let second =
+            GridSession::try_new_cached(&scenario, &mut cache).unwrap().run_to_completion();
+        assert_eq!(cache.len(), 1, "the second session reused it");
+        for r in [&first, &second] {
+            assert_eq!(r.events, baseline.events);
+            assert_eq!(r.end_time.to_bits(), baseline.end_time.to_bits());
+            for (a, b) in r.users.iter().zip(&baseline.users) {
+                assert_eq!(a.gridlets_completed, b.gridlets_completed);
+                assert_eq!(a.budget_spent.to_bits(), b.budget_spent.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,18 +1,40 @@
 //! The sweep execution engine: a fixed-size worker pool over independent
-//! cells.
+//! cells, with optional per-cell checkpointing for resumable sweeps.
 //!
 //! Workers pull the next unclaimed cell index from an atomic counter, build
 //! the cell's [`crate::session::GridSession`] locally, run it to completion
 //! and write the outcome into the cell's own slot. Collection is by cell
 //! index, so the result vector — and any CSV derived from it — is identical
 //! for any worker count and any completion order. There is no inter-cell
-//! communication: the only shared state is the claim counter and the
-//! per-cell result slots.
+//! communication: the only shared state is the claim counter, the per-cell
+//! result slots, and (when checkpointing) the append-only checkpoint file.
+//!
+//! Two engine-level reuse mechanisms keep long campaigns cheap without
+//! touching simulation semantics:
+//!
+//! * **Per-worker advisor cache** — each worker thread holds one
+//!   [`crate::session::AdvisorCache`], so consecutive cells on that worker
+//!   share one advisor engine per [`crate::scenario::AdvisorKind`] instead
+//!   of rebuilding it per cell (for an `advisor: xla` sweep that is one
+//!   PJRT compilation per worker instead of per cell). Advisors are pure
+//!   per-tick functions, so reuse is bit-transparent.
+//! * **Checkpoint/resume** — [`run_sweep_checkpointed`] appends one fsync'd
+//!   JSON line per completed cell to `sweep_cells.jsonl` (format:
+//!   [`crate::output::sweep`]); resuming skips completed cells and executes
+//!   only the missing ones. Because cached reports round-trip bit-exactly
+//!   and collection stays cell-index-ordered, a resumed sweep's CSVs are
+//!   byte-identical to an uninterrupted run at any worker count.
 
 use super::{SweepCell, SweepSpec};
+use crate::output::sweep::{
+    cell_digest, checkpoint_line, parse_checkpoint, sweep_digest, CHECKPOINT_FILE,
+};
 use crate::scenario::ScenarioReport;
-use crate::session::GridSession;
-use anyhow::Result;
+use crate::session::{AdvisorCache, GridSession};
+use anyhow::{anyhow, Context as _, Result};
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -35,6 +57,14 @@ pub struct SweepResults {
     /// Wall-clock seconds for the whole sweep. Diagnostic only — never part
     /// of the CSV output (which must be byte-identical across runs).
     pub wall_secs: f64,
+    /// Cells whose reports were taken from a resume checkpoint instead of
+    /// being executed (0 for non-checkpointed or fresh runs).
+    pub cells_reused: usize,
+    /// Events belonging to the reused cells — already counted by
+    /// [`total_events`](Self::total_events) but not dispatched by this run,
+    /// so throughput rates should divide `total_events() - events_reused`
+    /// by [`wall_secs`](Self::wall_secs).
+    pub events_reused: u64,
 }
 
 impl SweepResults {
@@ -61,63 +91,241 @@ pub fn default_jobs() -> usize {
 pub fn run_sweep(spec: &SweepSpec, jobs: usize) -> Result<SweepResults> {
     spec.validate()?;
     let cells = spec.cells();
-    let jobs = jobs.clamp(1, cells.len().max(1));
+    execute(spec, jobs, cells, None)
+}
+
+/// [`run_sweep`] with per-cell checkpointing into `dir/sweep_cells.jsonl`.
+///
+/// Every completed cell appends one fsync'd JSON line (format:
+/// [`crate::output::sweep`]) before it counts as done, so a killed sweep
+/// loses at most its in-flight cells. With `resume = false` any existing
+/// checkpoint is overwritten and every cell runs; with `resume = true` the
+/// existing checkpoint (if any) is validated against `spec` — a digest
+/// mismatch is a hard error — completed cells are reused verbatim, and only
+/// the missing ones execute (appending to the same file, so a resumed run
+/// can itself be killed and resumed).
+///
+/// The final [`SweepResults`] — and therefore the CSVs written from it —
+/// are byte-identical to an uninterrupted [`run_sweep`] at any `jobs`
+/// value: cached reports round-trip bit-exactly and collection stays
+/// cell-index-ordered.
+pub fn run_sweep_checkpointed(
+    spec: &SweepSpec,
+    jobs: usize,
+    dir: &Path,
+    resume: bool,
+) -> Result<SweepResults> {
+    spec.validate()?;
+    let cells = spec.cells();
+    let path = dir.join(CHECKPOINT_FILE);
+    let digest = sweep_digest(spec);
+    let completed = if resume && path.exists() {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("cannot read {}: {e}", path.display()))?;
+        let completed = parse_checkpoint(&text, digest, &cells)
+            .with_context(|| format!("cannot resume from {}", path.display()))?;
+        // Repair before appending: a kill mid-append can leave a torn final
+        // fragment (or a complete line missing its newline). Appending
+        // straight after it would merge the fragment with the first new
+        // record into one unparseable line, poisoning the *next* resume.
+        // parse_checkpoint already guaranteed every non-final line is a
+        // valid record, so the damage — if any — is confined to the tail:
+        let line_count = text.lines().count();
+        let rebuilt = if text.is_empty() || (completed.len() == line_count && text.ends_with('\n'))
+        {
+            None // intact (or empty) — the common case costs no rewrite
+        } else if completed.len() == line_count {
+            // The final record is valid but lost its trailing newline
+            // (killed between the two write_all calls): restore it.
+            Some(format!("{text}\n"))
+        } else if completed.len() + 1 == line_count {
+            // Torn final fragment: drop it, keep everything else verbatim.
+            let keep: Vec<&str> = text.lines().take(line_count - 1).collect();
+            Some(if keep.is_empty() { String::new() } else { keep.join("\n") + "\n" })
+        } else {
+            // Duplicate cells (hand-concatenated checkpoints): re-serialize
+            // the surviving records — bit-exact lines — in cell order.
+            let mut indices: Vec<usize> = completed.keys().copied().collect();
+            indices.sort_unstable();
+            let mut out = String::new();
+            for i in indices {
+                let line =
+                    checkpoint_line(cell_digest(digest, i, cells[i].seed), i, &completed[&i]);
+                out.push_str(&line);
+                out.push('\n');
+            }
+            Some(out)
+        };
+        if let Some(rebuilt) = rebuilt {
+            let tmp = dir.join(format!("{CHECKPOINT_FILE}.tmp"));
+            // Same durability discipline as the per-line appends: the tmp
+            // file is fsync'd before the rename and the directory entry
+            // after it, so even a power loss mid-repair cannot lose
+            // surviving records.
+            {
+                let mut f = std::fs::File::create(&tmp)
+                    .map_err(|e| anyhow!("cannot write {}: {e}", tmp.display()))?;
+                f.write_all(rebuilt.as_bytes())
+                    .and_then(|()| f.sync_all())
+                    .map_err(|e| anyhow!("cannot write {}: {e}", tmp.display()))?;
+            }
+            std::fs::rename(&tmp, &path)
+                .map_err(|e| anyhow!("cannot replace {}: {e}", path.display()))?;
+            std::fs::File::open(dir)
+                .and_then(|d| d.sync_all())
+                .map_err(|e| anyhow!("cannot sync {}: {e}", dir.display()))?;
+        }
+        completed
+    } else {
+        HashMap::new()
+    };
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow!("cannot create {}: {e}", dir.display()))?;
+    // Resume appends to the repaired file; a fresh run truncates any stale
+    // checkpoint (same overwrite semantics as the CSVs next to it).
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(resume)
+        .write(true)
+        .truncate(!resume)
+        .open(&path)
+        .map_err(|e| anyhow!("cannot open {}: {e}", path.display()))?;
+    let checkpoint = Checkpoint { file: Mutex::new(file), digest, completed };
+    execute(spec, jobs, cells, Some(checkpoint))
+}
+
+/// Shared state of a checkpointed run: the append-only file and the cells
+/// already completed by a previous run.
+struct Checkpoint {
+    file: Mutex<std::fs::File>,
+    digest: u64,
+    completed: HashMap<usize, ScenarioReport>,
+}
+
+impl Checkpoint {
+    /// Append one completed cell's line and fsync it — only after this
+    /// returns does the cell count as done.
+    fn record(&self, cell: &SweepCell, report: &ScenarioReport) -> Result<()> {
+        let digest = cell_digest(self.digest, cell.index, cell.seed);
+        let line = checkpoint_line(digest, cell.index, report);
+        let mut file = self.file.lock().expect("checkpoint file lock");
+        file.write_all(line.as_bytes())
+            .and_then(|()| file.write_all(b"\n"))
+            .map_err(|e| anyhow!("checkpoint write: {e}"))?;
+        // The fsync is the commit point: a cell only counts as done once
+        // its line is durable, so a kill can never "lose" a skipped cell.
+        file.sync_data().map_err(|e| anyhow!("checkpoint fsync: {e}"))?;
+        Ok(())
+    }
+}
+
+fn execute(
+    spec: &SweepSpec,
+    jobs: usize,
+    cells: Vec<SweepCell>,
+    checkpoint: Option<Checkpoint>,
+) -> Result<SweepResults> {
+    // Only the cells missing from the checkpoint execute; `pending[k]` maps
+    // a claim number to its cell index.
+    let empty = HashMap::new();
+    let reused: &HashMap<usize, ScenarioReport> = match &checkpoint {
+        Some(c) => &c.completed,
+        None => &empty,
+    };
+    let pending: Vec<usize> =
+        (0..cells.len()).filter(|i| !reused.contains_key(i)).collect();
+    let jobs = jobs.clamp(1, pending.len().max(1));
     let next = AtomicUsize::new(0);
     // One failed cell fails the whole sweep, so workers stop claiming new
     // cells as soon as any cell errors (in-flight cells finish) instead of
     // burning CPU on results that would be discarded.
     let abort = AtomicBool::new(false);
     let slots: Vec<Mutex<Option<Result<CellOutcome>>>> =
-        cells.iter().map(|_| Mutex::new(None)).collect();
+        pending.iter().map(|_| Mutex::new(None)).collect();
 
     let start = std::time::Instant::now();
     std::thread::scope(|scope| {
         for _ in 0..jobs {
-            scope.spawn(|| loop {
-                if abort.load(Ordering::Relaxed) {
-                    break;
+            scope.spawn(|| {
+                // Worker-local advisor reuse: consecutive cells on this
+                // worker share one engine per advisor kind (bit-transparent
+                // — see `AdvisorCache`).
+                let mut advisors = AdvisorCache::new();
+                loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= pending.len() {
+                        break;
+                    }
+                    let cell = &cells[pending[k]];
+                    let outcome = run_cell(spec, cell, &mut advisors).and_then(|outcome| {
+                        if let Some(c) = &checkpoint {
+                            c.record(cell, &outcome.report)?;
+                        }
+                        Ok(outcome)
+                    });
+                    if outcome.is_err() {
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                    *slots[k].lock().expect("cell slot lock") = Some(outcome);
                 }
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
-                    break;
-                }
-                let outcome = run_cell(spec, &cells[i]);
-                if outcome.is_err() {
-                    abort.store(true, Ordering::Relaxed);
-                }
-                *slots[i].lock().expect("cell slot lock") = Some(outcome);
             });
         }
     });
     let wall_secs = start.elapsed().as_secs_f64();
 
-    let mut collected: Vec<Option<Result<CellOutcome>>> = Vec::with_capacity(cells.len());
+    let mut collected: Vec<Option<Result<CellOutcome>>> = Vec::with_capacity(slots.len());
     for slot in slots {
         collected.push(slot.into_inner().expect("cell slot lock"));
     }
     // Surface the real cell error, not a hole left by the abort.
-    if let Some((i, result)) = collected
+    if let Some((k, result)) = collected
         .iter_mut()
         .enumerate()
         .find(|(_, r)| matches!(r, Some(Err(_))))
     {
         let err = result.take().expect("matched Some").expect_err("matched Err");
-        return Err(err.context(format!("sweep cell {i}")));
+        return Err(err.context(format!("sweep cell {}", pending[k])));
     }
-    let mut outcomes = Vec::with_capacity(cells.len());
-    for (i, slot) in collected.into_iter().enumerate() {
+    let mut executed: HashMap<usize, CellOutcome> = HashMap::with_capacity(collected.len());
+    for (k, slot) in collected.into_iter().enumerate() {
         match slot {
-            Some(Ok(outcome)) => outcomes.push(outcome),
+            Some(Ok(outcome)) => {
+                executed.insert(pending[k], outcome);
+            }
             Some(Err(_)) => unreachable!("error cells returned above"),
-            None => panic!("sweep cell {i} was never executed"),
+            None => panic!("sweep cell {} was never executed", pending[k]),
         }
     }
-    Ok(SweepResults { outcomes, jobs, wall_secs })
+    // Assemble in cell-index order: executed cells from their slots, reused
+    // cells straight from the checkpoint (bit-exact round trip).
+    let cells_reused = reused.len();
+    let events_reused: u64 = reused.values().map(|r| r.events).sum();
+    let outcomes = cells
+        .into_iter()
+        .map(|cell| match executed.remove(&cell.index) {
+            Some(outcome) => outcome,
+            None => CellOutcome {
+                report: reused
+                    .get(&cell.index)
+                    .cloned()
+                    .unwrap_or_else(|| panic!("cell {} neither run nor resumed", cell.index)),
+                cell,
+            },
+        })
+        .collect();
+    Ok(SweepResults { outcomes, jobs, wall_secs, cells_reused, events_reused })
 }
 
-fn run_cell(spec: &SweepSpec, cell: &SweepCell) -> Result<CellOutcome> {
+fn run_cell(
+    spec: &SweepSpec,
+    cell: &SweepCell,
+    advisors: &mut AdvisorCache,
+) -> Result<CellOutcome> {
     let scenario = spec.scenario_for(cell);
-    let report = GridSession::try_new(&scenario)?.run_to_completion();
+    let report = GridSession::try_new_cached(&scenario, advisors)?.run_to_completion();
     Ok(CellOutcome { cell: cell.clone(), report })
 }
 

@@ -21,10 +21,22 @@
 //!    own slot, so output order never depends on thread count or completion
 //!    order. The same spec produces byte-identical CSV at any `--jobs`
 //!    (proven by `rust/tests/sweep_determinism.rs`).
+//!
+//! Long campaigns additionally get **checkpoint/resume**
+//! ([`engine::run_sweep_checkpointed`], `repro sweep --resume`): each
+//! completed cell is appended to `sweep_cells.jsonl` keyed by a digest of
+//! the spec + cell, so a killed 10k-cell sweep restarts from the completed
+//! cells instead of from zero — with final CSVs byte-identical to an
+//! uninterrupted run. Scenario materialization is cheap even for
+//! trace-driven bases: a cell's clone shares the `Arc`-held job list of
+//! every [`crate::workload::WorkloadSpec::Trace`] rather than copying the
+//! log per cell.
 
 pub mod engine;
 
-pub use engine::{default_jobs, run_sweep, CellOutcome, SweepResults};
+pub use engine::{
+    default_jobs, run_sweep, run_sweep_checkpointed, CellOutcome, SweepResults,
+};
 
 use crate::broker::Optimization;
 use crate::scenario::{Scenario, UserSpec};

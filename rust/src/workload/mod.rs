@@ -13,6 +13,7 @@ pub mod trace;
 pub use app::{heavy_tailed_farm, paper_task_farm, poisson_arrivals};
 pub use spec::{ArrivalProcess, JobSpec, RateEnvelope, Release, TraceJob, WorkloadSpec};
 pub use trace::{
-    detect_format, format_trace, load_trace_file, load_trace_file_with, parse_swf, parse_trace,
-    SwfHeader, SwfJob, SwfLoadOptions, SwfTrace, TraceFormat, TraceSelector,
+    detect_format, format_trace, load_trace_file, load_trace_file_shared, load_trace_file_with,
+    parse_swf, parse_trace, SwfHeader, SwfJob, SwfLoadOptions, SwfTrace, TraceFormat,
+    TraceSelector,
 };

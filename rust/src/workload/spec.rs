@@ -16,7 +16,11 @@
 //! * [`WorkloadSpec::Trace`] — jobs replayed from a trace file (legacy
 //!   4-column or full 18-column SWF, see [`crate::workload::trace`]),
 //!   optionally sliced by a [`TraceSelector`] (e.g. one SWF `user_id`'s jobs
-//!   per simulated user); jobs with `submit_time > 0` arrive online.
+//!   per simulated user); jobs with `submit_time > 0` arrive online. The
+//!   job list is an immutable `Arc<[TraceJob]>`: cloning a spec — a second
+//!   user on the same log, every cell of a sweep — shares one loaded log
+//!   instead of copying it, and per-spec variation (selector, staging)
+//!   applies copy-on-write at materialization.
 //! * [`WorkloadSpec::Concat`] — parts replayed side by side as one
 //!   workload: job lists are appended (ids in part order), release offsets
 //!   kept.
@@ -38,6 +42,7 @@ use crate::gridsim::gridlet::Gridlet;
 use crate::gridsim::random::GridSimRandom;
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 pub use super::trace::TraceSelector;
 
@@ -308,12 +313,26 @@ pub enum WorkloadSpec {
     /// own submission offset, and `selector` picks the replayed slice
     /// (e.g. one SWF user's jobs). `declared_jobs` and `materialize` both
     /// see the *selected* jobs only.
+    ///
+    /// The job list is `Arc`-shared and **immutable**: cloning the spec (a
+    /// second `UserSpec` on the same log, a sweep cell's scenario clone)
+    /// clones the `Arc`, never the jobs — one loaded 10^5-record SWF log is
+    /// a single allocation no matter how many users and cells replay it.
+    /// Nothing may mutate a `TraceJob` after it enters the `Arc`; per-spec
+    /// variation goes through the value-typed `selector` and `staging`
+    /// fields instead (copy-on-write at materialization time).
     Trace {
-        /// The full job list as loaded from the trace file.
-        jobs: Vec<TraceJob>,
+        /// The full job list as loaded from the trace file, shared across
+        /// every clone of this spec.
+        jobs: Arc<[TraceJob]>,
         /// The slice of `jobs` this workload replays
         /// ([`TraceSelector::all`] = everything).
         selector: TraceSelector,
+        /// Staging-size override `(input_bytes, output_bytes)` applied at
+        /// materialization time ([`WorkloadSpec::with_staging`]). `None`
+        /// keeps each job's own sizes. This is what lets `set_staging`
+        /// leave the shared job list untouched.
+        staging: Option<(u64, u64)>,
     },
     /// Composition: the parts' job lists appended into one workload — ids in
     /// part order, each job keeping its own release offset. Two batch parts
@@ -376,12 +395,25 @@ impl WorkloadSpec {
 
     /// A trace replay of every job in `jobs`.
     pub fn trace(jobs: Vec<TraceJob>) -> WorkloadSpec {
-        WorkloadSpec::Trace { jobs, selector: TraceSelector::all() }
+        WorkloadSpec::trace_shared(jobs.into())
     }
 
     /// A trace replay of the slice `selector` keeps of `jobs`.
     pub fn trace_selected(jobs: Vec<TraceJob>, selector: TraceSelector) -> WorkloadSpec {
-        WorkloadSpec::Trace { jobs, selector }
+        WorkloadSpec::trace_selected_shared(jobs.into(), selector)
+    }
+
+    /// A trace replay over an already-shared job list: the spec holds a
+    /// clone of the `Arc`, so many users (and every sweep cell) reference
+    /// one loaded log instead of copying it.
+    pub fn trace_shared(jobs: Arc<[TraceJob]>) -> WorkloadSpec {
+        WorkloadSpec::Trace { jobs, selector: TraceSelector::all(), staging: None }
+    }
+
+    /// [`WorkloadSpec::trace_shared`] replaying only the slice `selector`
+    /// keeps — the per-user split of one shared log.
+    pub fn trace_selected_shared(jobs: Arc<[TraceJob]>, selector: TraceSelector) -> WorkloadSpec {
+        WorkloadSpec::Trace { jobs, selector, staging: None }
     }
 
     /// Append `parts` into one workload (see [`WorkloadSpec::Concat`]).
@@ -433,12 +465,11 @@ impl WorkloadSpec {
                     j.output_bytes = output;
                 }
             }
-            WorkloadSpec::Trace { jobs, .. } => {
-                for j in jobs {
-                    j.input_bytes = input;
-                    j.output_bytes = output;
-                }
-            }
+            // The shared job list is immutable; record the override and
+            // apply it copy-on-write when materializing (same observable
+            // Gridlets as the historical in-place mutation — pinned by
+            // `staging_override_is_copy_on_write`).
+            WorkloadSpec::Trace { staging, .. } => *staging = Some((input, output)),
             WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
                 for p in parts {
                     p.set_staging(input, output);
@@ -455,7 +486,7 @@ impl WorkloadSpec {
             WorkloadSpec::TaskFarm { num_gridlets, .. }
             | WorkloadSpec::HeavyTailed { num_gridlets, .. } => *num_gridlets,
             WorkloadSpec::Explicit { jobs } => jobs.len(),
-            WorkloadSpec::Trace { jobs, selector } => selector.count(jobs),
+            WorkloadSpec::Trace { jobs, selector, .. } => selector.count(jobs),
             WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
                 parts.iter().map(WorkloadSpec::declared_jobs).sum()
             }
@@ -467,7 +498,7 @@ impl WorkloadSpec {
     /// process)?
     pub fn is_online(&self) -> bool {
         match self {
-            WorkloadSpec::Trace { jobs, selector } => {
+            WorkloadSpec::Trace { jobs, selector, .. } => {
                 selector.selected(jobs).any(|j| j.submit_time > 0.0)
             }
             WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
@@ -693,7 +724,7 @@ impl WorkloadSpec {
                     }
                 }
             }
-            WorkloadSpec::Trace { jobs, selector } => {
+            WorkloadSpec::Trace { jobs, selector, .. } => {
                 for (i, j) in jobs.iter().enumerate() {
                     if j.length_mi <= 0.0 || j.length_mi.is_nan() {
                         bail!("trace job #{i}: length_mi must be > 0, got {}", j.length_mi);
@@ -807,12 +838,18 @@ impl WorkloadSpec {
                     gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
                 })
                 .collect(),
-            WorkloadSpec::Trace { jobs, selector } => selector
+            WorkloadSpec::Trace { jobs, selector, staging } => selector
                 .selected(jobs)
                 .enumerate()
-                .map(|(i, j)| Release {
-                    offset: j.submit_time,
-                    gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
+                .map(|(i, j)| {
+                    // Copy-on-write staging: the shared log stays pristine;
+                    // the override is applied to the materialized Gridlet.
+                    let (input, output) =
+                        staging.unwrap_or((j.input_bytes, j.output_bytes));
+                    Release {
+                        offset: j.submit_time,
+                        gridlet: Gridlet::new(i, j.length_mi, input, output),
+                    }
                 })
                 .collect(),
             WorkloadSpec::Concat { parts } => {
@@ -1150,6 +1187,69 @@ mod tests {
                 assert_eq!(r.gridlet.output_bytes, 24, "{}", spec.label());
             }
         }
+    }
+
+    #[test]
+    fn staging_override_is_copy_on_write() {
+        // Legacy behavior pin: before the Arc-shared job list, set_staging
+        // mutated every TraceJob in place. The copy-on-write override must
+        // produce digest-identical releases — and must leave the shared
+        // log untouched.
+        let jobs: Vec<TraceJob> = (0..20)
+            .map(|i| TraceJob::new(i as f64 * 3.5, 100.0 + i as f64, 9, 9))
+            .collect();
+        let shared: Arc<[TraceJob]> = jobs.clone().into();
+
+        // The historical semantics, emulated by hand on an owned copy.
+        let mut mutated = jobs.clone();
+        for j in &mut mutated {
+            j.input_bytes = 42;
+            j.output_bytes = 24;
+        }
+        let legacy = materialize(&WorkloadSpec::trace(mutated), 5);
+
+        let spec = WorkloadSpec::trace_shared(shared.clone()).with_staging(42, 24);
+        let cow = materialize(&spec, 5);
+        let digest = |rs: &[Release]| -> String {
+            rs.iter()
+                .map(|r| {
+                    format!(
+                        "{}:{}:{}:{}:{}",
+                        r.offset,
+                        r.gridlet.id,
+                        r.gridlet.length_mi,
+                        r.gridlet.input_bytes,
+                        r.gridlet.output_bytes
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        assert_eq!(digest(&legacy), digest(&cow), "COW staging == legacy in-place staging");
+
+        // The shared allocation is still referenced (no clone happened) and
+        // its jobs still carry the original staging sizes.
+        let WorkloadSpec::Trace { jobs: held, .. } = &spec else { panic!("trace expected") };
+        assert!(Arc::ptr_eq(held, &shared), "with_staging must not copy the log");
+        assert!(shared.iter().all(|j| j.input_bytes == 9 && j.output_bytes == 9));
+    }
+
+    #[test]
+    fn shared_trace_clones_share_one_allocation() {
+        let shared: Arc<[TraceJob]> =
+            vec![TraceJob::new(0.0, 10.0, 1, 1), TraceJob::new(2.0, 20.0, 1, 1)].into();
+        let a = WorkloadSpec::trace_shared(shared.clone());
+        let b = a.clone();
+        let c = WorkloadSpec::trace_selected_shared(
+            shared.clone(),
+            TraceSelector::all().with_max_jobs(1),
+        );
+        for spec in [&a, &b, &c] {
+            let WorkloadSpec::Trace { jobs, .. } = spec else { panic!("trace expected") };
+            assert!(Arc::ptr_eq(jobs, &shared), "clones must share the log");
+        }
+        assert_eq!(a.declared_jobs(), 2);
+        assert_eq!(c.declared_jobs(), 1, "selector narrows without copying");
     }
 
     #[test]

@@ -36,6 +36,16 @@
 //!    file. Selection happens after the shared rebase, so per-user slices
 //!    of one log stay mutually time-aligned.
 //!
+//! Loaded jobs are meant to be shared, not copied: [`load_trace_file_shared`]
+//! returns an `Arc<[TraceJob]>` that any number of
+//! [`crate::workload::WorkloadSpec::trace_selected_shared`] workloads (and
+//! every cell of a parameter sweep) can reference. The shared list is
+//! immutable — per-workload variation goes through the selector and the
+//! materialization-time staging override, never through mutation of the jobs
+//! themselves. The JSON scenario loader applies the same discipline: within
+//! one file, every `"trace"` workload naming the same path (and SWF options)
+//! receives a clone of one shared `Arc`.
+//!
 //! `submit_time` in a [`TraceJob`] is the release offset from experiment
 //! submission (jobs with offset 0 form the initial batch; later ones arrive
 //! online). [`format_trace`] and [`parse_trace`] round-trip the legacy
@@ -471,6 +481,16 @@ pub fn detect_format(text: &str) -> Result<TraceFormat> {
 /// staging). Use [`load_trace_file_with`] to control the SWF conversion.
 pub fn load_trace_file(path: impl AsRef<Path>) -> Result<Vec<TraceJob>> {
     load_trace_file_with(path, None)
+}
+
+/// [`load_trace_file`] returning the job list ready for sharing: load once,
+/// then hand `Arc` clones to as many
+/// [`crate::workload::WorkloadSpec::trace_selected_shared`] workloads as
+/// replay the log (each with its own [`TraceSelector`] slice). For a
+/// 10^5-record SWF log this is the difference between one allocation and
+/// one copy per user per sweep cell.
+pub fn load_trace_file_shared(path: impl AsRef<Path>) -> Result<std::sync::Arc<[TraceJob]>> {
+    load_trace_file(path).map(Into::into)
 }
 
 /// [`load_trace_file`] with explicit SWF conversion options. `Some` means

@@ -1,0 +1,195 @@
+//! Resume determinism: a sweep interrupted after N cells and resumed from
+//! its `sweep_cells.jsonl` checkpoint must produce `sweep_long.csv` /
+//! `sweep_agg.csv` byte-identical to an uninterrupted run — at any worker
+//! count, with the resumed cells taken verbatim from the checkpoint.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::AllocPolicy;
+use gridsim::output::sweep::{aggregate_csv, long_csv, CHECKPOINT_FILE};
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::sweep::{run_sweep, run_sweep_checkpointed, SweepSpec};
+use std::path::PathBuf;
+
+fn resource(name: &str, mips: f64, price: f64) -> ResourceSpec {
+    ResourceSpec {
+        name: name.into(),
+        arch: "test".into(),
+        os: "linux".into(),
+        machines: 1,
+        pes_per_machine: 2,
+        mips_per_pe: mips,
+        policy: AllocPolicy::TimeShared,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+/// 2 deadlines × 2 budgets × 2 replications = 8 cells; variation > 0 so
+/// replications draw distinct workloads and the CSVs are not trivially
+/// constant.
+fn spec() -> SweepSpec {
+    let base = Scenario::builder()
+        .resource(resource("R0", 100.0, 1.0))
+        .resource(resource("R1", 120.0, 3.0))
+        .user(
+            ExperimentSpec::task_farm(8, 600.0, 0.10)
+                .deadline(5_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(43)
+        .build();
+    SweepSpec::over(base)
+        .deadlines(vec![40.0, 5_000.0])
+        .budgets(vec![2.0, 1e6])
+        .replications(2)
+}
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gridsim_resume_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn resumed_sweep_is_byte_identical_to_one_shot() {
+    let spec = spec();
+
+    // Reference: the plain (non-checkpointed) engine.
+    let reference = run_sweep(&spec, 2).unwrap();
+    let ref_long = long_csv(&spec, &reference).to_string();
+    let ref_agg = aggregate_csv(&spec, &reference).to_string();
+
+    // Checkpointing an uninterrupted run must not perturb a byte.
+    let full_dir = test_dir("full");
+    let full = run_sweep_checkpointed(&spec, 2, &full_dir, false).unwrap();
+    assert_eq!(full.cells_reused, 0);
+    assert_eq!(long_csv(&spec, &full).to_string(), ref_long);
+    assert_eq!(aggregate_csv(&spec, &full).to_string(), ref_agg);
+    let checkpoint = std::fs::read_to_string(full_dir.join(CHECKPOINT_FILE)).unwrap();
+    assert_eq!(checkpoint.lines().count(), 8, "one fsync'd line per cell");
+
+    // Emulate a kill after 3 completed cells: a checkpoint holding only the
+    // first 3 lines, then resume with a *different* worker count.
+    let half_dir = test_dir("half");
+    let head: String =
+        checkpoint.lines().take(3).map(|l| format!("{l}\n")).collect();
+    std::fs::write(half_dir.join(CHECKPOINT_FILE), &head).unwrap();
+    let resumed = run_sweep_checkpointed(&spec, 3, &half_dir, true).unwrap();
+    assert_eq!(resumed.cells_reused, 3, "completed cells are skipped");
+    assert_eq!(resumed.outcomes.len(), 8, "missing cells were appended");
+    assert_eq!(long_csv(&spec, &resumed).to_string(), ref_long, "long CSV byte-identical");
+    assert_eq!(aggregate_csv(&spec, &resumed).to_string(), ref_agg, "agg CSV byte-identical");
+    // The resumed run appended the 5 missing cells to the same file, so a
+    // second resume reuses everything and executes nothing.
+    let again = run_sweep_checkpointed(&spec, 2, &half_dir, true).unwrap();
+    assert_eq!(again.cells_reused, 8);
+    assert_eq!(long_csv(&spec, &again).to_string(), ref_long);
+
+    // Bit-exactness underneath the CSVs: resumed reports equal executed
+    // ones field for field.
+    for (a, b) in reference.outcomes.iter().zip(&again.outcomes) {
+        assert_eq!(a.cell.index, b.cell.index);
+        assert_eq!(a.report.events, b.report.events);
+        assert_eq!(a.report.end_time.to_bits(), b.report.end_time.to_bits());
+        assert_eq!(a.report.unfinished, b.report.unfinished);
+        for (u, v) in a.report.users.iter().zip(&b.report.users) {
+            assert_eq!(u.gridlets_completed, v.gridlets_completed);
+            assert_eq!(u.budget_spent.to_bits(), v.budget_spent.to_bits());
+            assert_eq!(u.finish_time.to_bits(), v.finish_time.to_bits());
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&full_dir);
+    let _ = std::fs::remove_dir_all(&half_dir);
+}
+
+#[test]
+fn resume_repairs_a_torn_checkpoint_tail_before_appending() {
+    let spec = spec();
+    let reference = run_sweep(&spec, 2).unwrap();
+    let ref_long = long_csv(&spec, &reference).to_string();
+
+    let full_dir = test_dir("torn_src");
+    run_sweep_checkpointed(&spec, 2, &full_dir, false).unwrap();
+    let checkpoint = std::fs::read_to_string(full_dir.join(CHECKPOINT_FILE)).unwrap();
+    let lines: Vec<&str> = checkpoint.lines().collect();
+
+    // Case 1: a torn final fragment with no newline (kill mid-append).
+    // Resume must drop the fragment and must NOT let the first new record
+    // merge with it — the file stays line-parseable for the *next* resume.
+    let dir = test_dir("torn");
+    std::fs::write(
+        dir.join(CHECKPOINT_FILE),
+        format!("{}\n{}\n{{\"digest\":\"00ab", lines[0], lines[1]),
+    )
+    .unwrap();
+    let resumed = run_sweep_checkpointed(&spec, 2, &dir, true).unwrap();
+    assert_eq!(resumed.cells_reused, 2, "the torn fragment's cell reruns");
+    assert_eq!(long_csv(&spec, &resumed).to_string(), ref_long);
+    let repaired = std::fs::read_to_string(dir.join(CHECKPOINT_FILE)).unwrap();
+    assert_eq!(repaired.lines().count(), 8, "2 repaired + 6 appended, no merged line");
+    let again = run_sweep_checkpointed(&spec, 2, &dir, true).unwrap();
+    assert_eq!(again.cells_reused, 8, "the repaired file resumes cleanly again");
+
+    // Case 2: a complete final line that lost only its trailing newline
+    // (kill between the two write_all calls). The record is valid and must
+    // be kept — and still must not merge with the first appended record.
+    let dir2 = test_dir("no_newline");
+    std::fs::write(dir2.join(CHECKPOINT_FILE), format!("{}\n{}", lines[0], lines[1]))
+        .unwrap();
+    let resumed = run_sweep_checkpointed(&spec, 2, &dir2, true).unwrap();
+    assert_eq!(resumed.cells_reused, 2, "the newline-less record survives");
+    assert_eq!(long_csv(&spec, &resumed).to_string(), ref_long);
+    let repaired = std::fs::read_to_string(dir2.join(CHECKPOINT_FILE)).unwrap();
+    assert_eq!(repaired.lines().count(), 8);
+    let again = run_sweep_checkpointed(&spec, 2, &dir2, true).unwrap();
+    assert_eq!(again.cells_reused, 8);
+
+    for d in [&full_dir, &dir, &dir2] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn fresh_run_overwrites_a_stale_checkpoint() {
+    let spec = spec();
+    let dir = test_dir("fresh");
+    run_sweep_checkpointed(&spec, 2, &dir, false).unwrap();
+    // Without --resume the old checkpoint is truncated, every cell reruns.
+    let rerun = run_sweep_checkpointed(&spec, 2, &dir, false).unwrap();
+    assert_eq!(rerun.cells_reused, 0);
+    let text = std::fs::read_to_string(dir.join(CHECKPOINT_FILE)).unwrap();
+    assert_eq!(text.lines().count(), 8, "rewritten, not appended");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_a_checkpoint_from_a_different_sweep() {
+    let spec = spec();
+    let dir = test_dir("foreign");
+    run_sweep_checkpointed(&spec, 2, &dir, false).unwrap();
+    // Same base, different axis values: the digest must not match.
+    let other = SweepSpec::over(spec.base.clone())
+        .deadlines(vec![41.0, 5_000.0])
+        .budgets(vec![2.0, 1e6])
+        .replications(2);
+    let err = run_sweep_checkpointed(&other, 2, &dir, true).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("different sweep"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resuming_an_empty_directory_runs_everything() {
+    let spec = spec();
+    let dir = test_dir("empty");
+    // --resume against a directory with no checkpoint is a fresh start,
+    // not an error (nothing to reuse).
+    let results = run_sweep_checkpointed(&spec, 2, &dir, true).unwrap();
+    assert_eq!(results.cells_reused, 0);
+    assert_eq!(results.outcomes.len(), 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}

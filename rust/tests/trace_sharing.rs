@@ -1,0 +1,163 @@
+//! Trace sharing: one loaded log, `Arc`-shared across users and sweep
+//! cells. Asserts (1) no per-cell or per-user copy of the job list exists —
+//! every materialized scenario references the same allocation — and (2) the
+//! shared representation changes no result bit relative to independently
+//! owned job lists.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::AllocPolicy;
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::session::GridSession;
+use gridsim::sweep::{run_sweep, SweepSpec};
+use gridsim::workload::{TraceJob, TraceSelector, WorkloadSpec};
+use std::sync::Arc;
+
+fn resource(name: &str, mips: f64, price: f64) -> ResourceSpec {
+    ResourceSpec {
+        name: name.into(),
+        arch: "test".into(),
+        os: "linux".into(),
+        machines: 1,
+        pes_per_machine: 2,
+        mips_per_pe: 100.0 * mips,
+        policy: AllocPolicy::TimeShared,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+/// A 30-job log split between SWF users 3 and 7, some jobs arriving online.
+fn log() -> Vec<TraceJob> {
+    (0..30)
+        .map(|i| {
+            let mut j = TraceJob::new(
+                (i % 7) as f64 * 5.0,
+                800.0 + (i * 37 % 400) as f64,
+                1000,
+                500,
+            );
+            j.user = Some(if i % 2 == 0 { 3 } else { 7 });
+            j
+        })
+        .collect()
+}
+
+/// The cell grid both halves of the test run: a 3-cell deadline axis over a
+/// two-user scenario replaying per-user slices of one log.
+fn sweep_over(user3: WorkloadSpec, user7: WorkloadSpec) -> SweepSpec {
+    let base = Scenario::builder()
+        .resource(resource("R0", 1.0, 1.0))
+        .resource(resource("R1", 1.2, 3.0))
+        .user(
+            ExperimentSpec::new(user3)
+                .deadline(10_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .user(
+            ExperimentSpec::new(user7)
+                .deadline(10_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Time),
+        )
+        .seed(19)
+        .build();
+    SweepSpec::over(base).deadlines(vec![60.0, 400.0, 10_000.0])
+}
+
+fn trace_arc(scenario: &Scenario, user: usize) -> &Arc<[TraceJob]> {
+    let WorkloadSpec::Trace { jobs, .. } = &scenario.users[user].experiment.workload else {
+        panic!("trace workload expected")
+    };
+    jobs
+}
+
+#[test]
+fn one_log_is_shared_across_users_and_cells() {
+    let shared: Arc<[TraceJob]> = log().into();
+    let spec = sweep_over(
+        WorkloadSpec::trace_selected_shared(shared.clone(), TraceSelector::user(3)),
+        WorkloadSpec::trace_selected_shared(shared.clone(), TraceSelector::user(7)),
+    );
+    spec.validate().unwrap();
+
+    // Both base users reference the one allocation…
+    assert!(Arc::ptr_eq(trace_arc(&spec.base, 0), &shared));
+    assert!(Arc::ptr_eq(trace_arc(&spec.base, 1), &shared));
+
+    // …and so does every user of every materialized cell: a cell's scenario
+    // clone never reloads or copies the log.
+    let cells = spec.cells();
+    assert_eq!(cells.len(), 3);
+    for cell in &cells {
+        let scenario = spec.scenario_for(cell);
+        for user in 0..scenario.users.len() {
+            assert!(
+                Arc::ptr_eq(trace_arc(&scenario, user), &shared),
+                "cell {} user {user} must share the base log",
+                cell.index
+            );
+        }
+    }
+
+    // Cell scenarios only held transient Arc clones (dropped with them);
+    // the strong count proves nothing retained a copy: our handle (1) plus
+    // the two base users (2).
+    assert_eq!(Arc::strong_count(&shared), 3);
+}
+
+#[test]
+fn shared_and_owned_logs_produce_identical_results() {
+    let jobs = log();
+    let shared: Arc<[TraceJob]> = jobs.clone().into();
+
+    // Shared: both users hold Arc clones of one allocation.
+    let shared_spec = sweep_over(
+        WorkloadSpec::trace_selected_shared(shared.clone(), TraceSelector::user(3)),
+        WorkloadSpec::trace_selected_shared(shared, TraceSelector::user(7)),
+    );
+    // Owned: each user gets its own independently allocated copy (the
+    // pre-Arc representation, emulated).
+    let owned_spec = sweep_over(
+        WorkloadSpec::trace_selected(jobs.clone(), TraceSelector::user(3)),
+        WorkloadSpec::trace_selected(jobs.clone(), TraceSelector::user(7)),
+    );
+
+    let a = run_sweep(&shared_spec, 2).unwrap();
+    let b = run_sweep(&owned_spec, 2).unwrap();
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(x.report.events, y.report.events);
+        assert_eq!(x.report.end_time.to_bits(), y.report.end_time.to_bits());
+        for (u, v) in x.report.users.iter().zip(&y.report.users) {
+            assert_eq!(u.gridlets_completed, v.gridlets_completed);
+            assert_eq!(u.gridlets_total, v.gridlets_total);
+            assert_eq!(u.budget_spent.to_bits(), v.budget_spent.to_bits());
+            assert_eq!(u.finish_time.to_bits(), v.finish_time.to_bits());
+        }
+    }
+
+    // And a sweep cell equals the same scenario run directly (the engine
+    // adds orchestration, never semantics) — including for shared traces.
+    let direct = GridSession::new(&shared_spec.scenario_for(&shared_spec.cells()[2]))
+        .run_to_completion();
+    let engine = &a.outcomes[2].report;
+    assert_eq!(direct.events, engine.events);
+    assert_eq!(direct.end_time.to_bits(), engine.end_time.to_bits());
+}
+
+#[test]
+fn sweeping_does_not_mutate_the_shared_log() {
+    let shared: Arc<[TraceJob]> = log().into();
+    let pristine: Vec<TraceJob> = shared.to_vec();
+    let spec = sweep_over(
+        WorkloadSpec::trace_selected_shared(shared.clone(), TraceSelector::user(3))
+            .with_staging(64, 32),
+        WorkloadSpec::trace_selected_shared(shared.clone(), TraceSelector::user(7)),
+    );
+    run_sweep(&spec, 2).unwrap();
+    // Even with a staging override in play (copy-on-write at
+    // materialization), the shared jobs are byte-for-byte untouched.
+    assert_eq!(&shared[..], &pristine[..]);
+}
