@@ -5,11 +5,12 @@
 mod harness;
 
 use gridsim::figures::{figs33_38, FigureConfig};
-use harness::{bench, metric};
+use harness::{bench, metric, Recorder};
 use std::time::Instant;
 
 fn main() {
     println!("== bench_multi_user: paper §5.4 (Figures 33–38) ==");
+    let mut rec = Recorder::new("bench_multi_user");
 
     let cfg = FigureConfig {
         user_counts: vec![1, 5, 10, 20],
@@ -56,7 +57,7 @@ fn main() {
         .build();
     let t0 = Instant::now();
     let report = GridSession::new(&scenario).run_to_completion();
-    metric(
+    rec.metric(
         "multi_user_events_per_sec(40 users)",
         report.events as f64 / t0.elapsed().as_secs_f64(),
         "events/s",
@@ -78,11 +79,63 @@ fn main() {
     let scenario = builder.build();
     let t0 = Instant::now();
     let report = GridSession::new(&scenario).run_to_completion();
-    metric(
+    rec.metric(
         "heterogeneous_events_per_sec(40 users, 4 policies)",
         report.events as f64 / t0.elapsed().as_secs_f64(),
         "events/s",
     );
+
+    // Flow vs baud network: the same 10-user online-arrival market under
+    // the zero-contention BaudLink and the fair-share FlowLink. The flow
+    // model pays for its rescheduling markers (O(flows on the touched
+    // links) per start/finish); this pins the overhead next to the
+    // baseline in every snapshot.
+    {
+        use gridsim::scenario::NetworkSpec;
+        use gridsim::workload::{ArrivalProcess, WorkloadSpec};
+        let build = |network: NetworkSpec| {
+            let workload = WorkloadSpec::online(
+                WorkloadSpec::task_farm(40, 10_000.0, 0.10),
+                ArrivalProcess::Poisson { mean_interarrival: 10.0 },
+            );
+            let mut builder = Scenario::builder().resources(wwg_testbed()).seed(29);
+            for _ in 0..10 {
+                builder = builder.user(
+                    ExperimentSpec::new(workload.clone())
+                        .deadline(1e6)
+                        .budget(1e9)
+                        .optimization(Optimization::Cost),
+                );
+            }
+            builder.network(network).build()
+        };
+        for (label, network) in [
+            ("baud", NetworkSpec::Baud { default_rate: 9_600.0, latency: 0.05 }),
+            (
+                "flow",
+                NetworkSpec::Flow {
+                    default_capacity: 9_600.0,
+                    latency: 0.05,
+                    capacities: vec![],
+                },
+            ),
+        ] {
+            let scenario = build(network);
+            let t0 = Instant::now();
+            let report = GridSession::new(&scenario).run_to_completion();
+            let wall = t0.elapsed().as_secs_f64();
+            rec.metric(
+                &format!("network_{label}_wall(10 users, online arrivals)"),
+                wall,
+                "s",
+            );
+            rec.metric(
+                &format!("network_{label}_events_per_sec"),
+                report.events as f64 / wall.max(1e-9),
+                "events/s",
+            );
+        }
+    }
 
     // Sweep engine: serial vs parallel over the same grid. The grid is the
     // Figs 33–35 competition block (users × budgets at deadline 3100);
@@ -110,12 +163,17 @@ fn main() {
     );
     let serial = run_sweep(&spec, 1).expect("serial sweep");
     let parallel = run_sweep(&spec, default_jobs()).expect("parallel sweep");
-    metric("sweep_serial_wall", serial.wall_secs, "s");
-    metric("sweep_parallel_wall", parallel.wall_secs, "s");
-    metric(
+    rec.metric("sweep_serial_wall", serial.wall_secs, "s");
+    rec.metric("sweep_parallel_wall", parallel.wall_secs, "s");
+    rec.metric(
         "sweep_speedup",
         serial.wall_secs / parallel.wall_secs.max(1e-9),
         &format!("x ({} workers)", parallel.jobs),
+    );
+    rec.metric(
+        "sweep_peak_cells_per_sec",
+        parallel.outcomes.len() as f64 / parallel.wall_secs.max(1e-9),
+        "cells/s",
     );
     assert_eq!(
         long_csv(&spec, &serial).to_string(),
@@ -169,8 +227,8 @@ fn main() {
         .replications(2);
     let t0 = Instant::now();
     let shared_run = run_sweep(&spec, default_jobs()).expect("shared-trace sweep");
-    metric("shared_trace_sweep_wall(6 cells, 20 users)", t0.elapsed().as_secs_f64(), "s");
-    metric(
+    rec.metric("shared_trace_sweep_wall(6 cells, 20 users)", t0.elapsed().as_secs_f64(), "s");
+    rec.metric(
         "shared_trace_sweep_events_per_sec",
         shared_run.total_events() as f64 / t0.elapsed().as_secs_f64().max(1e-9),
         "events/s",
@@ -182,4 +240,9 @@ fn main() {
         "shared-trace sweep output must be byte-identical across worker counts"
     );
     println!("shared-trace determinism: serial and parallel CSV byte-identical");
+
+    match rec.write_snapshot(concat!(env!("CARGO_MANIFEST_DIR"), "/..")) {
+        Ok(path) => println!("snapshot written: {path}"),
+        Err(e) => eprintln!("snapshot not written: {e}"),
+    }
 }

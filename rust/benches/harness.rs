@@ -32,3 +32,74 @@ pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) {
 pub fn metric(name: &str, value: f64, unit: &str) {
     println!("metric {name:<43} {value:>14.1} {unit}");
 }
+
+/// Collects metrics alongside the stdout report and writes them as a
+/// dated machine-readable snapshot (`BENCH_<YYYY-MM-DD>.json`), so bench
+/// numbers can be committed and diffed across revisions.
+#[allow(dead_code)]
+pub struct Recorder {
+    bench: String,
+    metrics: Vec<(String, f64, String)>,
+}
+
+#[allow(dead_code)]
+impl Recorder {
+    /// A recorder for one bench binary.
+    pub fn new(bench: &str) -> Recorder {
+        Recorder { bench: bench.into(), metrics: Vec::new() }
+    }
+
+    /// Print via [`metric`] and keep the value for the snapshot.
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        metric(name, value, unit);
+        self.metrics.push((name.into(), value, unit.into()));
+    }
+
+    /// Write `BENCH_<date>.json` into `dir`; returns the path written.
+    pub fn write_snapshot(&self, dir: &str) -> std::io::Result<String> {
+        use gridsim::util::json::{self, Value};
+        let date = today_utc();
+        let record = Value::obj(vec![
+            ("bench", Value::str(self.bench.clone())),
+            ("date", Value::str(date.clone())),
+            (
+                "metrics",
+                Value::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|(n, v, u)| {
+                            Value::obj(vec![
+                                ("name", Value::str(n.clone())),
+                                ("value", (*v).into()),
+                                ("unit", Value::str(u.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = format!("{dir}/BENCH_{date}.json");
+        std::fs::write(&path, json::to_string_pretty(&record) + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Civil date (UTC) from the system clock, without a date dependency
+/// (Howard Hinnant's `civil_from_days`).
+#[allow(dead_code)]
+fn today_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}

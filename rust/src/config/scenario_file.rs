@@ -70,7 +70,7 @@ const SCENARIO_KEYS: &[&str] = &[
     "seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time",
     "sweep",
 ];
-const NETWORK_KEYS: &[&str] = &["type", "rate", "latency"];
+const NETWORK_KEYS: &[&str] = &["type", "model", "rate", "latency", "capacity", "capacities"];
 const SWEEP_KEYS: &[&str] = &[
     "deadlines",
     "budgets",
@@ -82,6 +82,7 @@ const SWEEP_KEYS: &[&str] = &[
     "heavy_fractions",
     "trace_selectors",
     "mix_weights",
+    "link_capacities",
 ];
 const BROKER_KEYS: &[&str] =
     &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe"];
@@ -105,6 +106,7 @@ const USER_KEYS: &[&str] = &[
     "input_bytes",
     "output_bytes",
     "submit_delay",
+    "link_rate",
 ];
 /// The historical flat task-farm keys; mutually exclusive with `"workload"`.
 const FLAT_WORKLOAD_KEYS: &[&str] =
@@ -366,30 +368,7 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
 
     let network = match root.get("network") {
         None => NetworkSpec::Instantaneous,
-        Some(net) => {
-            reject_unknown_keys(net, "network", NETWORK_KEYS)?;
-            match opt_str(net, "network", "type")? {
-                Some("instantaneous") | None => {
-                    // rate/latency are baud-model knobs; accepting them here
-                    // would silently ignore them.
-                    for key in ["rate", "latency"] {
-                        if net.get(key).is_some() {
-                            bail!(
-                                "network: {key:?} only applies to {{\"type\": \"baud\"}}, \
-                                 not an instantaneous network"
-                            );
-                        }
-                    }
-                    NetworkSpec::Instantaneous
-                }
-                Some("baud") => NetworkSpec::Baud {
-                    default_rate: opt_f64(net, "network", "rate")?
-                        .unwrap_or(crate::gridsim::tags::DEFAULT_BAUD_RATE),
-                    latency: opt_f64(net, "network", "latency")?.unwrap_or(0.0),
-                },
-                Some(other) => bail!("unknown network type {other:?}"),
-            }
-        }
+        Some(net) => parse_network(net)?,
     };
 
     let mut builder = Scenario::builder()
@@ -405,6 +384,107 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
         builder = builder.max_time(t);
     }
     Ok(builder.build())
+}
+
+/// Parse the `"network"` block. `"model"` selects the link model
+/// (`"type"` is the historical alias): `"instantaneous"` (the default),
+/// `"baud"` (closed-form per-message delays) or `"flow"` (shared-bandwidth
+/// contention, see [`crate::network`]). Knobs belonging to a different
+/// model are rejected rather than silently ignored, and every link
+/// parameter goes through [`check_link_param`] — a NaN, infinite,
+/// negative or zero rate/capacity would silently simulate nonsense.
+fn parse_network(net: &Value) -> Result<NetworkSpec> {
+    reject_unknown_keys(net, "network", NETWORK_KEYS)?;
+    if net.get("model").is_some() && net.get("type").is_some() {
+        bail!("network: give either \"model\" or its alias \"type\", not both");
+    }
+    let model = match opt_str(net, "network", "model")? {
+        Some(m) => Some(m),
+        None => opt_str(net, "network", "type")?,
+    };
+    let reject_knobs = |keys: &[&str], wanted: &str, this: &str| -> Result<()> {
+        for &key in keys {
+            if net.get(key).is_some() {
+                bail!("network: {key:?} only applies to {{\"model\": {wanted:?}}}, not {this}");
+            }
+        }
+        Ok(())
+    };
+    match model {
+        Some("instantaneous") | None => {
+            reject_knobs(&["rate", "latency"], "baud", "an instantaneous network")?;
+            reject_knobs(&["capacity", "capacities"], "flow", "an instantaneous network")?;
+            Ok(NetworkSpec::Instantaneous)
+        }
+        Some("baud") => {
+            reject_knobs(
+                &["capacity", "capacities"],
+                "flow",
+                "a baud network (did you mean \"rate\"?)",
+            )?;
+            let default_rate = opt_f64(net, "network", "rate")?
+                .unwrap_or(crate::gridsim::tags::DEFAULT_BAUD_RATE);
+            let latency = opt_f64(net, "network", "latency")?.unwrap_or(0.0);
+            check_link_param("network", "rate", default_rate, false)?;
+            check_link_param("network", "latency", latency, true)?;
+            Ok(NetworkSpec::Baud { default_rate, latency })
+        }
+        Some("flow") => {
+            reject_knobs(&["rate"], "baud", "a flow network (did you mean \"capacity\"?)")?;
+            let default_capacity = opt_f64(net, "network", "capacity")?
+                .unwrap_or(crate::gridsim::tags::DEFAULT_BAUD_RATE);
+            let latency = opt_f64(net, "network", "latency")?.unwrap_or(0.0);
+            check_link_param("network", "capacity", default_capacity, false)?;
+            check_link_param("network", "latency", latency, true)?;
+            let capacities = match net.get("capacities") {
+                None => Vec::new(),
+                Some(Value::Obj(fields)) => {
+                    let mut seen = std::collections::BTreeSet::new();
+                    let mut out = Vec::with_capacity(fields.len());
+                    for (name, v) in fields {
+                        if !seen.insert(name.as_str()) {
+                            bail!("network capacities: duplicate entity {name:?}");
+                        }
+                        let cap = v.as_f64().ok_or_else(|| {
+                            anyhow!("network capacities: {name:?} must be a number")
+                        })?;
+                        check_link_param("network capacities", name, cap, false)?;
+                        out.push((name.clone(), cap));
+                    }
+                    out
+                }
+                Some(_) => bail!(
+                    "network: \"capacities\" must be an object mapping entity names \
+                     to capacities, e.g. {{\"R0\": 19200}}"
+                ),
+            };
+            Ok(NetworkSpec::Flow { default_capacity, latency, capacities })
+        }
+        Some(other) => {
+            let hint = nearest(other, &["instantaneous", "baud", "flow"])
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            bail!("unknown network model {other:?}{hint}; allowed: instantaneous, baud, flow")
+        }
+    }
+}
+
+/// Shared guard for link parameters (baud rates, flow capacities,
+/// latencies, per-user link rates): NaN, infinite or negative values — and
+/// zero where zero would stall every transfer — are configuration bugs and
+/// fail the parse instead of simulating nonsense.
+fn check_link_param(what: &str, key: &str, value: f64, zero_ok: bool) -> Result<()> {
+    if value.is_nan() {
+        bail!("{what}: {key:?} must be a number, got NaN");
+    }
+    if value.is_infinite() {
+        bail!("{what}: {key:?} must be finite, got {value}");
+    }
+    if value < 0.0 || (!zero_ok && value == 0.0) {
+        let bound = if zero_ok { ">= 0" } else { "> 0 (a zero-rate link never delivers)" };
+        bail!("{what}: {key:?} must be {bound}, got {value}");
+    }
+    Ok(())
 }
 
 fn parse_resource(v: &Value) -> Result<ResourceSpec> {
@@ -803,6 +883,10 @@ fn parse_user(
         }
         user = user.submit_delay(d);
     }
+    if let Some(r) = opt_f64(v, "user", "link_rate")? {
+        check_link_param("user", "link_rate", r, false)?;
+        user = user.link_rate(r);
+    }
     Ok(user)
 }
 
@@ -938,6 +1022,12 @@ fn parse_sweep_section(v: &Value, base: Scenario) -> Result<SweepSpec> {
             })
             .collect::<Result<Vec<_>>>()?;
         spec = spec.mix_weights(weight_sets);
+    }
+    if let Some(caps) = opt_f64_array(v, "sweep", "link_capacities")? {
+        for c in &caps {
+            check_link_param("sweep link_capacities", "capacity", *c, false)?;
+        }
+        spec = spec.link_capacities(caps);
     }
     if let Some(n) = opt_usize(v, "sweep", "replications")? {
         spec = spec.replications(n);

@@ -2,6 +2,7 @@
 
 use super::event::{Event, EventKind};
 use super::queue::EventQueue;
+use crate::network::FlowTable;
 use std::any::Any;
 
 pub use super::event::EntityId;
@@ -18,7 +19,38 @@ pub use super::event::EntityId;
 /// (the sweep engine runs one simulation per worker).
 pub trait LinkModel: Send {
     /// Delay (simulation time units) for `bytes` from `src` to `dst`.
+    ///
+    /// For flow models ([`is_flow`](Self::is_flow) true) this is only the
+    /// zero-contention fallback, used for payload-free control messages;
+    /// sized transfers go through the kernel's [`FlowTable`] instead.
     fn delay(&self, src: EntityId, dst: EntityId, bytes: u64) -> f64;
+
+    /// True when this model tracks per-flow shared-bandwidth state. The
+    /// kernel then routes every sized [`Ctx::send`] through its
+    /// [`FlowTable`]: concurrent transfers fair-share link capacity and
+    /// their finish events are rescheduled on every flow start/finish.
+    /// Scalar models (the default) keep the closed-form delay path.
+    fn is_flow(&self) -> bool {
+        false
+    }
+
+    /// Fixed per-message latency a flow model adds after a transfer
+    /// completes (the propagation-delay counterpart of the baud model's
+    /// additive latency). Only consulted when [`is_flow`](Self::is_flow)
+    /// is true.
+    fn flow_latency(&self) -> f64 {
+        0.0
+    }
+
+    /// Access-link capacity of entity `e` in bits per simulation time
+    /// unit. A flow `src → dst` occupies both endpoints' access links and
+    /// progresses at `min(cap(src)/n(src), cap(dst)/n(dst))` where `n` is
+    /// the number of flows currently using each link. Only consulted when
+    /// [`is_flow`](Self::is_flow) is true; implementations must return
+    /// finite positive capacities.
+    fn capacity_of(&self, _e: EntityId) -> f64 {
+        f64::INFINITY
+    }
 }
 
 /// Zero-delay network (direct delivery).
@@ -38,6 +70,7 @@ pub struct Ctx<'a, M> {
     pub(crate) me: EntityId,
     pub(crate) queue: &'a mut EventQueue<M>,
     pub(crate) link: &'a dyn LinkModel,
+    pub(crate) flows: &'a mut FlowTable<M>,
     pub(crate) stop_requested: &'a mut bool,
     pub(crate) names: &'a [String],
 }
@@ -65,7 +98,17 @@ impl<'a, M> Ctx<'a, M> {
 
     /// Send an event through the simulated network: delivery is delayed by
     /// the link model according to the payload size in bytes.
+    ///
+    /// Under a flow model ([`LinkModel::is_flow`]) a sized send to another
+    /// entity becomes a *flow*: the transfer fair-shares both endpoints'
+    /// link capacity with every concurrent flow, and delivery happens when
+    /// the (contention-dependent) transfer completes. Payload-free sends
+    /// and self-sends keep the closed-form delay path under every model.
     pub fn send(&mut self, dst: EntityId, tag: i64, data: Option<M>, bytes: u64) -> u64 {
+        if self.link.is_flow() && dst != self.me && bytes > 0 {
+            assert!(dst < self.names.len(), "send to unknown entity id {dst}");
+            return self.flows.begin(self.now, self.me, dst, tag, data, bytes, self.link, self.queue);
+        }
         let delay = self.link.delay(self.me, dst, bytes);
         debug_assert!(delay >= 0.0);
         self.push(dst, delay, tag, data, EventKind::External)
@@ -108,16 +151,17 @@ impl<'a, M> Ctx<'a, M> {
 }
 
 /// Test support: build a [`Ctx`] outside the kernel so entity handlers can be
-/// unit-tested in isolation (zero-delay link model).
+/// unit-tested in isolation (zero-delay link model, empty flow table).
 pub fn test_ctx<'a, M>(
     now: f64,
     me: EntityId,
     queue: &'a mut EventQueue<M>,
+    flows: &'a mut FlowTable<M>,
     stop: &'a mut bool,
     names: &'a [String],
 ) -> Ctx<'a, M> {
     static NO_DELAY: NoDelay = NoDelay;
-    Ctx { now, me, queue, link: &NO_DELAY, stop_requested: stop, names }
+    Ctx { now, me, queue, link: &NO_DELAY, flows, stop_requested: stop, names }
 }
 
 /// A simulation entity. The `on_event` handler is the event-model equivalent

@@ -19,6 +19,14 @@ pub enum EventKind {
     External,
     /// Event an entity scheduled on itself.
     Internal,
+    /// Kernel-internal finish marker for a shared-bandwidth network flow
+    /// (see [`crate::network`]). Never dispatched to an entity: the kernel
+    /// intercepts it in `step()`, and either drops it (a recompute
+    /// superseded it — its `seq` no longer matches the flow's live marker)
+    /// or completes the flow and emits the payload as a fresh `External`
+    /// event. The event's `tag` carries the flow id, not a protocol tag.
+    /// Markers are counted in `events_processed` and shown to the observer.
+    FlowWake,
 }
 
 /// A timestamped event, generic over the message payload type `M`.

@@ -1,8 +1,9 @@
 //! The simulation kernel: entity table + event loop.
 
 use super::entity::{Ctx, Entity, LinkModel, NoDelay};
-use super::event::{Event, EntityId};
+use super::event::{Event, EventKind, EntityId};
 use super::queue::EventQueue;
+use crate::network::FlowTable;
 use std::collections::HashMap;
 
 /// Kernel limits / options.
@@ -31,6 +32,9 @@ pub struct Simulation<M> {
     queue: EventQueue<M>,
     clock: f64,
     link: Box<dyn LinkModel>,
+    /// In-flight shared-bandwidth flows (empty unless the link model is a
+    /// flow model; see `crate::network`).
+    flows: FlowTable<M>,
     config: SimConfig,
     events_processed: u64,
     stopped: bool,
@@ -68,6 +72,7 @@ impl<M: 'static> Simulation<M> {
             queue: EventQueue::new(),
             clock: 0.0,
             link: Box::new(NoDelay),
+            flows: FlowTable::new(),
             config: SimConfig::default(),
             events_processed: 0,
             stopped: false,
@@ -136,9 +141,17 @@ impl<M: 'static> Simulation<M> {
         self.clock
     }
 
-    /// Number of events dispatched so far.
+    /// Number of events dispatched so far. Under a flow model this includes
+    /// `FlowWake` finish markers (live and stale) — they are kernel events,
+    /// popped, counted and shown to the observer like any other.
     pub fn events_processed(&self) -> u64 {
         self.events_processed
+    }
+
+    /// Number of shared-bandwidth flows currently in flight (always 0 for
+    /// scalar link models; see `crate::network`).
+    pub fn active_flows(&self) -> usize {
+        self.flows.len()
     }
 
     /// Timestamp of the next pending event, if any (lets pacing loops skip
@@ -215,9 +228,35 @@ impl<M: 'static> Simulation<M> {
             obs(&ev);
         }
         let t = self.clock;
-        let dst = ev.dst;
-        self.dispatch(dst, ev);
+        if ev.kind == EventKind::FlowWake {
+            self.flow_wake(ev);
+        } else {
+            let dst = ev.dst;
+            self.dispatch(dst, ev);
+        }
         Some(t)
+    }
+
+    /// Handle a popped flow finish marker: drop it when stale (a recompute
+    /// superseded it), otherwise complete the flow — deliver its payload as
+    /// an external event after the model's latency, release its link shares
+    /// and reschedule every flow on the touched endpoints.
+    fn flow_wake(&mut self, ev: Event<M>) {
+        let id = ev.tag as u64;
+        if !self.flows.is_live(id, ev.seq) {
+            return;
+        }
+        let done = self.flows.complete(id);
+        self.queue.push(Event {
+            time: self.clock + self.link.flow_latency(),
+            seq: 0, // assigned by the queue
+            src: done.src,
+            dst: done.dst,
+            tag: done.tag,
+            kind: EventKind::External,
+            data: done.data,
+        });
+        self.flows.recompute(self.clock, done.src, done.dst, self.link.as_ref(), &mut self.queue);
     }
 
     /// Dispatch every event with timestamp ≤ `t`, then return the clock.
@@ -272,6 +311,7 @@ impl<M: 'static> Simulation<M> {
             me: dst,
             queue: &mut self.queue,
             link: self.link.as_ref(),
+            flows: &mut self.flows,
             stop_requested: &mut self.stopped,
             names: &self.names,
         };
@@ -286,6 +326,7 @@ impl<M: 'static> Simulation<M> {
             me: id,
             queue: &mut self.queue,
             link: self.link.as_ref(),
+            flows: &mut self.flows,
             stop_requested: &mut self.stopped,
             names: &self.names,
         };

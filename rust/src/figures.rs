@@ -39,6 +39,9 @@ pub struct FigureConfig {
     /// Mean inter-arrival axis for the day/night arrival figure
     /// ([`fig_day_night`]).
     pub arrival_means: Vec<f64>,
+    /// Access-link capacity axis (bits per time unit) for the flow-network
+    /// contention figure ([`fig_network_load`]).
+    pub link_capacities: Vec<f64>,
     pub seed: u64,
     pub advisor: AdvisorKind,
     /// Sweep-engine worker threads (results are identical at any value).
@@ -53,6 +56,7 @@ impl FigureConfig {
             gridlets: 200,
             user_counts: vec![1, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
             arrival_means: vec![2.0, 5.0, 10.0, 20.0, 40.0],
+            link_capacities: vec![1_200.0, 2_400.0, 4_800.0, 9_600.0, 19_200.0, 38_400.0],
             seed: 27,
             advisor: AdvisorKind::Native,
             jobs: 1,
@@ -67,6 +71,7 @@ impl FigureConfig {
             gridlets: 100,
             user_counts: vec![1, 5, 10],
             arrival_means: vec![5.0, 20.0],
+            link_capacities: vec![2_400.0, 19_200.0],
             seed: 27,
             advisor: AdvisorKind::Native,
             jobs: 1,
@@ -333,6 +338,75 @@ pub fn fig_day_night(cfg: &FigureConfig) -> CsvWriter {
     csv
 }
 
+/// Network-load figure (beyond the paper's closed batches): several users
+/// whose jobs stream in through a contended [`crate::network::FlowLink`]
+/// access network, swept over the shared default link capacity
+/// ([`FigureConfig::link_capacities`]). Every arrival message and gridlet
+/// transfer fair-shares its endpoints' links, so shrinking the capacity
+/// stretches release and staging times. One row per capacity cell:
+/// completions, makespan, and the makespan slowdown relative to the
+/// *fastest* capacity in the axis (slowdown ≥ 1, = 1 at the best cell).
+pub fn fig_network_load(cfg: &FigureConfig) -> CsvWriter {
+    use crate::scenario::NetworkSpec;
+    use crate::workload::{ArrivalProcess, WorkloadSpec};
+    let mut csv = CsvWriter::new(&[
+        "link_capacity", "gridlets_done", "gridlets_total", "time_used", "slowdown",
+    ]);
+    if cfg.link_capacities.is_empty() {
+        return csv;
+    }
+    let users = 4;
+    let per_user = (cfg.gridlets / users).max(1);
+    let workload = |seed_shift: f64| {
+        WorkloadSpec::online(
+            WorkloadSpec::task_farm(per_user, 10_000.0, 0.10),
+            ArrivalProcess::Poisson { mean_interarrival: 20.0 + seed_shift },
+        )
+    };
+    let mut builder = Scenario::builder().resources(wwg_testbed());
+    for u in 0..users {
+        // Slightly different arrival means so the users' flows interleave
+        // rather than lock-step.
+        builder = builder.user(
+            ExperimentSpec::new(workload(u as f64))
+                .deadline(1e6)
+                .budget(1e9)
+                .optimization(Optimization::Cost),
+        );
+    }
+    let base = builder
+        .network(NetworkSpec::Flow {
+            // Placeholder — every cell overrides it via the sweep axis.
+            default_capacity: cfg.link_capacities[0],
+            latency: 0.05,
+            capacities: vec![],
+        })
+        .seed(cfg.seed)
+        .advisor(cfg.advisor.clone())
+        .build();
+    let spec = SweepSpec::over(base).link_capacities(cfg.link_capacities.clone());
+    let results = sweep(&spec, cfg.jobs);
+    // Slowdown is normalized to the fastest makespan in the grid.
+    let best = results
+        .outcomes
+        .iter()
+        .map(|o| o.report.mean_finish_time())
+        .fold(f64::INFINITY, f64::min);
+    for outcome in &results.outcomes {
+        let done: usize = outcome.report.users.iter().map(|u| u.gridlets_completed).sum();
+        let total: usize = outcome.report.users.iter().map(|u| u.gridlets_total).sum();
+        let makespan = outcome.report.mean_finish_time();
+        csv.row_f64(&[
+            outcome.cell.link_capacity.expect("link-capacity axis"),
+            done as f64,
+            total as f64,
+            makespan,
+            if best > 0.0 { makespan / best } else { 1.0 },
+        ]);
+    }
+    csv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -390,6 +464,31 @@ mod tests {
             let fields: Vec<&str> = line.split(',').collect();
             assert_eq!(fields[1], fields[2], "done == total under loose constraints");
         }
+    }
+
+    #[test]
+    fn network_load_rows_per_capacity() {
+        let cfg = FigureConfig {
+            gridlets: 16,
+            link_capacities: vec![1_200.0, 38_400.0],
+            ..FigureConfig::quick()
+        };
+        let csv = fig_network_load(&cfg);
+        assert_eq!(csv.len(), 2, "one row per link-capacity cell");
+        let text = csv.to_string();
+        assert!(text.starts_with("link_capacity,"), "{text}");
+        let rows: Vec<Vec<f64>> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|f| f.parse().unwrap()).collect())
+            .collect();
+        // Slowdown is normalized: the fastest cell reads exactly 1, the
+        // starved 1200 b/u link is strictly slower than 38400 b/u.
+        let slow = &rows[0];
+        let fast = &rows[1];
+        assert_eq!(fast[4], 1.0, "fastest capacity defines slowdown 1: {text}");
+        assert!(slow[4] > 1.0, "contended link must slow the run: {text}");
+        assert!(slow[3] > fast[3], "makespan grows as capacity shrinks: {text}");
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //! are mapped to wall-clock via `units_per_hour` so that "weekend" has a
 //! meaning; the paper leaves this mapping to the modeler.
 
-/// Day-of-week, Monday = 0 … Sunday = 6.
+/// Day-of-week index of Saturday (Monday = 0 … Sunday = 6).
 pub const SATURDAY: usize = 5;
+/// Day-of-week index of Sunday (Monday = 0 … Sunday = 6).
 pub const SUNDAY: usize = 6;
 
 /// Background-load calendar for one resource.

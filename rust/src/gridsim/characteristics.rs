@@ -29,6 +29,7 @@ pub enum AllocPolicy {
 }
 
 impl AllocPolicy {
+    /// `true` for [`AllocPolicy::TimeShared`] (Table 2's "manager" column).
     pub fn is_time_shared(&self) -> bool {
         matches!(self, AllocPolicy::TimeShared)
     }
@@ -53,6 +54,8 @@ pub struct ResourceCharacteristics {
 }
 
 impl ResourceCharacteristics {
+    /// Build the characteristics record; panics on an empty machine list or
+    /// a negative price.
     pub fn new(
         arch: impl Into<String>,
         os: impl Into<String>,

@@ -13,6 +13,7 @@ pub struct GridInformationService {
 }
 
 impl GridInformationService {
+    /// A GIS with the given entity name and no registered resources yet.
     pub fn new(name: impl Into<String>) -> GridInformationService {
         GridInformationService { name: name.into(), resources: Vec::new() }
     }

@@ -6,20 +6,25 @@ use super::pe::PeList;
 /// A uniprocessor or shared-memory multiprocessor node.
 #[derive(Debug, Clone)]
 pub struct Machine {
+    /// Machine id, unique within its resource.
     pub id: usize,
+    /// The machine's processing elements.
     pub pes: PeList,
 }
 
 impl Machine {
+    /// A machine from its PEs; panics on an empty PE list.
     pub fn new(id: usize, pes: PeList) -> Machine {
         assert!(!pes.is_empty(), "a machine needs at least one PE");
         Machine { id, pes }
     }
 
+    /// Number of PEs in this machine.
     pub fn num_pe(&self) -> usize {
         self.pes.len()
     }
 
+    /// Sum of this machine's PE ratings.
     pub fn total_mips(&self) -> f64 {
         self.pes.total_mips()
     }
@@ -33,6 +38,7 @@ pub struct MachineList {
 }
 
 impl MachineList {
+    /// An empty machine list.
     pub fn new() -> MachineList {
         MachineList { machines: Vec::new() }
     }
@@ -46,26 +52,32 @@ impl MachineList {
         list
     }
 
+    /// Append a machine.
     pub fn add(&mut self, machine: Machine) {
         self.machines.push(machine);
     }
 
+    /// Number of machines.
     pub fn len(&self) -> usize {
         self.machines.len()
     }
 
+    /// `true` when the list holds no machines.
     pub fn is_empty(&self) -> bool {
         self.machines.is_empty()
     }
 
+    /// Iterate over the machines in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = &Machine> {
         self.machines.iter()
     }
 
+    /// The `i`-th machine; panics when out of range.
     pub fn get(&self, i: usize) -> &Machine {
         &self.machines[i]
     }
 
+    /// Mutable access to the `i`-th machine; panics when out of range.
     pub fn get_mut(&mut self, i: usize) -> &mut Machine {
         &mut self.machines[i]
     }
@@ -75,6 +87,7 @@ impl MachineList {
         self.machines.iter().map(|m| m.num_pe()).sum()
     }
 
+    /// Sum of the PE ratings across all machines.
     pub fn total_mips(&self) -> f64 {
         self.machines.iter().map(|m| m.total_mips()).sum()
     }

@@ -11,12 +11,19 @@ use crate::des::EntityId;
 /// query (what the broker's "resource trading" step needs).
 #[derive(Debug, Clone)]
 pub struct ResourceInfo {
+    /// The resource's entity id.
     pub id: EntityId,
+    /// The resource's entity name (Table 2's "name").
     pub name: String,
+    /// Total PEs across the resource's machines.
     pub num_pe: usize,
+    /// Rating of one PE (homogeneous assumption, as in the paper).
     pub mips_per_pe: f64,
+    /// Price in G$ per PE per time unit (Table 2 "Price").
     pub cost_per_pe_time: f64,
+    /// `true` for time-shared managers, `false` for space-shared.
     pub time_shared: bool,
+    /// Time-zone offset in hours (drives the local-load calendar).
     pub time_zone: f64,
 }
 
@@ -35,6 +42,7 @@ impl ResourceInfo {
 /// Dynamic resource state returned by a `RESOURCE_DYNAMICS` query.
 #[derive(Debug, Clone)]
 pub struct ResourceDynamics {
+    /// The resource's entity id.
     pub id: EntityId,
     /// Gridlets currently executing.
     pub in_exec: usize,
@@ -49,16 +57,22 @@ pub struct ResourceDynamics {
 /// Advance-reservation request (paper §3.1 feature / future work §6).
 #[derive(Debug, Clone)]
 pub struct ReservationRequest {
+    /// Caller-chosen id echoed back in the reply.
     pub reservation_id: usize,
+    /// Requested start time.
     pub start: f64,
+    /// Requested slot length.
     pub duration: f64,
+    /// PEs to reserve.
     pub num_pe: usize,
 }
 
 /// Advance-reservation reply.
 #[derive(Debug, Clone)]
 pub struct ReservationReply {
+    /// The id from the matching [`ReservationRequest`].
     pub reservation_id: usize,
+    /// Whether the resource granted the slot.
     pub accepted: bool,
 }
 
@@ -79,8 +93,9 @@ pub enum Msg {
     Dynamics(ResourceDynamics),
     /// Entity -> statistics: one measurement.
     Stat(StatRecord),
-    /// Reservation protocol.
+    /// Broker/user -> resource: reservation protocol request.
     Reserve(ReservationRequest),
+    /// Resource -> requester: reservation protocol reply.
     ReserveReply(ReservationReply),
     /// User -> broker: a materialized experiment to schedule.
     Experiment(Box<crate::broker::experiment::Experiment>),

@@ -31,6 +31,7 @@ impl Default for BaudLink {
 }
 
 impl BaudLink {
+    /// A link model at the paper's `DEFAULT_BAUD_RATE` with zero latency.
     pub fn new() -> BaudLink {
         BaudLink {
             rates: HashMap::new(),
@@ -48,12 +49,14 @@ impl BaudLink {
         link
     }
 
+    /// Builder: the baud rate used by entities without an explicit rate.
     pub fn with_default_rate(mut self, baud: f64) -> BaudLink {
         assert!(baud > 0.0);
         self.default_rate = baud;
         self
     }
 
+    /// Builder: the latency used by pairs without an explicit override.
     pub fn with_default_latency(mut self, latency: f64) -> BaudLink {
         assert!(latency >= 0.0);
         self.default_latency = latency;

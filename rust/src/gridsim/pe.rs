@@ -3,7 +3,9 @@
 /// Allocation status of a PE.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PeStatus {
+    /// Idle and allocatable.
     Free,
+    /// Allocated to a Gridlet.
     Busy,
     /// Unavailable due to an injected failure.
     Failed,
@@ -12,12 +14,16 @@ pub enum PeStatus {
 /// A processing element with a MIPS (or SPEC-equivalent) rating.
 #[derive(Debug, Clone)]
 pub struct Pe {
+    /// PE id, unique within its machine.
     pub id: usize,
+    /// Processing rating in MIPS.
     pub mips: f64,
+    /// Current allocation status.
     pub status: PeStatus,
 }
 
 impl Pe {
+    /// A free PE; panics on a non-positive MIPS rating.
     pub fn new(id: usize, mips: f64) -> Pe {
         assert!(mips > 0.0, "PE MIPS rating must be positive");
         Pe { id, mips, status: PeStatus::Free }
@@ -31,6 +37,7 @@ pub struct PeList {
 }
 
 impl PeList {
+    /// An empty PE list.
     pub fn new() -> PeList {
         PeList { pes: Vec::new() }
     }
@@ -44,26 +51,32 @@ impl PeList {
         list
     }
 
+    /// Append a PE.
     pub fn add(&mut self, pe: Pe) {
         self.pes.push(pe);
     }
 
+    /// Number of PEs.
     pub fn len(&self) -> usize {
         self.pes.len()
     }
 
+    /// `true` when the list holds no PEs.
     pub fn is_empty(&self) -> bool {
         self.pes.is_empty()
     }
 
+    /// Iterate over the PEs in id order.
     pub fn iter(&self) -> impl Iterator<Item = &Pe> {
         self.pes.iter()
     }
 
+    /// The `i`-th PE; panics when out of range.
     pub fn get(&self, i: usize) -> &Pe {
         &self.pes[i]
     }
 
+    /// Mutable access to the `i`-th PE; panics when out of range.
     pub fn get_mut(&mut self, i: usize) -> &mut Pe {
         &mut self.pes[i]
     }

@@ -18,6 +18,7 @@ pub struct GridSimRandom {
 }
 
 impl GridSimRandom {
+    /// A randomizer seeded deterministically, with zero uncertainty factors.
     pub fn new(seed: u64) -> GridSimRandom {
         GridSimRandom { rng: Rng::new(seed), net_factors: (0.0, 0.0), exec_factors: (0.0, 0.0) }
     }

@@ -6,6 +6,7 @@ use super::gridlet::Gridlet;
 /// Resource-side execution record for one Gridlet.
 #[derive(Debug, Clone)]
 pub struct ResGridlet {
+    /// The job being executed.
     pub gridlet: Gridlet,
     /// Arrival time at the resource.
     pub arrival: f64,
@@ -23,6 +24,8 @@ pub struct ResGridlet {
 }
 
 impl ResGridlet {
+    /// Wrap an arriving Gridlet: stamps the arrival time and sets the full
+    /// job length as remaining work, unassigned to any machine/PE yet.
     pub fn new(mut gridlet: Gridlet, now: f64, rank: u64) -> ResGridlet {
         let remaining = gridlet.length_mi;
         gridlet.arrival_time = now;

@@ -10,9 +10,13 @@
 /// One accepted reservation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Reservation {
+    /// Caller-chosen id (used to cancel).
     pub id: usize,
+    /// Window start (inclusive).
     pub start: f64,
+    /// Window end (exclusive).
     pub end: f64,
+    /// PEs withheld from the local scheduler during the window.
     pub num_pe: usize,
 }
 
@@ -24,14 +28,17 @@ pub struct ReservationBook {
 }
 
 impl ReservationBook {
+    /// An empty book for a resource with `capacity` PEs.
     pub fn new(capacity: usize) -> ReservationBook {
         ReservationBook { capacity, accepted: Vec::new() }
     }
 
+    /// The resource's total PE count (the admission ceiling).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// All currently accepted reservations, in acceptance order.
     pub fn accepted(&self) -> &[Reservation] {
         &self.accepted
     }

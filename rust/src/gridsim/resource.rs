@@ -112,6 +112,8 @@ impl GridResource {
         self
     }
 
+    /// The static characteristics record this resource registers with the
+    /// GIS and returns to `RESOURCE_CHARACTERISTICS` queries.
     pub fn info(&self, id: EntityId) -> ResourceInfo {
         ResourceInfo {
             id,
@@ -124,6 +126,7 @@ impl GridResource {
         }
     }
 
+    /// The resource's static properties.
     pub fn characteristics(&self) -> &ResourceCharacteristics {
         &self.characteristics
     }

@@ -13,10 +13,12 @@ pub struct GridSimShutdown {
 }
 
 impl GridSimShutdown {
+    /// A coordinator that waits for `users_expected` completion reports.
     pub fn new(name: impl Into<String>, users_expected: usize) -> GridSimShutdown {
         GridSimShutdown { name: name.into(), users_expected, users_done: 0 }
     }
 
+    /// How many users have reported completion so far.
     pub fn users_done(&self) -> usize {
         self.users_done
     }

@@ -34,6 +34,8 @@ pub struct SpaceShared {
 }
 
 impl SpaceShared {
+    /// A space-shared scheduler over machines with `machine_pes[i]` PEs
+    /// each, all rated `mips_per_pe`, ordering its queue by `policy`.
     pub fn new(machine_pes: &[usize], mips_per_pe: f64, policy: SpacePolicy) -> SpaceShared {
         assert!(!machine_pes.is_empty());
         assert!(mips_per_pe > 0.0);

@@ -9,11 +9,14 @@ use crate::des::{Ctx, Entity, Event};
 /// One recorded measurement.
 #[derive(Debug, Clone)]
 pub struct StatRecord {
+    /// Simulation time the measurement was taken.
     pub time: f64,
     /// Dotted category, e.g. `"*.USER.TimeUtilization"` in the paper's
     /// report-writer configuration.
     pub category: String,
+    /// Free-form measurement label.
     pub label: String,
+    /// The measured value.
     pub value: f64,
 }
 
@@ -28,10 +31,12 @@ pub struct Accumulator {
 }
 
 impl Accumulator {
+    /// An empty accumulator.
     pub fn new() -> Accumulator {
         Accumulator { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one value into the running statistics.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -40,14 +45,17 @@ impl Accumulator {
         self.max = self.max.max(x);
     }
 
+    /// Number of values added.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sum of the values added.
     pub fn sum(&self) -> f64 {
         self.sum
     }
 
+    /// Mean of the values added (0 while empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -65,6 +73,7 @@ impl Accumulator {
         (self.sum_sq / self.n as f64 - mean * mean).max(0.0).sqrt()
     }
 
+    /// Smallest value added (0 while empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -73,6 +82,7 @@ impl Accumulator {
         }
     }
 
+    /// Largest value added (0 while empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -90,10 +100,12 @@ pub struct GridStatistics {
 }
 
 impl GridStatistics {
+    /// A statistics entity with no records yet.
     pub fn new(name: impl Into<String>) -> GridStatistics {
         GridStatistics { name: name.into(), records: Vec::new() }
     }
 
+    /// Every recorded measurement, in arrival order.
     pub fn records(&self) -> &[StatRecord] {
         &self.records
     }

@@ -35,6 +35,7 @@ pub struct TimeShared {
 }
 
 impl TimeShared {
+    /// A round-robin scheduler over `num_pe` PEs rated `mips_per_pe` each.
     pub fn new(num_pe: usize, mips_per_pe: f64) -> TimeShared {
         assert!(num_pe >= 1);
         assert!(mips_per_pe > 0.0);

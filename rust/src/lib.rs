@@ -11,6 +11,11 @@
 //! * [`gridsim`] — the grid entity toolkit: PEs, machines, time-/space-shared
 //!   resources, Gridlets, the information service, network delays,
 //!   statistics, calendars and reservations.
+//! * [`network`] — flow-level network models: [`network::FlowLink`]
+//!   fair-shares access-link capacity among concurrent transfers, with
+//!   per-flow finish events rescheduled in the DES queue on every flow
+//!   start/finish (`gridsim::network::BaudLink` stays the zero-contention
+//!   fast path).
 //! * [`broker`] — the Nimrod-G-like economic resource broker with
 //!   deadline-and-budget-constrained (DBC) scheduling policies.
 //! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
@@ -94,8 +99,8 @@
 // Every public item must carry rustdoc (CI runs `cargo doc` with
 // `-D warnings`). Modules that predate the policy carry a module-level
 // `allow` below; remove an `allow` once its module is fully documented —
-// never add a new one. `workload`, `sweep`, `session`, `des` and `output`
-// are fully documented and enforced.
+// never add a new one. `workload`, `sweep`, `session`, `des`, `gridsim`,
+// `network` and `output` are fully documented and enforced.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)] // TODO(docs): documented module headers, item gaps remain
@@ -105,8 +110,8 @@ pub mod config;
 pub mod des;
 #[allow(missing_docs)] // TODO(docs)
 pub mod figures;
-#[allow(missing_docs)] // TODO(docs)
 pub mod gridsim;
+pub mod network;
 pub mod output;
 #[allow(missing_docs)] // TODO(docs)
 pub mod runtime;

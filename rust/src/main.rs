@@ -93,7 +93,7 @@ fn print_usage() {
            sweep [--deadlines D1,D2,...] [--budgets B1,...] [--users N1,...]\n\
                  [--policies P1,...] [--resources R1+R2,R3,...]\n\
                  [--mean-interarrivals M1,...] [--heavy-fractions F1,...]\n\
-                 [--replications R] [--gridlets N]\n\
+                 [--link-capacities C1,...] [--replications R] [--gridlets N]\n\
                                        inline sweep on the WWG testbed; writes\n\
                                        sweep_long.csv + sweep_agg.csv to --out\n\
                                        (workload-shape axes need a scenario file\n\
@@ -108,7 +108,7 @@ fn print_usage() {
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|\n\
-                                       day-night|all)\n\
+                                       day-night|network|all)\n\
            selftest                    quick end-to-end smoke run\n\
          \n\
          common flags: --advisor native|xla   --seed N   --out DIR   --jobs N\n\
@@ -324,6 +324,11 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
     if let Some(fs) = args.flag_f64_list("heavy-fractions")? {
         spec = spec.heavy_fractions(fs);
     }
+    // Like the workload-shape axes, this needs a base whose network is
+    // already {"model": "flow"} — spec.validate() reports it otherwise.
+    if let Some(cs) = args.flag_f64_list("link-capacities")? {
+        spec = spec.link_capacities(cs);
+    }
     if let Some(r) = args.flag_usize("replications")? {
         spec = spec.replications(r);
     }
@@ -435,6 +440,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(set.as_str(), "day-night" | "all") {
         emit("fig_day_night_modulated_arrivals", figures::fig_day_night(&cfg))?;
+    }
+    if matches!(set.as_str(), "network" | "all") {
+        emit("fig_network_load_flow_contention", figures::fig_network_load(&cfg))?;
     }
     if wrote.is_empty() {
         bail!("unknown figure set {set:?}");

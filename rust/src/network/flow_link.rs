@@ -1,0 +1,118 @@
+//! The shared-bandwidth link model (configuration side).
+
+use crate::des::entity::LinkModel;
+use crate::des::EntityId;
+use std::collections::HashMap;
+
+/// Fair-share access-link model: every entity owns a link of finite
+/// capacity (bits per simulation time unit), and concurrent transfers
+/// through a link split it evenly. Installing a `FlowLink` switches the
+/// kernel's sized sends from closed-form delays to rescheduled flows —
+/// see [`crate::network`] for the mechanics and determinism contract.
+///
+/// Capacities follow the [`crate::gridsim::network::BaudLink`] convention
+/// (a 1200-byte message over a 9600 bit/s link takes one time unit solo),
+/// so a `"flow"` scenario with no contention matches its `"baud"` twin.
+pub struct FlowLink {
+    /// Capacity for entities without an explicit override.
+    default_capacity: f64,
+    /// Per-entity access-link capacity overrides.
+    capacities: HashMap<EntityId, f64>,
+    /// Fixed per-message latency, added after a transfer completes (and to
+    /// payload-free control messages).
+    latency: f64,
+}
+
+impl FlowLink {
+    /// A flow model where every access link has `default_capacity` bits
+    /// per time unit and every delivery adds `latency` on top of the
+    /// transfer. Panics on non-finite, zero or negative capacity and on
+    /// negative or non-finite latency — the scenario loader rejects such
+    /// values with a proper error before this is reached.
+    pub fn new(default_capacity: f64, latency: f64) -> FlowLink {
+        assert!(
+            default_capacity.is_finite() && default_capacity > 0.0,
+            "link capacity must be finite and positive, got {default_capacity}"
+        );
+        assert!(
+            latency.is_finite() && latency >= 0.0,
+            "latency must be finite and non-negative, got {latency}"
+        );
+        FlowLink { default_capacity, capacities: HashMap::new(), latency }
+    }
+
+    /// Override one entity's access-link capacity (builder style). Panics
+    /// on non-finite, zero or negative values, like [`new`](Self::new).
+    pub fn with_capacity(mut self, entity: EntityId, capacity: f64) -> FlowLink {
+        self.set_capacity(entity, capacity);
+        self
+    }
+
+    /// Override one entity's access-link capacity in place.
+    pub fn set_capacity(&mut self, entity: EntityId, capacity: f64) {
+        assert!(
+            capacity.is_finite() && capacity > 0.0,
+            "link capacity must be finite and positive, got {capacity}"
+        );
+        self.capacities.insert(entity, capacity);
+    }
+}
+
+impl LinkModel for FlowLink {
+    /// Zero-contention fallback used for payload-free control messages and
+    /// self-sends: latency plus the solo transfer time over the slower of
+    /// the two endpoints' links (self-sends are free, as in `BaudLink`).
+    fn delay(&self, src: EntityId, dst: EntityId, bytes: u64) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let rate = self.capacity_of(src).min(self.capacity_of(dst));
+        self.latency + bytes as f64 * 8.0 / rate
+    }
+
+    fn is_flow(&self) -> bool {
+        true
+    }
+
+    fn flow_latency(&self) -> f64 {
+        self.latency
+    }
+
+    fn capacity_of(&self, e: EntityId) -> f64 {
+        self.capacities.get(&e).copied().unwrap_or(self.default_capacity)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_delay_matches_baud_convention() {
+        // 1200 bytes at 9600 bit/s → 1.0 time units, plus latency.
+        let link = FlowLink::new(9600.0, 0.25);
+        assert_eq!(link.delay(0, 1, 1200), 1.25);
+        assert_eq!(link.delay(2, 2, 1200), 0.0, "self-sends are free");
+    }
+
+    #[test]
+    fn per_entity_overrides_bottleneck() {
+        let link = FlowLink::new(9600.0, 0.0).with_capacity(1, 4800.0);
+        assert_eq!(link.capacity_of(0), 9600.0);
+        assert_eq!(link.capacity_of(1), 4800.0);
+        // The slower endpoint bounds the solo rate.
+        assert_eq!(link.delay(0, 1, 1200), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be finite and positive")]
+    fn rejects_zero_capacity() {
+        let _ = FlowLink::new(0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency must be finite and non-negative")]
+    fn rejects_negative_latency() {
+        let _ = FlowLink::new(9600.0, -1.0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Kernel-owned state for in-flight shared-bandwidth flows.
+
+use crate::des::{EntityId, Event, EventKind, EventQueue};
+use crate::des::entity::LinkModel;
+use std::collections::{BTreeMap, HashMap};
+
+/// One in-flight transfer: the payload it will deliver plus its transfer
+/// progress under the fair-share rate last assigned to it.
+struct Flow<M> {
+    src: EntityId,
+    dst: EntityId,
+    /// Bits still to transfer as of `last_update`.
+    remaining_bits: f64,
+    /// Simulation time at which `remaining_bits` was last settled.
+    last_update: f64,
+    /// Fair-share rate (bits per time unit) in effect since `last_update`.
+    rate: f64,
+    /// Sequence number of this flow's *live* finish marker; markers popped
+    /// with any other sequence number are stale and dropped.
+    marker_seq: u64,
+    /// Protocol tag delivered when the flow completes.
+    tag: i64,
+    /// Payload delivered when the flow completes.
+    data: Option<M>,
+}
+
+/// A completed flow's delivery parameters, handed back to the kernel so it
+/// can emit the payload as an ordinary external event.
+pub(crate) struct CompletedFlow<M> {
+    /// Original sender.
+    pub(crate) src: EntityId,
+    /// Destination entity.
+    pub(crate) dst: EntityId,
+    /// Protocol tag.
+    pub(crate) tag: i64,
+    /// Payload (if any).
+    pub(crate) data: Option<M>,
+}
+
+/// The set of in-flight flows of one simulation, owned by the kernel and
+/// consulted on every sized send and every `FlowWake` marker.
+///
+/// Iteration order (and therefore recompute order, marker insertion order
+/// and tie-breaking) is flow-id order — a pure function of the event
+/// sequence, which is what keeps flow-model runs byte-identical at any
+/// sweep worker count. See [`crate::network`] for the model.
+pub struct FlowTable<M> {
+    /// In-flight flows, keyed by id in a `BTreeMap` for deterministic
+    /// iteration.
+    flows: BTreeMap<u64, Flow<M>>,
+    /// Number of flows currently using each entity's access link.
+    active: HashMap<EntityId, usize>,
+    /// Next flow id (per-simulation counter).
+    next_id: u64,
+}
+
+impl<M> Default for FlowTable<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M> FlowTable<M> {
+    /// An empty table (no flows in flight).
+    pub fn new() -> FlowTable<M> {
+        FlowTable { flows: BTreeMap::new(), active: HashMap::new(), next_id: 0 }
+    }
+
+    /// Number of flows currently in flight.
+    pub fn len(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// True when no flow is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.flows.is_empty()
+    }
+
+    /// Register a new flow of `bytes` from `src` to `dst` starting at
+    /// `now`, then recompute rates for every flow sharing either endpoint
+    /// (the new flow included). Returns the new flow's finish-marker
+    /// sequence number.
+    #[allow(clippy::too_many_arguments)] // kernel-internal; mirrors Ctx::send
+    pub(crate) fn begin(
+        &mut self,
+        now: f64,
+        src: EntityId,
+        dst: EntityId,
+        tag: i64,
+        data: Option<M>,
+        bytes: u64,
+        link: &dyn LinkModel,
+        queue: &mut EventQueue<M>,
+    ) -> u64 {
+        debug_assert!(bytes > 0 && src != dst, "zero-byte and self sends stay scalar");
+        let id = self.next_id;
+        self.next_id += 1;
+        self.flows.insert(
+            id,
+            Flow {
+                src,
+                dst,
+                remaining_bits: bytes as f64 * 8.0,
+                last_update: now,
+                rate: 0.0,
+                marker_seq: 0, // assigned by the recompute below
+                tag,
+                data,
+            },
+        );
+        *self.active.entry(src).or_insert(0) += 1;
+        *self.active.entry(dst).or_insert(0) += 1;
+        self.recompute(now, src, dst, link, queue);
+        self.flows[&id].marker_seq
+    }
+
+    /// True when `marker_seq` is the live finish marker of flow `id`; a
+    /// mismatch means a later recompute superseded the popped marker.
+    pub(crate) fn is_live(&self, id: u64, marker_seq: u64) -> bool {
+        self.flows.get(&id).is_some_and(|f| f.marker_seq == marker_seq)
+    }
+
+    /// Remove a completed flow (its live marker fired) and release both
+    /// endpoints' link shares. The caller delivers the returned payload and
+    /// then recomputes the touched endpoints.
+    pub(crate) fn complete(&mut self, id: u64) -> CompletedFlow<M> {
+        let flow = self.flows.remove(&id).expect("live marker for unknown flow");
+        for e in [flow.src, flow.dst] {
+            let n = self.active.get_mut(&e).expect("completed flow not counted");
+            *n -= 1;
+            if *n == 0 {
+                self.active.remove(&e);
+            }
+        }
+        CompletedFlow { src: flow.src, dst: flow.dst, tag: flow.tag, data: flow.data }
+    }
+
+    /// Reschedule every flow using endpoint `a` or `b`: settle the bits
+    /// transferred at the old rate, assign the new fair-share rate, and
+    /// push a fresh finish marker (superseding the old one, which becomes
+    /// stale). Flows on untouched links keep their markers — rates depend
+    /// only on per-link flow counts, so no recomputation can cascade.
+    pub(crate) fn recompute(
+        &mut self,
+        now: f64,
+        a: EntityId,
+        b: EntityId,
+        link: &dyn LinkModel,
+        queue: &mut EventQueue<M>,
+    ) {
+        for (id, flow) in self.flows.iter_mut() {
+            if flow.src != a && flow.src != b && flow.dst != a && flow.dst != b {
+                continue;
+            }
+            if flow.rate > 0.0 {
+                let done = flow.rate * (now - flow.last_update);
+                flow.remaining_bits = (flow.remaining_bits - done).max(0.0);
+            }
+            flow.last_update = now;
+            let share = |e: EntityId| link.capacity_of(e) / self.active[&e] as f64;
+            flow.rate = share(flow.src).min(share(flow.dst));
+            debug_assert!(
+                flow.rate > 0.0 && !flow.rate.is_nan(),
+                "flow rate must be positive, got {}",
+                flow.rate
+            );
+            let dt = if flow.rate.is_finite() { flow.remaining_bits / flow.rate } else { 0.0 };
+            flow.marker_seq = queue.push(Event {
+                time: now + dt,
+                seq: 0, // assigned by the queue
+                src: flow.src,
+                dst: flow.dst,
+                tag: *id as i64,
+                kind: EventKind::FlowWake,
+                data: None,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::FlowLink;
+
+    #[test]
+    fn two_flows_on_one_link_halve_the_rate() {
+        let link = FlowLink::new(1000.0, 0.0);
+        let mut table: FlowTable<()> = FlowTable::new();
+        let mut queue: EventQueue<()> = EventQueue::new();
+        // Flow 0 alone: 1000 bits at 1000 b/s → marker at t=1.
+        table.begin(0.0, 0, 1, 7, None, 125, &link, &mut queue);
+        assert_eq!(table.len(), 1);
+        // Flow 1 joins at t=0.5 sharing src 0: both drop to 500 b/s.
+        // Flow 0 has 500 bits left → finishes at 0.5 + 1 = 1.5.
+        let seq1 = table.begin(0.5, 0, 2, 8, None, 125, &link, &mut queue);
+        // Queue now holds flow 0's stale marker (t=1), then fresh markers
+        // for both flows: flow 0 at t=1.5, flow 1 at t=0.5 + 2.
+        let stale = queue.pop().unwrap();
+        assert_eq!(stale.time, 1.0);
+        assert!(!table.is_live(stale.tag as u64, stale.seq), "superseded marker is stale");
+        let live0 = queue.pop().unwrap();
+        assert_eq!(live0.time, 1.5);
+        assert!(table.is_live(live0.tag as u64, live0.seq));
+        let done = table.complete(live0.tag as u64);
+        assert_eq!((done.src, done.dst, done.tag), (0, 1, 7));
+        // Flow 1 recomputes back to full rate: 1750 bits... no — it had
+        // 1000 bits at t=0.5, ran at 500 b/s for 1.0s → 500 left at t=1.5,
+        // now alone at 1000 b/s → finishes at t=2.
+        table.recompute(1.5, done.src, done.dst, &link, &mut queue);
+        let live1 = queue.pop().unwrap();
+        assert!(table.is_live(live1.tag as u64, live1.seq));
+        assert_eq!(live1.time, 2.0);
+        let _ = seq1;
+    }
+
+    #[test]
+    fn counts_release_on_complete() {
+        let link = FlowLink::new(100.0, 0.0);
+        let mut table: FlowTable<()> = FlowTable::new();
+        let mut queue: EventQueue<()> = EventQueue::new();
+        table.begin(0.0, 0, 1, 1, None, 10, &link, &mut queue);
+        table.begin(0.0, 1, 2, 2, None, 10, &link, &mut queue);
+        assert_eq!(table.len(), 2);
+        table.complete(0);
+        table.complete(1);
+        assert!(table.is_empty());
+        assert!(table.active.is_empty(), "link shares released");
+    }
+}

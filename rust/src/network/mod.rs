@@ -1,0 +1,46 @@
+//! Flow-level network subsystem: shared-bandwidth contention.
+//!
+//! The paper (and [`crate::gridsim::network::BaudLink`]) models every
+//! transfer with a closed-form delay `latency + bytes·8 / baud`, so N
+//! concurrent transfers through one broker each see *full* bandwidth.
+//! This module adds the contention-aware alternative: a [`FlowLink`]
+//! assigns every entity an access link with a finite capacity (bits per
+//! simulation time unit), and every sized [`crate::des::Ctx::send`]
+//! becomes a *flow* that fair-shares both endpoints' links with all
+//! concurrent flows:
+//!
+//! ```text
+//! rate(f) = min( cap(src)/n(src), cap(dst)/n(dst) )
+//! ```
+//!
+//! where `n(e)` counts the flows currently using entity `e`'s link.
+//!
+//! ## Event rescheduling
+//!
+//! Flow state lives in the kernel-owned [`FlowTable`]. Whenever a flow
+//! starts or finishes, every flow sharing a touched endpoint settles the
+//! bits it transferred at its old rate, takes its new fair-share rate,
+//! and pushes a *fresh* finish marker (`EventKind::FlowWake`) into the
+//! future-event queue; the previous marker stays queued but is dropped
+//! on pop because its sequence number no longer matches the flow's live
+//! marker — the same stale-interrupt idiom the paper's entities use for
+//! internal events (Figs 7/10), lifted into the kernel. When a live
+//! marker fires, the flow *is* complete by definition (no floating-point
+//! remaining-bits comparison), and its payload is delivered as an
+//! ordinary external event after the model's fixed latency.
+//!
+//! ## Determinism
+//!
+//! Everything here is a pure function of the event sequence: flows are
+//! identified by a per-simulation counter, recomputation iterates the
+//! table in flow-id order (a `BTreeMap`), and simultaneous finishes are
+//! ordered by marker sequence number. Flow-model runs are therefore
+//! byte-identical at any sweep `--jobs` value, exactly like scalar runs.
+//! Scalar models never touch this machinery, so `"baud"` and
+//! `"instantaneous"` scenarios keep their pre-flow event streams.
+
+mod flow_link;
+mod flow_table;
+
+pub use flow_link::FlowLink;
+pub use flow_table::FlowTable;

@@ -113,9 +113,10 @@ mod tests {
             };
             // Minimal ctx plumbing via a throwaway simulation.
             let mut queue = crate::des::EventQueue::new();
+            let mut flows = crate::network::FlowTable::new();
             let mut stop = false;
             let names = vec!["s".to_string()];
-            let mut ctx = test_ctx(&mut queue, &mut stop, &names);
+            let mut ctx = test_ctx(&mut queue, &mut flows, &mut stop, &names);
             stats.on_event(&mut ctx, ev);
         }
         let summary = user_summary(&stats);
@@ -124,9 +125,10 @@ mod tests {
 
     fn test_ctx<'a>(
         queue: &'a mut crate::des::EventQueue<crate::gridsim::Msg>,
+        flows: &'a mut crate::network::FlowTable<crate::gridsim::Msg>,
         stop: &'a mut bool,
         names: &'a [String],
     ) -> crate::des::Ctx<'a, crate::gridsim::Msg> {
-        crate::des::entity::test_ctx(0.0, 0, queue, stop, names)
+        crate::des::entity::test_ctx(0.0, 0, queue, flows, stop, names)
     }
 }

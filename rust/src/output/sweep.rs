@@ -58,7 +58,7 @@ use std::fmt::Write as _;
 
 /// Axis-coordinate columns shared by both writers (minus the replication
 /// column, which the writers append in their own shape).
-const AXIS_COLS: [&str; 10] = [
+const AXIS_COLS: [&str; 11] = [
     "cell",
     "resources",
     "policy",
@@ -69,6 +69,7 @@ const AXIS_COLS: [&str; 10] = [
     "heavy_fraction",
     "trace_select",
     "mix_weights",
+    "link_capacity",
 ];
 
 fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> {
@@ -86,6 +87,7 @@ fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> 
         cell.heavy_fraction.map(trim_float).unwrap_or_else(|| "base".into()),
         spec.selector_label(cell),
         spec.mix_weights_label(cell),
+        cell.link_capacity.map(trim_float).unwrap_or_else(|| "base".into()),
     ]
 }
 
@@ -472,7 +474,7 @@ mod tests {
         let text = csv.to_string();
         assert!(text.starts_with(
             "cell,resources,policy,users,deadline,budget,arrival_mean,heavy_fraction,\
-             trace_select,mix_weights,"
+             trace_select,mix_weights,link_capacity,"
         ));
         assert!(text.contains(",all,cost,"), "unswept axes echo base values: {text}");
         assert!(
@@ -495,10 +497,10 @@ mod tests {
         // With one replication every stderr is exactly 0.
         for line in text.lines().skip(1) {
             let fields: Vec<&str> = line.split(',').collect();
-            assert_eq!(fields[10], "1", "replications column");
-            assert_eq!(fields[12], "0", "stderr with 1 rep");
-            assert_eq!(fields[14], "0", "stderr with 1 rep");
-            assert_eq!(fields[16], "0", "stderr with 1 rep");
+            assert_eq!(fields[11], "1", "replications column");
+            assert_eq!(fields[13], "0", "stderr with 1 rep");
+            assert_eq!(fields[15], "0", "stderr with 1 rep");
+            assert_eq!(fields[17], "0", "stderr with 1 rep");
         }
     }
 
@@ -599,16 +601,16 @@ mod tests {
         assert_eq!(csv.len(), 1, "3 replications collapse into one row");
         let text = csv.to_string();
         let fields: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
-        assert_eq!(fields[10], "3", "replications column");
+        assert_eq!(fields[11], "3", "replications column");
         // Mean time used must match the hand-computed mean of the cells.
         let mut expect = Summary::new();
         for o in &results.outcomes {
             expect.add(o.report.mean_finish_time());
         }
-        assert_eq!(fields[13], trim_float(expect.mean()), "mean_time_used");
-        assert_eq!(fields[14], trim_float(expect.std_err()), "stderr_time_used");
+        assert_eq!(fields[14], trim_float(expect.mean()), "mean_time_used");
+        assert_eq!(fields[15], trim_float(expect.std_err()), "stderr_time_used");
         // Engine events are summed across replications.
         let events: u64 = results.outcomes.iter().map(|o| o.report.events).sum();
-        assert_eq!(fields[18], events.to_string());
+        assert_eq!(fields[19], events.to_string());
     }
 }

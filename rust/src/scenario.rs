@@ -59,6 +59,21 @@ pub enum NetworkSpec {
     Instantaneous,
     /// Baud-rate delays with optional uniform latency.
     Baud { default_rate: f64, latency: f64 },
+    /// Flow-level shared bandwidth (see [`crate::network::FlowLink`]):
+    /// concurrent transfers fair-share access-link capacity and finish
+    /// events are rescheduled on every flow start/finish.
+    Flow {
+        /// Access-link capacity (bits per time unit) for every entity
+        /// without an explicit override.
+        default_capacity: f64,
+        /// Fixed per-message latency added after each transfer.
+        latency: f64,
+        /// Per-entity capacity overrides, keyed by entity *name* (resource
+        /// names, `U0`/`Broker_0`, `GIS`, …); resolved to ids at session
+        /// build time. A `Vec` (not a map) so the spec stays `PartialEq`
+        /// with a deterministic `Debug` for sweep checkpoint digests.
+        capacities: Vec<(String, f64)>,
+    },
 }
 
 /// One user of the grid: the experiment plus optional overrides of the
@@ -76,11 +91,16 @@ pub struct UserSpec {
     pub broker: Option<BrokerConfig>,
     /// Delay before the experiment is submitted (activity model).
     pub submit_delay: f64,
+    /// Network link rate override for this user's site (applied to both
+    /// the user and its broker entity): baud rate under
+    /// [`NetworkSpec::Baud`], access-link capacity under
+    /// [`NetworkSpec::Flow`]. `None` falls back to the network default.
+    pub link_rate: Option<f64>,
 }
 
 impl UserSpec {
     pub fn new(experiment: ExperimentSpec) -> UserSpec {
-        UserSpec { experiment, advisor: None, broker: None, submit_delay: 0.0 }
+        UserSpec { experiment, advisor: None, broker: None, submit_delay: 0.0, link_rate: None }
     }
 
     /// Override the advisor engine for this user's broker.
@@ -99,6 +119,14 @@ impl UserSpec {
     pub fn submit_delay(mut self, delay: f64) -> UserSpec {
         assert!(delay >= 0.0, "submit delay must be >= 0");
         self.submit_delay = delay;
+        self
+    }
+
+    /// Override this user's site link rate (baud rate or flow capacity,
+    /// depending on the scenario's [`NetworkSpec`]).
+    pub fn link_rate(mut self, rate: f64) -> UserSpec {
+        assert!(rate.is_finite() && rate > 0.0, "link rate must be finite and positive");
+        self.link_rate = Some(rate);
         self
     }
 

@@ -33,6 +33,7 @@ use crate::gridsim::{
     BaudLink, GridInformationService, GridResource, GridSimShutdown, GridStatistics, Msg,
     ResourceCalendar,
 };
+use crate::network::FlowLink;
 use crate::runtime::{Advisor, AdvisorInput, NativeAdvisor, XlaAdvisor};
 use crate::scenario::{AdvisorKind, NetworkSpec, Scenario, ScenarioReport};
 use std::sync::{Arc, Mutex};
@@ -240,18 +241,6 @@ impl GridSession {
             max_time: scenario.max_time,
             max_events: u64::MAX,
         });
-        match &scenario.network {
-            NetworkSpec::Instantaneous => {
-                sim.set_link_model(Box::new(BaudLink::instantaneous()));
-            }
-            NetworkSpec::Baud { default_rate, latency } => {
-                sim.set_link_model(Box::new(
-                    BaudLink::new()
-                        .with_default_rate(*default_rate)
-                        .with_default_latency(*latency),
-                ));
-            }
-        }
 
         let gis = sim.add(Box::new(GridInformationService::new("GIS")));
         let stats = sim.add(Box::new(GridStatistics::new("GridStatistics")));
@@ -302,7 +291,76 @@ impl GridSession {
             user_ids.push(sim.add(Box::new(entity)));
         }
 
+        // The link model is installed after entity assembly so per-entity
+        // overrides (named flow capacities, per-user link rates) resolve
+        // against the final entity table; nothing consults the model before
+        // the first dispatch, so late installation cannot change results.
+        Self::install_link_model(&mut sim, scenario, &user_ids, &broker_ids)?;
+
         Ok(GridSession { sim, user_ids, broker_ids })
+    }
+
+    /// Build the scenario's link model and install it: `BaudLink` for the
+    /// scalar specs, [`FlowLink`] for [`NetworkSpec::Flow`]. Per-user
+    /// [`link_rate`](crate::scenario::UserSpec::link_rate) overrides apply
+    /// to both the user entity and its broker (the user's "site"); flow
+    /// capacity overrides are resolved from entity names here.
+    fn install_link_model(
+        sim: &mut Simulation<Msg>,
+        scenario: &Scenario,
+        user_ids: &[EntityId],
+        broker_ids: &[EntityId],
+    ) -> anyhow::Result<()> {
+        let site_rates = |users: &[crate::scenario::UserSpec]| {
+            users
+                .iter()
+                .enumerate()
+                .filter_map(|(i, u)| u.link_rate.map(|r| (user_ids[i], broker_ids[i], r)))
+                .collect::<Vec<_>>()
+        };
+        match &scenario.network {
+            NetworkSpec::Instantaneous => {
+                // Per-user rates still apply: that user's site link is
+                // finite while the rest of the grid stays zero-delay.
+                let mut link = BaudLink::instantaneous();
+                for (user, broker, rate) in site_rates(&scenario.users) {
+                    link.set_rate(user, rate);
+                    link.set_rate(broker, rate);
+                }
+                sim.set_link_model(Box::new(link));
+            }
+            NetworkSpec::Baud { default_rate, latency } => {
+                let mut link = BaudLink::new()
+                    .with_default_rate(*default_rate)
+                    .with_default_latency(*latency);
+                for (user, broker, rate) in site_rates(&scenario.users) {
+                    link.set_rate(user, rate);
+                    link.set_rate(broker, rate);
+                }
+                sim.set_link_model(Box::new(link));
+            }
+            NetworkSpec::Flow { default_capacity, latency, capacities } => {
+                let mut link = FlowLink::new(*default_capacity, *latency);
+                for (name, cap) in capacities {
+                    let id = sim.lookup(name).ok_or_else(|| {
+                        let known = (0..sim.entity_count())
+                            .map(|e| sim.name_of(e))
+                            .collect::<Vec<_>>()
+                            .join(", ");
+                        anyhow::anyhow!(
+                            "network capacities: unknown entity {name:?} (known entities: {known})"
+                        )
+                    })?;
+                    link.set_capacity(id, *cap);
+                }
+                for (user, broker, rate) in site_rates(&scenario.users) {
+                    link.set_capacity(user, rate);
+                    link.set_capacity(broker, rate);
+                }
+                sim.set_link_model(Box::new(link));
+            }
+        }
+        Ok(())
     }
 
     /// Run the start phase (idempotent; stepping calls it implicitly).

@@ -39,7 +39,7 @@ pub use engine::{
 };
 
 use crate::broker::Optimization;
-use crate::scenario::{Scenario, UserSpec};
+use crate::scenario::{NetworkSpec, Scenario, UserSpec};
 use crate::workload::TraceSelector;
 use anyhow::{bail, Result};
 
@@ -83,6 +83,10 @@ pub struct SweepSpec {
     /// count matches the vector's length. Requires at least one matching
     /// mix in the base.
     pub mix_weights: Vec<Vec<f64>>,
+    /// Default link-capacity override (bits per time unit), applied to the
+    /// cell's [`NetworkSpec::Flow`] network (named per-entity capacity
+    /// overrides are preserved). Requires a flow network in the base.
+    pub link_capacities: Vec<f64>,
     /// Independent replications per grid point (≥ 1). Replication `r` runs
     /// with [`replication_seed`]`(base.seed, r)`.
     pub replications: usize,
@@ -102,6 +106,7 @@ impl SweepSpec {
             heavy_fractions: Vec::new(),
             trace_selectors: Vec::new(),
             mix_weights: Vec::new(),
+            link_capacities: Vec::new(),
             replications: 1,
         }
     }
@@ -160,6 +165,12 @@ impl SweepSpec {
         self
     }
 
+    /// Axis builder: default link capacities (flow networks).
+    pub fn link_capacities(mut self, values: Vec<f64>) -> SweepSpec {
+        self.link_capacities = values;
+        self
+    }
+
     /// Axis builder: replications per grid point.
     pub fn replications(mut self, n: usize) -> SweepSpec {
         self.replications = n;
@@ -180,6 +191,7 @@ impl SweepSpec {
             * axis_len(&self.heavy_fractions)
             * axis_len(&self.trace_selectors)
             * axis_len(&self.mix_weights)
+            * axis_len(&self.link_capacities)
             * self.replications.max(1)
     }
 
@@ -288,14 +300,26 @@ impl SweepSpec {
                 }
             }
         }
+        if !self.link_capacities.is_empty() {
+            if let Some(c) = self.link_capacities.iter().find(|&&c| !c.is_finite() || c <= 0.0) {
+                bail!("sweep: link capacity must be finite and > 0, got {c}");
+            }
+            if !matches!(self.base.network, NetworkSpec::Flow { .. }) {
+                bail!(
+                    "sweep: \"link_capacities\" needs \"network\": {{\"model\": \"flow\"}} \
+                     in the base scenario (only flow networks have link capacities)"
+                );
+            }
+        }
         Ok(())
     }
 
     /// Expand the grid into cells, row-major over the axes in the fixed
     /// order *subset → policy → users → deadline → budget → arrival mean →
-    /// heavy fraction → trace selector → mix weights → replication*
-    /// (replication varies fastest). The order is part of the output
-    /// contract: cell index == CSV row block, independent of execution.
+    /// heavy fraction → trace selector → mix weights → link capacity →
+    /// replication* (replication varies fastest). The order is part of the
+    /// output contract: cell index == CSV row block, independent of
+    /// execution.
     pub fn cells(&self) -> Vec<SweepCell> {
         fn axis<T: Copy>(values: &[T]) -> Vec<Option<T>> {
             if values.is_empty() {
@@ -323,24 +347,27 @@ impl SweepSpec {
                                 for &heavy_fraction in &axis(&self.heavy_fractions) {
                                     for &trace_selector in &index_axis(&self.trace_selectors) {
                                         for &mix_weights in &index_axis(&self.mix_weights) {
-                                            for replication in 0..self.replications.max(1) {
-                                                cells.push(SweepCell {
-                                                    index: cells.len(),
-                                                    subset,
-                                                    policy,
-                                                    users,
-                                                    deadline,
-                                                    budget,
-                                                    mean_interarrival,
-                                                    heavy_fraction,
-                                                    trace_selector,
-                                                    mix_weights,
-                                                    replication,
-                                                    seed: replication_seed(
-                                                        self.base.seed,
+                                            for &link_capacity in &axis(&self.link_capacities) {
+                                                for replication in 0..self.replications.max(1) {
+                                                    cells.push(SweepCell {
+                                                        index: cells.len(),
+                                                        subset,
+                                                        policy,
+                                                        users,
+                                                        deadline,
+                                                        budget,
+                                                        mean_interarrival,
+                                                        heavy_fraction,
+                                                        trace_selector,
+                                                        mix_weights,
+                                                        link_capacity,
                                                         replication,
-                                                    ),
-                                                });
+                                                        seed: replication_seed(
+                                                            self.base.seed,
+                                                            replication,
+                                                        ),
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -377,6 +404,12 @@ impl SweepSpec {
             scenario.users = (0..n)
                 .map(|i| self.base.users[i % self.base.users.len()].clone())
                 .collect();
+        }
+        if let Some(c) = cell.link_capacity {
+            match &mut scenario.network {
+                NetworkSpec::Flow { default_capacity, .. } => *default_capacity = c,
+                _ => unreachable!("validate() requires a flow network for link_capacities"),
+            }
         }
         for user in &mut scenario.users {
             self.apply_user_overrides(user, cell);
@@ -465,6 +498,8 @@ pub struct SweepCell {
     pub trace_selector: Option<usize>,
     /// Index into [`SweepSpec::mix_weights`] (mix workloads).
     pub mix_weights: Option<usize>,
+    /// Default link-capacity override (flow networks).
+    pub link_capacity: Option<f64>,
     /// Replication number, `0..replications`.
     pub replication: usize,
     /// The RNG seed this cell runs with (a pure function of the base seed
@@ -703,6 +738,33 @@ mod tests {
         assert!(err.unwrap_err().to_string().contains("3 parts"), "arity mismatch");
         let err = SweepSpec::over(traced).mix_weights(vec![vec![]]).validate().unwrap_err();
         assert!(err.to_string().contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn link_capacity_axis_overrides_flow_network() {
+        let mut flow_base = base();
+        flow_base.network = NetworkSpec::Flow {
+            default_capacity: 9600.0,
+            latency: 0.0,
+            capacities: vec![("R0".into(), 1200.0)],
+        };
+        let spec = SweepSpec::over(flow_base).link_capacities(vec![4800.0, 19200.0]);
+        spec.validate().unwrap();
+        assert_eq!(spec.cell_count(), 2);
+        let cells = spec.cells();
+        assert_eq!(cells[0].link_capacity, Some(4800.0));
+        let s = spec.scenario_for(&cells[1]);
+        let NetworkSpec::Flow { default_capacity, capacities, .. } = &s.network else {
+            panic!("flow network expected")
+        };
+        assert_eq!(*default_capacity, 19200.0);
+        assert_eq!(capacities.len(), 1, "named per-entity overrides preserved");
+
+        // A non-flow base rejects the axis; so do non-positive capacities.
+        let err = SweepSpec::over(base()).link_capacities(vec![100.0]).validate().unwrap_err();
+        assert!(err.to_string().contains("flow"), "{err}");
+        let err = SweepSpec::over(base()).link_capacities(vec![0.0]).validate().unwrap_err();
+        assert!(err.to_string().contains("> 0"), "{err}");
     }
 
     #[test]
