@@ -1,0 +1,154 @@
+//! The million-job hot-path campaign bench (ROADMAP north star: million-job
+//! replay "as fast as the hardware allows").
+//!
+//! Two sections, both feeding the committed `BENCH_<date>.json` trajectory:
+//!
+//! 1. **Replay** — a synthetic SWF-style trace (generated deterministically
+//!    here, never committed) of `BENCH_MILLION_JOBS` jobs (default 1,000,000)
+//!    split across `BENCH_MILLION_USERS` users (default 50, clamped to the
+//!    paper-scale 10–100 band), run through the full stack: users stream
+//!    arrivals, brokers schedule, resources execute, results return. Reports
+//!    `million_replay_events_per_sec`, wall seconds, and peak RSS.
+//! 2. **Ping storm** — a pure-kernel microbench: a ring of entities
+//!    bouncing payload-free events through the future-event queue with no
+//!    broker logic at all, isolating queue push/pop + dispatch cost.
+//!    Reports `kernel_pingstorm_events_per_sec`.
+//!
+//! CI's bench-smoke job runs this with `BENCH_MILLION_JOBS=50000` and gates
+//! on >2x events/sec regressions via `tools/bench_gate.py`.
+
+mod harness;
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::config::testbed::wwg_testbed;
+use gridsim::des::{Ctx, Entity, Event, SimConfig, Simulation};
+use gridsim::scenario::Scenario;
+use gridsim::session::GridSession;
+use gridsim::workload::{TraceJob, TraceSelector, WorkloadSpec};
+use harness::Recorder;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Deterministic synthetic SWF-style log: `jobs` entries spread over `users`
+/// users with staggered submit times and mildly varied lengths/file sizes.
+/// Pure arithmetic on the index — same log every run, nothing committed.
+fn synthetic_trace(jobs: usize, users: usize) -> Arc<[TraceJob]> {
+    let log: Vec<TraceJob> = (0..jobs)
+        .map(|i| {
+            let mut j = TraceJob::new(
+                (i % 9973) as f64 * 0.25,
+                4_000.0 + (i % 17) as f64 * 250.0,
+                1_000,
+                500,
+            );
+            j.user = Some((i % users) as i64);
+            j
+        })
+        .collect();
+    log.into()
+}
+
+fn replay_section(rec: &mut Recorder) {
+    let jobs = env_usize("BENCH_MILLION_JOBS", 1_000_000);
+    let users = env_usize("BENCH_MILLION_USERS", 50).clamp(10, 100);
+    println!("-- replay: {jobs} jobs across {users} users --");
+    let shared = synthetic_trace(jobs, users);
+
+    let mut builder = Scenario::builder().resources(wwg_testbed()).seed(41);
+    for u in 0..users as i64 {
+        builder = builder.user(
+            ExperimentSpec::new(WorkloadSpec::trace_selected_shared(
+                shared.clone(),
+                TraceSelector::user(u),
+            ))
+            .deadline(1e9)
+            .budget(1e15)
+            .optimization(Optimization::Cost),
+        );
+    }
+    let scenario = builder.build();
+
+    let t0 = Instant::now();
+    let report = GridSession::new(&scenario).run_to_completion();
+    let wall = t0.elapsed().as_secs_f64();
+
+    rec.metric("million_replay_jobs", jobs as f64, "jobs");
+    rec.metric("million_replay_wall", wall, "s");
+    rec.metric(
+        "million_replay_events_per_sec",
+        report.events as f64 / wall.max(1e-9),
+        "events/s",
+    );
+    rec.maybe_metric("million_replay_peak_rss", harness::peak_rss_bytes(), "B");
+}
+
+/// One node of the ping-storm ring: keeps `fanout` events in flight toward
+/// the next entity forever; the kernel's `max_events` limit ends the run.
+struct Storm {
+    name: String,
+    next: usize,
+    fanout: u64,
+}
+
+impl Entity<u32> for Storm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn on_start(&mut self, ctx: &mut Ctx<u32>) {
+        for k in 0..self.fanout {
+            ctx.send_delayed(self.next, 0.5 + k as f64 * 0.25, 0, None);
+        }
+    }
+    fn on_event(&mut self, ctx: &mut Ctx<u32>, _ev: Event<u32>) {
+        ctx.send_delayed(self.next, 1.0, 0, None);
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+fn pingstorm_section(rec: &mut Recorder) {
+    let events = env_usize("BENCH_PINGSTORM_EVENTS", 1_000_000) as u64;
+    let entities = 64;
+    let fanout = 8;
+    println!("-- ping storm: {events} events, {entities}-entity ring, fanout {fanout} --");
+    let mut sim: Simulation<u32> =
+        Simulation::with_config(SimConfig { max_time: f64::INFINITY, max_events: events });
+    for i in 0..entities {
+        sim.add(Box::new(Storm {
+            name: format!("S{i}"),
+            next: (i + 1) % entities,
+            fanout,
+        }));
+    }
+    let t0 = Instant::now();
+    sim.run();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(sim.events_processed(), events, "storm must hit the event cap");
+
+    rec.metric("kernel_pingstorm_events", events as f64, "events");
+    rec.metric("kernel_pingstorm_wall", wall, "s");
+    rec.metric(
+        "kernel_pingstorm_events_per_sec",
+        events as f64 / wall.max(1e-9),
+        "events/s",
+    );
+}
+
+fn main() {
+    println!("== bench_million: kernel hot-path campaign ==");
+    let mut rec = Recorder::new("bench_million");
+    pingstorm_section(&mut rec);
+    replay_section(&mut rec);
+    match rec.write_snapshot(&harness::snapshot_dir()) {
+        Ok(path) => println!("snapshot written: {path}"),
+        Err(e) => eprintln!("snapshot not written: {e}"),
+    }
+}

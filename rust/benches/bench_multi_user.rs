@@ -241,7 +241,7 @@ fn main() {
     );
     println!("shared-trace determinism: serial and parallel CSV byte-identical");
 
-    match rec.write_snapshot(concat!(env!("CARGO_MANIFEST_DIR"), "/..")) {
+    match rec.write_snapshot(&harness::snapshot_dir()) {
         Ok(path) => println!("snapshot written: {path}"),
         Err(e) => eprintln!("snapshot not written: {e}"),
     }

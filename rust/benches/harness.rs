@@ -1,5 +1,6 @@
 //! Minimal shared bench harness (no criterion in the image): warmup +
-//! timed iterations with mean/min/max reporting.
+//! timed iterations with mean/min/max reporting, plus a snapshot recorder
+//! that maintains the committed `BENCH_<date>.json` perf trajectory.
 
 use std::time::Instant;
 
@@ -33,13 +34,36 @@ pub fn metric(name: &str, value: f64, unit: &str) {
     println!("metric {name:<43} {value:>14.1} {unit}");
 }
 
-/// Collects metrics alongside the stdout report and writes them as a
+/// Directory the snapshot is written to: `$BENCH_SNAPSHOT_DIR` when set
+/// (CI points this at a scratch dir), otherwise the repository root.
+#[allow(dead_code)]
+pub fn snapshot_dir() -> String {
+    std::env::var("BENCH_SNAPSHOT_DIR")
+        .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/..").to_string())
+}
+
+/// Collects metrics alongside the stdout report and merges them into the
 /// dated machine-readable snapshot (`BENCH_<YYYY-MM-DD>.json`), so bench
 /// numbers can be committed and diffed across revisions.
+///
+/// Snapshot shape (one file per date, shared by every bench binary):
+///
+/// ```json
+/// {
+///   "date": "2026-08-07",
+///   "rev": "b91366d",
+///   "cargo": "cargo 1.79.0",
+///   "benches": { "bench_million": { "metrics": [ {"name", "value", "unit"} ] } }
+/// }
+/// ```
+///
+/// Guarantees: re-running one bench never clobbers another bench's entries
+/// in the same-date file, and an unmeasured (`null`) value never replaces a
+/// previously measured one — the trajectory only moves from null to real.
 #[allow(dead_code)]
 pub struct Recorder {
     bench: String,
-    metrics: Vec<(String, f64, String)>,
+    metrics: Vec<(String, Option<f64>, String)>,
 }
 
 #[allow(dead_code)]
@@ -52,36 +76,149 @@ impl Recorder {
     /// Print via [`metric`] and keep the value for the snapshot.
     pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
         metric(name, value, unit);
-        self.metrics.push((name.into(), value, unit.into()));
+        self.metrics.push((name.into(), Some(value), unit.into()));
     }
 
-    /// Write `BENCH_<date>.json` into `dir`; returns the path written.
+    /// Record a metric that may be unavailable in this environment (e.g.
+    /// peak RSS off-Linux). `None` is written as JSON `null` — unless the
+    /// snapshot already carries a measured value for it, which is kept.
+    pub fn maybe_metric(&mut self, name: &str, value: Option<f64>, unit: &str) {
+        match value {
+            Some(v) => self.metric(name, v, unit),
+            None => {
+                println!("metric {name:<43} {:>14} {unit}", "null");
+                self.metrics.push((name.into(), None, unit.into()));
+            }
+        }
+    }
+
+    /// Merge this run into `dir/BENCH_<date>.json`; returns the path
+    /// written. Existing same-date entries for other benches are preserved;
+    /// see the type docs for the never-null-over-measured rule.
     pub fn write_snapshot(&self, dir: &str) -> std::io::Result<String> {
         use gridsim::util::json::{self, Value};
         let date = today_utc();
-        let record = Value::obj(vec![
-            ("bench", Value::str(self.bench.clone())),
-            ("date", Value::str(date.clone())),
-            (
-                "metrics",
-                Value::Arr(
-                    self.metrics
+        let path = format!("{dir}/BENCH_{date}.json");
+
+        let existing = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| json::parse(&text).ok())
+            .map(normalize_snapshot)
+            .unwrap_or_default();
+
+        // Previously measured values for this bench (the null guard).
+        let prior: Vec<(String, Value)> = existing
+            .iter()
+            .find(|(b, _)| b == &self.bench)
+            .and_then(|(_, v)| v.get("metrics"))
+            .and_then(Value::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|m| {
+                        let name = m.get("name")?.as_str()?.to_string();
+                        let value = m.get("value")?.clone();
+                        Some((name, value))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let metrics: Vec<Value> = self
+            .metrics
+            .iter()
+            .map(|(n, v, u)| {
+                let value = match v {
+                    Some(x) => Value::Num(*x),
+                    // Keep a measured prior value instead of nulling it.
+                    None => prior
                         .iter()
-                        .map(|(n, v, u)| {
-                            Value::obj(vec![
-                                ("name", Value::str(n.clone())),
-                                ("value", (*v).into()),
-                                ("unit", Value::str(u.clone())),
-                            ])
-                        })
-                        .collect(),
-                ),
+                        .find(|(pn, pv)| pn == n && pv.as_f64().is_some())
+                        .map(|(_, pv)| pv.clone())
+                        .unwrap_or(Value::Null),
+                };
+                Value::obj(vec![
+                    ("name", Value::str(n.clone())),
+                    ("value", value),
+                    ("unit", Value::str(u.clone())),
+                ])
+            })
+            .collect();
+
+        let mut benches: Vec<(String, Value)> = existing;
+        let entry = Value::obj(vec![("metrics", Value::Arr(metrics))]);
+        match benches.iter_mut().find(|(b, _)| b == &self.bench) {
+            Some((_, v)) => *v = entry,
+            None => benches.push((self.bench.clone(), entry)),
+        }
+
+        let record = Value::obj(vec![
+            ("date", Value::str(date.clone())),
+            ("rev", Value::str(git_rev())),
+            ("cargo", Value::str(cargo_version())),
+            (
+                "benches",
+                Value::Obj(benches),
             ),
         ]);
-        let path = format!("{dir}/BENCH_{date}.json");
         std::fs::write(&path, json::to_string_pretty(&record) + "\n")?;
         Ok(path)
     }
+}
+
+/// Existing snapshot → `(bench name, entry)` list. Handles both the merged
+/// shape (`benches` object) and the legacy flat one-bench shape
+/// (`{"bench": ..., "metrics": [...]}`), so the first run after the format
+/// change upgrades old files instead of losing them.
+#[allow(dead_code)]
+fn normalize_snapshot(v: gridsim::util::json::Value) -> Vec<(String, gridsim::util::json::Value)> {
+    use gridsim::util::json::Value;
+    if let Some(Value::Obj(benches)) = v.get("benches") {
+        return benches.clone();
+    }
+    if let (Some(bench), Some(metrics)) = (v.get("bench").and_then(Value::as_str), v.get("metrics"))
+    {
+        let mut fields = vec![("metrics".to_string(), metrics.clone())];
+        if let Some(note) = v.get("note") {
+            fields.push(("note".to_string(), note.clone()));
+        }
+        return vec![(bench.to_string(), Value::Obj(fields))];
+    }
+    Vec::new()
+}
+
+/// Short git revision of the working tree, or `"unknown"` outside a repo.
+#[allow(dead_code)]
+fn git_rev() -> String {
+    run_for_line("git", &["rev-parse", "--short", "HEAD"])
+}
+
+/// `cargo --version` one-liner, or `"unknown"`.
+#[allow(dead_code)]
+fn cargo_version() -> String {
+    run_for_line("cargo", &["--version"])
+}
+
+#[allow(dead_code)]
+fn run_for_line(cmd: &str, args: &[&str]) -> String {
+    std::process::Command::new(cmd)
+        .args(args)
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Peak resident set size of this process in bytes (Linux `VmHWM`), `None`
+/// on other platforms or unreadable `/proc`.
+#[allow(dead_code)]
+pub fn peak_rss_bytes() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024.0)
 }
 
 /// Civil date (UTC) from the system clock, without a date dependency

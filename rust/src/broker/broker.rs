@@ -27,6 +27,7 @@ use super::resource_view::BrokerResource;
 use super::trace::{TracePoint, TraceRecorder};
 use crate::gridsim::gridlet::{Gridlet, GridletStatus};
 use crate::gridsim::messages::Msg;
+use crate::gridsim::pool;
 use crate::gridsim::tags;
 use crate::des::{Ctx, Entity, EntityId, Event};
 use std::collections::VecDeque;
@@ -327,7 +328,7 @@ impl Broker {
                 v.on_dispatched(&g, now);
                 committed += next_cost;
                 let dst = v.info.id;
-                let msg = Msg::Gridlet(Box::new(g));
+                let msg = Msg::Gridlet(pool::boxed(g));
                 let bytes = msg.wire_bytes(true);
                 ctx.send(dst, tags::GRIDLET_SUBMIT, Some(msg), bytes);
             }
@@ -407,7 +408,7 @@ impl Broker {
         self.views
             .iter()
             .map(|v| ResourceOutcome {
-                name: v.info.name.clone(),
+                name: v.info.name.to_string(),
                 gridlets_completed: v.completed,
                 budget_spent: v.spent,
             })
@@ -461,7 +462,7 @@ impl Broker {
                 .views
                 .iter()
                 .map(|v| ResourceLoad {
-                    name: v.info.name.clone(),
+                    name: v.info.name.to_string(),
                     committed: v.committed(),
                     completed: v.completed,
                     spent: v.spent,
@@ -494,7 +495,7 @@ impl Broker {
         for v in &self.views {
             self.trace.record_final(TracePoint {
                 time: now,
-                resource: v.info.name.clone(),
+                resource: v.info.name.to_string(),
                 completed: v.completed,
                 committed: v.committed(),
                 spent: v.spent,
@@ -550,9 +551,9 @@ impl Entity<Msg> for Broker {
                     State::Done => {}
                     // Arrival raced the experiment message on the network:
                     // park it; the EXPERIMENT handler merges the pool.
-                    State::Idle => self.unassigned.push_back(*g),
+                    State::Idle => self.unassigned.push_back(pool::unbox(g)),
                     _ => {
-                        self.unassigned.push_back(*g);
+                        self.unassigned.push_back(pool::unbox(g));
                         // Extend the plan mid-flight: re-advise promptly
                         // with the new work (Draining brokers no longer
                         // dispatch — the job just counts as unfinished).
@@ -611,10 +612,10 @@ impl Entity<Msg> for Broker {
                 if self.state == State::Done {
                     return; // straggler after an empty-grid finish
                 }
-                self.on_gridlet_return(ctx, *g);
+                self.on_gridlet_return(ctx, pool::unbox(g));
             }
             tags::GRIDLET_CANCEL_REPLY => match ev.take_data() {
-                Msg::Gridlet(g) => self.on_gridlet_return(ctx, *g),
+                Msg::Gridlet(g) => self.on_gridlet_return(ctx, pool::unbox(g)),
                 Msg::GridletId(_) => {} // already finished; return in flight
                 other => panic!("unexpected cancel reply {other:?}"),
             },

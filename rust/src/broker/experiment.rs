@@ -253,7 +253,7 @@ mod tests {
     fn info(id: usize, pes: usize, mips: f64, price: f64) -> ResourceInfo {
         ResourceInfo {
             id,
-            name: format!("R{id}"),
+            name: format!("R{id}").into(),
             num_pe: pes,
             mips_per_pe: mips,
             cost_per_pe_time: price,

@@ -89,7 +89,7 @@ pub(crate) mod test_support {
             .map(|(i, &(mips, pes, price))| {
                 BrokerResource::new(ResourceInfo {
                     id: i,
-                    name: format!("R{i}"),
+                    name: format!("R{i}").into(),
                     num_pe: pes,
                     mips_per_pe: mips,
                     cost_per_pe_time: price,

@@ -13,6 +13,7 @@
 use super::experiment::{Experiment, ExperimentResult, ExperimentSpec};
 use crate::gridsim::gridlet::Gridlet;
 use crate::gridsim::messages::Msg;
+use crate::gridsim::pool;
 use crate::gridsim::random::GridSimRandom;
 use crate::gridsim::statistics::StatRecord;
 use crate::gridsim::tags;
@@ -140,7 +141,7 @@ impl Entity<Msg> for UserEntity {
                     ] {
                         let rec = StatRecord {
                             time: ctx.now(),
-                            category: format!("{}.{cat}", self.name),
+                            category: format!("{}.{cat}", self.name).into(),
                             label: self.name.clone(),
                             value,
                         };
@@ -159,7 +160,7 @@ impl Entity<Msg> for UserEntity {
                 // one after it. The experiment may already be over (pending
                 // cleared) — the at-most-one stale tick is a no-op.
                 if let Some((_, g)) = self.pending.pop_front() {
-                    let msg = Msg::Gridlet(Box::new(g));
+                    let msg = Msg::Gridlet(pool::boxed(g));
                     ctx.send(self.broker, tags::GRIDLET_ARRIVAL, Some(msg), ARRIVAL_BYTES);
                     if let Some(&(t, _)) = self.pending.front() {
                         ctx.schedule_self((t - ctx.now()).max(0.0), tags::USER_TICK, None);

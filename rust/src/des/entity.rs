@@ -4,6 +4,7 @@ use super::event::{Event, EventKind};
 use super::queue::EventQueue;
 use crate::network::FlowTable;
 use std::any::Any;
+use std::sync::Arc;
 
 pub use super::event::EntityId;
 
@@ -72,7 +73,7 @@ pub struct Ctx<'a, M> {
     pub(crate) link: &'a dyn LinkModel,
     pub(crate) flows: &'a mut FlowTable<M>,
     pub(crate) stop_requested: &'a mut bool,
-    pub(crate) names: &'a [String],
+    pub(crate) names: &'a [Arc<str>],
 }
 
 impl<'a, M> Ctx<'a, M> {
@@ -158,7 +159,7 @@ pub fn test_ctx<'a, M>(
     queue: &'a mut EventQueue<M>,
     flows: &'a mut FlowTable<M>,
     stop: &'a mut bool,
-    names: &'a [String],
+    names: &'a [Arc<str>],
 ) -> Ctx<'a, M> {
     static NO_DELAY: NoDelay = NoDelay;
     Ctx { now, me, queue, link: &NO_DELAY, flows, stop_requested: stop, names }

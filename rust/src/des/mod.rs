@@ -16,7 +16,7 @@
 //! | `sim_schedule(dst, d, t)` | [`Ctx::send_delayed`] / [`Ctx::send`]  |
 //! | `sim_hold(d)`             | [`Ctx::schedule_self`] + handler state |
 //! | `sim_wait(ev)`            | returning from `on_event`              |
-//! | `Sim_system` future queue | [`queue::EventQueue`] (binary heap)    |
+//! | `Sim_system` future queue | [`queue::EventQueue`] (flat 4-ary heap)|
 //!
 //! # The event loop and the stepped execution contract
 //!
@@ -31,7 +31,9 @@
 //! 2. [`Simulation::step`] / [`Simulation::run_until`] — dispatch the
 //!    earliest pending event (or every event due by a horizon). The clock
 //!    jumps from event to event; ties break FIFO by insertion sequence, so
-//!    dispatch order is fully deterministic.
+//!    dispatch order is fully deterministic. Both route through one
+//!    [`Simulation::step_before`] hot path, so a horizon check never pays
+//!    a separate peek-then-pop pass over the queue.
 //! 3. [`Simulation::run`] — `init`, then `step` until idle (queue drained,
 //!    an entity called [`Ctx::stop`], or a [`SimConfig`] limit hit), then
 //!    `finalize`.

@@ -1,44 +1,54 @@
-//! The future-event queue: a binary min-heap ordered by `(time, seq)`.
+//! The future-event queue: a flat 4-ary min-heap ordered by `(time, seq)`.
 //!
 //! SimJava's `Sim_system` keeps a "timestamp ordered queue of future events";
 //! ties are broken by insertion order so simultaneous events are FIFO. We get
 //! the same semantics from `(time, seq)` lexicographic ordering where `seq`
 //! is assigned at insertion.
+//!
+//! # Layout (the kernel hot path)
+//!
+//! The heap itself holds only 20-byte [`HeapKey`]s — `(time_bits, seq, slot)`
+//! — in a flat `Vec`, laid out as a 4-ary tree (children of `i` are
+//! `4i+1..=4i+4`). Event payloads live in a slot-recycled slab next to it, so
+//! sift operations move small `Copy` keys instead of full `Event<M>` values
+//! (~120 bytes under `gridsim::Msg`), and a 4-ary node's children share one
+//! cache line. Timestamps are compared as raw bit patterns: for the
+//! non-negative finite range enforced at [`push`](EventQueue::push), the IEEE
+//! 754 encoding of `f64` is monotone, so a `u64` compare is a total-order
+//! time compare (a `-0.0` timestamp is canonicalized to `+0.0` on insertion,
+//! which also keeps it tie-FIFO with `0.0`). Slab slots are pushed to a free
+//! list on pop, so a steady-state simulation stops allocating once the queue
+//! has reached its high-water mark.
+//!
+//! Pop order is part of the kernel's determinism contract: every replacement
+//! queue must preserve exact `(time, seq)` lexicographic pops, which
+//! `rust/tests/queue_equivalence.rs` pins differentially against a reference
+//! `BinaryHeap` implementation.
 
 use super::event::Event;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
-struct HeapEntry<M>(Event<M>);
+/// Heap arity. 4 keeps the tree half as deep as a binary heap and lets one
+/// node's children share a cache line (4 × 24-byte padded keys).
+const D: usize = 4;
 
-impl<M> PartialEq for HeapEntry<M> {
-    fn eq(&self, other: &Self) -> bool {
-        self.0.time == other.0.time && self.0.seq == other.0.seq
-    }
-}
-impl<M> Eq for HeapEntry<M> {}
-
-impl<M> PartialOrd for HeapEntry<M> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<M> Ord for HeapEntry<M> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse: BinaryHeap is a max-heap, we want the *earliest* event on
-        // top. NaN times are rejected at insertion so total_cmp is safe.
-        other
-            .0
-            .time
-            .total_cmp(&self.0.time)
-            .then_with(|| other.0.seq.cmp(&self.0.seq))
-    }
+/// Compact heap entry: canonical time bits, insertion sequence number, and
+/// the slab slot holding the event payload. Lexicographic derive order is
+/// `(time_bits, seq, slot)`; `seq` is unique, so `slot` never decides.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct HeapKey {
+    time_bits: u64,
+    seq: u64,
+    slot: u32,
 }
 
 /// Future-event queue.
 pub struct EventQueue<M> {
-    heap: BinaryHeap<HeapEntry<M>>,
+    /// Flat 4-ary min-heap of keys (see [`HeapKey`]).
+    keys: Vec<HeapKey>,
+    /// Event payloads, indexed by `HeapKey::slot`.
+    slab: Vec<Option<Event<M>>>,
+    /// Slab slots freed by pops, reused by pushes.
+    free: Vec<u32>,
     next_seq: u64,
 }
 
@@ -51,39 +61,130 @@ impl<M> Default for EventQueue<M> {
 impl<M> EventQueue<M> {
     /// An empty queue; sequence numbers start at 0.
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+        EventQueue { keys: Vec::new(), slab: Vec::new(), free: Vec::new(), next_seq: 0 }
     }
 
     /// Number of pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.keys.len()
     }
 
     /// True when no event is pending.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.keys.is_empty()
+    }
+
+    /// Out-of-line rejection of invalid timestamps, so the happy path of
+    /// [`push`](Self::push) carries a single predictable branch instead of
+    /// two formatting `assert!`s. NaN/negative times are always caller bugs.
+    #[cold]
+    #[inline(never)]
+    fn reject_time(time: f64) -> ! {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        panic!("event time must be >= 0, got {time}");
     }
 
     /// Insert an event; assigns its sequence number. Panics on NaN or
-    /// negative-time events — those are always bugs in the caller.
+    /// negative-time events — those are always bugs in the caller. A `-0.0`
+    /// timestamp is canonicalized to `+0.0`.
     pub fn push(&mut self, mut ev: Event<M>) -> u64 {
-        assert!(ev.time.is_finite(), "event time must be finite, got {}", ev.time);
-        assert!(ev.time >= 0.0, "event time must be >= 0, got {}", ev.time);
+        if !(ev.time >= 0.0 && ev.time.is_finite()) {
+            Self::reject_time(ev.time);
+        }
+        // `+ 0.0` maps -0.0 to +0.0 and is the identity elsewhere, so the
+        // bit-pattern compare below is a total order over stored times.
+        ev.time += 0.0;
         let seq = self.next_seq;
         self.next_seq += 1;
         ev.seq = seq;
-        self.heap.push(HeapEntry(ev));
+        let key = HeapKey { time_bits: ev.time.to_bits(), seq, slot: 0 };
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s as usize] = Some(ev);
+                s
+            }
+            None => {
+                let s = self.slab.len();
+                assert!(s < u32::MAX as usize, "event queue slab overflow");
+                self.slab.push(Some(ev));
+                s as u32
+            }
+        };
+        self.keys.push(HeapKey { slot, ..key });
+        self.sift_up(self.keys.len() - 1);
         seq
     }
 
     /// Pop the earliest event (smallest `(time, seq)`).
     pub fn pop(&mut self) -> Option<Event<M>> {
-        self.heap.pop().map(|e| e.0)
+        let root = *self.keys.first()?;
+        Some(self.remove_root(root))
+    }
+
+    /// Pop the earliest event only if its timestamp is ≤ `horizon`; a single
+    /// root comparison replaces the peek-then-pop double heap access of a
+    /// bounded event loop (see `Simulation::step_before`).
+    pub fn pop_before(&mut self, horizon: f64) -> Option<Event<M>> {
+        let root = *self.keys.first()?;
+        if f64::from_bits(root.time_bits) > horizon {
+            return None;
+        }
+        Some(self.remove_root(root))
     }
 
     /// Peek at the earliest event's timestamp.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.0.time)
+        self.keys.first().map(|k| f64::from_bits(k.time_bits))
+    }
+
+    fn remove_root(&mut self, root: HeapKey) -> Event<M> {
+        let last = self.keys.pop().expect("remove_root on empty heap");
+        if !self.keys.is_empty() {
+            self.keys[0] = last;
+            self.sift_down(0);
+        }
+        let ev = self.slab[root.slot as usize].take().expect("heap key points at a full slot");
+        self.free.push(root.slot);
+        ev
+    }
+
+    /// Hole-based sift toward the root: each displaced key moves once.
+    fn sift_up(&mut self, mut pos: usize) {
+        let key = self.keys[pos];
+        while pos > 0 {
+            let parent = (pos - 1) / D;
+            if self.keys[parent] <= key {
+                break;
+            }
+            self.keys[pos] = self.keys[parent];
+            pos = parent;
+        }
+        self.keys[pos] = key;
+    }
+
+    /// Hole-based sift toward the leaves: pick the smallest of ≤ 4 children.
+    fn sift_down(&mut self, mut pos: usize) {
+        let len = self.keys.len();
+        let key = self.keys[pos];
+        loop {
+            let first = D * pos + 1;
+            if first >= len {
+                break;
+            }
+            let end = (first + D).min(len);
+            let mut min_child = first;
+            for c in first + 1..end {
+                if self.keys[c] < self.keys[min_child] {
+                    min_child = c;
+                }
+            }
+            if key <= self.keys[min_child] {
+                break;
+            }
+            self.keys[pos] = self.keys[min_child];
+            pos = min_child;
+        }
+        self.keys[pos] = key;
     }
 }
 
@@ -144,6 +245,13 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_infinite() {
+        let mut q = EventQueue::new();
+        q.push(ev(f64::INFINITY, 0));
+    }
+
+    #[test]
     #[should_panic(expected = ">= 0")]
     fn rejects_negative() {
         let mut q = EventQueue::new();
@@ -161,5 +269,72 @@ mod tests {
         assert_eq!(q.pop().unwrap().tag, 2);
         assert_eq!(q.pop().unwrap().tag, 5);
         assert_eq!(q.pop().unwrap().tag, 10);
+    }
+
+    #[test]
+    fn negative_zero_is_canonicalized_and_fifo_with_zero() {
+        let mut q = EventQueue::new();
+        q.push(ev(0.0, 1));
+        q.push(ev(-0.0, 2));
+        q.push(ev(0.0, 3));
+        // All three are time 0.0 after canonicalization → FIFO by seq.
+        for expected in [1, 2, 3] {
+            let e = q.pop().unwrap();
+            assert_eq!(e.tag, expected);
+            assert_eq!(e.time.to_bits(), 0.0f64.to_bits(), "-0.0 stored as +0.0");
+        }
+    }
+
+    #[test]
+    fn pop_before_respects_horizon() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, 1));
+        q.push(ev(2.0, 2));
+        q.push(ev(3.0, 3));
+        assert!(q.pop_before(0.5).is_none());
+        assert_eq!(q.pop_before(2.0).unwrap().tag, 1);
+        assert_eq!(q.pop_before(2.0).unwrap().tag, 2);
+        assert!(q.pop_before(2.0).is_none(), "next event is past the horizon");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_before(f64::INFINITY).unwrap().tag, 3);
+        assert!(q.pop_before(f64::INFINITY).is_none(), "empty queue");
+    }
+
+    #[test]
+    fn slab_slots_are_recycled() {
+        let mut q = EventQueue::new();
+        for i in 0..1000 {
+            q.push(ev(i as f64, i));
+            assert_eq!(q.pop().unwrap().tag, i);
+        }
+        assert_eq!(q.slab.len(), 1, "sequential push/pop reuses one slab slot");
+        // High-water mark sizes the slab; it never grows past it.
+        for i in 0..16 {
+            q.push(ev(i as f64, i));
+        }
+        while q.pop().is_some() {}
+        assert_eq!(q.slab.len(), 16);
+        assert_eq!(q.free.len(), 16);
+    }
+
+    #[test]
+    fn large_randomized_heap_pops_sorted() {
+        // Deterministic LCG-driven stress: pop order must be (time, seq).
+        let mut q = EventQueue::new();
+        let mut state: u64 = 0x9E37_79B9_7F4A_7C15;
+        for i in 0..5000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // Coarse grid of times to force plenty of ties.
+            let t = ((state >> 33) % 97) as f64 * 0.5;
+            q.push(ev(t, i));
+        }
+        let mut prev: Option<(u64, u64)> = None;
+        while let Some(e) = q.pop() {
+            let key = (e.time.to_bits(), e.seq);
+            if let Some(p) = prev {
+                assert!(p < key, "pops must be strictly increasing in (time, seq)");
+            }
+            prev = Some(key);
+        }
     }
 }

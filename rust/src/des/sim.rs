@@ -5,6 +5,7 @@ use super::event::{Event, EventKind, EntityId};
 use super::queue::EventQueue;
 use crate::network::FlowTable;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Kernel limits / options.
 #[derive(Debug, Clone)]
@@ -27,8 +28,11 @@ impl Default for SimConfig {
 /// `GridSim.Init()/Start()` lifecycle.
 pub struct Simulation<M> {
     entities: Vec<Option<Box<dyn Entity<M>>>>,
-    names: Vec<String>,
-    by_name: HashMap<String, EntityId>,
+    /// Entity names, interned once at [`add`](Self::add) as `Arc<str>` so
+    /// diagnostics and per-event contexts share them without cloning the
+    /// underlying bytes.
+    names: Vec<Arc<str>>,
+    by_name: HashMap<Arc<str>, EntityId>,
     queue: EventQueue<M>,
     clock: f64,
     link: Box<dyn LinkModel>,
@@ -97,9 +101,9 @@ impl<M: 'static> Simulation<M> {
     /// Register an entity; returns its id. Names must be unique (the paper
     /// derives I/O entity names from entity names and requires uniqueness).
     pub fn add(&mut self, entity: Box<dyn Entity<M>>) -> EntityId {
-        let name = entity.name().to_string();
+        let name: Arc<str> = Arc::from(entity.name());
         assert!(
-            !self.by_name.contains_key(&name),
+            !self.by_name.contains_key(&*name),
             "duplicate entity name {name:?}"
         );
         let id = self.entities.len();
@@ -211,11 +215,24 @@ impl<M: 'static> Simulation<M> {
     /// Returns the dispatched event's timestamp, or `None` when the
     /// simulation is idle (see [`is_idle`](Self::is_idle)).
     pub fn step(&mut self) -> Option<f64> {
+        self.step_before(f64::INFINITY)
+    }
+
+    /// Dispatch exactly one event whose timestamp is ≤ `horizon` (and ≤ the
+    /// configured `max_time`). Runs the start phase first if needed. Returns
+    /// the dispatched event's timestamp, or `None` when no due event exists
+    /// or the simulation is idle.
+    ///
+    /// This is the kernel's single-comparison hot path: the horizon check
+    /// happens inside [`EventQueue::pop_before`] on the heap root, so a
+    /// bounded loop like [`run_until`](Self::run_until) costs one heap
+    /// access per event instead of a peek-then-pop pair.
+    pub fn step_before(&mut self, horizon: f64) -> Option<f64> {
         self.init();
-        if self.is_idle() {
+        if self.stopped || self.events_processed >= self.config.max_events || horizon.is_nan() {
             return None;
         }
-        let ev = self.queue.pop().expect("is_idle() checked a head event exists");
+        let ev = self.queue.pop_before(horizon.min(self.config.max_time))?;
         debug_assert!(
             ev.time + 1e-9 >= self.clock,
             "time went backwards: {} -> {}",
@@ -264,15 +281,7 @@ impl<M: 'static> Simulation<M> {
     /// event, so an incremental `run_until` sweep reaches exactly the same
     /// final clock as one [`run`](Self::run).
     pub fn run_until(&mut self, t: f64) -> f64 {
-        self.init();
-        while !self.is_idle() {
-            match self.queue.peek_time() {
-                Some(next) if next <= t => {
-                    self.step();
-                }
-                _ => break,
-            }
-        }
+        while self.step_before(t).is_some() {}
         self.clock
     }
 

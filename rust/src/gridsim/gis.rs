@@ -100,7 +100,7 @@ mod tests {
         fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
             let info = ResourceInfo {
                 id: ctx.me(),
-                name: self.name.clone(),
+                name: self.name.as_str().into(),
                 num_pe: 1,
                 mips_per_pe: 100.0,
                 cost_per_pe_time: 1.0,
@@ -130,6 +130,6 @@ mod tests {
         assert_eq!(p.got, vec![r1, r2]);
         let g = sim.get::<GridInformationService>(gis).unwrap();
         assert_eq!(g.resources().len(), 2);
-        assert_eq!(g.resources()[0].name, "R1");
+        assert_eq!(&*g.resources()[0].name, "R1");
     }
 }

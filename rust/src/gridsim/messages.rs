@@ -6,6 +6,7 @@
 use super::gridlet::Gridlet;
 use super::statistics::StatRecord;
 use crate::des::EntityId;
+use std::sync::Arc;
 
 /// Static resource information returned by a `RESOURCE_CHARACTERISTICS`
 /// query (what the broker's "resource trading" step needs).
@@ -13,8 +14,10 @@ use crate::des::EntityId;
 pub struct ResourceInfo {
     /// The resource's entity id.
     pub id: EntityId,
-    /// The resource's entity name (Table 2's "name").
-    pub name: String,
+    /// The resource's entity name (Table 2's "name"). Interned as `Arc<str>`:
+    /// every `Register`/`Characteristics` reply clones this info, and a
+    /// shared pointer keeps those clones off the allocator on the hot path.
+    pub name: Arc<str>,
     /// Total PEs across the resource's machines.
     pub num_pe: usize,
     /// Rating of one PE (homogeneous assumption, as in the paper).

@@ -10,6 +10,7 @@ pub mod machine;
 pub mod messages;
 pub mod network;
 pub mod pe;
+pub mod pool;
 pub mod random;
 pub mod res_gridlet;
 pub mod reservation;

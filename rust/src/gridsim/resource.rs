@@ -10,6 +10,7 @@ use super::calendar::ResourceCalendar;
 use super::characteristics::{AllocPolicy, ResourceCharacteristics};
 use super::gridlet::GridletStatus;
 use super::messages::{Msg, ReservationReply, ResourceDynamics, ResourceInfo};
+use super::pool;
 use super::res_gridlet::ResGridlet;
 use super::reservation::ReservationBook;
 use super::space_shared::SpaceShared;
@@ -17,6 +18,7 @@ use super::statistics::StatRecord;
 use super::tags;
 use super::time_shared::TimeShared;
 use crate::des::{Ctx, EntityId, Event};
+use std::sync::Arc;
 
 /// The policy-specific half of a resource: how Gridlets are multiplexed onto
 /// PEs. Implemented by [`TimeShared`] (Fig 7/8) and [`SpaceShared`]
@@ -46,7 +48,10 @@ pub trait LocalScheduler: std::fmt::Debug + Send {
 
 /// The resource entity.
 pub struct GridResource {
-    name: String,
+    name: Arc<str>,
+    /// Precomputed `"<name>.GridletCompletion"` statistics category, shared
+    /// by every completion record instead of formatted per Gridlet.
+    stat_category: Arc<str>,
     characteristics: ResourceCharacteristics,
     calendar: ResourceCalendar,
     scheduler: Box<dyn LocalScheduler>,
@@ -70,7 +75,7 @@ impl GridResource {
     /// Build a resource entity from its characteristics. The scheduler kind
     /// follows `characteristics.policy`.
     pub fn new(
-        name: impl Into<String>,
+        name: impl Into<Arc<str>>,
         characteristics: ResourceCharacteristics,
         calendar: ResourceCalendar,
         gis: EntityId,
@@ -91,8 +96,10 @@ impl GridResource {
             }
         };
         let num_pe = characteristics.num_pe();
+        let name = name.into();
         GridResource {
-            name: name.into(),
+            stat_category: format!("{name}.GridletCompletion").into(),
+            name,
             characteristics,
             calendar,
             scheduler,
@@ -156,14 +163,14 @@ impl GridResource {
             if let Some(stats) = self.stats {
                 let record = StatRecord {
                     time: ctx.now(),
-                    category: format!("{}.GridletCompletion", self.name),
+                    category: self.stat_category.clone(),
                     label: format!("G{}", rg.gridlet.id),
                     value: rg.gridlet.elapsed(),
                 };
                 ctx.send(stats, tags::RECORD_STATISTICS, Some(Msg::Stat(record)), 48);
             }
             let owner = rg.gridlet.owner;
-            let msg = Msg::Gridlet(Box::new(rg.gridlet));
+            let msg = Msg::Gridlet(pool::boxed(rg.gridlet));
             let bytes = msg.wire_bytes(false);
             ctx.send(owner, tags::GRIDLET_RETURN, Some(msg), bytes);
         }
@@ -204,7 +211,7 @@ impl crate::des::Entity<Msg> for GridResource {
                 g.resource = Some(ctx.me());
                 let rank = self.arrivals;
                 self.arrivals += 1;
-                self.scheduler.submit(ResGridlet::new(*g, ctx.now(), rank), ctx.now());
+                self.scheduler.submit(ResGridlet::new(pool::unbox(g), ctx.now(), rank), ctx.now());
                 self.reschedule_tick(ctx);
             }
             tags::RESOURCE_TICK => {
@@ -239,7 +246,7 @@ impl crate::des::Entity<Msg> for GridResource {
                 self.refresh_environment(ctx.now());
                 match self.scheduler.cancel(id, ctx.now()) {
                     Some(rg) => {
-                        let msg = Msg::Gridlet(Box::new(rg.gridlet));
+                        let msg = Msg::Gridlet(pool::boxed(rg.gridlet));
                         let bytes = msg.wire_bytes(false);
                         ctx.send(ev.src, tags::GRIDLET_CANCEL_REPLY, Some(msg), bytes);
                     }

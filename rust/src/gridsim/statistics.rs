@@ -5,6 +5,7 @@
 use super::messages::Msg;
 use super::tags;
 use crate::des::{Ctx, Entity, Event};
+use std::sync::Arc;
 
 /// One recorded measurement.
 #[derive(Debug, Clone)]
@@ -12,8 +13,10 @@ pub struct StatRecord {
     /// Simulation time the measurement was taken.
     pub time: f64,
     /// Dotted category, e.g. `"*.USER.TimeUtilization"` in the paper's
-    /// report-writer configuration.
-    pub category: String,
+    /// report-writer configuration. `Arc<str>` so per-completion records can
+    /// share one precomputed category string instead of formatting a fresh
+    /// `String` on every emission.
+    pub category: Arc<str>,
     /// Free-form measurement label.
     pub label: String,
     /// The measured value.

@@ -100,7 +100,7 @@
 // `-D warnings`). Modules that predate the policy carry a module-level
 // `allow` below; remove an `allow` once its module is fully documented —
 // never add a new one. `workload`, `sweep`, `session`, `des`, `gridsim`,
-// `network` and `output` are fully documented and enforced.
+// `network`, `output` and `runtime` are fully documented and enforced.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)] // TODO(docs): documented module headers, item gaps remain
@@ -113,7 +113,6 @@ pub mod figures;
 pub mod gridsim;
 pub mod network;
 pub mod output;
-#[allow(missing_docs)] // TODO(docs)
 pub mod runtime;
 #[allow(missing_docs)] // TODO(docs)
 pub mod scenario;

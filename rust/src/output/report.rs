@@ -115,7 +115,7 @@ mod tests {
             let mut queue = crate::des::EventQueue::new();
             let mut flows = crate::network::FlowTable::new();
             let mut stop = false;
-            let names = vec!["s".to_string()];
+            let names: Vec<std::sync::Arc<str>> = vec!["s".into()];
             let mut ctx = test_ctx(&mut queue, &mut flows, &mut stop, &names);
             stats.on_event(&mut ctx, ev);
         }
@@ -127,7 +127,7 @@ mod tests {
         queue: &'a mut crate::des::EventQueue<crate::gridsim::Msg>,
         flows: &'a mut crate::network::FlowTable<crate::gridsim::Msg>,
         stop: &'a mut bool,
-        names: &'a [String],
+        names: &'a [std::sync::Arc<str>],
     ) -> crate::des::Ctx<'a, crate::gridsim::Msg> {
         crate::des::entity::test_ctx(0.0, 0, queue, flows, stop, names)
     }

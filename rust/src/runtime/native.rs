@@ -11,6 +11,7 @@ use super::advisor::{Advisor, AdvisorInput};
 pub struct NativeAdvisor;
 
 impl NativeAdvisor {
+    /// The advisor is stateless; `new()` exists for symmetry with loaders.
     pub fn new() -> NativeAdvisor {
         NativeAdvisor
     }

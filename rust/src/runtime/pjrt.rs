@@ -22,6 +22,7 @@ pub const ADVISOR_R: usize = 16;
 /// Fixed shapes of the forecast artifact `[R, J]`. Must match
 /// `python/compile/model.py::FORECAST_R/J`.
 pub const FORECAST_R: usize = 16;
+/// Fixed job-axis padding of the forecast artifact (columns of `[R, J]`).
 pub const FORECAST_J: usize = 256;
 
 /// `(rows, cols)` of the forecast artifact.
@@ -98,6 +99,7 @@ impl PjrtRuntime {
 
 #[cfg(not(feature = "xla"))]
 impl PjrtRuntime {
+    /// Stub loader: always errs, describing how to enable the `xla` feature.
     pub fn load(_path: &Path) -> anyhow::Result<PjrtRuntime> {
         Err(anyhow::anyhow!(NO_XLA))
     }
@@ -126,6 +128,7 @@ impl XlaAdvisor {
         Self::load(&dir.join("advisor.hlo.txt"))
     }
 
+    /// Load and compile the advisor artifact at an explicit path.
     pub fn load(path: &Path) -> anyhow::Result<XlaAdvisor> {
         Ok(XlaAdvisor { runtime: PjrtRuntime::load(path)? })
     }
@@ -194,6 +197,7 @@ pub struct XlaForecaster {
 }
 
 impl XlaForecaster {
+    /// Load `forecast.hlo.txt` from an artifacts directory.
     pub fn load_dir(dir: &Path) -> anyhow::Result<XlaForecaster> {
         Ok(XlaForecaster { runtime: PjrtRuntime::load(&dir.join("forecast.hlo.txt"))? })
     }
@@ -260,6 +264,7 @@ impl XlaForecaster {
 
 #[cfg(not(feature = "xla"))]
 impl XlaForecaster {
+    /// Stub: unreachable because `load_dir` always errs without the feature.
     pub fn forecast(&mut self, _input: &ForecastInput) -> anyhow::Result<Vec<Vec<f64>>> {
         unreachable!("{NO_XLA}")
     }

@@ -1,0 +1,265 @@
+//! Differential pins for the event-queue swap (PR 7).
+//!
+//! The kernel's determinism contract says pop order is exactly `(time, seq)`
+//! lexicographic. The flat 4-ary key-heap in `des::queue` replaced the
+//! original `BinaryHeap<HeapEntry>`; this suite drives the new queue and a
+//! reference implementation of the old one through thousands of randomized
+//! interleaved push/pop sequences (ties included) and requires identical pop
+//! order, then pins a 100k-event ping-storm at the kernel level: stepped and
+//! whole runs must produce bit-identical entity logs and event streams.
+//!
+//! Known, documented edge divergence: the new queue canonicalizes a `-0.0`
+//! timestamp to `+0.0` on push (the reference `total_cmp` ordered `-0.0`
+//! strictly before `0.0`). No simulation code can observe this — event times
+//! are sums of non-negative clocks and delays — so the differential driver
+//! sticks to ordinary non-negative times.
+
+use gridsim::des::{Ctx, Entity, Event, EventKind, EventQueue, SimConfig, Simulation};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Reference future-event queue: the pre-swap `BinaryHeap` implementation,
+/// ordering by `(total_cmp(time), seq)` reversed into a min-heap.
+struct RefQueue {
+    heap: BinaryHeap<RefEntry>,
+    next_seq: u64,
+}
+
+struct RefEntry {
+    time: f64,
+    seq: u64,
+    tag: i64,
+}
+
+impl PartialEq for RefEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for RefEntry {}
+impl PartialOrd for RefEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RefEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest (time, seq).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl RefQueue {
+    fn new() -> RefQueue {
+        RefQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+    fn push(&mut self, time: f64, tag: i64) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(RefEntry { time, seq, tag });
+        seq
+    }
+    fn pop(&mut self) -> Option<(f64, u64, i64)> {
+        self.heap.pop().map(|e| (e.time, e.seq, e.tag))
+    }
+    fn pop_before(&mut self, horizon: f64) -> Option<(f64, u64, i64)> {
+        match self.heap.peek() {
+            Some(e) if e.time <= horizon => self.pop(),
+            _ => None,
+        }
+    }
+}
+
+fn ev(time: f64, tag: i64) -> Event<u32> {
+    Event { time, seq: 0, src: 0, dst: 0, tag, kind: EventKind::External, data: None }
+}
+
+/// Deterministic 64-bit LCG (same constants as `rand`'s Lehmer examples).
+struct Lcg(u64);
+impl Lcg {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0 >> 16
+    }
+    /// A time from a coarse grid so ties are frequent.
+    fn time(&mut self) -> f64 {
+        (self.next() % 199) as f64 * 0.5
+    }
+}
+
+#[test]
+fn randomized_interleaved_push_pop_matches_reference() {
+    for seed in [3u64, 17, 0xDEAD_BEEF, 0x9E37_79B9_7F4A_7C15] {
+        let mut rng = Lcg(seed);
+        let mut new_q: EventQueue<u32> = EventQueue::new();
+        let mut ref_q = RefQueue::new();
+        let mut tag = 0i64;
+        for _ in 0..5_000 {
+            match rng.next() % 4 {
+                // Bias toward pushes so the heaps stay deep.
+                0 | 1 => {
+                    let t = rng.time();
+                    tag += 1;
+                    let a = new_q.push(ev(t, tag));
+                    let b = ref_q.push(t, tag);
+                    assert_eq!(a, b, "seq assignment must match");
+                }
+                2 => {
+                    let got = new_q.pop().map(|e| (e.time, e.seq, e.tag));
+                    assert_eq!(got, ref_q.pop(), "pop order diverged (seed {seed})");
+                }
+                _ => {
+                    let h = rng.time();
+                    let got = new_q.pop_before(h).map(|e| (e.time, e.seq, e.tag));
+                    assert_eq!(got, ref_q.pop_before(h), "pop_before diverged (seed {seed})");
+                }
+            }
+        }
+        // Drain: every remaining event must come out in identical order.
+        loop {
+            let got = new_q.pop().map(|e| (e.time, e.seq, e.tag));
+            let want = ref_q.pop();
+            assert_eq!(got, want, "drain diverged (seed {seed})");
+            if want.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn all_ties_drain_fifo_like_reference() {
+    let mut new_q: EventQueue<u32> = EventQueue::new();
+    let mut ref_q = RefQueue::new();
+    for tag in 0..2_000 {
+        new_q.push(ev(7.0, tag));
+        ref_q.push(7.0, tag);
+    }
+    for _ in 0..2_000 {
+        let got = new_q.pop().map(|e| (e.time, e.seq, e.tag));
+        assert_eq!(got, ref_q.pop());
+    }
+    assert!(new_q.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-level pin: a 100k-event ping-storm must produce bit-identical
+// entity logs and observer streams whether run whole, stepped one event at
+// a time, or stepped through bounded run_until windows (the three dispatch
+// paths over the new queue).
+// ---------------------------------------------------------------------------
+
+/// Storm node: keeps events bouncing to the next ring entity forever and
+/// logs every delivery as raw time bits (bit-identity, not approximate).
+struct Storm {
+    name: String,
+    next: usize,
+    log: Vec<(u64, u64)>,
+}
+
+impl Entity<u32> for Storm {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn on_start(&mut self, ctx: &mut Ctx<u32>) {
+        for k in 0..4u64 {
+            ctx.send_delayed(self.next, 0.5 + k as f64 * 0.25, 0, None);
+        }
+    }
+    fn on_event(&mut self, ctx: &mut Ctx<u32>, ev: Event<u32>) {
+        self.log.push((ctx.now().to_bits(), ev.seq));
+        ctx.send_delayed(self.next, 1.0, 0, None);
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+const STORM_EVENTS: u64 = 100_000;
+const STORM_ENTITIES: usize = 16;
+
+fn storm_sim() -> Simulation<u32> {
+    let mut sim =
+        Simulation::with_config(SimConfig { max_time: f64::INFINITY, max_events: STORM_EVENTS });
+    for i in 0..STORM_ENTITIES {
+        sim.add(Box::new(Storm {
+            name: format!("S{i}"),
+            next: (i + 1) % STORM_ENTITIES,
+            log: vec![],
+        }));
+    }
+    sim.set_observer(Box::new(|_| {}));
+    sim
+}
+
+fn storm_logs(sim: &Simulation<u32>) -> Vec<Vec<(u64, u64)>> {
+    (0..STORM_ENTITIES)
+        .map(|i| sim.get::<Storm>(i).unwrap().log.clone())
+        .collect()
+}
+
+#[test]
+fn pingstorm_100k_bit_identical_across_dispatch_paths() {
+    // Whole run.
+    let mut whole = storm_sim();
+    let end_whole = whole.run();
+    assert_eq!(whole.events_processed(), STORM_EVENTS);
+
+    // Stepped one event at a time.
+    let mut stepped = storm_sim();
+    stepped.init();
+    while stepped.step().is_some() {}
+    let end_stepped = stepped.finalize();
+
+    // Bounded run_until windows (exercises pop_before's horizon path).
+    let mut windowed = storm_sim();
+    let mut horizon = 0.0;
+    while !windowed.is_idle() {
+        horizon += 97.0;
+        windowed.run_until(horizon);
+    }
+    let end_windowed = windowed.finalize();
+
+    assert_eq!(end_whole.to_bits(), end_stepped.to_bits());
+    assert_eq!(end_whole.to_bits(), end_windowed.to_bits());
+    assert_eq!(whole.events_processed(), stepped.events_processed());
+    assert_eq!(whole.events_processed(), windowed.events_processed());
+    let logs = storm_logs(&whole);
+    assert_eq!(logs, storm_logs(&stepped), "stepped logs must be bit-identical");
+    assert_eq!(logs, storm_logs(&windowed), "windowed logs must be bit-identical");
+    assert_eq!(
+        logs.iter().map(Vec::len).sum::<usize>() as u64,
+        STORM_EVENTS,
+        "every dispatched event must be logged exactly once"
+    );
+}
+
+#[test]
+fn pingstorm_event_stream_matches_reference_order() {
+    // Replay the observer's (time, seq) stream against the reference queue
+    // discipline: times never decrease, and seqs are unique.
+    use std::sync::{Arc, Mutex};
+    let seen: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(vec![]));
+    let sink = seen.clone();
+    let mut sim = storm_sim();
+    sim.set_observer(Box::new(move |e: &Event<u32>| {
+        sink.lock().unwrap().push((e.time.to_bits(), e.seq));
+    }));
+    sim.run();
+    let seen = seen.lock().unwrap();
+    assert_eq!(seen.len() as u64, STORM_EVENTS);
+    for w in seen.windows(2) {
+        let (t0, s0) = w[0];
+        let (t1, s1) = w[1];
+        assert!(
+            f64::from_bits(t0) < f64::from_bits(t1) || (t0 == t1 && s0 < s1),
+            "dispatch order must be strictly increasing in (time, seq)"
+        );
+    }
+}

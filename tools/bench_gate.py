@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Gate a fresh bench snapshot against the committed perf trajectory.
+
+Usage: bench_gate.py NEW_SNAPSHOT.json [REPO_ROOT]
+
+Compares every throughput metric (name containing "events_per_sec") in the
+new snapshot against the latest committed ``BENCH_*.json`` under REPO_ROOT
+(default: the repository root containing this script). Fails (exit 1) on a
+gross regression — a new value below half the committed one. Metrics that
+are null/missing on either side are skipped, so the gate passes cleanly
+while the committed trajectory still holds the honest-null placeholder.
+
+Stdlib only; understands both the merged snapshot shape
+(``{"benches": {name: {"metrics": [...]}}}``) and the legacy flat one
+(``{"bench": name, "metrics": [...]}``).
+"""
+
+import glob
+import json
+import os
+import sys
+
+REGRESSION_FACTOR = 2.0
+
+
+def load_metrics(path):
+    """Snapshot file -> {(bench, metric): value-or-None}."""
+    with open(path, encoding="utf-8") as f:
+        snap = json.load(f)
+    out = {}
+    benches = snap.get("benches")
+    if isinstance(benches, dict):
+        for bench, entry in benches.items():
+            for m in entry.get("metrics", []):
+                out[(bench, m.get("name"))] = m.get("value")
+    elif "bench" in snap:
+        for m in snap.get("metrics", []):
+            out[(snap["bench"], m.get("name"))] = m.get("value")
+    return out
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    new_path = argv[1]
+    root = argv[2] if len(argv) > 2 else os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    committed_files = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not committed_files:
+        print(f"bench gate: no committed BENCH_*.json under {root}; nothing to gate against")
+        return 0
+    committed_path = committed_files[-1]
+
+    new = load_metrics(new_path)
+    committed = load_metrics(committed_path)
+    print(f"bench gate: {new_path} vs committed {committed_path}")
+
+    failures = []
+    compared = skipped = 0
+    for key, old_value in sorted(committed.items()):
+        bench, name = key
+        if "events_per_sec" not in (name or ""):
+            continue
+        new_value = new.get(key)
+        if old_value is None or new_value is None:
+            skipped += 1
+            print(f"  skip {bench}/{name}: committed={old_value} new={new_value}")
+            continue
+        compared += 1
+        ratio = new_value / old_value if old_value else float("inf")
+        status = "ok"
+        if new_value < old_value / REGRESSION_FACTOR:
+            status = "REGRESSION"
+            failures.append(
+                f"{bench}/{name}: {new_value:.1f} < committed {old_value:.1f} / {REGRESSION_FACTOR}"
+            )
+        print(f"  {status:>10} {bench}/{name}: new={new_value:.1f} committed={old_value:.1f} ({ratio:.2f}x)")
+
+    print(f"bench gate: {compared} compared, {skipped} skipped, {len(failures)} regression(s)")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
