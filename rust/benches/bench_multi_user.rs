@@ -137,6 +137,53 @@ fn main() {
         }
     }
 
+    // Faulted vs clean: the same 10-user market with and without the
+    // reliability layer's failure–repair injection (default retry policy).
+    // Pins the injector's event overhead — fault ticks, drains,
+    // resubmission round-trips — next to the clean baseline in every
+    // snapshot.
+    {
+        use gridsim::faults::{FaultProcess, FaultsSpec};
+        let build = |faults: Option<FaultsSpec>| {
+            let mut builder = Scenario::builder().resources(wwg_testbed()).seed(31);
+            for _ in 0..10 {
+                builder = builder.user(
+                    ExperimentSpec::task_farm(40, 10_000.0, 0.10)
+                        .deadline(1e6)
+                        .budget(1e9)
+                        .optimization(Optimization::Cost),
+                );
+            }
+            if let Some(f) = faults {
+                builder = builder.faults(f);
+            }
+            builder.build()
+        };
+        for (label, faults) in [
+            ("clean", None),
+            (
+                "faulted",
+                Some(FaultsSpec::all(FaultProcess::Exponential { mtbf: 400.0, mttr: 40.0 })),
+            ),
+        ] {
+            let faulted = faults.is_some();
+            let scenario = build(faults);
+            let t0 = Instant::now();
+            let report = GridSession::new(&scenario).run_to_completion();
+            let wall = t0.elapsed().as_secs_f64();
+            rec.metric(&format!("reliability_{label}_wall(10 users)"), wall, "s");
+            rec.metric(
+                &format!("reliability_{label}_events_per_sec"),
+                report.events as f64 / wall.max(1e-9),
+                "events/s",
+            );
+            if faulted {
+                let lost: usize = report.users.iter().map(|u| u.gridlets_lost).sum();
+                rec.metric("reliability_faulted_gridlets_lost", lost as f64, "gridlets");
+            }
+        }
+    }
+
     // Sweep engine: serial vs parallel over the same grid. The grid is the
     // Figs 33–35 competition block (users × budgets at deadline 3100);
     // near-linear speedup is expected while cells outnumber cores.

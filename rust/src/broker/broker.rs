@@ -30,7 +30,7 @@ use crate::gridsim::messages::Msg;
 use crate::gridsim::pool;
 use crate::gridsim::tags;
 use crate::des::{Ctx, Entity, EntityId, Event};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum State {
@@ -49,6 +49,36 @@ enum State {
     Done,
 }
 
+/// What the broker does with a Gridlet that comes back
+/// [`GridletStatus::Lost`] — in flight on a resource when it failed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ResubmissionPolicy {
+    /// Return the job to the unassigned pool for another attempt, backing
+    /// off from the failed resource (its [`BrokerResource`] `down_until`
+    /// gate) so the zero-delay redispatch livelock on a dead resource is
+    /// broken.
+    RetryWithBackoff {
+        /// Resubmissions allowed per Gridlet; `0` = unbounded. A job lost
+        /// more than `max_attempts` times is abandoned.
+        max_attempts: usize,
+        /// Fixed backoff duration before the failed resource is considered
+        /// again; `0.0` selects the adaptive default
+        /// (`5% of remaining deadline`, clamped to `[1, 100]`).
+        backoff: f64,
+    },
+    /// Give the job up immediately: it counts as abandoned and the
+    /// experiment can terminate without it.
+    Abandon,
+}
+
+impl ResubmissionPolicy {
+    /// The default: retry forever with adaptive backoff (the pre-reliability
+    /// broker behavior).
+    pub fn default_retry() -> ResubmissionPolicy {
+        ResubmissionPolicy::RetryWithBackoff { max_attempts: 0, backoff: 0.0 }
+    }
+}
+
 /// Tunables for the scheduling loop.
 #[derive(Debug, Clone)]
 pub struct BrokerConfig {
@@ -61,6 +91,8 @@ pub struct BrokerConfig {
     pub trace_interval: f64,
     /// `MaxGridletPerPE` (Fig 17 uses 2).
     pub max_gridlets_per_pe: usize,
+    /// What to do with Gridlets lost to resource failures.
+    pub resubmission: ResubmissionPolicy,
 }
 
 impl Default for BrokerConfig {
@@ -70,6 +102,7 @@ impl Default for BrokerConfig {
             min_tick: 1.0,
             trace_interval: 0.0,
             max_gridlets_per_pe: 2,
+            resubmission: ResubmissionPolicy::default_retry(),
         }
     }
 }
@@ -101,6 +134,7 @@ pub struct BrokerProgress {
 /// Per-resource slice of a [`BrokerProgress`].
 #[derive(Debug, Clone)]
 pub struct ResourceLoad {
+    /// Resource name as the scenario declared it.
     pub name: String,
     /// Gridlets committed (assigned + in flight) to the resource right now.
     pub committed: usize,
@@ -132,6 +166,15 @@ pub struct Broker {
     total_mi: f64,
     done_mi: f64,
 
+    /// Per-gridlet loss count (resubmission-policy bookkeeping).
+    loss_counts: HashMap<usize, usize>,
+    /// Gridlets returned [`GridletStatus::Lost`] (each loss counts).
+    lost: usize,
+    /// Lost Gridlets put back into the unassigned pool.
+    resubmitted: usize,
+    /// Lost Gridlets given up on (policy said stop retrying).
+    abandoned: usize,
+
     last_tick: Option<u64>,
     /// Time the pending tick was scheduled *for* (dedupes the re-advise
     /// bursts caused by many Gridlets returning at one simulation instant).
@@ -142,6 +185,8 @@ pub struct Broker {
 }
 
 impl Broker {
+    /// Build an idle broker that will discover resources through `gis` and
+    /// schedule with `policy` once its user submits an experiment.
     pub fn new(
         name: impl Into<String>,
         gis: EntityId,
@@ -167,6 +212,10 @@ impl Broker {
             total_jobs: 0,
             total_mi: 0.0,
             done_mi: 0.0,
+            loss_counts: HashMap::new(),
+            lost: 0,
+            resubmitted: 0,
+            abandoned: 0,
             last_tick: None,
             tick_at: f64::NAN,
             trace,
@@ -188,7 +237,8 @@ impl Broker {
 
     /// Mean MI of unfinished jobs (the advisor's capacity quantum).
     fn avg_job_mi(&self) -> f64 {
-        let left = self.total_jobs - self.finished.len();
+        let left =
+            self.total_jobs.saturating_sub(self.finished.len() + self.abandoned);
         if left == 0 {
             return 1.0;
         }
@@ -335,6 +385,16 @@ impl Broker {
         }
     }
 
+    /// How long to stay away from a resource that failed or bounced a job:
+    /// the policy's fixed backoff when configured, else the adaptive default
+    /// (5% of remaining deadline, clamped to `[1, 100]`).
+    fn fault_backoff(&self, now: f64) -> f64 {
+        match self.config.resubmission {
+            ResubmissionPolicy::RetryWithBackoff { backoff, .. } if backoff > 0.0 => backoff,
+            _ => ((self.deadline_abs - now) * 0.05).clamp(1.0, 100.0),
+        }
+    }
+
     /// Receptor: account a returned Gridlet (Fig 18 step 6).
     fn on_gridlet_return(&mut self, ctx: &mut Ctx<Msg>, mut g: Gridlet) {
         let rid = g.resource.expect("returned gridlet has a resource");
@@ -349,6 +409,33 @@ impl Broker {
                 self.views[r].on_completed(&g, ctx.now());
                 self.finished.push(g);
             }
+            GridletStatus::Lost => {
+                // The resource crashed under the job: the work is gone and
+                // nothing is charged. Back off from the resource (it *is*
+                // down) and let the resubmission policy decide the job's
+                // fate.
+                self.lost += 1;
+                g.cost = 0.0;
+                let backoff = self.fault_backoff(ctx.now());
+                self.views[r].mark_down(ctx.now(), backoff);
+                self.views[r].on_returned_unfinished(&g);
+                let losses = self.loss_counts.entry(g.id).or_insert(0);
+                *losses += 1;
+                let retry = match self.config.resubmission {
+                    ResubmissionPolicy::Abandon => false,
+                    ResubmissionPolicy::RetryWithBackoff { max_attempts, .. } => {
+                        max_attempts == 0 || *losses <= max_attempts
+                    }
+                };
+                if retry {
+                    self.resubmitted += 1;
+                    g.status = GridletStatus::Created;
+                    g.resource = None;
+                    self.unassigned.push_back(g);
+                } else {
+                    self.abandoned += 1;
+                }
+            }
             GridletStatus::Failed | GridletStatus::Canceled => {
                 // Fault handling: the job returns to the pool for retry on
                 // another resource (partial cost of cancelled work is kept).
@@ -356,8 +443,7 @@ impl Broker {
                     // Back off from the failed resource for a while (also
                     // breaks the zero-delay redispatch livelock on a dead
                     // resource under an instantaneous network).
-                    let backoff =
-                        ((self.deadline_abs - ctx.now()) * 0.05).clamp(1.0, 100.0);
+                    let backoff = self.fault_backoff(ctx.now());
                     self.views[r].mark_down(ctx.now(), backoff);
                 }
                 self.views[r].on_returned_unfinished(&g);
@@ -389,7 +475,9 @@ impl Broker {
     }
 
     fn check_done(&mut self, ctx: &mut Ctx<Msg>) -> bool {
-        let all_done = self.finished.len() == self.total_jobs;
+        // Abandoned Gridlets terminate with the experiment: they will never
+        // finish, so waiting for them would hang the run.
+        let all_done = self.finished.len() + self.abandoned == self.total_jobs;
         let drained = self.state == State::Draining && self.outstanding() == 0;
         if all_done || drained {
             self.finish(ctx);
@@ -424,6 +512,9 @@ impl Broker {
             start_time: self.started_at,
             deadline: self.deadline_abs - self.started_at,
             budget: self.budget_abs,
+            gridlets_lost: self.lost,
+            gridlets_resubmitted: self.resubmitted,
+            gridlets_abandoned: self.abandoned,
             per_resource: self.resource_outcomes(),
             trace: self.trace.points().to_vec(),
         }

@@ -22,6 +22,9 @@ pub enum Optimization {
 }
 
 impl Optimization {
+    /// Parse a policy name as the CLI/JSON spell it (`cost`, `time`,
+    /// `cost-time`/`costtime`/`cost_time`, `none`/`noopt`); `None` for
+    /// anything else.
     pub fn parse(s: &str) -> Option<Optimization> {
         match s.to_ascii_lowercase().as_str() {
             "cost" => Some(Optimization::Cost),
@@ -32,6 +35,7 @@ impl Optimization {
         }
     }
 
+    /// Canonical display name (`parse(label())` round-trips).
     pub fn label(&self) -> &'static str {
         match self {
             Optimization::Cost => "cost",
@@ -54,14 +58,20 @@ impl std::str::FromStr for Optimization {
 /// Deadline given directly or via a D-factor (Eq 1).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum DeadlineSpec {
+    /// Absolute deadline in simulation time units.
     Absolute(f64),
+    /// D-factor in [0, 1], resolved against the discovered resources by
+    /// [`deadline_from_factor`].
     Factor(f64),
 }
 
 /// Budget given directly or via a B-factor (Eq 2).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BudgetSpec {
+    /// Absolute budget in G$.
     Absolute(f64),
+    /// B-factor in [0, 1], resolved against the discovered resources by
+    /// [`budget_from_factor`].
     Factor(f64),
 }
 
@@ -71,8 +81,11 @@ pub enum BudgetSpec {
 pub struct ExperimentSpec {
     /// The application this user runs (what jobs, when they are released).
     pub workload: WorkloadSpec,
+    /// Deadline constraint, absolute or as a D-factor.
     pub deadline: DeadlineSpec,
+    /// Budget constraint, absolute or as a B-factor.
     pub budget: BudgetSpec,
+    /// Which DBC scheduling policy the broker runs.
     pub optimization: Optimization,
 }
 
@@ -106,26 +119,31 @@ impl ExperimentSpec {
         self
     }
 
+    /// Set an absolute deadline (simulation time units).
     pub fn deadline(mut self, d: f64) -> ExperimentSpec {
         self.deadline = DeadlineSpec::Absolute(d);
         self
     }
 
+    /// Set an absolute budget (G$).
     pub fn budget(mut self, b: f64) -> ExperimentSpec {
         self.budget = BudgetSpec::Absolute(b);
         self
     }
 
+    /// Set the deadline as a D-factor (Eq 1).
     pub fn d_factor(mut self, f: f64) -> ExperimentSpec {
         self.deadline = DeadlineSpec::Factor(f);
         self
     }
 
+    /// Set the budget as a B-factor (Eq 2).
     pub fn b_factor(mut self, f: f64) -> ExperimentSpec {
         self.budget = BudgetSpec::Factor(f);
         self
     }
 
+    /// Set the DBC scheduling policy.
     pub fn optimization(mut self, o: Optimization) -> ExperimentSpec {
         self.optimization = o;
         self
@@ -151,16 +169,22 @@ pub struct Experiment {
     pub total_jobs: usize,
     /// Total MI across the declared workload (the Eq 1–2 input).
     pub total_mi: f64,
+    /// Deadline constraint, resolved by the broker at discovery time.
     pub deadline: DeadlineSpec,
+    /// Budget constraint, resolved by the broker at discovery time.
     pub budget: BudgetSpec,
+    /// Which DBC scheduling policy the broker runs.
     pub optimization: Optimization,
 }
 
 /// Per-resource outcome line (Figures 25–32 series).
 #[derive(Debug, Clone)]
 pub struct ResourceOutcome {
+    /// Resource name as the scenario declared it.
     pub name: String,
+    /// Gridlets this resource completed for the user.
     pub gridlets_completed: usize,
+    /// G$ the user spent on this resource.
     pub budget_spent: f64,
 }
 
@@ -181,6 +205,14 @@ pub struct ExperimentResult {
     pub deadline: f64,
     /// Absolute budget in effect (after Eq 2 if a factor was given).
     pub budget: f64,
+    /// Gridlets returned `Lost` after a resource failed under them (each
+    /// loss counts, so one job lost twice contributes 2).
+    pub gridlets_lost: usize,
+    /// Lost Gridlets the broker's resubmission policy put back in the pool.
+    pub gridlets_resubmitted: usize,
+    /// Lost Gridlets the policy gave up on (they terminate the experiment
+    /// as permanently unfinished work).
+    pub gridlets_abandoned: usize,
     /// Per-resource breakdown.
     pub per_resource: Vec<ResourceOutcome>,
     /// Time-series trace (Figures 28–32).
@@ -337,6 +369,9 @@ mod tests {
             start_time: 100.0,
             deadline: 2_000.0,
             budget: 10_000.0,
+            gridlets_lost: 0,
+            gridlets_resubmitted: 0,
+            gridlets_abandoned: 0,
             per_resource: vec![],
             trace: vec![],
         };

@@ -10,7 +10,7 @@ pub mod resource_view;
 pub mod trace;
 pub mod user;
 
-pub use broker::{Broker, BrokerConfig, BrokerProgress, ResourceLoad};
+pub use broker::{Broker, BrokerConfig, BrokerProgress, ResourceLoad, ResubmissionPolicy};
 pub use experiment::{
     BudgetSpec, DeadlineSpec, Experiment, ExperimentResult, ExperimentSpec, Optimization,
 };

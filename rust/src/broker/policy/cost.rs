@@ -10,11 +10,13 @@
 use super::{PolicyInput, SchedulingPolicy};
 use crate::runtime::{Advisor, AdvisorInput, ResourceSnapshot};
 
+/// Cost-optimization: cheapest resources filled to deadline capacity first.
 pub struct CostPolicy {
     advisor: Box<dyn Advisor>,
 }
 
 impl CostPolicy {
+    /// Cost policy backed by the given allocation engine.
     pub fn new(advisor: Box<dyn Advisor>) -> CostPolicy {
         CostPolicy { advisor }
     }

@@ -5,6 +5,7 @@
 
 use super::{PolicyInput, SchedulingPolicy};
 
+/// Cost-time optimization: cost-ordered groups, time-optimized within each.
 pub struct CostTimePolicy;
 
 impl SchedulingPolicy for CostTimePolicy {

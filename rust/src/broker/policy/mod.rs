@@ -18,6 +18,7 @@ use crate::runtime::Advisor;
 pub struct PolicyInput<'a> {
     /// Broker-side resource views, sorted by ascending G$/MI.
     pub views: &'a [BrokerResource],
+    /// Current simulation time.
     pub now: f64,
     /// Absolute deadline.
     pub deadline: f64,
@@ -30,6 +31,7 @@ pub struct PolicyInput<'a> {
 }
 
 impl<'a> PolicyInput<'a> {
+    /// Time remaining until the deadline (never negative).
     pub fn time_left(&self) -> f64 {
         (self.deadline - self.now).max(0.0)
     }
@@ -58,7 +60,9 @@ impl<'a> PolicyInput<'a> {
 /// A scheduling policy: desired committed totals per resource. `Send` so a
 /// broker can migrate between the sweep engine's worker threads.
 pub trait SchedulingPolicy: Send {
+    /// Short policy name for reports and CSV columns.
     fn label(&self) -> &'static str;
+    /// Desired committed job total per resource, indexed like `input.views`.
     fn allocate(&mut self, input: &PolicyInput) -> Vec<usize>;
 }
 

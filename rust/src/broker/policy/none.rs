@@ -4,6 +4,7 @@
 
 use super::{PolicyInput, SchedulingPolicy};
 
+/// None-optimization: round-robin over all resources within the constraints.
 pub struct NoOptPolicy;
 
 impl SchedulingPolicy for NoOptPolicy {

@@ -5,6 +5,7 @@
 
 use super::{PolicyInput, SchedulingPolicy};
 
+/// Time-optimization: earliest predicted finish within the budget.
 pub struct TimePolicy;
 
 impl SchedulingPolicy for TimePolicy {

@@ -13,6 +13,7 @@ const RATE_EWMA_ALPHA: f64 = 0.3;
 /// Broker-side view of one resource.
 #[derive(Debug, Clone)]
 pub struct BrokerResource {
+    /// Characteristics reported by the resource during trading.
     pub info: ResourceInfo,
     /// Gridlets committed to this resource but not yet dispatched.
     pub assigned: VecDeque<Gridlet>,
@@ -46,6 +47,8 @@ pub struct BrokerResource {
 }
 
 impl BrokerResource {
+    /// Fresh view of a just-discovered resource: nothing committed, no
+    /// measurements, optimistic rate until the first Gridlet returns.
     pub fn new(info: ResourceInfo) -> BrokerResource {
         BrokerResource {
             info,

@@ -32,6 +32,8 @@ pub struct TraceRecorder {
 }
 
 impl TraceRecorder {
+    /// Recorder sampling at most once per `min_interval` per resource
+    /// (0 records every state change).
     pub fn new(min_interval: f64) -> TraceRecorder {
         TraceRecorder {
             points: Vec::new(),
@@ -40,6 +42,8 @@ impl TraceRecorder {
         }
     }
 
+    /// Offer a sample; kept only if the state changed and the resource's
+    /// sampling interval has elapsed.
     pub fn record(&mut self, point: TracePoint) {
         self.record_fields(&point.resource, point.time, point.completed, point.committed, point.spent);
     }
@@ -80,10 +84,12 @@ impl TraceRecorder {
         self.points.push(point);
     }
 
+    /// The kept samples, in record order.
     pub fn points(&self) -> &[TracePoint] {
         &self.points
     }
 
+    /// Consume the recorder, returning the kept samples.
     pub fn into_points(self) -> Vec<TracePoint> {
         self.points
     }

@@ -45,6 +45,8 @@ pub struct UserEntity {
 }
 
 impl UserEntity {
+    /// Build a user that materializes `spec` with `seed` and drives the
+    /// given broker, reporting to `shutdown` when its experiment ends.
     pub fn new(
         name: impl Into<String>,
         broker: EntityId,
@@ -65,11 +67,14 @@ impl UserEntity {
         }
     }
 
+    /// Report the paper's Fig 15 statistics categories to `stats` when the
+    /// experiment finishes.
     pub fn with_stats(mut self, stats: EntityId) -> UserEntity {
         self.stats = Some(stats);
         self
     }
 
+    /// Delay the experiment submission (the paper's user activity model).
     pub fn with_submit_delay(mut self, delay: f64) -> UserEntity {
         assert!(delay >= 0.0);
         self.submit_delay = delay;

@@ -31,6 +31,10 @@
 //! `"testbed": "wwg"` can replace the `resources` array to pull in Table 2.
 //! A top-level `"sweep"` section (see [`parse_sweep`]) turns the file into a
 //! declarative parameter sweep over the base scenario for `repro sweep`.
+//! A top-level `"faults"` block drives resources with failure–repair
+//! processes (see [`crate::faults`]), a per-resource `"calendar"` block adds
+//! background local load, and the broker's `"resubmission"` key picks what
+//! happens to gridlets lost to failures.
 //!
 //! A user's application is either the flat task-farm keys
 //! (`gridlets`/`length_mi`/`variation`/`input_bytes`/`output_bytes` — the
@@ -52,9 +56,10 @@
 //! scenario-level defaults (see [`crate::scenario::UserSpec`]).
 
 use super::testbed::wwg_testbed;
-use crate::broker::broker::BrokerConfig;
+use crate::broker::broker::{BrokerConfig, ResubmissionPolicy};
 use crate::broker::{ExperimentSpec, Optimization};
-use crate::gridsim::{AllocPolicy, SpacePolicy};
+use crate::faults::{FaultProcess, FaultsSpec};
+use crate::gridsim::{AllocPolicy, ResourceCalendar, SpacePolicy};
 use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec};
 use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
@@ -68,7 +73,7 @@ use std::sync::Arc;
 
 const SCENARIO_KEYS: &[&str] = &[
     "seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time",
-    "sweep",
+    "sweep", "faults",
 ];
 const NETWORK_KEYS: &[&str] = &["type", "model", "rate", "latency", "capacity", "capacities"];
 const SWEEP_KEYS: &[&str] = &[
@@ -83,13 +88,22 @@ const SWEEP_KEYS: &[&str] = &[
     "trace_selectors",
     "mix_weights",
     "link_capacities",
+    "mtbf_scalings",
 ];
 const BROKER_KEYS: &[&str] =
-    &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe"];
+    &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe", "resubmission"];
+const RESUBMISSION_KEYS: &[&str] = &["policy", "max_attempts", "backoff"];
 const RESOURCE_KEYS: &[&str] = &[
     "name", "arch", "os", "machines", "pes_per_machine", "pes", "mips", "policy", "price",
-    "time_zone",
+    "time_zone", "calendar",
 ];
+const CALENDAR_KEYS: &[&str] =
+    &["time_zone", "peak_load", "off_peak_load", "holiday_load", "units_per_hour"];
+const FAULTS_KEYS: &[&str] = &["default", "overrides", "mtbf_scaling"];
+const FAULT_PROCESS_TYPES: &[&str] = &["exponential", "weibull", "trace"];
+const FAULT_EXPONENTIAL_KEYS: &[&str] = &["process", "mtbf", "mttr"];
+const FAULT_WEIBULL_KEYS: &[&str] = &["process", "mtbf", "mttr", "shape"];
+const FAULT_TRACE_KEYS: &[&str] = &["process", "intervals"];
 const USER_KEYS: &[&str] = &[
     "workload",
     "gridlets",
@@ -266,7 +280,69 @@ fn parse_broker_config(v: &Value, base: &BrokerConfig) -> Result<BrokerConfig> {
     if let Some(x) = opt_usize(v, "broker config", "max_gridlets_per_pe")? {
         config.max_gridlets_per_pe = x;
     }
+    if let Some(r) = v.get("resubmission") {
+        config.resubmission = parse_resubmission(r)?;
+    }
     Ok(config)
+}
+
+/// Parse the broker's `"resubmission"` policy for gridlets lost to resource
+/// failures: the string shorthands `"retry"` (unbounded, adaptive backoff —
+/// the default) and `"abandon"`, or an object
+/// `{"policy": "retry", "max_attempts": 3, "backoff": 25}` where
+/// `max_attempts` 0 (the default) means unbounded and `backoff` 0 (the
+/// default) means the adaptive deadline-proportional delay. The knobs only
+/// apply to `"retry"` — an `"abandon"` carrying them is rejected rather than
+/// silently ignoring a stated bound.
+fn parse_resubmission(v: &Value) -> Result<ResubmissionPolicy> {
+    let parse_name = |s: &str| -> Result<ResubmissionPolicy> {
+        match s {
+            "retry" => Ok(ResubmissionPolicy::default_retry()),
+            "abandon" => Ok(ResubmissionPolicy::Abandon),
+            other => {
+                let hint = nearest(other, &["retry", "abandon"])
+                    .map(|s| format!(" (did you mean {s:?}?)"))
+                    .unwrap_or_default();
+                bail!("unknown resubmission policy {other:?}{hint}; allowed: retry, abandon")
+            }
+        }
+    };
+    match v {
+        Value::Str(s) => parse_name(s),
+        Value::Obj(_) => {
+            reject_unknown_keys(v, "broker resubmission", RESUBMISSION_KEYS)?;
+            let name = opt_str(v, "broker resubmission", "policy")?
+                .ok_or_else(|| anyhow!("broker resubmission: missing \"policy\""))?;
+            let policy = parse_name(name)?;
+            match policy {
+                ResubmissionPolicy::Abandon => {
+                    for key in ["max_attempts", "backoff"] {
+                        if v.get(key).is_some() {
+                            bail!(
+                                "broker resubmission: {key:?} only applies to \
+                                 {{\"policy\": \"retry\"}}"
+                            );
+                        }
+                    }
+                    Ok(policy)
+                }
+                ResubmissionPolicy::RetryWithBackoff { mut max_attempts, mut backoff } => {
+                    if let Some(n) = opt_usize(v, "broker resubmission", "max_attempts")? {
+                        max_attempts = n;
+                    }
+                    if let Some(b) = opt_f64(v, "broker resubmission", "backoff")? {
+                        check_link_param("broker resubmission", "backoff", b, true)?;
+                        backoff = b;
+                    }
+                    Ok(ResubmissionPolicy::RetryWithBackoff { max_attempts, backoff })
+                }
+            }
+        }
+        _ => bail!(
+            "broker resubmission must be \"retry\", \"abandon\" or an object like \
+             {{\"policy\": \"retry\", \"max_attempts\": 3}}"
+        ),
+    }
 }
 
 /// Parse a scenario from JSON text. A file carrying a `"sweep"` section is
@@ -371,12 +447,23 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
         Some(net) => parse_network(net)?,
     };
 
+    let faults = match root.get("faults") {
+        None => None,
+        Some(f) => {
+            let names: Vec<&str> = resources.iter().map(|r| r.name.as_str()).collect();
+            Some(parse_faults(f, &names)?)
+        }
+    };
+
     let mut builder = Scenario::builder()
         .resources(resources)
         .seed(seed)
         .advisor(advisor)
         .broker_config(broker_default)
         .network(network);
+    if let Some(f) = faults {
+        builder = builder.faults(f);
+    }
     for u in users {
         builder = builder.user(u);
     }
@@ -469,6 +556,139 @@ fn parse_network(net: &Value) -> Result<NetworkSpec> {
     }
 }
 
+/// Parse the top-level `"faults"` block into a
+/// [`FaultsSpec`]: a `"default"` failure–repair
+/// process applied to every resource, plus per-resource `"overrides"` keyed
+/// by resource name, plus an optional `"mtbf_scaling"` severity factor
+/// (multiplies uptimes at sampling time; the sweep axis `mtbf_scalings`
+/// overrides it per cell).
+///
+/// ```json
+/// "faults": {
+///   "default": {"process": "exponential", "mtbf": 500, "mttr": 50},
+///   "overrides": {"R3": {"process": "trace",
+///                        "intervals": [[100, 150], [400, 420]]}}
+/// }
+/// ```
+///
+/// Each process object names its `"process"` — `"exponential"`
+/// (`mtbf`/`mttr`), `"weibull"` (`mtbf`/`mttr`/`shape`) or `"trace"`
+/// (`intervals`, an array of `[start, end]` down-windows) — and rejects the
+/// other processes' knobs via its own allowed-key list. Parameter sanity
+/// (finite, positive, sorted non-overlapping intervals) is enforced by
+/// [`FaultsSpec::validate`] before the spec is returned.
+fn parse_faults(v: &Value, resource_names: &[&str]) -> Result<FaultsSpec> {
+    reject_unknown_keys(v, "faults", FAULTS_KEYS)?;
+    let mut spec = FaultsSpec::default();
+    if let Some(d) = v.get("default") {
+        spec.default = Some(parse_fault_process(d, "faults default")?);
+    }
+    match v.get("overrides") {
+        None => {}
+        Some(Value::Obj(fields)) => {
+            let mut seen = std::collections::BTreeSet::new();
+            for (name, process) in fields {
+                if !seen.insert(name.as_str()) {
+                    bail!("faults overrides: duplicate resource {name:?}");
+                }
+                if !resource_names.contains(&name.as_str()) {
+                    let hint = nearest(name, resource_names)
+                        .map(|s| format!(" (did you mean {s:?}?)"))
+                        .unwrap_or_default();
+                    bail!(
+                        "faults overrides: unknown resource {name:?}{hint}; \
+                         scenario has: {}",
+                        resource_names.join(", ")
+                    );
+                }
+                let what = format!("faults override {name:?}");
+                spec.overrides.push((name.clone(), parse_fault_process(process, &what)?));
+            }
+        }
+        Some(_) => bail!(
+            "faults: \"overrides\" must be an object mapping resource names to \
+             process objects, e.g. {{\"R0\": {{\"process\": \"exponential\", \
+             \"mtbf\": 500, \"mttr\": 50}}}}"
+        ),
+    }
+    if spec.default.is_none() && spec.overrides.is_empty() {
+        bail!(
+            "faults: give a \"default\" process or at least one entry in \
+             \"overrides\" (an empty block drives nothing)"
+        );
+    }
+    if let Some(s) = opt_f64(v, "faults", "mtbf_scaling")? {
+        if !s.is_finite() || s <= 0.0 {
+            bail!("faults: \"mtbf_scaling\" must be finite and > 0, got {s}");
+        }
+        spec.mtbf_scaling = s;
+    }
+    spec.validate().map_err(|e| anyhow!("faults: {e}"))?;
+    Ok(spec)
+}
+
+/// Parse one failure–repair process object (see [`parse_faults`]).
+fn parse_fault_process(v: &Value, what: &str) -> Result<FaultProcess> {
+    if !matches!(v, Value::Obj(_)) {
+        bail!("{what} must be a JSON object");
+    }
+    let ty = opt_str(v, what, "process")?.ok_or_else(|| {
+        anyhow!("{what}: missing \"process\" (one of: {})", FAULT_PROCESS_TYPES.join(", "))
+    })?;
+    match ty {
+        "exponential" => {
+            reject_unknown_keys(v, what, FAULT_EXPONENTIAL_KEYS)?;
+            Ok(FaultProcess::Exponential {
+                mtbf: v.req_f64("mtbf").context(what.to_string())?,
+                mttr: v.req_f64("mttr").context(what.to_string())?,
+            })
+        }
+        "weibull" => {
+            reject_unknown_keys(v, what, FAULT_WEIBULL_KEYS)?;
+            Ok(FaultProcess::Weibull {
+                mtbf: v.req_f64("mtbf").context(what.to_string())?,
+                mttr: v.req_f64("mttr").context(what.to_string())?,
+                shape: v.req_f64("shape").context(what.to_string())?,
+            })
+        }
+        "trace" => {
+            reject_unknown_keys(v, what, FAULT_TRACE_KEYS)?;
+            let arr = v
+                .get("intervals")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| {
+                    anyhow!("{what}: missing \"intervals\" array of [start, end] pairs")
+                })?;
+            let intervals = arr
+                .iter()
+                .enumerate()
+                .map(|(i, pair)| {
+                    let p = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                        anyhow!("{what}: interval #{i} must be a [start, end] pair")
+                    })?;
+                    let start = p[0].as_f64().ok_or_else(|| {
+                        anyhow!("{what}: interval #{i} start must be a number")
+                    })?;
+                    let end = p[1].as_f64().ok_or_else(|| {
+                        anyhow!("{what}: interval #{i} end must be a number")
+                    })?;
+                    Ok((start, end))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(FaultProcess::Trace { intervals })
+        }
+        other => {
+            let hint = nearest(other, FAULT_PROCESS_TYPES)
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            bail!(
+                "{what}: unknown process {other:?}{hint}; allowed: {}",
+                FAULT_PROCESS_TYPES.join(", ")
+            )
+        }
+    }
+}
+
 /// Shared guard for link parameters (baud rates, flow capacities,
 /// latencies, per-user link rates): NaN, infinite or negative values — and
 /// zero where zero would stall every transfer — are configuration bugs and
@@ -504,6 +724,13 @@ fn parse_resource(v: &Value) -> Result<ResourceSpec> {
         Some(n) => n,
         None => opt_usize(v, "resource", "pes")?.unwrap_or(1),
     };
+    let time_zone = opt_f64(v, "resource", "time_zone")?.unwrap_or(0.0);
+    let calendar = match v.get("calendar") {
+        None => None,
+        Some(c) => Some(
+            parse_calendar(c, time_zone).with_context(|| format!("resource {name}"))?,
+        ),
+    };
     Ok(ResourceSpec {
         arch: opt_str(v, "resource", "arch")?.unwrap_or("generic").to_string(),
         os: opt_str(v, "resource", "os")?.unwrap_or("linux").to_string(),
@@ -512,10 +739,45 @@ fn parse_resource(v: &Value) -> Result<ResourceSpec> {
         mips_per_pe: v.req_f64("mips").with_context(|| format!("resource {name}"))?,
         policy,
         price: v.req_f64("price").with_context(|| format!("resource {name}"))?,
-        time_zone: opt_f64(v, "resource", "time_zone")?.unwrap_or(0.0),
-        calendar: None,
+        time_zone,
+        calendar,
         name,
     })
+}
+
+/// Parse a resource's `"calendar"` block into a [`ResourceCalendar`]
+/// (background local load by business hours, weekends and holidays). Every
+/// key is optional: loads default to 0 (no background load), `time_zone`
+/// defaults to the *resource's* time zone (one grid site, one clock), and
+/// `units_per_hour` defaults to 1. Load factors must lie in `[0, 1)` — a
+/// load of 1 would stop the resource forever, which is what the `faults`
+/// block is for — and NaN fails the same range check.
+fn parse_calendar(v: &Value, resource_time_zone: f64) -> Result<ResourceCalendar> {
+    reject_unknown_keys(v, "calendar", CALENDAR_KEYS)?;
+    let mut cal = ResourceCalendar::no_load();
+    cal.time_zone = opt_f64(v, "calendar", "time_zone")?.unwrap_or(resource_time_zone);
+    if !cal.time_zone.is_finite() {
+        bail!("calendar: \"time_zone\" must be finite, got {}", cal.time_zone);
+    }
+    for (key, slot) in [
+        ("peak_load", &mut cal.peak_load),
+        ("off_peak_load", &mut cal.off_peak_load),
+        ("holiday_load", &mut cal.holiday_load),
+    ] {
+        if let Some(load) = opt_f64(v, "calendar", key)? {
+            if !(0.0..1.0).contains(&load) {
+                bail!("calendar: {key:?} must be in [0, 1), got {load}");
+            }
+            *slot = load;
+        }
+    }
+    if let Some(u) = opt_f64(v, "calendar", "units_per_hour")? {
+        if !u.is_finite() || u <= 0.0 {
+            bail!("calendar: \"units_per_hour\" must be finite and > 0, got {u}");
+        }
+        cal.units_per_hour = u;
+    }
+    Ok(cal)
 }
 
 /// Typed byte-size getter (non-negative integer, strict like `opt_usize`).
@@ -1028,6 +1290,11 @@ fn parse_sweep_section(v: &Value, base: Scenario) -> Result<SweepSpec> {
             check_link_param("sweep link_capacities", "capacity", *c, false)?;
         }
         spec = spec.link_capacities(caps);
+    }
+    if let Some(ss) = opt_f64_array(v, "sweep", "mtbf_scalings")? {
+        // Positivity and the faulted-base requirement are enforced by
+        // SweepSpec::validate(), which parse_sweep_at always runs.
+        spec = spec.mtbf_scalings(ss);
     }
     if let Some(n) = opt_usize(v, "sweep", "replications")? {
         spec = spec.replications(n);
@@ -1821,6 +2088,213 @@ mod tests {
         .to_string();
         assert!(err.contains("mix"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parses_faults_block() {
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"gridlets": 10, "deadline": 3100, "budget": 22000}],
+            "faults": {
+                "default": {"process": "exponential", "mtbf": 500, "mttr": 50},
+                "overrides": {
+                    "R3": {"process": "weibull", "mtbf": 800, "mttr": 40, "shape": 1.5},
+                    "R8": {"process": "trace", "intervals": [[100, 150], [400, 420]]}
+                },
+                "mtbf_scaling": 0.5
+            }
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        let faults = s.faults.as_ref().unwrap();
+        assert_eq!(
+            faults.default,
+            Some(FaultProcess::Exponential { mtbf: 500.0, mttr: 50.0 })
+        );
+        assert_eq!(faults.mtbf_scaling, 0.5);
+        assert_eq!(
+            faults.process_for("R3"),
+            Some(&FaultProcess::Weibull { mtbf: 800.0, mttr: 40.0, shape: 1.5 })
+        );
+        assert_eq!(
+            faults.process_for("R8"),
+            Some(&FaultProcess::Trace { intervals: vec![(100.0, 150.0), (400.0, 420.0)] })
+        );
+        // Unlisted resources fall back to the default.
+        assert_eq!(
+            faults.process_for("R0"),
+            Some(&FaultProcess::Exponential { mtbf: 500.0, mttr: 50.0 })
+        );
+
+        // A scenario without the block carries no spec at all.
+        let clean = parse_scenario(r#"{"testbed": "wwg", "users": [{}]}"#).unwrap();
+        assert!(clean.faults.is_none());
+    }
+
+    #[test]
+    fn faults_block_rejects_bad_input() {
+        let wrap = |faults: &str| {
+            format!(r#"{{"testbed": "wwg", "users": [{{}}], "faults": {faults}}}"#)
+        };
+        for (faults, needle) in [
+            // Typo'd block key, with a hint.
+            (r#"{"defualt": {"process": "exponential", "mtbf": 1, "mttr": 1}}"#, "default"),
+            // Typo'd process name, with a hint.
+            (r#"{"default": {"process": "expnential", "mtbf": 1, "mttr": 1}}"#, "exponential"),
+            // Wrong process knob: shape belongs to weibull only.
+            (
+                r#"{"default": {"process": "exponential", "mtbf": 1, "mttr": 1,
+                               "shape": 2}}"#,
+                "shape",
+            ),
+            // Missing required parameters.
+            (r#"{"default": {"process": "exponential", "mtbf": 1}}"#, "mttr"),
+            (r#"{"default": {"process": "weibull", "mtbf": 1, "mttr": 1}}"#, "shape"),
+            // Non-finite / non-positive parameters die in validate().
+            (r#"{"default": {"process": "exponential", "mtbf": -5, "mttr": 1}}"#, "mtbf"),
+            (r#"{"default": {"process": "exponential", "mtbf": 1e999, "mttr": 1}}"#, "mtbf"),
+            // Trace intervals must be sorted, non-overlapping pairs.
+            (
+                r#"{"default": {"process": "trace", "intervals": [[100, 50]]}}"#,
+                "end",
+            ),
+            (
+                r#"{"default": {"process": "trace", "intervals": [[0, 10], [5, 20]]}}"#,
+                "overlap",
+            ),
+            (r#"{"default": {"process": "trace", "intervals": [[1, 2, 3]]}}"#, "pair"),
+            // Overrides must name real resources (did-you-mean included).
+            (
+                r#"{"overrides": {"R99": {"process": "exponential",
+                                          "mtbf": 1, "mttr": 1}}}"#,
+                "R99",
+            ),
+            // An empty block drives nothing — reject it loudly.
+            (r#"{}"#, "default"),
+            // Severity factor must be positive and finite.
+            (
+                r#"{"default": {"process": "exponential", "mtbf": 1, "mttr": 1},
+                    "mtbf_scaling": 0}"#,
+                "mtbf_scaling",
+            ),
+        ] {
+            let err = format!("{:#}", parse_scenario(&wrap(faults)).unwrap_err());
+            assert!(err.contains(needle), "{faults} → {err}");
+        }
+    }
+
+    #[test]
+    fn parses_resource_calendar() {
+        let text = r#"{
+            "resources": [
+                {"name": "A", "mips": 100, "price": 1, "time_zone": 9,
+                 "calendar": {"peak_load": 0.8, "off_peak_load": 0.2,
+                              "holiday_load": 0.05, "units_per_hour": 3600}},
+                {"name": "B", "mips": 100, "price": 1,
+                 "calendar": {"time_zone": -5, "peak_load": 0.5}}
+            ],
+            "users": [{"gridlets": 5}]
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        let a = s.resources[0].calendar.as_ref().unwrap();
+        assert_eq!(a.time_zone, 9.0, "calendar inherits the resource's time zone");
+        assert_eq!((a.peak_load, a.off_peak_load, a.holiday_load), (0.8, 0.2, 0.05));
+        assert_eq!(a.units_per_hour, 3600.0);
+        let b = s.resources[1].calendar.as_ref().unwrap();
+        assert_eq!(b.time_zone, -5.0, "explicit calendar time zone wins");
+        assert_eq!((b.off_peak_load, b.units_per_hour), (0.0, 1.0), "defaults");
+        assert!(s.resources[0].calendar.is_some());
+
+        for (calendar, needle) in [
+            // Loads live in [0, 1): a load of 1 stops the resource forever.
+            (r#"{"peak_load": 1.0}"#, "peak_load"),
+            (r#"{"off_peak_load": -0.1}"#, "off_peak_load"),
+            // Typo'd key with a hint.
+            (r#"{"peek_load": 0.5}"#, "peak_load"),
+            // Zero units_per_hour would divide simulation time by zero.
+            (r#"{"units_per_hour": 0}"#, "units_per_hour"),
+        ] {
+            let text = format!(
+                r#"{{"resources": [{{"name": "A", "mips": 1, "price": 1,
+                     "calendar": {calendar}}}], "users": [{{}}]}}"#
+            );
+            let err = format!("{:#}", parse_scenario(&text).unwrap_err());
+            assert!(err.contains(needle), "{calendar} → {err}");
+        }
+    }
+
+    #[test]
+    fn parses_broker_resubmission_policy() {
+        // String shorthands.
+        let s = parse_scenario(
+            r#"{"testbed": "wwg", "broker": {"resubmission": "abandon"}, "users": [{}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.broker_config.resubmission, ResubmissionPolicy::Abandon);
+        let s = parse_scenario(
+            r#"{"testbed": "wwg", "broker": {"resubmission": "retry"}, "users": [{}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.broker_config.resubmission, ResubmissionPolicy::default_retry());
+
+        // Object form with bounds, per user.
+        let s = parse_scenario(
+            r#"{"testbed": "wwg", "users": [
+                {"broker": {"resubmission": {"policy": "retry", "max_attempts": 3,
+                                             "backoff": 25}}}]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            s.users[0].broker.as_ref().unwrap().resubmission,
+            ResubmissionPolicy::RetryWithBackoff { max_attempts: 3, backoff: 25.0 }
+        );
+
+        // The default (no key) keeps pre-reliability behavior.
+        let s = parse_scenario(r#"{"testbed": "wwg", "users": [{}]}"#).unwrap();
+        assert_eq!(s.broker_config.resubmission, ResubmissionPolicy::default_retry());
+
+        for (broker, needle) in [
+            (r#"{"resubmission": "abandn"}"#, "abandon"),
+            (r#"{"resubmission": {"policy": "abandon", "max_attempts": 3}}"#, "retry"),
+            (r#"{"resubmission": {"max_attempts": 3}}"#, "policy"),
+            (r#"{"resubmission": {"policy": "retry", "backoff": -1}}"#, "backoff"),
+            (r#"{"resubmission": 3}"#, "object"),
+        ] {
+            let text = format!(
+                r#"{{"testbed": "wwg", "broker": {broker}, "users": [{{}}]}}"#
+            );
+            let err = format!("{:#}", parse_scenario(&text).unwrap_err());
+            assert!(err.contains(needle), "{broker} → {err}");
+        }
+    }
+
+    #[test]
+    fn sweep_mtbf_scalings_axis_parses_and_demands_faults() {
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"gridlets": 10, "deadline": 3100, "budget": 22000}],
+            "faults": {"default": {"process": "exponential", "mtbf": 500, "mttr": 50}},
+            "sweep": {"mtbf_scalings": [0.25, 0.5, 1, 2], "replications": 2}
+        }"#;
+        let spec = parse_sweep(text).unwrap();
+        assert_eq!(spec.mtbf_scalings, vec![0.25, 0.5, 1.0, 2.0]);
+        assert_eq!(spec.cell_count(), 8);
+
+        // Without a faults block the axis has nothing to scale.
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"mtbf_scalings": [0.5]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("faults"), "{err}");
+        // Typo'd axis name gets the usual hint.
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"mtbf_scaling": [0.5]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mtbf_scalings"), "{err}");
     }
 
     #[test]

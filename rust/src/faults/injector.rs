@@ -1,0 +1,264 @@
+//! The fault-injector entity: walks each resource's failure–repair process
+//! and delivers `RESOURCE_FAIL`/`RESOURCE_RECOVER` at the sampled times.
+//!
+//! Event flow: at simulation start the injector samples each faulted
+//! resource's first uptime (or reads its first trace interval) and schedules
+//! one internal [`tags::FAULT_TICK`] per resource, carrying the resource's
+//! index as a [`Msg::Control`] payload. Each tick delivers the pending
+//! transition to the resource via `send_delayed` — control-plane, so fault
+//! times are *never* distorted by the network model — then samples the next
+//! transition and re-arms itself. Exactly one pending self-event per
+//! resource keeps queue growth bounded; when the shutdown entity stops the
+//! kernel, the injector's tail events simply die with the queue.
+
+use super::{weibull, FaultProcess, FaultsSpec, FAULT_SEED_SALT};
+use crate::des::{Ctx, EntityId, Event};
+use crate::gridsim::messages::Msg;
+use crate::gridsim::tags;
+use crate::util::rng::Rng;
+
+/// Per-resource process state.
+#[derive(Debug)]
+struct ProcessState {
+    /// Resource entity the events are delivered to.
+    target: EntityId,
+    process: FaultProcess,
+    /// Uptime multiplier (see [`FaultsSpec::mtbf_scaling`]).
+    scaling: f64,
+    rng: Rng,
+    /// Current availability (true until the first failure fires).
+    up: bool,
+    /// Tag the armed `FAULT_TICK` will deliver to the resource.
+    pending: i64,
+    /// Next unconsumed `Trace` interval index.
+    next_interval: usize,
+}
+
+impl ProcessState {
+    /// Advance one transition: the delay from `now` to the next state flip
+    /// and the resource-facing tag to deliver then. `None` when the process
+    /// is exhausted (a `Trace` past its last interval).
+    fn step(&mut self, now: f64) -> Option<(f64, i64)> {
+        if self.up {
+            let delay = match &self.process {
+                FaultProcess::Exponential { mtbf, .. } => {
+                    self.rng.exponential(mtbf * self.scaling)
+                }
+                FaultProcess::Weibull { mtbf, shape, .. } => {
+                    weibull(&mut self.rng, mtbf * self.scaling, *shape)
+                }
+                FaultProcess::Trace { intervals } => {
+                    let (start, _) = *intervals.get(self.next_interval)?;
+                    (start * self.scaling - now).max(0.0)
+                }
+            };
+            self.up = false;
+            Some((delay, tags::RESOURCE_FAIL))
+        } else {
+            let delay = match &self.process {
+                FaultProcess::Exponential { mttr, .. }
+                | FaultProcess::Weibull { mttr, .. } => self.rng.exponential(*mttr),
+                FaultProcess::Trace { intervals } => {
+                    // Scaling shifts the failure onset but preserves the
+                    // repair duration.
+                    let (start, end) = intervals[self.next_interval];
+                    self.next_interval += 1;
+                    end - start
+                }
+            };
+            self.up = true;
+            Some((delay, tags::RESOURCE_RECOVER))
+        }
+    }
+}
+
+/// DES entity driving every configured failure–repair process.
+///
+/// Built by the session only when the scenario carries a
+/// [`FaultsSpec`]; scenarios without one get no injector entity at all, so
+/// their event streams (and reports) are byte-identical to a build without
+/// this subsystem.
+pub struct FaultInjector {
+    name: String,
+    states: Vec<ProcessState>,
+}
+
+impl FaultInjector {
+    /// Build the injector for `spec` over `resources` — the scenario's
+    /// resource list as `(entity_id, name)` pairs, in resource-index order.
+    /// Resources whose name resolves to no process are skipped entirely.
+    ///
+    /// `seed` is the scenario seed: each resource's sampler derives a
+    /// dedicated stream `Rng::new(seed ^ FAULT_SEED_SALT).derive(index)`,
+    /// independent of the per-user workload streams.
+    pub fn new(spec: &FaultsSpec, resources: &[(EntityId, String)], seed: u64) -> FaultInjector {
+        let root = Rng::new(seed ^ FAULT_SEED_SALT);
+        let states = resources
+            .iter()
+            .enumerate()
+            .filter_map(|(k, (id, name))| {
+                spec.process_for(name).map(|p| ProcessState {
+                    target: *id,
+                    process: p.clone(),
+                    scaling: spec.mtbf_scaling,
+                    rng: root.derive(k as u64),
+                    up: true,
+                    pending: tags::INSIGNIFICANT,
+                    next_interval: 0,
+                })
+            })
+            .collect();
+        FaultInjector { name: "FaultInjector".into(), states }
+    }
+
+    /// Number of resources with an active failure–repair process.
+    pub fn driven(&self) -> usize {
+        self.states.len()
+    }
+
+    fn arm(state: &mut ProcessState, k: usize, ctx: &mut Ctx<Msg>) {
+        if let Some((delay, tag)) = state.step(ctx.now()) {
+            state.pending = tag;
+            ctx.schedule_self(delay, tags::FAULT_TICK, Some(Msg::Control(k as u64)));
+        }
+    }
+}
+
+impl crate::des::Entity<Msg> for FaultInjector {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_start(&mut self, ctx: &mut Ctx<Msg>) {
+        for (k, state) in self.states.iter_mut().enumerate() {
+            Self::arm(state, k, ctx);
+        }
+    }
+
+    fn on_event(&mut self, ctx: &mut Ctx<Msg>, mut ev: Event<Msg>) {
+        match ev.tag {
+            tags::FAULT_TICK => {
+                let Msg::Control(k) = ev.take_data() else {
+                    panic!("FAULT_TICK without a resource index payload")
+                };
+                let k = k as usize;
+                let state = &mut self.states[k];
+                ctx.send_delayed(state.target, 0.0, state.pending, None);
+                Self::arm(state, k, ctx);
+            }
+            tags::INSIGNIFICANT => {}
+            other => panic!("fault injector got unexpected tag {other}"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(process: FaultProcess, scaling: f64) -> ProcessState {
+        ProcessState {
+            target: 0,
+            process,
+            scaling,
+            rng: Rng::new(11 ^ FAULT_SEED_SALT).derive(0),
+            up: true,
+            pending: tags::INSIGNIFICANT,
+            next_interval: 0,
+        }
+    }
+
+    #[test]
+    fn exponential_alternates_fail_recover() {
+        let mut st = state(FaultProcess::Exponential { mtbf: 100.0, mttr: 5.0 }, 1.0);
+        let mut now = 0.0;
+        let mut expect_fail = true;
+        for _ in 0..20 {
+            let (delay, tag) = st.step(now).unwrap();
+            assert!(delay > 0.0);
+            let want = if expect_fail { tags::RESOURCE_FAIL } else { tags::RESOURCE_RECOVER };
+            assert_eq!(tag, want);
+            now += delay;
+            expect_fail = !expect_fail;
+        }
+    }
+
+    #[test]
+    fn scaling_scales_uptimes_only() {
+        let mut base = state(FaultProcess::Exponential { mtbf: 100.0, mttr: 5.0 }, 1.0);
+        let mut half = state(FaultProcess::Exponential { mtbf: 100.0, mttr: 5.0 }, 0.5);
+        for i in 0..10 {
+            let (db, _) = base.step(0.0).unwrap();
+            let (dh, _) = half.step(0.0).unwrap();
+            if i % 2 == 0 {
+                // Uptime: same uniform draw, scaled mean → exactly half.
+                assert!((dh - db * 0.5).abs() <= 1e-12 * db.max(1.0), "{dh} != {db}/2");
+            } else {
+                // Repair: untouched by scaling.
+                assert_eq!(dh, db);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_replays_intervals_and_ends() {
+        let mut st = state(
+            FaultProcess::Trace { intervals: vec![(10.0, 14.0), (30.0, 31.0)] },
+            1.0,
+        );
+        let (d, tag) = st.step(0.0).unwrap();
+        assert_eq!((d, tag), (10.0, tags::RESOURCE_FAIL));
+        let (d, tag) = st.step(10.0).unwrap();
+        assert_eq!((d, tag), (4.0, tags::RESOURCE_RECOVER));
+        let (d, tag) = st.step(14.0).unwrap();
+        assert_eq!((d, tag), (16.0, tags::RESOURCE_FAIL));
+        let (d, tag) = st.step(30.0).unwrap();
+        assert_eq!((d, tag), (1.0, tags::RESOURCE_RECOVER));
+        assert!(st.step(31.0).is_none(), "trace exhausted → process stops");
+    }
+
+    #[test]
+    fn trace_scaling_shifts_onset_keeps_duration() {
+        let mut st = state(FaultProcess::Trace { intervals: vec![(10.0, 14.0)] }, 0.5);
+        let (d, _) = st.step(0.0).unwrap();
+        assert_eq!(d, 5.0, "onset scaled");
+        let (d, _) = st.step(5.0).unwrap();
+        assert_eq!(d, 4.0, "repair duration preserved");
+    }
+
+    #[test]
+    fn injector_skips_unfaulted_resources() {
+        let spec = FaultsSpec::default().override_for(
+            "R1",
+            FaultProcess::Exponential { mtbf: 10.0, mttr: 1.0 },
+        );
+        let resources = vec![(3, "R0".to_string()), (4, "R1".to_string())];
+        let inj = FaultInjector::new(&spec, &resources, 42);
+        assert_eq!(inj.driven(), 1);
+        assert_eq!(inj.states[0].target, 4);
+    }
+
+    #[test]
+    fn per_resource_streams_are_independent_of_list_prefix() {
+        // The stream derives from the resource *index*, so two injectors
+        // over the same list produce identical samples resource by resource.
+        let spec = FaultsSpec::all(FaultProcess::Exponential { mtbf: 10.0, mttr: 1.0 });
+        let resources =
+            vec![(3, "R0".to_string()), (4, "R1".to_string()), (5, "R2".to_string())];
+        let mut a = FaultInjector::new(&spec, &resources, 7);
+        let mut b = FaultInjector::new(&spec, &resources, 7);
+        for k in 0..3 {
+            assert_eq!(a.states[k].step(0.0), b.states[k].step(0.0));
+        }
+        // Different seeds give different schedules.
+        let mut c = FaultInjector::new(&spec, &resources, 8);
+        assert_ne!(a.states[0].step(0.0), c.states[0].step(0.0));
+    }
+}

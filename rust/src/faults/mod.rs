@@ -1,0 +1,271 @@
+//! Reliability layer — stochastic failure–repair processes per resource.
+//!
+//! Production grids lose resources; the paper's §3.6 resource dynamics and
+//! ROADMAP item 5 call for availability modeling on top of the kernel-level
+//! `RESOURCE_FAIL`/`RESOURCE_RECOVER` hooks. This module supplies the
+//! missing driver: a declarative [`FaultsSpec`] (attached to a
+//! [`crate::scenario::Scenario`]) selects a [`FaultProcess`] per resource,
+//! and the [`FaultInjector`] DES entity walks each process, delivering
+//! failure and recovery events at the sampled transition times.
+//!
+//! ## Determinism contract
+//!
+//! Fault sampling draws from a dedicated RNG stream per resource, derived
+//! from the scenario seed (`Rng::new(seed ^ SALT).derive(resource_index)`),
+//! fully independent of the per-user workload streams. Two consequences:
+//!
+//! * the same seed always produces the same fault schedule (byte-identical
+//!   reports at any `--jobs` value), and
+//! * common random numbers hold across sweep cells: an
+//!   [`mtbf_scaling`](FaultsSpec::mtbf_scaling) of `s` multiplies the same
+//!   underlying uniform draws, so uptime samples scale *linearly* in `s`
+//!   and the number of failures in a fixed horizon is monotone in `s`.
+//!
+//! Repair times are deliberately **not** scaled — `mtbf_scaling` sweeps
+//! stress how often resources fail, not how long repairs take.
+
+mod injector;
+
+pub use injector::FaultInjector;
+
+use crate::util::rng::Rng;
+
+/// Seed salt separating the fault-injection RNG universe from the per-user
+/// workload streams (which derive directly from the scenario seed).
+pub const FAULT_SEED_SALT: u64 = 0xD1CE_FA17_5EED_0001;
+
+/// One resource's failure–repair process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultProcess {
+    /// Memoryless failures: uptime ~ Exp(`mtbf`), downtime ~ Exp(`mttr`).
+    Exponential {
+        /// Mean time between failures (mean uptime), simulation time units.
+        mtbf: f64,
+        /// Mean time to repair (mean downtime), simulation time units.
+        mttr: f64,
+    },
+    /// Weibull uptimes (aging hardware: `shape > 1` wears out, `shape < 1`
+    /// exhibits infant mortality); downtime stays Exp(`mttr`).
+    Weibull {
+        /// Weibull *scale* (characteristic life): ~63.2% of uptimes fall
+        /// below `mtbf`. At `shape = 1` this is exactly Exp(`mtbf`).
+        mtbf: f64,
+        /// Mean time to repair (exponential), simulation time units.
+        mttr: f64,
+        /// Weibull shape parameter `k > 0`.
+        shape: f64,
+    },
+    /// Explicit down intervals `(start, end)` in ascending, non-overlapping
+    /// simulation time (replayed availability traces). The resource is up
+    /// outside the intervals and stays up after the last one.
+    Trace {
+        /// Down intervals as `(start, end)` pairs, `start < end`, sorted.
+        intervals: Vec<(f64, f64)>,
+    },
+}
+
+impl FaultProcess {
+    /// Validate parameter sanity; returns a human-readable complaint.
+    ///
+    /// The strict JSON loader rejects malformed processes with its own
+    /// contextual errors; this is the programmatic-API safety net.
+    pub fn validate(&self) -> Result<(), String> {
+        let pos = |v: f64, what: &str| -> Result<(), String> {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("fault process {what} must be finite and positive, got {v}"))
+            }
+        };
+        match self {
+            FaultProcess::Exponential { mtbf, mttr } => {
+                pos(*mtbf, "mtbf")?;
+                pos(*mttr, "mttr")
+            }
+            FaultProcess::Weibull { mtbf, mttr, shape } => {
+                pos(*mtbf, "mtbf")?;
+                pos(*mttr, "mttr")?;
+                pos(*shape, "shape")
+            }
+            FaultProcess::Trace { intervals } => {
+                let mut prev_end = 0.0_f64;
+                for &(start, end) in intervals {
+                    if !(start.is_finite() && end.is_finite() && start >= 0.0) {
+                        return Err(format!(
+                            "trace interval ({start}, {end}) must be finite and non-negative"
+                        ));
+                    }
+                    if end <= start {
+                        return Err(format!(
+                            "trace interval ({start}, {end}) must have end > start"
+                        ));
+                    }
+                    if start < prev_end {
+                        return Err(format!(
+                            "trace interval ({start}, {end}) overlaps or precedes the previous one"
+                        ));
+                    }
+                    prev_end = end;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Scenario-level fault configuration: which process drives each resource.
+///
+/// Overrides are a name-keyed `Vec` (not a map) so the spec stays
+/// `PartialEq` with a deterministic `Debug` — sweep checkpoint digests
+/// stream the `Debug` form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsSpec {
+    /// Process applied to every resource without an explicit override;
+    /// `None` means un-overridden resources never fail.
+    pub default: Option<FaultProcess>,
+    /// Per-resource overrides, keyed by resource *name*.
+    pub overrides: Vec<(String, FaultProcess)>,
+    /// Multiplier on uptime samples (and trace failure onsets) — the sweep
+    /// axis knob. `1.0` leaves the configured processes untouched; `< 1`
+    /// makes resources fail more often. Repair durations are never scaled.
+    pub mtbf_scaling: f64,
+}
+
+impl Default for FaultsSpec {
+    fn default() -> FaultsSpec {
+        FaultsSpec { default: None, overrides: Vec::new(), mtbf_scaling: 1.0 }
+    }
+}
+
+impl FaultsSpec {
+    /// A spec with one default process for every resource.
+    pub fn all(process: FaultProcess) -> FaultsSpec {
+        FaultsSpec { default: Some(process), ..FaultsSpec::default() }
+    }
+
+    /// Builder-style per-resource override.
+    pub fn override_for(mut self, name: impl Into<String>, process: FaultProcess) -> FaultsSpec {
+        self.overrides.push((name.into(), process));
+        self
+    }
+
+    /// Builder-style MTBF scaling.
+    pub fn mtbf_scaling(mut self, s: f64) -> FaultsSpec {
+        assert!(s.is_finite() && s > 0.0, "mtbf scaling must be finite and positive");
+        self.mtbf_scaling = s;
+        self
+    }
+
+    /// The process driving resource `name`, if any (override beats default).
+    pub fn process_for(&self, name: &str) -> Option<&FaultProcess> {
+        self.overrides
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p)
+            .or(self.default.as_ref())
+    }
+
+    /// Validate every configured process ([`FaultProcess::validate`]) and
+    /// the scaling factor.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mtbf_scaling.is_finite() && self.mtbf_scaling > 0.0) {
+            return Err(format!(
+                "mtbf_scaling must be finite and positive, got {}",
+                self.mtbf_scaling
+            ));
+        }
+        if let Some(p) = &self.default {
+            p.validate()?;
+        }
+        for (name, p) in &self.overrides {
+            p.validate().map_err(|e| format!("resource {name}: {e}"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Weibull(`scale`, `shape`) sample by inverse transform.
+///
+/// Uses `-ln(u)` with `u ∈ (0, 1)` — the same draw pattern as
+/// [`Rng::exponential`], so `shape = 1` reproduces Exp(`scale`) *exactly*
+/// (bit-identical for the same RNG state).
+pub fn weibull(rng: &mut Rng, scale: f64, shape: f64) -> f64 {
+    debug_assert!(scale > 0.0 && shape > 0.0);
+    let u = loop {
+        let u = rng.next_f64();
+        if u > 0.0 {
+            break u;
+        }
+    };
+    scale * (-u.ln()).powf(1.0 / shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weibull_shape_one_is_exponential() {
+        let mut a = Rng::new(42).derive(7);
+        let mut b = Rng::new(42).derive(7);
+        for _ in 0..100 {
+            assert_eq!(weibull(&mut a, 50.0, 1.0), b.exponential(50.0));
+        }
+    }
+
+    #[test]
+    fn weibull_scale_is_linear_in_scale() {
+        // Same RNG state → samples scale exactly with the scale parameter
+        // (the CRN property the mtbf_scaling axis relies on).
+        let mut a = Rng::new(9).derive(0);
+        let mut b = Rng::new(9).derive(0);
+        for _ in 0..50 {
+            let x = weibull(&mut a, 10.0, 2.0);
+            let y = weibull(&mut b, 30.0, 2.0);
+            assert!((y - 3.0 * x).abs() <= 1e-12 * y.abs().max(1.0), "{y} != 3*{x}");
+        }
+    }
+
+    #[test]
+    fn weibull_mean_sanity() {
+        // shape=2, scale=100: mean = 100·Γ(1.5) ≈ 88.6. Loose bounds only —
+        // this is a smoke test, not a statistics suite.
+        let mut rng = Rng::new(1).derive(0);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| weibull(&mut rng, 100.0, 2.0)).sum::<f64>() / n as f64;
+        assert!((80.0..97.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn process_for_override_beats_default() {
+        let spec = FaultsSpec::all(FaultProcess::Exponential { mtbf: 100.0, mttr: 10.0 })
+            .override_for("R1", FaultProcess::Trace { intervals: vec![(5.0, 9.0)] });
+        assert!(matches!(spec.process_for("R0"), Some(FaultProcess::Exponential { .. })));
+        assert!(matches!(spec.process_for("R1"), Some(FaultProcess::Trace { .. })));
+        let none = FaultsSpec::default().override_for(
+            "R1",
+            FaultProcess::Exponential { mtbf: 1.0, mttr: 1.0 },
+        );
+        assert!(none.process_for("R0").is_none(), "no default → un-overridden never fail");
+    }
+
+    #[test]
+    fn validate_rejects_bad_parameters() {
+        assert!(FaultProcess::Exponential { mtbf: 0.0, mttr: 1.0 }.validate().is_err());
+        assert!(FaultProcess::Exponential { mtbf: 1.0, mttr: f64::NAN }.validate().is_err());
+        assert!(FaultProcess::Weibull { mtbf: 1.0, mttr: 1.0, shape: -2.0 }
+            .validate()
+            .is_err());
+        assert!(FaultProcess::Trace { intervals: vec![(3.0, 2.0)] }.validate().is_err());
+        assert!(FaultProcess::Trace { intervals: vec![(0.0, 2.0), (1.0, 4.0)] }
+            .validate()
+            .is_err());
+        assert!(FaultProcess::Trace { intervals: vec![(0.0, 2.0), (2.0, 4.0)] }
+            .validate()
+            .is_ok());
+        let mut spec = FaultsSpec::all(FaultProcess::Exponential { mtbf: 1.0, mttr: 1.0 });
+        assert!(spec.validate().is_ok());
+        spec.mtbf_scaling = -1.0;
+        assert!(spec.validate().is_err());
+    }
+}

@@ -42,6 +42,9 @@ pub struct FigureConfig {
     /// Access-link capacity axis (bits per time unit) for the flow-network
     /// contention figure ([`fig_network_load`]).
     pub link_capacities: Vec<f64>,
+    /// MTBF-scaling axis (fault severity) for the robustness figure
+    /// ([`fig_robustness`]); 1 is the base failure rate, smaller is harsher.
+    pub mtbf_scalings: Vec<f64>,
     pub seed: u64,
     pub advisor: AdvisorKind,
     /// Sweep-engine worker threads (results are identical at any value).
@@ -57,6 +60,7 @@ impl FigureConfig {
             user_counts: vec![1, 10, 20, 30, 40, 50, 60, 70, 80, 90, 100],
             arrival_means: vec![2.0, 5.0, 10.0, 20.0, 40.0],
             link_capacities: vec![1_200.0, 2_400.0, 4_800.0, 9_600.0, 19_200.0, 38_400.0],
+            mtbf_scalings: vec![0.125, 0.25, 0.5, 1.0, 2.0, 4.0],
             seed: 27,
             advisor: AdvisorKind::Native,
             jobs: 1,
@@ -72,6 +76,7 @@ impl FigureConfig {
             user_counts: vec![1, 5, 10],
             arrival_means: vec![5.0, 20.0],
             link_capacities: vec![2_400.0, 19_200.0],
+            mtbf_scalings: vec![0.25, 1.0, 4.0],
             seed: 27,
             advisor: AdvisorKind::Native,
             jobs: 1,
@@ -407,6 +412,78 @@ pub fn fig_network_load(cfg: &FigureConfig) -> CsvWriter {
     csv
 }
 
+/// Robustness figure (reliability layer, beyond the paper's always-up
+/// testbed): the WWG grid under stochastic failure–repair processes, swept
+/// over DBC policy × MTBF scaling ([`FigureConfig::mtbf_scalings`]). The
+/// broker *abandons* Gridlets drained by a failure, so each policy's
+/// completion rate directly exposes how much work it had in flight on the
+/// resources that went down. Common random numbers across cells: the fault
+/// timeline at scaling `s` is the base timeline with uptimes stretched by
+/// `s`, so shrinking MTBF monotonically adds failures rather than drawing a
+/// fresh, incomparable schedule. One row per (policy, scaling) cell.
+pub fn fig_robustness(cfg: &FigureConfig) -> CsvWriter {
+    use crate::broker::{BrokerConfig, ResubmissionPolicy};
+    use crate::faults::{FaultProcess, FaultsSpec};
+    let mut csv = CsvWriter::new(&[
+        "policy",
+        "mtbf_scaling",
+        "completion_rate",
+        "gridlets_done",
+        "gridlets_total",
+        "gridlets_lost",
+        "gridlets_abandoned",
+        "budget_spent",
+    ]);
+    if cfg.mtbf_scalings.is_empty() {
+        return csv;
+    }
+    // Base failure process: a resource stays up ~1500 time units and needs
+    // ~150 to repair — a handful of outages over the 3100-unit deadline at
+    // scaling 1, near-constant churn at 0.125, near-clean at 4.
+    let base = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::task_farm(cfg.gridlets, 10_000.0, 0.10)
+                .deadline(3_100.0)
+                .budget(22_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .broker_config(BrokerConfig {
+            resubmission: ResubmissionPolicy::Abandon,
+            ..BrokerConfig::default()
+        })
+        .faults(FaultsSpec::all(FaultProcess::Exponential { mtbf: 1_500.0, mttr: 150.0 }))
+        .seed(cfg.seed)
+        .advisor(cfg.advisor.clone())
+        .build();
+    let spec = SweepSpec::over(base)
+        .policies(vec![Optimization::Cost, Optimization::Time])
+        .mtbf_scalings(cfg.mtbf_scalings.clone());
+    let results = sweep(&spec, cfg.jobs);
+    for outcome in &results.outcomes {
+        let report = &outcome.report;
+        let done: usize = report.users.iter().map(|u| u.gridlets_completed).sum();
+        let total: usize = report.users.iter().map(|u| u.gridlets_total).sum();
+        let spent: f64 = report.users.iter().map(|u| u.budget_spent).sum();
+        let mut fields = vec![outcome.cell.policy.expect("policy axis").label().to_string()];
+        fields.extend(
+            [
+                outcome.cell.mtbf_scaling.expect("mtbf-scaling axis"),
+                report.mean_completion_rate(),
+                done as f64,
+                total as f64,
+                report.total_lost() as f64,
+                report.total_abandoned() as f64,
+                spent,
+            ]
+            .iter()
+            .map(|x| crate::output::csv::trim_float(*x)),
+        );
+        csv.row(&fields);
+    }
+    csv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -489,6 +566,44 @@ mod tests {
         assert_eq!(fast[4], 1.0, "fastest capacity defines slowdown 1: {text}");
         assert!(slow[4] > 1.0, "contended link must slow the run: {text}");
         assert!(slow[3] > fast[3], "makespan grows as capacity shrinks: {text}");
+    }
+
+    #[test]
+    fn robustness_rows_per_policy_and_scaling() {
+        let cfg = FigureConfig {
+            gridlets: 20,
+            mtbf_scalings: vec![0.25, 4.0],
+            ..FigureConfig::quick()
+        };
+        let csv = fig_robustness(&cfg);
+        assert_eq!(csv.len(), 4, "two policies x two MTBF scalings");
+        let text = csv.to_string();
+        assert!(text.starts_with("policy,mtbf_scaling,completion_rate,"), "{text}");
+        // Rows come out policy-major (cost 0.25, cost 4, time 0.25, time 4).
+        let rows: Vec<(String, Vec<f64>)> = text
+            .lines()
+            .skip(1)
+            .map(|l| {
+                let mut it = l.split(',');
+                let policy = it.next().unwrap().to_string();
+                (policy, it.map(|f| f.parse().unwrap()).collect())
+            })
+            .collect();
+        assert_eq!(rows[0].0, "cost");
+        assert_eq!(rows[2].0, "time");
+        for pair in rows.chunks(2) {
+            let (harsh, clean) = (&pair[0].1, &pair[1].1);
+            assert_eq!(harsh[0], 0.25, "{text}");
+            assert_eq!(clean[0], 4.0, "{text}");
+            // Shrinking MTBF can only remove completions under CRN + Abandon.
+            assert!(harsh[1] <= clean[1], "completion degrades with MTBF: {text}");
+            // Under Abandon every drained Gridlet is abandoned exactly once.
+            assert_eq!(harsh[4], harsh[5], "lost == abandoned under Abandon: {text}");
+        }
+        // The harsh cost cell (mean uptime 375 across 11 resources over a
+        // ~3100-unit horizon) must actually lose work.
+        assert!(rows[0].1[4] >= 1.0, "harsh cell loses Gridlets: {text}");
+        assert!(rows[0].1[1] < 1.0, "harsh cell completion rate < 1: {text}");
     }
 
     #[test]

@@ -22,8 +22,11 @@ pub enum GridletStatus {
     Success,
     /// Cancelled by the broker (deadline/budget exhausted or rebalancing).
     Canceled,
-    /// Lost due to a resource failure.
+    /// Rejected by a resource (e.g. submitted while the resource was down).
     Failed,
+    /// In flight on a resource when it failed: the work is gone and the
+    /// broker's resubmission policy decides whether to retry or abandon.
+    Lost,
 }
 
 /// The job package.
@@ -101,7 +104,10 @@ impl Gridlet {
     pub fn is_terminal(&self) -> bool {
         matches!(
             self.status,
-            GridletStatus::Success | GridletStatus::Canceled | GridletStatus::Failed
+            GridletStatus::Success
+                | GridletStatus::Canceled
+                | GridletStatus::Failed
+                | GridletStatus::Lost
         )
     }
 }
@@ -137,6 +143,7 @@ mod tests {
             (GridletStatus::Success, true),
             (GridletStatus::Canceled, true),
             (GridletStatus::Failed, true),
+            (GridletStatus::Lost, true),
         ] {
             g.status = st;
             assert_eq!(g.is_terminal(), terminal, "{st:?}");

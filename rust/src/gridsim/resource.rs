@@ -42,7 +42,8 @@ pub trait LocalScheduler: std::fmt::Debug + Send {
     fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet>;
     /// Status of a Gridlet currently held by the scheduler.
     fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus>;
-    /// Fail everything in flight (failure injection).
+    /// Flush everything in flight as [`GridletStatus::Lost`] (the resource
+    /// failed under the jobs — failure injection).
     fn drain(&mut self, now: f64) -> Vec<ResGridlet>;
 }
 
@@ -285,6 +286,9 @@ impl crate::des::Entity<Msg> for GridResource {
                 ctx.send(ev.src, tags::RESERVATION_REPLY, Some(Msg::ReserveReply(reply)), 64);
             }
             tags::RESOURCE_FAIL => {
+                // Drained jobs come back marked `GridletStatus::Lost`, so
+                // owners can distinguish a crash from a completion or a
+                // bounce and apply their resubmission policy.
                 self.failed = true;
                 let lost = self.scheduler.drain(ctx.now());
                 self.return_finished(ctx, lost);

@@ -297,12 +297,12 @@ impl LocalScheduler for SpaceShared {
         let mut all = Vec::new();
         for Running { mut rg, machine, pes, .. } in self.exec.drain(..) {
             self.free[machine] += pes;
-            rg.gridlet.status = GridletStatus::Failed;
+            rg.gridlet.status = GridletStatus::Lost;
             rg.gridlet.finish_time = now;
             all.push(rg);
         }
         for mut rg in self.queue.drain(..) {
-            rg.gridlet.status = GridletStatus::Failed;
+            rg.gridlet.status = GridletStatus::Lost;
             rg.gridlet.finish_time = now;
             all.push(rg);
         }
@@ -471,7 +471,7 @@ mod tests {
         ss.submit(rg(1, 10.0, 0.0, 1), 0.0);
         let all = ss.drain(2.0);
         assert_eq!(all.len(), 2);
-        assert!(all.iter().all(|r| r.gridlet.status == GridletStatus::Failed));
+        assert!(all.iter().all(|r| r.gridlet.status == GridletStatus::Lost));
         assert_eq!(ss.total_free(), 1);
     }
 

@@ -61,6 +61,9 @@ pub const EXPERIMENT_DONE: i64 = 103;
 pub const RESOURCE_FAIL: i64 = 104;
 /// Resource recovery after failure.
 pub const RESOURCE_RECOVER: i64 = 105;
+/// Internal: fault-injector self-tick (next failure/repair transition of
+/// one resource's failure–repair process).
+pub const FAULT_TICK: i64 = 106;
 
 /// Default baud rate (bits per simulated second) — paper Fig 14.
 pub const DEFAULT_BAUD_RATE: f64 = 9600.0;

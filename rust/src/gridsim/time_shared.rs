@@ -173,7 +173,7 @@ impl LocalScheduler for TimeShared {
         self.advance(now);
         let mut all: Vec<ResGridlet> = std::mem::take(&mut self.exec);
         for rg in &mut all {
-            rg.gridlet.status = GridletStatus::Failed;
+            rg.gridlet.status = GridletStatus::Lost;
             rg.gridlet.finish_time = now;
         }
         all
@@ -294,13 +294,13 @@ mod tests {
     }
 
     #[test]
-    fn drain_fails_everything() {
+    fn drain_loses_everything() {
         let mut ts = TimeShared::new(2, 1.0);
         ts.submit(rg(0, 10.0, 0.0, 0), 0.0);
         ts.submit(rg(1, 10.0, 0.0, 1), 0.0);
         let all = ts.drain(3.0);
         assert_eq!(all.len(), 2);
-        assert!(all.iter().all(|rg| rg.gridlet.status == GridletStatus::Failed));
+        assert!(all.iter().all(|rg| rg.gridlet.status == GridletStatus::Lost));
         assert_eq!(ts.in_exec(), 0);
     }
 

@@ -17,7 +17,12 @@
 //!   start/finish (`gridsim::network::BaudLink` stays the zero-contention
 //!   fast path).
 //! * [`broker`] — the Nimrod-G-like economic resource broker with
-//!   deadline-and-budget-constrained (DBC) scheduling policies.
+//!   deadline-and-budget-constrained (DBC) scheduling policies and a
+//!   configurable resubmission policy for jobs lost to resource failures.
+//! * [`faults`] — the reliability layer: a [`faults::FaultInjector`] entity
+//!   drives per-resource failure–repair processes (exponential, Weibull, or
+//!   explicit up/down traces) from dedicated deterministic RNG streams, so
+//!   MTBF sweeps hold common random numbers across cells.
 //! * [`runtime`] — PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   advisor kernels (`artifacts/*.hlo.txt`) and executes them from the
 //!   broker's scheduling hot path (behind the `xla` cargo feature).
@@ -99,15 +104,16 @@
 // Every public item must carry rustdoc (CI runs `cargo doc` with
 // `-D warnings`). Modules that predate the policy carry a module-level
 // `allow` below; remove an `allow` once its module is fully documented —
-// never add a new one. `workload`, `sweep`, `session`, `des`, `gridsim`,
-// `network`, `output` and `runtime` are fully documented and enforced.
+// never add a new one. `broker`, `workload`, `sweep`, `session`, `des`,
+// `faults`, `gridsim`, `network`, `output` and `runtime` are fully
+// documented and enforced.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)] // TODO(docs): documented module headers, item gaps remain
 pub mod broker;
 #[allow(missing_docs)] // TODO(docs)
 pub mod config;
 pub mod des;
+pub mod faults;
 #[allow(missing_docs)] // TODO(docs)
 pub mod figures;
 pub mod gridsim;

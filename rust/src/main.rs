@@ -93,7 +93,8 @@ fn print_usage() {
            sweep [--deadlines D1,D2,...] [--budgets B1,...] [--users N1,...]\n\
                  [--policies P1,...] [--resources R1+R2,R3,...]\n\
                  [--mean-interarrivals M1,...] [--heavy-fractions F1,...]\n\
-                 [--link-capacities C1,...] [--replications R] [--gridlets N]\n\
+                 [--link-capacities C1,...] [--mtbf-scalings S1,...]\n\
+                 [--replications R] [--gridlets N]\n\
                                        inline sweep on the WWG testbed; writes\n\
                                        sweep_long.csv + sweep_agg.csv to --out\n\
                                        (workload-shape axes need a scenario file\n\
@@ -108,7 +109,7 @@ fn print_usage() {
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|\n\
-                                       day-night|network|all)\n\
+                                       day-night|network|robustness|all)\n\
            selftest                    quick end-to-end smoke run\n\
          \n\
          common flags: --advisor native|xla   --seed N   --out DIR   --jobs N\n\
@@ -329,6 +330,11 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
     if let Some(cs) = args.flag_f64_list("link-capacities")? {
         spec = spec.link_capacities(cs);
     }
+    // Likewise: scaling MTBF needs a base with a "faults" block to scale —
+    // spec.validate() reports it otherwise.
+    if let Some(ss) = args.flag_f64_list("mtbf-scalings")? {
+        spec = spec.mtbf_scalings(ss);
+    }
     if let Some(r) = args.flag_usize("replications")? {
         spec = spec.replications(r);
     }
@@ -443,6 +449,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(set.as_str(), "network" | "all") {
         emit("fig_network_load_flow_contention", figures::fig_network_load(&cfg))?;
+    }
+    if matches!(set.as_str(), "robustness" | "all") {
+        emit("fig_robustness_mtbf_sweep", figures::fig_robustness(&cfg))?;
     }
     if wrote.is_empty() {
         bail!("unknown figure set {set:?}");

@@ -63,6 +63,9 @@ mod tests {
             start_time: 0.0,
             deadline: 100.0,
             budget: 1000.0,
+            gridlets_lost: 0,
+            gridlets_resubmitted: 0,
+            gridlets_abandoned: 0,
             per_resource: vec![
                 ResourceOutcome { name: "R0".into(), gridlets_completed: 10, budget_spent: 500.0 },
                 ResourceOutcome { name: "R1".into(), gridlets_completed: 0, budget_spent: 0.0 },

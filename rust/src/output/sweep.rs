@@ -24,6 +24,7 @@
 //! {"digest":"9f2a…16 hex…","cell":17,"end_time":2143.5,"events":80211,
 //!  "unfinished":[],"users":[{"completed":50,"total":50,"spent":8123.25,
 //!  "finish":2143.5,"start":0,"deadline":3100,"budget":22000,
+//!  "lost":2,"resubmitted":2,"abandoned":0,
 //!  "resources":[{"name":"R0","completed":50,"spent":8123.25}]}]}
 //! ```
 //!
@@ -58,7 +59,7 @@ use std::fmt::Write as _;
 
 /// Axis-coordinate columns shared by both writers (minus the replication
 /// column, which the writers append in their own shape).
-const AXIS_COLS: [&str; 11] = [
+const AXIS_COLS: [&str; 12] = [
     "cell",
     "resources",
     "policy",
@@ -70,6 +71,7 @@ const AXIS_COLS: [&str; 11] = [
     "trace_select",
     "mix_weights",
     "link_capacity",
+    "mtbf_scaling",
 ];
 
 fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> {
@@ -88,6 +90,7 @@ fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> 
         spec.selector_label(cell),
         spec.mix_weights_label(cell),
         cell.link_capacity.map(trim_float).unwrap_or_else(|| "base".into()),
+        cell.mtbf_scaling.map(trim_float).unwrap_or_else(|| "base".into()),
     ]
 }
 
@@ -119,6 +122,9 @@ pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
         "user_budget",
         "time_used",
         "budget_spent",
+        "gridlets_lost",
+        "gridlets_resubmitted",
+        "gridlets_abandoned",
         "finished",
     ]);
     let mut csv = CsvWriter::new(&header);
@@ -137,6 +143,9 @@ pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
                 trim_float(result.budget),
                 trim_float(result.finish_time - result.start_time),
                 trim_float(result.budget_spent),
+                result.gridlets_lost.to_string(),
+                result.gridlets_resubmitted.to_string(),
+                result.gridlets_abandoned.to_string(),
                 if finished { "1".into() } else { "0".into() },
             ]);
             csv.row(&row);
@@ -279,6 +288,9 @@ pub fn checkpoint_line(cell_digest: u64, cell_index: usize, report: &ScenarioRep
                 ("start", u.start_time.into()),
                 ("deadline", u.deadline.into()),
                 ("budget", u.budget.into()),
+                ("lost", u.gridlets_lost.into()),
+                ("resubmitted", u.gridlets_resubmitted.into()),
+                ("abandoned", u.gridlets_abandoned.into()),
                 (
                     "resources",
                     Value::Arr(
@@ -318,6 +330,17 @@ fn req_usize(v: &Value, key: &str) -> Result<usize> {
     } else {
         bail!("field {key:?} must be a non-negative integer, got {n}")
     }
+}
+
+/// Like [`req_usize`] but an absent key reads as 0 (used for the fault
+/// counters, which a line from before the reliability layer simply lacks —
+/// such a line is refused by the digest check anyway, but parsing must not
+/// be the thing that trips first).
+fn opt_usize(v: &Value, key: &str) -> Result<usize> {
+    if v.get(key).is_none() {
+        return Ok(0);
+    }
+    req_usize(v, key)
 }
 
 /// Parse one checkpoint line back into its cell index and report.
@@ -365,6 +388,9 @@ fn parse_checkpoint_line(line: &str) -> Result<(u64, usize, ScenarioReport)> {
                 start_time: u.req_f64("start")?,
                 deadline: u.req_f64("deadline")?,
                 budget: u.req_f64("budget")?,
+                gridlets_lost: opt_usize(u, "lost")?,
+                gridlets_resubmitted: opt_usize(u, "resubmitted")?,
+                gridlets_abandoned: opt_usize(u, "abandoned")?,
                 per_resource,
                 // The time-series trace is not checkpointed (no CSV
                 // consumes it); resumed reports carry it empty.
@@ -474,8 +500,12 @@ mod tests {
         let text = csv.to_string();
         assert!(text.starts_with(
             "cell,resources,policy,users,deadline,budget,arrival_mean,heavy_fraction,\
-             trace_select,mix_weights,link_capacity,"
+             trace_select,mix_weights,link_capacity,mtbf_scaling,"
         ));
+        assert!(
+            text.contains("gridlets_lost,gridlets_resubmitted,gridlets_abandoned,finished"),
+            "fault counters in the long header: {text}"
+        );
         assert!(text.contains(",all,cost,"), "unswept axes echo base values: {text}");
         assert!(
             text.contains(",base,base,base,base,"),
@@ -497,10 +527,10 @@ mod tests {
         // With one replication every stderr is exactly 0.
         for line in text.lines().skip(1) {
             let fields: Vec<&str> = line.split(',').collect();
-            assert_eq!(fields[11], "1", "replications column");
-            assert_eq!(fields[13], "0", "stderr with 1 rep");
-            assert_eq!(fields[15], "0", "stderr with 1 rep");
-            assert_eq!(fields[17], "0", "stderr with 1 rep");
+            assert_eq!(fields[12], "1", "replications column");
+            assert_eq!(fields[14], "0", "stderr with 1 rep");
+            assert_eq!(fields[16], "0", "stderr with 1 rep");
+            assert_eq!(fields[18], "0", "stderr with 1 rep");
         }
     }
 
@@ -535,6 +565,9 @@ mod tests {
                 assert_eq!(a.start_time.to_bits(), b.start_time.to_bits());
                 assert_eq!(a.deadline.to_bits(), b.deadline.to_bits());
                 assert_eq!(a.budget.to_bits(), b.budget.to_bits());
+                assert_eq!(a.gridlets_lost, b.gridlets_lost);
+                assert_eq!(a.gridlets_resubmitted, b.gridlets_resubmitted);
+                assert_eq!(a.gridlets_abandoned, b.gridlets_abandoned);
                 assert_eq!(a.per_resource.len(), b.per_resource.len());
                 for (x, y) in a.per_resource.iter().zip(&b.per_resource) {
                     assert_eq!(x.name, y.name);
@@ -601,16 +634,16 @@ mod tests {
         assert_eq!(csv.len(), 1, "3 replications collapse into one row");
         let text = csv.to_string();
         let fields: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
-        assert_eq!(fields[11], "3", "replications column");
+        assert_eq!(fields[12], "3", "replications column");
         // Mean time used must match the hand-computed mean of the cells.
         let mut expect = Summary::new();
         for o in &results.outcomes {
             expect.add(o.report.mean_finish_time());
         }
-        assert_eq!(fields[14], trim_float(expect.mean()), "mean_time_used");
-        assert_eq!(fields[15], trim_float(expect.std_err()), "stderr_time_used");
+        assert_eq!(fields[15], trim_float(expect.mean()), "mean_time_used");
+        assert_eq!(fields[16], trim_float(expect.std_err()), "stderr_time_used");
         // Engine events are summed across replications.
         let events: u64 = results.outcomes.iter().map(|o| o.report.events).sum();
-        assert_eq!(fields[19], events.to_string());
+        assert_eq!(fields[20], events.to_string());
     }
 }

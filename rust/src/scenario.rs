@@ -6,6 +6,7 @@
 
 use crate::broker::broker::BrokerConfig;
 use crate::broker::{ExperimentResult, ExperimentSpec, Optimization};
+use crate::faults::FaultsSpec;
 use crate::gridsim::{AllocPolicy, MachineList, ResourceCalendar, ResourceCharacteristics};
 use crate::workload::WorkloadSpec;
 
@@ -182,6 +183,10 @@ pub struct Scenario {
     pub advisor: AdvisorKind,
     /// Default broker tuning (per-user [`UserSpec::broker`] overrides).
     pub broker_config: BrokerConfig,
+    /// Failure–repair processes per resource; `None` (the default) builds
+    /// no [`crate::faults::FaultInjector`] at all, so the event stream is
+    /// identical to a pre-reliability scenario.
+    pub faults: Option<FaultsSpec>,
     /// Hard simulation-time limit (safety net).
     pub max_time: f64,
 }
@@ -201,6 +206,7 @@ pub struct ScenarioBuilder {
     network: Option<NetworkSpec>,
     advisor: Option<AdvisorKind>,
     broker_config: Option<BrokerConfig>,
+    faults: Option<FaultsSpec>,
     max_time: Option<f64>,
 }
 
@@ -251,6 +257,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Drive resources with the given failure–repair processes.
+    pub fn faults(mut self, faults: FaultsSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     pub fn max_time(mut self, t: f64) -> Self {
         self.max_time = Some(t);
         self
@@ -266,6 +278,7 @@ impl ScenarioBuilder {
             network: self.network.unwrap_or(NetworkSpec::Instantaneous),
             advisor: self.advisor.unwrap_or(AdvisorKind::Native),
             broker_config: self.broker_config.unwrap_or_default(),
+            faults: self.faults,
             max_time: self.max_time.unwrap_or(1e9),
         }
     }
@@ -308,6 +321,29 @@ impl ScenarioReport {
             return 0.0;
         }
         self.users.iter().map(|u| u.budget_spent).sum::<f64>() / self.users.len() as f64
+    }
+
+    /// Mean fraction of Gridlets completed per user (robustness figures).
+    pub fn mean_completion_rate(&self) -> f64 {
+        if self.users.is_empty() {
+            return 0.0;
+        }
+        self.users.iter().map(|u| u.completion_factor()).sum::<f64>() / self.users.len() as f64
+    }
+
+    /// Total Gridlets lost to resource failures, across all users.
+    pub fn total_lost(&self) -> usize {
+        self.users.iter().map(|u| u.gridlets_lost).sum()
+    }
+
+    /// Total lost Gridlets resubmitted by broker policy, across all users.
+    pub fn total_resubmitted(&self) -> usize {
+        self.users.iter().map(|u| u.gridlets_resubmitted).sum()
+    }
+
+    /// Total lost Gridlets abandoned by broker policy, across all users.
+    pub fn total_abandoned(&self) -> usize {
+        self.users.iter().map(|u| u.gridlets_abandoned).sum()
     }
 
     /// Mean experiment termination time (Figs 34/37).

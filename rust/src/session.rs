@@ -29,6 +29,7 @@
 use crate::broker::policy::make_policy;
 use crate::broker::{Broker, BrokerProgress, ExperimentResult, UserEntity};
 use crate::des::{EntityId, Event, SimConfig, Simulation};
+use crate::faults::FaultInjector;
 use crate::gridsim::{
     BaudLink, GridInformationService, GridResource, GridSimShutdown, GridStatistics, Msg,
     ResourceCalendar,
@@ -247,12 +248,13 @@ impl GridSession {
         let shutdown =
             sim.add(Box::new(GridSimShutdown::new("GridSimShutdown", scenario.users.len())));
 
+        let mut resource_ids = Vec::with_capacity(scenario.resources.len());
         for spec in &scenario.resources {
             let calendar = spec.calendar.clone().unwrap_or_else(ResourceCalendar::no_load);
             let resource =
                 GridResource::new(spec.name.clone(), spec.characteristics(), calendar, gis)
                     .with_stats(stats);
-            sim.add(Box::new(resource));
+            resource_ids.push(sim.add(Box::new(resource)));
         }
 
         // One shared engine instance per advisor kind actually in use,
@@ -289,6 +291,22 @@ impl GridSession {
                 entity = entity.with_submit_delay(user.submit_delay);
             }
             user_ids.push(sim.add(Box::new(entity)));
+        }
+
+        // The fault injector is appended *after* the historical entity
+        // layout (and only when the scenario asks for faults), so scenarios
+        // without a faults spec keep bit-identical entity ids and event
+        // streams.
+        if let Some(faults) = &scenario.faults {
+            if let Err(e) = faults.validate() {
+                anyhow::bail!("invalid faults spec: {e}");
+            }
+            let resources: Vec<(EntityId, String)> = resource_ids
+                .iter()
+                .zip(&scenario.resources)
+                .map(|(id, spec)| (*id, spec.name.clone()))
+                .collect();
+            sim.add(Box::new(FaultInjector::new(faults, &resources, scenario.seed)));
         }
 
         // The link model is installed after entity assembly so per-entity

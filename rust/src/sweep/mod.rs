@@ -4,8 +4,8 @@
 //!
 //! A [`SweepSpec`] names a base [`Scenario`] plus cartesian axes (deadline,
 //! budget, user count, scheduling policy, resource subset, workload shape —
-//! arrival mean, heavy-tail fraction, trace selector, mix weights — and
-//! replications).
+//! arrival mean, heavy-tail fraction, trace selector, mix weights — fault
+//! severity via MTBF scaling, and replications).
 //! [`SweepSpec::cells`] expands the grid into independent [`SweepCell`]s in
 //! a fixed row-major order, and [`engine::run_sweep`] executes them on a
 //! fixed-size `std::thread` worker pool. Three properties make sweeps
@@ -87,6 +87,12 @@ pub struct SweepSpec {
     /// cell's [`NetworkSpec::Flow`] network (named per-entity capacity
     /// overrides are preserved). Requires a flow network in the base.
     pub link_capacities: Vec<f64>,
+    /// MTBF-scaling override (fault severity), applied to the cell's
+    /// [`crate::faults::FaultsSpec`]: every stochastic uptime mean (and
+    /// every trace failure onset) is multiplied by the factor, repair times
+    /// untouched. Values below 1 make failures more frequent. Requires a
+    /// `faults` spec in the base scenario.
+    pub mtbf_scalings: Vec<f64>,
     /// Independent replications per grid point (≥ 1). Replication `r` runs
     /// with [`replication_seed`]`(base.seed, r)`.
     pub replications: usize,
@@ -107,6 +113,7 @@ impl SweepSpec {
             trace_selectors: Vec::new(),
             mix_weights: Vec::new(),
             link_capacities: Vec::new(),
+            mtbf_scalings: Vec::new(),
             replications: 1,
         }
     }
@@ -171,6 +178,12 @@ impl SweepSpec {
         self
     }
 
+    /// Axis builder: MTBF scaling factors (faulted scenarios).
+    pub fn mtbf_scalings(mut self, values: Vec<f64>) -> SweepSpec {
+        self.mtbf_scalings = values;
+        self
+    }
+
     /// Axis builder: replications per grid point.
     pub fn replications(mut self, n: usize) -> SweepSpec {
         self.replications = n;
@@ -192,6 +205,7 @@ impl SweepSpec {
             * axis_len(&self.trace_selectors)
             * axis_len(&self.mix_weights)
             * axis_len(&self.link_capacities)
+            * axis_len(&self.mtbf_scalings)
             * self.replications.max(1)
     }
 
@@ -311,13 +325,25 @@ impl SweepSpec {
                 );
             }
         }
+        if !self.mtbf_scalings.is_empty() {
+            if let Some(s) = self.mtbf_scalings.iter().find(|&&s| !s.is_finite() || s <= 0.0) {
+                bail!("sweep: mtbf scaling must be finite and > 0, got {s}");
+            }
+            if self.base.faults.is_none() {
+                bail!(
+                    "sweep: \"mtbf_scalings\" needs a \"faults\" block in the base \
+                     scenario (there is nothing to scale otherwise)"
+                );
+            }
+        }
         Ok(())
     }
 
     /// Expand the grid into cells, row-major over the axes in the fixed
     /// order *subset → policy → users → deadline → budget → arrival mean →
     /// heavy fraction → trace selector → mix weights → link capacity →
-    /// replication* (replication varies fastest). The order is part of the
+    /// MTBF scaling → replication* (replication varies fastest). The order
+    /// is part of the
     /// output contract: cell index == CSV row block, independent of
     /// execution.
     pub fn cells(&self) -> Vec<SweepCell> {
@@ -348,25 +374,29 @@ impl SweepSpec {
                                     for &trace_selector in &index_axis(&self.trace_selectors) {
                                         for &mix_weights in &index_axis(&self.mix_weights) {
                                             for &link_capacity in &axis(&self.link_capacities) {
-                                                for replication in 0..self.replications.max(1) {
-                                                    cells.push(SweepCell {
-                                                        index: cells.len(),
-                                                        subset,
-                                                        policy,
-                                                        users,
-                                                        deadline,
-                                                        budget,
-                                                        mean_interarrival,
-                                                        heavy_fraction,
-                                                        trace_selector,
-                                                        mix_weights,
-                                                        link_capacity,
-                                                        replication,
-                                                        seed: replication_seed(
-                                                            self.base.seed,
+                                                for &mtbf_scaling in &axis(&self.mtbf_scalings) {
+                                                    for replication in 0..self.replications.max(1)
+                                                    {
+                                                        cells.push(SweepCell {
+                                                            index: cells.len(),
+                                                            subset,
+                                                            policy,
+                                                            users,
+                                                            deadline,
+                                                            budget,
+                                                            mean_interarrival,
+                                                            heavy_fraction,
+                                                            trace_selector,
+                                                            mix_weights,
+                                                            link_capacity,
+                                                            mtbf_scaling,
                                                             replication,
-                                                        ),
-                                                    });
+                                                            seed: replication_seed(
+                                                                self.base.seed,
+                                                                replication,
+                                                            ),
+                                                        });
+                                                    }
                                                 }
                                             }
                                         }
@@ -409,6 +439,12 @@ impl SweepSpec {
             match &mut scenario.network {
                 NetworkSpec::Flow { default_capacity, .. } => *default_capacity = c,
                 _ => unreachable!("validate() requires a flow network for link_capacities"),
+            }
+        }
+        if let Some(s) = cell.mtbf_scaling {
+            match &mut scenario.faults {
+                Some(faults) => faults.mtbf_scaling = s,
+                None => unreachable!("validate() requires a faults block for mtbf_scalings"),
             }
         }
         for user in &mut scenario.users {
@@ -500,6 +536,8 @@ pub struct SweepCell {
     pub mix_weights: Option<usize>,
     /// Default link-capacity override (flow networks).
     pub link_capacity: Option<f64>,
+    /// MTBF-scaling override (faulted scenarios).
+    pub mtbf_scaling: Option<f64>,
     /// Replication number, `0..replications`.
     pub replication: usize,
     /// The RNG seed this cell runs with (a pure function of the base seed
@@ -764,6 +802,33 @@ mod tests {
         let err = SweepSpec::over(base()).link_capacities(vec![100.0]).validate().unwrap_err();
         assert!(err.to_string().contains("flow"), "{err}");
         let err = SweepSpec::over(base()).link_capacities(vec![0.0]).validate().unwrap_err();
+        assert!(err.to_string().contains("> 0"), "{err}");
+    }
+
+    #[test]
+    fn mtbf_scaling_axis_overrides_faults_spec() {
+        use crate::faults::{FaultProcess, FaultsSpec};
+        let mut faulted = base();
+        faulted.faults =
+            Some(FaultsSpec::all(FaultProcess::Exponential { mtbf: 500.0, mttr: 50.0 }));
+        let spec = SweepSpec::over(faulted).mtbf_scalings(vec![0.25, 1.0, 4.0]);
+        spec.validate().unwrap();
+        assert_eq!(spec.cell_count(), 3);
+        let cells = spec.cells();
+        assert_eq!(cells[0].mtbf_scaling, Some(0.25));
+        let s = spec.scenario_for(&cells[2]);
+        assert_eq!(s.faults.as_ref().unwrap().mtbf_scaling, 4.0);
+        // The process parameters themselves are untouched — scaling is
+        // applied at sampling time so per-resource overrides stay intact.
+        assert_eq!(
+            s.faults.unwrap().process_for("R0"),
+            Some(&FaultProcess::Exponential { mtbf: 500.0, mttr: 50.0 })
+        );
+
+        // An unfaulted base rejects the axis; so do non-positive factors.
+        let err = SweepSpec::over(base()).mtbf_scalings(vec![0.5]).validate().unwrap_err();
+        assert!(err.to_string().contains("faults"), "{err}");
+        let err = SweepSpec::over(base()).mtbf_scalings(vec![0.0]).validate().unwrap_err();
         assert!(err.to_string().contains("> 0"), "{err}");
     }
 

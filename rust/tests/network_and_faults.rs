@@ -76,14 +76,16 @@ fn staging_delay_scales_with_file_size() {
     );
 }
 
-/// Failure controller: injects RESOURCE_FAIL / RESOURCE_RECOVER.
-struct FaultInjector {
+/// Hand-driven failure pulse for the low-level resource test below — the
+/// scenario-level path goes through [`gridsim::faults::FaultInjector`]
+/// instead (see `broker_reroutes_lost_gridlets_via_scenario_faults`).
+struct FaultPulse {
     target: EntityId,
     fail_at: f64,
     recover_at: Option<f64>,
 }
 
-impl Entity<Msg> for FaultInjector {
+impl Entity<Msg> for FaultPulse {
     fn name(&self) -> &str {
         "fault-injector"
     }
@@ -108,6 +110,7 @@ struct Submitter {
     n: usize,
     pub success: usize,
     pub failed: usize,
+    pub lost: usize,
 }
 
 impl Entity<Msg> for Submitter {
@@ -132,6 +135,7 @@ impl Entity<Msg> for Submitter {
             match g.status {
                 gridsim::gridsim::GridletStatus::Success => self.success += 1,
                 gridsim::gridsim::GridletStatus::Failed => self.failed += 1,
+                gridsim::gridsim::GridletStatus::Lost => self.lost += 1,
                 other => panic!("unexpected status {other:?}"),
             }
         }
@@ -163,20 +167,26 @@ fn resource_failure_bounces_jobs_and_recovery_restores() {
         gis,
     )));
     // 20 jobs at t=0..19; fail at t=5.5, recover at t=12.5. Jobs in flight
-    // at 5.5 fail; submissions in [5.5, 12.5) bounce; later ones succeed.
-    sim.add(Box::new(FaultInjector { target: resource, fail_at: 5.5, recover_at: Some(12.5) }));
-    let submitter = sim.add(Box::new(Submitter { resource, n: 20, success: 0, failed: 0 }));
+    // at 5.5 drain as Lost; submissions in [5.5, 12.5) bounce as Failed;
+    // later ones succeed — three distinct statuses for three fates.
+    sim.add(Box::new(FaultPulse { target: resource, fail_at: 5.5, recover_at: Some(12.5) }));
+    let submitter = sim.add(Box::new(Submitter { resource, n: 20, success: 0, failed: 0, lost: 0 }));
     sim.run();
     let s = sim.get::<Submitter>(submitter).unwrap();
-    assert_eq!(s.success + s.failed, 20, "every job gets an answer");
-    assert!(s.failed >= 7, "in-flight + bounced during outage: {}", s.failed);
-    assert!(s.success >= 7, "jobs after recovery succeed: {}", s.success);
+    assert_eq!(s.success + s.failed + s.lost, 20, "every job gets an answer");
+    assert!(s.lost >= 5, "jobs in flight at the crash drain as Lost: {}", s.lost);
+    assert!(s.failed >= 6, "submissions during the outage bounce as Failed: {}", s.failed);
+    assert!(s.success >= 6, "jobs after recovery succeed: {}", s.success);
 }
 
 #[test]
-fn broker_retries_failed_gridlets_on_other_resources() {
-    // Two resources; one fails early. The broker must re-route bounced
-    // Gridlets to the survivor and still finish everything.
+fn broker_reroutes_lost_gridlets_via_scenario_faults() {
+    // Two resources; the cheap one goes down at t=3 and never comes back
+    // (a trace process with one long downtime window). Entirely
+    // scenario-driven: the session builds the fault injector from the
+    // `faults` spec, the broker re-routes the drained Gridlets to the
+    // survivor under its default retry policy, and everything finishes.
+    use gridsim::faults::{FaultProcess, FaultsSpec};
     let scenario = Scenario::builder()
         .resource(spec("Fragile", 2, 200.0, 1.0)) // cheap → preferred
         .resource(spec("Stable", 2, 200.0, 2.0))
@@ -187,47 +197,21 @@ fn broker_retries_failed_gridlets_on_other_resources() {
                 .optimization(Optimization::Cost),
         )
         .seed(5)
+        .faults(FaultsSpec::default().override_for(
+            "Fragile",
+            FaultProcess::Trace { intervals: vec![(3.0, 1e8)] },
+        ))
         .build();
-    // Run through the scenario machinery but inject the fault manually: we
-    // rebuild the graph here to add the injector entity.
-    use gridsim::broker::broker::BrokerConfig;
-    use gridsim::broker::policy::make_policy;
-    use gridsim::broker::{Broker, UserEntity};
-    use gridsim::gridsim::{BaudLink, GridSimShutdown};
-    use gridsim::runtime::NativeAdvisor;
-
-    let mut sim: Simulation<Msg> = Simulation::new();
-    sim.set_link_model(Box::new(BaudLink::instantaneous()));
-    let gis = sim.add(Box::new(GridInformationService::new("GIS")));
-    let shutdown = sim.add(Box::new(GridSimShutdown::new("shutdown", 1)));
-    let mut resource_ids = vec![];
-    for r in &scenario.resources {
-        let id = sim.add(Box::new(GridResource::new(
-            r.name.clone(),
-            r.characteristics(),
-            ResourceCalendar::no_load(),
-            gis,
-        )));
-        resource_ids.push(id);
-    }
-    // Fragile fails at t=3 and never recovers.
-    sim.add(Box::new(FaultInjector { target: resource_ids[0], fail_at: 3.0, recover_at: None }));
-    let policy = make_policy(Optimization::Cost, Box::new(NativeAdvisor::new()));
-    let broker = sim.add(Box::new(Broker::new("B0", gis, policy, BrokerConfig::default())));
-    let user = sim.add(Box::new(UserEntity::new(
-        "U0",
-        broker,
-        shutdown,
-        scenario.users[0].experiment.clone(),
-        99,
-    )));
-    sim.run();
-    let result = sim.get::<UserEntity>(user).unwrap().result.as_ref().unwrap();
+    let report = GridSession::new(&scenario).run_to_completion();
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, 20, "all Gridlets complete despite the failure");
+    assert!(u.gridlets_lost >= 1, "jobs in flight at t=3 drain as Lost");
     assert_eq!(
-        result.gridlets_completed, 20,
-        "all Gridlets complete despite the failure"
+        u.gridlets_resubmitted, u.gridlets_lost,
+        "the default retry policy resubmits every loss"
     );
-    let stable = result.per_resource.iter().find(|r| r.name == "Stable").unwrap();
+    assert_eq!(u.gridlets_abandoned, 0, "nothing abandoned under retry");
+    let stable = u.per_resource.iter().find(|r| r.name == "Stable").unwrap();
     assert!(stable.gridlets_completed >= 16, "survivor does the work: {}", stable.gridlets_completed);
 }
 

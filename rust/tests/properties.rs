@@ -3,6 +3,7 @@
 //! property-test runner (`util::prop`).
 
 use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::reservation::ReservationBook;
 use gridsim::gridsim::{AllocPolicy, SpacePolicy};
 use gridsim::runtime::{Advisor, AdvisorInput, NativeAdvisor, ResourceSnapshot};
 use gridsim::scenario::{ResourceSpec, Scenario};
@@ -175,6 +176,94 @@ fn prop_advisor_respects_budget_and_jobs() {
             Ok(())
         },
     );
+}
+
+/// Random reservation-request stream for the [`ReservationBook`]
+/// properties: capacity 1–6, up to 24 requests with windows in [0, 70) and
+/// PE counts that sometimes exceed capacity (exercising rejection).
+fn gen_reservation_ops(rng: &mut Rng) -> (usize, Vec<(f64, f64, usize)>) {
+    let capacity = 1 + rng.below(6) as usize;
+    let n = 1 + rng.below(24) as usize;
+    let ops = (0..n)
+        .map(|_| {
+            (
+                rng.below(50) as f64,
+                1.0 + rng.below(20) as f64,
+                1 + rng.below(capacity as u64 + 1) as usize,
+            )
+        })
+        .collect();
+    (capacity, ops)
+}
+
+fn filled_book(capacity: usize, ops: &[(f64, f64, usize)]) -> ReservationBook {
+    let mut book = ReservationBook::new(capacity);
+    for (i, &(start, duration, num_pe)) in ops.iter().enumerate() {
+        book.try_reserve(i, start, duration, num_pe);
+    }
+    book
+}
+
+#[test]
+fn prop_reservations_never_overcommit() {
+    forall(108, 300, gen_reservation_ops, |(capacity, ops)| {
+        let book = filled_book(*capacity, ops);
+        // Reservations are piecewise constant, so the peak occurs at some
+        // accepted window's start.
+        for r in book.accepted() {
+            let active = book.active_pes(r.start);
+            check(
+                active <= *capacity,
+                format!("overcommitted: {active} PEs at t={} > {capacity}", r.start),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reservation_exact_fit_admitted() {
+    // Whatever the book holds, a request for exactly the residual capacity
+    // over a probe window must be admitted, and residual + 1 rejected.
+    forall(109, 300, gen_reservation_ops, |(capacity, ops)| {
+        let mut book = filled_book(*capacity, ops);
+        let (start, end) = (0.0, 100.0); // covers every generated window
+        let peak = std::iter::once(start)
+            .chain(book.accepted().iter().map(|r| r.start).filter(|&s| s > start && s < end))
+            .map(|t| book.active_pes(t))
+            .max()
+            .unwrap_or(0);
+        let residual = capacity - peak;
+        check(
+            !book.try_reserve(1_001, start, end - start, residual + 1),
+            format!("one PE over the residual {residual} must be rejected"),
+        )?;
+        if residual > 0 {
+            check(
+                book.try_reserve(1_000, start, end - start, residual),
+                format!("exact residual fit ({residual} PEs) must be admitted"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reservation_cancel_then_readmit() {
+    // Cancelling any accepted reservation must free enough capacity to
+    // readmit the identical window — admission is monotone in the book's
+    // contents, so removing one reservation can only lower every peak.
+    forall(110, 300, gen_reservation_ops, |(capacity, ops)| {
+        let mut book = filled_book(*capacity, ops);
+        for r in book.accepted().to_vec() {
+            check(book.cancel(r.id), format!("accepted id {} must cancel", r.id))?;
+            check(
+                book.try_reserve(r.id, r.start, r.end - r.start, r.num_pe),
+                format!("freed window must readmit id {}", r.id),
+            )?;
+        }
+        Ok(())
+    });
 }
 
 #[test]

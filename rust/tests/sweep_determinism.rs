@@ -96,6 +96,70 @@ fn csv_output_is_byte_identical_across_jobs_counts() {
 }
 
 #[test]
+fn faulted_sweep_is_byte_identical_across_jobs_counts() {
+    // Stochastic failure–repair on every resource plus an MTBF-scaling
+    // axis: the fault schedules come from per-resource RNG streams seeded
+    // off the scenario seed, so they must be exactly as jobs-invariant as
+    // everything else in the cell.
+    use gridsim::broker::{BrokerConfig, ResubmissionPolicy};
+    use gridsim::faults::{FaultProcess, FaultsSpec};
+    let base = Scenario::builder()
+        .resource(resource("T0", AllocPolicy::TimeShared, 2, 100.0, 1.0))
+        .resource(resource("T1", AllocPolicy::TimeShared, 2, 120.0, 3.0))
+        .resource(resource("S0", AllocPolicy::SpaceShared(SpacePolicy::Fcfs), 3, 80.0, 2.0))
+        .user(
+            // Long enough jobs that every run spans several mean uptimes —
+            // the loss assertions below need failures to actually land.
+            ExperimentSpec::task_farm(10, 3_000.0, 0.10)
+                .deadline(5_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(41)
+        .faults(
+            FaultsSpec::all(FaultProcess::Exponential { mtbf: 300.0, mttr: 40.0 }).override_for(
+                "S0",
+                FaultProcess::Weibull { mtbf: 250.0, mttr: 30.0, shape: 1.5 },
+            ),
+        )
+        .broker_config(BrokerConfig {
+            resubmission: ResubmissionPolicy::RetryWithBackoff { max_attempts: 3, backoff: 5.0 },
+            ..BrokerConfig::default()
+        })
+        .build();
+    let spec = SweepSpec::over(base)
+        .policies(vec![Optimization::Cost, Optimization::Time])
+        .mtbf_scalings(vec![0.5, 1.0, 2.0])
+        .replications(2);
+    assert_eq!(spec.cell_count(), 12);
+
+    let jobs1 = run_sweep(&spec, 1).expect("jobs=1");
+    let jobs4 = run_sweep(&spec, 4).expect("jobs=4");
+    let long1 = long_csv(&spec, &jobs1).to_string();
+    let long4 = long_csv(&spec, &jobs4).to_string();
+    assert_eq!(long1, long4, "faulted long CSV differs between --jobs 1 and --jobs 4");
+    assert_eq!(
+        aggregate_csv(&spec, &jobs1).to_string(),
+        aggregate_csv(&spec, &jobs4).to_string(),
+        "faulted aggregate CSV differs between --jobs 1 and --jobs 4"
+    );
+
+    // The faults actually bite, and CRN keeps severity ordered: the harsh
+    // scaling loses at least as much work as the gentle one.
+    let lost_at = |s: f64| {
+        jobs1
+            .outcomes
+            .iter()
+            .filter(|o| o.cell.mtbf_scaling == Some(s))
+            .map(|o| o.report.total_lost())
+            .sum::<usize>()
+    };
+    assert!(lost_at(0.5) > 0, "harsh cells must lose Gridlets");
+    assert!(lost_at(0.5) >= lost_at(2.0), "more losses at smaller MTBF scaling");
+    assert!(long1.lines().next().unwrap().contains("mtbf_scaling"), "{long1}");
+}
+
+#[test]
 fn engine_reports_match_direct_session_runs() {
     // A sweep cell must equal the same scenario run directly — the engine
     // adds orchestration, never simulation semantics.
