@@ -30,7 +30,7 @@ use crate::gridsim::messages::Msg;
 use crate::gridsim::pool;
 use crate::gridsim::tags;
 use crate::des::{Ctx, Entity, EntityId, Event};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum State {
@@ -174,6 +174,17 @@ pub struct Broker {
     resubmitted: usize,
     /// Lost Gridlets given up on (policy said stop retrying).
     abandoned: usize,
+    /// Gridlets returned [`GridletStatus::Preempted`] from a spot tier.
+    preempted: usize,
+    /// Spot-tier resources in the scenario, as `(name, discount)` pairs —
+    /// matched against characteristics replies by name.
+    spot_resources: Vec<(String, f64)>,
+    /// The user's spot bid in G$ per PE per time unit. `None` means the
+    /// user rents on demand only (spot tiers then charge full price and
+    /// never preempt this user's jobs).
+    max_spot_price: Option<f64>,
+    /// Gridlets preempted once: they retry on the on-demand tier only.
+    spot_banned: HashSet<usize>,
 
     last_tick: Option<u64>,
     /// Time the pending tick was scheduled *for* (dedupes the re-advise
@@ -216,11 +227,29 @@ impl Broker {
             lost: 0,
             resubmitted: 0,
             abandoned: 0,
+            preempted: 0,
+            spot_resources: Vec::new(),
+            max_spot_price: None,
+            spot_banned: HashSet::new(),
             last_tick: None,
             tick_at: f64::NAN,
             trace,
             result: None,
         }
+    }
+
+    /// Market wiring: which resources rent a spot tier (`(name, discount)`
+    /// pairs from the scenario) and this user's spot bid. With a bid, spot
+    /// views are costed at the discounted price, gated on the bid covering
+    /// the current spot price, and their preempted jobs retry on demand.
+    pub fn with_market(
+        mut self,
+        spot_resources: Vec<(String, f64)>,
+        max_spot_price: Option<f64>,
+    ) -> Broker {
+        self.spot_resources = spot_resources;
+        self.max_spot_price = max_spot_price;
+        self
     }
 
     fn spent(&self) -> f64 {
@@ -356,12 +385,34 @@ impl Broker {
         let me = ctx.me();
         let spent = self.spent();
         let mut committed: f64 = self.views.iter().map(|v| v.committed_cost).sum();
-        for v in &mut self.views {
-            if !v.available(now) {
+        for r in 0..self.views.len() {
+            if !self.views[r].available(now) {
                 continue; // failure backoff
             }
-            let limit = v.dispatch_limit();
-            while v.outstanding < limit {
+            // Spot-tier gate (only set on views when this user bid): the
+            // tier is rentable only while the bid covers the current
+            // discounted price, and jobs preempted once stay on demand.
+            if let Some(d) = self.views[r].spot_discount {
+                let spot_price = d * self.views[r].current_price;
+                if self.max_spot_price.map_or(true, |bid| bid < spot_price) {
+                    // Outbid: recall undispatched assignments for re-planning.
+                    while let Some(g) = self.views[r].assigned.pop_back() {
+                        self.unassigned.push_front(g);
+                    }
+                    continue;
+                }
+                while let Some(i) = self.views[r]
+                    .assigned
+                    .iter()
+                    .position(|g| self.spot_banned.contains(&g.id))
+                {
+                    let g = self.views[r].assigned.remove(i).unwrap();
+                    self.unassigned.push_front(g);
+                }
+            }
+            let limit = self.views[r].dispatch_limit();
+            while self.views[r].outstanding < limit {
+                let v = &mut self.views[r];
                 // Hard budget gate: never commit work whose estimated cost
                 // would push actual+reserved spending past the budget.
                 let next_cost = v
@@ -375,6 +426,12 @@ impl Broker {
                 let Some(mut g) = v.assigned.pop_front() else { break };
                 g.owner = me;
                 g.status = GridletStatus::Created;
+                // Spot jobs carry the bid so the resource can preempt them;
+                // NaN marks an on-demand dispatch.
+                g.max_spot_price = match (v.spot_discount, self.max_spot_price) {
+                    (Some(_), Some(bid)) => bid,
+                    _ => f64::NAN,
+                };
                 v.on_dispatched(&g, now);
                 committed += next_cost;
                 let dst = v.info.id;
@@ -401,8 +458,14 @@ impl Broker {
         let Some(r) = self.views.iter().position(|v| v.info.id == rid) else {
             panic!("return from unknown resource {rid}");
         };
-        // Charge: price per PE-time × consumed PE time.
-        g.cost = self.views[r].info.cost_per_pe_time * g.cpu_time;
+        // Charge: price per PE-time × consumed PE time — at the rate in
+        // effect while the work ran (market resources stamp it on the
+        // Gridlet); the static traded price otherwise.
+        g.cost = if g.paid_rate.is_finite() {
+            g.paid_rate * g.cpu_time
+        } else {
+            self.views[r].info.cost_per_pe_time * g.cpu_time
+        };
         match g.status {
             GridletStatus::Success => {
                 self.done_mi += g.length_mi;
@@ -451,6 +514,36 @@ impl Broker {
                 g.resource = None;
                 g.cost = 0.0;
                 self.unassigned.push_back(g);
+            }
+            GridletStatus::Preempted => {
+                // The spot price crossed this user's bid mid-run: the partial
+                // work is charged at the rate actually paid (kept in `g.cost`
+                // and in the view's `spent`), the job never returns to the
+                // spot tier, and the resubmission policy decides its fate on
+                // the on-demand tier.
+                self.preempted += 1;
+                let backoff = self.fault_backoff(ctx.now());
+                self.views[r].mark_down(ctx.now(), backoff);
+                self.views[r].on_returned_unfinished(&g);
+                self.spot_banned.insert(g.id);
+                let losses = self.loss_counts.entry(g.id).or_insert(0);
+                *losses += 1;
+                let retry = match self.config.resubmission {
+                    ResubmissionPolicy::Abandon => false,
+                    ResubmissionPolicy::RetryWithBackoff { max_attempts, .. } => {
+                        max_attempts == 0 || *losses <= max_attempts
+                    }
+                };
+                if retry {
+                    self.resubmitted += 1;
+                    g.status = GridletStatus::Created;
+                    g.resource = None;
+                    g.max_spot_price = f64::NAN;
+                    g.paid_rate = f64::NAN;
+                    self.unassigned.push_back(g);
+                } else {
+                    self.abandoned += 1;
+                }
             }
             other => panic!("unexpected returned gridlet status {other:?}"),
         }
@@ -515,6 +608,7 @@ impl Broker {
             gridlets_lost: self.lost,
             gridlets_resubmitted: self.resubmitted,
             gridlets_abandoned: self.abandoned,
+            gridlets_preempted: self.preempted,
             per_resource: self.resource_outcomes(),
             trace: self.trace.points().to_vec(),
         }
@@ -678,7 +772,19 @@ impl Entity<Msg> for Broker {
                     panic!("RESOURCE_CHARACTERISTICS without payload")
                 };
                 assert_eq!(self.state, State::Trading);
-                self.views.push(BrokerResource::new(info));
+                let mut view = BrokerResource::new(info);
+                // The spot view (discounted price, preemptible) exists only
+                // for users that bid; everyone else rents on demand.
+                if self.max_spot_price.is_some() {
+                    if let Some((_, d)) = self
+                        .spot_resources
+                        .iter()
+                        .find(|(n, _)| n.as_str() == &*view.info.name)
+                    {
+                        view.spot_discount = Some(*d);
+                    }
+                }
+                self.views.push(view);
                 self.pending_chars -= 1;
                 if self.pending_chars == 0 {
                     self.start_scheduling(ctx);
@@ -710,6 +816,19 @@ impl Entity<Msg> for Broker {
                 Msg::GridletId(_) => {} // already finished; return in flight
                 other => panic!("unexpected cancel reply {other:?}"),
             },
+            tags::PRICE_UPDATE => {
+                let Msg::Price(p) = ev.take_data() else {
+                    panic!("PRICE_UPDATE without payload")
+                };
+                if let Some(v) = self.views.iter_mut().find(|v| v.info.id == ev.src) {
+                    v.current_price = p;
+                    // Re-plan against the new price promptly (dedup keeps
+                    // bursts of updates at one instant to a single pass).
+                    if self.state == State::Scheduling {
+                        self.schedule_tick_now(ctx);
+                    }
+                }
+            }
             tags::INSIGNIFICANT => {}
             other => panic!("broker {} got unexpected tag {other}", self.name),
         }

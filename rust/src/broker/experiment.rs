@@ -213,6 +213,9 @@ pub struct ExperimentResult {
     /// Lost Gridlets the policy gave up on (they terminate the experiment
     /// as permanently unfinished work).
     pub gridlets_abandoned: usize,
+    /// Gridlets evicted from a spot tier when its price crossed the user's
+    /// bid (their partial work *is* charged, unlike `gridlets_lost`).
+    pub gridlets_preempted: usize,
     /// Per-resource breakdown.
     pub per_resource: Vec<ResourceOutcome>,
     /// Time-series trace (Figures 28–32).
@@ -372,6 +375,7 @@ mod tests {
             gridlets_lost: 0,
             gridlets_resubmitted: 0,
             gridlets_abandoned: 0,
+            gridlets_preempted: 0,
             per_resource: vec![],
             trace: vec![],
         };

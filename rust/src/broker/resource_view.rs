@@ -44,12 +44,26 @@ pub struct BrokerResource {
     /// both models the paper's "adapting to resource failures" and breaks
     /// the zero-delay livelock of re-dispatching to a dead resource.
     pub down_until: f64,
+    /// The resource's price currently in effect (market layer): starts at
+    /// the traded characteristics price and follows `PRICE_UPDATE` events.
+    /// Without a market it never moves, so all cost arithmetic stays
+    /// byte-identical to the static-price broker.
+    pub current_price: f64,
+    /// Spot-tier discount this user rents at (set only when the scenario
+    /// marks the resource as spot *and* the user placed a bid). Costing
+    /// and ranking then use `discount × current_price`.
+    pub spot_discount: Option<f64>,
+    /// G$ reserved per in-flight Gridlet id at dispatch time — released at
+    /// return at exactly the reserved amount, so `committed_cost` stays
+    /// consistent even when the price moves while jobs are away.
+    reserved: HashMap<usize, f64>,
 }
 
 impl BrokerResource {
     /// Fresh view of a just-discovered resource: nothing committed, no
     /// measurements, optimistic rate until the first Gridlet returns.
     pub fn new(info: ResourceInfo) -> BrokerResource {
+        let current_price = info.cost_per_pe_time;
         BrokerResource {
             info,
             assigned: VecDeque::new(),
@@ -64,12 +78,25 @@ impl BrokerResource {
             per_slot_rate: None,
             max_gridlets_per_pe: 2,
             down_until: f64::NEG_INFINITY,
+            current_price,
+            spot_discount: None,
+            reserved: HashMap::new(),
         }
     }
 
-    /// G$ per MI (ranking key; Table 2 translation).
+    /// Price per PE-time this user pays right now: the dynamic current
+    /// price, spot-discounted when renting the spot tier.
+    pub fn effective_price(&self) -> f64 {
+        match self.spot_discount {
+            Some(d) => d * self.current_price,
+            None => self.current_price,
+        }
+    }
+
+    /// G$ per MI (ranking key; Table 2 translation) at the price currently
+    /// in effect.
     pub fn cost_per_mi(&self) -> f64 {
-        self.info.cost_per_mi()
+        self.effective_price() / self.info.mips_per_pe
     }
 
     /// Jobs committed to this resource right now (assigned + in flight).
@@ -128,9 +155,19 @@ impl BrokerResource {
     /// Reserve the estimated cost of a Gridlet being dispatched.
     pub fn on_dispatched(&mut self, g: &Gridlet, now: f64) {
         self.outstanding += 1;
-        self.committed_cost += self.cost_per_mi() * g.length_mi;
+        let reserve = self.cost_per_mi() * g.length_mi;
+        self.committed_cost += reserve;
+        self.reserved.insert(g.id, reserve);
         self.first_dispatch.get_or_insert(now);
         self.dispatch_times.insert(g.id, now);
+    }
+
+    /// Release the reservation made for `g` at dispatch time (exactly the
+    /// reserved amount, even if the price moved since).
+    fn release_reserve(&mut self, g: &Gridlet) {
+        let reserve =
+            self.reserved.remove(&g.id).unwrap_or_else(|| self.cost_per_mi() * g.length_mi);
+        self.committed_cost = (self.committed_cost - reserve).max(0.0);
     }
 
     fn observe_turnaround(&mut self, g: &Gridlet, now: f64) {
@@ -148,7 +185,7 @@ impl BrokerResource {
     pub fn on_completed(&mut self, g: &Gridlet, now: f64) {
         debug_assert!(self.outstanding > 0);
         self.outstanding -= 1;
-        self.committed_cost = (self.committed_cost - self.cost_per_mi() * g.length_mi).max(0.0);
+        self.release_reserve(g);
         self.completed += 1;
         self.mi_done += g.length_mi;
         self.spent += g.cost;
@@ -161,7 +198,7 @@ impl BrokerResource {
     pub fn on_returned_unfinished(&mut self, g: &Gridlet) {
         debug_assert!(self.outstanding > 0);
         self.outstanding -= 1;
-        self.committed_cost = (self.committed_cost - self.cost_per_mi() * g.length_mi).max(0.0);
+        self.release_reserve(g);
         self.dispatch_times.remove(&g.id);
         self.spent += g.cost;
     }
@@ -242,6 +279,27 @@ mod tests {
         v.assigned.push_back(Gridlet::new(0, 1.0, 0, 0));
         v.outstanding = 2;
         assert_eq!(v.committed(), 3);
+    }
+
+    #[test]
+    fn price_updates_and_spot_discount_drive_cost() {
+        let mut v = view(1, 100.0, 2.0);
+        assert_eq!(v.cost_per_mi(), 0.02, "static price to start");
+        v.current_price = 4.0; // PRICE_UPDATE arrived
+        assert_eq!(v.cost_per_mi(), 0.04);
+        v.spot_discount = Some(0.5);
+        assert_eq!(v.effective_price(), 2.0);
+        assert_eq!(v.cost_per_mi(), 0.02);
+    }
+
+    #[test]
+    fn reservation_released_at_dispatch_price_despite_update() {
+        let mut v = view(4, 100.0, 1.0);
+        let g = Gridlet::new(0, 500.0, 0, 0);
+        v.on_dispatched(&g, 1.0); // reserve at 0.01 G$/MI → 5.0
+        v.current_price = 3.0; // price triples while the job is away
+        v.on_completed(&g, 2.0);
+        assert_eq!(v.committed_cost, 0.0, "release is the reserved amount");
     }
 
     #[test]

@@ -60,6 +60,7 @@ use crate::broker::broker::{BrokerConfig, ResubmissionPolicy};
 use crate::broker::{ExperimentSpec, Optimization};
 use crate::faults::{FaultProcess, FaultsSpec};
 use crate::gridsim::{AllocPolicy, ResourceCalendar, SpacePolicy};
+use crate::market::{MarketSpec, PriceModel};
 use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec};
 use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
@@ -73,7 +74,7 @@ use std::sync::Arc;
 
 const SCENARIO_KEYS: &[&str] = &[
     "seed", "advisor", "network", "broker", "testbed", "resources", "users", "max_time",
-    "sweep", "faults",
+    "sweep", "faults", "pricing", "spot",
 ];
 const NETWORK_KEYS: &[&str] = &["type", "model", "rate", "latency", "capacity", "capacities"];
 const SWEEP_KEYS: &[&str] = &[
@@ -89,6 +90,7 @@ const SWEEP_KEYS: &[&str] = &[
     "mix_weights",
     "link_capacities",
     "mtbf_scalings",
+    "spot_discounts",
 ];
 const BROKER_KEYS: &[&str] =
     &["tick_fraction", "min_tick", "trace_interval", "max_gridlets_per_pe", "resubmission"];
@@ -100,6 +102,11 @@ const RESOURCE_KEYS: &[&str] = &[
 const CALENDAR_KEYS: &[&str] =
     &["time_zone", "peak_load", "off_peak_load", "holiday_load", "units_per_hour"];
 const FAULTS_KEYS: &[&str] = &["default", "overrides", "mtbf_scaling"];
+const PRICING_KEYS: &[&str] = &["default", "overrides"];
+const PRICE_MODEL_TYPES: &[&str] = &["static", "utilization_linear", "utilization_step"];
+const PRICE_STATIC_KEYS: &[&str] = &["model", "price"];
+const PRICE_LINEAR_KEYS: &[&str] = &["model", "base", "slope", "floor", "cap"];
+const PRICE_STEP_KEYS: &[&str] = &["model", "base", "steps", "floor", "cap"];
 const FAULT_PROCESS_TYPES: &[&str] = &["exponential", "weibull", "trace"];
 const FAULT_EXPONENTIAL_KEYS: &[&str] = &["process", "mtbf", "mttr"];
 const FAULT_WEIBULL_KEYS: &[&str] = &["process", "mtbf", "mttr", "shape"];
@@ -121,6 +128,7 @@ const USER_KEYS: &[&str] = &[
     "output_bytes",
     "submit_delay",
     "link_rate",
+    "max_spot_price",
 ];
 /// The historical flat task-farm keys; mutually exclusive with `"workload"`.
 const FLAT_WORKLOAD_KEYS: &[&str] =
@@ -455,6 +463,8 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
         }
     };
 
+    let market = parse_market(root, &resources)?;
+
     let mut builder = Scenario::builder()
         .resources(resources)
         .seed(seed)
@@ -463,6 +473,9 @@ fn scenario_from(root: &Value, base_dir: Option<&Path>) -> Result<Scenario> {
         .network(network);
     if let Some(f) = faults {
         builder = builder.faults(f);
+    }
+    if let Some(m) = market {
+        builder = builder.market(m);
     }
     for u in users {
         builder = builder.user(u);
@@ -687,6 +700,176 @@ fn parse_fault_process(v: &Value, what: &str) -> Result<FaultProcess> {
             )
         }
     }
+}
+
+/// Parse the top-level `"pricing"` and `"spot"` blocks into a
+/// [`MarketSpec`] (see [`crate::market`]). `None` when the file carries
+/// neither block — no-market scenarios build bit-identically to before.
+///
+/// ```json
+/// "pricing": {
+///   "default": {"model": "utilization_linear", "slope": 4.0},
+///   "overrides": {"R0": {"model": "static", "price": 5.0}}
+/// },
+/// "spot": {"R3": 0.5}
+/// ```
+///
+/// The `"default"` model applies to every resource (folded into one entry
+/// per resource here, so the spec is fully resolved); `"overrides"` replace
+/// it per resource. A model's `price`/`base` defaults to the resource's
+/// configured static price, keeping `{"model": "static"}` a no-op
+/// re-statement of the Table 2 price. `"spot"` maps resource names to
+/// discounts in `(0, 1]`. Unknown resource names get did-you-mean hints.
+fn parse_market(root: &Value, resources: &[ResourceSpec]) -> Result<Option<MarketSpec>> {
+    let pricing = root.get("pricing");
+    let spot = root.get("spot");
+    if pricing.is_none() && spot.is_none() {
+        return Ok(None);
+    }
+    let names: Vec<&str> = resources.iter().map(|r| r.name.as_str()).collect();
+    let price_of = |name: &str| -> f64 {
+        resources.iter().find(|r| r.name == name).map(|r| r.price).expect("known resource")
+    };
+    let check_resource = |name: &str, what: &str| -> Result<()> {
+        if !names.contains(&name) {
+            let hint = nearest(name, &names)
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            bail!("{what}: unknown resource {name:?}{hint}; scenario has: {}", names.join(", "));
+        }
+        Ok(())
+    };
+
+    let mut spec = MarketSpec::new();
+    if let Some(p) = pricing {
+        reject_unknown_keys(p, "pricing", PRICING_KEYS)?;
+        let overrides = match p.get("overrides") {
+            None => Vec::new(),
+            Some(Value::Obj(fields)) => {
+                let mut seen = std::collections::BTreeSet::new();
+                for (name, _) in fields {
+                    if !seen.insert(name.as_str()) {
+                        bail!("pricing overrides: duplicate resource {name:?}");
+                    }
+                    check_resource(name, "pricing overrides")?;
+                }
+                fields.clone()
+            }
+            Some(_) => bail!(
+                "pricing: \"overrides\" must be an object mapping resource names to \
+                 model objects, e.g. {{\"R0\": {{\"model\": \"static\", \"price\": 5}}}}"
+            ),
+        };
+        if p.get("default").is_none() && overrides.is_empty() {
+            bail!(
+                "pricing: give a \"default\" model or at least one entry in \
+                 \"overrides\" (an empty block drives nothing)"
+            );
+        }
+        if let Some(d) = p.get("default") {
+            // Fold the default into one fully-resolved entry per resource
+            // (overridden below where an override names the resource).
+            for r in resources {
+                let model = parse_price_model(d, "pricing default", r.price)?;
+                spec = spec.pricing_for(r.name.clone(), model);
+            }
+        }
+        for (name, model) in &overrides {
+            let what = format!("pricing override {name:?}");
+            let model = parse_price_model(model, &what, price_of(name))?;
+            spec = spec.pricing_for(name.clone(), model);
+        }
+    }
+    if let Some(s) = spot {
+        let Value::Obj(fields) = s else {
+            bail!(
+                "\"spot\" must be an object mapping resource names to discounts \
+                 in (0, 1], e.g. {{\"R3\": 0.5}}"
+            );
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, d) in fields {
+            if !seen.insert(name.as_str()) {
+                bail!("spot: duplicate resource {name:?}");
+            }
+            check_resource(name, "spot")?;
+            let discount = d
+                .as_f64()
+                .ok_or_else(|| anyhow!("spot: {name:?} must be a number"))?;
+            spec = spec.spot_for(name.clone(), discount);
+        }
+        if spec.spot.is_empty() {
+            bail!("\"spot\" block is empty (it drives nothing)");
+        }
+    }
+    spec.validate().map_err(|e| anyhow!("market: {e}"))?;
+    Ok(Some(spec))
+}
+
+/// Parse one pricing-model object (see [`parse_market`]). `base_price` is
+/// the owning resource's configured static price, the default for
+/// `price`/`base`.
+fn parse_price_model(v: &Value, what: &str, base_price: f64) -> Result<PriceModel> {
+    if !matches!(v, Value::Obj(_)) {
+        bail!("{what} must be a JSON object");
+    }
+    let ty = opt_str(v, what, "model")?.ok_or_else(|| {
+        anyhow!("{what}: missing \"model\" (one of: {})", PRICE_MODEL_TYPES.join(", "))
+    })?;
+    let model = match ty {
+        "static" => {
+            reject_unknown_keys(v, what, PRICE_STATIC_KEYS)?;
+            PriceModel::Static { price: opt_f64(v, what, "price")?.unwrap_or(base_price) }
+        }
+        "utilization_linear" => {
+            reject_unknown_keys(v, what, PRICE_LINEAR_KEYS)?;
+            PriceModel::UtilizationLinear {
+                base: opt_f64(v, what, "base")?.unwrap_or(base_price),
+                slope: v.req_f64("slope").context(what.to_string())?,
+                floor: opt_f64(v, what, "floor")?.unwrap_or(0.0),
+                cap: opt_f64(v, what, "cap")?.unwrap_or(f64::INFINITY),
+            }
+        }
+        "utilization_step" => {
+            reject_unknown_keys(v, what, PRICE_STEP_KEYS)?;
+            let arr = v.get("steps").and_then(Value::as_arr).ok_or_else(|| {
+                anyhow!("{what}: missing \"steps\" array of [threshold, price] pairs")
+            })?;
+            let steps = arr
+                .iter()
+                .enumerate()
+                .map(|(i, pair)| {
+                    let p = pair.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                        anyhow!("{what}: step #{i} must be a [threshold, price] pair")
+                    })?;
+                    let threshold = p[0].as_f64().ok_or_else(|| {
+                        anyhow!("{what}: step #{i} threshold must be a number")
+                    })?;
+                    let price = p[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("{what}: step #{i} price must be a number"))?;
+                    Ok((threshold, price))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            PriceModel::UtilizationStep {
+                base: opt_f64(v, what, "base")?.unwrap_or(base_price),
+                steps,
+                floor: opt_f64(v, what, "floor")?.unwrap_or(0.0),
+                cap: opt_f64(v, what, "cap")?.unwrap_or(f64::INFINITY),
+            }
+        }
+        other => {
+            let hint = nearest(other, PRICE_MODEL_TYPES)
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            bail!(
+                "{what}: unknown model {other:?}{hint}; allowed: {}",
+                PRICE_MODEL_TYPES.join(", ")
+            )
+        }
+    };
+    model.validate().map_err(|e| anyhow!("{what}: {e}"))?;
+    Ok(model)
 }
 
 /// Shared guard for link parameters (baud rates, flow capacities,
@@ -1149,6 +1332,12 @@ fn parse_user(
         check_link_param("user", "link_rate", r, false)?;
         user = user.link_rate(r);
     }
+    if let Some(b) = opt_f64(v, "user", "max_spot_price")? {
+        if !b.is_finite() || b < 0.0 {
+            bail!("user: \"max_spot_price\" must be finite and >= 0, got {b}");
+        }
+        user = user.max_spot_price(b);
+    }
     Ok(user)
 }
 
@@ -1295,6 +1484,11 @@ fn parse_sweep_section(v: &Value, base: Scenario) -> Result<SweepSpec> {
         // Positivity and the faulted-base requirement are enforced by
         // SweepSpec::validate(), which parse_sweep_at always runs.
         spec = spec.mtbf_scalings(ss);
+    }
+    if let Some(ds) = opt_f64_array(v, "sweep", "spot_discounts")? {
+        // Range and the spot-carrying-base requirement are enforced by
+        // SweepSpec::validate().
+        spec = spec.spot_discounts(ds);
     }
     if let Some(n) = opt_usize(v, "sweep", "replications")? {
         spec = spec.replications(n);
@@ -2295,6 +2489,161 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("mtbf_scalings"), "{err}");
+    }
+
+    #[test]
+    fn parses_market_blocks() {
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"gridlets": 10, "deadline": 3100, "budget": 22000,
+                       "max_spot_price": 2.5}],
+            "pricing": {
+                "default": {"model": "utilization_linear", "slope": 4.0, "cap": 12.0},
+                "overrides": {
+                    "R0": {"model": "static", "price": 5.0},
+                    "R8": {"model": "utilization_step",
+                           "steps": [[0.5, 2.0], [0.9, 6.0]]}
+                }
+            },
+            "spot": {"R3": 0.5, "R8": 0.8}
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        assert_eq!(s.users[0].max_spot_price, Some(2.5));
+        let market = s.market.as_ref().unwrap();
+        // The default folds into one fully-resolved entry per resource,
+        // its base defaulting to the resource's Table 2 price (R1: 4 G$).
+        let (m, d) = market.config_for("R1", 4.0).unwrap();
+        assert_eq!(
+            m,
+            PriceModel::UtilizationLinear { base: 4.0, slope: 4.0, floor: 0.0, cap: 12.0 }
+        );
+        assert_eq!(d, None);
+        // Overrides replace the default per resource.
+        let (m, _) = market.config_for("R0", 8.0).unwrap();
+        assert_eq!(m, PriceModel::Static { price: 5.0 });
+        let (m, d) = market.config_for("R8", 1.0).unwrap();
+        assert_eq!(
+            m,
+            PriceModel::UtilizationStep {
+                base: 1.0,
+                steps: vec![(0.5, 2.0), (0.9, 6.0)],
+                floor: 0.0,
+                cap: f64::INFINITY,
+            }
+        );
+        assert_eq!(d, Some(0.8));
+        let (_, d) = market.config_for("R3", 3.0).unwrap();
+        assert_eq!(d, Some(0.5));
+
+        // A spot-only file prices the tier's resources Static at their
+        // configured price (handled inside config_for).
+        let spot_only = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{}], "spot": {"R4": 0.7}}"#,
+        )
+        .unwrap();
+        let m = spot_only.market.unwrap();
+        assert!(m.pricing.is_empty());
+        assert_eq!(
+            m.config_for("R4", 2.0),
+            Some((PriceModel::Static { price: 2.0 }, Some(0.7)))
+        );
+
+        // A scenario without the blocks carries no market spec at all —
+        // the byte-identity guarantee for pre-market files.
+        let clean = parse_scenario(r#"{"testbed": "wwg", "users": [{}]}"#).unwrap();
+        assert!(clean.market.is_none());
+    }
+
+    #[test]
+    fn market_blocks_reject_bad_input() {
+        let wrap =
+            |extra: &str| format!(r#"{{"testbed": "wwg", "users": [{{}}], {extra}}}"#);
+        for (block, needle) in [
+            // Typo'd pricing key, with a hint.
+            (r#""pricing": {"overides": {"R0": {"model": "static"}}}"#, "overrides"),
+            // Typo'd model name, with a hint.
+            (
+                r#""pricing": {"default": {"model": "utilization_liner", "slope": 1}}"#,
+                "utilization_linear",
+            ),
+            // Wrong model knob: slope belongs to utilization_linear only.
+            (r#""pricing": {"default": {"model": "static", "slope": 1}}"#, "slope"),
+            // Missing required parameters.
+            (r#""pricing": {"default": {"model": "utilization_linear"}}"#, "slope"),
+            (r#""pricing": {"default": {"model": "utilization_step"}}"#, "steps"),
+            (r#""pricing": {"default": {"price": 5}}"#, "model"),
+            // An empty block drives nothing — reject it loudly.
+            (r#""pricing": {}"#, "default"),
+            // Envelope and step-shape violations die in validate().
+            (
+                r#""pricing": {"default": {"model": "utilization_linear", "slope": 1,
+                                          "floor": 5, "cap": 2}}"#,
+                "cap",
+            ),
+            (
+                r#""pricing": {"default": {"model": "utilization_step",
+                                          "steps": [[0.5, 2], [0.4, 3]]}}"#,
+                "ascending",
+            ),
+            (
+                r#""pricing": {"default": {"model": "utilization_step",
+                                          "steps": [[0.5, 2, 3]]}}"#,
+                "pair",
+            ),
+            // Overrides must name real resources, exactly once each.
+            (r#""pricing": {"overrides": {"R99": {"model": "static"}}}"#, "R99"),
+            (
+                r#""pricing": {"overrides": {"R0": {"model": "static"},
+                                            "R0": {"model": "static"}}}"#,
+                "duplicate",
+            ),
+            // Spot discounts live in (0, 1] and name real resources.
+            (r#""spot": {"R0": 0}"#, "(0, 1]"),
+            (r#""spot": {"R0": 1.5}"#, "(0, 1]"),
+            (r#""spot": {"R99": 0.5}"#, "R99"),
+            (r#""spot": {}"#, "empty"),
+            (r#""spot": 0.5"#, "object"),
+        ] {
+            let err = format!("{:#}", parse_scenario(&wrap(block)).unwrap_err());
+            assert!(err.contains(needle), "{block} → {err}");
+        }
+
+        // A spot bid must be finite and non-negative.
+        let err = parse_scenario(r#"{"testbed": "wwg", "users": [{"max_spot_price": -1}]}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_spot_price"), "{err}");
+    }
+
+    #[test]
+    fn sweep_spot_discounts_axis_parses_and_demands_spot() {
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"gridlets": 10, "deadline": 3100, "budget": 22000,
+                       "max_spot_price": 2.0}],
+            "spot": {"R4": 0.5},
+            "sweep": {"spot_discounts": [0.25, 0.5, 1], "policies": ["cost", "time"]}
+        }"#;
+        let spec = parse_sweep(text).unwrap();
+        assert_eq!(spec.spot_discounts, vec![0.25, 0.5, 1.0]);
+        assert_eq!(spec.cell_count(), 6);
+
+        // Without a spot tier the axis has nothing to discount.
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"spot_discounts": [0.5]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("spot"), "{err}");
+        // Typo'd axis name gets the usual hint.
+        let err = parse_sweep(
+            r#"{"testbed": "wwg", "users": [{}],
+                "sweep": {"spot_discount": [0.5]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("spot_discounts"), "{err}");
     }
 
     #[test]

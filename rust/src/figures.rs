@@ -484,6 +484,81 @@ pub fn fig_robustness(cfg: &FigureConfig) -> CsvWriter {
     csv
 }
 
+/// Market-equilibrium figure (economic layer, beyond the paper's static
+/// Table 2 prices): the WWG grid under utilization-linear pricing — every
+/// resource's posted price climbs from its Table 2 base toward 2× as the
+/// resource fills — with a preemptible spot tier (discount 0.6) on the five
+/// cheapest resources, swept over DBC policy × user count (offered load).
+/// Every user bids 2.5 G$ for spot capacity: affordable on an idle tier,
+/// crossed on the 3-G$ resources once demand lifts the posted price, so
+/// rising load converts cheap spot work into preemptions and pushes jobs
+/// back to on-demand capacity. One row per (policy, users) cell;
+/// `mean_price_paid` is the mean G$ actually charged per completed Gridlet
+/// (charge-at-execution, partial spot charges included), tracing the demand
+/// curve toward its congested equilibrium.
+pub fn fig_market(cfg: &FigureConfig) -> CsvWriter {
+    use crate::market::{MarketSpec, PriceModel};
+    let mut csv = CsvWriter::new(&[
+        "policy",
+        "users",
+        "mean_price_paid",
+        "completion_rate",
+        "gridlets_done",
+        "gridlets_total",
+        "gridlets_preempted",
+        "budget_spent",
+    ]);
+    if cfg.user_counts.is_empty() {
+        return csv;
+    }
+    let mut market = MarketSpec::new();
+    for r in wwg_testbed() {
+        market = market.pricing_for(
+            r.name.clone(),
+            PriceModel::UtilizationLinear {
+                base: r.price,
+                slope: r.price,
+                floor: r.price,
+                cap: 2.0 * r.price,
+            },
+        );
+        // Spot on the cheap half of the testbed only, so preempted work
+        // always has on-demand capacity to fall back to.
+        if r.price <= 3.0 {
+            market = market.spot_for(r.name.clone(), 0.6);
+        }
+    }
+    let mut base = cfg.single_user_base();
+    base.market = Some(market);
+    base.users[0].max_spot_price = Some(2.5);
+    let spec = SweepSpec::over(base)
+        .policies(vec![Optimization::Cost, Optimization::Time])
+        .user_counts(cfg.user_counts.clone());
+    let results = sweep(&spec, cfg.jobs);
+    for outcome in &results.outcomes {
+        let report = &outcome.report;
+        let done: usize = report.users.iter().map(|u| u.gridlets_completed).sum();
+        let total: usize = report.users.iter().map(|u| u.gridlets_total).sum();
+        let spent: f64 = report.users.iter().map(|u| u.budget_spent).sum();
+        let mut fields = vec![outcome.cell.policy.expect("policy axis").label().to_string()];
+        fields.extend(
+            [
+                outcome.cell.users.expect("users axis") as f64,
+                if done > 0 { spent / done as f64 } else { 0.0 },
+                if total > 0 { done as f64 / total as f64 } else { 0.0 },
+                done as f64,
+                total as f64,
+                report.total_preempted() as f64,
+                spent,
+            ]
+            .iter()
+            .map(|x| crate::output::csv::trim_float(*x)),
+        );
+        csv.row(&fields);
+    }
+    csv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -604,6 +679,47 @@ mod tests {
         // ~3100-unit horizon) must actually lose work.
         assert!(rows[0].1[4] >= 1.0, "harsh cell loses Gridlets: {text}");
         assert!(rows[0].1[1] < 1.0, "harsh cell completion rate < 1: {text}");
+    }
+
+    #[test]
+    fn market_rows_per_policy_and_load() {
+        let cfg = FigureConfig {
+            gridlets: 15,
+            user_counts: vec![1, 6],
+            ..FigureConfig::quick()
+        };
+        let csv = fig_market(&cfg);
+        assert_eq!(csv.len(), 4, "two policies x two user counts");
+        let text = csv.to_string();
+        assert!(
+            text.starts_with("policy,users,mean_price_paid,completion_rate,"),
+            "{text}"
+        );
+        // Rows come out policy-major (cost 1, cost 6, time 1, time 6).
+        let rows: Vec<(String, Vec<f64>)> = text
+            .lines()
+            .skip(1)
+            .map(|l| {
+                let mut it = l.split(',');
+                let policy = it.next().unwrap().to_string();
+                (policy, it.map(|f| f.parse().unwrap()).collect())
+            })
+            .collect();
+        assert_eq!(rows[0].0, "cost");
+        assert_eq!(rows[2].0, "time");
+        for pair in rows.chunks(2) {
+            let (light, heavy) = (&pair[0].1, &pair[1].1);
+            assert_eq!(light[0], 1.0, "{text}");
+            assert_eq!(heavy[0], 6.0, "{text}");
+            for r in [light, heavy] {
+                assert!((0.0..=1.0).contains(&r[2]), "completion rate in [0, 1]: {text}");
+                assert!(r[1] >= 0.0 && r[5] >= 0.0, "prices and preemptions count up: {text}");
+                assert!(r[3] > 0.0, "some work completes in every cell: {text}");
+            }
+            // Six competing users offer 6x the work, so total spend must
+            // exceed the single-user cell's under common random numbers.
+            assert!(heavy[6] > light[6], "offered load drives total spend: {text}");
+        }
     }
 
     #[test]

@@ -27,6 +27,11 @@ pub enum GridletStatus {
     /// In flight on a resource when it failed: the work is gone and the
     /// broker's resubmission policy decides whether to retry or abandon.
     Lost,
+    /// Evicted from a spot tier because the dynamic price crossed the
+    /// user's bid. Unlike [`GridletStatus::Lost`], the partial work is
+    /// charged (at the rate actually paid); the resubmission policy then
+    /// decides whether the job retries on the on-demand tier.
+    Preempted,
 }
 
 /// The job package.
@@ -62,6 +67,16 @@ pub struct Gridlet {
     pub cost: f64,
     /// Resource that processed (or is processing) the Gridlet.
     pub resource: Option<EntityId>,
+    /// Price per PE-time actually paid: stamped by a market-carrying
+    /// resource at return (the time-averaged dynamic price over the job's
+    /// residency, spot-discounted for bid-carrying jobs). `NaN` when no
+    /// market priced the run — the broker then falls back to the
+    /// resource's static price.
+    pub paid_rate: f64,
+    /// The user's spot bid in G$ per PE per time unit, stamped at dispatch
+    /// when the job rents a spot tier. `NaN` marks an on-demand job (never
+    /// preempted, pays the undiscounted price).
+    pub max_spot_price: f64,
 }
 
 impl Gridlet {
@@ -84,6 +99,8 @@ impl Gridlet {
             cpu_time: 0.0,
             cost: 0.0,
             resource: None,
+            paid_rate: f64::NAN,
+            max_spot_price: f64::NAN,
         }
     }
 
@@ -108,6 +125,7 @@ impl Gridlet {
                 | GridletStatus::Canceled
                 | GridletStatus::Failed
                 | GridletStatus::Lost
+                | GridletStatus::Preempted
         )
     }
 }
@@ -144,6 +162,7 @@ mod tests {
             (GridletStatus::Canceled, true),
             (GridletStatus::Failed, true),
             (GridletStatus::Lost, true),
+            (GridletStatus::Preempted, true),
         ] {
             g.status = st;
             assert_eq!(g.is_terminal(), terminal, "{st:?}");

@@ -106,6 +106,9 @@ pub enum Msg {
     ExperimentResult(Box<crate::broker::experiment::ExperimentResult>),
     /// Generic control payload (user/broker handshakes).
     Control(u64),
+    /// Resource -> subscribed brokers: new dynamic price in G$ per PE per
+    /// time unit (the resource is identified by the event source).
+    Price(f64),
 }
 
 impl Msg {
@@ -118,7 +121,7 @@ impl Msg {
             // the output file. A small fixed header covers the job metadata.
             Msg::Gridlet(g) => 128 + if outbound { g.input_bytes } else { g.output_bytes },
             Msg::ResourceIds(ids) => 16 + 8 * ids.len() as u64,
-            Msg::GridletId(_) | Msg::Control(_) => 16,
+            Msg::GridletId(_) | Msg::Control(_) | Msg::Price(_) => 16,
             Msg::Register(_) | Msg::Characteristics(_) => 128,
             Msg::Dynamics(_) => 64,
             Msg::Stat(_) => 48,

@@ -8,7 +8,7 @@
 
 use super::calendar::ResourceCalendar;
 use super::characteristics::{AllocPolicy, ResourceCharacteristics};
-use super::gridlet::GridletStatus;
+use super::gridlet::{Gridlet, GridletStatus};
 use super::messages::{Msg, ReservationReply, ResourceDynamics, ResourceInfo};
 use super::pool;
 use super::res_gridlet::ResGridlet;
@@ -18,6 +18,8 @@ use super::statistics::StatRecord;
 use super::tags;
 use super::time_shared::TimeShared;
 use crate::des::{Ctx, EntityId, Event};
+use crate::market::{PriceModel, PricingModel};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// The policy-specific half of a resource: how Gridlets are multiplexed onto
@@ -40,11 +42,56 @@ pub trait LocalScheduler: std::fmt::Debug + Send {
     fn queued(&self) -> usize;
     /// Cancel a Gridlet by id (queued or running).
     fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet>;
+    /// Cancel a Gridlet by `(owner, id)`. Gridlet ids are user-scoped, so
+    /// two users' jobs on one resource can share an id — spot preemption
+    /// uses this to evict exactly the bid-carrying job.
+    fn cancel_owned(&mut self, owner: EntityId, gridlet_id: usize, now: f64)
+        -> Option<ResGridlet>;
     /// Status of a Gridlet currently held by the scheduler.
     fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus>;
     /// Flush everything in flight as [`GridletStatus::Lost`] (the resource
     /// failed under the jobs — failure injection).
     fn drain(&mut self, now: f64) -> Vec<ResGridlet>;
+}
+
+/// Residency mark for one Gridlet under a market: where the price integral
+/// stood when it arrived, and the spot bid it carried (NaN = on-demand).
+#[derive(Debug, Clone, Copy)]
+struct ResidencyMark {
+    /// Price integral `∫ price dt` at arrival.
+    acc0: f64,
+    /// Arrival time.
+    t0: f64,
+    /// Price-change counter at arrival.
+    changes0: u64,
+    /// The job's spot bid (`Gridlet::max_spot_price`; NaN for on-demand).
+    bid: f64,
+}
+
+/// Dynamic-pricing state of one resource (attached by
+/// [`GridResource::with_market`]; absent on static-price resources, which
+/// then emit no market events at all).
+#[derive(Debug)]
+struct MarketState {
+    /// The pricing model driving the posted price.
+    model: PriceModel,
+    /// Spot-tier discount in `(0, 1]`, if this resource rents a spot tier.
+    spot_discount: Option<f64>,
+    /// Price currently in effect.
+    current_price: f64,
+    /// Brokers that queried characteristics — they receive `PRICE_UPDATE`.
+    subscribers: Vec<EntityId>,
+    /// Lazy `∫ price dt`, settled on every price change.
+    acc: f64,
+    /// Time `acc` was last settled.
+    last_update: f64,
+    /// Price-change counter. When it is unchanged across a residency the
+    /// time-averaged price *is* the current price — reported exactly, with
+    /// no division, so the `Static` model reproduces the pre-market
+    /// `price × cpu_time` arithmetic bit for bit.
+    changes: u64,
+    /// Residency marks keyed by `(owner, id)` (ids are user-scoped).
+    marks: HashMap<(EntityId, usize), ResidencyMark>,
 }
 
 /// The resource entity.
@@ -68,6 +115,8 @@ pub struct GridResource {
     failed: bool,
     /// Advance reservations (paper §3.1 / §6).
     reservations: ReservationBook,
+    /// Market layer: dynamic pricing + spot tier (None = static price).
+    market: Option<MarketState>,
     /// Gridlets processed in total (metrics).
     pub completed: u64,
 }
@@ -110,6 +159,7 @@ impl GridResource {
             arrivals: 0,
             failed: false,
             reservations: ReservationBook::new(num_pe),
+            market: None,
             completed: 0,
         }
     }
@@ -117,6 +167,25 @@ impl GridResource {
     /// Send Gridlet completion records to this statistics entity.
     pub fn with_stats(mut self, stats: EntityId) -> GridResource {
         self.stats = Some(stats);
+        self
+    }
+
+    /// Attach the market layer: a dynamic pricing model and, optionally, a
+    /// spot-tier discount. Without this call the resource never publishes
+    /// `PRICE_UPDATE` events and behaves byte-identically to the
+    /// static-price toolkit.
+    pub fn with_market(mut self, model: PriceModel, spot_discount: Option<f64>) -> GridResource {
+        let current_price = model.price_at(0.0, 0.0);
+        self.market = Some(MarketState {
+            model,
+            spot_discount,
+            current_price,
+            subscribers: Vec::new(),
+            acc: 0.0,
+            last_update: 0.0,
+            changes: 0,
+            marks: HashMap::new(),
+        });
         self
     }
 
@@ -157,9 +226,105 @@ impl GridResource {
         }
     }
 
+    /// Fraction of PEs busy or committed, in `[0, 1]` — the demand signal
+    /// driving utilization-priced markets.
+    fn utilization(&self) -> f64 {
+        let busy = self.scheduler.in_exec() + self.scheduler.queued();
+        (busy as f64 / self.characteristics.num_pe() as f64).min(1.0)
+    }
+
+    /// Record a residency mark for an arriving Gridlet (market runs only).
+    fn mark_arrival(&mut self, owner: EntityId, id: usize, bid: f64, now: f64) {
+        if let Some(m) = self.market.as_mut() {
+            let acc0 = m.acc + m.current_price * (now - m.last_update);
+            m.marks.insert((owner, id), ResidencyMark { acc0, t0: now, changes0: m.changes, bid });
+        }
+    }
+
+    /// Stamp `paid_rate` on a departing Gridlet: the time-averaged price
+    /// over its residency, spot-discounted for bid-carrying jobs. Consumes
+    /// the residency mark (a second call is a no-op).
+    fn settle_market(&mut self, g: &mut Gridlet, now: f64) {
+        let Some(m) = self.market.as_mut() else { return };
+        let Some(mark) = m.marks.remove(&(g.owner, g.id)) else { return };
+        let avg = if m.changes == mark.changes0 {
+            // The price never moved during the residency: the average *is*
+            // the current price, reported exactly (no division).
+            m.current_price
+        } else {
+            let dt = now - mark.t0;
+            if dt > 0.0 {
+                let acc_now = m.acc + m.current_price * (now - m.last_update);
+                (acc_now - mark.acc0) / dt
+            } else {
+                m.current_price
+            }
+        };
+        g.paid_rate = match m.spot_discount {
+            Some(d) if mark.bid.is_finite() => d * avg,
+            _ => avg,
+        };
+    }
+
+    /// Recompute the utilization-driven price. On a change: settle the
+    /// price integral, publish `PRICE_UPDATE` to every subscribed broker,
+    /// and preempt resident spot jobs whose bid the new discounted price
+    /// crossed (in sorted `(owner, id)` order, for determinism).
+    fn update_market(&mut self, ctx: &mut Ctx<Msg>) {
+        if self.market.is_none() {
+            return;
+        }
+        let util = self.utilization();
+        let now = ctx.now();
+        let victims = {
+            let m = self.market.as_mut().unwrap();
+            let p = m.model.price_at(util, now);
+            if p == m.current_price {
+                return;
+            }
+            m.acc += m.current_price * (now - m.last_update);
+            m.last_update = now;
+            m.current_price = p;
+            m.changes += 1;
+            for &dst in &m.subscribers {
+                ctx.send(dst, tags::PRICE_UPDATE, Some(Msg::Price(p)), 16);
+            }
+            match m.spot_discount {
+                Some(d) => {
+                    let spot_price = d * p;
+                    let mut v: Vec<(EntityId, usize)> = m
+                        .marks
+                        .iter()
+                        .filter(|(_, mark)| mark.bid.is_finite() && mark.bid < spot_price)
+                        .map(|(&key, _)| key)
+                        .collect();
+                    v.sort_unstable();
+                    v
+                }
+                None => Vec::new(),
+            }
+        };
+        let mut preempted = Vec::new();
+        for (owner, id) in victims {
+            if let Some(mut rg) = self.scheduler.cancel_owned(owner, id, now) {
+                rg.gridlet.status = GridletStatus::Preempted;
+                self.settle_market(&mut rg.gridlet, now);
+                preempted.push(rg);
+            }
+        }
+        if !preempted.is_empty() {
+            self.return_finished(ctx, preempted);
+            // Evictions lowered the utilization, so let the price relax.
+            // Bounded recursion: the evicted marks are consumed, so a
+            // second pass finds no victims and a third finds a fixed point.
+            self.update_market(ctx);
+        }
+    }
+
     /// Return finished Gridlets to their owners, record statistics.
     fn return_finished(&mut self, ctx: &mut Ctx<Msg>, finished: Vec<ResGridlet>) {
-        for rg in finished {
+        for mut rg in finished {
+            self.settle_market(&mut rg.gridlet, ctx.now());
             self.completed += u64::from(rg.gridlet.status == GridletStatus::Success);
             if let Some(stats) = self.stats {
                 let record = StatRecord {
@@ -212,7 +377,10 @@ impl crate::des::Entity<Msg> for GridResource {
                 g.resource = Some(ctx.me());
                 let rank = self.arrivals;
                 self.arrivals += 1;
+                let (owner, id, bid) = (g.owner, g.id, g.max_spot_price);
+                self.mark_arrival(owner, id, bid, ctx.now());
                 self.scheduler.submit(ResGridlet::new(pool::unbox(g), ctx.now(), rank), ctx.now());
+                self.update_market(ctx);
                 self.reschedule_tick(ctx);
             }
             tags::RESOURCE_TICK => {
@@ -224,10 +392,19 @@ impl crate::des::Entity<Msg> for GridResource {
                 self.refresh_environment(ctx.now());
                 let finished = self.scheduler.collect(ctx.now());
                 self.return_finished(ctx, finished);
+                self.update_market(ctx);
                 self.reschedule_tick(ctx);
             }
             tags::RESOURCE_CHARACTERISTICS => {
-                let info = self.info(ctx.me());
+                let mut info = self.info(ctx.me());
+                if let Some(m) = self.market.as_mut() {
+                    // Report the price currently in effect (Eqs 1–2 resolve
+                    // against it) and subscribe the inquirer to updates.
+                    info.cost_per_pe_time = m.current_price;
+                    if !m.subscribers.contains(&ev.src) {
+                        m.subscribers.push(ev.src);
+                    }
+                }
                 ctx.send(ev.src, tags::RESOURCE_CHARACTERISTICS, Some(Msg::Characteristics(info)), 128);
             }
             tags::RESOURCE_DYNAMICS => {
@@ -246,7 +423,8 @@ impl crate::des::Entity<Msg> for GridResource {
                 };
                 self.refresh_environment(ctx.now());
                 match self.scheduler.cancel(id, ctx.now()) {
-                    Some(rg) => {
+                    Some(mut rg) => {
+                        self.settle_market(&mut rg.gridlet, ctx.now());
                         let msg = Msg::Gridlet(pool::boxed(rg.gridlet));
                         let bytes = msg.wire_bytes(false);
                         ctx.send(ev.src, tags::GRIDLET_CANCEL_REPLY, Some(msg), bytes);
@@ -256,6 +434,7 @@ impl crate::des::Entity<Msg> for GridResource {
                         ctx.send(ev.src, tags::GRIDLET_CANCEL_REPLY, Some(Msg::GridletId(id)), 16);
                     }
                 }
+                self.update_market(ctx);
                 self.reschedule_tick(ctx);
             }
             tags::GRIDLET_STATUS => {
@@ -292,6 +471,7 @@ impl crate::des::Entity<Msg> for GridResource {
                 self.failed = true;
                 let lost = self.scheduler.drain(ctx.now());
                 self.return_finished(ctx, lost);
+                self.update_market(ctx);
                 self.last_tick = None;
             }
             tags::RESOURCE_RECOVER => {

@@ -188,6 +188,34 @@ impl SpaceShared {
         }
     }
 
+    /// Cancel the first queued or running job matching `pred` (shared by
+    /// both cancel entry points).
+    fn cancel_matching(
+        &mut self,
+        pred: impl Fn(&ResGridlet) -> bool,
+        now: f64,
+    ) -> Option<ResGridlet> {
+        // Queued jobs cancel for free.
+        if let Some(i) = self.queue.iter().position(|rg| pred(rg)) {
+            let mut rg = self.queue.remove(i).unwrap();
+            rg.gridlet.status = GridletStatus::Canceled;
+            rg.gridlet.finish_time = now;
+            rg.gridlet.cpu_time = 0.0;
+            return Some(rg);
+        }
+        // Running jobs free their PEs and are charged for consumed time.
+        let i = self.exec.iter().position(|r| pred(&r.rg))?;
+        let Running { mut rg, machine, pes, .. } = self.exec.remove(i);
+        self.free[machine] += pes;
+        let ran = (now - rg.start).max(0.0);
+        rg.consume(ran * self.mips_per_pe * self.availability);
+        rg.gridlet.status = GridletStatus::Canceled;
+        rg.gridlet.finish_time = now;
+        rg.gridlet.cpu_time = ran * pes as f64;
+        self.dispatch_queue(now);
+        Some(rg)
+    }
+
     /// Test hook: ids currently executing.
     pub fn exec_ids(&self) -> Vec<usize> {
         self.exec.iter().map(|r| r.rg.gridlet.id).collect()
@@ -262,25 +290,19 @@ impl LocalScheduler for SpaceShared {
     }
 
     fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet> {
-        // Queued jobs cancel for free.
-        if let Some(i) = self.queue.iter().position(|rg| rg.gridlet.id == gridlet_id) {
-            let mut rg = self.queue.remove(i).unwrap();
-            rg.gridlet.status = GridletStatus::Canceled;
-            rg.gridlet.finish_time = now;
-            rg.gridlet.cpu_time = 0.0;
-            return Some(rg);
-        }
-        // Running jobs free their PEs and are charged for consumed time.
-        let i = self.exec.iter().position(|r| r.rg.gridlet.id == gridlet_id)?;
-        let Running { mut rg, machine, pes, .. } = self.exec.remove(i);
-        self.free[machine] += pes;
-        let ran = (now - rg.start).max(0.0);
-        rg.consume(ran * self.mips_per_pe * self.availability);
-        rg.gridlet.status = GridletStatus::Canceled;
-        rg.gridlet.finish_time = now;
-        rg.gridlet.cpu_time = ran * pes as f64;
-        self.dispatch_queue(now);
-        Some(rg)
+        self.cancel_matching(|rg| rg.gridlet.id == gridlet_id, now)
+    }
+
+    fn cancel_owned(
+        &mut self,
+        owner: crate::des::EntityId,
+        gridlet_id: usize,
+        now: f64,
+    ) -> Option<ResGridlet> {
+        self.cancel_matching(
+            |rg| rg.gridlet.owner == owner && rg.gridlet.id == gridlet_id,
+            now,
+        )
     }
 
     fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus> {

@@ -48,6 +48,10 @@ pub const RESERVATION_REPLY: i64 = 15;
 /// (online application models — the job arrives *during* the run and the
 /// broker extends its plan mid-flight).
 pub const GRIDLET_ARRIVAL: i64 = 16;
+/// Resource -> subscribed brokers: the resource's dynamic price changed
+/// (market layer). Only emitted by resources carrying a market — scenarios
+/// without a `"pricing"`/`"spot"` block never see this tag.
+pub const PRICE_UPDATE: i64 = 17;
 
 /// Internal: resource forecast interrupt (Gridlet completion tick).
 pub const RESOURCE_TICK: i64 = 100;

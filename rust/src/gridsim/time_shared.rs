@@ -91,6 +91,18 @@ impl TimeShared {
     pub fn remaining(&self) -> Vec<f64> {
         self.exec.iter().map(|rg| rg.remaining_mi).collect()
     }
+
+    /// Pull the job at `idx` out of the execution set, charging for the
+    /// work actually consumed (shared by both cancel entry points; the
+    /// caller has already advanced the shares to `now`).
+    fn cancel_at(&mut self, idx: usize, now: f64) -> ResGridlet {
+        let mut rg = self.exec.remove(idx);
+        rg.gridlet.status = GridletStatus::Canceled;
+        rg.gridlet.finish_time = now;
+        // Charge for the work actually consumed.
+        rg.gridlet.cpu_time = (rg.gridlet.length_mi - rg.remaining_mi) / self.mips_per_pe;
+        rg
+    }
 }
 
 impl LocalScheduler for TimeShared {
@@ -154,12 +166,21 @@ impl LocalScheduler for TimeShared {
     fn cancel(&mut self, gridlet_id: usize, now: f64) -> Option<ResGridlet> {
         self.advance(now);
         let idx = self.exec.iter().position(|rg| rg.gridlet.id == gridlet_id)?;
-        let mut rg = self.exec.remove(idx);
-        rg.gridlet.status = GridletStatus::Canceled;
-        rg.gridlet.finish_time = now;
-        // Charge for the work actually consumed.
-        rg.gridlet.cpu_time = (rg.gridlet.length_mi - rg.remaining_mi) / self.mips_per_pe;
-        Some(rg)
+        Some(self.cancel_at(idx, now))
+    }
+
+    fn cancel_owned(
+        &mut self,
+        owner: crate::des::EntityId,
+        gridlet_id: usize,
+        now: f64,
+    ) -> Option<ResGridlet> {
+        self.advance(now);
+        let idx = self
+            .exec
+            .iter()
+            .position(|rg| rg.gridlet.owner == owner && rg.gridlet.id == gridlet_id)?;
+        Some(self.cancel_at(idx, now))
     }
 
     fn status_of(&self, gridlet_id: usize) -> Option<GridletStatus> {

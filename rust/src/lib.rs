@@ -19,6 +19,11 @@
 //! * [`broker`] — the Nimrod-G-like economic resource broker with
 //!   deadline-and-budget-constrained (DBC) scheduling policies and a
 //!   configurable resubmission policy for jobs lost to resource failures.
+//! * [`market`] — the economic market layer: utilization-driven dynamic
+//!   pricing models ([`market::PriceModel`]) and the preemptible spot tier.
+//!   Resources publish `PRICE_UPDATE` events as demand moves their price;
+//!   brokers charge the price in effect while work ran, and spot jobs are
+//!   preempted when the price crosses the user's bid.
 //! * [`faults`] — the reliability layer: a [`faults::FaultInjector`] entity
 //!   drives per-resource failure–repair processes (exponential, Weibull, or
 //!   explicit up/down traces) from dedicated deterministic RNG streams, so
@@ -105,8 +110,8 @@
 // `-D warnings`). Modules that predate the policy carry a module-level
 // `allow` below; remove an `allow` once its module is fully documented —
 // never add a new one. `broker`, `workload`, `sweep`, `session`, `des`,
-// `faults`, `gridsim`, `network`, `output` and `runtime` are fully
-// documented and enforced.
+// `faults`, `gridsim`, `market`, `network`, `output`, `runtime` and
+// `scenario` are fully documented and enforced.
 #![warn(missing_docs)]
 
 pub mod broker;
@@ -117,10 +122,10 @@ pub mod faults;
 #[allow(missing_docs)] // TODO(docs)
 pub mod figures;
 pub mod gridsim;
+pub mod market;
 pub mod network;
 pub mod output;
 pub mod runtime;
-#[allow(missing_docs)] // TODO(docs)
 pub mod scenario;
 pub mod session;
 pub mod sweep;

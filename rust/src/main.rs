@@ -94,7 +94,7 @@ fn print_usage() {
                  [--policies P1,...] [--resources R1+R2,R3,...]\n\
                  [--mean-interarrivals M1,...] [--heavy-fractions F1,...]\n\
                  [--link-capacities C1,...] [--mtbf-scalings S1,...]\n\
-                 [--replications R] [--gridlets N]\n\
+                 [--spot-discounts D1,...] [--replications R] [--gridlets N]\n\
                                        inline sweep on the WWG testbed; writes\n\
                                        sweep_long.csv + sweep_agg.csv to --out\n\
                                        (workload-shape axes need a scenario file\n\
@@ -109,7 +109,7 @@ fn print_usage() {
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|\n\
-                                       day-night|network|robustness|all)\n\
+                                       day-night|network|robustness|market|all)\n\
            selftest                    quick end-to-end smoke run\n\
          \n\
          common flags: --advisor native|xla   --seed N   --out DIR   --jobs N\n\
@@ -335,6 +335,11 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec> {
     if let Some(ss) = args.flag_f64_list("mtbf-scalings")? {
         spec = spec.mtbf_scalings(ss);
     }
+    // Likewise: discounting a spot tier needs a base whose market declares
+    // one — spec.validate() reports it otherwise.
+    if let Some(ds) = args.flag_f64_list("spot-discounts")? {
+        spec = spec.spot_discounts(ds);
+    }
     if let Some(r) = args.flag_usize("replications")? {
         spec = spec.replications(r);
     }
@@ -452,6 +457,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(set.as_str(), "robustness" | "all") {
         emit("fig_robustness_mtbf_sweep", figures::fig_robustness(&cfg))?;
+    }
+    if matches!(set.as_str(), "market" | "all") {
+        emit("fig_market_equilibrium", figures::fig_market(&cfg))?;
     }
     if wrote.is_empty() {
         bail!("unknown figure set {set:?}");

@@ -1,0 +1,340 @@
+//! Economic market layer: utilization-driven dynamic pricing and the
+//! preemptible spot tier.
+//!
+//! The paper's broker optimizes against *static* per-resource prices
+//! (Table 2); Buyya's economy-grid thesis (cs/0204048) is the direct sequel,
+//! modeling posted-price and commodity-market economies where prices respond
+//! to demand. This module supplies the pricing side of that economy:
+//!
+//! * [`PricingModel`] — the pricing contract: a price in G$ per PE per time
+//!   unit as a function of instantaneous utilization and simulation time,
+//!   always inside a floor/cap envelope.
+//! * [`PriceModel`] — the concrete models: [`PriceModel::Static`] (the
+//!   default, byte-identical to the pre-market toolkit),
+//!   [`PriceModel::UtilizationLinear`] and [`PriceModel::UtilizationStep`].
+//! * [`MarketSpec`] — the scenario-level attachment: per-resource pricing
+//!   models plus per-resource spot-tier discounts, mirroring
+//!   [`crate::faults::FaultsSpec`]'s side-table design so resource and
+//!   broker construction stay byte-identical when no market is configured.
+//!
+//! ## Charge-at-execution contract
+//!
+//! A dynamic price changes *while jobs run*, so the broker must not charge
+//! the admission-time snapshot. Each `GridResource` with a market keeps a
+//! lazy time-integral of its price; a returned Gridlet carries
+//! `paid_rate` — the time-averaged price over its residency (spot-discounted
+//! for bid-carrying jobs) — and the broker charges
+//! `paid_rate × cpu_time`. When the price never changed during a residency
+//! the resource reports the current price *exactly* (no division), so the
+//! `Static` model reproduces today's `price × cpu_time` arithmetic bit for
+//! bit.
+//!
+//! ## Determinism contract
+//!
+//! Pricing is a pure function of (utilization, time): no RNG streams are
+//! consumed, so adding a market never perturbs workload materialization or
+//! failure processes — sweeps over `spot_discounts` hold common random
+//! numbers across cells. Spot preemption visits resident jobs in sorted
+//! `(owner, id)` order, keeping event emission independent of hash-map
+//! iteration order.
+
+/// The pricing contract: G$ per PE per time unit as a function of the
+/// resource's instantaneous utilization (fraction of PEs busy or committed,
+/// in `[0, 1]`) and the simulation time, clamped to the model's floor/cap
+/// envelope.
+pub trait PricingModel {
+    /// Price in effect at `utilization` (in `[0, 1]`) and simulation `time`.
+    fn price_at(&self, utilization: f64, time: f64) -> f64;
+}
+
+/// A concrete pricing model for one resource.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PriceModel {
+    /// Constant price — the pre-market behavior. `price_at` returns `price`
+    /// exactly at every utilization (no clamping arithmetic is applied, so
+    /// the configured value survives bit for bit).
+    Static {
+        /// Price in G$ per PE per time unit (Table 2 "Price").
+        price: f64,
+    },
+    /// Posted price rising linearly with utilization:
+    /// `clamp(base + slope·u, floor, cap)`.
+    UtilizationLinear {
+        /// Price at zero utilization.
+        base: f64,
+        /// Price increase per unit utilization (≥ 0 keeps the model
+        /// monotone non-decreasing).
+        slope: f64,
+        /// Lower bound of the price envelope.
+        floor: f64,
+        /// Upper bound of the price envelope (`f64::INFINITY` for none).
+        cap: f64,
+    },
+    /// Piecewise-constant tariff: `base` below the first threshold, then
+    /// the price of the highest `(threshold, price)` step whose threshold
+    /// is ≤ utilization; clamped to `[floor, cap]`.
+    UtilizationStep {
+        /// Price below the first step threshold.
+        base: f64,
+        /// `(threshold, price)` steps with strictly ascending thresholds
+        /// in `[0, 1]`.
+        steps: Vec<(f64, f64)>,
+        /// Lower bound of the price envelope.
+        floor: f64,
+        /// Upper bound of the price envelope (`f64::INFINITY` for none).
+        cap: f64,
+    },
+}
+
+impl PricingModel for PriceModel {
+    fn price_at(&self, utilization: f64, _time: f64) -> f64 {
+        match self {
+            PriceModel::Static { price } => *price,
+            PriceModel::UtilizationLinear { base, slope, floor, cap } => {
+                (base + slope * utilization).clamp(*floor, *cap)
+            }
+            PriceModel::UtilizationStep { base, steps, floor, cap } => {
+                let mut level = *base;
+                for &(threshold, price) in steps {
+                    if utilization >= threshold {
+                        level = price;
+                    } else {
+                        break;
+                    }
+                }
+                level.clamp(*floor, *cap)
+            }
+        }
+    }
+}
+
+impl PriceModel {
+    /// Check the model's parameters: prices finite and non-negative, slope
+    /// non-negative, `floor ≤ cap` (the cap may be `+∞`), step thresholds
+    /// strictly ascending in `[0, 1]`.
+    pub fn validate(&self) -> Result<(), String> {
+        fn finite_nonneg(label: &str, v: f64) -> Result<(), String> {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("{label} must be finite and >= 0, got {v}"));
+            }
+            Ok(())
+        }
+        fn envelope(floor: f64, cap: f64) -> Result<(), String> {
+            finite_nonneg("floor", floor)?;
+            if cap.is_nan() || cap < floor {
+                return Err(format!("cap ({cap}) must be >= floor ({floor})"));
+            }
+            Ok(())
+        }
+        match self {
+            PriceModel::Static { price } => finite_nonneg("price", *price),
+            PriceModel::UtilizationLinear { base, slope, floor, cap } => {
+                finite_nonneg("base", *base)?;
+                finite_nonneg("slope", *slope)?;
+                envelope(*floor, *cap)
+            }
+            PriceModel::UtilizationStep { base, steps, floor, cap } => {
+                finite_nonneg("base", *base)?;
+                let mut prev = -1.0;
+                for &(threshold, price) in steps {
+                    if !(0.0..=1.0).contains(&threshold) {
+                        return Err(format!(
+                            "step threshold {threshold} outside [0, 1]"
+                        ));
+                    }
+                    if threshold <= prev {
+                        return Err(format!(
+                            "step thresholds must be strictly ascending \
+                             ({threshold} after {prev})"
+                        ));
+                    }
+                    prev = threshold;
+                    finite_nonneg("step price", price)?;
+                }
+                envelope(*floor, *cap)
+            }
+        }
+    }
+}
+
+/// Scenario-level market attachment: which resources get a dynamic pricing
+/// model and which rent out a preemptible spot tier.
+///
+/// Both sides are `(resource name, value)` lists — a `Vec` (not a map) so
+/// the spec stays `PartialEq` with deterministic `Debug` (the sweep digest
+/// hashes the `Debug` form). A resource named in `spot` but not in
+/// `pricing` is priced `Static` at its configured price; a resource named
+/// in neither carries **no** market state and emits no market events.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MarketSpec {
+    /// Per-resource pricing models, fully resolved (the JSON loader folds
+    /// its `"default"` model into one entry per resource at parse time).
+    pub pricing: Vec<(String, PriceModel)>,
+    /// Per-resource spot-tier discount in `(0, 1]`: bid-carrying jobs rent
+    /// at `discount × current price` but are preempted when the price
+    /// crosses their bid.
+    pub spot: Vec<(String, f64)>,
+}
+
+impl MarketSpec {
+    /// Empty spec (attach entries with [`MarketSpec::pricing_for`] /
+    /// [`MarketSpec::spot_for`]).
+    pub fn new() -> MarketSpec {
+        MarketSpec::default()
+    }
+
+    /// Attach (or replace) the pricing model for one resource.
+    pub fn pricing_for(mut self, name: impl Into<String>, model: PriceModel) -> MarketSpec {
+        let name = name.into();
+        self.pricing.retain(|(n, _)| *n != name);
+        self.pricing.push((name, model));
+        self
+    }
+
+    /// Attach (or replace) a spot-tier discount for one resource.
+    pub fn spot_for(mut self, name: impl Into<String>, discount: f64) -> MarketSpec {
+        let name = name.into();
+        self.spot.retain(|(n, _)| *n != name);
+        self.spot.push((name, discount));
+        self
+    }
+
+    /// The market configuration of resource `name`, if any:
+    /// `(pricing model, spot discount)`. `base_price` is the resource's
+    /// configured static price, used when the resource is spot-only.
+    pub fn config_for(&self, name: &str, base_price: f64) -> Option<(PriceModel, Option<f64>)> {
+        let model = self.pricing.iter().find(|(n, _)| n == name).map(|(_, m)| m.clone());
+        let discount = self.spot.iter().find(|(n, _)| n == name).map(|&(_, d)| d);
+        match (model, discount) {
+            (None, None) => None,
+            (Some(m), d) => Some((m, d)),
+            (None, Some(d)) => Some((PriceModel::Static { price: base_price }, Some(d))),
+        }
+    }
+
+    /// Check the spec: at least one entry (an empty market drives nothing),
+    /// every model valid, every discount finite in `(0, 1]`.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pricing.is_empty() && self.spot.is_empty() {
+            return Err(
+                "market spec drives nothing: no pricing models and no spot tiers".into()
+            );
+        }
+        for (name, model) in &self.pricing {
+            model.validate().map_err(|e| format!("pricing for {name:?}: {e}"))?;
+        }
+        for &(ref name, d) in &self.spot {
+            if !d.is_finite() || d <= 0.0 || d > 1.0 {
+                return Err(format!(
+                    "spot discount for {name:?} must be in (0, 1], got {d}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_is_flat() {
+        let m = PriceModel::Static { price: 3.0 };
+        for u in [0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(m.price_at(u, 100.0), 3.0);
+        }
+    }
+
+    #[test]
+    fn linear_slopes_and_clamps() {
+        let m = PriceModel::UtilizationLinear { base: 1.0, slope: 4.0, floor: 2.0, cap: 4.0 };
+        assert_eq!(m.price_at(0.0, 0.0), 2.0, "floor binds");
+        assert_eq!(m.price_at(0.5, 0.0), 3.0, "interior");
+        assert_eq!(m.price_at(1.0, 0.0), 4.0, "cap binds");
+    }
+
+    #[test]
+    fn step_picks_highest_crossed_threshold() {
+        let m = PriceModel::UtilizationStep {
+            base: 1.0,
+            steps: vec![(0.5, 2.0), (0.9, 5.0)],
+            floor: 0.0,
+            cap: f64::INFINITY,
+        };
+        assert_eq!(m.price_at(0.0, 0.0), 1.0);
+        assert_eq!(m.price_at(0.49, 0.0), 1.0);
+        assert_eq!(m.price_at(0.5, 0.0), 2.0);
+        assert_eq!(m.price_at(0.95, 0.0), 5.0);
+    }
+
+    #[test]
+    fn validation_rejects_bad_parameters() {
+        assert!(PriceModel::Static { price: -1.0 }.validate().is_err());
+        assert!(PriceModel::Static { price: f64::NAN }.validate().is_err());
+        assert!(PriceModel::UtilizationLinear { base: 1.0, slope: 1.0, floor: 2.0, cap: 1.0 }
+            .validate()
+            .is_err());
+        assert!(PriceModel::UtilizationLinear {
+            base: 1.0,
+            slope: 1.0,
+            floor: 0.0,
+            cap: f64::INFINITY
+        }
+        .validate()
+        .is_ok());
+        assert!(PriceModel::UtilizationStep {
+            base: 1.0,
+            steps: vec![(0.5, 2.0), (0.4, 3.0)],
+            floor: 0.0,
+            cap: f64::INFINITY
+        }
+        .validate()
+        .is_err(), "descending thresholds");
+        assert!(PriceModel::UtilizationStep {
+            base: 1.0,
+            steps: vec![(1.5, 2.0)],
+            floor: 0.0,
+            cap: f64::INFINITY
+        }
+        .validate()
+        .is_err(), "threshold outside [0,1]");
+    }
+
+    #[test]
+    fn spec_resolves_spot_only_resources_to_static() {
+        let spec = MarketSpec::new()
+            .pricing_for("R0", PriceModel::Static { price: 4.0 })
+            .spot_for("R1", 0.5);
+        let (m, d) = spec.config_for("R0", 9.0).unwrap();
+        assert_eq!(m, PriceModel::Static { price: 4.0 });
+        assert_eq!(d, None);
+        let (m, d) = spec.config_for("R1", 9.0).unwrap();
+        assert_eq!(m, PriceModel::Static { price: 9.0 }, "spot-only uses configured price");
+        assert_eq!(d, Some(0.5));
+        assert!(spec.config_for("R2", 1.0).is_none(), "unnamed resources carry no market");
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(MarketSpec::new().validate().is_err(), "empty spec drives nothing");
+        assert!(MarketSpec::new().spot_for("R0", 0.0).validate().is_err());
+        assert!(MarketSpec::new().spot_for("R0", 1.5).validate().is_err());
+        assert!(MarketSpec::new().spot_for("R0", 1.0).validate().is_ok());
+        assert!(MarketSpec::new()
+            .pricing_for("R0", PriceModel::Static { price: -1.0 })
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn builders_replace_existing_entries() {
+        let spec = MarketSpec::new()
+            .pricing_for("R0", PriceModel::Static { price: 1.0 })
+            .pricing_for("R0", PriceModel::Static { price: 2.0 })
+            .spot_for("R0", 0.5)
+            .spot_for("R0", 0.7);
+        assert_eq!(spec.pricing.len(), 1);
+        assert_eq!(spec.spot, vec![("R0".to_string(), 0.7)]);
+    }
+}

@@ -66,6 +66,7 @@ mod tests {
             gridlets_lost: 0,
             gridlets_resubmitted: 0,
             gridlets_abandoned: 0,
+            gridlets_preempted: 0,
             per_resource: vec![
                 ResourceOutcome { name: "R0".into(), gridlets_completed: 10, budget_spent: 500.0 },
                 ResourceOutcome { name: "R1".into(), gridlets_completed: 0, budget_spent: 0.0 },

@@ -24,7 +24,7 @@
 //! {"digest":"9f2a…16 hex…","cell":17,"end_time":2143.5,"events":80211,
 //!  "unfinished":[],"users":[{"completed":50,"total":50,"spent":8123.25,
 //!  "finish":2143.5,"start":0,"deadline":3100,"budget":22000,
-//!  "lost":2,"resubmitted":2,"abandoned":0,
+//!  "lost":2,"resubmitted":2,"abandoned":0,"preempted":0,
 //!  "resources":[{"name":"R0","completed":50,"spent":8123.25}]}]}
 //! ```
 //!
@@ -59,7 +59,7 @@ use std::fmt::Write as _;
 
 /// Axis-coordinate columns shared by both writers (minus the replication
 /// column, which the writers append in their own shape).
-const AXIS_COLS: [&str; 12] = [
+const AXIS_COLS: [&str; 13] = [
     "cell",
     "resources",
     "policy",
@@ -72,6 +72,7 @@ const AXIS_COLS: [&str; 12] = [
     "mix_weights",
     "link_capacity",
     "mtbf_scaling",
+    "spot_discount",
 ];
 
 fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> {
@@ -91,6 +92,7 @@ fn axis_fields(spec: &SweepSpec, cell: &SweepCell, users: usize) -> Vec<String> 
         spec.mix_weights_label(cell),
         cell.link_capacity.map(trim_float).unwrap_or_else(|| "base".into()),
         cell.mtbf_scaling.map(trim_float).unwrap_or_else(|| "base".into()),
+        cell.spot_discount.map(trim_float).unwrap_or_else(|| "base".into()),
     ]
 }
 
@@ -125,6 +127,7 @@ pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
         "gridlets_lost",
         "gridlets_resubmitted",
         "gridlets_abandoned",
+        "gridlets_preempted",
         "finished",
     ]);
     let mut csv = CsvWriter::new(&header);
@@ -146,6 +149,7 @@ pub fn long_csv(spec: &SweepSpec, results: &SweepResults) -> CsvWriter {
                 result.gridlets_lost.to_string(),
                 result.gridlets_resubmitted.to_string(),
                 result.gridlets_abandoned.to_string(),
+                result.gridlets_preempted.to_string(),
                 if finished { "1".into() } else { "0".into() },
             ]);
             csv.row(&row);
@@ -291,6 +295,7 @@ pub fn checkpoint_line(cell_digest: u64, cell_index: usize, report: &ScenarioRep
                 ("lost", u.gridlets_lost.into()),
                 ("resubmitted", u.gridlets_resubmitted.into()),
                 ("abandoned", u.gridlets_abandoned.into()),
+                ("preempted", u.gridlets_preempted.into()),
                 (
                     "resources",
                     Value::Arr(
@@ -391,6 +396,7 @@ fn parse_checkpoint_line(line: &str) -> Result<(u64, usize, ScenarioReport)> {
                 gridlets_lost: opt_usize(u, "lost")?,
                 gridlets_resubmitted: opt_usize(u, "resubmitted")?,
                 gridlets_abandoned: opt_usize(u, "abandoned")?,
+                gridlets_preempted: opt_usize(u, "preempted")?,
                 per_resource,
                 // The time-series trace is not checkpointed (no CSV
                 // consumes it); resumed reports carry it empty.
@@ -500,11 +506,14 @@ mod tests {
         let text = csv.to_string();
         assert!(text.starts_with(
             "cell,resources,policy,users,deadline,budget,arrival_mean,heavy_fraction,\
-             trace_select,mix_weights,link_capacity,mtbf_scaling,"
+             trace_select,mix_weights,link_capacity,mtbf_scaling,spot_discount,"
         ));
         assert!(
-            text.contains("gridlets_lost,gridlets_resubmitted,gridlets_abandoned,finished"),
-            "fault counters in the long header: {text}"
+            text.contains(
+                "gridlets_lost,gridlets_resubmitted,gridlets_abandoned,\
+                 gridlets_preempted,finished"
+            ),
+            "fault and market counters in the long header: {text}"
         );
         assert!(text.contains(",all,cost,"), "unswept axes echo base values: {text}");
         assert!(
@@ -527,10 +536,10 @@ mod tests {
         // With one replication every stderr is exactly 0.
         for line in text.lines().skip(1) {
             let fields: Vec<&str> = line.split(',').collect();
-            assert_eq!(fields[12], "1", "replications column");
-            assert_eq!(fields[14], "0", "stderr with 1 rep");
-            assert_eq!(fields[16], "0", "stderr with 1 rep");
-            assert_eq!(fields[18], "0", "stderr with 1 rep");
+            assert_eq!(fields[13], "1", "replications column");
+            assert_eq!(fields[15], "0", "stderr with 1 rep");
+            assert_eq!(fields[17], "0", "stderr with 1 rep");
+            assert_eq!(fields[19], "0", "stderr with 1 rep");
         }
     }
 
@@ -568,6 +577,7 @@ mod tests {
                 assert_eq!(a.gridlets_lost, b.gridlets_lost);
                 assert_eq!(a.gridlets_resubmitted, b.gridlets_resubmitted);
                 assert_eq!(a.gridlets_abandoned, b.gridlets_abandoned);
+                assert_eq!(a.gridlets_preempted, b.gridlets_preempted);
                 assert_eq!(a.per_resource.len(), b.per_resource.len());
                 for (x, y) in a.per_resource.iter().zip(&b.per_resource) {
                     assert_eq!(x.name, y.name);
@@ -634,16 +644,16 @@ mod tests {
         assert_eq!(csv.len(), 1, "3 replications collapse into one row");
         let text = csv.to_string();
         let fields: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
-        assert_eq!(fields[12], "3", "replications column");
+        assert_eq!(fields[13], "3", "replications column");
         // Mean time used must match the hand-computed mean of the cells.
         let mut expect = Summary::new();
         for o in &results.outcomes {
             expect.add(o.report.mean_finish_time());
         }
-        assert_eq!(fields[15], trim_float(expect.mean()), "mean_time_used");
-        assert_eq!(fields[16], trim_float(expect.std_err()), "stderr_time_used");
+        assert_eq!(fields[16], trim_float(expect.mean()), "mean_time_used");
+        assert_eq!(fields[17], trim_float(expect.std_err()), "stderr_time_used");
         // Engine events are summed across replications.
         let events: u64 = results.outcomes.iter().map(|o| o.report.events).sum();
-        assert_eq!(fields[20], events.to_string());
+        assert_eq!(fields[21], events.to_string());
     }
 }

@@ -8,26 +8,36 @@ use crate::broker::broker::BrokerConfig;
 use crate::broker::{ExperimentResult, ExperimentSpec, Optimization};
 use crate::faults::FaultsSpec;
 use crate::gridsim::{AllocPolicy, MachineList, ResourceCalendar, ResourceCharacteristics};
+use crate::market::MarketSpec;
 use crate::workload::WorkloadSpec;
 
 /// Declarative description of one grid resource (Table 2 row).
 #[derive(Debug, Clone)]
 pub struct ResourceSpec {
+    /// Resource name (Table 2 "Resource name" column; unique per scenario).
     pub name: String,
+    /// Architecture label (informational, reported in characteristics).
     pub arch: String,
+    /// Operating-system label (informational).
     pub os: String,
+    /// Number of machines in the cluster.
     pub machines: usize,
+    /// Processing elements per machine.
     pub pes_per_machine: usize,
+    /// MIPS rating of each PE (SPEC-like rating in the paper).
     pub mips_per_pe: f64,
+    /// Local scheduler: time-shared or space-shared.
     pub policy: AllocPolicy,
     /// G$ per PE per time unit.
     pub price: f64,
+    /// Resource time zone (informational).
     pub time_zone: f64,
     /// Background load profile; `None` = no local load (paper §5 setup).
     pub calendar: Option<ResourceCalendar>,
 }
 
 impl ResourceSpec {
+    /// Materialize the characteristics record handed to [`crate::gridsim::GridResource`].
     pub fn characteristics(&self) -> ResourceCharacteristics {
         ResourceCharacteristics::new(
             self.arch.clone(),
@@ -39,6 +49,7 @@ impl ResourceSpec {
         )
     }
 
+    /// Total processing elements (`machines × pes_per_machine`).
     pub fn num_pe(&self) -> usize {
         self.machines * self.pes_per_machine
     }
@@ -97,11 +108,25 @@ pub struct UserSpec {
     /// [`NetworkSpec::Baud`], access-link capacity under
     /// [`NetworkSpec::Flow`]. `None` falls back to the network default.
     pub link_rate: Option<f64>,
+    /// Spot bid: the most this user will pay (G$ per PE per time unit) on a
+    /// spot tier. `None` (the default) means the user never rents spot —
+    /// spot-tier resources then charge it the full dynamic price and never
+    /// preempt its jobs. Only meaningful when the scenario's
+    /// [`MarketSpec`] declares spot resources.
+    pub max_spot_price: Option<f64>,
 }
 
 impl UserSpec {
+    /// Wrap an experiment with all per-user overrides at their defaults.
     pub fn new(experiment: ExperimentSpec) -> UserSpec {
-        UserSpec { experiment, advisor: None, broker: None, submit_delay: 0.0, link_rate: None }
+        UserSpec {
+            experiment,
+            advisor: None,
+            broker: None,
+            submit_delay: 0.0,
+            link_rate: None,
+            max_spot_price: None,
+        }
     }
 
     /// Override the advisor engine for this user's broker.
@@ -131,34 +156,49 @@ impl UserSpec {
         self
     }
 
+    /// Place a spot bid: rent spot tiers while their discounted price stays
+    /// at or below `bid` (G$ per PE per time unit), accepting preemption
+    /// when the price crosses it.
+    pub fn max_spot_price(mut self, bid: f64) -> UserSpec {
+        assert!(bid.is_finite() && bid >= 0.0, "spot bid must be finite and >= 0");
+        self.max_spot_price = Some(bid);
+        self
+    }
+
     // ExperimentSpec builder forwarding, so a `UserSpec` chains exactly like
     // the `ExperimentSpec` it wraps.
 
+    /// Replace the workload (forwards to [`ExperimentSpec::workload`]).
     pub fn workload(mut self, w: WorkloadSpec) -> UserSpec {
         self.experiment = self.experiment.workload(w);
         self
     }
 
+    /// Set an absolute deadline (forwards to [`ExperimentSpec::deadline`]).
     pub fn deadline(mut self, d: f64) -> UserSpec {
         self.experiment = self.experiment.deadline(d);
         self
     }
 
+    /// Set an absolute budget (forwards to [`ExperimentSpec::budget`]).
     pub fn budget(mut self, b: f64) -> UserSpec {
         self.experiment = self.experiment.budget(b);
         self
     }
 
+    /// Set the deadline as a D-factor (forwards to [`ExperimentSpec::d_factor`]).
     pub fn d_factor(mut self, f: f64) -> UserSpec {
         self.experiment = self.experiment.d_factor(f);
         self
     }
 
+    /// Set the budget as a B-factor (forwards to [`ExperimentSpec::b_factor`]).
     pub fn b_factor(mut self, f: f64) -> UserSpec {
         self.experiment = self.experiment.b_factor(f);
         self
     }
 
+    /// Set the DBC policy (forwards to [`ExperimentSpec::optimization`]).
     pub fn optimization(mut self, o: Optimization) -> UserSpec {
         self.experiment = self.experiment.optimization(o);
         self
@@ -174,10 +214,13 @@ impl From<ExperimentSpec> for UserSpec {
 /// A complete simulation scenario.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Grid resources (Table 2 rows).
     pub resources: Vec<ResourceSpec>,
     /// One user spec per user (each user gets a private broker).
     pub users: Vec<UserSpec>,
+    /// Master seed; per-user streams are derived deterministically from it.
     pub seed: u64,
+    /// Network model the messages travel through.
     pub network: NetworkSpec,
     /// Default advisor engine (per-user [`UserSpec::advisor`] overrides).
     pub advisor: AdvisorKind,
@@ -187,11 +230,18 @@ pub struct Scenario {
     /// no [`crate::faults::FaultInjector`] at all, so the event stream is
     /// identical to a pre-reliability scenario.
     pub faults: Option<FaultsSpec>,
+    /// Economic market layer: utilization-driven pricing models and spot
+    /// tiers per resource. `None` (the default) keeps every resource at its
+    /// static configured price with no `PRICE_UPDATE` traffic, so the event
+    /// stream and all cost arithmetic are identical to a pre-market
+    /// scenario.
+    pub market: Option<MarketSpec>,
     /// Hard simulation-time limit (safety net).
     pub max_time: f64,
 }
 
 impl Scenario {
+    /// Start building a scenario.
     pub fn builder() -> ScenarioBuilder {
         ScenarioBuilder::default()
     }
@@ -207,15 +257,18 @@ pub struct ScenarioBuilder {
     advisor: Option<AdvisorKind>,
     broker_config: Option<BrokerConfig>,
     faults: Option<FaultsSpec>,
+    market: Option<MarketSpec>,
     max_time: Option<f64>,
 }
 
 impl ScenarioBuilder {
+    /// Replace the full resource list.
     pub fn resources(mut self, specs: Vec<ResourceSpec>) -> Self {
         self.resources = specs;
         self
     }
 
+    /// Add one resource.
     pub fn resource(mut self, spec: ResourceSpec) -> Self {
         self.resources.push(spec);
         self
@@ -237,21 +290,25 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Set the master seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Select the network model (default: instantaneous).
     pub fn network(mut self, network: NetworkSpec) -> Self {
         self.network = Some(network);
         self
     }
 
+    /// Select the default advisor engine (default: native).
     pub fn advisor(mut self, advisor: AdvisorKind) -> Self {
         self.advisor = Some(advisor);
         self
     }
 
+    /// Set the default broker tuning.
     pub fn broker_config(mut self, config: BrokerConfig) -> Self {
         self.broker_config = Some(config);
         self
@@ -263,11 +320,19 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Attach the economic market layer (dynamic pricing / spot tiers).
+    pub fn market(mut self, market: MarketSpec) -> Self {
+        self.market = Some(market);
+        self
+    }
+
+    /// Set the hard simulation-time limit.
     pub fn max_time(mut self, t: f64) -> Self {
         self.max_time = Some(t);
         self
     }
 
+    /// Finalize the scenario (panics without resources or users).
     pub fn build(self) -> Scenario {
         assert!(!self.resources.is_empty(), "scenario needs resources");
         assert!(!self.users.is_empty(), "scenario needs at least one user");
@@ -279,6 +344,7 @@ impl ScenarioBuilder {
             advisor: self.advisor.unwrap_or(AdvisorKind::Native),
             broker_config: self.broker_config.unwrap_or_default(),
             faults: self.faults,
+            market: self.market,
             max_time: self.max_time.unwrap_or(1e9),
         }
     }
@@ -344,6 +410,11 @@ impl ScenarioReport {
     /// Total lost Gridlets abandoned by broker policy, across all users.
     pub fn total_abandoned(&self) -> usize {
         self.users.iter().map(|u| u.gridlets_abandoned).sum()
+    }
+
+    /// Total Gridlets preempted off spot tiers, across all users.
+    pub fn total_preempted(&self) -> usize {
+        self.users.iter().map(|u| u.gridlets_preempted).sum()
     }
 
     /// Mean experiment termination time (Figs 34/37).

@@ -248,12 +248,28 @@ impl GridSession {
         let shutdown =
             sim.add(Box::new(GridSimShutdown::new("GridSimShutdown", scenario.users.len())));
 
+        // Market layer: validated up front; resources without a pricing or
+        // spot entry are constructed exactly as before (no market state, no
+        // PRICE_UPDATE traffic), so no-market scenarios stay bit-identical.
+        if let Some(market) = &scenario.market {
+            if let Err(e) = market.validate() {
+                anyhow::bail!("invalid market spec: {e}");
+            }
+        }
+
         let mut resource_ids = Vec::with_capacity(scenario.resources.len());
         for spec in &scenario.resources {
             let calendar = spec.calendar.clone().unwrap_or_else(ResourceCalendar::no_load);
-            let resource =
+            let mut resource =
                 GridResource::new(spec.name.clone(), spec.characteristics(), calendar, gis)
                     .with_stats(stats);
+            if let Some((model, discount)) = scenario
+                .market
+                .as_ref()
+                .and_then(|m| m.config_for(&spec.name, spec.price))
+            {
+                resource = resource.with_market(model, discount);
+            }
             resource_ids.push(sim.add(Box::new(resource)));
         }
 
@@ -270,7 +286,10 @@ impl GridSession {
             let advisor = Box::new(SharedAdvisor { inner: advisors.get_or_init(kind)?, label });
             let policy = make_policy(user.experiment.optimization, advisor);
             let config = user.broker.clone().unwrap_or_else(|| scenario.broker_config.clone());
-            let broker = Broker::new(format!("Broker_{i}"), gis, policy, config);
+            let mut broker = Broker::new(format!("Broker_{i}"), gis, policy, config);
+            if let Some(market) = &scenario.market {
+                broker = broker.with_market(market.spot.clone(), user.max_spot_price);
+            }
             let broker_id = sim.add(Box::new(broker));
             broker_ids.push(broker_id);
             // Paper Fig 15 per-user seed derivation: seed·997·(1+i)+1.

@@ -5,7 +5,7 @@
 //! A [`SweepSpec`] names a base [`Scenario`] plus cartesian axes (deadline,
 //! budget, user count, scheduling policy, resource subset, workload shape —
 //! arrival mean, heavy-tail fraction, trace selector, mix weights — fault
-//! severity via MTBF scaling, and replications).
+//! severity via MTBF scaling, spot-tier discount, and replications).
 //! [`SweepSpec::cells`] expands the grid into independent [`SweepCell`]s in
 //! a fixed row-major order, and [`engine::run_sweep`] executes them on a
 //! fixed-size `std::thread` worker pool. Three properties make sweeps
@@ -93,6 +93,12 @@ pub struct SweepSpec {
     /// untouched. Values below 1 make failures more frequent. Requires a
     /// `faults` spec in the base scenario.
     pub mtbf_scalings: Vec<f64>,
+    /// Spot-discount override, applied to every spot tier in the cell's
+    /// [`crate::market::MarketSpec`]: each listed factor in (0, 1] replaces
+    /// the discount of *every* `spot` entry (per-resource discounts collapse
+    /// to one swept value). Requires a market spec with at least one spot
+    /// entry in the base scenario.
+    pub spot_discounts: Vec<f64>,
     /// Independent replications per grid point (≥ 1). Replication `r` runs
     /// with [`replication_seed`]`(base.seed, r)`.
     pub replications: usize,
@@ -114,6 +120,7 @@ impl SweepSpec {
             mix_weights: Vec::new(),
             link_capacities: Vec::new(),
             mtbf_scalings: Vec::new(),
+            spot_discounts: Vec::new(),
             replications: 1,
         }
     }
@@ -184,6 +191,12 @@ impl SweepSpec {
         self
     }
 
+    /// Axis builder: spot-tier discount factors (market scenarios).
+    pub fn spot_discounts(mut self, values: Vec<f64>) -> SweepSpec {
+        self.spot_discounts = values;
+        self
+    }
+
     /// Axis builder: replications per grid point.
     pub fn replications(mut self, n: usize) -> SweepSpec {
         self.replications = n;
@@ -206,6 +219,7 @@ impl SweepSpec {
             * axis_len(&self.mix_weights)
             * axis_len(&self.link_capacities)
             * axis_len(&self.mtbf_scalings)
+            * axis_len(&self.spot_discounts)
             * self.replications.max(1)
     }
 
@@ -336,14 +350,27 @@ impl SweepSpec {
                 );
             }
         }
+        if !self.spot_discounts.is_empty() {
+            if let Some(d) =
+                self.spot_discounts.iter().find(|&&d| !d.is_finite() || d <= 0.0 || d > 1.0)
+            {
+                bail!("sweep: spot discount must be in (0, 1], got {d}");
+            }
+            if !self.base.market.as_ref().is_some_and(|m| !m.spot.is_empty()) {
+                bail!(
+                    "sweep: \"spot_discounts\" needs a \"spot\" block in the base \
+                     scenario (there is no spot tier to discount otherwise)"
+                );
+            }
+        }
         Ok(())
     }
 
     /// Expand the grid into cells, row-major over the axes in the fixed
     /// order *subset → policy → users → deadline → budget → arrival mean →
     /// heavy fraction → trace selector → mix weights → link capacity →
-    /// MTBF scaling → replication* (replication varies fastest). The order
-    /// is part of the
+    /// MTBF scaling → spot discount → replication* (replication varies
+    /// fastest). The order is part of the
     /// output contract: cell index == CSV row block, independent of
     /// execution.
     pub fn cells(&self) -> Vec<SweepCell> {
@@ -375,27 +402,33 @@ impl SweepSpec {
                                         for &mix_weights in &index_axis(&self.mix_weights) {
                                             for &link_capacity in &axis(&self.link_capacities) {
                                                 for &mtbf_scaling in &axis(&self.mtbf_scalings) {
-                                                    for replication in 0..self.replications.max(1)
+                                                    for &spot_discount in
+                                                        &axis(&self.spot_discounts)
                                                     {
-                                                        cells.push(SweepCell {
-                                                            index: cells.len(),
-                                                            subset,
-                                                            policy,
-                                                            users,
-                                                            deadline,
-                                                            budget,
-                                                            mean_interarrival,
-                                                            heavy_fraction,
-                                                            trace_selector,
-                                                            mix_weights,
-                                                            link_capacity,
-                                                            mtbf_scaling,
-                                                            replication,
-                                                            seed: replication_seed(
-                                                                self.base.seed,
+                                                        for replication in
+                                                            0..self.replications.max(1)
+                                                        {
+                                                            cells.push(SweepCell {
+                                                                index: cells.len(),
+                                                                subset,
+                                                                policy,
+                                                                users,
+                                                                deadline,
+                                                                budget,
+                                                                mean_interarrival,
+                                                                heavy_fraction,
+                                                                trace_selector,
+                                                                mix_weights,
+                                                                link_capacity,
+                                                                mtbf_scaling,
+                                                                spot_discount,
                                                                 replication,
-                                                            ),
-                                                        });
+                                                                seed: replication_seed(
+                                                                    self.base.seed,
+                                                                    replication,
+                                                                ),
+                                                            });
+                                                        }
                                                     }
                                                 }
                                             }
@@ -445,6 +478,16 @@ impl SweepSpec {
             match &mut scenario.faults {
                 Some(faults) => faults.mtbf_scaling = s,
                 None => unreachable!("validate() requires a faults block for mtbf_scalings"),
+            }
+        }
+        if let Some(d) = cell.spot_discount {
+            match &mut scenario.market {
+                Some(market) => {
+                    for (_, discount) in &mut market.spot {
+                        *discount = d;
+                    }
+                }
+                None => unreachable!("validate() requires a spot tier for spot_discounts"),
             }
         }
         for user in &mut scenario.users {
@@ -538,6 +581,8 @@ pub struct SweepCell {
     pub link_capacity: Option<f64>,
     /// MTBF-scaling override (faulted scenarios).
     pub mtbf_scaling: Option<f64>,
+    /// Spot-discount override (market scenarios with a spot tier).
+    pub spot_discount: Option<f64>,
     /// Replication number, `0..replications`.
     pub replication: usize,
     /// The RNG seed this cell runs with (a pure function of the base seed
@@ -830,6 +875,41 @@ mod tests {
         assert!(err.to_string().contains("faults"), "{err}");
         let err = SweepSpec::over(base()).mtbf_scalings(vec![0.0]).validate().unwrap_err();
         assert!(err.to_string().contains("> 0"), "{err}");
+    }
+
+    #[test]
+    fn spot_discount_axis_overrides_every_spot_entry() {
+        use crate::market::MarketSpec;
+        let mut market_base = base();
+        market_base.market =
+            Some(MarketSpec::new().spot_for("R0", 0.4).spot_for("R1", 0.6));
+        let spec = SweepSpec::over(market_base).spot_discounts(vec![0.25, 0.5, 1.0]);
+        spec.validate().unwrap();
+        assert_eq!(spec.cell_count(), 3);
+        let cells = spec.cells();
+        assert_eq!(cells[0].spot_discount, Some(0.25));
+        assert_eq!(cells[2].spot_discount, Some(1.0));
+        let s = spec.scenario_for(&cells[1]);
+        let spot = &s.market.as_ref().unwrap().spot;
+        assert_eq!(spot.len(), 2, "the spot roster itself is untouched");
+        assert!(
+            spot.iter().all(|(_, d)| *d == 0.5),
+            "one swept value replaces every per-resource discount"
+        );
+
+        // A base without a spot tier rejects the axis; so do discounts
+        // outside (0, 1].
+        let err = SweepSpec::over(base()).spot_discounts(vec![0.5]).validate().unwrap_err();
+        assert!(err.to_string().contains("spot"), "{err}");
+        let mut priced_only = base();
+        priced_only.market = Some(MarketSpec::new());
+        let err =
+            SweepSpec::over(priced_only).spot_discounts(vec![0.5]).validate().unwrap_err();
+        assert!(err.to_string().contains("spot"), "{err}");
+        let err = SweepSpec::over(base()).spot_discounts(vec![0.0]).validate().unwrap_err();
+        assert!(err.to_string().contains("(0, 1]"), "{err}");
+        let err = SweepSpec::over(base()).spot_discounts(vec![1.5]).validate().unwrap_err();
+        assert!(err.to_string().contains("(0, 1]"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Market layer through the full stack: utilization-driven pricing,
+//! spot-tier preemption, charge-at-execution accounting.
+//!
+//! The scenarios use trace workloads with explicit release offsets so the
+//! demand trajectory (and hence the price trajectory) is exact: a second
+//! job arriving mid-run pushes utilization across a step threshold, the
+//! price spikes, and a spot bid placed between the idle and spiked
+//! discounted prices is crossed deterministically.
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::gridsim::AllocPolicy;
+use gridsim::market::{MarketSpec, PriceModel};
+use gridsim::scenario::{ResourceSpec, Scenario, ScenarioReport, UserSpec};
+use gridsim::session::GridSession;
+use gridsim::workload::{TraceJob, WorkloadSpec};
+
+fn resource(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+    ResourceSpec {
+        name: name.into(),
+        arch: "t".into(),
+        os: "l".into(),
+        machines: 1,
+        pes_per_machine: pes,
+        mips_per_pe: mips,
+        policy: AllocPolicy::TimeShared,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+fn run(scenario: &Scenario) -> ScenarioReport {
+    GridSession::new(scenario).run_to_completion()
+}
+
+/// Two 2000-MI jobs released 5 time units apart — the second arrival is
+/// what crosses the utilization step.
+fn staggered_pair() -> WorkloadSpec {
+    WorkloadSpec::trace(vec![
+        TraceJob::new(0.0, 2_000.0, 1, 1),
+        TraceJob::new(5.0, 2_000.0, 1, 1),
+    ])
+}
+
+/// Step tariff on a 2-PE resource: 2 G$ idle, 10 G$ once both PEs are
+/// taken (utilization 1.0 ≥ 0.75).
+fn step_model() -> PriceModel {
+    PriceModel::UtilizationStep {
+        base: 2.0,
+        steps: vec![(0.75, 10.0)],
+        floor: 0.0,
+        cap: f64::INFINITY,
+    }
+}
+
+/// The spot e2e: a bidding user rents the discounted spot tier, the second
+/// arrival spikes the price past the bid, both jobs come back `Preempted`
+/// (not `Lost`), partial work is charged at the rate actually paid, and
+/// the resubmitted jobs finish on the on-demand resource.
+#[test]
+fn price_spike_preempts_spot_jobs_which_finish_on_demand() {
+    let build = || {
+        Scenario::builder()
+            .resource(resource("SPOT", 2, 100.0, 2.0))
+            .resource(resource("DEMAND", 2, 100.0, 4.0))
+            .user(
+                UserSpec::new(
+                    ExperimentSpec::new(staggered_pair())
+                        .deadline(1_000.0)
+                        .budget(10_000.0)
+                        .optimization(Optimization::Cost),
+                )
+                .max_spot_price(2.5),
+            )
+            .market(
+                MarketSpec::new()
+                    .pricing_for("SPOT", step_model())
+                    .spot_for("SPOT", 0.5),
+            )
+            .seed(11)
+            .build()
+    };
+    let report = run(&build());
+    assert!(report.all_finished());
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_total, 2);
+    assert_eq!(u.gridlets_completed, 2, "preempted jobs must be rescued on demand");
+
+    // Preemption is its own ledger: nothing was lost to failures, nothing
+    // abandoned, and both evictions flowed through the resubmission policy.
+    assert_eq!(u.gridlets_preempted, 2, "both resident spot jobs outbid");
+    assert_eq!(u.gridlets_lost, 0);
+    assert_eq!(u.gridlets_abandoned, 0);
+    assert_eq!(u.gridlets_resubmitted, 2);
+
+    // Spot-banned jobs retry on demand only: the spot tier completes
+    // nothing, the on-demand resource completes everything.
+    let spot = u.per_resource.iter().find(|r| r.name == "SPOT").unwrap();
+    let demand = u.per_resource.iter().find(|r| r.name == "DEMAND").unwrap();
+    assert_eq!(spot.gridlets_completed, 0);
+    assert_eq!(demand.gridlets_completed, 2);
+
+    // Partial spot work IS charged (unlike `Lost`), at the discounted rate
+    // actually paid: the first job ran ~5 time units at 0.5 × 2 G$ before
+    // the spike, so the spot bill is positive but far below one full job
+    // at the undiscounted base price (20 PE-time × 2 G$).
+    assert!(spot.budget_spent > 0.0, "preempted partial work must be charged");
+    assert!(
+        spot.budget_spent < 40.0,
+        "partial discounted charge, got {}",
+        spot.budget_spent
+    );
+    assert!(spot.budget_spent < demand.budget_spent);
+
+    // Total cost equals the sum of the per-resource ledgers.
+    let ledger: f64 = u.per_resource.iter().map(|r| r.budget_spent).sum();
+    assert!(
+        (u.budget_spent - ledger).abs() < 1e-9,
+        "budget_spent {} != per-resource sum {ledger}",
+        u.budget_spent
+    );
+
+    // And the whole episode is deterministic.
+    let again = run(&build());
+    assert_eq!(report.events, again.events);
+    assert_eq!(
+        report.users[0].budget_spent.to_bits(),
+        again.users[0].budget_spent.to_bits()
+    );
+}
+
+/// A user with no bid on the same market is never preempted — it pays the
+/// full dynamic price instead, so congestion makes the same workload cost
+/// more than the static tariff would.
+#[test]
+fn no_bid_user_pays_dynamic_price_and_is_never_preempted() {
+    let scenario = Scenario::builder()
+        .resource(resource("R0", 2, 100.0, 2.0))
+        .user(
+            ExperimentSpec::new(staggered_pair())
+                .deadline(1_000.0)
+                .budget(10_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .market(MarketSpec::new().pricing_for("R0", step_model()))
+        .seed(11)
+        .build();
+    let report = run(&scenario);
+    assert!(report.all_finished());
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, 2);
+    assert_eq!(u.gridlets_preempted, 0, "no bid, no preemption");
+    assert_eq!(u.gridlets_lost, 0);
+    // 2 × 2000 MI at 100 MIPS is exactly 40 PE-time: the static tariff
+    // would bill 80 G$; the overlapping window at the 10 G$ step must push
+    // the execution-time-averaged bill well past that.
+    assert!(
+        u.budget_spent > 100.0,
+        "dynamic congestion price must exceed the 80 G$ static bill, got {}",
+        u.budget_spent
+    );
+}
+
+/// An affordable bid on a flat (never-crossing) spot tier is a pure
+/// discount: everything completes on spot, nothing is preempted, and the
+/// bill is exactly the discounted static price.
+#[test]
+fn uncontested_spot_tier_is_a_pure_discount() {
+    let scenario = Scenario::builder()
+        .resource(resource("SPOT", 2, 100.0, 2.0))
+        .user(
+            UserSpec::new(
+                ExperimentSpec::new(staggered_pair())
+                    .deadline(1_000.0)
+                    .budget(10_000.0)
+                    .optimization(Optimization::Cost),
+            )
+            .max_spot_price(2.5),
+        )
+        // Static pricing: the spot price never moves, the bid is never
+        // crossed.
+        .market(MarketSpec::new().spot_for("SPOT", 0.5))
+        .seed(11)
+        .build();
+    let report = run(&scenario);
+    assert!(report.all_finished());
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, 2);
+    assert_eq!(u.gridlets_preempted, 0);
+    // 40 PE-time at 0.5 × 2 G$ = 40 G$ exactly (Static prices settle with
+    // no averaging arithmetic).
+    assert!(
+        (u.budget_spent - 40.0).abs() < 1e-9,
+        "discounted static bill must be exact, got {}",
+        u.budget_spent
+    );
+}

@@ -266,6 +266,117 @@ fn prop_reservation_cancel_then_readmit() {
     });
 }
 
+/// Generate a random valid pricing model (all three variants, envelopes
+/// sometimes unbounded above).
+fn gen_price_model(rng: &mut Rng) -> gridsim::market::PriceModel {
+    use gridsim::market::PriceModel;
+    let envelope = |rng: &mut Rng| {
+        let floor = rng.uniform(0.0, 5.0);
+        let cap =
+            if rng.next_f64() < 0.25 { f64::INFINITY } else { floor + rng.uniform(0.0, 10.0) };
+        (floor, cap)
+    };
+    match rng.below(3) {
+        0 => PriceModel::Static { price: rng.uniform(0.0, 20.0) },
+        1 => {
+            let (floor, cap) = envelope(&mut *rng);
+            PriceModel::UtilizationLinear {
+                base: rng.uniform(0.0, 10.0),
+                slope: rng.uniform(0.0, 10.0),
+                floor,
+                cap,
+            }
+        }
+        _ => {
+            let (floor, cap) = envelope(&mut *rng);
+            let mut steps = Vec::new();
+            let mut threshold = 0.0;
+            for _ in 0..rng.below(5) {
+                threshold += rng.uniform(0.01, 0.3);
+                if threshold > 1.0 {
+                    break;
+                }
+                steps.push((threshold, rng.uniform(0.0, 15.0)));
+            }
+            PriceModel::UtilizationStep { base: rng.uniform(0.0, 10.0), steps, floor, cap }
+        }
+    }
+}
+
+#[test]
+fn prop_price_models_respect_envelope_and_are_deterministic() {
+    use gridsim::market::{PriceModel, PricingModel};
+    forall(111, 300, gen_price_model, |m| {
+        check(m.validate().is_ok(), format!("generated model must validate: {m:?}"))?;
+        // Static's envelope is the price itself (returned exactly); the
+        // utilization models clamp into [floor, cap].
+        let (floor, cap) = match m {
+            PriceModel::Static { price } => (*price, *price),
+            PriceModel::UtilizationLinear { floor, cap, .. }
+            | PriceModel::UtilizationStep { floor, cap, .. } => (*floor, *cap),
+        };
+        for i in 0..=20 {
+            let u = i as f64 / 20.0;
+            let t = 137.0 * i as f64;
+            let p = m.price_at(u, t);
+            check(
+                p >= floor && p <= cap,
+                format!("{m:?}: price {p} escapes [{floor}, {cap}] at u={u}"),
+            )?;
+            check(
+                p.to_bits() == m.price_at(u, t).to_bits(),
+                format!("{m:?}: equal inputs must price identically at u={u}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_utilization_linear_monotone_nondecreasing() {
+    use gridsim::market::{PriceModel, PricingModel};
+    forall(
+        112,
+        300,
+        |rng| {
+            let floor = rng.uniform(0.0, 5.0);
+            PriceModel::UtilizationLinear {
+                base: rng.uniform(0.0, 10.0),
+                slope: rng.uniform(0.0, 10.0),
+                floor,
+                cap: floor + rng.uniform(0.0, 10.0),
+            }
+        },
+        |m| {
+            let mut last = f64::NEG_INFINITY;
+            for i in 0..=40 {
+                let u = i as f64 / 40.0;
+                let p = m.price_at(u, 0.0);
+                check(p >= last, format!("{m:?}: price fell from {last} to {p} at u={u}"))?;
+                last = p;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_static_model_reproduces_configured_price_exactly() {
+    use gridsim::market::{PriceModel, PricingModel};
+    forall(113, 300, |rng| rng.uniform(0.0, 50.0), |price| {
+        let m = PriceModel::Static { price: *price };
+        for i in 0..=10 {
+            let u = i as f64 / 10.0;
+            let p = m.price_at(u, 999.0 * u);
+            check(
+                p.to_bits() == price.to_bits(),
+                format!("Static must reproduce {price} bit-for-bit, got {p} at u={u}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_advisor_prefix_exactness() {
     // The documented exactness property behind the XLA two-pass advisor:

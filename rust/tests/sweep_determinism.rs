@@ -160,6 +160,80 @@ fn faulted_sweep_is_byte_identical_across_jobs_counts() {
 }
 
 #[test]
+fn market_sweep_is_byte_identical_and_crn_ordered() {
+    // A `spot_discounts` axis over a dynamically priced spot tier: pricing
+    // consumes no RNG, so every discount cell sees the same demand
+    // trajectory (common random numbers) and the bill scales with the
+    // discount alone.
+    use gridsim::market::{MarketSpec, PriceModel};
+    use gridsim::scenario::UserSpec;
+    let base = Scenario::builder()
+        .resource(resource("T0", AllocPolicy::TimeShared, 2, 100.0, 2.0))
+        // Expensive enough that cost policy keeps the whole farm on the
+        // spot tier at every discount in (0, 1].
+        .resource(resource("T1", AllocPolicy::TimeShared, 2, 120.0, 50.0))
+        .user(
+            UserSpec::new(
+                ExperimentSpec::task_farm(8, 600.0, 0.10)
+                    .deadline(5_000.0)
+                    .budget(1e6)
+                    .optimization(Optimization::Cost),
+            )
+            // A bid the capped price can never cross: the tier is a pure
+            // discount and no cell preempts.
+            .max_spot_price(1e6),
+        )
+        .seed(41)
+        .market(
+            MarketSpec::new()
+                .pricing_for(
+                    "T0",
+                    PriceModel::UtilizationLinear { base: 2.0, slope: 2.0, floor: 2.0, cap: 6.0 },
+                )
+                .spot_for("T0", 0.9),
+        )
+        .build();
+    let spec = SweepSpec::over(base)
+        .policies(vec![Optimization::Cost, Optimization::Time])
+        .spot_discounts(vec![0.25, 0.5, 1.0])
+        .replications(2);
+    assert_eq!(spec.cell_count(), 12);
+
+    let jobs1 = run_sweep(&spec, 1).expect("jobs=1");
+    let jobs4 = run_sweep(&spec, 4).expect("jobs=4");
+    let long1 = long_csv(&spec, &jobs1).to_string();
+    let long4 = long_csv(&spec, &jobs4).to_string();
+    assert_eq!(long1, long4, "market long CSV differs between --jobs 1 and --jobs 4");
+    assert_eq!(
+        aggregate_csv(&spec, &jobs1).to_string(),
+        aggregate_csv(&spec, &jobs4).to_string(),
+        "market aggregate CSV differs between --jobs 1 and --jobs 4"
+    );
+    assert!(long1.lines().next().unwrap().contains("spot_discount"), "{long1}");
+
+    // CRN across the discount axis: no cell preempts (the bid is never
+    // crossed), every cell completes the full farm, and the cost-policy
+    // bill rises strictly with the discount factor.
+    assert!(jobs1.outcomes.iter().all(|o| o.report.total_preempted() == 0));
+    let spent_at = |d: f64| {
+        jobs1
+            .outcomes
+            .iter()
+            .filter(|o| {
+                o.cell.spot_discount == Some(d) && o.cell.policy == Some(Optimization::Cost)
+            })
+            .map(|o| {
+                assert!(o.report.all_finished());
+                assert_eq!(o.report.users[0].gridlets_completed, 8);
+                o.report.mean_spent()
+            })
+            .sum::<f64>()
+    };
+    let (lo, mid, hi) = (spent_at(0.25), spent_at(0.5), spent_at(1.0));
+    assert!(lo < mid && mid < hi, "price paid must rise with discount: {lo} {mid} {hi}");
+}
+
+#[test]
 fn engine_reports_match_direct_session_runs() {
     // A sweep cell must equal the same scenario run directly — the engine
     // adds orchestration, never simulation semantics.

@@ -321,6 +321,73 @@ fn flat_json_workload_json_and_builder_are_byte_identical() {
     }
 }
 
+/// The market regression pin: a scenario with no `"pricing"` block is
+/// byte-identical to the same scenario with an explicit `Static` model at
+/// every resource's configured price — on a small mixed grid and on the
+/// full Table 2 testbed. `Static` settles with no averaging arithmetic and
+/// never publishes a `PRICE_UPDATE`, so the market layer's default must be
+/// invisible in every reported bit.
+#[test]
+fn explicit_static_pricing_is_byte_identical_to_no_market() {
+    use gridsim::config::testbed::wwg_testbed;
+    use gridsim::market::{MarketSpec, PriceModel};
+
+    let static_market = |resources: &[ResourceSpec]| {
+        let mut market = MarketSpec::new();
+        for r in resources {
+            market = market.pricing_for(r.name.clone(), PriceModel::Static { price: r.price });
+        }
+        market
+    };
+
+    let small = |market: bool| {
+        let resources =
+            vec![resource("R0", 2, 100.0, 1.0), resource("R1", 2, 200.0, 4.0)];
+        let mut b = Scenario::builder().resources(resources.clone()).seed(27);
+        if market {
+            b = b.market(static_market(&resources));
+        }
+        b.user(
+            ExperimentSpec::task_farm(40, 1_000.0, 0.10)
+                .deadline(2_000.0)
+                .budget(100_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .user(
+            ExperimentSpec::task_farm(10, 1_000.0, 0.10)
+                .deadline(2_000.0)
+                .budget(100_000.0)
+                .optimization(Optimization::Time),
+        )
+        .build()
+    };
+    assert_eq!(
+        digest(&run_report(&small(false))),
+        digest(&run_report(&small(true))),
+        "Static pricing must be invisible on the small grid"
+    );
+
+    let testbed = |market: bool| {
+        let resources = wwg_testbed();
+        let mut b = Scenario::builder().resources(resources.clone()).seed(31);
+        if market {
+            b = b.market(static_market(&resources));
+        }
+        b.user(
+            ExperimentSpec::task_farm(20, 10_000.0, 0.10)
+                .deadline(5_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .build()
+    };
+    assert_eq!(
+        digest(&run_report(&testbed(false))),
+        digest(&run_report(&testbed(true))),
+        "Static pricing must be invisible on the Table 2 testbed"
+    );
+}
+
 /// Closed-batch runs carry no arrival machinery: the broker still receives
 /// one experiment whose declared totals equal the batch.
 #[test]
