@@ -288,6 +288,47 @@ fn main() {
     );
     println!("shared-trace determinism: serial and parallel CSV byte-identical");
 
+    // Workflow layer: a wide fork–join DAG per user (prep → 40 branches →
+    // post) across 10 users. Every branch is precedence-released by a
+    // completion notice and the join waits for all 40 parents, so this pins
+    // the workflow protocol's event overhead — notices, gated arrivals,
+    // join bookkeeping — next to the task-farm baselines in every snapshot.
+    {
+        use gridsim::workload::DagNode;
+        let width = 40usize;
+        let mut nodes = vec![DagNode::new("prep", 5_000.0)];
+        let mut edges = Vec::new();
+        for b in 0..width {
+            let id = format!("sim{b}");
+            nodes.push(DagNode::new(&id, 8_000.0 + 200.0 * b as f64));
+            edges.push(("prep".to_string(), id.clone()));
+            edges.push((id, "post".to_string()));
+        }
+        nodes.push(DagNode::new("post", 5_000.0));
+        let workload = WorkloadSpec::dag(nodes, edges);
+        let mut builder = Scenario::builder().resources(wwg_testbed()).seed(37);
+        for _ in 0..10 {
+            builder = builder.user(
+                ExperimentSpec::new(workload.clone())
+                    .deadline(1e6)
+                    .budget(1e9)
+                    .optimization(Optimization::Cost),
+            );
+        }
+        let scenario = builder.build();
+        let t0 = Instant::now();
+        let report = GridSession::new(&scenario).run_to_completion();
+        let wall = t0.elapsed().as_secs_f64();
+        let done: usize = report.users.iter().map(|u| u.gridlets_completed).sum();
+        assert_eq!(done, 10 * (width + 2), "every workflow job completes");
+        rec.metric(&format!("workflow_forkjoin_wall(10 users, width {width})"), wall, "s");
+        rec.metric(
+            "workflow_forkjoin_events_per_sec",
+            report.events as f64 / wall.max(1e-9),
+            "events/s",
+        );
+    }
+
     match rec.write_snapshot(&harness::snapshot_dir()) {
         Ok(path) => println!("snapshot written: {path}"),
         Err(e) => eprintln!("snapshot not written: {e}"),

@@ -185,6 +185,11 @@ pub struct Broker {
     max_spot_price: Option<f64>,
     /// Gridlets preempted once: they retry on the on-demand tier only.
     spot_banned: HashSet<usize>,
+    /// The experiment asked for per-Gridlet terminal notices (DAG
+    /// workflows): the user is withholding precedence-gated jobs and
+    /// releases/prunes them on `GRIDLET_COMPLETED`/`GRIDLET_ABANDONED`.
+    /// Never set for non-DAG workloads, so those send no extra events.
+    notify_completions: bool,
 
     last_tick: Option<u64>,
     /// Time the pending tick was scheduled *for* (dedupes the re-advise
@@ -231,6 +236,7 @@ impl Broker {
             spot_resources: Vec::new(),
             max_spot_price: None,
             spot_banned: HashSet::new(),
+            notify_completions: false,
             last_tick: None,
             tick_at: f64::NAN,
             trace,
@@ -470,6 +476,12 @@ impl Broker {
             GridletStatus::Success => {
                 self.done_mi += g.length_mi;
                 self.views[r].on_completed(&g, ctx.now());
+                if self.notify_completions {
+                    // Workflow gating: tell the user this job is done so it
+                    // can release children whose parents are all complete.
+                    let id = Msg::GridletId(g.id);
+                    ctx.send(self.user, tags::GRIDLET_COMPLETED, Some(id), 16);
+                }
                 self.finished.push(g);
             }
             GridletStatus::Lost => {
@@ -497,6 +509,12 @@ impl Broker {
                     self.unassigned.push_back(g);
                 } else {
                     self.abandoned += 1;
+                    if self.notify_completions {
+                        // Workflow gating: the user prunes this job's
+                        // withheld descendants and reports the count back.
+                        let id = Msg::GridletId(g.id);
+                        ctx.send(self.user, tags::GRIDLET_ABANDONED, Some(id), 16);
+                    }
                 }
             }
             GridletStatus::Failed | GridletStatus::Canceled => {
@@ -543,6 +561,10 @@ impl Broker {
                     self.unassigned.push_back(g);
                 } else {
                     self.abandoned += 1;
+                    if self.notify_completions {
+                        let id = Msg::GridletId(g.id);
+                        ctx.send(self.user, tags::GRIDLET_ABANDONED, Some(id), 16);
+                    }
                 }
             }
             other => panic!("unexpected returned gridlet status {other:?}"),
@@ -716,6 +738,7 @@ impl Entity<Msg> for Broker {
                 // arrived yet.
                 self.total_jobs = exp.total_jobs;
                 self.total_mi = exp.total_mi;
+                self.notify_completions = exp.notify_completions;
                 let mut pool: VecDeque<Gridlet> = exp.gridlets.iter().cloned().collect();
                 // Online arrivals that overtook the (larger, slower on the
                 // wire) experiment message were parked in `unassigned`.
@@ -828,6 +851,19 @@ impl Entity<Msg> for Broker {
                         self.schedule_tick_now(ctx);
                     }
                 }
+            }
+            tags::DAG_CASCADE => {
+                let Msg::Control(n) = ev.take_data() else {
+                    panic!("DAG_CASCADE without a count")
+                };
+                if self.state == State::Done {
+                    return;
+                }
+                // The user pruned `n` withheld descendants of an abandoned
+                // workflow job: they will never arrive, so termination must
+                // stop waiting for them.
+                self.abandoned += n as usize;
+                self.check_done(ctx);
             }
             tags::INSIGNIFICANT => {}
             other => panic!("broker {} got unexpected tag {other}", self.name),

@@ -19,18 +19,26 @@ pub enum Optimization {
     CostTime,
     /// No optimization: spread work across all resources.
     NoOpt,
+    /// HEFT-style list scheduling: jobs are taken in priority order (for
+    /// DAG workflows that order is the descending upward rank baked into
+    /// Gridlet ids at materialization) and each is placed on the resource
+    /// with the earliest estimated finish time, within deadline+budget.
+    /// For non-DAG workloads this degrades gracefully to load-aware
+    /// earliest-finish-time placement.
+    Heft,
 }
 
 impl Optimization {
     /// Parse a policy name as the CLI/JSON spell it (`cost`, `time`,
-    /// `cost-time`/`costtime`/`cost_time`, `none`/`noopt`); `None` for
-    /// anything else.
+    /// `cost-time`/`costtime`/`cost_time`, `none`/`noopt`, `heft`); `None`
+    /// for anything else.
     pub fn parse(s: &str) -> Option<Optimization> {
         match s.to_ascii_lowercase().as_str() {
             "cost" => Some(Optimization::Cost),
             "time" => Some(Optimization::Time),
             "costtime" | "cost-time" | "cost_time" => Some(Optimization::CostTime),
             "none" | "noopt" => Some(Optimization::NoOpt),
+            "heft" => Some(Optimization::Heft),
             _ => None,
         }
     }
@@ -42,6 +50,7 @@ impl Optimization {
             Optimization::Time => "time",
             Optimization::CostTime => "cost-time",
             Optimization::NoOpt => "none",
+            Optimization::Heft => "heft",
         }
     }
 }
@@ -51,7 +60,7 @@ impl std::str::FromStr for Optimization {
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         Optimization::parse(s)
-            .ok_or_else(|| format!("unknown policy {s:?} (cost|time|cost-time|none)"))
+            .ok_or_else(|| format!("unknown policy {s:?} (cost|time|cost-time|none|heft)"))
     }
 }
 
@@ -175,6 +184,14 @@ pub struct Experiment {
     pub budget: BudgetSpec,
     /// Which DBC scheduling policy the broker runs.
     pub optimization: Optimization,
+    /// The workload is a precedence-gated DAG workflow: the user entity is
+    /// withholding child jobs, so the broker must send a
+    /// [`GRIDLET_COMPLETED`](crate::gridsim::tags::GRIDLET_COMPLETED) /
+    /// [`GRIDLET_ABANDONED`](crate::gridsim::tags::GRIDLET_ABANDONED)
+    /// notice per terminal Gridlet. False for every non-DAG workload, and
+    /// then no notice is ever sent — pre-workflow scenarios replay
+    /// byte-identically.
+    pub notify_completions: bool,
 }
 
 /// Per-resource outcome line (Figures 25–32 series).
@@ -355,6 +372,7 @@ mod tests {
             ("TIME", Optimization::Time),
             ("cost-time", Optimization::CostTime),
             ("none", Optimization::NoOpt),
+            ("heft", Optimization::Heft),
         ] {
             assert_eq!(Optimization::parse(s), Some(o));
             assert_eq!(Optimization::parse(o.label()), Some(o));

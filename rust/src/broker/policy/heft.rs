@@ -1,0 +1,128 @@
+//! HEFT-style list scheduling: take jobs in priority order and place each
+//! on the resource with the **earliest estimated finish time**, within the
+//! deadline and budget.
+//!
+//! The classic HEFT split lives in two places here. The *priority list*
+//! (descending upward rank) is baked into Gridlet ids when a DAG workflow
+//! materializes ([`crate::workload::dag`]), and the broker's FIFO pool
+//! preserves it — so by the time this policy runs, "next job" already means
+//! "highest-ranked eligible job". The *processor selection* happens here:
+//! unlike [`TimePolicy`](super::time::TimePolicy), the finish estimate
+//! starts from the work already in flight on each resource (its
+//! [`outstanding`](crate::broker::resource_view::BrokerResource::outstanding)
+//! count), so a resource busy with a long parent is passed over even when
+//! its raw rate wins. For non-DAG workloads nothing refers to ranks at all
+//! and the policy degrades gracefully to load-aware earliest-finish-time
+//! placement.
+
+use super::{PolicyInput, SchedulingPolicy};
+
+/// HEFT-style earliest-finish-time placement (see the module docs).
+pub struct HeftPolicy;
+
+impl SchedulingPolicy for HeftPolicy {
+    fn label(&self) -> &'static str {
+        "heft"
+    }
+
+    fn allocate(&mut self, input: &PolicyInput) -> Vec<usize> {
+        let rates = input.rates();
+        let job_costs = input.job_costs();
+        let capacities = input.capacities();
+        let avg = input.avg_job_mi.max(1e-9);
+        // Desired totals are *committed* totals (the broker subtracts
+        // outstanding when it rebalances assigned queues), so the load on
+        // each resource starts at its in-flight count — that's the
+        // "earliest start time" half of the EFT estimate.
+        let mut counts: Vec<usize> = input.views.iter().map(|v| v.outstanding).collect();
+        let mut budget = input.budget_left.max(0.0);
+        for _ in 0..input.jobs {
+            // EFT of one more job on r: (n_r + 1) · avg / rate_r with n_r
+            // counting both planned and in-flight work; ties go cheaper.
+            let mut best: Option<(usize, f64)> = None;
+            for r in 0..counts.len() {
+                if counts[r] >= capacities[r]
+                    || job_costs[r] > budget * (1.0 + 1e-12) + 1e-9
+                    || rates[r] <= 0.0
+                {
+                    continue;
+                }
+                let finish = (counts[r] + 1) as f64 * avg / rates[r];
+                let better = match best {
+                    None => true,
+                    Some((b, t)) => {
+                        finish < t - 1e-12 || (finish < t + 1e-12 && job_costs[r] < job_costs[b])
+                    }
+                };
+                if better {
+                    best = Some((r, finish));
+                }
+            }
+            match best {
+                Some((r, _)) => {
+                    counts[r] += 1;
+                    budget -= job_costs[r];
+                }
+                None => break, // nothing feasible (deadline or budget)
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::views;
+    use super::*;
+
+    fn input<'a>(
+        views: &'a [crate::broker::resource_view::BrokerResource],
+        jobs: usize,
+    ) -> PolicyInput<'a> {
+        PolicyInput {
+            views,
+            now: 0.0,
+            deadline: 1e6,
+            budget_left: 1e9,
+            avg_job_mi: 1000.0,
+            jobs,
+        }
+    }
+
+    #[test]
+    fn spreads_by_earliest_finish_when_idle() {
+        // Idle and equal-priced: behaves like time-opt, 2:1 by rate.
+        let vs = views(&[(100.0, 2, 1.0), (100.0, 1, 2.0)]);
+        let alloc = HeftPolicy.allocate(&input(&vs, 30));
+        assert_eq!(alloc, vec![20, 10]);
+    }
+
+    #[test]
+    fn inflight_work_delays_a_resource() {
+        // Equal rates, but the cheap resource already runs 4 jobs: the
+        // first new placements go to the idle one, and the returned totals
+        // include the in-flight load.
+        let mut vs = views(&[(100.0, 1, 1.0), (100.0, 1, 2.0)]);
+        vs[0].outstanding = 4;
+        let alloc = HeftPolicy.allocate(&input(&vs, 4));
+        assert_eq!(alloc, vec![4 + 0, 4], "all 4 new jobs go to the idle resource");
+    }
+
+    #[test]
+    fn ties_prefer_the_cheaper_resource() {
+        let vs = views(&[(100.0, 1, 1.0), (100.0, 1, 2.0)]);
+        let alloc = HeftPolicy.allocate(&input(&vs, 1));
+        assert_eq!(alloc, vec![1, 0]);
+    }
+
+    #[test]
+    fn budget_and_capacity_gates_hold() {
+        let vs = views(&[(100.0, 1, 1.0)]); // 10 G$/job
+        let mut i = input(&vs, 10);
+        i.budget_left = 35.0;
+        assert_eq!(HeftPolicy.allocate(&i), vec![3]);
+        let mut i = input(&vs, 10);
+        i.deadline = 50.0; // capacity = 100*50/1000 = 5
+        assert_eq!(HeftPolicy.allocate(&i), vec![5]);
+    }
+}

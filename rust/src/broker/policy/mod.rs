@@ -1,11 +1,13 @@
 //! DBC scheduling policies (paper §4.2.2): cost-, time-, cost-time- and
-//! none-optimization. Each policy maps broker state to *desired committed
+//! none-optimization, plus HEFT-style earliest-finish-time list scheduling
+//! for DAG workflows. Each policy maps broker state to *desired committed
 //! job totals per resource*; the broker's scheduling flow manager then
 //! rebalances assignments toward those totals and the dispatcher stages
 //! Gridlets out (Fig 18 / Fig 20).
 
 pub mod cost;
 pub mod cost_time;
+pub mod heft;
 pub mod none;
 pub mod time;
 
@@ -77,6 +79,7 @@ pub fn make_policy(
         Optimization::Time => Box::new(time::TimePolicy),
         Optimization::CostTime => Box::new(cost_time::CostTimePolicy),
         Optimization::NoOpt => Box::new(none::NoOptPolicy),
+        Optimization::Heft => Box::new(heft::HeftPolicy),
     }
 }
 
@@ -140,6 +143,7 @@ mod tests {
             (Optimization::Time, "time"),
             (Optimization::CostTime, "cost-time"),
             (Optimization::NoOpt, "none"),
+            (Optimization::Heft, "heft"),
         ] {
             let p = make_policy(o, Box::new(NativeAdvisor::new()));
             assert_eq!(p.label(), label);

@@ -9,6 +9,17 @@
 //! and streamed to the broker as `GRIDLET_ARRIVAL` events when their release
 //! time comes (internal `USER_TICK` wake-ups), so the broker re-plans
 //! mid-flight instead of assuming a closed batch.
+//!
+//! DAG workflows ride the same streaming path, gated by *precedence* rather
+//! than time: a release whose [`Release::parents`](crate::workload::Release)
+//! list is non-empty is withheld here, the broker sends a
+//! `GRIDLET_COMPLETED` notice per finished workflow Gridlet, and children
+//! whose last parent just completed travel back as ordinary
+//! `GRIDLET_ARRIVAL` events — through the contended network, like any other
+//! online job. When the broker abandons a job (`GRIDLET_ABANDONED`), its
+//! withheld descendants can never become eligible: they are pruned and the
+//! count reported back (`DAG_CASCADE`) so termination accounting stays
+//! exact.
 
 use super::experiment::{Experiment, ExperimentResult, ExperimentSpec};
 use crate::gridsim::gridlet::Gridlet;
@@ -18,7 +29,7 @@ use crate::gridsim::random::GridSimRandom;
 use crate::gridsim::statistics::StatRecord;
 use crate::gridsim::tags;
 use crate::des::{Ctx, Entity, EntityId, Event};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// Wire size of one online job-arrival message (job metadata; input staging
 /// is charged on broker→resource dispatch, as for batch jobs).
@@ -40,6 +51,12 @@ pub struct UserEntity {
     /// front entry and re-armed after each pop — O(1) queued ticks no
     /// matter how large the online workload is.
     pending: VecDeque<(f64, Gridlet)>,
+    /// Precedence-withheld workflow jobs: Gridlet id → (job, number of
+    /// parents not yet reported complete). Released when the count hits 0.
+    held: HashMap<usize, (Gridlet, usize)>,
+    /// Forward workflow edges over withheld jobs: parent Gridlet id → child
+    /// ids, in ascending child-id (= descending upward-rank) order.
+    children: HashMap<usize, Vec<usize>>,
     /// Outcome, for post-run inspection.
     pub result: Option<ExperimentResult>,
 }
@@ -63,6 +80,8 @@ impl UserEntity {
             seed,
             submit_delay: 0.0,
             pending: VecDeque::new(),
+            held: HashMap::new(),
+            children: HashMap::new(),
             result: None,
         }
     }
@@ -81,9 +100,10 @@ impl UserEntity {
         self
     }
 
-    /// Jobs materialized but not yet released to the broker.
+    /// Jobs materialized but not yet released to the broker (time-pending
+    /// online jobs plus precedence-withheld workflow jobs).
     pub fn pending_releases(&self) -> usize {
-        self.pending.len()
+        self.pending.len() + self.held.len()
     }
 }
 
@@ -100,9 +120,17 @@ impl Entity<Msg> for UserEntity {
         let releases = self.spec.workload.materialize(&mut rand);
         let total_jobs = releases.len();
         let total_mi: f64 = releases.iter().map(|r| r.gridlet.length_mi).sum();
+        let notify_completions = releases.iter().any(|r| !r.parents.is_empty());
         let mut batch = Vec::new();
         for r in releases {
-            if r.offset <= 0.0 {
+            if !r.parents.is_empty() {
+                // Precedence-gated: withheld until every parent's Gridlet
+                // is reported complete, whatever the offset says.
+                for &p in &r.parents {
+                    self.children.entry(p).or_default().push(r.gridlet.id);
+                }
+                self.held.insert(r.gridlet.id, (r.gridlet, r.parents.len()));
+            } else if r.offset <= 0.0 {
                 batch.push(r.gridlet);
             } else {
                 // Releases are offset-sorted, so pending stays front-first
@@ -121,6 +149,7 @@ impl Entity<Msg> for UserEntity {
             deadline: self.spec.deadline,
             budget: self.spec.budget,
             optimization: self.spec.optimization,
+            notify_completions,
         };
         let msg = Msg::Experiment(Box::new(experiment));
         let bytes = msg.wire_bytes(true);
@@ -157,6 +186,8 @@ impl Entity<Msg> for UserEntity {
                 // The broker reported (deadline/budget hit); unreleased jobs
                 // have nowhere to go.
                 self.pending.clear();
+                self.held.clear();
+                self.children.clear();
                 // No more processing requirements → tell the shutdown entity.
                 ctx.send(self.shutdown, tags::END_OF_SIMULATION, None, 16);
             }
@@ -170,6 +201,57 @@ impl Entity<Msg> for UserEntity {
                     if let Some(&(t, _)) = self.pending.front() {
                         ctx.schedule_self((t - ctx.now()).max(0.0), tags::USER_TICK, None);
                     }
+                }
+            }
+            tags::GRIDLET_COMPLETED => {
+                let Msg::GridletId(id) = ev.take_data() else {
+                    panic!("GRIDLET_COMPLETED without a Gridlet id")
+                };
+                // One parent done: decrement its children's unmet counts and
+                // release the now-eligible ones in ascending-id (descending
+                // upward-rank) order — the deterministic list order.
+                let mut ready = Vec::new();
+                if let Some(kids) = self.children.remove(&id) {
+                    for k in kids {
+                        // A child pruned by an earlier abandonment cascade
+                        // is gone from `held`; skip it.
+                        if let Some(entry) = self.held.get_mut(&k) {
+                            entry.1 -= 1;
+                            if entry.1 == 0 {
+                                ready.push(k);
+                            }
+                        }
+                    }
+                }
+                ready.sort_unstable();
+                for k in ready {
+                    let (g, _) = self.held.remove(&k).expect("ready child is held");
+                    let msg = Msg::Gridlet(pool::boxed(g));
+                    ctx.send(self.broker, tags::GRIDLET_ARRIVAL, Some(msg), ARRIVAL_BYTES);
+                }
+            }
+            tags::GRIDLET_ABANDONED => {
+                let Msg::GridletId(id) = ev.take_data() else {
+                    panic!("GRIDLET_ABANDONED without a Gridlet id")
+                };
+                // The job will never complete, so no withheld descendant can
+                // ever become eligible: prune them all (transitively, each
+                // at most once) and tell the broker how many jobs it should
+                // stop waiting for.
+                let mut stack = vec![id];
+                let mut pruned: u64 = 0;
+                while let Some(p) = stack.pop() {
+                    if let Some(kids) = self.children.remove(&p) {
+                        for k in kids {
+                            if self.held.remove(&k).is_some() {
+                                pruned += 1;
+                                stack.push(k);
+                            }
+                        }
+                    }
+                }
+                if pruned > 0 {
+                    ctx.send(self.broker, tags::DAG_CASCADE, Some(Msg::Control(pruned)), 16);
                 }
             }
             tags::INSIGNIFICANT => {}

@@ -65,8 +65,8 @@ use crate::scenario::{AdvisorKind, NetworkSpec, ResourceSpec, Scenario, UserSpec
 use crate::sweep::SweepSpec;
 use crate::util::json::{self, Value};
 use crate::workload::{
-    load_trace_file_with, ArrivalProcess, JobSpec, RateEnvelope, SwfLoadOptions, TraceJob,
-    TraceSelector, WorkloadSpec,
+    load_trace_file_with, parse_dot, ArrivalProcess, DagNode, JobSpec, RateEnvelope,
+    SwfLoadOptions, TraceJob, TraceSelector, WorkloadSpec,
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -141,6 +141,7 @@ const WORKLOAD_TYPES: &[&str] = &[
     "concat",
     "mix",
     "online_arrivals",
+    "dag",
 ];
 const WORKLOAD_TASK_FARM_KEYS: &[&str] =
     &["type", "gridlets", "length_mi", "variation", "input_bytes", "output_bytes"];
@@ -154,6 +155,8 @@ const WORKLOAD_HEAVY_KEYS: &[&str] = &[
     "output_bytes",
 ];
 const WORKLOAD_EXPLICIT_KEYS: &[&str] = &["type", "jobs"];
+const WORKLOAD_DAG_KEYS: &[&str] = &["type", "nodes", "edges", "file"];
+const DAG_NODE_KEYS: &[&str] = &["id", "length_mi", "input_bytes", "output_bytes"];
 const WORKLOAD_TRACE_KEYS: &[&str] =
     &["type", "path", "select", "mips", "statuses", "input_bytes", "output_bytes"];
 const WORKLOAD_CONCAT_KEYS: &[&str] = &["type", "parts"];
@@ -999,9 +1002,9 @@ impl TraceCache {
 /// Parse a `"workload"` object into a [`WorkloadSpec`]. Each variant has its
 /// own allowed-key list; the spec is validated before it is returned, so
 /// out-of-range parameters fail at load time with a readable message.
-/// Relative trace paths resolve against `base_dir` when given; trace loads
-/// go through `traces`, so repeated references to one log share a single
-/// `Arc` allocation.
+/// Relative trace and DAG-file paths resolve against `base_dir` when given;
+/// trace loads go through `traces`, so repeated references to one log share
+/// a single `Arc` allocation.
 fn parse_workload(
     v: &Value,
     base_dir: Option<&Path>,
@@ -1184,6 +1187,86 @@ fn parse_workload(
                 other => bail!("unknown arrival process {other:?} (poisson|fixed|modulated)"),
             };
             WorkloadSpec::OnlineArrivals { workload: Box::new(inner), arrivals }
+        }
+        "dag" => {
+            reject_unknown_keys(v, "dag workload", WORKLOAD_DAG_KEYS)?;
+            let inline = v.get("nodes").is_some() || v.get("edges").is_some();
+            let (nodes, edges) = match (inline, v.get("file")) {
+                (true, Some(_)) => bail!(
+                    "dag workload: give inline \"nodes\"/\"edges\" or a \"file\", not both"
+                ),
+                (false, None) => bail!(
+                    "dag workload: missing \"nodes\"/\"edges\" (inline graph) or \
+                     \"file\" (DOT-like graph file)"
+                ),
+                (false, Some(_)) => {
+                    let path = v.req_str("file").context("dag workload")?;
+                    let resolved = match base_dir {
+                        Some(dir) if Path::new(path).is_relative() => dir.join(path),
+                        _ => PathBuf::from(path),
+                    };
+                    let text = std::fs::read_to_string(&resolved).with_context(|| {
+                        format!("dag workload: reading {}", resolved.display())
+                    })?;
+                    parse_dot(&text)
+                        .with_context(|| format!("dag workload: {}", resolved.display()))?
+                }
+                (true, None) => {
+                    let arr = v.get("nodes").and_then(Value::as_arr).ok_or_else(|| {
+                        anyhow!("dag workload: \"nodes\" must be an array of node objects")
+                    })?;
+                    let nodes = arr
+                        .iter()
+                        .enumerate()
+                        .map(|(i, n)| {
+                            (|| -> Result<DagNode> {
+                                reject_unknown_keys(n, "dag node", DAG_NODE_KEYS)?;
+                                let mut node = DagNode::new(
+                                    n.req_str("id")?,
+                                    n.req_f64("length_mi")?,
+                                );
+                                if let Some(b) = opt_bytes(n, "dag node", "input_bytes")? {
+                                    node.input_bytes = b;
+                                }
+                                if let Some(b) = opt_bytes(n, "dag node", "output_bytes")? {
+                                    node.output_bytes = b;
+                                }
+                                Ok(node)
+                            })()
+                            .with_context(|| format!("dag workload node #{i}"))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    let edges = match v.get("edges") {
+                        None => Vec::new(),
+                        Some(e) => {
+                            let arr = e.as_arr().ok_or_else(|| {
+                                anyhow!(
+                                    "dag workload: \"edges\" must be an array of \
+                                     [parent, child] string pairs"
+                                )
+                            })?;
+                            arr.iter()
+                                .enumerate()
+                                .map(|(i, pair)| {
+                                    let err = || {
+                                        anyhow!(
+                                            "dag workload edge #{i}: expected a \
+                                             [parent, child] string pair"
+                                        )
+                                    };
+                                    let pair = pair.as_arr().ok_or_else(err)?;
+                                    let [a, b] = pair else { return Err(err()) };
+                                    let a = a.as_str().ok_or_else(err)?;
+                                    let b = b.as_str().ok_or_else(err)?;
+                                    Ok((a.to_string(), b.to_string()))
+                                })
+                                .collect::<Result<Vec<_>>>()?
+                        }
+                    };
+                    (nodes, edges)
+                }
+            };
+            WorkloadSpec::Dag { nodes, edges }
         }
         other => {
             let hint = nearest(other, WORKLOAD_TYPES)
@@ -1988,6 +2071,131 @@ mod tests {
         .unwrap_err()
         .to_string();
         assert!(err.contains("empty"), "{err}");
+    }
+
+    #[test]
+    fn parses_dag_workload_inline() {
+        use crate::workload::WorkloadSpec;
+        let text = r#"{
+            "testbed": "wwg",
+            "users": [{"workload": {"type": "dag",
+                "nodes": [{"id": "prep", "length_mi": 1000},
+                          {"id": "sim", "length_mi": 4000, "input_bytes": 64},
+                          {"id": "post", "length_mi": 500}],
+                "edges": [["prep", "sim"], ["sim", "post"]]},
+                "deadline": 3100, "budget": 22000}]
+        }"#;
+        let s = parse_scenario(text).unwrap();
+        let WorkloadSpec::Dag { nodes, edges } = &s.users[0].experiment.workload else {
+            panic!("dag expected")
+        };
+        assert_eq!(nodes.len(), 3);
+        assert_eq!(nodes[1].input_bytes, 64);
+        assert_eq!(nodes[2].input_bytes, 1000, "node staging defaults apply");
+        assert_eq!(
+            edges,
+            &vec![
+                ("prep".to_string(), "sim".to_string()),
+                ("sim".to_string(), "post".to_string())
+            ]
+        );
+        assert_eq!(s.users[0].experiment.num_gridlets(), 3);
+    }
+
+    #[test]
+    fn parses_dag_workload_from_dot_file() {
+        let dir = std::env::temp_dir().join("gridsim_loader_dag_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("wf.dot"),
+            "digraph wf {\n  a [length_mi=1000];\n  b [length_mi=2000];\n  a -> b;\n}\n",
+        )
+        .unwrap();
+        let text = r#"{"testbed": "wwg",
+            "users": [{"workload": {"type": "dag", "file": "wf.dot"}}]}"#;
+        // A relative graph path resolves against the scenario file's
+        // directory, exactly like a relative trace path.
+        assert!(parse_scenario(text).is_err(), "no base dir: CWD lookup fails");
+        let s = parse_scenario_at(text, Some(dir.as_path())).unwrap();
+        assert_eq!(s.users[0].experiment.num_gridlets(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dag_workload_rejects_bad_input() {
+        // Inline graph and file are mutually exclusive, and one is required.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "dag", "file": "x.dot",
+                    "nodes": [{"id": "a", "length_mi": 1}]}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not both"), "{err}");
+        let err = parse_scenario(
+            r#"{"testbed": "wwg", "users": [{"workload": {"type": "dag"}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("nodes") && err.contains("file"), "{err}");
+
+        // Edges must be [parent, child] string pairs.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "dag",
+                    "nodes": [{"id": "a", "length_mi": 1}], "edges": [["a"]]}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("pair"), "{err}");
+
+        // Graph-level validation runs at load time: a dangling edge gets a
+        // did-you-mean hint...
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "dag",
+                    "nodes": [{"id": "prep", "length_mi": 1},
+                              {"id": "sim", "length_mi": 1}],
+                    "edges": [["prep", "sm"]]}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("sm") && err.contains("sim"), "{err}");
+
+        // ...and a cycle names its members.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "dag",
+                    "nodes": [{"id": "a", "length_mi": 1}, {"id": "b", "length_mi": 1}],
+                    "edges": [["a", "b"], ["b", "a"]]}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("cycle"), "{err}");
+
+        // Unknown node key with a hint.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "dag",
+                    "nodes": [{"id": "a", "lenght_mi": 1}]}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("lenght_mi") && err.contains("length_mi"), "{err}");
+
+        // Precedence gating cannot ride under a timed arrival process.
+        let err = parse_scenario(
+            r#"{"testbed": "wwg",
+                "users": [{"workload": {"type": "online_arrivals",
+                    "mean_interarrival": 3,
+                    "workload": {"type": "dag",
+                        "nodes": [{"id": "a", "length_mi": 1},
+                                  {"id": "b", "length_mi": 1}],
+                        "edges": [["a", "b"]]}}}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("dag"), "{err}");
     }
 
     #[test]

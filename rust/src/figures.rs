@@ -18,12 +18,12 @@ use crate::scenario::{AdvisorKind, Scenario};
 use crate::session::GridSession;
 use crate::sweep::{run_sweep, SweepResults, SweepSpec};
 
-/// The paper's §5.3 sweep axes: deadline 100–3600 step 500, budget
-/// 5000–22000 step 1000.
+/// The paper's §5.3 deadline axis: 100–3600 in steps of 500.
 pub fn paper_deadlines() -> Vec<f64> {
     (0..8).map(|i| 100.0 + 500.0 * i as f64).collect()
 }
 
+/// The paper's §5.3 budget axis: 5000–22000 in steps of 1000.
 pub fn paper_budgets() -> Vec<f64> {
     (0..18).map(|i| 5_000.0 + 1_000.0 * i as f64).collect()
 }
@@ -32,9 +32,14 @@ pub fn paper_budgets() -> Vec<f64> {
 /// reduced `quick` grid keeps CI fast.
 #[derive(Debug, Clone)]
 pub struct FigureConfig {
+    /// Deadline axis for the deadline×budget grids ([`figs21_24`]).
     pub deadlines: Vec<f64>,
+    /// Budget axis for the deadline×budget and per-resource grids.
     pub budgets: Vec<f64>,
+    /// Gridlets per user in every generated workload (the paper uses 200).
     pub gridlets: usize,
+    /// User-count axis for the competition figures ([`figs33_38`],
+    /// [`fig_market`], [`fig_workflow`]).
     pub user_counts: Vec<usize>,
     /// Mean inter-arrival axis for the day/night arrival figure
     /// ([`fig_day_night`]).
@@ -45,13 +50,17 @@ pub struct FigureConfig {
     /// MTBF-scaling axis (fault severity) for the robustness figure
     /// ([`fig_robustness`]); 1 is the base failure rate, smaller is harsher.
     pub mtbf_scalings: Vec<f64>,
+    /// Base RNG seed; every sweep cell derives its own stream from it.
     pub seed: u64,
+    /// Advisor engine for cost-optimization (native or AOT artifact).
     pub advisor: AdvisorKind,
     /// Sweep-engine worker threads (results are identical at any value).
     pub jobs: usize,
 }
 
 impl FigureConfig {
+    /// The full §5 grids (8 deadlines × 18 budgets, 200 Gridlets, user
+    /// counts to 100) — minutes of CPU, for `repro figures --paper`.
     pub fn paper() -> FigureConfig {
         FigureConfig {
             deadlines: paper_deadlines(),
@@ -559,6 +568,74 @@ pub fn fig_market(cfg: &FigureConfig) -> CsvWriter {
     csv
 }
 
+/// Workflow figure (DAG layer, beyond the paper's independent task farms):
+/// a fork–join workflow — one prep stage fanning out to heterogeneous
+/// simulation branches that a post stage joins — on the WWG testbed, swept
+/// over DBC policy × user count. The DAG materializes in descending
+/// upward-rank order and children are precedence-released as parents
+/// complete, so the HEFT cell exercises the full list-scheduling path while
+/// cost/time cells schedule the same eligible jobs with the paper's DBC
+/// heuristics. Constraints are loose (every job completes in every cell),
+/// so the CSV isolates *makespan*: one row per (policy, users) cell.
+pub fn fig_workflow(cfg: &FigureConfig) -> CsvWriter {
+    use crate::workload::{DagNode, WorkloadSpec};
+    let mut csv = CsvWriter::new(&[
+        "policy", "users", "makespan", "gridlets_done", "gridlets_total", "budget_spent",
+    ]);
+    if cfg.user_counts.is_empty() {
+        return csv;
+    }
+    // Branch lengths step from 8k to 24k MI so list scheduling has real
+    // choices: the long branches dominate the critical path and rank-ordered
+    // ids put them first in the broker's pool.
+    let width = (cfg.gridlets / 10).max(2);
+    let mut nodes = vec![DagNode::new("prep", 5_000.0)];
+    let mut edges = Vec::new();
+    for b in 0..width {
+        let name = format!("sim{b}");
+        let mi = 8_000.0 + 16_000.0 * b as f64 / (width - 1).max(1) as f64;
+        nodes.push(DagNode::new(name.clone(), mi));
+        edges.push(("prep".to_string(), name.clone()));
+        edges.push((name, "post".to_string()));
+    }
+    nodes.push(DagNode::new("post", 5_000.0));
+    let base = Scenario::builder()
+        .resources(wwg_testbed())
+        .user(
+            ExperimentSpec::new(WorkloadSpec::dag(nodes, edges))
+                .deadline(3_100.0)
+                .budget(22_000.0)
+                .optimization(Optimization::Cost),
+        )
+        .seed(cfg.seed)
+        .advisor(cfg.advisor.clone())
+        .build();
+    let spec = SweepSpec::over(base)
+        .policies(vec![Optimization::Cost, Optimization::Time, Optimization::Heft])
+        .user_counts(cfg.user_counts.clone());
+    let results = sweep(&spec, cfg.jobs);
+    for outcome in &results.outcomes {
+        let report = &outcome.report;
+        let done: usize = report.users.iter().map(|u| u.gridlets_completed).sum();
+        let total: usize = report.users.iter().map(|u| u.gridlets_total).sum();
+        let spent: f64 = report.users.iter().map(|u| u.budget_spent).sum();
+        let mut fields = vec![outcome.cell.policy.expect("policy axis").label().to_string()];
+        fields.extend(
+            [
+                outcome.cell.users.expect("users axis") as f64,
+                report.mean_finish_time(),
+                done as f64,
+                total as f64,
+                spent,
+            ]
+            .iter()
+            .map(|x| crate::output::csv::trim_float(*x)),
+        );
+        csv.row(&fields);
+    }
+    csv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -719,6 +796,39 @@ mod tests {
             // Six competing users offer 6x the work, so total spend must
             // exceed the single-user cell's under common random numbers.
             assert!(heavy[6] > light[6], "offered load drives total spend: {text}");
+        }
+    }
+
+    #[test]
+    fn workflow_rows_per_policy_and_users() {
+        let cfg = FigureConfig {
+            gridlets: 40, // fork–join width 4 → 6 jobs per user
+            user_counts: vec![1, 4],
+            ..FigureConfig::quick()
+        };
+        let csv = fig_workflow(&cfg);
+        assert_eq!(csv.len(), 6, "three policies x two user counts");
+        let text = csv.to_string();
+        assert!(text.starts_with("policy,users,makespan,"), "{text}");
+        // Rows come out policy-major in axis order (cost, time, heft).
+        let rows: Vec<(String, Vec<f64>)> = text
+            .lines()
+            .skip(1)
+            .map(|l| {
+                let mut it = l.split(',');
+                let policy = it.next().unwrap().to_string();
+                (policy, it.map(|f| f.parse().unwrap()).collect())
+            })
+            .collect();
+        assert_eq!(rows[0].0, "cost");
+        assert_eq!(rows[2].0, "time");
+        assert_eq!(rows[4].0, "heft");
+        for (policy, r) in &rows {
+            // Loose constraints: the whole workflow completes in every cell,
+            // so the figure isolates makespan.
+            assert_eq!(r[2], r[3], "{policy}: done == total: {text}");
+            assert!(r[1] > 0.0, "{policy}: positive makespan: {text}");
+            assert!(r[4] > 0.0, "{policy}: positive spend: {text}");
         }
     }
 

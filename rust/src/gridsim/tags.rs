@@ -52,6 +52,20 @@ pub const GRIDLET_ARRIVAL: i64 = 16;
 /// (market layer). Only emitted by resources carrying a market — scenarios
 /// without a `"pricing"`/`"spot"` block never see this tag.
 pub const PRICE_UPDATE: i64 = 17;
+/// Broker -> User: one Gridlet of a precedence-gated (DAG) workflow
+/// completed successfully; the user releases any children whose parents
+/// are now all complete (workflow layer). Only sent when the experiment
+/// asks for completion notices — task-farm scenarios never see this tag.
+pub const GRIDLET_COMPLETED: i64 = 18;
+/// Broker -> User: a Gridlet of a precedence-gated workflow was abandoned
+/// (resubmission policy gave up); the user prunes every withheld
+/// descendant — they can never become eligible — and reports the count
+/// back via [`DAG_CASCADE`].
+pub const GRIDLET_ABANDONED: i64 = 19;
+/// User -> Broker: the number of withheld workflow jobs pruned after a
+/// [`GRIDLET_ABANDONED`] notice, so broker termination accounting covers
+/// jobs that will now never arrive.
+pub const DAG_CASCADE: i64 = 20;
 
 /// Internal: resource forecast interrupt (Gridlet completion tick).
 pub const RESOURCE_TICK: i64 = 100;

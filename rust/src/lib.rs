@@ -44,11 +44,15 @@
 //!   and heavy-tailed mixes, explicit job lists, real-trace replay (legacy
 //!   4-column and full 18-column SWF logs, split per user by
 //!   [`workload::TraceSelector`]), declarative composition (`concat`/`mix`),
-//!   and online arrivals released mid-run (Poisson, fixed-interval, or
-//!   day/night rate-modulated). See `docs/ARCHITECTURE.md` for the
-//!   paper-section ↔ module map and the online-arrival event flow.
+//!   online arrivals released mid-run (Poisson, fixed-interval, or
+//!   day/night rate-modulated), and DAG workflows ([`workload::dag`])
+//!   whose jobs are precedence-released as their parents complete, with
+//!   HEFT-style list scheduling on the broker side. See
+//!   `docs/ARCHITECTURE.md` for the paper-section ↔ module map and the
+//!   online-arrival and workflow event flows.
 //! * [`figures`] — the harness that regenerates every table and figure of
-//!   the paper's evaluation section.
+//!   the paper's evaluation section, plus the beyond-paper figures (arrival
+//!   dynamics, network contention, robustness, market, workflows).
 //!
 //! ## The `GridSession` lifecycle
 //!
@@ -110,8 +114,8 @@
 // `-D warnings`). Modules that predate the policy carry a module-level
 // `allow` below; remove an `allow` once its module is fully documented —
 // never add a new one. `broker`, `workload`, `sweep`, `session`, `des`,
-// `faults`, `gridsim`, `market`, `network`, `output`, `runtime` and
-// `scenario` are fully documented and enforced.
+// `faults`, `figures`, `gridsim`, `market`, `network`, `output`, `runtime`
+// and `scenario` are fully documented and enforced.
 #![warn(missing_docs)]
 
 pub mod broker;
@@ -119,7 +123,6 @@ pub mod broker;
 pub mod config;
 pub mod des;
 pub mod faults;
-#[allow(missing_docs)] // TODO(docs)
 pub mod figures;
 pub mod gridsim;
 pub mod market;

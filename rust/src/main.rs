@@ -109,7 +109,8 @@ fn print_usage() {
            figures [--set SET] [--full] [--out DIR]\n\
                                        regenerate figures (SET: tables|single|\n\
                                        resource-selection|traces|multi3100|multi10000|\n\
-                                       day-night|network|robustness|market|all)\n\
+                                       day-night|network|robustness|market|\n\
+                                       workflow|all)\n\
            selftest                    quick end-to-end smoke run\n\
          \n\
          common flags: --advisor native|xla   --seed N   --out DIR   --jobs N\n\
@@ -245,7 +246,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 /// Comma-separated `--policies` list, with the accepted values in the error.
 fn policies_flag(args: &Args) -> Result<Option<Vec<Optimization>>> {
-    args.flag_list("policies", "policies (cost|time|cost-time|none)")
+    args.flag_list("policies", "policies (cost|time|cost-time|none|heft)")
 }
 
 /// Worker-pool size: `--jobs N`, defaulting to the CPU count.
@@ -460,6 +461,9 @@ fn cmd_figures(args: &Args) -> Result<()> {
     }
     if matches!(set.as_str(), "market" | "all") {
         emit("fig_market_equilibrium", figures::fig_market(&cfg))?;
+    }
+    if matches!(set.as_str(), "workflow" | "all") {
+        emit("fig_workflow_policies", figures::fig_workflow(&cfg))?;
     }
     if wrote.is_empty() {
         bail!("unknown figure set {set:?}");

@@ -1,0 +1,511 @@
+//! DAG workflow workloads (ROADMAP item 3): a directed acyclic graph of
+//! jobs where a child becomes eligible only once every parent's Gridlet has
+//! completed — the scientific-workflow application model the task-farm
+//! world of paper §5.2 cannot express.
+//!
+//! The graph is a *value*: named [`DagNode`]s plus `(parent, child)` edges
+//! over those names. [`WorkloadSpec::Dag`](super::WorkloadSpec::Dag)
+//! validation rejects cycles (Kahn's algorithm), duplicate node ids, and
+//! dangling edge endpoints (with a did-you-mean over the declared ids)
+//! before any simulation runs.
+//!
+//! Materialization assigns Gridlet ids `0..n` in **descending upward-rank
+//! order** (HEFT's priority list, computed against the reference
+//! [`RANK_MEAN_MIPS`]/[`RANK_MEAN_BANDWIDTH`] platform). Because every node
+//! has positive length, a parent's rank strictly exceeds its children's, so
+//! the id order is also a topological order: the broker's FIFO dispatch of
+//! eligible jobs *is* list scheduling by rank, whichever
+//! [`Optimization`](crate::broker::experiment::Optimization) places them.
+//!
+//! Release gating is cooperative (see `docs/ARCHITECTURE.md`, "Workflow
+//! layer"): the user entity withholds every release that still has
+//! uncompleted parents, the broker sends a 16-byte completion notice per
+//! finished Gridlet, and newly eligible children travel back over the
+//! contended network as ordinary `GRIDLET_ARRIVAL` events — precedence
+//! rides the existing streaming path unchanged.
+
+use crate::gridsim::gridlet::Gridlet;
+use crate::gridsim::tags::DEFAULT_BAUD_RATE;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+use super::spec::Release;
+
+/// Reference machine rating (MIPS) used to normalize compute cost in the
+/// upward-rank formula — the order of the paper's WWG testbed mean. Ranks
+/// only order nodes, so the constant's scale cancels; it is fixed (rather
+/// than derived from the testbed at hand) to keep materialization, and with
+/// it every Gridlet id, independent of the resource set.
+pub const RANK_MEAN_MIPS: f64 = 400.0;
+
+/// Reference link bandwidth (B/s) used to normalize communication cost in
+/// the upward-rank formula; the kernel's [`DEFAULT_BAUD_RATE`].
+pub const RANK_MEAN_BANDWIDTH: f64 = DEFAULT_BAUD_RATE;
+
+/// One job (node) of a [`WorkloadSpec::Dag`](super::WorkloadSpec::Dag)
+/// workflow, addressed by a workflow-unique string id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagNode {
+    /// Workflow-unique node id (what edges reference).
+    pub id: String,
+    /// Processing requirement in MI.
+    pub length_mi: f64,
+    /// Input staging size in bytes.
+    pub input_bytes: u64,
+    /// Output staging size in bytes.
+    pub output_bytes: u64,
+}
+
+impl DagNode {
+    /// A node with the paper's staging sizes (1000 B in, 500 B out).
+    pub fn new(id: impl Into<String>, length_mi: f64) -> DagNode {
+        DagNode { id: id.into(), length_mi, input_bytes: 1000, output_bytes: 500 }
+    }
+
+    /// Builder: override the staging sizes.
+    pub fn with_staging(mut self, input: u64, output: u64) -> DagNode {
+        self.input_bytes = input;
+        self.output_bytes = output;
+        self
+    }
+}
+
+/// Levenshtein distance (full matrix; ids are short).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
+}
+
+/// Did-you-mean over declared node ids (edit distance ≤ 2, ties broken by
+/// declaration order).
+fn nearest_id<'a>(id: &str, nodes: &'a [DagNode]) -> Option<&'a str> {
+    nodes
+        .iter()
+        .map(|n| (edit_distance(id, &n.id), n.id.as_str()))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, s)| s)
+}
+
+/// Map node ids to their declaration index, rejecting duplicates.
+fn index_of(nodes: &[DagNode]) -> Result<HashMap<&str, usize>> {
+    let mut idx = HashMap::with_capacity(nodes.len());
+    for (i, n) in nodes.iter().enumerate() {
+        if n.id.is_empty() {
+            bail!("dag node #{i}: id must not be empty");
+        }
+        if idx.insert(n.id.as_str(), i).is_some() {
+            bail!("dag: duplicate node id {:?}", n.id);
+        }
+    }
+    Ok(idx)
+}
+
+/// Resolve string edges to declaration-index pairs, rejecting dangling
+/// endpoints (with a did-you-mean), self-loops, and duplicate edges.
+fn resolve_edges(nodes: &[DagNode], edges: &[(String, String)]) -> Result<Vec<(usize, usize)>> {
+    let idx = index_of(nodes)?;
+    let mut resolved = Vec::with_capacity(edges.len());
+    let mut seen = std::collections::HashSet::with_capacity(edges.len());
+    for (parent, child) in edges {
+        let lookup = |id: &str| {
+            idx.get(id).copied().ok_or_else(|| match nearest_id(id, nodes) {
+                Some(hint) => {
+                    anyhow::anyhow!("dag edge references unknown node {id:?} (did you mean {hint:?}?)")
+                }
+                None => anyhow::anyhow!("dag edge references unknown node {id:?}"),
+            })
+        };
+        let (p, c) = (lookup(parent)?, lookup(child)?);
+        if p == c {
+            bail!("dag: self-loop on node {parent:?}");
+        }
+        if !seen.insert((p, c)) {
+            bail!("dag: duplicate edge {parent:?} -> {child:?}");
+        }
+        resolved.push((p, c));
+    }
+    Ok(resolved)
+}
+
+/// Kahn's algorithm over declaration indices. `Ok` is a topological order
+/// (ready nodes taken in ascending declaration index, so the order is
+/// deterministic); `Err` is the declaration indices left on a cycle.
+fn topological_order(n: usize, edges: &[(usize, usize)]) -> std::result::Result<Vec<usize>, Vec<usize>> {
+    let mut indegree = vec![0usize; n];
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(p, c) in edges {
+        indegree[c] += 1;
+        children[p].push(c);
+    }
+    let mut ready = std::collections::BinaryHeap::new();
+    for (i, &d) in indegree.iter().enumerate() {
+        if d == 0 {
+            ready.push(std::cmp::Reverse(i));
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    while let Some(std::cmp::Reverse(i)) = ready.pop() {
+        order.push(i);
+        for &c in &children[i] {
+            indegree[c] -= 1;
+            if indegree[c] == 0 {
+                ready.push(std::cmp::Reverse(c));
+            }
+        }
+    }
+    if order.len() == n {
+        Ok(order)
+    } else {
+        Err((0..n).filter(|&i| indegree[i] > 0).collect())
+    }
+}
+
+/// Validate a node/edge list: non-empty, positive lengths, unique ids,
+/// resolvable edges, acyclic. Called by
+/// [`WorkloadSpec::validate`](super::WorkloadSpec::validate).
+pub(crate) fn validate_dag(nodes: &[DagNode], edges: &[(String, String)]) -> Result<()> {
+    if nodes.is_empty() {
+        bail!("dag: needs at least one node");
+    }
+    for n in nodes {
+        if n.length_mi <= 0.0 || n.length_mi.is_nan() {
+            bail!("dag node {:?}: length_mi must be > 0, got {}", n.id, n.length_mi);
+        }
+    }
+    let resolved = resolve_edges(nodes, edges)?;
+    if let Err(on_cycle) = topological_order(nodes.len(), &resolved) {
+        let names: Vec<&str> = on_cycle.iter().map(|&i| nodes[i].id.as_str()).collect();
+        bail!("dag: cycle through nodes {names:?}");
+    }
+    Ok(())
+}
+
+/// HEFT upward ranks against the reference platform, indexed by
+/// declaration order:
+///
+/// ```text
+/// rank(i) = length_mi(i)/RANK_MEAN_MIPS
+///         + max over children c of
+///             (output_bytes(i) + input_bytes(c))/RANK_MEAN_BANDWIDTH + rank(c)
+/// ```
+///
+/// (exit nodes take the max over an empty set as 0). `edges` must already
+/// be resolved to declaration indices and acyclic.
+pub fn upward_ranks(nodes: &[DagNode], edges: &[(usize, usize)]) -> Vec<f64> {
+    let order = topological_order(nodes.len(), edges).expect("ranks need an acyclic graph");
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for &(p, c) in edges {
+        children[p].push(c);
+    }
+    let mut rank = vec![0.0f64; nodes.len()];
+    for &i in order.iter().rev() {
+        let tail = children[i]
+            .iter()
+            .map(|&c| {
+                (nodes[i].output_bytes + nodes[c].input_bytes) as f64 / RANK_MEAN_BANDWIDTH
+                    + rank[c]
+            })
+            .fold(0.0f64, f64::max);
+        rank[i] = nodes[i].length_mi / RANK_MEAN_MIPS + tail;
+    }
+    rank
+}
+
+/// Materialize a validated workflow: Gridlet ids `0..n` in descending
+/// upward-rank order (ties broken by declaration order), every release at
+/// offset 0 with its `parents` rewritten to the new ids. Draws nothing from
+/// the RNG stream. Panics (debug-grade backstop) on graphs
+/// [`validate_dag`] would reject.
+pub(crate) fn materialize_dag(nodes: &[DagNode], edges: &[(String, String)]) -> Vec<Release> {
+    let resolved = resolve_edges(nodes, edges).expect("materialize after validate");
+    let ranks = upward_ranks(nodes, &resolved);
+    let mut order: Vec<usize> = (0..nodes.len()).collect();
+    order.sort_by(|&a, &b| ranks[b].total_cmp(&ranks[a]).then(a.cmp(&b)));
+    // new_id[declaration index] = rank position = Gridlet id.
+    let mut new_id = vec![0usize; nodes.len()];
+    for (pos, &i) in order.iter().enumerate() {
+        new_id[i] = pos;
+    }
+    let mut parents: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+    for &(p, c) in &resolved {
+        parents[c].push(new_id[p]);
+    }
+    order
+        .iter()
+        .map(|&i| {
+            let n = &nodes[i];
+            let mut ps = parents[i].clone();
+            ps.sort_unstable();
+            Release {
+                offset: 0.0,
+                parents: ps,
+                gridlet: Gridlet::new(new_id[i], n.length_mi, n.input_bytes, n.output_bytes),
+            }
+        })
+        .collect()
+}
+
+/// Parse the DOT-like workflow format the JSON loader accepts via
+/// `"file"`:
+///
+/// ```text
+/// digraph wf {
+///   // node: id [length_mi=10000, input_bytes=2000, output_bytes=500]
+///   stage_in [length_mi=5000];
+///   a [length_mi=12000, output_bytes=4000];
+///   stage_in -> a;          // edge (chains allowed: a -> b -> c)
+/// }
+/// ```
+///
+/// `length_mi` is required per node; staging sizes default to the paper's
+/// 1000/500 B. `//` and `#` start line comments. The `digraph ... {`/`}`
+/// wrapper is optional. Unknown attributes are rejected with a
+/// did-you-mean. The graph itself is *not* validated here — callers run
+/// [`WorkloadSpec::validate`](super::WorkloadSpec::validate) next, exactly
+/// as for inline nodes/edges.
+pub fn parse_dot(text: &str) -> Result<(Vec<DagNode>, Vec<(String, String)>)> {
+    const ATTRS: [&str; 3] = ["length_mi", "input_bytes", "output_bytes"];
+    let mut body = String::new();
+    for line in text.lines() {
+        let line = match line.find("//").into_iter().chain(line.find('#')).min() {
+            Some(cut) => &line[..cut],
+            None => line,
+        };
+        body.push_str(line);
+        body.push('\n');
+    }
+    let body = body.trim();
+    let body = match body.find('{') {
+        Some(open) => {
+            let head = body[..open].trim();
+            if !head.is_empty() && !head.starts_with("digraph") {
+                bail!("dag file: expected `digraph <name> {{`, got {head:?}");
+            }
+            let Some(inner) = body[open + 1..].strip_suffix('}') else {
+                bail!("dag file: missing closing `}}`");
+            };
+            inner
+        }
+        None => body,
+    };
+
+    let valid_id = |s: &str| {
+        !s.is_empty()
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.'))
+    };
+    let mut nodes: Vec<DagNode> = Vec::new();
+    let mut edges: Vec<(String, String)> = Vec::new();
+    for stmt in body.split([';', '\n']) {
+        let stmt = stmt.trim();
+        if stmt.is_empty() {
+            continue;
+        }
+        if stmt.contains("->") {
+            let hops: Vec<&str> = stmt.split("->").map(str::trim).collect();
+            for hop in &hops {
+                if !valid_id(hop) {
+                    bail!("dag file: bad node id {hop:?} in edge {stmt:?}");
+                }
+            }
+            for pair in hops.windows(2) {
+                edges.push((pair[0].to_string(), pair[1].to_string()));
+            }
+            continue;
+        }
+        // Node statement: `id [k=v, ...]`.
+        let (id, attrs) = match stmt.find('[') {
+            Some(open) => {
+                let Some(inner) = stmt[open..].strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+                else {
+                    bail!("dag file: malformed attribute list in {stmt:?}");
+                };
+                (stmt[..open].trim(), inner)
+            }
+            None => (stmt, ""),
+        };
+        if !valid_id(id) {
+            bail!("dag file: bad node id {id:?}");
+        }
+        let mut node = DagNode::new(id, 0.0);
+        let mut has_length = false;
+        for attr in attrs.split(',') {
+            let attr = attr.trim();
+            if attr.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = attr.split_once('=') else {
+                bail!("dag file: node {id:?}: expected key=value, got {attr:?}");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let num = |v: &str| {
+                v.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("dag file: node {id:?}: {key} must be a number, got {v:?}")
+                })
+            };
+            match key {
+                "length_mi" => {
+                    node.length_mi = num(value)?;
+                    has_length = true;
+                }
+                "input_bytes" => node.input_bytes = num(value)? as u64,
+                "output_bytes" => node.output_bytes = num(value)? as u64,
+                other => {
+                    let hint = ATTRS
+                        .iter()
+                        .find(|a| edit_distance(other, a) <= 2)
+                        .map(|a| format!(" (did you mean {a:?}?)"))
+                        .unwrap_or_default();
+                    bail!("dag file: node {id:?}: unknown attribute {other:?}{hint}");
+                }
+            }
+        }
+        if !has_length {
+            bail!("dag file: node {id:?}: missing required length_mi attribute");
+        }
+        nodes.push(node);
+    }
+    Ok((nodes, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadSpec;
+
+    fn diamond() -> WorkloadSpec {
+        WorkloadSpec::dag(
+            vec![
+                DagNode::new("a", 1000.0),
+                DagNode::new("b", 2000.0),
+                DagNode::new("c", 3000.0),
+                DagNode::new("d", 4000.0),
+            ],
+            vec![
+                ("a".into(), "b".into()),
+                ("a".into(), "c".into()),
+                ("b".into(), "d".into()),
+                ("c".into(), "d".into()),
+            ],
+        )
+    }
+
+    #[test]
+    fn diamond_validates_and_materializes_in_rank_order() {
+        let spec = diamond();
+        spec.validate().unwrap();
+        let mut rand = crate::gridsim::random::GridSimRandom::new(7);
+        let releases = spec.materialize(&mut rand);
+        assert_eq!(releases.len(), 4);
+        // a dominates (it heads every path); c outranks b (longer); d last.
+        let ids: Vec<(usize, f64)> =
+            releases.iter().map(|r| (r.gridlet.id, r.gridlet.length_mi)).collect();
+        assert_eq!(
+            ids,
+            vec![(0, 1000.0), (1, 3000.0), (2, 2000.0), (3, 4000.0)],
+            "rank order a, c, b, d"
+        );
+        assert_eq!(releases[0].parents, Vec::<usize>::new());
+        assert_eq!(releases[1].parents, vec![0]);
+        assert_eq!(releases[2].parents, vec![0]);
+        assert_eq!(releases[3].parents, vec![1, 2]);
+        assert!(releases.iter().all(|r| r.offset == 0.0));
+    }
+
+    #[test]
+    fn materialize_draws_nothing_from_the_rng() {
+        let mut a = crate::gridsim::random::GridSimRandom::new(42);
+        let mut b = crate::gridsim::random::GridSimRandom::new(42);
+        diamond().materialize(&mut a);
+        assert_eq!(a.real(100.0, 0.0, 0.5), b.real(100.0, 0.0, 0.5));
+    }
+
+    #[test]
+    fn cycle_is_rejected_with_member_names() {
+        let spec = WorkloadSpec::dag(
+            vec![DagNode::new("x", 1.0), DagNode::new("y", 1.0), DagNode::new("z", 1.0)],
+            vec![("x".into(), "y".into()), ("y".into(), "x".into())],
+        );
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(err.contains('x') && err.contains('y'), "{err}");
+        assert!(!err.contains('z'), "z is not on the cycle: {err}");
+    }
+
+    #[test]
+    fn dangling_edge_gets_did_you_mean() {
+        let spec = WorkloadSpec::dag(
+            vec![DagNode::new("stage_in", 1.0), DagNode::new("render", 1.0)],
+            vec![("stage_in".into(), "rendr".into())],
+        );
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown node \"rendr\""), "{err}");
+        assert!(err.contains("did you mean \"render\""), "{err}");
+    }
+
+    #[test]
+    fn duplicate_ids_and_edges_rejected() {
+        let dup_node = WorkloadSpec::dag(
+            vec![DagNode::new("a", 1.0), DagNode::new("a", 2.0)],
+            vec![],
+        );
+        assert!(dup_node.validate().unwrap_err().to_string().contains("duplicate node id"));
+        let dup_edge = WorkloadSpec::dag(
+            vec![DagNode::new("a", 1.0), DagNode::new("b", 1.0)],
+            vec![("a".into(), "b".into()), ("a".into(), "b".into())],
+        );
+        assert!(dup_edge.validate().unwrap_err().to_string().contains("duplicate edge"));
+    }
+
+    #[test]
+    fn upward_ranks_follow_the_heft_recurrence() {
+        // chain a -> b: rank(b) = len_b/MIPS; rank(a) = len_a/MIPS +
+        // (out_a + in_b)/BW + rank(b).
+        let nodes =
+            vec![DagNode::new("a", 4000.0).with_staging(100, 960), DagNode::new("b", 8000.0)];
+        let ranks = upward_ranks(&nodes, &[(0, 1)]);
+        let rank_b = 8000.0 / RANK_MEAN_MIPS;
+        let rank_a = 4000.0 / RANK_MEAN_MIPS + (960.0 + 1000.0) / RANK_MEAN_BANDWIDTH + rank_b;
+        assert!((ranks[1] - rank_b).abs() < 1e-12);
+        assert!((ranks[0] - rank_a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_parser_round_trips_nodes_edges_and_comments() {
+        let text = "digraph wf {\n\
+                    // workflow head\n\
+                    stage_in [length_mi=5000, input_bytes=2000];\n\
+                    a [length_mi=12000]; b [length_mi=9000, output_bytes=4000];\n\
+                    stage_in -> a -> b; # chain\n\
+                    }";
+        let (nodes, edges) = parse_dot(text).unwrap();
+        assert_eq!(nodes.len(), 3);
+        assert_eq!(nodes[0], DagNode::new("stage_in", 5000.0).with_staging(2000, 500));
+        assert_eq!(nodes[2].output_bytes, 4000);
+        assert_eq!(
+            edges,
+            vec![
+                ("stage_in".to_string(), "a".to_string()),
+                ("a".to_string(), "b".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn dot_parser_rejects_unknown_attributes_with_hint() {
+        let err = parse_dot("a [lenth_mi=5]").unwrap_err().to_string();
+        assert!(err.contains("unknown attribute \"lenth_mi\""), "{err}");
+        assert!(err.contains("did you mean \"length_mi\""), "{err}");
+        let err = parse_dot("a []").unwrap_err().to_string();
+        assert!(err.contains("missing required length_mi"), "{err}");
+    }
+}

@@ -1,16 +1,20 @@
 //! Application/workload models (paper §3.3/§4.2.1/§5.2): the first-class
 //! [`WorkloadSpec`] API — generative task farms and heavy-tailed mixes,
-//! explicit job lists, trace replay (legacy 4-column and full 18-column
-//! SWF, sliced per user by a [`TraceSelector`]), declarative composition
-//! ([`WorkloadSpec::Concat`] / [`WorkloadSpec::Mix`]), and online arrivals
-//! (Poisson, fixed-interval, or day/night rate-modulated) — plus the
-//! original free-function generators, now thin wrappers over the spec.
+//! explicit job lists, DAG workflows with precedence-gated release
+//! ([`WorkloadSpec::Dag`]), trace replay (legacy 4-column and full
+//! 18-column SWF, sliced per user by a [`TraceSelector`]), declarative
+//! composition ([`WorkloadSpec::Concat`] / [`WorkloadSpec::Mix`]), and
+//! online arrivals (Poisson, fixed-interval, or day/night rate-modulated)
+//! — plus the original free-function generators, now thin wrappers over
+//! the spec.
 
 pub mod app;
+pub mod dag;
 pub mod spec;
 pub mod trace;
 
 pub use app::{heavy_tailed_farm, paper_task_farm, poisson_arrivals};
+pub use dag::{parse_dot, DagNode};
 pub use spec::{ArrivalProcess, JobSpec, RateEnvelope, Release, TraceJob, WorkloadSpec};
 pub use trace::{
     detect_format, format_trace, load_trace_file, load_trace_file_shared, load_trace_file_with,

@@ -13,6 +13,9 @@
 //!   stretched by up to a multiplier (exercises SJF/backfilling and broker
 //!   re-planning under heterogeneous job lengths).
 //! * [`WorkloadSpec::Explicit`] — a literal job list.
+//! * [`WorkloadSpec::Dag`] — a workflow: named jobs plus precedence edges,
+//!   where a child is released only after every parent's Gridlet completes
+//!   (see [`crate::workload::dag`]).
 //! * [`WorkloadSpec::Trace`] — jobs replayed from a trace file (legacy
 //!   4-column or full 18-column SWF, see [`crate::workload::trace`]),
 //!   optionally sliced by a [`TraceSelector`] (e.g. one SWF `user_id`'s jobs
@@ -44,6 +47,8 @@ use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
+use super::dag;
+pub use super::dag::DagNode;
 pub use super::trace::TraceSelector;
 
 /// One job of an [`WorkloadSpec::Explicit`] workload.
@@ -260,11 +265,18 @@ impl ArrivalProcess {
 }
 
 /// One materialized job release: the Gridlet plus its release offset from
-/// experiment submission (0 = part of the initial batch).
+/// experiment submission (0 = part of the initial batch) and, for workflow
+/// jobs, the Gridlet ids of its precedence parents.
 #[derive(Debug, Clone)]
 pub struct Release {
     /// Release offset from experiment submission.
     pub offset: f64,
+    /// Gridlet ids (within the same materialized workload) that must all
+    /// complete before this job may be released. Empty for every non-DAG
+    /// workload; the user entity withholds a non-empty-parents release —
+    /// regardless of `offset` — until the broker reports the last parent
+    /// complete.
+    pub parents: Vec<usize>,
     /// The job released at that offset.
     pub gridlet: Gridlet,
 }
@@ -308,6 +320,17 @@ pub enum WorkloadSpec {
     Explicit {
         /// The jobs, in dispatch order.
         jobs: Vec<JobSpec>,
+    },
+    /// A workflow: a directed acyclic graph of jobs where a child becomes
+    /// eligible only once every parent's Gridlet completes. Materialization
+    /// assigns ids in descending HEFT upward-rank order and fills
+    /// [`Release::parents`]; the user entity withholds children until the
+    /// broker reports their parents complete (see [`crate::workload::dag`]).
+    Dag {
+        /// Workflow nodes (jobs), addressed by id.
+        nodes: Vec<DagNode>,
+        /// Precedence edges as `(parent id, child id)` pairs.
+        edges: Vec<(String, String)>,
     },
     /// Trace replay (legacy 4-column or SWF-derived): each job carries its
     /// own submission offset, and `selector` picks the replayed slice
@@ -393,6 +416,14 @@ impl WorkloadSpec {
         WorkloadSpec::Explicit { jobs }
     }
 
+    /// A workflow over `nodes` with `(parent, child)` precedence `edges`
+    /// (see [`WorkloadSpec::Dag`]). Like every constructor this does not
+    /// validate — [`WorkloadSpec::validate`] rejects cycles, duplicate ids,
+    /// and dangling edges.
+    pub fn dag(nodes: Vec<DagNode>, edges: Vec<(String, String)>) -> WorkloadSpec {
+        WorkloadSpec::Dag { nodes, edges }
+    }
+
     /// A trace replay of every job in `jobs`.
     pub fn trace(jobs: Vec<TraceJob>) -> WorkloadSpec {
         WorkloadSpec::trace_shared(jobs.into())
@@ -443,6 +474,11 @@ impl WorkloadSpec {
             !workload.has_arrival_process(),
             "online_arrivals cannot wrap another online_arrivals"
         );
+        assert!(
+            !workload.has_dag(),
+            "online_arrivals cannot wrap a dag workload (precedence, not an \
+             arrival process, times its releases)"
+        );
         WorkloadSpec::OnlineArrivals { workload: Box::new(workload), arrivals }
     }
 
@@ -463,6 +499,12 @@ impl WorkloadSpec {
                 for j in jobs {
                     j.input_bytes = input;
                     j.output_bytes = output;
+                }
+            }
+            WorkloadSpec::Dag { nodes, .. } => {
+                for n in nodes {
+                    n.input_bytes = input;
+                    n.output_bytes = output;
                 }
             }
             // The shared job list is immutable; record the override and
@@ -486,6 +528,7 @@ impl WorkloadSpec {
             WorkloadSpec::TaskFarm { num_gridlets, .. }
             | WorkloadSpec::HeavyTailed { num_gridlets, .. } => *num_gridlets,
             WorkloadSpec::Explicit { jobs } => jobs.len(),
+            WorkloadSpec::Dag { nodes, .. } => nodes.len(),
             WorkloadSpec::Trace { jobs, selector, .. } => selector.count(jobs),
             WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
                 parts.iter().map(WorkloadSpec::declared_jobs).sum()
@@ -517,6 +560,21 @@ impl WorkloadSpec {
             WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
                 parts.iter().any(WorkloadSpec::has_arrival_process)
             }
+            _ => false,
+        }
+    }
+
+    /// Is there a [`WorkloadSpec::Dag`] anywhere in the spec? When true,
+    /// materialized releases may carry [`Release::parents`], the user
+    /// entity gates them on completion notices, and the experiment asks
+    /// the broker to send those notices.
+    pub fn has_dag(&self) -> bool {
+        match self {
+            WorkloadSpec::Dag { .. } => true,
+            WorkloadSpec::Concat { parts } | WorkloadSpec::Mix { parts, .. } => {
+                parts.iter().any(WorkloadSpec::has_dag)
+            }
+            WorkloadSpec::OnlineArrivals { workload, .. } => workload.has_dag(),
             _ => false,
         }
     }
@@ -685,6 +743,7 @@ impl WorkloadSpec {
             WorkloadSpec::TaskFarm { .. } => "task_farm",
             WorkloadSpec::HeavyTailed { .. } => "heavy_tailed",
             WorkloadSpec::Explicit { .. } => "explicit",
+            WorkloadSpec::Dag { .. } => "dag",
             WorkloadSpec::Trace { .. } => "trace",
             WorkloadSpec::Concat { .. } => "concat",
             WorkloadSpec::Mix { .. } => "mix",
@@ -724,6 +783,7 @@ impl WorkloadSpec {
                     }
                 }
             }
+            WorkloadSpec::Dag { nodes, edges } => dag::validate_dag(nodes, edges)?,
             WorkloadSpec::Trace { jobs, selector, .. } => {
                 for (i, j) in jobs.iter().enumerate() {
                     if j.length_mi <= 0.0 || j.length_mi.is_nan() {
@@ -771,6 +831,14 @@ impl WorkloadSpec {
                          (found one inside the wrapped workload)"
                     );
                 }
+                // Equally recursive: a workflow's releases are timed by
+                // precedence, so reassigned offsets would fight the gating.
+                if workload.has_dag() {
+                    bail!(
+                        "online_arrivals cannot wrap a dag workload \
+                         (found one inside the wrapped workload)"
+                    );
+                }
                 arrivals.validate()?;
                 workload.validate()?;
             }
@@ -788,7 +856,9 @@ impl WorkloadSpec {
     /// scenarios reproduce bit-for-bit. Composite variants materialize their
     /// parts in order on the shared stream, then renumber ids 0..n across
     /// the combination (`Concat`: parts appended; `Mix`: one weighted draw
-    /// per job decides which part contributes next).
+    /// per job decides which part contributes next), rewriting any DAG
+    /// parent references to the combined ids. `Dag` draws nothing: ids
+    /// follow descending upward rank (see [`crate::workload::dag`]).
     pub fn materialize(&self, rand: &mut GridSimRandom) -> Vec<Release> {
         let mut releases: Vec<Release> = match self {
             WorkloadSpec::TaskFarm {
@@ -802,6 +872,7 @@ impl WorkloadSpec {
                     let len = rand.real(*base_length_mi, 0.0, *length_variation);
                     Release {
                         offset: 0.0,
+                        parents: Vec::new(),
                         gridlet: Gridlet::new(i, len, *input_bytes, *output_bytes),
                     }
                 })
@@ -825,6 +896,7 @@ impl WorkloadSpec {
                         }
                         Release {
                             offset: 0.0,
+                            parents: Vec::new(),
                             gridlet: Gridlet::new(i, len, *input_bytes, *output_bytes),
                         }
                     })
@@ -835,9 +907,11 @@ impl WorkloadSpec {
                 .enumerate()
                 .map(|(i, j)| Release {
                     offset: 0.0,
+                    parents: Vec::new(),
                     gridlet: Gridlet::new(i, j.length_mi, j.input_bytes, j.output_bytes),
                 })
                 .collect(),
+            WorkloadSpec::Dag { nodes, edges } => dag::materialize_dag(nodes, edges),
             WorkloadSpec::Trace { jobs, selector, staging } => selector
                 .selected(jobs)
                 .enumerate()
@@ -848,6 +922,7 @@ impl WorkloadSpec {
                         staging.unwrap_or((j.input_bytes, j.output_bytes));
                     Release {
                         offset: j.submit_time,
+                        parents: Vec::new(),
                         gridlet: Gridlet::new(i, j.length_mi, input, output),
                     }
                 })
@@ -855,8 +930,15 @@ impl WorkloadSpec {
             WorkloadSpec::Concat { parts } => {
                 let mut all: Vec<Release> = Vec::with_capacity(self.declared_jobs());
                 for part in parts {
+                    // Each part's ids are contiguous 0..n in generation
+                    // order, so renumbering is a fixed shift — which also
+                    // remaps any DAG parent references within the part.
+                    let base = all.len();
                     for mut r in part.materialize_generation_order(rand) {
-                        r.gridlet.id = all.len();
+                        r.gridlet.id = base + r.gridlet.id;
+                        for p in &mut r.parents {
+                            *p += base;
+                        }
                         all.push(r);
                     }
                 }
@@ -873,6 +955,11 @@ impl WorkloadSpec {
                     .collect();
                 let total: usize = queues.iter().map(|q| q.len()).sum();
                 let mut all: Vec<Release> = Vec::with_capacity(total);
+                // The interleave scatters each part's ids, so DAG parent
+                // references can't be shifted in place like Concat's:
+                // record each job's (part, old id) origin and rewrite
+                // parents once the full renumbering is known.
+                let mut origin: Vec<(usize, usize)> = Vec::with_capacity(total);
                 let rng = rand.rng();
                 while all.len() < total {
                     let mass: f64 = queues
@@ -895,8 +982,22 @@ impl WorkloadSpec {
                     }
                     let i = chosen.expect("some queue is non-empty while all.len() < total");
                     let mut r = queues[i].pop_front().expect("chosen queue is non-empty");
+                    origin.push((i, r.gridlet.id));
                     r.gridlet.id = all.len();
                     all.push(r);
+                }
+                if all.iter().any(|r| !r.parents.is_empty()) {
+                    // new_ids[part][old id] = interleaved id.
+                    let mut new_ids: Vec<Vec<usize>> =
+                        parts.iter().map(|p| vec![0; p.declared_jobs()]).collect();
+                    for (new, &(part, old)) in origin.iter().enumerate() {
+                        new_ids[part][old] = new;
+                    }
+                    for (r, &(part, _)) in all.iter_mut().zip(&origin) {
+                        for p in &mut r.parents {
+                            *p = new_ids[part][*p];
+                        }
+                    }
                 }
                 all
             }

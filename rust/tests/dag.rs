@@ -1,0 +1,359 @@
+//! End-to-end DAG workflow battery (workflow layer, PR 10): precedence
+//! gating observed on the live event stream, the pinned HEFT priority
+//! list, makespan ordering against cost-minimization on a heterogeneous
+//! two-resource grid, sweep jobs-invariance, and workflow behaviour under
+//! resource failures (retry vs abandonment cascade).
+
+use std::sync::{Arc, Mutex};
+
+use gridsim::broker::{ExperimentSpec, Optimization};
+use gridsim::des::Event;
+use gridsim::gridsim::random::GridSimRandom;
+use gridsim::gridsim::{tags, AllocPolicy, Msg};
+use gridsim::output::sweep::{aggregate_csv, long_csv};
+use gridsim::scenario::{ResourceSpec, Scenario};
+use gridsim::session::GridSession;
+use gridsim::sweep::{run_sweep, SweepSpec};
+use gridsim::workload::{DagNode, WorkloadSpec};
+
+fn spec(name: &str, pes: usize, mips: f64, price: f64) -> ResourceSpec {
+    ResourceSpec {
+        name: name.into(),
+        arch: "t".into(),
+        os: "l".into(),
+        machines: 1,
+        pes_per_machine: pes,
+        mips_per_pe: mips,
+        policy: AllocPolicy::TimeShared,
+        price,
+        time_zone: 0.0,
+        calendar: None,
+    }
+}
+
+/// Diamond workflow. Rank order (see `workload::dag`) assigns the ids
+/// a=0, c=1, b=2, d=3; d's parents are therefore `[1, 2]`.
+fn diamond() -> WorkloadSpec {
+    WorkloadSpec::dag(
+        vec![
+            DagNode::new("a", 1_000.0),
+            DagNode::new("b", 2_000.0),
+            DagNode::new("c", 3_000.0),
+            DagNode::new("d", 4_000.0),
+        ],
+        vec![
+            ("a".into(), "b".into()),
+            ("a".into(), "c".into()),
+            ("b".into(), "d".into()),
+            ("c".into(), "d".into()),
+        ],
+    )
+}
+
+/// Fork–join workflow whose upward ranks are hand-computed below
+/// (`five_node_fan_out_pins_the_heft_priority_list`).
+fn five_node() -> WorkloadSpec {
+    WorkloadSpec::dag(
+        vec![
+            DagNode::new("prep", 1_000.0),
+            DagNode::new("simA", 16_000.0),
+            DagNode::new("simB", 8_000.0),
+            DagNode::new("simC", 4_000.0),
+            DagNode::new("post", 1_000.0),
+        ],
+        vec![
+            ("prep".into(), "simA".into()),
+            ("prep".into(), "simB".into()),
+            ("prep".into(), "simC".into()),
+            ("simA".into(), "post".into()),
+            ("simB".into(), "post".into()),
+            ("simC".into(), "post".into()),
+        ],
+    )
+}
+
+/// Record every workflow-relevant event as a `(tag, gridlet id)` pair, in
+/// dispatch order. The kernel calls the observer *before* delivering the
+/// event, so payloads are still intact here.
+fn observe(session: &mut GridSession) -> Arc<Mutex<Vec<(i64, usize)>>> {
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let sink = log.clone();
+    session.set_observer(Box::new(move |ev: &Event<Msg>| {
+        let id = match (ev.tag, &ev.data) {
+            (tags::GRIDLET_ARRIVAL | tags::GRIDLET_SUBMIT, Some(Msg::Gridlet(g))) => g.id,
+            (tags::GRIDLET_COMPLETED | tags::GRIDLET_ABANDONED, Some(Msg::GridletId(id))) => *id,
+            _ => return,
+        };
+        sink.lock().unwrap().push((ev.tag, id));
+    }));
+    log
+}
+
+fn count(log: &[(i64, usize)], tag: i64, id: usize) -> usize {
+    log.iter().filter(|&&e| e == (tag, id)).count()
+}
+
+fn first_pos(log: &[(i64, usize)], tag: i64, id: usize) -> usize {
+    log.iter()
+        .position(|&e| e == (tag, id))
+        .unwrap_or_else(|| panic!("no (tag {tag}, gridlet {id}) event in {log:?}"))
+}
+
+#[test]
+fn diamond_children_never_start_before_their_parents_complete() {
+    let scenario = Scenario::builder()
+        .resource(spec("R0", 2, 200.0, 1.0))
+        .resource(spec("R1", 2, 200.0, 2.0))
+        .user(
+            ExperimentSpec::new(diamond())
+                .deadline(1e5)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(11)
+        .build();
+    let mut session = GridSession::new(&scenario);
+    let log = observe(&mut session);
+    session.init();
+    while session.step().is_some() {}
+    let report = session.report().into_scenario_report();
+    assert_eq!(report.users[0].gridlets_completed, 4);
+
+    let log = log.lock().unwrap();
+    for id in 0..4 {
+        assert_eq!(count(&log, tags::GRIDLET_COMPLETED, id), 1, "gridlet {id} completes once");
+    }
+    // The root ships with the experiment; every child is precedence-released
+    // exactly once, never more (no double-release on the diamond join).
+    assert_eq!(count(&log, tags::GRIDLET_ARRIVAL, 0), 0, "the root is never withheld");
+    for id in 1..4 {
+        assert_eq!(count(&log, tags::GRIDLET_ARRIVAL, id), 1, "child {id} released exactly once");
+    }
+    assert!(log.iter().all(|&(t, _)| t != tags::GRIDLET_ABANDONED), "nothing abandoned");
+
+    // Precedence, on the live event stream: a child's release and its
+    // dispatch to a resource both strictly follow *every* parent's
+    // completion notice — the join child 3 waits for both 1 and 2.
+    let done = |id| first_pos(&log, tags::GRIDLET_COMPLETED, id);
+    let arrival = |id| first_pos(&log, tags::GRIDLET_ARRIVAL, id);
+    let submit = |id| first_pos(&log, tags::GRIDLET_SUBMIT, id);
+    for (child, parents) in [(1, vec![0]), (2, vec![0]), (3, vec![1, 2])] {
+        for p in parents {
+            assert!(
+                done(p) < arrival(child),
+                "child {child} released before parent {p} completed"
+            );
+            assert!(
+                done(p) < submit(child),
+                "child {child} dispatched before parent {p} completed"
+            );
+        }
+    }
+}
+
+#[test]
+fn five_node_fan_out_pins_the_heft_priority_list() {
+    // Hand-computed upward ranks (MIPS̄ = 400, BW̄ = 9600, default staging
+    // 1000/500 B → comm term (500 + 1000)/9600 = 0.15625 per edge):
+    //   post = 1000/400                      =  2.5
+    //   simA = 16000/400 + 0.15625 + post    = 42.65625
+    //   simB =  8000/400 + 0.15625 + post    = 22.65625
+    //   simC =  4000/400 + 0.15625 + post    = 12.65625
+    //   prep =  1000/400 + 0.15625 + simA    = 45.3125
+    // Descending rank ⇒ ids prep=0, simA=1, simB=2, simC=3, post=4.
+    let spec5 = five_node();
+    spec5.validate().unwrap();
+    let releases = spec5.materialize(&mut GridSimRandom::new(1));
+    let view: Vec<(usize, f64, Vec<usize>)> = releases
+        .iter()
+        .map(|r| (r.gridlet.id, r.gridlet.length_mi, r.parents.clone()))
+        .collect();
+    assert_eq!(
+        view,
+        vec![
+            (0, 1_000.0, vec![]),
+            (1, 16_000.0, vec![0]),
+            (2, 8_000.0, vec![0]),
+            (3, 4_000.0, vec![0]),
+            (4, 1_000.0, vec![1, 2, 3]),
+        ],
+        "HEFT priority list: prep, simA, simB, simC, post"
+    );
+    assert!(releases.iter().all(|r| r.offset == 0.0));
+}
+
+#[test]
+fn heft_beats_cost_minimization_on_heterogeneous_makespan() {
+    // Cheap: 100 MIPS at 1 G$/PE-time = 0.0100 G$/MI — the cost pick.
+    // Fast: 400 MIPS at 8 G$/PE-time = 0.0200 G$/MI — 4× the speed.
+    // Cost-min serializes the whole 30 000 MI workflow onto Cheap
+    // (makespan ≈ 300); HEFT's EFT placement spreads the fork stage across
+    // both machines and must finish strictly earlier, paying more for it.
+    let run = |opt: Optimization| {
+        let scenario = Scenario::builder()
+            .resource(spec("Cheap", 1, 100.0, 1.0))
+            .resource(spec("Fast", 1, 400.0, 8.0))
+            .user(ExperimentSpec::new(five_node()).deadline(1e5).budget(1e6).optimization(opt))
+            .seed(13)
+            .build();
+        let r = GridSession::new(&scenario).run_to_completion();
+        let u = &r.users[0];
+        assert_eq!(u.gridlets_completed, 5, "{opt:?} must complete the workflow");
+        (u.finish_time - u.start_time, u.budget_spent)
+    };
+    let (t_cost, s_cost) = run(Optimization::Cost);
+    let (t_heft, s_heft) = run(Optimization::Heft);
+    assert!(
+        t_heft < t_cost,
+        "HEFT makespan {t_heft} must beat cost-min makespan {t_cost}"
+    );
+    assert!(
+        s_cost <= s_heft,
+        "cost-min stays the cheaper schedule: {s_cost} vs {s_heft}"
+    );
+}
+
+#[test]
+fn dag_sweep_is_byte_identical_across_jobs_counts() {
+    let base = Scenario::builder()
+        .resource(spec("T0", 2, 100.0, 1.0))
+        .resource(spec("T1", 2, 200.0, 3.0))
+        .resource(spec("T2", 4, 400.0, 8.0))
+        .user(
+            ExperimentSpec::new(five_node())
+                .deadline(5_000.0)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(41)
+        .build();
+    let sweep = SweepSpec::over(base)
+        .policies(vec![Optimization::Cost, Optimization::Time, Optimization::Heft])
+        .user_counts(vec![1, 2])
+        .replications(2);
+    assert_eq!(sweep.cell_count(), 12);
+
+    let jobs1 = run_sweep(&sweep, 1).expect("jobs=1");
+    let jobs4 = run_sweep(&sweep, 4).expect("jobs=4");
+    let long1 = long_csv(&sweep, &jobs1).to_string();
+    let long4 = long_csv(&sweep, &jobs4).to_string();
+    assert_eq!(long1, long4, "DAG long CSV differs between --jobs 1 and --jobs 4");
+    assert_eq!(
+        aggregate_csv(&sweep, &jobs1).to_string(),
+        aggregate_csv(&sweep, &jobs4).to_string(),
+        "DAG aggregate CSV differs between --jobs 1 and --jobs 4"
+    );
+    assert!(long1.contains("heft"), "the heft policy axis must reach the CSV:\n{long1}");
+
+    // Ample deadline and budget: every cell finishes every user's workflow,
+    // whichever policy placed it.
+    for outcome in &jobs1.outcomes {
+        assert!(outcome.report.all_finished());
+        for u in &outcome.report.users {
+            assert_eq!(u.gridlets_completed, 5, "cell {:?}", outcome.cell);
+        }
+    }
+}
+
+#[test]
+fn faulted_parent_is_resubmitted_and_children_release_exactly_once() {
+    // The cheap resource crashes at t=3 with the 5-time-unit root in
+    // flight and never comes back; the default retry policy reroutes the
+    // root to the survivor. The join gating must fire exactly once per
+    // child — losing a parent must not double-release (or never release)
+    // its children.
+    use gridsim::faults::{FaultProcess, FaultsSpec};
+    let scenario = Scenario::builder()
+        .resource(spec("Fragile", 2, 200.0, 1.0)) // cheap → preferred
+        .resource(spec("Stable", 2, 200.0, 2.0))
+        .user(
+            ExperimentSpec::new(diamond())
+                .deadline(1e5)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(5)
+        .faults(FaultsSpec::default().override_for(
+            "Fragile",
+            FaultProcess::Trace { intervals: vec![(3.0, 1e8)] },
+        ))
+        .build();
+    let mut session = GridSession::new(&scenario);
+    let log = observe(&mut session);
+    session.init();
+    while session.step().is_some() {}
+    let report = session.report().into_scenario_report();
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, 4, "retry completes the workflow despite the crash");
+    assert!(u.gridlets_lost >= 1, "the root is in flight at t=3");
+    assert_eq!(u.gridlets_resubmitted, u.gridlets_lost, "retry resubmits every loss");
+    assert_eq!(u.gridlets_abandoned, 0);
+
+    let log = log.lock().unwrap();
+    assert_eq!(count(&log, tags::GRIDLET_ARRIVAL, 0), 0, "the root ships with the experiment");
+    for id in 1..4 {
+        assert_eq!(
+            count(&log, tags::GRIDLET_ARRIVAL, id),
+            1,
+            "child {id} released exactly once across the resubmission"
+        );
+    }
+    assert!(
+        count(&log, tags::GRIDLET_SUBMIT, 0) >= 2,
+        "the lost root is dispatched again after the crash"
+    );
+}
+
+#[test]
+fn abandoned_parent_prunes_every_descendant_and_terminates() {
+    // Same crash, but the broker abandons instead of retrying: the root's
+    // abandonment notice must cascade through the withheld diamond — no
+    // child ever becomes eligible — and the DAG_CASCADE count keeps the
+    // broker's termination accounting exact (the run ends instead of
+    // waiting forever for jobs that can never arrive).
+    use gridsim::broker::{BrokerConfig, ResubmissionPolicy};
+    use gridsim::faults::{FaultProcess, FaultsSpec};
+    let scenario = Scenario::builder()
+        .resource(spec("Fragile", 2, 200.0, 1.0))
+        .resource(spec("Stable", 2, 200.0, 2.0))
+        .user(
+            ExperimentSpec::new(diamond())
+                .deadline(1e5)
+                .budget(1e6)
+                .optimization(Optimization::Cost),
+        )
+        .seed(5)
+        .broker_config(BrokerConfig {
+            resubmission: ResubmissionPolicy::Abandon,
+            ..BrokerConfig::default()
+        })
+        .faults(FaultsSpec::default().override_for(
+            "Fragile",
+            FaultProcess::Trace { intervals: vec![(3.0, 1e8)] },
+        ))
+        .build();
+    let mut session = GridSession::new(&scenario);
+    let log = observe(&mut session);
+    session.init();
+    while session.step().is_some() {}
+    let report = session.report().into_scenario_report();
+    let u = &report.users[0];
+    assert_eq!(u.gridlets_completed, 0, "the root dies before anything completes");
+    assert_eq!(
+        u.gridlets_abandoned, 4,
+        "the lost root plus its three pruned descendants"
+    );
+    assert_eq!(u.gridlets_completed + u.gridlets_abandoned, u.gridlets_total);
+    assert_eq!(u.gridlets_resubmitted, 0, "abandon never resubmits");
+    assert!(report.end_time < 1e6, "accounting terminates the run well before the hard cap");
+
+    let log = log.lock().unwrap();
+    assert_eq!(count(&log, tags::GRIDLET_ABANDONED, 0), 1, "one notice for the root");
+    for id in 0..4 {
+        assert_eq!(
+            count(&log, tags::GRIDLET_ARRIVAL, id),
+            0,
+            "gridlet {id} must never be precedence-released"
+        );
+    }
+}

@@ -377,6 +377,108 @@ fn prop_static_model_reproduces_configured_price_exactly() {
     });
 }
 
+/// Random DAG workload: up to 8 nodes, edges only from lower to higher
+/// declaration index (guaranteed acyclic), random lengths.
+fn gen_dag(rng: &mut Rng) -> (Vec<gridsim::workload::DagNode>, Vec<(String, String)>) {
+    use gridsim::workload::DagNode;
+    let n = 1 + rng.below(8) as usize;
+    let nodes: Vec<DagNode> =
+        (0..n).map(|i| DagNode::new(format!("n{i}"), 100.0 + rng.below(5_000) as f64)).collect();
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.next_f64() < 0.3 {
+                edges.push((format!("n{i}"), format!("n{j}")));
+            }
+        }
+    }
+    (nodes, edges)
+}
+
+#[test]
+fn prop_dag_materialization_is_topological() {
+    use gridsim::gridsim::random::GridSimRandom;
+    use gridsim::workload::WorkloadSpec;
+    forall(114, 60, gen_dag, |(nodes, edges)| {
+        let spec = WorkloadSpec::dag(nodes.clone(), edges.clone());
+        check(spec.validate().is_ok(), format!("generated dag must validate: {nodes:?}"))?;
+        let releases = spec.materialize(&mut GridSimRandom::new(9));
+        check(
+            releases.len() == nodes.len(),
+            format!("{} releases for {} nodes", releases.len(), nodes.len()),
+        )?;
+        for (pos, r) in releases.iter().enumerate() {
+            // Ids are contiguous rank positions; all offsets are 0 (DAG
+            // releases are precedence-timed, never clock-timed).
+            check(r.gridlet.id == pos, format!("id {} at position {pos}", r.gridlet.id))?;
+            check(r.offset == 0.0, format!("offset {} on a dag release", r.offset))?;
+            // Positive lengths make a parent's upward rank strictly exceed
+            // its children's, so the id order is a topological order.
+            for &p in &r.parents {
+                check(
+                    p < r.gridlet.id,
+                    format!("parent {p} does not precede child {}", r.gridlet.id),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dag_materialization_is_bit_identical() {
+    use gridsim::gridsim::random::GridSimRandom;
+    use gridsim::workload::WorkloadSpec;
+    forall(115, 60, gen_dag, |(nodes, edges)| {
+        let spec = WorkloadSpec::dag(nodes.clone(), edges.clone());
+        let a = spec.materialize(&mut GridSimRandom::new(31));
+        let b = spec.materialize(&mut GridSimRandom::new(31));
+        for (x, y) in a.iter().zip(&b) {
+            check(x.gridlet.id == y.gridlet.id, format!("ids {} vs {}", x.gridlet.id, y.gridlet.id))?;
+            check(
+                x.gridlet.length_mi.to_bits() == y.gridlet.length_mi.to_bits(),
+                format!("lengths {} vs {}", x.gridlet.length_mi, y.gridlet.length_mi),
+            )?;
+            check(x.parents == y.parents, format!("parents {:?} vs {:?}", x.parents, y.parents))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_broken_dags_are_rejected_never_panic() {
+    use gridsim::workload::{DagNode, WorkloadSpec};
+    forall(
+        116,
+        60,
+        |rng| {
+            let (mut nodes, mut edges) = gen_dag(rng);
+            match rng.below(4) {
+                0 => edges.push(("n0".into(), "no_such_node".into())), // dangling
+                1 => {
+                    // Cycle (2-cycle, or a self-loop on a 1-node graph).
+                    if nodes.len() >= 2 {
+                        edges.push(("n0".into(), "n1".into()));
+                        edges.push(("n1".into(), "n0".into()));
+                    } else {
+                        edges.push(("n0".into(), "n0".into()));
+                    }
+                }
+                2 => nodes.push(DagNode::new("n0", 50.0)), // duplicate id
+                _ => nodes[0].length_mi = 0.0,             // non-positive length
+            }
+            (nodes, edges)
+        },
+        |(nodes, edges)| {
+            let spec = WorkloadSpec::dag(nodes.clone(), edges.clone());
+            check(
+                spec.validate().is_err(),
+                format!("corrupted dag must be rejected: {nodes:?} {edges:?}"),
+            )
+        },
+    );
+}
+
 #[test]
 fn prop_advisor_prefix_exactness() {
     // The documented exactness property behind the XLA two-pass advisor:
